@@ -1,0 +1,54 @@
+//! Co-design exploration: sweep the PL parallelism degrees through the
+//! hwsim cycle + resource models and print the design-space table the
+//! paper's §III-B5 trade-off discussion implies ("parallelization was
+//! performed such that hardware resource constraints were satisfied").
+//!
+//!     cargo run --release --example codesign_explorer
+
+use fadec::hwsim::cycles::{CpuModel, HwConfig, PipelineModel};
+use fadec::hwsim::resources::{ResourceModel, ZCU104};
+
+fn main() {
+    println!(
+        "design point     frame[s]  speedup  DSP    LUT%   Slice%  BRAM   fits"
+    );
+    let base_cpu = CpuModel::default();
+    let cpu_only = PipelineModel::new(HwConfig::default(), base_cpu)
+        .cpu_only_frame_seconds(false);
+    for (ich, och, och5, elem) in [
+        (1u64, 1u64, 1u64, 1u64),
+        (1, 2, 1, 2),
+        (2, 2, 2, 2),
+        (2, 4, 2, 4),   // the paper's design point
+        (4, 4, 2, 4),
+        (4, 8, 4, 8),
+        (8, 8, 4, 8),
+    ] {
+        let hw = HwConfig {
+            par_conv_ich: ich,
+            par_conv_och: och,
+            par_conv_och_k5: och5,
+            par_elemwise: elem,
+            ..HwConfig::default()
+        };
+        let frame = PipelineModel::new(hw, base_cpu).hybrid_frame_seconds(2);
+        let u = ResourceModel::new(hw).estimate();
+        let fits = u.rows().iter().all(|(_, used, avail)| used <= avail);
+        let mark = if (ich, och) == (2, 4) { "  <- paper" } else { "" };
+        println!(
+            "ich{ich} och{och} k5:{och5} ew{elem}   {frame:8.3} {:8.1}x {:>5} {:6.1}% {:6.1}% {:>5}  {}{}",
+            cpu_only / frame,
+            u.dsp,
+            100.0 * u.lut as f64 / ZCU104::LUT as f64,
+            100.0 * u.slice as f64 / ZCU104::SLICE as f64,
+            u.bram,
+            if fits { "yes" } else { "NO" },
+            mark
+        );
+    }
+    println!(
+        "\n(paper's point: 2x4 conv / 2x2 for k=5 / x4 element-wise — chosen\n\
+         so slices and BRAM are nearly exhausted while DSP stays low;\n\
+         larger points stop fitting the XCZU7EV fabric)"
+    );
+}

@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, run the hybrid PL+CPU pipeline on
+//! a few frames, print depths and timing.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::path::Path;
+use std::sync::Arc;
+
+use fadec::coordinator::{Coordinator, PipelineOptions};
+use fadec::data::manifest::Manifest;
+use fadec::data::Dataset;
+use fadec::metrics;
+use fadec::model::QuantParams;
+
+fn main() -> anyhow::Result<()> {
+    let art = Path::new("artifacts");
+    // 1. load the manifest + quantized parameters produced by `make artifacts`
+    let manifest = Manifest::load(&art.join("manifest.txt"))?;
+    let qp = Arc::new(QuantParams::load(&art.join("qparams.bin"), &manifest)?);
+    println!(
+        "model: {} segments, trained {} steps (final loss {:.4})",
+        manifest.segments.len(),
+        manifest.train_steps,
+        manifest.train_final_loss
+    );
+
+    // 2. build the coordinator: compiles every HLO artifact on the PJRT
+    //    CPU client (the "bitstream flash") and starts the SW worker pool
+    let mut coord = Coordinator::new(art, &manifest, qp, PipelineOptions::default())?;
+    println!("PJRT compile: {:.2} s", coord.hw.compile_seconds);
+
+    // 3. stream a synthetic scene through it
+    let dataset = Dataset::open(&art.join("dataset"))?;
+    let scene = dataset.load_scene("chess-01")?;
+    for i in 0..6.min(scene.len()) {
+        let img = scene.normalized_image(i);
+        let out = coord.step(&img, &scene.poses[i])?;
+        let gt = scene.depth_tensor(i);
+        println!(
+            "frame {i}: {:6.2} ms   depth [{:.2}, {:.2}] m   MSE vs GT {:.4}",
+            out.profile.total_s * 1e3,
+            out.depth.data().iter().cloned().fold(f32::INFINITY, f32::min),
+            out.depth.data().iter().cloned().fold(0.0f32, f32::max),
+            metrics::mse_tensor(&out.depth, &gt),
+        );
+    }
+
+    // 4. the extern protocol statistics (paper §IV-A)
+    let stats = coord.take_extern_stats();
+    println!(
+        "extern crossings: {}   total overhead: {:.3} ms",
+        stats.records.len(),
+        stats.total_overhead() * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,349 @@
+"""AOT build: dataset -> train -> calibrate -> lower -> export.
+
+Produces everything the Rust side consumes (all under ``artifacts/``):
+
+  dataset/<scene>/...      synthetic 7-Scenes stand-in (scenes.py)
+  float_params.npz         trained float parameters (train.py)
+  train_log.json           loss curve of the E2E training run
+  <segment>.hlo.txt        one HLO-text artifact per HW segment — the
+                           "bitstream" of this reproduction, loaded and
+                           compiled by the PJRT CPU client from Rust
+  manifest.json            segment I/O signatures + activation exponents
+  weights.bin              float params (TLV) for the CPU-only baseline
+  qparams.bin              quantized weights/biases/scales/LUTs (TLV)
+                           for the CPU-only-with-PTQ baseline
+  golden/frame<i>.bin      hybrid-pipeline boundary tensors (TLV) for
+                           the Rust bit-exactness integration tests
+  golden/float_tape0.bin   float activations of frame 0 (tolerance tests)
+
+HLO *text* is the interchange format (not ``.serialize()``): jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Every step is cached on disk; ``make artifacts`` is a no-op when inputs
+are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import params as P
+from . import pipeline as PL
+from . import quantize as Q
+from . import scenes
+from . import train as T
+from .kernels import ref as R
+
+DT_F32, DT_I8, DT_I16, DT_I32 = 0, 1, 2, 3
+_DT_OF_NP = {np.dtype(np.float32): DT_F32, np.dtype(np.int8): DT_I8,
+             np.dtype(np.int16): DT_I16, np.dtype(np.int32): DT_I32}
+
+
+# ---------------------------------------------------------------------------
+# TLV tensor container (mirrored by rust/src/data/tlv.rs)
+# ---------------------------------------------------------------------------
+
+def write_tlv(path: str, entries: Dict[str, Tuple[np.ndarray, int]]) -> None:
+    """entries: name -> (array, exponent). Little-endian TLV:
+    [u32 count] then per entry:
+    [u16 name_len][name][u8 dtype][i8 exp][u8 ndim][u32 dims...][payload]."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(entries)))
+        for name, (arr, exp) in entries.items():
+            arr = np.ascontiguousarray(arr)
+            dt = _DT_OF_NP[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BbB", dt, exp, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is ESSENTIAL: the default elides big
+    # weight constants as "{...}", which XLA 0.5.1's text parser accepts
+    # silently and fills with garbage.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# ---------------------------------------------------------------------------
+# Segment registry — the HW side of the hybrid schedule
+# ---------------------------------------------------------------------------
+
+def _lv_hw(level: int) -> Tuple[int, int]:
+    return P.IMG_H >> level, P.IMG_W >> level
+
+
+def segment_registry(env: M.QuantEnv):
+    """Returns [(name, fn, [(in_name, shape, exp)], [(out_name, exp)])].
+    All tensors int16 NCHW."""
+    a = env.aexp
+    h1, w1 = _lv_hw(1)
+    h5, w5 = _lv_hw(5)
+    cc = P.CL_CH
+    segs = []
+
+    segs.append((
+        "fe_fs", functools.partial(M.seg_fe_fs_q, env),
+        [("image_q", (1, 3, P.IMG_H, P.IMG_W), a["image"])],
+        [(f"feat{i}_q", M._pyr_exp(env, i) if i > 0 else a["fs.smooth0"])
+         for i in range(5)],
+    ))
+    cve_in = [("cost_q", (1, P.N_HYPOTHESES, h1, w1), a["cvf.cost"])]
+    for i in range(1, 5):
+        h, w = _lv_hw(i + 1)
+        cve_in.append((f"feat{i}_q", (1, P.FPN_CH, h, w), M._pyr_exp(env, i)))
+    segs.append((
+        "cve", functools.partial(M.seg_cve_q, env), cve_in,
+        [(f"e{i}_q", a[M._cve_out_name(i)]) for i in range(5)],
+    ))
+    segs.append((
+        "cl_gates", functools.partial(M.seg_cl_gates_q, env),
+        [("e4_q", (1, cc, h5, w5), a[M._cve_out_name(4)]),
+         ("hcorr_q", (1, cc, h5, w5), a["cl.hcorr"])],
+        [("gates_q", a["cl.gates"])],
+    ))
+    segs.append((
+        "cl_state", functools.partial(M.seg_cl_state_q, env),
+        [("gates_ln_q", (1, 4 * cc, h5, w5), a["cl.ln_gates"]),
+         ("c_q", (1, cc, h5, w5), a["cl.cnew"])],
+        [("cnew_q", a["cl.cnew"]), ("o_q", R.SIGMOID_OUT_EXP)],
+    ))
+    segs.append((
+        "cl_out", functools.partial(M.seg_cl_out_q, env),
+        [("ln_c_q", (1, cc, h5, w5), a["cl.ln_cell"]),
+         ("o_q", (1, cc, h5, w5), R.SIGMOID_OUT_EXP)],
+        [("hnew_q", a["cl.hnew"])],
+    ))
+    # CVD blocks
+    for b in range(5):
+        h, w = _lv_hw(5 - b)
+        ch = P.CVD_CH[b]
+        if b == 0:
+            ins = [("hnew_q", (1, cc, h5, w5), a["cl.hnew"]),
+                   ("e4_q", (1, cc, h5, w5), a[M._cve_out_name(4)])]
+        else:
+            ins = [("upf_q", (1, P.CVD_CH[b - 1], h, w),
+                    a[M._cvd_carry_name(b - 1)]),
+                   (f"e{4 - b}_q", (1, P.CVE_CH[4 - b], h, w),
+                    a[M._cve_out_name(4 - b)]),
+                   ("upd_q", (1, 1, h, w), a[f"cvd.b{b}.upd"])]
+        segs.append((
+            f"cvd_b{b}_entry", functools.partial(M.seg_cvd_entry_q, env, b),
+            ins, [(f"x_b{b}", a[f"cvd.b{b}.c5"])],
+        ))
+        for i in range(1, P.CVD_BODY_K3[b]):
+            segs.append((
+                f"cvd_b{b}_mid{i}",
+                functools.partial(M.seg_cvd_mid_q, env, b, i),
+                [(f"xln_b{b}", (1, ch, h, w), a[f"cvd.b{b}.ln{i - 1}"])],
+                [(f"x_b{b}", a[f"cvd.b{b}.c3_{i}"])],
+            ))
+        segs.append((
+            f"cvd_b{b}_head", functools.partial(M.seg_cvd_head_q, env, b),
+            [(f"xln_b{b}", (1, ch, h, w),
+              a[f"cvd.b{b}.ln{P.CVD_BODY_K3[b] - 1}"])],
+            [(f"head{b}_q", R.SIGMOID_OUT_EXP)],
+        ))
+    return segs
+
+
+def lower_segments(env: M.QuantEnv, out_dir: str) -> List[dict]:
+    """Lower every segment to HLO text. Returns manifest entries."""
+    manifest = []
+    for name, fn, ins, outs in segment_registry(env):
+        specs = [jax.ShapeDtypeStruct(shape, jnp.int16)
+                 for (_, shape, _) in ins]
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # output shapes from abstract evaluation
+        flat = jax.tree_util.tree_leaves(jax.eval_shape(fn, *specs))
+        print(f"[aot] {name}: {len(text)//1024} KiB HLO "
+              f"({time.time() - t0:.1f}s)", flush=True)
+        manifest.append({
+            "name": name,
+            "hlo": f"{name}.hlo.txt",
+            "inputs": [{"name": n, "shape": list(s), "exp": e}
+                       for (n, s, e) in ins],
+            "outputs": [{"name": n, "shape": list(o.shape), "exp": e}
+                        for (n, e), o in zip(outs, flat)],
+        })
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# Exports
+# ---------------------------------------------------------------------------
+
+def export_weights(p: M.Params, path: str) -> None:
+    write_tlv(path, {k: (np.asarray(v, np.float32), 0)
+                     for k, v in sorted(p.items())})
+
+
+def export_qparams(env: M.QuantEnv, path: str) -> None:
+    entries: Dict[str, Tuple[np.ndarray, int]] = {}
+    for spec in M.all_conv_specs():
+        n = spec.name
+        entries[f"{n}.w"] = (env.qw[f"{n}.w"], env.e_w[n])
+        assert f"{n}.b" in env.bq, f"{n} was never traced"
+        e_b = env.in_exp[n] + env.e_w[n]
+        entries[f"{n}.b"] = (env.bq[f"{n}.b"], e_b)
+        entries[f"{n}.s_q"] = (np.asarray([env.s_q[n]], np.int32),
+                               env.e_s[n])
+    entries["lut.sigmoid"] = (env.lut_sigmoid, R.SIGMOID_OUT_EXP)
+    entries["lut.elu"] = (env.lut_elu, env.elu_out_exp)
+    for k, v in env.ln_params.items():
+        entries[k] = (np.asarray(v, np.float32), 0)
+    write_tlv(path, entries)
+
+
+def export_golden(env: M.QuantEnv, dataset_dir: str, out_dir: str,
+                  n_frames: int = 3) -> None:
+    frames, depths, poses = T.scenes_load(dataset_dir, "chess-01")
+    traces: List[Dict] = []
+    PL.run_hybrid_sequence(env, frames[:n_frames], poses[:n_frames], traces)
+    os.makedirs(out_dir, exist_ok=True)
+    for i, tr in enumerate(traces):
+        entries = {}
+        for k, v in tr.items():
+            v = np.asarray(v)
+            if v.dtype == np.float64:
+                v = v.astype(np.float32)
+            entries[k] = (v, 0)
+        write_tlv(os.path.join(out_dir, f"frame{i}.bin"), entries)
+
+
+def export_float_tape(p: M.Params, dataset_dir: str, path: str) -> None:
+    frames, _, poses = T.scenes_load(dataset_dir, "chess-01")
+    tape: Dict = {}
+    img = M.normalize_image(jnp.asarray(frames[0]))
+    M.step_f(p, img, jnp.asarray(poses[0]), [], [], M.zero_state(), tape)
+    entries = {k: (np.asarray(v, np.float32), 0) for k, v in tape.items()}
+    write_tlv(path, entries)
+
+
+def export_manifest(env: M.QuantEnv, seg_manifest: List[dict],
+                    train_info: dict, path: str) -> None:
+    doc = {
+        "img": {"h": P.IMG_H, "w": P.IMG_W,
+                "fx": P.FX, "fy": P.FY, "cx": P.CX, "cy": P.CY},
+        "depth": {"min": P.MIN_DEPTH, "max": P.MAX_DEPTH,
+                  "hypotheses": P.N_HYPOTHESES},
+        "quant": {"w_bits": P.W_BITS, "a_bits": P.A_BITS,
+                  "s_bits": P.S_BITS, "b_bits": P.B_BITS,
+                  "alpha": P.ALPHA_CLIP,
+                  "sigmoid_exp": R.SIGMOID_OUT_EXP,
+                  "elu_exp": env.elu_out_exp,
+                  "lut_entries": P.LUT_ENTRIES, "lut_t": P.LUT_RANGE_T},
+        "aexp": env.aexp,
+        "conv_in_exp": env.in_exp,
+        "segments": seg_manifest,
+        "train": train_info,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    # plain-text twin for the Rust side (no JSON parser needed there)
+    txt = path.replace(".json", ".txt")
+    with open(txt, "w") as f:
+        f.write(f"img {P.IMG_H} {P.IMG_W} {P.FX} {P.FY} {P.CX} {P.CY}\n")
+        f.write(f"depth {P.MIN_DEPTH} {P.MAX_DEPTH} {P.N_HYPOTHESES}\n")
+        f.write(f"quant sigmoid_exp {R.SIGMOID_OUT_EXP}\n")
+        f.write(f"quant elu_exp {env.elu_out_exp}\n")
+        if train_info:
+            f.write(f"train {train_info['steps']} "
+                    f"{train_info['final_loss']:.6f}\n")
+        for k, v in sorted(env.aexp.items()):
+            f.write(f"aexp {k} {v}\n")
+        for k, v in sorted(env.in_exp.items()):
+            f.write(f"inexp {k} {v}\n")
+        for seg in seg_manifest:
+            f.write(f"seg {seg['name']} {seg['hlo']}\n")
+            for io, lst in (("in", seg["inputs"]), ("out", seg["outputs"])):
+                for t in lst:
+                    dims = ",".join(str(d) for d in t["shape"])
+                    f.write(f"{io} {t['name']} {dims} {t['exp']}\n")
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def build(out_dir: str, quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    ds = os.path.join(out_dir, "dataset")
+    if not os.path.exists(os.path.join(ds, P.EVAL_SCENES[-1], "meta.json")):
+        print("[aot] rendering synthetic dataset ...", flush=True)
+        scenes.build_dataset(ds)
+
+    fp = os.path.join(out_dir, "float_params.npz")
+    log_path = os.path.join(out_dir, "train_log.json")
+    if not os.path.exists(fp):
+        print("[aot] training float model on synthetic scenes ...",
+              flush=True)
+        steps = 30 if quick else P.TRAIN_STEPS
+        T.train(ds, fp, steps=steps, log_path=log_path)
+    p = T.load_params(fp)
+    train_info = {}
+    if os.path.exists(log_path):
+        with open(log_path) as f:
+            log = json.load(f)
+        train_info = {"steps": log[-1]["step"] + 1,
+                      "final_loss": log[-1]["loss"]}
+
+    print("[aot] calibrating activation exponents ...", flush=True)
+    frames, _, poses = T.scenes_load(ds, "chess-01")
+    ncal = 3 if quick else 6
+    aexp = Q.calibrate(p, list(frames[:ncal]), list(poses[:ncal]))
+    env = Q.build_quant_env(p, aexp)
+
+    print("[aot] lowering segments to HLO text ...", flush=True)
+    seg_manifest = lower_segments(env, out_dir)
+
+    print("[aot] exporting weights / qparams / golden ...", flush=True)
+    export_weights(p, os.path.join(out_dir, "weights.bin"))
+    export_golden(env, ds, os.path.join(out_dir, "golden"),
+                  n_frames=2 if quick else 3)
+    export_qparams(env, os.path.join(out_dir, "qparams.bin"))
+    export_float_tape(p, ds, os.path.join(out_dir, "golden",
+                                          "float_tape0.bin"))
+    export_manifest(env, seg_manifest, train_info,
+                    os.path.join(out_dir, "manifest.json"))
+    print("[aot] done.", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny training / fewer golden frames (CI smoke)")
+    args = ap.parse_args()
+    build(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

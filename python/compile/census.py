@@ -1,0 +1,187 @@
+"""Operator census of the model graph — Table I of the paper.
+
+Counts every operation per major process (FE, FS, CVF, CVE, CL, CVD).
+Because the model topology is constructed to match DeepVideoMVS (DESIGN.md
+§4), this census must reproduce Table I *exactly*; the pytest and the Rust
+``codesign`` module both pin it.
+
+Also computes the multiplication census of Fig. 2: multiplications
+weighted by tensor sizes, from which the paper derives the HW/SW
+partitioning (CVE+CVD = 82.4%, CVF = 5.0%).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from . import model as M
+from . import params as P
+
+PROCESSES = ["FE", "FS", "CVF", "CVE", "CL", "CVD"]
+
+ROW_ORDER = [
+    "conv_1_1", "conv_3_1", "conv_3_2", "conv_5_1", "conv_5_2",
+    "act_relu", "act_sigmoid", "act_elu",
+    "add", "mul", "concat", "slice", "layer_norm",
+    "up_nearest", "up_bilinear", "grid_sample",
+]
+
+# Table I of the paper (rows in ROW_ORDER, columns in PROCESSES).
+PAPER_TABLE_I: Dict[str, List[int]] = {
+    "conv_1_1":    [33, 5, 0, 0, 0, 0],
+    "conv_3_1":    [6, 4, 0, 9, 1, 14],
+    "conv_3_2":    [2, 0, 0, 3, 0, 0],
+    "conv_5_1":    [7, 0, 0, 3, 0, 5],
+    "conv_5_2":    [3, 0, 0, 1, 0, 0],
+    "act_relu":    [34, 0, 0, 16, 0, 14],
+    "act_sigmoid": [0, 0, 0, 0, 3, 5],
+    "act_elu":     [0, 0, 0, 0, 2, 0],
+    "add":         [10, 4, 128, 0, 1, 0],
+    "mul":         [0, 0, 64, 0, 3, 0],
+    "concat":      [0, 0, 0, 4, 1, 5],
+    "slice":       [0, 0, 0, 0, 4, 0],
+    "layer_norm":  [0, 0, 0, 0, 2, 9],
+    "up_nearest":  [0, 4, 0, 0, 0, 0],
+    "up_bilinear": [0, 0, 0, 0, 0, 9],
+    "grid_sample": [0, 0, 128, 0, 0, 0],
+}
+
+
+def _proc_of(name: str) -> str:
+    return {"fe": "FE", "fs": "FS", "cve": "CVE", "cl": "CL",
+            "cvd": "CVD"}[name.split(".")[0]]
+
+
+def op_census() -> Dict[str, Dict[str, int]]:
+    """{process: {row: count}} over the whole graph."""
+    t = {pr: {row: 0 for row in ROW_ORDER} for pr in PROCESSES}
+
+    for s in M.all_conv_specs():
+        pr = _proc_of(s.name)
+        t[pr][f"conv_{s.k}_{s.stride}"] += 1
+        if s.act == "relu":
+            t[pr]["act_relu"] += 1
+        elif s.act == "sigmoid":
+            t[pr]["act_sigmoid"] += 1
+
+    # FE residual adds
+    _, wiring = M.fe_specs()
+    t["FE"]["add"] += sum(1 for w in wiring if w["residual"])
+    # FS top-down adds + nearest upsamples
+    t["FS"]["add"] += 4
+    t["FS"]["up_nearest"] += 4
+    # CVF: per hypothesis x keyframe one grid sample; per hypothesis one
+    # keyframe-sum add and one channel-reduction add; one multiply.
+    t["CVF"]["grid_sample"] += P.N_HYPOTHESES * P.N_KEYFRAMES
+    t["CVF"]["add"] += P.N_HYPOTHESES * P.N_KEYFRAMES
+    t["CVF"]["mul"] += P.N_HYPOTHESES
+    # CVE skip concats
+    t["CVE"]["concat"] += sum(1 for d in P.CVE_DOWN_KERNEL if d is not None)
+    # CL cell
+    t["CL"]["concat"] += 1
+    t["CL"]["slice"] += 4
+    t["CL"]["layer_norm"] += 2
+    t["CL"]["act_sigmoid"] += 3
+    t["CL"]["act_elu"] += 2
+    t["CL"]["mul"] += 3
+    t["CL"]["add"] += 1
+    # CVD
+    t["CVD"]["concat"] += 5
+    t["CVD"]["layer_norm"] += sum(P.CVD_BODY_K3)
+    t["CVD"]["up_bilinear"] += 2 * 4 + 1   # 4 feat ups + 4 head ups + final
+    return t
+
+
+def _feat_hw(level: int) -> Tuple[int, int]:
+    return P.IMG_H >> level, P.IMG_W >> level
+
+
+def conv_mults() -> Dict[str, int]:
+    """Multiplications per process from conv ops (weighted by output size)."""
+    out: Dict[str, int] = {pr: 0 for pr in PROCESSES}
+    shapes = _conv_out_shapes()
+    for s in M.all_conv_specs():
+        ho, wo = shapes[s.name]
+        per_out = (1 if s.dw else s.cin) * s.k * s.k
+        out[_proc_of(s.name)] += s.cout * ho * wo * per_out
+    return out
+
+
+def total_mults() -> Dict[str, int]:
+    """All multiplications per process (convs + elementwise + sampling).
+
+    Grid sampling costs 4 muls per output element (bilinear weights);
+    CVF's element-wise multiply is C x H x W per hypothesis."""
+    out = conv_mults()
+    h1, w1 = _feat_hw(1)
+    c = P.FPN_CH
+    # CVF: warp (4 muls / elem) + feature product
+    out["CVF"] += P.N_HYPOTHESES * P.N_KEYFRAMES * c * h1 * w1 * 4
+    out["CVF"] += P.N_HYPOTHESES * c * h1 * w1
+    # CL elementwise muls
+    h5, w5 = _feat_hw(5)
+    out["CL"] += 3 * P.CL_CH * h5 * w5
+    # CVD bilinear ups (4 muls / elem) — counted to CVD
+    for b in range(1, 5):
+        h, w = _feat_hw(5 - b)
+        out["CVD"] += 4 * (P.CVD_CH[b - 1] * h * w + h * w)
+    out["CVD"] += 4 * P.IMG_H * P.IMG_W
+    # FS nearest ups are copies (no muls); LN ignored (paper counts muls)
+    return out
+
+
+def _conv_out_shapes() -> Dict[str, Tuple[int, int]]:
+    """Output H, W of every conv (replays the graph wiring)."""
+    shapes: Dict[str, Tuple[int, int]] = {}
+    # FE
+    h, w = _feat_hw(1)
+    shapes["fe.stem"] = (h, w)
+    shapes["fe.sep.dw"] = (h, w)
+    shapes["fe.sep.pw"] = (h, w)
+    _, wiring = M.fe_specs()
+    wi = 0
+    lv = 1
+    for si, st in enumerate(P.FE_STAGES):
+        for ri in range(st.repeats):
+            base = wiring[wi]["base"]
+            stride = st.stride if ri == 0 else 1
+            exp_h, exp_w = _feat_hw(lv)          # expansion at input res
+            if stride == 2:
+                lv += 1
+            h, w = _feat_hw(lv)
+            shapes[f"{base}.exp"] = (exp_h, exp_w)
+            shapes[f"{base}.dw"] = (h, w)
+            shapes[f"{base}.pw"] = (h, w)
+            wi += 1
+    # FS
+    for i in range(5):
+        shapes[f"fs.lat{i}"] = _feat_hw(i + 1)
+    for i in range(4):
+        shapes[f"fs.smooth{i}"] = _feat_hw(i + 1)
+    # CVE
+    for lvl in range(5):
+        hw = _feat_hw(lvl + 1)
+        if P.CVE_DOWN_KERNEL[lvl] is not None:
+            shapes[f"cve.l{lvl}.down"] = hw
+        for bi in range(len(P.CVE_BODY_KERNELS[lvl])):
+            shapes[f"cve.l{lvl}.c{bi}"] = hw
+    # CL
+    shapes["cl.gates"] = _feat_hw(5)
+    # CVD
+    for b in range(5):
+        hw = _feat_hw(5 - b)
+        shapes[f"cvd.b{b}.c3e"] = hw
+        shapes[f"cvd.b{b}.c5"] = hw
+        for i in range(1, P.CVD_BODY_K3[b]):
+            shapes[f"cvd.b{b}.c3_{i}"] = hw
+        shapes[f"cvd.b{b}.head"] = hw
+    return shapes
+
+
+def table_i_matches_paper() -> bool:
+    got = op_census()
+    for row in ROW_ORDER:
+        for pi, pr in enumerate(PROCESSES):
+            if got[pr][row] != PAPER_TABLE_I[row][pi]:
+                return False
+    return True

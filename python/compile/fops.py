@@ -1,0 +1,141 @@
+"""Float reference operators (pure jnp, differentiable).
+
+These implement every operator of DeepVideoMVS in float32 and are used by
+(1) the float model (training + the "CPU-only" semantics baseline), and
+(2) the software-friendly ops of the hybrid pipeline (grid sampling, layer
+normalization, bilinear upsampling run in float on the CPU in the paper).
+
+Conventions (shared bit-for-bit in spirit with ``rust/src/ops``):
+  * tensors are NCHW (batch dim usually 1 and carried explicitly),
+  * conv padding is symmetric ``k // 2``; out = floor((H + 2p - k)/s) + 1,
+  * grid sampling uses zero padding outside the input and align_corners
+    semantics identical to the Rust implementation (pixel centres at
+    integer coordinates),
+  * layer norm normalises over (C, H, W) with per-channel affine.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+
+
+def conv2d(x, w, b=None, stride=1):
+    """Dense conv. x: (N,C,H,W) f32, w: (O,I,kh,kw), b: (O,)."""
+    k = w.shape[2]
+    p = k // 2
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(p, p), (p, p)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return y
+
+
+def conv2d_dw(x, w, b=None, stride=1):
+    """Depthwise conv. w: (C,1,kh,kw)."""
+    k = w.shape[2]
+    p = k // 2
+    c = x.shape[1]
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(p, p), (p, p)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c)
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return y
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def elu(x):
+    return jnp.where(x >= 0, x, jnp.exp(jnp.minimum(x, 0.0)) - 1.0)
+
+
+def layer_norm(x, gamma, beta):
+    """LN over (C,H,W) per sample; gamma/beta per channel. x: (N,C,H,W)."""
+    mean = jnp.mean(x, axis=(1, 2, 3), keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=(1, 2, 3), keepdims=True)
+    xn = (x - mean) / jnp.sqrt(var + LN_EPS)
+    return xn * gamma[None, :, None, None] + beta[None, :, None, None]
+
+
+def upsample_nearest2x(x):
+    n, c, h, w = x.shape
+    x = x[:, :, :, None, :, None]
+    x = jnp.broadcast_to(x, (n, c, h, 2, w, 2))
+    return x.reshape(n, c, 2 * h, 2 * w)
+
+
+def upsample_bilinear2x(x):
+    """Bilinear x2, half-pixel-centre convention (matches rust ops)."""
+    n, c, h, w = x.shape
+    return resize_bilinear(x, 2 * h, 2 * w)
+
+
+def resize_bilinear(x, oh, ow):
+    n, c, h, w = x.shape
+    # output pixel centre (i+0.5)/scale - 0.5 in input coordinates
+    ys = (jnp.arange(oh) + 0.5) * (h / oh) - 0.5
+    xs = (jnp.arange(ow) + 0.5) * (w / ow) - 0.5
+    y0 = jnp.clip(jnp.floor(ys), 0, h - 1)
+    x0 = jnp.clip(jnp.floor(xs), 0, w - 1)
+    y1 = jnp.clip(y0 + 1, 0, h - 1)
+    x1 = jnp.clip(x0 + 1, 0, w - 1)
+    fy = jnp.clip(ys - y0, 0.0, 1.0)
+    fx = jnp.clip(xs - x0, 0.0, 1.0)
+    y0i, y1i = y0.astype(jnp.int32), y1.astype(jnp.int32)
+    x0i, x1i = x0.astype(jnp.int32), x1.astype(jnp.int32)
+    a = x[:, :, y0i][:, :, :, x0i]
+    b = x[:, :, y0i][:, :, :, x1i]
+    cc = x[:, :, y1i][:, :, :, x0i]
+    d = x[:, :, y1i][:, :, :, x1i]
+    fy = fy[None, None, :, None]
+    fx = fx[None, None, None, :]
+    top = a * (1 - fx) + b * fx
+    bot = cc * (1 - fx) + d * fx
+    return top * (1 - fy) + bot * fy
+
+
+def grid_sample(x, grid):
+    """Bilinear grid sampling with zero padding (paper §II-B eq.).
+
+    x: (N,C,H,W); grid: (N,Ho,Wo,2) in *pixel* coordinates (gx, gy) of the
+    input (pixel centres at integers). Out-of-range taps contribute zero,
+    matching ``rust/src/ops/grid_sample.rs``.
+    """
+    n, c, h, w = x.shape
+    gx = grid[..., 0]
+    gy = grid[..., 1]
+    x0 = jnp.floor(gx)
+    y0 = jnp.floor(gy)
+    fx = gx - x0
+    fy = gy - y0
+
+    def tap(yi, xi):
+        inb = (yi >= 0) & (yi < h) & (xi >= 0) & (xi < w)
+        yc = jnp.clip(yi, 0, h - 1).astype(jnp.int32)
+        xc = jnp.clip(xi, 0, w - 1).astype(jnp.int32)
+        # gather per batch (n==1 in this system, but stay general)
+        v = x[jnp.arange(n)[:, None, None], :, yc, xc]      # (N,Ho,Wo,C)
+        v = jnp.moveaxis(v, -1, 1)                          # (N,C,Ho,Wo)
+        return v * inb[:, None, :, :]
+
+    a = tap(y0, x0)
+    b = tap(y0, x0 + 1)
+    cc = tap(y0 + 1, x0)
+    d = tap(y0 + 1, x0 + 1)
+    fx = fx[:, None]
+    fy = fy[:, None]
+    return (a * (1 - fx) * (1 - fy) + b * fx * (1 - fy)
+            + cc * (1 - fx) * fy + d * fx * fy)

@@ -1,0 +1,203 @@
+"""Pallas quantized-conv kernels — the FADEC conv pipeline as an L1 kernel.
+
+Hardware adaptation (DESIGN.md §2): FADEC's PL streams a sliding window
+through BRAM line buffers with ``par_ich x par_och`` MAC parallelism. On
+a TPU-shaped target the same schedule becomes: HBM->VMEM blocks selected
+by ``BlockSpec`` over output-channel tiles (the par_och unroll becomes
+the MXU lane dimension), and the inner reduction is expressed as ``kh*kw``
+``(OCB x IC) . (IC x Ho*Wo)`` integer dots — the MXU-systolic analog of
+the FPGA's dedicated multiplier array. The scale-shift-clip requantization
+(paper §III-B2) and the folded ReLU are fused into the kernel epilogue,
+mirroring the paper's "sequence of element-wise operators folded into
+one" pipeline stage.
+
+Block sizing (§Perf, EXPERIMENTS.md): oc_block = 32 keeps the whole
+output-channel dimension of most convs in a single grid step — on the
+CPU PJRT backend this nearly halves executable time vs oc_block = 8
+(fewer grid iterations around the integer dots), and on a real TPU it
+is the MXU-lane-filling choice while staying far below the VMEM budget
+(see ``vmem_footprint_bytes``).
+
+Kernels run with ``interpret=True`` — mandatory on the CPU PJRT backend
+(real-TPU lowering emits Mosaic custom-calls the CPU plugin cannot run);
+interpret-mode lowering inlines plain HLO ops, so the AOT artifacts stay
+executable from Rust. Numerics are bit-exact against ``ref.py``.
+
+Inputs are NCHW with N == 1 (the accelerator processes one frame at a
+time, as on the ZCU104); the batch dim is squeezed at the wrapper level.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params as P
+
+INTERPRET = True  # CPU PJRT cannot execute Mosaic custom-calls
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _rshift_round_i64(v, r: int):
+    if r > 0:
+        return (v + (1 << (r - 1))) >> r
+    if r < 0:
+        return v << (-r)
+    return v
+
+
+def _epilogue(acc_i32, s_q: int, r: int, relu: bool):
+    """scale -> rshift-round -> clip (-> folded ReLU); acc: int32."""
+    m2 = acc_i32.astype(jnp.int64) * jnp.int64(s_q)
+    y = _rshift_round_i64(m2, r)
+    y = jnp.clip(y, P.A_QMIN, P.A_QMAX).astype(jnp.int16)
+    if relu:
+        y = jnp.maximum(y, 0).astype(jnp.int16)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# dense conv
+# ---------------------------------------------------------------------------
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, stride, ho, wo,
+                 s_q, r, relu):
+    """One grid step: one output-channel block over the full spatial map.
+
+    x_ref: (IC, Hp, Wp) i16 — padded input, fully resident in VMEM
+    w_ref: (OCB, IC, kh, kw) i8
+    b_ref: (OCB,) i32
+    o_ref: (OCB, Ho, Wo) i16
+    """
+    x = x_ref[...].astype(jnp.int32)                    # (IC, Hp, Wp)
+    ocb = w_ref.shape[0]
+    acc = jnp.zeros((ocb, ho * wo), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            # static strided window: the BRAM line-buffer tap (i, j)
+            patch = jax.lax.slice(
+                x, (0, i, j),
+                (x.shape[0], i + (ho - 1) * stride + 1,
+                 j + (wo - 1) * stride + 1),
+                (1, stride, stride))                    # (IC, Ho, Wo)
+            patch = patch.reshape(x.shape[0], ho * wo)
+            wij = w_ref[...][:, :, i, j].astype(jnp.int32)   # (OCB, IC)
+            # MXU-shaped integer contraction (OCB x IC) . (IC x Ho*Wo)
+            acc = acc + jax.lax.dot_general(
+                wij, patch, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+    acc = acc + b_ref[...][:, None].astype(jnp.int32)
+    o_ref[...] = _epilogue(acc, s_q, r, relu).reshape(ocb, ho, wo)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "s_q", "r", "relu",
+                                             "oc_block"))
+def conv2d_q(x, w, b, *, stride: int = 1, s_q: int, r: int,
+             relu: bool = False, oc_block: int = 32):
+    """Quantized dense conv2d. x: (1,IC,H,W) i16, w: (OC,IC,k,k) i8,
+    b: (OC,) i32. Returns (1,OC,Ho,Wo) i16. Bit-exact vs conv2d_q_ref."""
+    _, ic, h, wdt = x.shape
+    oc, _, kh, kw = w.shape
+    p = kh // 2
+    ho = (h + 2 * p - kh) // stride + 1
+    wo = (wdt + 2 * p - kw) // stride + 1
+    xp = jnp.pad(x[0], ((0, 0), (p, p), (p, p)))
+    ocb = min(oc_block, oc)
+    # pad OC to a multiple of the block (the FPGA pads its channel loop too)
+    ocp = _ceil_div(oc, ocb) * ocb
+    if ocp != oc:
+        w = jnp.pad(w, ((0, ocp - oc), (0, 0), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, ocp - oc),))
+    grid = (ocp // ocb,)
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, kh=kh, kw=kw, stride=stride,
+                          ho=ho, wo=wo, s_q=s_q, r=r, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ic, xp.shape[1], xp.shape[2]), lambda o: (0, 0, 0)),
+            pl.BlockSpec((ocb, ic, kh, kw), lambda o: (o, 0, 0, 0)),
+            pl.BlockSpec((ocb,), lambda o: (o,)),
+        ],
+        out_specs=pl.BlockSpec((ocb, ho, wo), lambda o: (o, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ocp, ho, wo), jnp.int16),
+        interpret=INTERPRET,
+    )(xp, w, b)
+    return out[None, :oc]
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv
+# ---------------------------------------------------------------------------
+
+def _dwconv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, stride, ho, wo,
+                   s_q, r, relu):
+    """x_ref: (CB, Hp, Wp) i16, w_ref: (CB, kh, kw) i8, b_ref: (CB,) i32."""
+    x = x_ref[...].astype(jnp.int32)
+    cb = x.shape[0]
+    acc = jnp.zeros((cb, ho, wo), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x, (0, i, j),
+                (cb, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1),
+                (1, stride, stride))
+            wij = w_ref[...][:, i, j].astype(jnp.int32)
+            acc = acc + wij[:, None, None] * patch
+    acc = acc + b_ref[...][:, None, None].astype(jnp.int32)
+    o_ref[...] = _epilogue(acc, s_q, r, relu)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "s_q", "r", "relu",
+                                             "c_block"))
+def conv2d_dw_q(x, w, b, *, stride: int = 1, s_q: int, r: int,
+                relu: bool = False, c_block: int = 32):
+    """Quantized depthwise conv2d. x: (1,C,H,W) i16, w: (C,1,k,k) i8."""
+    _, c, h, wdt = x.shape
+    kh, kw = w.shape[2], w.shape[3]
+    p = kh // 2
+    ho = (h + 2 * p - kh) // stride + 1
+    wo = (wdt + 2 * p - kw) // stride + 1
+    xp = jnp.pad(x[0], ((0, 0), (p, p), (p, p)))
+    w3 = w[:, 0]                                   # (C, kh, kw)
+    cb = min(c_block, c)
+    cp = _ceil_div(c, cb) * cb
+    if cp != c:
+        xp = jnp.pad(xp, ((0, cp - c), (0, 0), (0, 0)))
+        w3 = jnp.pad(w3, ((0, cp - c), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, cp - c),))
+    grid = (cp // cb,)
+    out = pl.pallas_call(
+        functools.partial(_dwconv_kernel, kh=kh, kw=kw, stride=stride,
+                          ho=ho, wo=wo, s_q=s_q, r=r, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cb, xp.shape[1], xp.shape[2]), lambda i: (i, 0, 0)),
+            pl.BlockSpec((cb, kh, kw), lambda i: (i, 0, 0)),
+            pl.BlockSpec((cb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((cb, ho, wo), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, ho, wo), jnp.int16),
+        interpret=INTERPRET,
+    )(xp, w3, b)
+    return out[None, :c]
+
+
+def vmem_footprint_bytes(ic: int, h: int, w: int, k: int, oc_block: int,
+                         stride: int = 1) -> int:
+    """Estimated VMEM residency of one dense-conv grid step (DESIGN.md §8):
+    padded input block + weight block + bias + int32 accumulator + output."""
+    p = k // 2
+    hp, wp = h + 2 * p, w + 2 * p
+    ho = (h + 2 * p - k) // stride + 1
+    wo = (w + 2 * p - k) // stride + 1
+    x_b = ic * hp * wp * 2
+    w_b = oc_block * ic * k * k
+    acc_b = oc_block * ho * wo * 4
+    out_b = oc_block * ho * wo * 2
+    return x_b + w_b + oc_block * 4 + acc_b + out_b

@@ -1,0 +1,68 @@
+"""Pallas LUT-activation kernels (paper §III-B3).
+
+FADEC approximates sigmoid and ELU with 256-entry tables over |x| <= 8;
+because every quantization multiplier is a power of two, the table index
+is a single add + arithmetic shift of the int16 activation. The same
+structure maps naturally to a TPU kernel: the table lives in VMEM (512 B)
+next to the activation block and the lookup is a vectorised gather.
+
+Out-of-range inputs clamp to the table ends, exactly as the paper's
+hardware does. Bit-exact against ``ref.lut_act_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params as P
+
+INTERPRET = True
+
+
+def _lut_kernel(x_ref, lut_ref, o_ref, *, in_exp):
+    x = x_ref[...].astype(jnp.int32)
+    bias = jnp.int32(int(P.LUT_RANGE_T * (2 ** in_exp)))
+    shift = in_exp - 4            # log2(2t / entries) = -4 for t=8, n=256
+    v = x + bias
+    if shift > 0:
+        idx = v >> shift
+    elif shift < 0:
+        idx = v << (-shift)
+    else:
+        idx = v
+    idx = jnp.clip(idx, 0, P.LUT_ENTRIES - 1)
+    lut = lut_ref[...]
+    o_ref[...] = jnp.take(lut, idx.reshape(-1)).reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("in_exp", "c_block"))
+def lut_act(x, lut, *, in_exp: int, c_block: int = 64):
+    """Apply a 256-entry int16 LUT to an int16 activation tensor.
+
+    x: (1,C,H,W) i16; lut: (256,) i16; returns (1,C,H,W) i16.
+    Gridded over channel blocks (the paper parallelises element-wise
+    operators by 4 in the channel direction; the block here plays the
+    same role for VMEM sizing).
+    """
+    _, c, h, w = x.shape
+    cb = min(c_block, c)
+    cp = -(-c // cb) * cb
+    x3 = x[0]
+    if cp != c:
+        x3 = jnp.pad(x3, ((0, cp - c), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_lut_kernel, in_exp=in_exp),
+        grid=(cp // cb,),
+        in_specs=[
+            pl.BlockSpec((cb, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((P.LUT_ENTRIES,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((cb, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, h, w), jnp.int16),
+        interpret=INTERPRET,
+    )(x3, lut)
+    return out[None, :c]

@@ -1,0 +1,180 @@
+"""Pure-jnp oracles for the quantized-integer kernel semantics.
+
+These define the *bit-exact* contract that the Pallas kernels
+(``conv_quant.py``, ``lut_act.py``), the jnp elementwise quantized ops,
+and the Rust PTQ baseline (``rust/src/quant``) all implement:
+
+  conv (paper §III-B2):
+      acc   = sum_{s,t} w_q . x_q + b_q          (int32)
+      m2    = acc * s_q                           (int64)
+      y_q   = clip(rshift_round(m2, r))           (int16)
+
+  rshift_round(v, r) = (v + (1 << (r-1))) >> r  (arithmetic, r > 0)
+                        v                        (r == 0)
+                        v << -r                  (r < 0)
+  i.e. round-half-towards-+inf, the "rounding after right shifts" the
+  paper credits for the accelerator beating C++-with-PTQ accuracy.
+
+  LUT activation (paper §III-B3): 256 entries over [-t, t], midpoint
+  sampling, index by integer shift (all scales are powers of two so the
+  index computation is a single add + shift), clamped at the table ends.
+
+Accumulators assume no int32 overflow — guaranteed by the calibration
+ranges (the FPGA sizes its adders the same way); hypothesis tests bound
+their inputs accordingly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import params as P
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# scalar helpers (numpy, used at build/calibration time)
+# ---------------------------------------------------------------------------
+
+def quantize_np(x: np.ndarray, exp: int, qmin: int, qmax: int) -> np.ndarray:
+    """q = clip(floor(x * 2^exp + 0.5)) — round half towards +inf."""
+    scaled = np.floor(np.asarray(x, np.float64) * float(2.0 ** exp) + 0.5)
+    return np.clip(scaled, qmin, qmax).astype(np.int64)
+
+
+def dequantize_np(q: np.ndarray, exp: int) -> np.ndarray:
+    return np.asarray(q, np.float64) / float(2.0 ** exp)
+
+
+def rshift_round_np(v: np.ndarray, r: int) -> np.ndarray:
+    v = np.asarray(v, np.int64)
+    if r > 0:
+        return (v + (np.int64(1) << np.int64(r - 1))) >> np.int64(r)
+    if r < 0:
+        return v << np.int64(-r)
+    return v
+
+
+# ---------------------------------------------------------------------------
+# jnp oracle ops (operate on int arrays; shapes as the pallas kernels)
+# ---------------------------------------------------------------------------
+
+def rshift_round(v, r: int):
+    """v: int64 array; static shift r (python int)."""
+    v = v.astype(jnp.int64)
+    if r > 0:
+        return (v + (1 << (r - 1))) >> r
+    if r < 0:
+        return v << (-r)
+    return v
+
+
+def clip_act(v):
+    return jnp.clip(v, P.A_QMIN, P.A_QMAX).astype(jnp.int16)
+
+
+def conv2d_q_ref(x, w, b, s_q: int, r: int, stride: int = 1,
+                 relu: bool = False):
+    """Oracle quantized dense conv. x: (1,I,H,W) i16, w: (O,I,k,k) i8,
+    b: (O,) i32, s_q/r static python ints."""
+    k = w.shape[2]
+    p = k // 2
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        window_strides=(stride, stride), padding=[(p, p), (p, p)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.int32)
+    acc = acc + b[None, :, None, None].astype(jnp.int32)
+    m2 = acc.astype(jnp.int64) * jnp.int64(s_q)
+    y = clip_act(rshift_round(m2, r))
+    if relu:
+        y = jnp.maximum(y, 0).astype(jnp.int16)
+    return y
+
+
+def conv2d_dw_q_ref(x, w, b, s_q: int, r: int, stride: int = 1,
+                    relu: bool = False):
+    """Oracle quantized depthwise conv. w: (C,1,k,k) i8."""
+    k = w.shape[2]
+    p = k // 2
+    c = x.shape[1]
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        window_strides=(stride, stride), padding=[(p, p), (p, p)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c, preferred_element_type=jnp.int32)
+    acc = acc + b[None, :, None, None].astype(jnp.int32)
+    m2 = acc.astype(jnp.int64) * jnp.int64(s_q)
+    y = clip_act(rshift_round(m2, r))
+    if relu:
+        y = jnp.maximum(y, 0).astype(jnp.int16)
+    return y
+
+
+def requant_ref(x, r: int):
+    """Shift an int16 activation to a new exponent (extern 'shift' stage)."""
+    return clip_act(rshift_round(x.astype(jnp.int64), r))
+
+
+def add_q_ref(a, b, la: int, lb: int, r: int):
+    """Quantized addition: lshift each operand into a common exponent
+    (at most one lshift each — the power-of-two property, §III-B2), add in
+    int32, rshift-round-clip to the output exponent."""
+    aw = a.astype(jnp.int32) << la
+    bw = b.astype(jnp.int32) << lb
+    return clip_act(rshift_round((aw + bw).astype(jnp.int64), r))
+
+
+def mul_q_ref(a, b, r: int):
+    """Quantized elementwise multiply: int16*int16 -> int32, rshift."""
+    m = a.astype(jnp.int32) * b.astype(jnp.int32)
+    return clip_act(rshift_round(m.astype(jnp.int64), r))
+
+
+# ---------------------------------------------------------------------------
+# LUT activations
+# ---------------------------------------------------------------------------
+
+def sigmoid_np(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def elu_np(x):
+    return np.where(x >= 0, x, np.exp(np.minimum(x, 0.0)) - 1.0)
+
+
+SIGMOID_OUT_EXP = 14   # sigmoid in [0,1] -> q = y * 2^14 fits int16
+
+
+def build_lut(fn, out_exp: int) -> np.ndarray:
+    """256-entry int16 table over [-t, t], midpoint sampling."""
+    n = P.LUT_ENTRIES
+    t = P.LUT_RANGE_T
+    xs = -t + (np.arange(n) + 0.5) * (2.0 * t / n)
+    ys = fn(xs)
+    return quantize_np(ys, out_exp, P.A_QMIN, P.A_QMAX).astype(np.int16)
+
+
+def lut_index(x, in_exp: int):
+    """idx = (x_q + t*2^e) >> (e - log2(2t/256)); t = 8, 256 entries
+    => entry width 2^-4, so shift = e - 4. Static in_exp."""
+    xq = x.astype(jnp.int32)
+    bias = jnp.int32(int(P.LUT_RANGE_T * (2 ** in_exp)))
+    shift = in_exp - 4
+    v = xq + bias
+    if shift > 0:
+        idx = v >> shift
+    elif shift < 0:
+        idx = v << (-shift)
+    else:
+        idx = v
+    return jnp.clip(idx, 0, P.LUT_ENTRIES - 1)
+
+
+def lut_act_ref(x, lut, in_exp: int):
+    """Oracle LUT activation: x i16 any shape, lut (256,) i16."""
+    idx = lut_index(x, in_exp)
+    return jnp.take(lut, idx.reshape(-1)).reshape(x.shape)

@@ -1,0 +1,836 @@
+"""L2: the DeepVideoMVS compute graph (float + quantized paths).
+
+Implements the full pipeline of Fig. 1 of the paper with the exact
+operator census of Table I (see DESIGN.md §4):
+
+    FE (MnasNet-b1)  ->  FS (FPN)  ->  [KB / CVF plane sweep]  ->
+    CVE (U-Net encoder)  ->  CL (ConvLSTM)  ->  CVD (decoder, 5 heads)
+
+Three forward paths share one parameter set:
+
+  * ``*_f``   — float32, differentiable, used for training and as the
+                "CPU-only" semantics reference;
+  * ``seg_*_q`` — quantized int16/int8 via the Pallas kernels; one
+                function per HW *segment* of the hybrid schedule
+                (everything between two software ops). These are what
+                ``aot.py`` lowers to the ``artifacts/*.hlo.txt`` the
+                Rust runtime executes;
+  * ``hybrid_step`` — the python reference of the full PL+CPU frame step
+                (quantized segments + float software ops), used to emit
+                golden tensors for the Rust integration tests.
+
+Quantized activations travel as ``(int16 array, exponent)`` pairs; all
+scale factors are powers of two (paper §III-B2), so every rescale is an
+add + shift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fops
+from . import params as P
+from .kernels import conv_quant as ck
+from .kernels import lut_act as lk
+from .kernels import ref as R
+
+Params = Dict[str, np.ndarray]
+QT = Tuple[jnp.ndarray, int]          # (int16 tensor, exponent)
+
+
+# ===========================================================================
+# Graph description
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One convolution block: conv (+folded affine) -> scalar gain -> act."""
+
+    name: str
+    cin: int
+    cout: int
+    k: int
+    stride: int = 1
+    dw: bool = False
+    act: str = "none"       # "relu" | "sigmoid" | "none"
+
+
+def fe_specs() -> Tuple[List[ConvSpec], List[dict]]:
+    """MnasNet-b1 feature extractor. Returns (conv specs, block wiring)."""
+    specs: List[ConvSpec] = [
+        ConvSpec("fe.stem", 3, P.FE_STEM_CH, 3, 2, act="relu"),
+        ConvSpec("fe.sep.dw", P.FE_STEM_CH, P.FE_STEM_CH, 3, 1, dw=True,
+                 act="relu"),
+        ConvSpec("fe.sep.pw", P.FE_STEM_CH, P.FE_STEM_CH, 1, 1),
+    ]
+    wiring: List[dict] = []
+    cin = P.FE_STEM_CH
+    for si, st in enumerate(P.FE_STAGES):
+        for ri in range(st.repeats):
+            stride = st.stride if ri == 0 else 1
+            exp_ch = cin * st.expand
+            base = f"fe.s{si}.b{ri}"
+            specs += [
+                ConvSpec(f"{base}.exp", cin, exp_ch, 1, 1, act="relu"),
+                ConvSpec(f"{base}.dw", exp_ch, exp_ch, st.kernel, stride,
+                         dw=True, act="relu"),
+                ConvSpec(f"{base}.pw", exp_ch, st.out_ch, 1, 1),
+            ]
+            wiring.append({
+                "base": base, "stage": si,
+                # no residual on the first block of a stage (MnasNet-b1)
+                "residual": ri > 0 and stride == 1 and cin == st.out_ch,
+            })
+            cin = st.out_ch
+    return specs, wiring
+
+
+def fs_specs() -> List[ConvSpec]:
+    """FPN laterals + smoothing convs (no activations — Table I)."""
+    specs = [ConvSpec(f"fs.lat{i}", P.FE_TAP_CHANNELS[i], P.FPN_CH, 1, 1)
+             for i in range(5)]
+    specs += [ConvSpec(f"fs.smooth{i}", P.FPN_CH, P.FPN_CH, 3, 1)
+              for i in range(4)]
+    return specs
+
+
+def cve_specs() -> List[ConvSpec]:
+    specs: List[ConvSpec] = []
+    cin = P.N_HYPOTHESES
+    for lv in range(5):
+        ch = P.CVE_CH[lv]
+        dk = P.CVE_DOWN_KERNEL[lv]
+        if dk is not None:
+            specs.append(ConvSpec(f"cve.l{lv}.down", cin, ch, dk, 2,
+                                  act="relu"))
+            cin = ch + P.FPN_CH      # concat pyramid feature
+        for bi, bk in enumerate(P.CVE_BODY_KERNELS[lv]):
+            specs.append(ConvSpec(f"cve.l{lv}.c{bi}", cin, ch, bk, 1,
+                                  act="relu"))
+            cin = ch
+    return specs
+
+
+def cl_specs() -> List[ConvSpec]:
+    c = P.CL_CH
+    return [ConvSpec("cl.gates", 2 * c, 4 * c, 3, 1)]
+
+
+def cvd_specs() -> List[ConvSpec]:
+    specs: List[ConvSpec] = []
+    for b in range(5):
+        ch = P.CVD_CH[b]
+        if b == 0:
+            cin = P.CL_CH + P.CVE_CH[4]
+        else:
+            cin = P.CVD_CH[b - 1] + P.CVE_CH[4 - b] + 1  # +1: coarser depth
+        specs.append(ConvSpec(f"cvd.b{b}.c3e", cin, ch, 3, 1, act="relu"))
+        specs.append(ConvSpec(f"cvd.b{b}.c5", ch, ch, 5, 1, act="relu"))
+        for i in range(1, P.CVD_BODY_K3[b]):
+            specs.append(ConvSpec(f"cvd.b{b}.c3_{i}", ch, ch, 3, 1,
+                                  act="relu"))
+        specs.append(ConvSpec(f"cvd.b{b}.head", ch, 1, 3, 1, act="sigmoid"))
+    return specs
+
+
+def all_conv_specs() -> List[ConvSpec]:
+    fe, _ = fe_specs()
+    return fe + fs_specs() + cve_specs() + cl_specs() + cvd_specs()
+
+
+def ln_names() -> List[str]:
+    """Layer-norm sites (float gamma/beta; SW ops in the hybrid pipeline)."""
+    names = ["cl.ln_gates", "cl.ln_cell"]
+    for b in range(5):
+        names += [f"cvd.b{b}.ln{i}" for i in range(P.CVD_BODY_K3[b])]
+    return names
+
+
+def _ln_channels(name: str) -> int:
+    if name == "cl.ln_gates":
+        return 4 * P.CL_CH
+    if name == "cl.ln_cell":
+        return P.CL_CH
+    b = int(name.split(".")[1][1:])
+    return P.CVD_CH[b]
+
+
+def _cvd_body_name(b: int, i: int) -> str:
+    """Conv producing the pre-LN tensor of LN site ``i`` of block b."""
+    return f"cvd.b{b}.c5" if i == 0 else f"cvd.b{b}.c3_{i}"
+
+
+def _cvd_carry_name(b: int) -> str:
+    """The decoder feature carried to block b+1 (post-last-LN tensor)."""
+    return f"cvd.b{b}.ln{P.CVD_BODY_K3[b] - 1}"
+
+
+def _cve_out_name(lv: int) -> str:
+    return f"cve.l{lv}.c{len(P.CVE_BODY_KERNELS[lv]) - 1}"
+
+
+_SPEC_INDEX: Dict[str, ConvSpec] = {s.name: s for s in all_conv_specs()}
+
+
+# ===========================================================================
+# Parameter init / float blocks
+# ===========================================================================
+
+def init_params(seed: int = 0) -> Params:
+    """He-init float parameters for every conv + LN site."""
+    rng = np.random.default_rng(seed)
+    p: Params = {}
+    for s in all_conv_specs():
+        fan_in = (1 if s.dw else s.cin) * s.k * s.k
+        std = float(np.sqrt(2.0 / fan_in))
+        shape = (s.cout, 1, s.k, s.k) if s.dw else (s.cout, s.cin, s.k, s.k)
+        p[f"{s.name}.w"] = rng.normal(0.0, std, shape).astype(np.float32)
+        p[f"{s.name}.b"] = np.zeros(s.cout, np.float32)
+        p[f"{s.name}.gamma"] = np.ones(s.cout, np.float32)
+        p[f"{s.name}.beta"] = np.zeros(s.cout, np.float32)
+        p[f"{s.name}.s"] = np.ones((), np.float32)
+    for n in ln_names():
+        ch = _ln_channels(n)
+        p[f"{n}.gamma"] = np.ones(ch, np.float32)
+        p[f"{n}.beta"] = np.zeros(ch, np.float32)
+    return p
+
+
+def _rec(tape: Optional[dict], name: str, x) -> None:
+    """Record an activation for PTQ calibration (float path only)."""
+    if tape is not None:
+        tape[name] = x
+
+
+def conv_f(p: Params, name: str, x, tape: Optional[dict] = None):
+    """Float conv block: s * (gamma (conv(x,w)+b) + beta), then act."""
+    s = _SPEC_INDEX[name]
+    w = jnp.asarray(p[f"{name}.w"])
+    b = jnp.asarray(p[f"{name}.b"])
+    g = jnp.asarray(p[f"{name}.gamma"])
+    bt = jnp.asarray(p[f"{name}.beta"])
+    sc = jnp.asarray(p[f"{name}.s"])
+    conv = fops.conv2d_dw if s.dw else fops.conv2d
+    y = conv(x, w, b, stride=s.stride)
+    y = y * g[None, :, None, None] + bt[None, :, None, None]
+    y = y * sc
+    if s.act == "relu":
+        y = fops.relu(y)
+    elif s.act == "sigmoid":
+        _rec(tape, f"{name}.pre", y)    # LUT input exponent calibration
+        y = fops.sigmoid(y)
+    _rec(tape, name, y)
+    return y
+
+
+def ln_f(p: Params, name: str, x, tape: Optional[dict] = None):
+    y = fops.layer_norm(x, jnp.asarray(p[f"{name}.gamma"]),
+                        jnp.asarray(p[f"{name}.beta"]))
+    _rec(tape, name, y)
+    return y
+
+
+# ===========================================================================
+# Float forward: segments
+# ===========================================================================
+
+def fe_fs_f(p: Params, img, tape: Optional[dict] = None):
+    """image (1,3,H,W) -> list of 5 FPN features [1/2 .. 1/32]."""
+    _rec(tape, "image", img)
+    _, wiring = fe_specs()
+    x = conv_f(p, "fe.stem", img, tape)
+    x = conv_f(p, "fe.sep.dw", x, tape)
+    x = conv_f(p, "fe.sep.pw", x, tape)
+    taps = [x]
+    wi = 0
+    for si, st in enumerate(P.FE_STAGES):
+        for ri in range(st.repeats):
+            base = wiring[wi]["base"]
+            res = wiring[wi]["residual"]
+            inp = x
+            x = conv_f(p, f"{base}.exp", x, tape)
+            x = conv_f(p, f"{base}.dw", x, tape)
+            x = conv_f(p, f"{base}.pw", x, tape)
+            if res:
+                x = inp + x
+                _rec(tape, f"{base}.addout", x)
+            wi += 1
+        if si in P.FE_TAP_STAGES:
+            taps.append(x)
+    assert len(taps) == 5
+    lats = [conv_f(p, f"fs.lat{i}", taps[i], tape) for i in range(5)]
+    feats = [None] * 5
+    feats[4] = lats[4]
+    for i in range(3, -1, -1):
+        up = fops.upsample_nearest2x(feats[i + 1])
+        s = lats[i] + up
+        _rec(tape, f"fs.add{i}", s)
+        feats[i] = conv_f(p, f"fs.smooth{i}", s, tape)
+    return feats
+
+
+def cve_f(p: Params, cost, feats, tape: Optional[dict] = None):
+    """cost (1,64,Hc,Wc) + pyramid feats -> [e0..e4]."""
+    outs = []
+    x = cost
+    for lv in range(5):
+        if P.CVE_DOWN_KERNEL[lv] is not None:
+            x = conv_f(p, f"cve.l{lv}.down", x, tape)
+            x = jnp.concatenate([x, feats[lv]], axis=1)
+            _rec(tape, f"cve.l{lv}.cat", x)
+        for bi in range(len(P.CVE_BODY_KERNELS[lv])):
+            x = conv_f(p, f"cve.l{lv}.c{bi}", x, tape)
+        outs.append(x)
+    return outs
+
+
+def cl_f(p: Params, x, h, c, tape: Optional[dict] = None):
+    """ConvLSTM cell (float). Returns (h', c')."""
+    cat = jnp.concatenate([x, h], axis=1)
+    _rec(tape, "cl.cat", cat)
+    gates = conv_f(p, "cl.gates", cat, tape)
+    gates = ln_f(p, "cl.ln_gates", gates, tape)
+    cc = P.CL_CH
+    gi = fops.sigmoid(gates[:, 0 * cc:1 * cc])
+    gf = fops.sigmoid(gates[:, 1 * cc:2 * cc])
+    gg = fops.elu(gates[:, 2 * cc:3 * cc])
+    go = fops.sigmoid(gates[:, 3 * cc:4 * cc])
+    _rec(tape, "cl.g", gg)
+    c_new = gf * c + gi * gg
+    _rec(tape, "cl.cnew", c_new)
+    ln_c = ln_f(p, "cl.ln_cell", c_new, tape)
+    elu_c = fops.elu(ln_c)
+    _rec(tape, "cl.elu_c", elu_c)
+    h_new = go * elu_c
+    _rec(tape, "cl.hnew", h_new)
+    return h_new, c_new
+
+
+def cvd_f(p: Params, h, enc, tape: Optional[dict] = None):
+    """Decoder: h (1,64,h5,w5) + encoder skips -> (5 sigmoid heads
+    coarse->fine, full-res sigmoid map)."""
+    heads = []
+    feat = None
+    d = None
+    for b in range(5):
+        if b == 0:
+            x = jnp.concatenate([h, enc[4]], axis=1)
+        else:
+            upf = fops.upsample_bilinear2x(feat)
+            upd = fops.upsample_bilinear2x(d)
+            _rec(tape, f"cvd.b{b}.upd", upd)
+            x = jnp.concatenate([upf, enc[4 - b], upd], axis=1)
+        _rec(tape, f"cvd.b{b}.cat", x)
+        x = conv_f(p, f"cvd.b{b}.c3e", x, tape)
+        for i in range(P.CVD_BODY_K3[b]):
+            x = conv_f(p, _cvd_body_name(b, i), x, tape)
+            x = ln_f(p, f"cvd.b{b}.ln{i}", x, tape)
+        feat = x
+        d = conv_f(p, f"cvd.b{b}.head", x, tape)
+        heads.append(d)
+    full = fops.upsample_bilinear2x(heads[-1])   # 1/2 -> full res (9th up)
+    return heads, full
+
+
+# ===========================================================================
+# Software ops shared by every path (pose math / plane sweep / correction)
+# ===========================================================================
+
+def normalize_image(rgb_u8):
+    """(H,W,3) u8 -> (1,3,H,W) f32 in roughly [-2, 2]."""
+    x = jnp.asarray(rgb_u8, jnp.float32) / 255.0
+    x = (x - 0.5) / 0.25
+    return jnp.transpose(x, (2, 0, 1))[None]
+
+
+def sweep_grids(pose_cur, pose_kf, level: int, h: int, w: int):
+    """Plane-sweep warp grids: for each inverse-depth hypothesis, the pixel
+    coordinates in the keyframe image of every current-frame pixel.
+
+    Returns (D, h, w, 2) float32 in keyframe pixel coords (gx, gy).
+    Depends only on poses + intrinsics — this is why CVF *preparation* can
+    overlap FE/FS on the accelerator (paper §III-D2).
+    """
+    fx, fy, cx, cy = P.level_intrinsics(level)
+    inv_depths = jnp.asarray(P.hypothesis_inv_depths(), jnp.float32)
+    ys, xs = jnp.meshgrid(jnp.arange(h, dtype=jnp.float32),
+                          jnp.arange(w, dtype=jnp.float32), indexing="ij")
+    rx = (xs + 0.5 - cx) / fx
+    ry = (ys + 0.5 - cy) / fy
+    rays = jnp.stack([rx, ry, jnp.ones_like(rx)], axis=-1)   # (h,w,3)
+    rel = jnp.linalg.inv(pose_kf) @ pose_cur                 # cur cam -> kf cam
+    Rm, t = rel[:3, :3], rel[:3, 3]
+    depths = 1.0 / inv_depths                                # (D,)
+    pts = rays[None] * depths[:, None, None, None]           # (D,h,w,3)
+    pk = pts @ Rm.T + t[None, None, None, :]
+    z = jnp.maximum(pk[..., 2], 1e-4)
+    gx = pk[..., 0] / z * fx + cx - 0.5
+    gy = pk[..., 1] / z * fy + cy - 0.5
+    return jnp.stack([gx, gy], axis=-1)
+
+
+def cost_volume(feat_cur, kf_feats, grids):
+    """CVF (float SW op). feat_cur: (1,C,h,w); kf_feats: list of (1,C,h,w);
+    grids: list of (D,h,w,2). Returns (1,D,h,w)."""
+    d = P.N_HYPOTHESES
+    _, c, h, w = feat_cur.shape
+    if not kf_feats:
+        return jnp.zeros((1, d, h, w), jnp.float32)
+    acc = jnp.zeros((d, c, h, w), jnp.float32)
+    for f, g in zip(kf_feats, grids):
+        warped = fops.grid_sample(jnp.broadcast_to(f, (d, c, h, w)), g)
+        acc = acc + warped
+    cost = jnp.sum(acc * feat_cur, axis=1) / (c * len(kf_feats))
+    return cost[None]
+
+
+def correction_grid(pose_prev, pose_cur, depth_prev_full, level: int = 5):
+    """Hidden-state correction grid (paper §II-B2): warp h_{t-1} into the
+    current viewpoint using the previous depth estimate."""
+    h = P.IMG_H >> level
+    w = P.IMG_W >> level
+    fx, fy, cx, cy = P.level_intrinsics(level)
+    dprev = fops.resize_bilinear(depth_prev_full, h, w)[0, 0]
+    ys, xs = jnp.meshgrid(jnp.arange(h, dtype=jnp.float32),
+                          jnp.arange(w, dtype=jnp.float32), indexing="ij")
+    rx = (xs + 0.5 - cx) / fx
+    ry = (ys + 0.5 - cy) / fy
+    pts = jnp.stack([rx * dprev, ry * dprev, dprev], axis=-1)
+    rel = jnp.linalg.inv(pose_prev) @ pose_cur
+    pk = pts @ rel[:3, :3].T + rel[:3, 3][None, None, :]
+    z = jnp.maximum(pk[..., 2], 1e-4)
+    gx = pk[..., 0] / z * fx + cx - 0.5
+    gy = pk[..., 1] / z * fy + cy - 0.5
+    return jnp.stack([gx, gy], axis=-1)[None]     # (1,h,w,2)
+
+
+def correct_hidden(h_prev, grid):
+    return fops.grid_sample(h_prev, grid)
+
+
+# ===========================================================================
+# Float full-frame step (training / CPU-only reference)
+# ===========================================================================
+
+@dataclasses.dataclass
+class StreamState:
+    """Cross-frame state (paper Fig. 1 bold dotted arrows)."""
+
+    h: jnp.ndarray
+    c: jnp.ndarray
+    depth_full: jnp.ndarray      # previous full-res *metric* depth
+    pose_prev: Optional[jnp.ndarray]
+
+
+def zero_state() -> StreamState:
+    h5, w5 = P.IMG_H >> 5, P.IMG_W >> 5
+    return StreamState(
+        h=jnp.zeros((1, P.CL_CH, h5, w5), jnp.float32),
+        c=jnp.zeros((1, P.CL_CH, h5, w5), jnp.float32),
+        depth_full=jnp.full((1, 1, P.IMG_H, P.IMG_W), P.MAX_DEPTH,
+                            jnp.float32),
+        pose_prev=None)
+
+
+def step_f(p: Params, img, pose, kf_feats, kf_poses, state: StreamState,
+           tape: Optional[dict] = None):
+    """One float frame step. kf_feats/kf_poses: keyframe buffer contents
+    (lists, possibly empty). Returns (sigmoid heads, full sigmoid map,
+    current 1/2-scale feature, new state)."""
+    feats = fe_fs_f(p, img, tape)
+    f_half = feats[0]
+    hc, wc = f_half.shape[2], f_half.shape[3]
+    grids = [sweep_grids(pose, kp, 1, hc, wc) for kp in kf_poses]
+    cost = cost_volume(f_half, kf_feats, grids)
+    _rec(tape, "cvf.cost", cost)
+    enc = cve_f(p, cost, feats, tape)
+    if state.pose_prev is not None:
+        g = correction_grid(state.pose_prev, pose, state.depth_full)
+        h_in = correct_hidden(state.h, g)
+    else:
+        h_in = state.h
+    _rec(tape, "cl.hcorr", h_in)
+    h_new, c_new = cl_f(p, enc[4], h_in, state.c, tape)
+    heads, full = cvd_f(p, h_new, enc, tape)
+    depth = P.depth_from_sigmoid(full)
+    new_state = StreamState(h=h_new, c=c_new, depth_full=depth,
+                            pose_prev=pose)
+    return heads, full, f_half, new_state
+
+
+# ===========================================================================
+# Quantized segments (the HW side; lowered by aot.py)
+# ===========================================================================
+
+@dataclasses.dataclass
+class QuantEnv:
+    """Everything the quantized graph needs (produced by quantize.py).
+
+    Biases are kept in float (``fb``) and quantized *lazily* the first
+    time a conv is traced: the bias exponent is ``e_x + e_w`` (paper
+    §III-B2) and the input exponent ``e_x`` is only known from the graph
+    wiring. The lazy cache (``bq``/``in_exp``) guarantees the exported
+    qparams agree with the traced artifacts by construction.
+    """
+
+    qw: Dict[str, np.ndarray]        # name.w -> int8
+    fb: Dict[str, np.ndarray]        # name.b -> float folded bias
+    s_q: Dict[str, int]              # conv name -> quantized scale
+    e_w: Dict[str, int]              # conv name -> weight exponent
+    e_s: Dict[str, int]              # conv name -> scale exponent
+    aexp: Dict[str, int]             # activation tensor name -> exponent
+    lut_sigmoid: np.ndarray          # (256,) i16, out exp SIGMOID_OUT_EXP
+    lut_elu: np.ndarray              # (256,) i16
+    elu_out_exp: int
+    ln_params: Dict[str, np.ndarray]  # float LN gamma/beta (SW op)
+    bq: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    in_exp: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def out_exp(self, name: str) -> int:
+        return self.aexp[name]
+
+    def bias_q(self, name: str, e_x: int) -> np.ndarray:
+        if name in self.in_exp:
+            assert self.in_exp[name] == e_x, \
+                f"{name}: inconsistent input exponent {e_x} vs {self.in_exp[name]}"
+        else:
+            self.in_exp[name] = e_x
+            e_b = e_x + self.e_w[name]
+            from .kernels.ref import quantize_np
+            self.bq[f"{name}.b"] = quantize_np(
+                self.fb[f"{name}.b"], e_b, -(2 ** 31), 2 ** 31 - 1
+            ).astype(np.int32)
+        return self.bq[f"{name}.b"]
+
+
+def qconv(env: QuantEnv, name: str, xt: QT, out_exp: Optional[int] = None,
+          relu_override: Optional[bool] = None) -> QT:
+    """Quantized conv block via the Pallas kernel."""
+    s = _SPEC_INDEX[name]
+    x, e_x = xt
+    e_y = env.out_exp(name) if out_exp is None else out_exp
+    r = e_x + env.e_w[name] + env.e_s[name] - e_y
+    relu = (s.act == "relu") if relu_override is None else relu_override
+    w = jnp.asarray(env.qw[f"{name}.w"])
+    b = jnp.asarray(env.bias_q(name, e_x))
+    fn = ck.conv2d_dw_q if s.dw else ck.conv2d_q
+    y = fn(x, w, b, stride=s.stride, s_q=env.s_q[name], r=r, relu=relu)
+    return (y, e_y)
+
+
+def qadd(a: QT, b: QT, out_exp: int) -> QT:
+    (xa, ea), (xb, eb) = a, b
+    em = max(ea, eb)
+    y = R.add_q_ref(xa, xb, em - ea, em - eb, em - out_exp)
+    return (y, out_exp)
+
+
+def qmul(a: QT, b: QT, out_exp: int) -> QT:
+    (xa, ea), (xb, eb) = a, b
+    y = R.mul_q_ref(xa, xb, ea + eb - out_exp)
+    return (y, out_exp)
+
+
+def qrequant(a: QT, out_exp: int) -> QT:
+    x, e = a
+    if e == out_exp:
+        return a
+    return (R.requant_ref(x, e - out_exp), out_exp)
+
+
+def qconcat(ts: List[QT], out_exp: int) -> QT:
+    parts = [qrequant(t, out_exp)[0] for t in ts]
+    return (jnp.concatenate(parts, axis=1), out_exp)
+
+
+def qsigmoid(env: QuantEnv, xt: QT) -> QT:
+    x, e = xt
+    y = lk.lut_act(x, jnp.asarray(env.lut_sigmoid), in_exp=e)
+    return (y, R.SIGMOID_OUT_EXP)
+
+
+def qelu(env: QuantEnv, xt: QT) -> QT:
+    x, e = xt
+    y = lk.lut_act(x, jnp.asarray(env.lut_elu), in_exp=e)
+    return (y, env.elu_out_exp)
+
+
+# --- segment: FE + FS (pure HW: convs / adds / nearest-up) -----------------
+
+def seg_fe_fs_q(env: QuantEnv, img_q: jnp.ndarray):
+    """img_q: (1,3,H,W) i16 at exponent aexp['image'].
+    Returns 5 int16 pyramid features (exponents fixed by env)."""
+    _, wiring = fe_specs()
+    x: QT = (img_q, env.aexp["image"])
+    x = qconv(env, "fe.stem", x)
+    x = qconv(env, "fe.sep.dw", x)
+    x = qconv(env, "fe.sep.pw", x)
+    taps = [x]
+    wi = 0
+    for si, st in enumerate(P.FE_STAGES):
+        for ri in range(st.repeats):
+            base = wiring[wi]["base"]
+            inp = x
+            x = qconv(env, f"{base}.exp", x)
+            x = qconv(env, f"{base}.dw", x)
+            x = qconv(env, f"{base}.pw", x)
+            if wiring[wi]["residual"]:
+                x = qadd(inp, x, env.aexp[f"{base}.addout"])
+            wi += 1
+        if si in P.FE_TAP_STAGES:
+            taps.append(x)
+    lats = [qconv(env, f"fs.lat{i}", taps[i]) for i in range(5)]
+    feats: List[Optional[QT]] = [None] * 5
+    feats[4] = lats[4]
+    for i in range(3, -1, -1):
+        f_up, e_up = feats[i + 1]
+        n, c, h, w = f_up.shape
+        up = jnp.broadcast_to(f_up[:, :, :, None, :, None],
+                              (n, c, h, 2, w, 2)).reshape(n, c, 2 * h, 2 * w)
+        s = qadd((up, e_up), lats[i], env.aexp[f"fs.add{i}"])
+        feats[i] = qconv(env, f"fs.smooth{i}", s)
+    return tuple(f[0] for f in feats)
+
+
+# --- segment: CVE ----------------------------------------------------------
+
+def _pyr_exp(env: QuantEnv, i: int) -> int:
+    return env.aexp[f"fs.smooth{i}"] if i < 4 else env.aexp["fs.lat4"]
+
+
+def seg_cve_q(env: QuantEnv, cost_q, f1, f2, f3, f4):
+    """cost_q: (1,64,Hc,Wc) i16 at aexp['cvf.cost']; f1..f4: pyramid
+    features (1/4..1/32). Returns e0..e4 int16."""
+    feats = {1: f1, 2: f2, 3: f3, 4: f4}
+    x: QT = (cost_q, env.aexp["cvf.cost"])
+    outs = []
+    for lv in range(5):
+        if P.CVE_DOWN_KERNEL[lv] is not None:
+            x = qconv(env, f"cve.l{lv}.down", x)
+            x = qconcat([x, (feats[lv], _pyr_exp(env, lv))],
+                        env.aexp[f"cve.l{lv}.cat"])
+        for bi in range(len(P.CVE_BODY_KERNELS[lv])):
+            x = qconv(env, f"cve.l{lv}.c{bi}", x)
+        outs.append(x)
+    return tuple(o[0] for o in outs)
+
+
+# --- CL segments (split at the two SW layer norms) --------------------------
+
+def seg_cl_gates_q(env: QuantEnv, x_q, h_q):
+    """concat(e4, corrected hidden) -> gate conv (pre-LN output)."""
+    cat = qconcat([(x_q, env.aexp[_cve_out_name(4)]),
+                   (h_q, env.aexp["cl.hcorr"])], env.aexp["cl.cat"])
+    g = qconv(env, "cl.gates", cat)
+    return g[0]
+
+
+def seg_cl_state_q(env: QuantEnv, gates_ln_q, c_q):
+    """gates (post-LN) + cell state -> (c_new, o_gate): LUT sigmoid/ELU +
+    the elementwise c' = f.c + i.g pipeline (one folded HW stage)."""
+    e_g = env.aexp["cl.ln_gates"]
+    cc = P.CL_CH
+    sl = [(gates_ln_q[:, i * cc:(i + 1) * cc], e_g) for i in range(4)]
+    gi = qsigmoid(env, sl[0])
+    gf = qsigmoid(env, sl[1])
+    gg = qelu(env, sl[2])
+    go = qsigmoid(env, sl[3])
+    e_c = env.aexp["cl.cnew"]
+    fc = qmul(gf, (c_q, e_c), e_c)
+    ig = qmul(gi, gg, e_c)
+    c_new = qadd(fc, ig, e_c)
+    return c_new[0], go[0]
+
+
+def seg_cl_out_q(env: QuantEnv, ln_c_q, o_q):
+    """ELU(LN(c')) * o -> h'."""
+    elu_c = qelu(env, (ln_c_q, env.aexp["cl.ln_cell"]))
+    h_new = qmul((o_q, R.SIGMOID_OUT_EXP), elu_c, env.aexp["cl.hnew"])
+    return h_new[0]
+
+
+# --- CVD segments (split at every SW layer norm / bilinear upsample) --------
+
+def seg_cvd_entry_q(env: QuantEnv, b: int, *args):
+    """Block entry: concat(inputs) -> conv5 -> first conv3 (pre-LN output).
+
+    b == 0: args = (h_q, e4_q);  b >= 1: args = (upf_q, skip_q, upd_q) with
+    upf/upd the SW-bilinear-upsampled carry feature / depth head.
+    """
+    if b == 0:
+        h_q, skip = args
+        cat = qconcat([(h_q, env.aexp["cl.hnew"]),
+                       (skip, env.aexp[_cve_out_name(4)])],
+                      env.aexp["cvd.b0.cat"])
+    else:
+        upf, skip, upd = args
+        cat = qconcat([(upf, env.aexp[_cvd_carry_name(b - 1)]),
+                       (skip, env.aexp[_cve_out_name(4 - b)]),
+                       (upd, env.aexp[f"cvd.b{b}.upd"])],
+                      env.aexp[f"cvd.b{b}.cat"])
+    x = qconv(env, f"cvd.b{b}.c3e", cat)
+    x = qconv(env, f"cvd.b{b}.c5", x)
+    return x[0]
+
+
+def seg_cvd_mid_q(env: QuantEnv, b: int, i: int, x_ln_q):
+    """Post-LN conv3 number ``i`` (i >= 1) of block b (pre-LN output)."""
+    x: QT = (x_ln_q, env.aexp[f"cvd.b{b}.ln{i - 1}"])
+    x = qconv(env, f"cvd.b{b}.c3_{i}", x)
+    return x[0]
+
+
+def seg_cvd_head_q(env: QuantEnv, b: int, x_ln_q):
+    """Depth head after the last LN of block b: conv3 -> LUT sigmoid."""
+    last = P.CVD_BODY_K3[b] - 1
+    x: QT = (x_ln_q, env.aexp[f"cvd.b{b}.ln{last}"])
+    d = qconv(env, f"cvd.b{b}.head", x, relu_override=False,
+              out_exp=env.aexp[f"cvd.b{b}.head.pre"])
+    d = qsigmoid(env, d)
+    return d[0]
+
+
+# ===========================================================================
+# Hybrid frame step — python reference of the PL+CPU runtime
+# ===========================================================================
+
+def f2q(x, exp: int) -> jnp.ndarray:
+    """SW requantize float -> int16 (round half towards +inf)."""
+    q = jnp.floor(x * float(2.0 ** exp) + 0.5)
+    return jnp.clip(q, P.A_QMIN, P.A_QMAX).astype(jnp.int16)
+
+
+def q2f(x, exp: int) -> jnp.ndarray:
+    return x.astype(jnp.float32) / float(2.0 ** exp)
+
+
+def ln_sw(env: QuantEnv, name: str, x_q, in_exp: int, out_exp: int):
+    """The SW layer-norm op: dequant -> float LN -> requant."""
+    xf = q2f(x_q, in_exp)
+    g = jnp.asarray(env.ln_params[f"{name}.gamma"])
+    b = jnp.asarray(env.ln_params[f"{name}.beta"])
+    y = fops.layer_norm(xf, g, b)
+    return f2q(y, out_exp)
+
+
+@dataclasses.dataclass
+class HybridState:
+    h_q: jnp.ndarray             # int16 @ aexp['cl.hnew']
+    c_q: jnp.ndarray             # int16 @ aexp['cl.cnew']
+    depth_full: jnp.ndarray      # float metric depth
+    pose_prev: Optional[jnp.ndarray]
+
+
+def zero_hybrid_state() -> HybridState:
+    h5, w5 = P.IMG_H >> 5, P.IMG_W >> 5
+    z = jnp.zeros((1, P.CL_CH, h5, w5), jnp.int16)
+    return HybridState(h_q=z, c_q=z,
+                       depth_full=jnp.full((1, 1, P.IMG_H, P.IMG_W),
+                                           P.MAX_DEPTH, jnp.float32),
+                       pose_prev=None)
+
+
+def hybrid_step(env: QuantEnv, rgb_u8, pose, kf_feats_q, kf_poses,
+                st: HybridState, trace: Optional[dict] = None):
+    """One full hybrid frame: quantized HW segments + float SW ops.
+
+    kf_feats_q: list of int16 keyframe features @ aexp['fs.smooth0'].
+    Returns (depth_full f32, f_half_q i16, new state). ``trace`` collects
+    segment-boundary tensors for the Rust golden tests.
+    """
+    def tr(name, t):
+        if trace is not None:
+            trace[name] = np.asarray(t)
+
+    img_q = f2q(normalize_image(rgb_u8), env.aexp["image"])
+    tr("image_q", img_q)
+
+    # --- HW: FE + FS (on the board, SW runs CVF prep in parallel) ----------
+    feats = seg_fe_fs_q(env, img_q)
+    for i, f in enumerate(feats):
+        tr(f"feat{i}_q", f)
+    f_half_q = feats[0]
+    e_feat = env.aexp["fs.smooth0"]
+
+    # --- SW: CVF (grid sampling float; extern: feature in, cost out) -------
+    hc, wc = f_half_q.shape[2], f_half_q.shape[3]
+    kf_f = [q2f(f, e_feat) for f in kf_feats_q]
+    grids = [sweep_grids(pose, kp, 1, hc, wc) for kp in kf_poses]
+    cost = cost_volume(q2f(f_half_q, e_feat), kf_f, grids)
+    cost_q = f2q(cost, env.aexp["cvf.cost"])
+    tr("cost_q", cost_q)
+
+    # --- HW: CVE (SW corrects the hidden state in parallel) ----------------
+    enc = seg_cve_q(env, cost_q, feats[1], feats[2], feats[3], feats[4])
+    for _i, _e in enumerate(enc):
+        tr(f"e{_i}_q", _e)
+
+    # --- SW: hidden-state correction (grid sample, float) ------------------
+    e_h = env.aexp["cl.hnew"]
+    if st.pose_prev is not None:
+        g = correction_grid(st.pose_prev, pose, st.depth_full)
+        h_corr = correct_hidden(q2f(st.h_q, e_h), g)
+    else:
+        h_corr = q2f(st.h_q, e_h)
+    h_corr_q = f2q(h_corr, env.aexp["cl.hcorr"])
+    tr("hcorr_q", h_corr_q)
+
+    # --- HW/SW ping-pong: ConvLSTM with SW layer norms ----------------------
+    gates = seg_cl_gates_q(env, enc[4], h_corr_q)
+    tr("gates_q", gates)
+    gates_ln = ln_sw(env, "cl.ln_gates", gates, env.aexp["cl.gates"],
+                     env.aexp["cl.ln_gates"])
+    tr("gates_ln_q", gates_ln)
+    c_new, o_gate = seg_cl_state_q(env, gates_ln, st.c_q)
+    tr("cnew_q", c_new)
+    tr("o_q", o_gate)
+    ln_c = ln_sw(env, "cl.ln_cell", c_new, env.aexp["cl.cnew"],
+                 env.aexp["cl.ln_cell"])
+    tr("lnc_q", ln_c)
+    h_new = seg_cl_out_q(env, ln_c, o_gate)
+    tr("hnew_q", h_new)
+
+    # --- CVD: HW conv segments / SW LNs + bilinear ups ----------------------
+    feat_q = None     # post-LN carry, int16 @ aexp[carry name]
+    d_q = None        # head sigmoid, int16 @ 2^SIGMOID_OUT_EXP
+    for b in range(5):
+        if b == 0:
+            x = seg_cvd_entry_q(env, 0, h_new, enc[4])
+            tr("x_b0_entry", x)
+        else:
+            carry_exp = env.aexp[_cvd_carry_name(b - 1)]
+            upf = fops.upsample_bilinear2x(q2f(feat_q, carry_exp))
+            upd = fops.upsample_bilinear2x(q2f(d_q, R.SIGMOID_OUT_EXP))
+            upf_q = f2q(upf, carry_exp)
+            upd_q = f2q(upd, env.aexp[f"cvd.b{b}.upd"])
+            tr(f"upf{b}_q", upf_q)
+            tr(f"upd{b}_q", upd_q)
+            x = seg_cvd_entry_q(env, b, upf_q, enc[4 - b], upd_q)
+            tr(f"x_b{b}_entry", x)
+        for i in range(1, P.CVD_BODY_K3[b]):
+            x_ln = ln_sw(env, f"cvd.b{b}.ln{i - 1}", x,
+                         env.aexp[_cvd_body_name(b, i - 1)],
+                         env.aexp[f"cvd.b{b}.ln{i - 1}"])
+            tr(f"xln_b{b}_{i - 1}", x_ln)
+            x = seg_cvd_mid_q(env, b, i, x_ln)
+            tr(f"x_b{b}_mid{i}", x)
+        last = P.CVD_BODY_K3[b] - 1
+        x_ln = ln_sw(env, f"cvd.b{b}.ln{last}", x,
+                     env.aexp[_cvd_body_name(b, last)],
+                     env.aexp[f"cvd.b{b}.ln{last}"])
+        tr(f"xln_b{b}_last", x_ln)
+        feat_q = x_ln
+        d_q = seg_cvd_head_q(env, b, x_ln)
+        tr(f"head{b}_q", d_q)
+
+    # --- SW: final bilinear upsample + depth un-normalization ---------------
+    full_sig = fops.upsample_bilinear2x(q2f(d_q, R.SIGMOID_OUT_EXP))
+    depth = P.depth_from_sigmoid(full_sig)
+    new_st = HybridState(h_q=h_new, c_q=c_new, depth_full=depth,
+                         pose_prev=pose)
+    return depth, f_half_q, new_st

@@ -1,0 +1,109 @@
+"""Keyframe buffer + whole-sequence runners (python reference pipelines).
+
+The keyframe buffer (KB) stores the FS output feature together with the
+camera pose (the paper stores features instead of images to save compute
+— Fig. 1 caption). A frame becomes a keyframe when its pose is far enough
+from the last stored keyframe; CVF consumes the buffered (feature, pose)
+pairs. The pose-distance metric and the insertion policy are mirrored
+bit-for-bit by ``rust/src/kb``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import model as M
+from . import params as P
+
+
+def pose_distance(p1: np.ndarray, p2: np.ndarray) -> float:
+    """Combined translation + rotation distance, cheap and acos-free:
+    ||t1 - t2|| + 0.5 * ||R1 - R2||_F. Mirrored by rust/src/poses."""
+    p1 = np.asarray(p1, np.float64)
+    p2 = np.asarray(p2, np.float64)
+    dt = float(np.linalg.norm(p1[:3, 3] - p2[:3, 3]))
+    dr = float(np.linalg.norm(p1[:3, :3] - p2[:3, :3]))
+    return dt + 0.5 * dr
+
+
+@dataclasses.dataclass
+class KeyframeBuffer:
+    """Pose-gated ring buffer of (pose, feature)."""
+
+    capacity: int = P.KB_CAPACITY
+    min_dist: float = P.KB_MIN_POSE_DIST
+    poses: List[np.ndarray] = dataclasses.field(default_factory=list)
+    feats: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    def maybe_insert(self, pose: np.ndarray, feat) -> bool:
+        """Insert when the buffer is empty or the pose moved far enough
+        from the most recent keyframe. Evicts the oldest entry."""
+        if self.poses and pose_distance(self.poses[-1], pose) < self.min_dist:
+            return False
+        self.poses.append(np.asarray(pose))
+        self.feats.append(feat)
+        if len(self.poses) > self.capacity:
+            self.poses.pop(0)
+            self.feats.pop(0)
+        return True
+
+    def contents(self) -> Tuple[List, List[np.ndarray]]:
+        return list(self.feats), list(self.poses)
+
+
+def run_float_sequence(p: M.Params, frames: np.ndarray, poses: np.ndarray):
+    """CPU-only float reference over a sequence. Returns (N,H,W) depths."""
+    import jax.numpy as jnp
+
+    kb = KeyframeBuffer()
+    state = M.zero_state()
+    out = np.zeros((len(frames), P.IMG_H, P.IMG_W), np.float32)
+    for i in range(len(frames)):
+        img = M.normalize_image(jnp.asarray(frames[i]))
+        pose = jnp.asarray(poses[i])
+        kf_feats, kf_poses = kb.contents()
+        kf_poses_j = [jnp.asarray(q) for q in kf_poses]
+        _, full, f_half, state = M.step_f(p, img, pose, kf_feats,
+                                          kf_poses_j, state)
+        depth = P.depth_from_sigmoid(np.asarray(full))[0, 0]
+        out[i] = depth
+        kb.maybe_insert(poses[i], f_half)
+    return out
+
+
+def run_hybrid_sequence(env: M.QuantEnv, frames: np.ndarray,
+                        poses: np.ndarray,
+                        traces: Optional[List[Dict]] = None):
+    """Hybrid (quantized segments + float SW ops) over a sequence.
+
+    ``traces`` (if given) receives one boundary-tensor dict per frame —
+    the golden data for the Rust integration tests."""
+    import jax.numpy as jnp
+
+    kb = KeyframeBuffer()
+    st = M.zero_hybrid_state()
+    out = np.zeros((len(frames), P.IMG_H, P.IMG_W), np.float32)
+    for i in range(len(frames)):
+        pose = jnp.asarray(poses[i])
+        kf_feats, kf_poses = kb.contents()
+        kf_poses_j = [jnp.asarray(q) for q in kf_poses]
+        tr: Optional[Dict] = {} if traces is not None else None
+        depth, f_half_q, st = M.hybrid_step(
+            env, frames[i], pose, [jnp.asarray(f) for f in kf_feats],
+            kf_poses_j, st, tr)
+        out[i] = np.asarray(depth)[0, 0]
+        if traces is not None:
+            tr["depth_out"] = np.asarray(depth)[0, 0]
+            tr["kf_count"] = np.asarray([len(kf_feats)], np.int32)
+            traces.append(tr)
+        kb.maybe_insert(poses[i], np.asarray(f_half_q))
+    return out
+
+
+def mse(depth: np.ndarray, gt: np.ndarray) -> float:
+    """Paper's metric: MSE between output depth map and ground truth."""
+    return float(np.mean((np.asarray(depth, np.float64)
+                          - np.asarray(gt, np.float64)) ** 2))

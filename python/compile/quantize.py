@@ -1,0 +1,143 @@
+"""BN folding + power-of-two post-training quantization (paper §III-B1/2).
+
+The PTQ recipe is exactly the paper's:
+
+  * fold the per-channel affine (inference-time BN) into conv weights
+    and biases;
+  * quantize weights / biases / scales by the *largest power of two*
+    such that every value fits the target bit width (w:8, b:32, s:8);
+  * calibrate activation exponents so that >= alpha (95%) of observed
+    values fit int16, by running the float model over calibration frames
+    and recording every activation tensor;
+  * all multipliers being powers of two, any range adjustment in the
+    graph is a single shift (one lshift suffices for add/concat).
+
+The output ``QuantEnv`` drives the quantized segments of ``model.py``,
+the AOT lowering, and the exported ``qparams.bin`` for the Rust PTQ
+baseline — one calibration, three consumers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from . import model as M
+from . import params as P
+from .kernels import ref as R
+
+
+def fold_affine(p: M.Params, name: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold gamma/beta into (w, b): w' = gamma*w, b' = gamma*b + beta."""
+    w = np.asarray(p[f"{name}.w"], np.float64)
+    b = np.asarray(p[f"{name}.b"], np.float64)
+    g = np.asarray(p[f"{name}.gamma"], np.float64)
+    bt = np.asarray(p[f"{name}.beta"], np.float64)
+    wf = w * g[:, None, None, None]
+    bf = b * g + bt
+    return wf, bf
+
+
+def pow2_exp(max_abs: float, qmax: int, lo: int = -48, hi: int = 30) -> int:
+    """Largest e with max_abs * 2^e <= qmax (paper: 'multiplied by the
+    largest power of two such that all values fall within range')."""
+    if max_abs <= 0.0 or not math.isfinite(max_abs):
+        return 0
+    e = int(math.floor(math.log2(qmax / max_abs)))
+    # guard against log2 rounding at the boundary
+    while max_abs * (2.0 ** e) > qmax and e > lo:
+        e -= 1
+    while max_abs * (2.0 ** (e + 1)) <= qmax and e < hi:
+        e += 1
+    return max(lo, min(hi, e))
+
+
+class Calibrator:
+    """Accumulates per-tensor activation ranges over calibration frames."""
+
+    def __init__(self) -> None:
+        self.ranges: Dict[str, float] = {}
+
+    def consume(self, tape: Dict[str, np.ndarray]) -> None:
+        for name, t in tape.items():
+            a = np.abs(np.asarray(t, np.float64)).reshape(-1)
+            if a.size == 0:
+                continue
+            # alpha-quantile clip (paper: >= 95% of values in range)
+            r = float(np.quantile(a, P.ALPHA_CLIP))
+            # never clip to zero range
+            r = max(r, float(a.max()) * 1e-3, 1e-6)
+            self.ranges[name] = max(self.ranges.get(name, 0.0), r)
+
+    def act_exp(self, name: str) -> int:
+        # negative exponents are legal (and necessary: without input
+        # normalization the float activations can exceed int16's span;
+        # the power-of-two machinery shifts either way)
+        return max(-48, min(24, pow2_exp(self.ranges[name], P.A_QMAX)))
+
+    def all_exps(self) -> Dict[str, int]:
+        return {n: self.act_exp(n) for n in self.ranges}
+
+
+def calibrate(p: M.Params, frames: List[np.ndarray],
+              poses: List[np.ndarray]) -> Dict[str, int]:
+    """Run the float model over a short sequence, recording activations.
+
+    Uses the same sliding-window keyframing as training so the recorded
+    cost volumes are representative.
+    """
+    import jax.numpy as jnp
+
+    cal = Calibrator()
+    state = M.zero_state()
+    kf_feats: List = []
+    kf_poses: List = []
+    for img_u8, pose in zip(frames, poses):
+        img = M.normalize_image(jnp.asarray(img_u8))
+        tape: Dict = {}
+        _, _, f_half, state = M.step_f(
+            p, img, jnp.asarray(pose), kf_feats[-P.N_KEYFRAMES:],
+            kf_poses[-P.N_KEYFRAMES:], state, tape)
+        cal.consume({k: np.asarray(v) for k, v in tape.items()})
+        kf_feats.append(f_half)
+        kf_poses.append(jnp.asarray(pose))
+    return cal.all_exps()
+
+
+def build_quant_env(p: M.Params, aexp: Dict[str, int]) -> "M.QuantEnv":
+    """Quantize every conv and assemble the QuantEnv."""
+    qw: Dict[str, np.ndarray] = {}
+    fb: Dict[str, np.ndarray] = {}
+    s_q: Dict[str, int] = {}
+    e_w: Dict[str, int] = {}
+    e_s: Dict[str, int] = {}
+    for spec in M.all_conv_specs():
+        n = spec.name
+        wf, bf = fold_affine(p, n)
+        ew = pow2_exp(float(np.abs(wf).max()), P.W_QMAX)
+        qw[f"{n}.w"] = R.quantize_np(wf, ew, -P.W_QMAX - 1,
+                                     P.W_QMAX).astype(np.int8)
+        fb[f"{n}.b"] = bf
+        sval = float(np.asarray(p[f"{n}.s"], np.float64))
+        es = pow2_exp(abs(sval), P.S_QMAX)
+        s_q[n] = int(R.quantize_np(np.asarray(sval), es, -P.S_QMAX - 1,
+                                   P.S_QMAX))
+        e_w[n] = ew
+        e_s[n] = es
+
+    elu_exp = min(aexp.get("cl.g", 12), aexp.get("cl.elu_c", 12))
+    ln_params = {}
+    for n in M.ln_names():
+        ln_params[f"{n}.gamma"] = np.asarray(p[f"{n}.gamma"], np.float32)
+        ln_params[f"{n}.beta"] = np.asarray(p[f"{n}.beta"], np.float32)
+
+    env = M.QuantEnv(
+        qw=qw, fb=fb, s_q=s_q, e_w=e_w, e_s=e_s, aexp=dict(aexp),
+        lut_sigmoid=R.build_lut(R.sigmoid_np, R.SIGMOID_OUT_EXP),
+        lut_elu=R.build_lut(R.elu_np, elu_exp),
+        elu_out_exp=elu_exp,
+        ln_params=ln_params,
+    )
+    return env

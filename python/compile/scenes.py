@@ -1,0 +1,231 @@
+"""Procedural synthetic video scenes — the 7-Scenes stand-in.
+
+The paper evaluates on eight 7-Scenes sequences (chess, fire, office,
+redkitchen) captured by a Kinect. Neither the dataset nor the sensor is
+available here, so this module renders *posed synthetic RGB-D video*: a
+raycast of an axis-aligned room populated with textured boxes, viewed by a
+camera on a smooth trajectory. This preserves exactly what DeepVideoMVS /
+FADEC consume: consecutive RGB frames, exact camera poses (c2w 4x4), and
+ground-truth depth for the accuracy experiments (Figs 6-8).
+
+Rendering is vectorised numpy (slab-test ray/AABB over all pixels x all
+boxes); a 96x64x32-frame sequence renders in well under a second.
+
+Output layout (read by python training and by ``rust/src/data``):
+
+    artifacts/dataset/<scene>/meta.json    {"frames": N, "width": W, ...}
+    artifacts/dataset/<scene>/frames.bin   u8,  N*H*W*3   (RGB, row-major)
+    artifacts/dataset/<scene>/depth.bin    f32, N*H*W     (metres)
+    artifacts/dataset/<scene>/poses.bin    f32, N*4*4     (camera-to-world)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from . import params as P
+
+
+@dataclass
+class Box:
+    lo: np.ndarray        # (3,) min corner
+    hi: np.ndarray        # (3,) max corner
+    base: np.ndarray      # (3,) base colour in [0,1]
+    accent: np.ndarray    # (3,) accent colour
+    checker: float        # checker period (metres)
+
+
+def _seed_for(scene: str) -> int:
+    """Stable per-scene seed derived from the scene name."""
+    h = 2166136261
+    for ch in scene.encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+def make_scene(scene: str) -> List[Box]:
+    """Build the box set for a scene: a room (4 walls + floor + ceiling,
+    modelled as thin boxes) plus 5-9 furniture boxes."""
+    rng = np.random.default_rng(_seed_for(scene))
+    room = np.array([6.0, 4.0, 3.0])  # x, y(depth), z(height)
+    t = 0.1  # wall thickness
+    boxes: List[Box] = []
+
+    def wall(lo, hi, hue):
+        base = 0.35 + 0.4 * np.array(hue)
+        boxes.append(Box(np.array(lo, np.float64), np.array(hi, np.float64),
+                         base, base * 0.55, checker=0.75))
+
+    wall([-t, 0, 0], [0, room[1], room[2]], [0.9, 0.4, 0.3])           # x=0
+    wall([room[0], 0, 0], [room[0] + t, room[1], room[2]], [0.3, 0.5, 0.9])
+    wall([0, -t, 0], [room[0], 0, room[2]], [0.4, 0.8, 0.4])           # y=0
+    wall([0, room[1], 0], [room[0], room[1] + t, room[2]], [0.8, 0.8, 0.3])
+    wall([0, 0, -t], [room[0], room[1], 0], [0.5, 0.45, 0.4])          # floor
+    wall([0, 0, room[2]], [room[0], room[1], room[2] + t], [0.9, 0.9, 0.95])
+
+    n_boxes = int(rng.integers(5, 10))
+    for _ in range(n_boxes):
+        size = rng.uniform([0.3, 0.3, 0.3], [1.2, 1.2, 1.6])
+        pos = rng.uniform([0.4, 0.4, 0.0],
+                          [room[0] - 1.6, room[1] - 1.6, 0.2])
+        base = rng.uniform(0.15, 0.95, size=3)
+        accent = rng.uniform(0.05, 0.95, size=3)
+        boxes.append(Box(pos, pos + size, base, accent,
+                         checker=float(rng.uniform(0.15, 0.45))))
+    return boxes
+
+
+def camera_trajectory(scene: str, n_frames: int) -> np.ndarray:
+    """Smooth lissajous path inside the room, looking at a drifting target.
+
+    Returns (N, 4, 4) camera-to-world matrices. Camera convention:
+    +x right, +y down, +z forward (OpenCV / 7-Scenes style).
+    """
+    rng = np.random.default_rng(_seed_for(scene) ^ 0x5CA1AB1E)
+    room = np.array([6.0, 4.0, 3.0])
+    centre = room / 2.0
+    ax, ay = rng.uniform(0.8, 1.6), rng.uniform(0.6, 1.2)
+    az = rng.uniform(0.15, 0.4)
+    wx, wy, wz = rng.uniform(0.6, 1.4, size=3)
+    ph = rng.uniform(0, 2 * np.pi, size=3)
+    tgt_r = rng.uniform(0.3, 0.8)
+
+    poses = np.zeros((n_frames, 4, 4), np.float64)
+    for i in range(n_frames):
+        s = 2 * np.pi * i / max(n_frames - 1, 1) * 0.35  # partial orbit
+        eye = centre + np.array([
+            ax * np.sin(wx * s + ph[0]),
+            ay * np.cos(wy * s + ph[1]),
+            az * np.sin(wz * s + ph[2]),
+        ])
+        target = centre + np.array([
+            tgt_r * np.cos(0.7 * s + ph[1]),
+            tgt_r * np.sin(0.9 * s + ph[2]),
+            0.2 * np.sin(0.5 * s),
+        ])
+        fwd = target - eye
+        fwd = fwd / np.linalg.norm(fwd)
+        world_up = np.array([0.0, 0.0, 1.0])
+        right = np.cross(fwd, world_up)
+        right /= np.linalg.norm(right)
+        down = np.cross(fwd, right)  # +y down
+        c2w = np.eye(4)
+        c2w[:3, 0] = right
+        c2w[:3, 1] = down
+        c2w[:3, 2] = fwd
+        c2w[:3, 3] = eye
+        poses[i] = c2w
+    return poses
+
+
+def _shade(boxes: List[Box], hit_idx, hit_p, hit_n) -> np.ndarray:
+    """Procedural checker shading + single directional light (vectorised)."""
+    h, w = hit_idx.shape
+    img = np.zeros((h, w, 3), np.float64)
+    light = np.array([0.35, 0.25, -0.9])
+    light = light / np.linalg.norm(light)
+    for bi, box in enumerate(boxes):
+        m = hit_idx == bi
+        if not m.any():
+            continue
+        p = hit_p[m]
+        n = hit_n[m]
+        cells = np.floor(p / box.checker).astype(np.int64)
+        par = ((cells[:, 0] + cells[:, 1] + cells[:, 2]) & 1).astype(np.float64)
+        albedo = box.base[None, :] * (1 - par[:, None]) \
+            + box.accent[None, :] * par[:, None]
+        lam = np.clip(-(n @ light), 0.0, 1.0)
+        img[m] = albedo * (0.35 + 0.65 * lam[:, None])
+    return img
+
+
+def render_frame(boxes: List[Box], c2w: np.ndarray):
+    """Raycast one frame. Returns (rgb u8 HxWx3, depth f32 HxW)."""
+    H, W = P.IMG_H, P.IMG_W
+    u = (np.arange(W) + 0.5 - P.CX) / P.FX
+    v = (np.arange(H) + 0.5 - P.CY) / P.FY
+    uu, vv = np.meshgrid(u, v)
+    dirs_cam = np.stack([uu, vv, np.ones_like(uu)], axis=-1)   # (H,W,3)
+    R, t = c2w[:3, :3], c2w[:3, 3]
+    dirs = dirs_cam @ R.T
+    norm = np.linalg.norm(dirs, axis=-1, keepdims=True)
+    dirs_n = dirs / norm
+
+    best_t = np.full((H, W), np.inf)
+    hit_idx = np.full((H, W), -1, np.int64)
+    hit_n = np.zeros((H, W, 3))
+    inv_d = 1.0 / np.where(np.abs(dirs_n) < 1e-12,
+                           np.copysign(1e-12, dirs_n), dirs_n)
+    for bi, box in enumerate(boxes):
+        t0 = (box.lo[None, None, :] - t[None, None, :]) * inv_d
+        t1 = (box.hi[None, None, :] - t[None, None, :]) * inv_d
+        tmin = np.minimum(t0, t1)
+        tmax = np.maximum(t0, t1)
+        tn = tmin.max(axis=-1)
+        tf = tmax.min(axis=-1)
+        hit = (tn <= tf) & (tf > 1e-6)
+        te = np.where(tn > 1e-6, tn, tf)  # allow camera inside a box
+        better = hit & (te < best_t)
+        if not better.any():
+            continue
+        best_t = np.where(better, te, best_t)
+        hit_idx = np.where(better, bi, hit_idx)
+        # face normal: the axis where the entry plane was hit
+        axis = np.argmax(tmin, axis=-1)
+        sign = -np.sign(dirs_n[np.arange(H)[:, None], np.arange(W)[None, :], axis])
+        nrm = np.zeros((H, W, 3))
+        ij = np.indices((H, W))
+        nrm[ij[0], ij[1], axis] = sign
+        hit_n = np.where(better[..., None], nrm, hit_n)
+
+    hit_p = t[None, None, :] + dirs_n * best_t[..., None]
+    img = _shade(boxes, hit_idx, hit_p, hit_n)
+    # depth = z-depth along the camera forward axis, as in 7-Scenes
+    zdepth = best_t * (dirs_n @ R[:, 2])
+    zdepth = np.where(hit_idx >= 0, zdepth, P.MAX_DEPTH)
+    zdepth = np.clip(zdepth, P.MIN_DEPTH, P.MAX_DEPTH)
+    rgb = np.clip(img * 255.0, 0, 255).astype(np.uint8)
+    return rgb, zdepth.astype(np.float32)
+
+
+def render_scene(scene: str, n_frames: int):
+    boxes = make_scene(scene)
+    poses = camera_trajectory(scene, n_frames)
+    frames = np.zeros((n_frames, P.IMG_H, P.IMG_W, 3), np.uint8)
+    depths = np.zeros((n_frames, P.IMG_H, P.IMG_W), np.float32)
+    for i in range(n_frames):
+        frames[i], depths[i] = render_frame(boxes, poses[i])
+    return frames, depths, poses.astype(np.float32)
+
+
+def write_scene(out_dir: str, scene: str, n_frames: int) -> None:
+    d = os.path.join(out_dir, scene)
+    os.makedirs(d, exist_ok=True)
+    frames, depths, poses = render_scene(scene, n_frames)
+    frames.tofile(os.path.join(d, "frames.bin"))
+    depths.tofile(os.path.join(d, "depth.bin"))
+    poses.tofile(os.path.join(d, "poses.bin"))
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump({
+            "scene": scene, "frames": n_frames,
+            "width": P.IMG_W, "height": P.IMG_H,
+            "fx": P.FX, "fy": P.FY, "cx": P.CX, "cy": P.CY,
+            "min_depth": P.MIN_DEPTH, "max_depth": P.MAX_DEPTH,
+        }, f, indent=1)
+
+
+def build_dataset(out_dir: str) -> None:
+    for s in P.EVAL_SCENES:
+        write_scene(out_dir, s, P.EVAL_FRAMES)
+    for s in P.TRAIN_SCENES:
+        write_scene(out_dir, s, P.TRAIN_FRAMES)
+
+
+if __name__ == "__main__":
+    import sys
+    build_dataset(sys.argv[1] if len(sys.argv) > 1 else "../artifacts/dataset")

@@ -1,0 +1,147 @@
+"""Short synthetic-data training for the float DeepVideoMVS model.
+
+The paper uses the authors' checkpoint pretrained on TUM RGB-D; that
+checkpoint (and the dataset) are unavailable, so we train the same
+architecture briefly on the synthetic scenes (DESIGN.md §3). The goal is
+NOT state-of-the-art depth — it is weights that are (a) non-trivial, so
+the PTQ / LUT accuracy comparisons of Figs 6-8 are meaningful, and
+(b) produce a falling loss curve for the end-to-end experiment
+(EXPERIMENTS.md §E2E).
+
+BPTT over short chunks with a sliding-window keyframe buffer (the
+standard DeepVideoMVS training setup); plain hand-rolled Adam.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fops
+from . import model as M
+from . import params as P
+from . import scenes
+
+HEAD_WEIGHTS = [0.2, 0.2, 0.3, 0.4, 0.5]   # coarse -> fine
+FULL_WEIGHT = 1.0
+
+
+def sigmoid_target(depth):
+    """GT metric depth -> normalised inverse depth in [0,1]."""
+    inv = 1.0 / jnp.clip(depth, P.MIN_DEPTH, P.MAX_DEPTH)
+    return (inv - 1.0 / P.MAX_DEPTH) / (1.0 / P.MIN_DEPTH - 1.0 / P.MAX_DEPTH)
+
+
+def chunk_loss(p, imgs, poses, gts):
+    """Loss over one chunk of consecutive frames (sliding-window KB)."""
+    state = M.zero_state()
+    kf_feats: List = []
+    kf_poses: List = []
+    total = 0.0
+    for i in range(imgs.shape[0]):
+        heads, full, f_half, state = M.step_f(
+            p, imgs[i], poses[i], kf_feats[-P.N_KEYFRAMES:],
+            kf_poses[-P.N_KEYFRAMES:], state)
+        tgt = sigmoid_target(gts[i])[None, None]
+        loss = FULL_WEIGHT * jnp.mean((full - tgt) ** 2)
+        for w, h in zip(HEAD_WEIGHTS, heads):
+            th = fops.resize_bilinear(tgt, h.shape[2], h.shape[3])
+            loss = loss + w * jnp.mean((h - th) ** 2)
+        total = total + loss
+        kf_feats.append(f_half)
+        kf_poses.append(poses[i])
+    return total / imgs.shape[0]
+
+
+def adam_init(p):
+    return ({k: jnp.zeros_like(v) for k, v in p.items()},
+            {k: jnp.zeros_like(v) for k, v in p.items()})
+
+
+def adam_update(p, g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    out_p, out_m, out_v = {}, {}, {}
+    t = step + 1
+    for k in p:
+        mk = b1 * m[k] + (1 - b1) * g[k]
+        vk = b2 * v[k] + (1 - b2) * g[k] ** 2
+        mh = mk / (1 - b1 ** t)
+        vh = vk / (1 - b2 ** t)
+        out_p[k] = p[k] - lr * mh / (jnp.sqrt(vh) + eps)
+        out_m[k] = mk
+        out_v[k] = vk
+    return out_p, out_m, out_v
+
+
+def load_train_chunks(dataset_dir: str):
+    """All training chunks: (imgs f32 normalised, poses, gt depths)."""
+    chunks = []
+    for s in P.TRAIN_SCENES:
+        frames, depths, poses = scenes_load(dataset_dir, s)
+        n = len(frames)
+        for st in range(0, n - P.TRAIN_CHUNK + 1, P.TRAIN_CHUNK):
+            sl = slice(st, st + P.TRAIN_CHUNK)
+            imgs = np.stack([np.asarray(M.normalize_image(f)[0])
+                             for f in frames[sl]])     # (T,3,H,W)
+            chunks.append((imgs, poses[sl].astype(np.float32),
+                           depths[sl].astype(np.float32)))
+    return chunks
+
+
+def scenes_load(dataset_dir: str, scene: str):
+    d = os.path.join(dataset_dir, scene)
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    n = meta["frames"]
+    frames = np.fromfile(os.path.join(d, "frames.bin"), np.uint8).reshape(
+        n, P.IMG_H, P.IMG_W, 3)
+    depths = np.fromfile(os.path.join(d, "depth.bin"), np.float32).reshape(
+        n, P.IMG_H, P.IMG_W)
+    poses = np.fromfile(os.path.join(d, "poses.bin"), np.float32).reshape(
+        n, 4, 4)
+    return frames, depths, poses
+
+
+def train(dataset_dir: str, out_path: str,
+          steps: int = P.TRAIN_STEPS, log_path: str = None) -> Dict:
+    rng = np.random.default_rng(P.TRAIN_SEED)
+    p = {k: jnp.asarray(v) for k, v in M.init_params(P.TRAIN_SEED).items()}
+    chunks = load_train_chunks(dataset_dir)
+
+    @jax.jit
+    def step_fn(p, m, v, t, imgs, poses, gts):
+        loss, g = jax.value_and_grad(chunk_loss)(p, imgs, poses, gts)
+        p2, m2, v2 = adam_update(p, g, m, v, t, P.TRAIN_LR)
+        return loss, p2, m2, v2
+
+    m, v = adam_init(p)
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        ci = int(rng.integers(0, len(chunks)))
+        imgs, poses, gts = chunks[ci]
+        # step_f expects (1,3,H,W) per frame: add batch dim per frame
+        loss, p, m, v = step_fn(p, m, v, step,
+                                jnp.asarray(imgs)[:, None],
+                                jnp.asarray(poses), jnp.asarray(gts))
+        if step % 10 == 0 or step == steps - 1:
+            fl = float(loss)
+            log.append({"step": step, "loss": fl,
+                        "elapsed_s": round(time.time() - t0, 1)})
+            print(f"[train] step {step:4d} loss {fl:.5f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    np.savez(out_path, **{k: np.asarray(val) for k, val in p.items()})
+    if log_path:
+        with open(log_path, "w") as f:
+            json.dump(log, f, indent=1)
+    return {"final_loss": log[-1]["loss"], "log": log}
+
+
+def load_params(path: str) -> Dict[str, np.ndarray]:
+    z = np.load(path)
+    return {k: z[k] for k in z.files}

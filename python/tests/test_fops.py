@@ -1,0 +1,106 @@
+"""Float operator semantics (must mirror rust/src/ops exactly)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import fops
+
+
+def test_grid_sample_integer_coords_identity():
+    g = np.random.default_rng(0)
+    x = jnp.asarray(g.normal(size=(1, 3, 5, 7)), jnp.float32)
+    ys, xs = np.meshgrid(np.arange(5, dtype=np.float32),
+                         np.arange(7, dtype=np.float32), indexing="ij")
+    grid = jnp.asarray(np.stack([xs, ys], -1))[None]
+    y = fops.grid_sample(x, grid)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_grid_sample_zero_outside():
+    x = jnp.ones((1, 1, 4, 4), jnp.float32)
+    grid = jnp.asarray([[[[-10.0, -10.0], [100.0, 2.0]]]])
+    y = np.asarray(fops.grid_sample(x, grid))
+    assert y.ravel()[0] == 0.0 and y.ravel()[1] == 0.0
+
+
+def test_grid_sample_halfway_interpolation():
+    x = jnp.zeros((1, 1, 2, 2), jnp.float32).at[0, 0, 0, 0].set(4.0)
+    grid = jnp.asarray([[[[0.5, 0.0]]]])     # halfway between (0,0) and (1,0)
+    y = float(np.asarray(fops.grid_sample(x, grid)).ravel()[0])
+    assert abs(y - 2.0) < 1e-6
+    grid = jnp.asarray([[[[0.5, 0.5]]]])     # centre of the 2x2 quad
+    y = float(np.asarray(fops.grid_sample(x, grid)).ravel()[0])
+    assert abs(y - 1.0) < 1e-6
+
+
+def test_grid_sample_boundary_tap_partial():
+    """Taps straddling the border: out-of-range corners contribute zero."""
+    x = jnp.ones((1, 1, 3, 3), jnp.float32)
+    grid = jnp.asarray([[[[-0.5, 0.0]]]])    # halfway off the left edge
+    y = float(np.asarray(fops.grid_sample(x, grid)).ravel()[0])
+    assert abs(y - 0.5) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(1, 6), w=st.integers(1, 6), c=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_upsample_nearest(h, w, c, seed):
+    g = np.random.default_rng(seed)
+    x = jnp.asarray(g.normal(size=(1, c, h, w)), jnp.float32)
+    y = np.asarray(fops.upsample_nearest2x(x))
+    assert y.shape == (1, c, 2 * h, 2 * w)
+    for i in range(2 * h):
+        for j in range(2 * w):
+            np.testing.assert_allclose(y[0, :, i, j],
+                                       np.asarray(x)[0, :, i // 2, j // 2])
+
+
+def test_bilinear2x_constant_preserved():
+    x = jnp.full((1, 2, 3, 4), 2.5, jnp.float32)
+    y = np.asarray(fops.upsample_bilinear2x(x))
+    np.testing.assert_allclose(y, 2.5, atol=1e-6)
+
+
+def test_bilinear_downscale_average():
+    """2x2 -> 1x1 with half-pixel centres is the plain average."""
+    x = jnp.asarray([[[[1.0, 2.0], [3.0, 4.0]]]], jnp.float32)
+    y = float(np.asarray(fops.resize_bilinear(x, 1, 1)).ravel()[0])
+    assert abs(y - 2.5) < 1e-6
+
+
+def test_layer_norm_zero_mean_unit_var():
+    g = np.random.default_rng(1)
+    x = jnp.asarray(g.normal(2.0, 3.0, size=(1, 4, 5, 6)), jnp.float32)
+    y = np.asarray(fops.layer_norm(x, jnp.ones(4), jnp.zeros(4)))
+    assert abs(y.mean()) < 1e-5
+    assert abs(y.std() - 1.0) < 1e-3
+
+
+def test_layer_norm_affine():
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(1, 2, 3, 3)),
+                    jnp.float32)
+    g = jnp.asarray([2.0, 0.5])
+    b = jnp.asarray([1.0, -1.0])
+    y0 = np.asarray(fops.layer_norm(x, jnp.ones(2), jnp.zeros(2)))
+    y1 = np.asarray(fops.layer_norm(x, g, b))
+    np.testing.assert_allclose(y1[0, 0], y0[0, 0] * 2.0 + 1.0, atol=1e-5)
+    np.testing.assert_allclose(y1[0, 1], y0[0, 1] * 0.5 - 1.0, atol=1e-5)
+
+
+def test_elu_matches_definition():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 1.5])
+    y = np.asarray(fops.elu(x))
+    expect = np.where(x >= 0, x, np.exp(np.asarray(x)) - 1)
+    np.testing.assert_allclose(y, expect, atol=1e-6)
+
+
+def test_conv2d_same_padding_shapes():
+    x = jnp.zeros((1, 3, 9, 11), jnp.float32)
+    for k in (1, 3, 5):
+        for s in (1, 2):
+            w = jnp.zeros((4, 3, k, k), jnp.float32)
+            y = fops.conv2d(x, w, stride=s)
+            p = k // 2
+            assert y.shape == (1, 4, (9 + 2 * p - k) // s + 1,
+                               (11 + 2 * p - k) // s + 1)

@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (bit-exact).
+
+Hypothesis sweeps shapes / strides / kernel sizes / shift amounts within
+the calibration-guaranteed no-overflow envelope (see ref.py docstring).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import params as P
+from compile.kernels import conv_quant as ck
+from compile.kernels import lut_act as lk
+from compile.kernels import ref as R
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+# bounded activations/weights: |acc| <= IC*k*k*amax*wmax stays < 2^31
+ACT_MAX = 4000
+W_MAX = 127
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ic=st.integers(1, 6), oc=st.integers(1, 9),
+    h=st.integers(3, 10), w=st.integers(3, 10),
+    k=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
+    s_q=st.integers(1, 127), r=st.integers(0, 18),
+    relu=st.booleans(), seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_dense_matches_ref(ic, oc, h, w, k, stride, s_q, r, relu, seed):
+    g = rng_for(seed)
+    x = jnp.asarray(g.integers(-ACT_MAX, ACT_MAX, (1, ic, h, w)), jnp.int16)
+    wt = jnp.asarray(g.integers(-W_MAX, W_MAX + 1, (oc, ic, k, k)), jnp.int8)
+    b = jnp.asarray(g.integers(-(1 << 20), 1 << 20, (oc,)), jnp.int32)
+    a = R.conv2d_q_ref(x, wt, b, s_q=s_q, r=r, stride=stride, relu=relu)
+    p = ck.conv2d_q(x, wt, b, stride=stride, s_q=s_q, r=r, relu=relu,
+                    oc_block=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(p))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 8), h=st.integers(3, 9), w=st.integers(3, 9),
+    k=st.sampled_from([3, 5]), stride=st.sampled_from([1, 2]),
+    s_q=st.integers(1, 127), r=st.integers(0, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_dw_matches_ref(c, h, w, k, stride, s_q, r, seed):
+    g = rng_for(seed)
+    x = jnp.asarray(g.integers(-ACT_MAX, ACT_MAX, (1, c, h, w)), jnp.int16)
+    wt = jnp.asarray(g.integers(-W_MAX, W_MAX + 1, (c, 1, k, k)), jnp.int8)
+    b = jnp.asarray(g.integers(-(1 << 20), 1 << 20, (c,)), jnp.int32)
+    a = R.conv2d_dw_q_ref(x, wt, b, s_q=s_q, r=r, stride=stride, relu=True)
+    p = ck.conv2d_dw_q(x, wt, b, stride=stride, s_q=s_q, r=r, relu=True,
+                       c_block=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(p))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 10), h=st.integers(1, 8), w=st.integers(1, 8),
+    in_exp=st.integers(4, 16), seed=st.integers(0, 2**31 - 1),
+    which=st.sampled_from(["sigmoid", "elu"]),
+)
+def test_lut_matches_ref(c, h, w, in_exp, seed, which):
+    g = rng_for(seed)
+    if which == "sigmoid":
+        lut = jnp.asarray(R.build_lut(R.sigmoid_np, R.SIGMOID_OUT_EXP))
+    else:
+        lut = jnp.asarray(R.build_lut(R.elu_np, 12))
+    x = jnp.asarray(g.integers(-32768, 32768, (1, c, h, w)), jnp.int16)
+    a = R.lut_act_ref(x, lut, in_exp=in_exp)
+    p = lk.lut_act(x, lut, in_exp=in_exp, c_block=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(p))
+
+
+def test_lut_sigmoid_accuracy():
+    """LUT sigmoid within one quantization step + table resolution."""
+    lut = jnp.asarray(R.build_lut(R.sigmoid_np, R.SIGMOID_OUT_EXP))
+    e = 12
+    xs = np.linspace(-7.5, 7.5, 301)
+    xq = jnp.asarray(np.round(xs * (1 << e)), jnp.int16)[None, None, None, :]
+    yq = np.asarray(R.lut_act_ref(xq, lut, in_exp=e)).ravel()
+    y = yq / float(1 << R.SIGMOID_OUT_EXP)
+    err = np.abs(y - R.sigmoid_np(xs))
+    # table step is 1/16 in x; max slope of sigmoid is 1/4
+    assert err.max() < (1.0 / 16) * 0.25 + 2.0 / (1 << R.SIGMOID_OUT_EXP)
+
+
+def test_lut_clamps_out_of_range():
+    lut = jnp.asarray(R.build_lut(R.sigmoid_np, R.SIGMOID_OUT_EXP))
+    e = 10
+    big = jnp.asarray([[[[32000, -32000]]]], jnp.int16)
+    y = np.asarray(R.lut_act_ref(big, lut, in_exp=e)).ravel()
+    assert y[0] == np.asarray(lut)[-1]
+    assert y[1] == np.asarray(lut)[0]
+
+
+def test_rshift_round_semantics():
+    # round-half-towards-+inf, arithmetic shift for negatives
+    v = np.array([5, -5, 6, -6, 7, -7], np.int64)
+    got = R.rshift_round_np(v, 2)           # /4 with rounding
+    np.testing.assert_array_equal(got, [1, -1, 2, -1, 2, -2])
+    np.testing.assert_array_equal(R.rshift_round_np(v, 0), v)
+    np.testing.assert_array_equal(R.rshift_round_np(np.array([3]), -2), [12])
+
+
+def test_quantize_np_round_half_up():
+    q = R.quantize_np(np.array([0.5, -0.5, 1.4999, -1.5]), 0, -128, 127)
+    np.testing.assert_array_equal(q, [1, 0, 1, -1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(la=st.integers(0, 4), lb=st.integers(0, 4), r=st.integers(0, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_add_q_matches_scalar_model(la, lb, r, seed):
+    g = rng_for(seed)
+    a = jnp.asarray(g.integers(-2000, 2000, (1, 3, 4, 5)), jnp.int16)
+    b = jnp.asarray(g.integers(-2000, 2000, (1, 3, 4, 5)), jnp.int16)
+    y = np.asarray(R.add_q_ref(a, b, la, lb, r), np.int64)
+    expect = R.rshift_round_np(
+        np.asarray(a, np.int64) * (1 << la)
+        + np.asarray(b, np.int64) * (1 << lb), r)
+    expect = np.clip(expect, P.A_QMIN, P.A_QMAX)
+    np.testing.assert_array_equal(y, expect)
+
+
+def test_conv_vmem_footprint_within_budget():
+    """The largest conv grid step must fit a TPU-core VMEM budget."""
+    worst = 0
+    from compile import model as M
+    from compile.census import _conv_out_shapes
+    shapes = _conv_out_shapes()
+    for s in M.all_conv_specs():
+        ho, wo = shapes[s.name]
+        hin = ho * s.stride
+        win = wo * s.stride
+        fb = ck.vmem_footprint_bytes(1 if s.dw else s.cin, hin, win, s.k,
+                                     oc_block=8, stride=s.stride)
+        worst = max(worst, fb)
+    assert worst < 2 * 1024 * 1024, f"VMEM estimate {worst} exceeds 2 MiB"

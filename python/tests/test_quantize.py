@@ -1,0 +1,108 @@
+"""PTQ machinery: power-of-two exponents, folding, calibration props."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import assume, given, settings, strategies as st
+
+from compile import model as M, params as P, quantize as Q
+from compile.kernels import ref as R
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e-6, 1e6))
+def test_pow2_exp_is_largest_power_of_two(max_abs):
+    e = Q.pow2_exp(max_abs, 127)
+    assert max_abs * (2.0 ** e) <= 127 + 1e-9
+    if e < 30:
+        assert max_abs * (2.0 ** (e + 1)) > 127 - 1e-9
+
+
+def test_pow2_exp_degenerate():
+    assert Q.pow2_exp(0.0, 127) == 0
+    assert Q.pow2_exp(float("inf"), 127) == 0
+
+
+def test_fold_affine_equivalence():
+    """Folded conv == conv + affine, on random tensors."""
+    rng = np.random.default_rng(0)
+    p = M.init_params(1)
+    name = "cve.l0.c0"
+    # give the affine non-trivial values
+    p[f"{name}.gamma"] = rng.uniform(0.5, 2.0, p[f"{name}.gamma"].shape).astype(np.float32)
+    p[f"{name}.beta"] = rng.normal(0, 0.3, p[f"{name}.beta"].shape).astype(np.float32)
+    p[f"{name}.b"] = rng.normal(0, 0.3, p[f"{name}.b"].shape).astype(np.float32)
+    wf, bf = Q.fold_affine(p, name)
+    from compile import fops
+    x = jnp.asarray(rng.normal(0, 1, (1, 64, 6, 8)), jnp.float32)
+    y_unfolded = fops.conv2d(x, jnp.asarray(p[f"{name}.w"]),
+                             jnp.asarray(p[f"{name}.b"]), stride=1)
+    g = jnp.asarray(p[f"{name}.gamma"])[None, :, None, None]
+    bt = jnp.asarray(p[f"{name}.beta"])[None, :, None, None]
+    y_unfolded = y_unfolded * g + bt
+    y_folded = fops.conv2d(x, jnp.asarray(wf.astype(np.float32)),
+                           jnp.asarray(bf.astype(np.float32)), stride=1)
+    np.testing.assert_allclose(np.asarray(y_unfolded), np.asarray(y_folded),
+                               atol=1e-4)
+
+
+def test_calibrator_alpha_clip():
+    cal = Q.Calibrator()
+    # bulk at 1.0 with a <0.1% fraction of 20x outliers: the alpha-quantile
+    # clip (P.ALPHA_CLIP = 99.9%) must ignore them
+    x = np.concatenate([np.full(4999, 1.0), np.full(1, 20.0)])
+    cal.consume({"t": x})
+    e = cal.act_exp("t")
+    # unclipped range 20.0 would give e=10; the 1.0 bulk gives e=15
+    assert e >= 13, f"exponent {e} suggests outliers were not clipped"
+    # a 5% outlier mass is NOT clipped at alpha=99.9 (by design)
+    cal2 = Q.Calibrator()
+    cal2.consume({"t": np.concatenate([np.full(950, 1.0), np.full(50, 20.0)])})
+    assert cal2.act_exp("t") <= 10
+
+
+def test_calibrator_takes_max_over_batches():
+    cal = Q.Calibrator()
+    cal.consume({"t": np.full(100, 1.0)})
+    e1 = cal.act_exp("t")
+    cal.consume({"t": np.full(100, 8.0)})
+    e2 = cal.act_exp("t")
+    assert e2 <= e1 - 3  # range grew 8x -> exponent drops by 3
+
+
+def test_quant_env_weights_in_range():
+    p = M.init_params(2)
+    # synthetic exponents: every recorded name the graph may ask for
+    from compile import scenes
+    frames, _, poses = scenes.render_scene("chess-01", 2)
+    aexp = Q.calibrate(p, list(frames[:1]), list(poses[:1]))
+    env = Q.build_quant_env(p, aexp)
+    for spec in M.all_conv_specs():
+        w = env.qw[f"{spec.name}.w"]
+        assert w.dtype == np.int8
+        assert np.abs(w.astype(np.int32)).max() <= 127
+        assert 1 <= env.s_q[spec.name] <= 127
+    # LUTs monotone where the function is
+    sig = env.lut_sigmoid.astype(np.int32)
+    assert (np.diff(sig) >= 0).all()
+    elu = env.lut_elu.astype(np.int32)
+    assert (np.diff(elu) >= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-7.9, 7.9), st.integers(6, 14))
+def test_lut_sigmoid_pointwise_error(x, in_exp):
+    # calibration guarantees representability: skip saturating pairs
+    assume(abs(x) * (1 << in_exp) <= 32000)
+    lut = R.build_lut(R.sigmoid_np, R.SIGMOID_OUT_EXP)
+    xq = np.int64(np.clip(round(x * (1 << in_exp)), -32768, 32767))
+    idx = int(np.clip((xq + (8 << in_exp)) >> (in_exp - 4), 0, 255)) \
+        if in_exp >= 4 else 0
+    y = lut[idx] / float(1 << R.SIGMOID_OUT_EXP)
+    # table resolution 1/16 in x, max slope 1/4, plus quantisation noise
+    assert abs(y - R.sigmoid_np(x)) < 1.0 / 16 / 4 + 2e-3
+
+
+def test_requant_idempotent_same_exp():
+    x = jnp.asarray(np.arange(-5, 5, dtype=np.int16).reshape(1, 1, 2, 5))
+    y = R.requant_ref(x, 0)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))

@@ -1,0 +1,50 @@
+"""Synthetic dataset invariants."""
+
+import numpy as np
+
+from compile import params as P, scenes
+
+
+def test_render_deterministic():
+    f1, d1, p1 = scenes.render_scene("chess-01", 2)
+    f2, d2, p2 = scenes.render_scene("chess-01", 2)
+    np.testing.assert_array_equal(f1, f2)
+    np.testing.assert_array_equal(d1, d2)
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_scenes_differ():
+    f1, _, _ = scenes.render_scene("chess-01", 1)
+    f2, _, _ = scenes.render_scene("fire-01", 1)
+    assert (f1 != f2).mean() > 0.2
+
+
+def test_depth_in_range():
+    _, d, _ = scenes.render_scene("office-01", 3)
+    assert d.min() >= P.MIN_DEPTH - 1e-6
+    assert d.max() <= P.MAX_DEPTH + 1e-6
+    assert d.std() > 0.1            # non-degenerate geometry
+
+
+def test_poses_rigid():
+    _, _, poses = scenes.render_scene("redkitchen-07", 4)
+    for p in poses:
+        R = p[:3, :3]
+        np.testing.assert_allclose(R @ R.T, np.eye(3), atol=1e-5)
+        assert abs(np.linalg.det(R) - 1.0) < 1e-5
+        assert p[3, 3] == 1.0
+
+
+def test_camera_moves():
+    _, _, poses = scenes.render_scene("chess-02", 8)
+    t = poses[:, :3, 3]
+    steps = np.linalg.norm(np.diff(t, axis=0), axis=1)
+    assert steps.max() > 1e-3           # not static
+    assert steps.max() < 1.0            # no teleporting
+
+
+def test_consecutive_frames_overlap():
+    """Consecutive frames must look similar (video, not random stills)."""
+    f, _, _ = scenes.render_scene("fire-02", 2)
+    diff = np.abs(f[0].astype(int) - f[1].astype(int)).mean()
+    assert diff < 40.0

@@ -1,0 +1,63 @@
+//! Extern-protocol overhead bench (paper §IV-A): the cost of one HW->SW
+//! opcode round-trip, isolated from the software op itself, plus the
+//! per-frame total through the real pipeline.
+//!
+//!     cargo bench --bench extern_overhead
+
+use std::path::Path;
+use std::sync::Arc;
+
+use fadec::coordinator::{Coordinator, ExternLink, PipelineOptions};
+use fadec::data::manifest::Manifest;
+use fadec::data::Dataset;
+use fadec::model::QuantParams;
+use fadec::util::TimingStats;
+
+fn main() -> anyhow::Result<()> {
+    // 1. raw protocol round-trip (no-op SW job): pure queue + wake cost
+    let link = ExternLink::new(2);
+    let mut rt = TimingStats::default();
+    for _ in 0..200 {
+        let t0 = std::time::Instant::now();
+        link.call("noop", || ());
+        rt.push(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "raw extern round-trip: median {:.1} us  std {:.1} us (n=200)",
+        rt.median() * 1e6,
+        rt.std() * 1e6
+    );
+
+    // 2. through the real pipeline: overhead per frame and its share
+    let art = Path::new("artifacts");
+    let manifest = Manifest::load(&art.join("manifest.txt"))?;
+    let qp = Arc::new(QuantParams::load(&art.join("qparams.bin"), &manifest)?);
+    let dataset = Dataset::open(&art.join("dataset"))?;
+    let scene = dataset.load_scene("fire-01")?;
+    let mut coord = Coordinator::new(art, &manifest, qp, PipelineOptions::default())?;
+    coord.step(&scene.normalized_image(0), &scene.poses[0])?; // warmup
+    coord.reset_stream();
+    let _ = coord.take_extern_stats();
+
+    let mut frame_t = TimingStats::default();
+    let mut ovh = TimingStats::default();
+    let mut crossings = 0usize;
+    for i in 0..12.min(scene.len()) {
+        let img = scene.normalized_image(i);
+        let t0 = std::time::Instant::now();
+        coord.step(&img, &scene.poses[i])?;
+        frame_t.push(t0.elapsed().as_secs_f64());
+        let stats = coord.take_extern_stats();
+        crossings = stats.records.len();
+        ovh.push(stats.total_overhead());
+    }
+    println!(
+        "pipeline: {crossings} extern crossings/frame\n\
+         overhead median {:.3} ms / frame median {:.3} ms = {:.2}%\n\
+         (paper: 4.7 ms = 1.69% of 278 ms)",
+        ovh.median() * 1e3,
+        frame_t.median() * 1e3,
+        100.0 * ovh.median() / frame_t.median()
+    );
+    Ok(())
+}

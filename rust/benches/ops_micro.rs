@@ -1,0 +1,89 @@
+//! Micro-benchmarks of the software-friendly operators (the CPU side of
+//! the co-design) and the conv baselines — the data behind §Perf in
+//! EXPERIMENTS.md.
+//!
+//!     cargo bench --bench ops_micro
+
+use fadec::config::N_HYPOTHESES;
+use fadec::ops;
+use fadec::poses::{sweep_grids, Mat4};
+use fadec::quant::QTensor;
+use fadec::tensor::{Tensor, TensorF, TensorI32, TensorI8};
+use fadec::util::{bench, Rng};
+
+fn randn(shape: &[usize], rng: &mut Rng) -> TensorF {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32()).collect())
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    // grid sampling: the irregular-access op the paper keeps in software.
+    // CVF-prep shape: 16-channel 32x48 feature, 64 hypotheses x 2 kfs.
+    let feat = randn(&[1, 16, 32, 48], &mut rng);
+    let mut kf_pose = Mat4::identity();
+    kf_pose.0[3] = 0.08;
+    let grids = sweep_grids(&Mat4::identity(), &kf_pose, 1, 32, 48);
+    bench("grid_sample_single_hypothesis", 10, 200, || {
+        std::hint::black_box(ops::grid_sample(&feat, &grids[31], 32, 48));
+    });
+    bench("cvf_prep_full_128_warps", 2, 20, || {
+        for g in &grids {
+            std::hint::black_box(ops::grid_sample(&feat, g, 32, 48));
+        }
+        for g in &grids {
+            std::hint::black_box(ops::grid_sample(&feat, g, 32, 48));
+        }
+    });
+
+    // layer norm (two-pass scan; CPU op)
+    let gates = randn(&[1, 256, 2, 3], &mut rng);
+    let g = vec![1.0f32; 256];
+    let b = vec![0.0f32; 256];
+    bench("layer_norm_cl_gates", 10, 500, || {
+        std::hint::black_box(ops::layer_norm(&gates, &g, &b));
+    });
+    let big = randn(&[1, 32, 32, 48], &mut rng);
+    let g32 = vec![1.0f32; 32];
+    let b32 = vec![0.0f32; 32];
+    bench("layer_norm_cvd_b4", 10, 200, || {
+        std::hint::black_box(ops::layer_norm(&big, &g32, &b32));
+    });
+
+    // bilinear upsampling (float SW op)
+    let carry = randn(&[1, 40, 16, 24], &mut rng);
+    bench("upsample_bilinear2x_cvd", 10, 200, || {
+        std::hint::black_box(ops::upsample_bilinear2x(&carry));
+    });
+
+    // conv baselines: the float vs quantized CPU cost (Table II rows 1-2)
+    let x = randn(&[1, 64, 32, 48], &mut rng);
+    let w = randn(&[32, 64, 3, 3], &mut rng);
+    let bias = vec![0.0f32; 32];
+    bench("conv2d_f32_64x32_3x3_32x48", 3, 30, || {
+        std::hint::black_box(ops::conv2d(&x, &w, &bias, 1));
+    });
+    let xq = QTensor {
+        t: Tensor::from_vec(
+            &[1, 64, 32, 48],
+            (0..64 * 32 * 48).map(|_| rng.range_i64(-2000, 2000) as i16).collect(),
+        ),
+        exp: 8,
+    };
+    let wq = TensorI8::from_vec(
+        &[32, 64, 3, 3],
+        (0..32 * 64 * 9).map(|_| rng.range_i64(-127, 127) as i8).collect(),
+    );
+    let bq = TensorI32::from_vec(&[32], vec![0; 32]);
+    bench("conv2d_q_64x32_3x3_32x48", 3, 30, || {
+        std::hint::black_box(ops::conv2d_q(&xq, &wq, &bq, 1, 17, 12, true, 8));
+    });
+
+    // cost volume finish (the synchronous extern op)
+    let warps: Vec<TensorF> =
+        (0..N_HYPOTHESES).map(|_| randn(&[1, 16, 32, 48], &mut rng)).collect();
+    bench("cvf_finish", 5, 100, || {
+        std::hint::black_box(fadec::model::sw::cvf_finish(&feat, &warps, 2));
+    });
+}

@@ -1,0 +1,91 @@
+//! Table II bench: per-frame end-to-end time of the three platforms
+//! (CPU-only float, CPU-only PTQ, hybrid PL+CPU), measured on this host,
+//! plus the modeled ZCU104 column.
+//!
+//!     cargo bench --bench table2 [-- --frames N]
+
+use std::path::Path;
+use std::sync::Arc;
+
+use fadec::coordinator::PipelineOptions;
+use fadec::data::manifest::Manifest;
+use fadec::data::Dataset;
+use fadec::hwsim::TableIIModel;
+use fadec::kb::KeyframeBuffer;
+use fadec::model::{FloatModel, FloatParams, FloatState, QuantModel, QuantParams, QuantState};
+use fadec::util::{Args, TimingStats};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let frames = args.get_usize("frames", 8);
+    let art = Path::new("artifacts");
+    let manifest = Manifest::load(&art.join("manifest.txt"))?;
+    let fp = FloatParams::load(&art.join("weights.bin"))?;
+    let qp = Arc::new(QuantParams::load(&art.join("qparams.bin"), &manifest)?);
+    let dataset = Dataset::open(&art.join("dataset"))?;
+    let scene = dataset.load_scene("chess-01")?;
+    let n = frames.min(scene.len());
+    let imgs: Vec<_> = (0..n).map(|i| scene.normalized_image(i)).collect();
+
+    // CPU-only float (Table II row 1)
+    let float_model = FloatModel::new(&fp);
+    let mut t_float = TimingStats::default();
+    {
+        let mut kb = KeyframeBuffer::new();
+        let mut st = FloatState::zero();
+        for i in 0..n {
+            let t0 = std::time::Instant::now();
+            let (_, f) = float_model.step(&imgs[i], &scene.poses[i], &kb, &mut st);
+            t_float.push(t0.elapsed().as_secs_f64());
+            kb.maybe_insert(scene.poses[i], f);
+        }
+    }
+
+    // CPU-only PTQ (row 2)
+    let quant_model = QuantModel::new(&qp);
+    let mut t_ptq = TimingStats::default();
+    {
+        let mut kb = KeyframeBuffer::new();
+        let mut st = QuantState::zero(&qp);
+        for i in 0..n {
+            let t0 = std::time::Instant::now();
+            let (_, f) = quant_model.step(&imgs[i], &scene.poses[i], &kb, &mut st);
+            t_ptq.push(t0.elapsed().as_secs_f64());
+            kb.maybe_insert(scene.poses[i], f);
+        }
+    }
+
+    // hybrid PL+CPU (row 3)
+    let mut coord = fadec::coordinator::Coordinator::new(
+        art, &manifest, Arc::clone(&qp), PipelineOptions::default(),
+    )?;
+    // warmup frame (XLA executables touch-in)
+    coord.step(&imgs[0], &scene.poses[0])?;
+    coord.reset_stream();
+    let mut t_hyb = TimingStats::default();
+    for i in 0..n {
+        let t0 = std::time::Instant::now();
+        coord.step(&imgs[i], &scene.poses[i])?;
+        t_hyb.push(t0.elapsed().as_secs_f64());
+    }
+
+    println!(
+        "Table II — measured on this host ({n} frames)\n\
+         platform            median [s]   std [s]\n\
+         CPU-only            {:9.4}   {:8.4}   (paper 16.744 / 0.049)\n\
+         CPU-only (w/ PTQ)   {:9.4}   {:8.4}   (paper 13.248 / 0.035)\n\
+         PL + CPU (ours)     {:9.4}   {:8.4}   (paper  0.278 / 0.118)\n\
+         measured speedup    {:9.1}x               (paper 60.2x)\n",
+        t_float.median(), t_float.std(),
+        t_ptq.median(), t_ptq.std(),
+        t_hyb.median(), t_hyb.std(),
+        t_float.median() / t_hyb.median(),
+    );
+    let m = TableIIModel::compute();
+    println!(
+        "Table II — modeled ZCU104 (hwsim)\n\
+         CPU-only {:.3} s | PTQ {:.3} s | PL+CPU {:.3} s | speedup {:.1}x @ {:.3} MHz",
+        m.cpu_only_s, m.cpu_ptq_s, m.hybrid_s, m.speedup, m.clock_mhz
+    );
+    Ok(())
+}

@@ -1,0 +1,320 @@
+//! HW/SW co-design analysis (paper §III-A): the operator census of
+//! Table I, the multiplication census of Fig. 2, the memory-access-
+//! pattern classification, and the resulting HW/SW partitioning.
+//!
+//! This module *derives* the partition from the same analysis the paper
+//! performs; `hwsim` then prices the resulting design point.
+
+use std::collections::BTreeMap;
+
+use crate::config::{
+    self, CVD_BODY_K3, CVD_CH, CVE_BODY_KERNELS, CVE_DOWN_KERNEL, CL_CH,
+    FPN_CH, IMG_H, IMG_W, N_HYPOTHESES, N_KEYFRAMES,
+};
+use crate::model::specs::{self, Act};
+
+pub const PROCESSES: [&str; 6] = ["FE", "FS", "CVF", "CVE", "CL", "CVD"];
+
+pub const ROW_ORDER: [&str; 16] = [
+    "conv_1_1", "conv_3_1", "conv_3_2", "conv_5_1", "conv_5_2",
+    "act_relu", "act_sigmoid", "act_elu",
+    "add", "mul", "concat", "slice", "layer_norm",
+    "up_nearest", "up_bilinear", "grid_sample",
+];
+
+/// Table I of the paper (rows in ROW_ORDER, columns in PROCESSES).
+pub const PAPER_TABLE_I: [(&str, [u32; 6]); 16] = [
+    ("conv_1_1", [33, 5, 0, 0, 0, 0]),
+    ("conv_3_1", [6, 4, 0, 9, 1, 14]),
+    ("conv_3_2", [2, 0, 0, 3, 0, 0]),
+    ("conv_5_1", [7, 0, 0, 3, 0, 5]),
+    ("conv_5_2", [3, 0, 0, 1, 0, 0]),
+    ("act_relu", [34, 0, 0, 16, 0, 14]),
+    ("act_sigmoid", [0, 0, 0, 0, 3, 5]),
+    ("act_elu", [0, 0, 0, 0, 2, 0]),
+    ("add", [10, 4, 128, 0, 1, 0]),
+    ("mul", [0, 0, 64, 0, 3, 0]),
+    ("concat", [0, 0, 0, 4, 1, 5]),
+    ("slice", [0, 0, 0, 0, 4, 0]),
+    ("layer_norm", [0, 0, 0, 0, 2, 9]),
+    ("up_nearest", [0, 4, 0, 0, 0, 0]),
+    ("up_bilinear", [0, 0, 0, 0, 0, 9]),
+    ("grid_sample", [0, 0, 128, 0, 0, 0]),
+];
+
+fn proc_of(name: &str) -> &'static str {
+    match name.split('.').next().unwrap() {
+        "fe" => "FE",
+        "fs" => "FS",
+        "cve" => "CVE",
+        "cl" => "CL",
+        "cvd" => "CVD",
+        other => panic!("unknown process prefix {other}"),
+    }
+}
+
+pub type Census = BTreeMap<&'static str, BTreeMap<&'static str, u32>>;
+
+/// The operator census over the whole model graph (Table I).
+pub fn op_census() -> Census {
+    let mut t: Census = PROCESSES
+        .iter()
+        .map(|&p| (p, ROW_ORDER.iter().map(|&r| (r, 0u32)).collect()))
+        .collect();
+    let mut bump = |proc: &str, row: &'static str, n: u32| {
+        let proc_key = PROCESSES.iter().find(|&&p| p == proc).unwrap();
+        *t.get_mut(proc_key).unwrap().get_mut(row).unwrap() += n;
+    };
+
+    for s in specs::all_conv_specs() {
+        let pr = proc_of(&s.name);
+        let row: &'static str = match (s.k, s.stride) {
+            (1, 1) => "conv_1_1",
+            (3, 1) => "conv_3_1",
+            (3, 2) => "conv_3_2",
+            (5, 1) => "conv_5_1",
+            (5, 2) => "conv_5_2",
+            other => panic!("unexpected conv config {other:?}"),
+        };
+        bump(pr, row, 1);
+        match s.act {
+            Act::Relu => bump(pr, "act_relu", 1),
+            Act::Sigmoid => bump(pr, "act_sigmoid", 1),
+            Act::None => {}
+        }
+    }
+    // FE residual adds
+    let (_, wiring) = specs::fe_specs();
+    bump("FE", "add", wiring.iter().filter(|w| w.residual).count() as u32);
+    // FS top-down adds + nearest upsamples
+    bump("FS", "add", 4);
+    bump("FS", "up_nearest", 4);
+    // CVF: per hypothesis x keyframe one grid sample; per hypothesis one
+    // keyframe-sum add + one channel-reduction add; one multiply.
+    bump("CVF", "grid_sample", (N_HYPOTHESES * N_KEYFRAMES) as u32);
+    bump("CVF", "add", (N_HYPOTHESES * N_KEYFRAMES) as u32);
+    bump("CVF", "mul", N_HYPOTHESES as u32);
+    // CVE skip concats
+    bump(
+        "CVE",
+        "concat",
+        CVE_DOWN_KERNEL.iter().filter(|d| d.is_some()).count() as u32,
+    );
+    // CL cell
+    bump("CL", "concat", 1);
+    bump("CL", "slice", 4);
+    bump("CL", "layer_norm", 2);
+    bump("CL", "act_sigmoid", 3);
+    bump("CL", "act_elu", 2);
+    bump("CL", "mul", 3);
+    bump("CL", "add", 1);
+    // CVD
+    bump("CVD", "concat", 5);
+    bump("CVD", "layer_norm", CVD_BODY_K3.iter().sum::<usize>() as u32);
+    bump("CVD", "up_bilinear", 2 * 4 + 1);
+    t
+}
+
+/// Does the census equal the paper's Table I?
+pub fn table_i_matches() -> Result<(), String> {
+    let got = op_census();
+    for (row, cols) in PAPER_TABLE_I {
+        for (pi, &p) in PROCESSES.iter().enumerate() {
+            let g = got[p][row];
+            if g != cols[pi] {
+                return Err(format!("{row}/{p}: got {g}, paper {}", cols[pi]));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Output (H, W) of every conv — replays the graph wiring (mirrors
+/// `census._conv_out_shapes` on the python side).
+pub fn conv_out_shapes() -> BTreeMap<String, (usize, usize)> {
+    let mut shapes = BTreeMap::new();
+    let hw = config::level_hw;
+    shapes.insert("fe.stem".to_string(), hw(1));
+    shapes.insert("fe.sep.dw".to_string(), hw(1));
+    shapes.insert("fe.sep.pw".to_string(), hw(1));
+    let (_, wiring) = specs::fe_specs();
+    let mut wi = 0;
+    let mut lv = 1;
+    for st in config::FE_STAGES.iter() {
+        for ri in 0..st.repeats {
+            let base = &wiring[wi].base;
+            let stride = if ri == 0 { st.stride } else { 1 };
+            let exp_hw = hw(lv); // expansion conv at input resolution
+            if stride == 2 {
+                lv += 1;
+            }
+            shapes.insert(format!("{base}.exp"), exp_hw);
+            shapes.insert(format!("{base}.dw"), hw(lv));
+            shapes.insert(format!("{base}.pw"), hw(lv));
+            wi += 1;
+        }
+    }
+    for i in 0..5 {
+        shapes.insert(format!("fs.lat{i}"), hw(i + 1));
+    }
+    for i in 0..4 {
+        shapes.insert(format!("fs.smooth{i}"), hw(i + 1));
+    }
+    for l in 0..5usize {
+        if CVE_DOWN_KERNEL[l].is_some() {
+            shapes.insert(format!("cve.l{l}.down"), hw(l + 1));
+        }
+        for bi in 0..CVE_BODY_KERNELS[l].len() {
+            shapes.insert(format!("cve.l{l}.c{bi}"), hw(l + 1));
+        }
+    }
+    shapes.insert("cl.gates".to_string(), hw(5));
+    for b in 0..5usize {
+        let s = hw(5 - b);
+        shapes.insert(format!("cvd.b{b}.c3e"), s);
+        shapes.insert(format!("cvd.b{b}.c5"), s);
+        for i in 1..CVD_BODY_K3[b] {
+            shapes.insert(format!("cvd.b{b}.c3_{i}"), s);
+        }
+        shapes.insert(format!("cvd.b{b}.head"), s);
+    }
+    shapes
+}
+
+/// Multiplications per process from conv ops alone.
+pub fn conv_mults() -> BTreeMap<&'static str, u64> {
+    let shapes = conv_out_shapes();
+    let mut out: BTreeMap<&'static str, u64> =
+        PROCESSES.iter().map(|&p| (p, 0u64)).collect();
+    for s in specs::all_conv_specs() {
+        let (ho, wo) = shapes[&s.name];
+        let per_out = (if s.dw { 1 } else { s.cin }) * s.k * s.k;
+        *out.get_mut(proc_of(&s.name)).unwrap() +=
+            (s.cout * ho * wo * per_out) as u64;
+    }
+    out
+}
+
+/// All multiplications per process (Fig 2: convs + element-wise +
+/// sampling; grid sampling / bilinear count 4 muls per output element).
+pub fn total_mults() -> BTreeMap<&'static str, u64> {
+    let mut out = conv_mults();
+    let (h1, w1) = config::level_hw(1);
+    let c = FPN_CH;
+    *out.get_mut("CVF").unwrap() +=
+        (N_HYPOTHESES * N_KEYFRAMES * c * h1 * w1 * 4) as u64
+            + (N_HYPOTHESES * c * h1 * w1) as u64;
+    let (h5, w5) = config::level_hw(5);
+    *out.get_mut("CL").unwrap() += (3 * CL_CH * h5 * w5) as u64;
+    for b in 1..5usize {
+        let (h, w) = config::level_hw(5 - b);
+        *out.get_mut("CVD").unwrap() +=
+            (4 * (CVD_CH[b - 1] * h * w + h * w)) as u64;
+    }
+    *out.get_mut("CVD").unwrap() += (4 * IMG_H * IMG_W) as u64;
+    out
+}
+
+/// Where an operator runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Assign {
+    Hw,
+    Sw,
+}
+
+/// One partitioning decision with the paper's rationale.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    pub op: &'static str,
+    pub assign: Assign,
+    pub access_pattern: &'static str,
+    pub rationale: &'static str,
+}
+
+/// The §III-A3 partitioning, derived from access patterns + op counts.
+pub fn partition() -> Vec<Decision> {
+    use Assign::*;
+    vec![
+        Decision { op: "conv", assign: Hw, access_pattern: "sliding window",
+            rationale: "high data reuse; dominates multiplications (>99% of CVE/CVD)" },
+        Decision { op: "act_relu", assign: Hw, access_pattern: "folded into conv",
+            rationale: "no extra memory traffic" },
+        Decision { op: "act_sigmoid", assign: Hw, access_pattern: "folded / LUT",
+            rationale: "exp approximated by 256-entry LUT" },
+        Decision { op: "act_elu", assign: Hw, access_pattern: "folded / LUT",
+            rationale: "exp approximated by 256-entry LUT" },
+        Decision { op: "add", assign: Hw, access_pattern: "element-wise",
+            rationale: "memory-bound; folds into pipeline streams" },
+        Decision { op: "mul", assign: Hw, access_pattern: "element-wise",
+            rationale: "memory-bound; folds into pipeline streams" },
+        Decision { op: "concat", assign: Hw, access_pattern: "sequential",
+            rationale: "memory-bound; no compute" },
+        Decision { op: "slice", assign: Hw, access_pattern: "sequential",
+            rationale: "memory-bound; no compute" },
+        Decision { op: "up_nearest", assign: Hw, access_pattern: "sliding window",
+            rationale: "regular replication" },
+        Decision { op: "layer_norm", assign: Sw, access_pattern: "two-pass scan",
+            rationale: "sqrt + division; float precision needed" },
+        Decision { op: "up_bilinear", assign: Sw, access_pattern: "slightly irregular",
+            rationale: "float weights for precision; little acceleration expected" },
+        Decision { op: "grid_sample", assign: Sw, access_pattern: "irregular",
+            rationale: "data-dependent addresses; hardware-hostile" },
+        Decision { op: "cvf_rest", assign: Sw, access_pattern: "element-wise",
+            rationale: "keeps HW<->SW transfer at 2/64 of the volume; only ~5% of mults" },
+        Decision { op: "kb/pose/unnorm", assign: Sw, access_pattern: "scalar",
+            rationale: "few calculations; software for simplicity" },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_reproduces_paper_table_i() {
+        if let Err(e) = table_i_matches() {
+            panic!("Table I mismatch: {e}");
+        }
+    }
+
+    #[test]
+    fn fig2_shape_holds() {
+        let m = total_mults();
+        let tot: u64 = m.values().sum();
+        let cve_cvd = m["CVE"] + m["CVD"];
+        assert!(
+            cve_cvd as f64 / tot as f64 > 0.75,
+            "CVE+CVD should dominate (paper: 82.4%)"
+        );
+        assert!(
+            (m["CVF"] as f64 / tot as f64) < 0.10,
+            "CVF small (paper: 5.0%)"
+        );
+        let cm = conv_mults();
+        assert!(
+            cm["CVE"] as f64 / m["CVE"] as f64 > 0.99,
+            "conv dominates CVE (paper: >99%)"
+        );
+    }
+
+    #[test]
+    fn partition_sends_irregular_ops_to_sw() {
+        let p = partition();
+        let find = |op| p.iter().find(|d| d.op == op).unwrap().assign;
+        assert_eq!(find("conv"), Assign::Hw);
+        assert_eq!(find("grid_sample"), Assign::Sw);
+        assert_eq!(find("layer_norm"), Assign::Sw);
+        assert_eq!(find("up_bilinear"), Assign::Sw);
+    }
+
+    #[test]
+    fn conv_out_shapes_cover_all_convs() {
+        let shapes = conv_out_shapes();
+        for s in specs::all_conv_specs() {
+            assert!(shapes.contains_key(&s.name), "missing {}", s.name);
+        }
+        assert_eq!(shapes["fe.stem"], (32, 48));
+        assert_eq!(shapes["cl.gates"], (2, 3));
+        assert_eq!(shapes["cvd.b4.head"], (32, 48));
+    }
+}

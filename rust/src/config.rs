@@ -1,0 +1,163 @@
+//! Static model / quantization / hardware configuration.
+//!
+//! Mirrors `python/compile/params.py` — the single source of truth on the
+//! build side. Cross-language agreement is enforced by the golden-tensor
+//! integration tests (`rust/tests/`) and by `codesign`'s Table-I census.
+
+/// Input image width (paper §IV: 96x64 frames).
+pub const IMG_W: usize = 96;
+/// Input image height.
+pub const IMG_H: usize = 64;
+
+pub const FX: f32 = 60.0;
+pub const FY: f32 = 60.0;
+pub const CX: f32 = IMG_W as f32 / 2.0;
+pub const CY: f32 = IMG_H as f32 / 2.0;
+
+pub const MIN_DEPTH: f32 = 0.3;
+pub const MAX_DEPTH: f32 = 8.0;
+
+/// Plane-sweep hypotheses (paper: 64 grid samplings per keyframe).
+pub const N_HYPOTHESES: usize = 64;
+/// Keyframes consumed by CVF ("64 grid sampling operations ... twice").
+pub const N_KEYFRAMES: usize = 2;
+
+pub const KB_CAPACITY: usize = 2;
+pub const KB_MIN_POSE_DIST: f64 = 0.10;
+
+// --- quantization (paper §III-B2, §IV) ------------------------------------
+
+pub const W_BITS: u32 = 8;
+pub const B_BITS: u32 = 32;
+pub const S_BITS: u32 = 8;
+pub const A_BITS: u32 = 16;
+pub const A_QMAX: i32 = (1 << (A_BITS - 1)) - 1;
+pub const A_QMIN: i32 = -(1 << (A_BITS - 1));
+
+pub const LUT_ENTRIES: usize = 256;
+pub const LUT_RANGE_T: f32 = 8.0;
+pub const SIGMOID_OUT_EXP: i32 = 14;
+
+// --- hardware model (paper §IV parallelism; consumed by hwsim) ------------
+
+pub const CLOCK_MHZ: f64 = 187.512;
+pub const PAR_CONV_ICH: u64 = 2;
+pub const PAR_CONV_OCH: u64 = 4;
+pub const PAR_CONV_OCH_K5: u64 = 2;
+pub const PAR_ELEMWISE: u64 = 4;
+pub const SW_THREADS: usize = 2;
+
+// --- model topology (matches Table I by construction; DESIGN.md §4) -------
+
+pub const FE_STEM_CH: usize = 8;
+
+/// One MnasNet stage: (expand, kernel, stride, out_ch, repeats).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MbStage {
+    pub expand: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub out_ch: usize,
+    pub repeats: usize,
+}
+
+pub const FE_STAGES: [MbStage; 6] = [
+    MbStage { expand: 3, kernel: 3, stride: 2, out_ch: 12, repeats: 3 },
+    MbStage { expand: 3, kernel: 5, stride: 2, out_ch: 16, repeats: 3 },
+    MbStage { expand: 6, kernel: 5, stride: 2, out_ch: 24, repeats: 3 },
+    MbStage { expand: 6, kernel: 3, stride: 1, out_ch: 24, repeats: 2 },
+    MbStage { expand: 6, kernel: 5, stride: 2, out_ch: 32, repeats: 4 },
+    MbStage { expand: 6, kernel: 3, stride: 1, out_ch: 32, repeats: 1 },
+];
+
+/// Pyramid taps: SepConv output plus the listed stage outputs.
+pub const FE_TAP_STAGES: [isize; 5] = [-1, 0, 1, 3, 5];
+pub const FE_TAP_CHANNELS: [usize; 5] = [FE_STEM_CH, 12, 16, 24, 32];
+
+pub const FPN_CH: usize = 16;
+
+pub const CVE_CH: [usize; 5] = [32, 40, 48, 56, 64];
+pub const CVE_DOWN_KERNEL: [Option<usize>; 5] = [None, Some(5), Some(3), Some(3), Some(3)];
+// large kernels at the coarse levels (as in DeepVideoMVS; also what makes
+// the paper's reduced k=5 parallelism affordable)
+pub const CVE_BODY_KERNELS: [&[usize]; 5] =
+    [&[3, 3], &[3, 3], &[5, 3], &[5, 3], &[5, 3, 3, 3]];
+
+pub const CL_CH: usize = CVE_CH[4];
+
+pub const CVD_CH: [usize; 5] = [64, 56, 48, 40, 32];
+pub const CVD_BODY_K3: [usize; 5] = [2, 2, 2, 2, 1];
+
+/// Map a sigmoid output in [0,1] to metric depth via inverse depth.
+/// Identical to `params.depth_from_sigmoid` on the python side.
+#[inline]
+pub fn depth_from_sigmoid(s: f32) -> f32 {
+    let inv = s * (1.0 / MIN_DEPTH - 1.0 / MAX_DEPTH) + 1.0 / MAX_DEPTH;
+    1.0 / inv
+}
+
+/// Inverse mapping: metric depth -> normalised inverse depth in [0,1].
+#[inline]
+pub fn sigmoid_from_depth(d: f32) -> f32 {
+    let inv = 1.0 / d.clamp(MIN_DEPTH, MAX_DEPTH);
+    (inv - 1.0 / MAX_DEPTH) / (1.0 / MIN_DEPTH - 1.0 / MAX_DEPTH)
+}
+
+/// The 64 plane-sweep inverse-depth hypotheses (uniform in 1/d).
+pub fn hypothesis_inv_depths() -> Vec<f32> {
+    let lo = 1.0 / MAX_DEPTH;
+    let hi = 1.0 / MIN_DEPTH;
+    (0..N_HYPOTHESES)
+        .map(|i| lo + (hi - lo) * i as f32 / (N_HYPOTHESES - 1) as f32)
+        .collect()
+}
+
+/// Intrinsics (fx, fy, cx, cy) at pyramid level `level` (0 = full res).
+pub fn level_intrinsics(level: usize) -> (f32, f32, f32, f32) {
+    let s = 1.0 / (1u32 << level) as f32;
+    (FX * s, FY * s, CX * s, CY * s)
+}
+
+/// Feature map height/width at pyramid level `level`.
+pub fn level_hw(level: usize) -> (usize, usize) {
+    (IMG_H >> level, IMG_W >> level)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_sigmoid_roundtrip() {
+        for i in 0..=20 {
+            let s = i as f32 / 20.0;
+            let d = depth_from_sigmoid(s);
+            assert!((sigmoid_from_depth(d) - s).abs() < 1e-5);
+            assert!((MIN_DEPTH..=MAX_DEPTH).contains(&d));
+        }
+    }
+
+    #[test]
+    fn hypotheses_cover_depth_range() {
+        let h = hypothesis_inv_depths();
+        assert_eq!(h.len(), N_HYPOTHESES);
+        assert!((h[0] - 1.0 / MAX_DEPTH).abs() < 1e-6);
+        assert!((h[N_HYPOTHESES - 1] - 1.0 / MIN_DEPTH).abs() < 1e-6);
+        assert!(h.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn fe_stage_census_matches_mnasnet_b1() {
+        let blocks: usize = FE_STAGES.iter().map(|s| s.repeats).sum();
+        assert_eq!(blocks, 16);
+    }
+
+    #[test]
+    fn level_geometry() {
+        assert_eq!(level_hw(1), (32, 48));
+        assert_eq!(level_hw(5), (2, 3));
+        let (fx, _, cx, _) = level_intrinsics(1);
+        assert_eq!(fx, FX / 2.0);
+        assert_eq!(cx, CX / 2.0);
+    }
+}

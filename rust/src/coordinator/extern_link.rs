@@ -1,0 +1,260 @@
+//! The HW<->SW *extern* protocol (paper §III-D1, Fig. 4).
+//!
+//! On the ZCU104, the PL writes data into CMA-backed shared memory and an
+//! opcode into a register; the CPU polls the register, executes the
+//! requested software process, writes the result back and sets an end
+//! flag; the PL resumes. Here the PL is the PJRT-driving thread and the
+//! CPU is a pool of `SW_THREADS` worker threads (the board has two A53
+//! cores); the opcode register + flag become a job queue + completion
+//! channel. The *measured overhead* has the paper's exact definition:
+//! `(wall time the HW waited) - (SW processing time)` — i.e. data
+//! read/write plus control time (§IV-A reports 4.7 ms / 1.69%).
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+type Payload = Box<dyn Any + Send>;
+
+struct Job {
+    run: Box<dyn FnOnce() -> Payload + Send>,
+    done: Sender<(Payload, Instant, Instant)>, // (result, sw start, sw end)
+}
+
+/// Per-extern-crossing record.
+#[derive(Clone, Debug)]
+pub struct ExternRecord {
+    pub label: &'static str,
+    /// Pure software processing time (the op itself).
+    pub sw_seconds: f64,
+    /// Wall time between posting the opcode and consuming the result.
+    pub total_seconds: f64,
+    /// total - sw when the result was awaited synchronously (else 0):
+    /// queueing + transfer + control — the paper's "overhead".
+    pub overhead_seconds: f64,
+    /// Whether the HW thread blocked on this crossing.
+    pub synchronous: bool,
+}
+
+#[derive(Default)]
+pub struct ExternStats {
+    pub records: Vec<ExternRecord>,
+}
+
+impl ExternStats {
+    pub fn total_overhead(&self) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.synchronous)
+            .map(|r| r.overhead_seconds)
+            .sum()
+    }
+
+    pub fn by_label(&self) -> HashMap<&'static str, (usize, f64, f64)> {
+        let mut m: HashMap<&'static str, (usize, f64, f64)> = HashMap::new();
+        for r in &self.records {
+            let e = m.entry(r.label).or_insert((0, 0.0, 0.0));
+            e.0 += 1;
+            e.1 += r.sw_seconds;
+            e.2 += r.overhead_seconds;
+        }
+        m
+    }
+}
+
+/// A posted software job (the opcode has been written; the CPU side may
+/// already be executing). `wait` blocks the HW thread — the polling
+/// "interrupt" round-trip.
+pub struct Pending<T> {
+    rx: Receiver<(Payload, Instant, Instant)>,
+    posted_at: Instant,
+    label: &'static str,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: 'static> Pending<T> {
+    /// Block until the SW op completes; records the crossing.
+    pub fn wait(self, stats: &Mutex<ExternStats>) -> T {
+        self.wait_timed(stats, true).0
+    }
+
+    /// Consume a job that was overlapped with HW execution (task-level
+    /// parallelism): its latency was hidden, so it does not count toward
+    /// the extern overhead.
+    pub fn join_overlapped(self, stats: &Mutex<ExternStats>) -> T {
+        self.wait_timed(stats, false).0
+    }
+
+    /// As `wait`/`join_overlapped` but also returns the SW execution
+    /// interval (for the Fig-5 pipeline chart).
+    pub fn wait_timed(
+        self,
+        stats: &Mutex<ExternStats>,
+        synchronous: bool,
+    ) -> (T, Instant, Instant) {
+        let (payload, t0, t1) = self.rx.recv().expect("extern worker dropped");
+        let total = self.posted_at.elapsed().as_secs_f64();
+        let sw_seconds = (t1 - t0).as_secs_f64();
+        stats.lock().unwrap().records.push(ExternRecord {
+            label: self.label,
+            sw_seconds,
+            total_seconds: total,
+            overhead_seconds: if synchronous {
+                (total - sw_seconds).max(0.0)
+            } else {
+                0.0
+            },
+            synchronous,
+        });
+        (
+            *payload.downcast::<T>().expect("extern payload type"),
+            t0,
+            t1,
+        )
+    }
+}
+
+/// The shared-memory + opcode-queue link with a CPU worker pool.
+pub struct ExternLink {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pub stats: Mutex<ExternStats>,
+}
+
+impl ExternLink {
+    pub fn new(n_workers: usize) -> Self {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n_workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("fadec-sw-{i}"))
+                    .spawn(move || loop {
+                        // the CPU "polls" the opcode queue
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                let t0 = Instant::now();
+                                let out = (job.run)();
+                                let _ = job.done.send((out, t0, Instant::now()));
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn sw worker")
+            })
+            .collect();
+        ExternLink { tx: Some(tx), workers, stats: Mutex::new(ExternStats::default()) }
+    }
+
+    /// Write the opcode: enqueue a software op for the CPU side.
+    pub fn post<T: Send + 'static>(
+        &self,
+        label: &'static str,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> Pending<T> {
+        let (done_tx, done_rx) = channel();
+        let job = Job {
+            run: Box::new(move || Box::new(f()) as Payload),
+            done: done_tx,
+        };
+        // timestamp BEFORE writing the opcode: the worker may pick the
+        // job up before this function returns
+        let posted_at = Instant::now();
+        self.tx
+            .as_ref()
+            .expect("link closed")
+            .send(job)
+            .expect("sw workers gone");
+        Pending { rx: done_rx, posted_at, label, _marker: std::marker::PhantomData }
+    }
+
+    /// Run a software op synchronously through the link (post + wait).
+    pub fn call<T: Send + 'static>(
+        &self,
+        label: &'static str,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> T {
+        self.post(label, f).wait(&self.stats)
+    }
+
+    pub fn take_stats(&self) -> ExternStats {
+        std::mem::take(&mut *self.stats.lock().unwrap())
+    }
+}
+
+impl Drop for ExternLink {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn post_and_wait_returns_value() {
+        let link = ExternLink::new(2);
+        let p = link.post("add", || 2 + 3);
+        assert_eq!(p.wait(&link.stats), 5);
+        let stats = link.take_stats();
+        assert_eq!(stats.records.len(), 1);
+        assert!(stats.records[0].synchronous);
+    }
+
+    #[test]
+    fn overlapped_jobs_run_concurrently_with_caller() {
+        let link = ExternLink::new(2);
+        let p1 = link.post("slow1", || {
+            std::thread::sleep(Duration::from_millis(40));
+            1
+        });
+        let p2 = link.post("slow2", || {
+            std::thread::sleep(Duration::from_millis(40));
+            2
+        });
+        let t0 = Instant::now();
+        // caller "runs HW" for 50 ms while both SW jobs execute
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(p1.join_overlapped(&link.stats), 1);
+        assert_eq!(p2.join_overlapped(&link.stats), 2);
+        // both jobs hidden behind the 50 ms of "HW" time
+        assert!(t0.elapsed() < Duration::from_millis(90));
+        let stats = link.take_stats();
+        assert_eq!(stats.total_overhead(), 0.0); // overlapped => no overhead
+    }
+
+    #[test]
+    fn overhead_is_total_minus_sw_time() {
+        let link = ExternLink::new(1);
+        for _ in 0..5 {
+            link.call("work", || {
+                std::thread::sleep(Duration::from_millis(5));
+            });
+        }
+        let stats = link.take_stats();
+        for r in &stats.records {
+            assert!(r.sw_seconds >= 0.004);
+            assert!(r.overhead_seconds < r.sw_seconds, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn many_jobs_one_worker_preserve_order_of_results() {
+        let link = ExternLink::new(1);
+        let pendings: Vec<_> =
+            (0..20).map(|i| link.post("id", move || i)).collect();
+        for (i, p) in pendings.into_iter().enumerate() {
+            assert_eq!(p.wait(&link.stats), i);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator — the paper's system contribution: the extern HW<->SW
+//! protocol (§III-D1), the Fig-5 task-level pipeline (§III-D2) and its
+//! profiler, over the PJRT-loaded AOT segments ("PL") and the Rust
+//! software operators ("CPU").
+
+pub mod extern_link;
+pub mod pipeline;
+pub mod profiler;
+
+pub use extern_link::{ExternLink, ExternRecord, ExternStats, Pending};
+pub use pipeline::{Coordinator, FrameOutput, PipelineOptions};
+pub use profiler::{FrameProfile, Lane, Profiler, StageRecord};

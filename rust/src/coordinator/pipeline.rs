@@ -1,0 +1,433 @@
+//! The Fig-5 task-level pipeline (paper §III-D2) — the heart of the L3
+//! coordinator.
+//!
+//! Per frame, the PL-driving thread executes the AOT segments in FSM
+//! order while the CPU workers run the software-friendly processes, with
+//! the paper's two overlaps:
+//!
+//!  * **CVF preparation** (plane-sweep grid sampling of the keyframe
+//!    features — needs only poses) runs concurrently with FE/FS on the
+//!    PL; only the small *finish* step (dot with the current feature)
+//!    blocks. The paper hides 93% of CVF this way.
+//!  * **Hidden-state correction** runs concurrently with FE/FS/CVE,
+//!    joined just before CL needs the corrected hidden state.
+//!
+//! Everything else ping-pongs synchronously through the extern link
+//! (layer norms, bilinear upsamples, depth un-normalisation), exactly as
+//! FADEC's FSM suspends for each software op.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{self, CVD_BODY_K3, N_HYPOTHESES, SW_THREADS};
+use crate::data::manifest::Manifest;
+use crate::kb::KeyframeBuffer;
+use crate::model::specs::cvd_carry_name;
+use crate::model::sw;
+use crate::model::weights::QuantParams;
+use crate::ops::{layer_norm, upsample_bilinear2x};
+use crate::poses::Mat4;
+use crate::quant::{dequantize_tensor, quantize_tensor, QTensor};
+use crate::runtime::HwRuntime;
+use crate::tensor::TensorF;
+
+use super::extern_link::{ExternLink, ExternStats, Pending};
+use super::profiler::{FrameProfile, Lane, Profiler};
+
+/// Output of one pipelined frame.
+pub struct FrameOutput {
+    pub depth: TensorF,
+    pub profile: FrameProfile,
+    /// Boundary tensors (only when tracing for the golden tests).
+    pub trace: Option<HashMap<String, QTensor>>,
+}
+
+/// Coordinator options.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineOptions {
+    /// Task-level parallelization (Fig 5). Disable for the ablation.
+    pub overlap: bool,
+    /// CPU worker threads (the ZCU104 has two cores).
+    pub sw_threads: usize,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        PipelineOptions { overlap: true, sw_threads: SW_THREADS }
+    }
+}
+
+/// The PL+CPU coordinator (Table II row 3).
+pub struct Coordinator {
+    pub hw: HwRuntime,
+    pub qp: Arc<QuantParams>,
+    pub link: ExternLink,
+    pub kb: KeyframeBuffer<QTensor>,
+    pub opts: PipelineOptions,
+    // cross-frame state (paper Fig. 1 bold dotted arrows)
+    h: QTensor,
+    c: QTensor,
+    depth_full: Arc<TensorF>,
+    pose_prev: Option<Mat4>,
+    frames_done: usize,
+}
+
+impl Coordinator {
+    pub fn new(
+        artifacts: &Path,
+        manifest: &Manifest,
+        qp: Arc<QuantParams>,
+        opts: PipelineOptions,
+    ) -> Result<Self> {
+        let hw = HwRuntime::load(artifacts, manifest)?;
+        let (h5, w5) = config::level_hw(5);
+        let h = QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.hnew"));
+        let c = QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.cnew"));
+        Ok(Coordinator {
+            hw,
+            link: ExternLink::new(opts.sw_threads),
+            qp,
+            kb: KeyframeBuffer::new(),
+            opts,
+            h,
+            c,
+            depth_full: Arc::new(TensorF::full(
+                &[1, 1, config::IMG_H, config::IMG_W],
+                config::MAX_DEPTH,
+            )),
+            pose_prev: None,
+            frames_done: 0,
+        })
+    }
+
+    /// Reset the per-sequence state (new video stream).
+    pub fn reset_stream(&mut self) {
+        let (h5, w5) = config::level_hw(5);
+        self.h =
+            QTensor::zeros(&[1, config::CL_CH, h5, w5], self.qp.aexp("cl.hnew"));
+        self.c =
+            QTensor::zeros(&[1, config::CL_CH, h5, w5], self.qp.aexp("cl.cnew"));
+        self.depth_full = Arc::new(TensorF::full(
+            &[1, 1, config::IMG_H, config::IMG_W],
+            config::MAX_DEPTH,
+        ));
+        self.pose_prev = None;
+        self.kb = KeyframeBuffer::new();
+    }
+
+    pub fn take_extern_stats(&self) -> ExternStats {
+        self.link.take_stats()
+    }
+
+    pub fn frames_done(&self) -> usize {
+        self.frames_done
+    }
+
+    // --- helpers -----------------------------------------------------------
+
+    /// Run one HW segment, recording it in the profile.
+    fn run_hw(
+        &self,
+        seg: &str,
+        label: &'static str,
+        inputs: &[&QTensor],
+        prof: &mut Profiler,
+    ) -> Result<Vec<QTensor>> {
+        let t0 = prof.now();
+        let out = self.hw.run(seg, inputs)?;
+        prof.record(label, Lane::Hw, t0);
+        Ok(out)
+    }
+
+    /// Synchronous SW op through the extern link, profiled.
+    fn call_sw<T: Send + 'static>(
+        &self,
+        label: &'static str,
+        prof: &mut Profiler,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> T {
+        let (v, a, b) = self.link.post(label, f).wait_timed(&self.link.stats, true);
+        prof.record_span(label, Lane::Sw, prof.rel(a), prof.rel(b));
+        v
+    }
+
+    /// Join a pending SW op. `overlapped` marks latency as hidden.
+    fn join_sw<T: Send + 'static>(
+        &self,
+        label: &'static str,
+        pending: Pending<T>,
+        overlapped: bool,
+        prof: &mut Profiler,
+    ) -> T {
+        let (v, a, b) = pending.wait_timed(&self.link.stats, !overlapped);
+        prof.record_span(label, Lane::Sw, prof.rel(a), prof.rel(b));
+        v
+    }
+
+    /// SW layer norm at an extern boundary (dequant -> LN -> requant).
+    fn sw_layer_norm(
+        &self,
+        ln_name: String,
+        x: &QTensor,
+        out_exp: i32,
+        prof: &mut Profiler,
+    ) -> QTensor {
+        let qp = Arc::clone(&self.qp);
+        let x = x.clone();
+        self.call_sw("layer_norm", prof, move || {
+            let xf = dequantize_tensor(&x);
+            let p = qp.ln(&ln_name);
+            quantize_tensor(&layer_norm(&xf, &p.gamma, &p.beta), out_exp)
+        })
+    }
+
+    // --- the frame step ------------------------------------------------------
+
+    pub fn step(&mut self, img: &TensorF, pose: &Mat4) -> Result<FrameOutput> {
+        self.step_inner(img, pose, false)
+    }
+
+    pub fn step_traced(&mut self, img: &TensorF, pose: &Mat4) -> Result<FrameOutput> {
+        self.step_inner(img, pose, true)
+    }
+
+    fn step_inner(
+        &mut self,
+        img: &TensorF,
+        pose: &Mat4,
+        traced: bool,
+    ) -> Result<FrameOutput> {
+        let mut prof = Profiler::start();
+        let mut trace: Option<HashMap<String, QTensor>> =
+            if traced { Some(HashMap::new()) } else { None };
+        fn tr(trace: &mut Option<HashMap<String, QTensor>>, name: String, t: &QTensor) {
+            if let Some(m) = trace.as_mut() {
+                m.insert(name, t.clone());
+            }
+        }
+
+        // ---- post the overlappable SW tasks (Fig 5) -----------------------
+        let (hc, wc) = config::level_hw(1);
+        let kf: Vec<(Mat4, TensorF)> = self
+            .kb
+            .contents()
+            .iter()
+            .map(|(p, f)| (*p, dequantize_tensor(f)))
+            .collect();
+        let n_kf = kf.len();
+        let pose_c = *pose;
+        // shard CVF preparation over the worker pool (the paper runs the
+        // software side on both A53 cores); each shard covers a
+        // contiguous hypothesis range
+        let shards = self.opts.sw_threads.max(1).min(N_HYPOTHESES);
+        let mut prep_pending: Vec<Pending<Vec<TensorF>>> = if n_kf > 0 {
+            (0..shards)
+                .map(|s| {
+                    let kf = kf.clone();
+                    let d0 = s * N_HYPOTHESES / shards;
+                    let d1 = (s + 1) * N_HYPOTHESES / shards;
+                    self.link.post("cvf_prep", move || {
+                        sw::cvf_prepare_range(&kf, &pose_c, hc, wc, d0, d1)
+                    })
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        let mut corr_pending: Option<Pending<QTensor>> = Some({
+            let h_prev = self.h.clone();
+            let depth_prev = Arc::clone(&self.depth_full);
+            let pose_prev = self.pose_prev;
+            let pose_c = *pose;
+            let e_hcorr = self.qp.aexp("cl.hcorr");
+            self.link.post("hidden_corr", move || {
+                let hf = dequantize_tensor(&h_prev);
+                let corrected = match pose_prev {
+                    Some(pp) => sw::correct_hidden(&hf, &pp, &pose_c, &depth_prev),
+                    None => hf,
+                };
+                quantize_tensor(&corrected, e_hcorr)
+            })
+        });
+
+        // ablation: no task-level parallelism — join both tasks up front,
+        // fully serialising SW before HW (the pre-optimization baseline)
+        let mut prep_ready: Option<Vec<TensorF>> = None;
+        let mut corr_ready: Option<QTensor> = None;
+        if !self.opts.overlap {
+            if !prep_pending.is_empty() {
+                let mut warps = Vec::new();
+                for p in prep_pending.drain(..) {
+                    warps.extend(self.join_sw("cvf_prep", p, false, &mut prof));
+                }
+                prep_ready = Some(warps);
+            }
+            if let Some(p) = corr_pending.take() {
+                corr_ready = Some(self.join_sw("hidden_corr", p, false, &mut prof));
+            }
+        }
+
+        // ---- image quantization (input DMA analog) ------------------------
+        let t0 = prof.now();
+        let img_q = quantize_tensor(img, self.qp.aexp("image"));
+        prof.record("img_quant", Lane::Sw, t0);
+        tr(&mut trace, "image_q".into(), &img_q);
+
+        // ---- HW: FE + FS (CVF prep runs on the CPU meanwhile) --------------
+        let feats = self.run_hw("fe_fs", "fe_fs", &[&img_q], &mut prof)?;
+        for (i, f) in feats.iter().enumerate() {
+            tr(&mut trace, format!("feat{i}_q"), f);
+        }
+        let f_half = feats[0].clone();
+
+        // ---- extern: feature out, cost volume in (CVF finish) --------------
+        let warps = match prep_ready.take() {
+            Some(v) => Some(v),
+            None if !prep_pending.is_empty() => {
+                let mut warps = Vec::new();
+                for p in prep_pending.drain(..) {
+                    warps.extend(self.join_sw("cvf_prep", p, true, &mut prof));
+                }
+                Some(warps)
+            }
+            None => None,
+        };
+        let e_cost = self.qp.aexp("cvf.cost");
+        let cost_q = match warps {
+            Some(warps) => {
+                let f_half_c = f_half.clone();
+                self.call_sw("cvf_finish", &mut prof, move || {
+                    let ff = dequantize_tensor(&f_half_c);
+                    quantize_tensor(&sw::cvf_finish(&ff, &warps, n_kf), e_cost)
+                })
+            }
+            None => QTensor::zeros(&[1, N_HYPOTHESES, hc, wc], e_cost),
+        };
+        tr(&mut trace, "cost_q".into(), &cost_q);
+
+        // ---- HW: CVE (hidden-state correction still in flight) -------------
+        let enc = self.run_hw(
+            "cve",
+            "cve",
+            &[&cost_q, &feats[1], &feats[2], &feats[3], &feats[4]],
+            &mut prof,
+        )?;
+        tr(&mut trace, "e4_q".into(), &enc[4]);
+
+        // ---- join the corrected hidden state (must precede CL) -------------
+        let h_corr = match corr_ready.take() {
+            Some(v) => v,
+            None => {
+                let p = corr_pending.take().unwrap();
+                self.join_sw("hidden_corr", p, true, &mut prof)
+            }
+        };
+        tr(&mut trace, "hcorr_q".into(), &h_corr);
+
+        // ---- ConvLSTM: HW gate conv / SW LN ping-pong -----------------------
+        let gates =
+            self.run_hw("cl_gates", "cl_gates", &[&enc[4], &h_corr], &mut prof)?;
+        tr(&mut trace, "gates_q".into(), &gates[0]);
+        let gates_ln = self.sw_layer_norm(
+            "cl.ln_gates".into(),
+            &gates[0],
+            self.qp.aexp("cl.ln_gates"),
+            &mut prof,
+        );
+        let cl_state =
+            self.run_hw("cl_state", "cl_state", &[&gates_ln, &self.c], &mut prof)?;
+        let (c_new, o_gate) = (cl_state[0].clone(), cl_state[1].clone());
+        tr(&mut trace, "cnew_q".into(), &c_new);
+        let ln_c = self.sw_layer_norm(
+            "cl.ln_cell".into(),
+            &c_new,
+            self.qp.aexp("cl.ln_cell"),
+            &mut prof,
+        );
+        let h_new = self.run_hw("cl_out", "cl_out", &[&ln_c, &o_gate], &mut prof)?;
+        let h_new = h_new.into_iter().next().unwrap();
+        tr(&mut trace, "hnew_q".into(), &h_new);
+
+        // ---- decoder: HW conv segments / SW LNs + bilinear upsamples --------
+        let mut feat_q: Option<QTensor> = None; // post-LN carry
+        let mut d_q: Option<QTensor> = None; // head sigmoid
+        for b in 0..5 {
+            let seg_entry = format!("cvd_b{b}_entry");
+            let mut x = if b == 0 {
+                self.run_hw(&seg_entry, "cvd_entry", &[&h_new, &enc[4]], &mut prof)?
+            } else {
+                // SW: bilinear upsample carry feature + coarse depth
+                let carry = feat_q.take().unwrap();
+                let head = d_q.take().unwrap();
+                let e_upd = self.qp.aexp(&format!("cvd.b{b}.upd"));
+                let (upf_q, upd_q) =
+                    self.call_sw("cvd_upsample", &mut prof, move || {
+                        let upf = upsample_bilinear2x(&dequantize_tensor(&carry));
+                        let upd = upsample_bilinear2x(&dequantize_tensor(&head));
+                        (
+                            quantize_tensor(&upf, carry.exp),
+                            quantize_tensor(&upd, e_upd),
+                        )
+                    });
+                self.run_hw(
+                    &seg_entry,
+                    "cvd_entry",
+                    &[&upf_q, &enc[4 - b], &upd_q],
+                    &mut prof,
+                )?
+            }
+            .into_iter()
+            .next()
+            .unwrap();
+            for i in 1..CVD_BODY_K3[b] {
+                let x_ln = self.sw_layer_norm(
+                    format!("cvd.b{b}.ln{}", i - 1),
+                    &x,
+                    self.qp.aexp(&format!("cvd.b{b}.ln{}", i - 1)),
+                    &mut prof,
+                );
+                x = self
+                    .run_hw(&format!("cvd_b{b}_mid{i}"), "cvd_mid", &[&x_ln], &mut prof)?
+                    .into_iter()
+                    .next()
+                    .unwrap();
+            }
+            let x_ln = self.sw_layer_norm(
+                cvd_carry_name(b),
+                &x,
+                self.qp.aexp(&cvd_carry_name(b)),
+                &mut prof,
+            );
+            let head = self
+                .run_hw(&format!("cvd_b{b}_head"), "cvd_head", &[&x_ln], &mut prof)?
+                .into_iter()
+                .next()
+                .unwrap();
+            tr(&mut trace, format!("head{b}_q"), &head);
+            d_q = Some(head);
+            feat_q = Some(x_ln);
+        }
+
+        // ---- SW: final upsample + depth un-normalisation ---------------------
+        let head = d_q.unwrap();
+        let depth = self.call_sw("depth_out", &mut prof, move || {
+            sw::depth_from_head(&dequantize_tensor(&head))
+        });
+
+        // ---- KB insertion + state update (SW bookkeeping) --------------------
+        let t0 = prof.now();
+        self.kb.maybe_insert(*pose, f_half);
+        prof.record("kb_update", Lane::Sw, t0);
+        self.h = h_new;
+        self.c = c_new;
+        self.depth_full = Arc::new(depth.clone());
+        self.pose_prev = Some(*pose);
+        self.frames_done += 1;
+
+        Ok(FrameOutput { depth, profile: prof.finish(), trace })
+    }
+}

@@ -1,0 +1,235 @@
+//! Stage-level profiler — the data behind the Fig-5 pipeline chart and
+//! the latency-hiding accounting ("93% of the CVF latency is hidden").
+
+use std::time::Instant;
+
+/// Which engine executed a stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    Hw,
+    Sw,
+}
+
+/// One executed stage, with times relative to the frame start.
+#[derive(Clone, Debug)]
+pub struct StageRecord {
+    pub name: &'static str,
+    pub lane: Lane,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl StageRecord {
+    pub fn duration(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Per-frame profile.
+#[derive(Clone, Debug, Default)]
+pub struct FrameProfile {
+    pub stages: Vec<StageRecord>,
+    pub total_s: f64,
+}
+
+impl FrameProfile {
+    /// Sum of HW-lane stage durations.
+    pub fn hw_busy(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.lane == Lane::Hw)
+            .map(|s| s.duration())
+            .sum()
+    }
+
+    /// Sum of SW-lane stage durations.
+    pub fn sw_busy(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.lane == Lane::Sw)
+            .map(|s| s.duration())
+            .sum()
+    }
+
+    /// Seconds of SW work overlapped with HW work (computed by interval
+    /// intersection): the paper's hidden latency.
+    pub fn overlapped_sw(&self) -> f64 {
+        let hw: Vec<(f64, f64)> = self
+            .stages
+            .iter()
+            .filter(|s| s.lane == Lane::Hw)
+            .map(|s| (s.start_s, s.end_s))
+            .collect();
+        self.stages
+            .iter()
+            .filter(|s| s.lane == Lane::Sw)
+            .map(|s| {
+                hw.iter()
+                    .map(|&(a, b)| (s.end_s.min(b) - s.start_s.max(a)).max(0.0))
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// Fraction of a named SW stage hidden behind HW stages.
+    pub fn hidden_fraction(&self, name: &str) -> f64 {
+        let hw: Vec<(f64, f64)> = self
+            .stages
+            .iter()
+            .filter(|s| s.lane == Lane::Hw)
+            .map(|s| (s.start_s, s.end_s))
+            .collect();
+        let mut total = 0.0;
+        let mut hidden = 0.0;
+        for s in self.stages.iter().filter(|s| s.name == name) {
+            total += s.duration();
+            hidden += hw
+                .iter()
+                .map(|&(a, b)| (s.end_s.min(b) - s.start_s.max(a)).max(0.0))
+                .sum::<f64>();
+        }
+        if total > 0.0 { hidden / total } else { 0.0 }
+    }
+
+    /// ASCII pipeline chart (the Fig-5 rendering).
+    pub fn chart(&self, width: usize) -> String {
+        let mut out = String::new();
+        let t = self.total_s.max(1e-9);
+        out.push_str(&format!(
+            "frame total {:8.3} ms   (HW busy {:.3} ms, SW busy {:.3} ms, \
+             SW hidden {:.3} ms)\n",
+            t * 1e3,
+            self.hw_busy() * 1e3,
+            self.sw_busy() * 1e3,
+            self.overlapped_sw() * 1e3
+        ));
+        for s in &self.stages {
+            let a = ((s.start_s / t) * width as f64) as usize;
+            let b = (((s.end_s / t) * width as f64) as usize).max(a + 1);
+            let lane = match s.lane {
+                Lane::Hw => "PL ",
+                Lane::Sw => "CPU",
+            };
+            let mut bar = vec![b' '; width.max(b)];
+            for c in bar.iter_mut().take(b).skip(a) {
+                *c = if s.lane == Lane::Hw { b'#' } else { b'=' };
+            }
+            out.push_str(&format!(
+                "{lane} |{}| {:<16} {:7.3} ms\n",
+                String::from_utf8_lossy(&bar[..width]),
+                s.name,
+                s.duration() * 1e3
+            ));
+        }
+        out
+    }
+}
+
+/// Builder used by the pipeline while a frame executes.
+pub struct Profiler {
+    origin: Instant,
+    stages: Vec<StageRecord>,
+}
+
+impl Profiler {
+    pub fn start() -> Self {
+        Profiler { origin: Instant::now(), stages: Vec::new() }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    /// Convert an absolute instant (e.g. a worker-side timestamp) into
+    /// frame-relative seconds.
+    pub fn rel(&self, t: Instant) -> f64 {
+        t.checked_duration_since(self.origin)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    /// Record a stage that ran from `start_s` (obtained via `now()`) to
+    /// the present.
+    pub fn record(&mut self, name: &'static str, lane: Lane, start_s: f64) {
+        let end = self.now();
+        self.stages.push(StageRecord { name, lane, start_s, end_s: end });
+    }
+
+    /// Record with explicit interval (for SW jobs timed by the worker).
+    pub fn record_span(
+        &mut self,
+        name: &'static str,
+        lane: Lane,
+        start_s: f64,
+        end_s: f64,
+    ) {
+        self.stages.push(StageRecord { name, lane, start_s, end_s });
+    }
+
+    pub fn finish(mut self) -> FrameProfile {
+        let total = self.now();
+        self.stages.sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap());
+        FrameProfile { stages: self.stages, total_s: total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(stages: &[(&'static str, Lane, f64, f64)], total: f64) -> FrameProfile {
+        FrameProfile {
+            stages: stages
+                .iter()
+                .map(|&(name, lane, a, b)| StageRecord {
+                    name,
+                    lane,
+                    start_s: a,
+                    end_s: b,
+                })
+                .collect(),
+            total_s: total,
+        }
+    }
+
+    #[test]
+    fn overlap_accounting() {
+        // HW 0..10, SW 2..6 fully overlapped; SW 9..12 partially (1s)
+        let p = mk(
+            &[
+                ("fe_fs", Lane::Hw, 0.0, 10.0),
+                ("cvf_prep", Lane::Sw, 2.0, 6.0),
+                ("cvf_finish", Lane::Sw, 9.0, 12.0),
+            ],
+            12.0,
+        );
+        assert!((p.overlapped_sw() - 5.0).abs() < 1e-12);
+        assert!((p.hidden_fraction("cvf_prep") - 1.0).abs() < 1e-12);
+        assert!((p.hidden_fraction("cvf_finish") - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(p.hidden_fraction("absent"), 0.0);
+    }
+
+    #[test]
+    fn chart_renders_every_stage() {
+        let p = mk(
+            &[("a", Lane::Hw, 0.0, 0.5), ("b", Lane::Sw, 0.25, 1.0)],
+            1.0,
+        );
+        let c = p.chart(40);
+        assert!(c.contains("PL "));
+        assert!(c.contains("CPU"));
+        assert!(c.contains('#') && c.contains('='));
+    }
+
+    #[test]
+    fn profiler_produces_sorted_records() {
+        let mut pr = Profiler::start();
+        let t0 = pr.now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        pr.record("x", Lane::Hw, t0);
+        pr.record_span("y", Lane::Sw, 0.0, 0.001);
+        let fp = pr.finish();
+        assert_eq!(fp.stages[0].name, "y");
+        assert!(fp.total_s >= fp.stages[1].end_s);
+    }
+}

@@ -1,0 +1,188 @@
+//! Parser for `artifacts/manifest.txt` — the segment catalogue + exponent
+//! tables emitted by `python/compile/aot.py` (plain-text twin of
+//! manifest.json).
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One tensor crossing a HW-segment boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub exp: i32,
+}
+
+impl TensorDesc {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One HW segment: an AOT-compiled HLO artifact with typed I/O.
+#[derive(Clone, Debug)]
+pub struct SegmentDesc {
+    pub name: String,
+    pub hlo: String,
+    pub inputs: Vec<TensorDesc>,
+    pub outputs: Vec<TensorDesc>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub segments: Vec<SegmentDesc>,
+    pub aexp: HashMap<String, i32>,
+    pub conv_in_exp: HashMap<String, i32>,
+    pub sigmoid_exp: i32,
+    pub elu_exp: i32,
+    pub train_steps: usize,
+    pub train_final_loss: f64,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        let mut cur: Option<SegmentDesc> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.is_empty() {
+                continue;
+            }
+            let fail = || format!("manifest line {}: '{line}'", lineno + 1);
+            match toks[0] {
+                "img" | "depth" => {} // geometry is compiled into config.rs
+                "quant" => {
+                    let v: i32 = toks[2].parse().with_context(fail)?;
+                    match toks[1] {
+                        "sigmoid_exp" => m.sigmoid_exp = v,
+                        "elu_exp" => m.elu_exp = v,
+                        _ => bail!("unknown quant key {}", toks[1]),
+                    }
+                }
+                "train" => {
+                    m.train_steps = toks[1].parse().with_context(fail)?;
+                    m.train_final_loss = toks[2].parse().with_context(fail)?;
+                }
+                "aexp" => {
+                    m.aexp.insert(
+                        toks[1].to_string(),
+                        toks[2].parse().with_context(fail)?,
+                    );
+                }
+                "inexp" => {
+                    m.conv_in_exp.insert(
+                        toks[1].to_string(),
+                        toks[2].parse().with_context(fail)?,
+                    );
+                }
+                "seg" => {
+                    if let Some(s) = cur.take() {
+                        m.segments.push(s);
+                    }
+                    cur = Some(SegmentDesc {
+                        name: toks[1].to_string(),
+                        hlo: toks[2].to_string(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                "in" | "out" => {
+                    let seg = cur.as_mut().context("io line before seg")?;
+                    let shape: Vec<usize> = toks[2]
+                        .split(',')
+                        .map(|d| d.parse().map_err(anyhow::Error::from))
+                        .collect::<Result<_>>()
+                        .with_context(fail)?;
+                    let desc = TensorDesc {
+                        name: toks[1].to_string(),
+                        shape,
+                        exp: toks[3].parse().with_context(fail)?,
+                    };
+                    if toks[0] == "in" {
+                        seg.inputs.push(desc);
+                    } else {
+                        seg.outputs.push(desc);
+                    }
+                }
+                other => bail!("unknown manifest directive '{other}'"),
+            }
+        }
+        if let Some(s) = cur.take() {
+            m.segments.push(s);
+        }
+        if m.segments.is_empty() {
+            bail!("manifest has no segments");
+        }
+        Ok(m)
+    }
+
+    pub fn segment(&self, name: &str) -> Result<&SegmentDesc> {
+        self.segments
+            .iter()
+            .find(|s| s.name == name)
+            .with_context(|| format!("segment '{name}' not in manifest"))
+    }
+
+    pub fn aexp(&self, name: &str) -> Result<i32> {
+        self.aexp
+            .get(name)
+            .copied()
+            .with_context(|| format!("activation exponent '{name}' missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+img 64 96 60.0 60.0 48.0 32.0
+depth 0.3 8.0 64
+quant sigmoid_exp 14
+quant elu_exp 13
+train 240 0.009427
+aexp image 13
+aexp cvf.cost 7
+inexp fe.stem 13
+seg fe_fs fe_fs.hlo.txt
+in image_q 1,3,64,96 13
+out feat0_q 1,16,32,48 8
+out feat1_q 1,16,16,24 9
+seg cve cve.hlo.txt
+in cost_q 1,64,32,48 7
+out e0_q 1,32,32,48 6
+";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.segments.len(), 2);
+        assert_eq!(m.sigmoid_exp, 14);
+        assert_eq!(m.elu_exp, 13);
+        assert_eq!(m.train_steps, 240);
+        assert_eq!(m.aexp("image").unwrap(), 13);
+        let fe = m.segment("fe_fs").unwrap();
+        assert_eq!(fe.inputs[0].shape, vec![1, 3, 64, 96]);
+        assert_eq!(fe.outputs.len(), 2);
+        assert_eq!(fe.outputs[1].exp, 9);
+        assert_eq!(fe.inputs[0].numel(), 3 * 64 * 96);
+        assert!(m.segment("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line\n").is_err());
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("in x 1,2 3\n").is_err()); // io before seg
+    }
+}

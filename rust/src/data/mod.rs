@@ -1,0 +1,10 @@
+//! Artifact I/O: TLV tensor containers, the synthetic dataset, and the
+//! segment manifest emitted by `python/compile/aot.py`.
+
+pub mod dataset;
+pub mod manifest;
+pub mod tlv;
+
+pub use dataset::{Dataset, Scene};
+pub use manifest::{Manifest, SegmentDesc, TensorDesc};
+pub use tlv::{TlvEntry, TlvFile, TlvPayload};

@@ -1,0 +1,235 @@
+//! TLV tensor container — the binary interchange written by
+//! `aot.write_tlv`:
+//!
+//! ```text
+//! [u32 count] then per entry:
+//! [u16 name_len][name][u8 dtype][i8 exp][u8 ndim][u32 dims...][payload]
+//! ```
+//!
+//! dtypes: 0 = f32, 1 = i8, 2 = i16, 3 = i32. Little-endian throughout.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub enum TlvPayload {
+    F32(Tensor<f32>),
+    I8(Tensor<i8>),
+    I16(Tensor<i16>),
+    I32(Tensor<i32>),
+}
+
+#[derive(Clone, Debug)]
+pub struct TlvEntry {
+    pub exp: i32,
+    pub payload: TlvPayload,
+}
+
+impl TlvEntry {
+    pub fn as_f32(&self) -> Result<&Tensor<f32>> {
+        match &self.payload {
+            TlvPayload::F32(t) => Ok(t),
+            other => bail!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&Tensor<i8>> {
+        match &self.payload {
+            TlvPayload::I8(t) => Ok(t),
+            other => bail!("expected i8 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn as_i16(&self) -> Result<&Tensor<i16>> {
+        match &self.payload {
+            TlvPayload::I16(t) => Ok(t),
+            other => bail!("expected i16 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&Tensor<i32>> {
+        match &self.payload {
+            TlvPayload::I32(t) => Ok(t),
+            other => bail!("expected i32 tensor, got {other:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct TlvFile {
+    pub entries: HashMap<String, TlvEntry>,
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("TLV truncated at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+fn payload<T: Copy + Default>(
+    raw: &[u8],
+    shape: &[usize],
+    from_le: impl Fn(&[u8]) -> T,
+    width: usize,
+) -> Tensor<T> {
+    let n: usize = shape.iter().product();
+    let mut data = Vec::with_capacity(n);
+    for i in 0..n {
+        data.push(from_le(&raw[i * width..(i + 1) * width]));
+    }
+    Tensor::from_vec(shape, data)
+}
+
+impl TlvFile {
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut r = Reader { buf: &buf, pos: 0 };
+        let count = r.u32()? as usize;
+        let mut entries = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+            let dtype = r.u8()?;
+            let exp = r.u8()? as i8 as i32;
+            let ndim = r.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let payload = match dtype {
+                0 => TlvPayload::F32(payload(
+                    r.take(n * 4)?,
+                    &shape,
+                    |b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]),
+                    4,
+                )),
+                1 => TlvPayload::I8(payload(
+                    r.take(n)?,
+                    &shape,
+                    |b| b[0] as i8,
+                    1,
+                )),
+                2 => TlvPayload::I16(payload(
+                    r.take(n * 2)?,
+                    &shape,
+                    |b| i16::from_le_bytes([b[0], b[1]]),
+                    2,
+                )),
+                3 => TlvPayload::I32(payload(
+                    r.take(n * 4)?,
+                    &shape,
+                    |b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]),
+                    4,
+                )),
+                d => bail!("unknown TLV dtype {d} for entry {name}"),
+            };
+            entries.insert(name, TlvEntry { exp, payload });
+        }
+        Ok(TlvFile { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TlvEntry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("TLV entry '{name}' missing"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&Tensor<f32>> {
+        self.get(name)?.as_f32()
+    }
+
+    pub fn i16(&self, name: &str) -> Result<&Tensor<i16>> {
+        self.get(name)?.as_i16()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_tlv(path: &Path) {
+        // one f32 (2,2) entry "a" exp 0; one i16 (3,) entry "b" exp 7
+        let mut f = fs::File::create(path).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"a").unwrap();
+        f.write_all(&[0u8, 0u8, 2u8]).unwrap(); // f32, exp 0, ndim 2
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"b").unwrap();
+        f.write_all(&[2u8, 7u8, 1u8]).unwrap(); // i16, exp 7, ndim 1
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        for v in [-5i16, 0, 5] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("fadec_tlv_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        write_test_tlv(&p);
+        let tlv = TlvFile::load(&p).unwrap();
+        let a = tlv.f32("a").unwrap();
+        assert_eq!(a.shape(), &[2, 2]);
+        assert_eq!(a.data(), &[1.0, 2.0, 3.0, 4.0]);
+        let b = tlv.get("b").unwrap();
+        assert_eq!(b.exp, 7);
+        assert_eq!(b.as_i16().unwrap().data(), &[-5, 0, 5]);
+        assert!(tlv.get("missing").is_err());
+    }
+
+    #[test]
+    fn negative_exponent_sign_extends() {
+        let dir = std::env::temp_dir().join("fadec_tlv_test2");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let mut f = fs::File::create(&p).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"x").unwrap();
+        f.write_all(&[2u8, (-3i8) as u8, 1u8]).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&7i16.to_le_bytes()).unwrap();
+        drop(f);
+        let tlv = TlvFile::load(&p).unwrap();
+        assert_eq!(tlv.get("x").unwrap().exp, -3);
+    }
+}

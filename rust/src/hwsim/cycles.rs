@@ -1,0 +1,389 @@
+//! Cycle/time model: PL stage latencies from the parallelism degrees,
+//! CPU software latencies from per-op-class costs, and the Fig-5
+//! makespan that combines them into the modeled Table II.
+
+use std::collections::BTreeMap;
+
+use crate::codesign::conv_out_shapes;
+use crate::config::{
+    self, CVD_BODY_K3, CL_CH, FPN_CH, IMG_H, IMG_W, N_HYPOTHESES,
+    N_KEYFRAMES,
+};
+use crate::model::specs::{self, ConvSpec};
+
+/// PL configuration (paper §IV defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct HwConfig {
+    pub clock_mhz: f64,
+    pub par_conv_ich: u64,
+    pub par_conv_och: u64,
+    pub par_conv_och_k5: u64,
+    pub par_elemwise: u64,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig {
+            clock_mhz: config::CLOCK_MHZ,
+            par_conv_ich: config::PAR_CONV_ICH,
+            par_conv_och: config::PAR_CONV_OCH,
+            par_conv_och_k5: config::PAR_CONV_OCH_K5,
+            par_elemwise: config::PAR_ELEMWISE,
+        }
+    }
+}
+
+/// CPU model: A53-class cores (paper: 2 usable cores on the ZCU104).
+///
+/// The per-MAC costs are calibrated against Table II's measured CPU rows
+/// (16.744 s float / 13.248 s PTQ on the authors' model): scalar -O3
+/// float convolution on the A53 lands near 48 cycles/MAC once cache
+/// behaviour is included; the integer path saves ~26%.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuModel {
+    pub clock_hz: f64,
+    pub threads: usize,
+    pub cycles_per_mac_f32: f64,
+    pub cycles_per_mac_int: f64,
+    pub cycles_per_grid_sample_elem: f64,
+    pub cycles_per_bilinear_elem: f64,
+    pub cycles_per_ln_elem: f64,
+    pub cycles_per_elemwise: f64,
+    pub cycles_per_requant: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        CpuModel {
+            clock_hz: 1.2e9,
+            threads: config::SW_THREADS,
+            cycles_per_mac_f32: 48.0,
+            cycles_per_mac_int: 38.0,
+            // NEON-vectorised 4-tap bilinear gather (paper §III-C lists
+            // multithreading + memory-layout optimisation for the SW side)
+            cycles_per_grid_sample_elem: 6.0,
+            cycles_per_bilinear_elem: 8.0,
+            cycles_per_ln_elem: 10.0,
+            cycles_per_elemwise: 4.0,
+            cycles_per_requant: 3.0,
+        }
+    }
+}
+
+/// Extern crossing cost (paper §IV-A: 4.7 ms total ≈ 1.69% — our pipeline
+/// makes ~25 crossings per frame).
+pub const EXTERN_OVERHEAD_S: f64 = 0.0002;
+
+/// Number of synchronous extern crossings per frame in the Fig-5 schedule:
+/// cvf_finish + 2 CL layer norms + per-CVD-block (upsample for b>=1,
+/// mid-LNs, final LN) + depth out.
+pub fn extern_crossings() -> usize {
+    let cvd: usize = (0..5)
+        .map(|b| (CVD_BODY_K3[b] - 1) + 1 + usize::from(b >= 1))
+        .sum();
+    1 + 2 + cvd + 1
+}
+
+/// One modeled pipeline stage.
+#[derive(Clone, Debug)]
+pub struct StageTime {
+    pub name: String,
+    pub seconds: f64,
+    pub on_pl: bool,
+}
+
+/// The full per-frame model.
+pub struct PipelineModel {
+    pub hw: HwConfig,
+    pub cpu: CpuModel,
+    conv_macs: BTreeMap<String, u64>,
+    conv_cycles: BTreeMap<String, u64>,
+}
+
+impl PipelineModel {
+    pub fn new(hw: HwConfig, cpu: CpuModel) -> Self {
+        let shapes = conv_out_shapes();
+        let mut conv_macs = BTreeMap::new();
+        let mut conv_cycles = BTreeMap::new();
+        for s in specs::all_conv_specs() {
+            let (ho, wo) = shapes[&s.name];
+            conv_macs.insert(s.name.clone(), conv_mac_count(&s, ho, wo));
+            conv_cycles.insert(s.name.clone(), conv_pl_cycles(&s, ho, wo, &hw));
+        }
+        PipelineModel { hw, cpu, conv_macs, conv_cycles }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(HwConfig::default(), CpuModel::default())
+    }
+
+    fn pl_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.hw.clock_mhz * 1e6)
+    }
+
+    fn cpu_seconds(&self, cycles: f64, threads: usize) -> f64 {
+        cycles / (self.cpu.clock_hz * threads.max(1) as f64)
+    }
+
+    /// PL time of a process prefix ("fe"/"fs"/"cve"/"cl"/"cvd") — convs
+    /// plus the folded element-wise stream (element-wise ops fold into
+    /// the pipelines, adding N/par cycles each).
+    fn pl_process_seconds(&self, prefix: &str) -> f64 {
+        let cycles: u64 = self
+            .conv_cycles
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(_, c)| *c)
+            .sum();
+        self.pl_seconds(cycles)
+    }
+
+    /// Modeled per-stage times of the hybrid (Fig 5) frame.
+    pub fn hybrid_stages(&self, n_kf: usize) -> Vec<StageTime> {
+        let (h1, w1) = config::level_hw(1);
+        let (h5, w5) = config::level_hw(5);
+        let feat_elems = (FPN_CH * h1 * w1) as f64;
+        let cpu = &self.cpu;
+
+        let mut st = Vec::new();
+        let pl = |name: &str, s: f64, v: &mut Vec<StageTime>| {
+            v.push(StageTime { name: name.into(), seconds: s, on_pl: true })
+        };
+
+        // --- SW: CVF preparation (overlappable): grid generation (pose
+        // math per pixel per hypothesis) + grid sampling of the features
+        let warp_elems =
+            (N_HYPOTHESES * n_kf) as f64 * feat_elems;
+        let grid_px = (N_HYPOTHESES * n_kf * h1 * w1) as f64;
+        let cvf_prep = self.cpu_seconds(
+            warp_elems * cpu.cycles_per_grid_sample_elem + grid_px * 8.0,
+            cpu.threads,
+        );
+        st.push(StageTime { name: "cvf_prep".into(), seconds: cvf_prep, on_pl: false });
+        // --- SW: hidden-state correction (overlappable) -------------------
+        let corr = self.cpu_seconds(
+            (CL_CH * h5 * w5) as f64 * cpu.cycles_per_grid_sample_elem
+                + (h5 * w5) as f64 * cpu.cycles_per_bilinear_elem,
+            cpu.threads,
+        );
+        st.push(StageTime { name: "hidden_corr".into(), seconds: corr, on_pl: false });
+
+        pl("fe_fs", self.pl_process_seconds("fe") + self.pl_process_seconds("fs"), &mut st);
+
+        // --- SW: CVF finish (synchronous) ---------------------------------
+        let finish_elems = (N_HYPOTHESES * FPN_CH * h1 * w1) as f64;
+        let cvf_finish = self.cpu_seconds(
+            finish_elems * cpu.cycles_per_elemwise
+                + (N_HYPOTHESES * h1 * w1) as f64 * cpu.cycles_per_requant,
+            cpu.threads,
+        );
+        st.push(StageTime { name: "cvf_finish".into(), seconds: cvf_finish, on_pl: false });
+
+        pl("cve", self.pl_process_seconds("cve"), &mut st);
+        pl("cl", self.pl_process_seconds("cl"), &mut st);
+
+        // SW layer norms (CL x2 + CVD x9) — synchronous externs
+        let mut ln = 0.0;
+        ln += self.cpu_seconds(
+            (4 * CL_CH * h5 * w5) as f64 * cpu.cycles_per_ln_elem,
+            cpu.threads,
+        );
+        ln += self.cpu_seconds(
+            (CL_CH * h5 * w5) as f64 * cpu.cycles_per_ln_elem,
+            cpu.threads,
+        );
+        for b in 0..5usize {
+            let (h, w) = config::level_hw(5 - b);
+            ln += CVD_BODY_K3[b] as f64
+                * self.cpu_seconds(
+                    (config::CVD_CH[b] * h * w) as f64 * cpu.cycles_per_ln_elem,
+                    cpu.threads,
+                );
+        }
+        st.push(StageTime { name: "layer_norms".into(), seconds: ln, on_pl: false });
+
+        pl("cvd", self.pl_process_seconds("cvd"), &mut st);
+
+        // SW bilinear upsamples (CVD) + final depth
+        let mut ups = 0.0;
+        for b in 1..5usize {
+            let (h, w) = config::level_hw(5 - b);
+            ups += self.cpu_seconds(
+                ((config::CVD_CH[b - 1] + 1) * h * w) as f64
+                    * cpu.cycles_per_bilinear_elem,
+                cpu.threads,
+            );
+        }
+        ups += self.cpu_seconds(
+            (IMG_H * IMG_W) as f64 * cpu.cycles_per_bilinear_elem,
+            cpu.threads,
+        );
+        st.push(StageTime { name: "upsamples".into(), seconds: ups, on_pl: false });
+
+        st.push(StageTime {
+            name: "extern".into(),
+            seconds: extern_crossings() as f64 * EXTERN_OVERHEAD_S,
+            on_pl: false,
+        });
+        st
+    }
+
+    /// Modeled hybrid frame time: Fig-5 makespan — cvf_prep and
+    /// hidden_corr hide behind PL stages; everything else serializes.
+    pub fn hybrid_frame_seconds(&self, n_kf: usize) -> f64 {
+        let st = self.hybrid_stages(n_kf);
+        let get = |n: &str| st.iter().find(|s| s.name == n).unwrap().seconds;
+        let fe_fs = get("fe_fs");
+        let cve = get("cve");
+        let prep_visible = (get("cvf_prep") - fe_fs).max(0.0);
+        let corr_visible = (get("hidden_corr") - (fe_fs + cve)).max(0.0);
+        fe_fs
+            + prep_visible
+            + get("cvf_finish")
+            + cve
+            + corr_visible
+            + get("cl")
+            + get("layer_norms")
+            + get("cvd")
+            + get("upsamples")
+            + get("extern")
+    }
+
+    /// Fraction of CVF (prep + finish) hidden behind PL execution.
+    pub fn cvf_hidden_fraction(&self, n_kf: usize) -> f64 {
+        let st = self.hybrid_stages(n_kf);
+        let get = |n: &str| st.iter().find(|s| s.name == n).unwrap().seconds;
+        let prep = get("cvf_prep");
+        let finish = get("cvf_finish");
+        let hidden = prep.min(get("fe_fs"));
+        hidden / (prep + finish)
+    }
+
+    /// Modeled CPU-only frame time (float or PTQ-int).
+    pub fn cpu_only_frame_seconds(&self, quantized: bool) -> f64 {
+        let cpu = &self.cpu;
+        let mac_cost = if quantized {
+            cpu.cycles_per_mac_int
+        } else {
+            cpu.cycles_per_mac_f32
+        };
+        let total_macs: u64 = self.conv_macs.values().sum();
+        // the paper's C++ baseline is single-threaded
+        let conv = self.cpu_seconds(total_macs as f64 * mac_cost, 1);
+        // software ops run regardless (single-threaded too)
+        let (h1, w1) = config::level_hw(1);
+        let sw = self.cpu_seconds(
+            (N_HYPOTHESES * N_KEYFRAMES * FPN_CH * h1 * w1) as f64
+                * cpu.cycles_per_grid_sample_elem
+                + (N_HYPOTHESES * FPN_CH * h1 * w1) as f64 * cpu.cycles_per_elemwise,
+            1,
+        );
+        conv + sw
+    }
+}
+
+/// MAC count of one conv.
+fn conv_mac_count(s: &ConvSpec, ho: usize, wo: usize) -> u64 {
+    let per_out = (if s.dw { 1 } else { s.cin }) * s.k * s.k;
+    (s.cout * ho * wo * per_out) as u64
+}
+
+/// PL cycles of one conv under the parallelism config: the pipeline
+/// iterates output pixels x ceil(OC/par_och) x ceil(IC/par_ich) x k^2
+/// (dw: channels/par_elemwise x k^2).
+fn conv_pl_cycles(s: &ConvSpec, ho: usize, wo: usize, hw: &HwConfig) -> u64 {
+    let ceil = |a: u64, b: u64| a.div_ceil(b);
+    if s.dw {
+        ceil(s.cout as u64, hw.par_elemwise)
+            * (s.k * s.k * ho * wo) as u64
+    } else {
+        let poch = if s.k == 5 { hw.par_conv_och_k5 } else { hw.par_conv_och };
+        ceil(s.cout as u64, poch)
+            * ceil(s.cin as u64, hw.par_conv_ich)
+            * (s.k * s.k * ho * wo) as u64
+    }
+}
+
+/// Modeled Table II.
+pub struct TableIIModel {
+    pub cpu_only_s: f64,
+    pub cpu_ptq_s: f64,
+    pub hybrid_s: f64,
+    pub speedup: f64,
+    pub clock_mhz: f64,
+}
+
+impl TableIIModel {
+    pub fn compute() -> Self {
+        let m = PipelineModel::with_defaults();
+        let cpu_only = m.cpu_only_frame_seconds(false);
+        let cpu_ptq = m.cpu_only_frame_seconds(true);
+        let hybrid = m.hybrid_frame_seconds(N_KEYFRAMES);
+        TableIIModel {
+            cpu_only_s: cpu_only,
+            cpu_ptq_s: cpu_ptq,
+            hybrid_s: hybrid,
+            speedup: cpu_only / hybrid,
+            clock_mhz: m.hw.clock_mhz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_speedup_matches_paper_shape() {
+        let t = TableIIModel::compute();
+        // paper: 16.744 s -> 0.278 s = 60.2x. The model must land in the
+        // same regime (tens of x), with the same ordering.
+        assert!(t.cpu_only_s > t.cpu_ptq_s, "PTQ should be faster");
+        assert!(t.cpu_ptq_s > t.hybrid_s, "hybrid should win");
+        assert!(
+            t.speedup > 30.0 && t.speedup < 120.0,
+            "speedup {} out of the paper's regime (60.2x)",
+            t.speedup
+        );
+    }
+
+    #[test]
+    fn cvf_mostly_hidden() {
+        let m = PipelineModel::with_defaults();
+        let f = m.cvf_hidden_fraction(N_KEYFRAMES);
+        // paper hides 93% of CVF (their prep:finish split is more
+        // prep-heavy and their FE/FS PL window wider); same shape: the
+        // majority of CVF vanishes behind FE/FS
+        assert!(f > 0.55, "CVF hidden fraction {f} too low");
+    }
+
+    #[test]
+    fn more_parallelism_fewer_cycles() {
+        let base = PipelineModel::with_defaults();
+        let mut hw2 = HwConfig::default();
+        hw2.par_conv_och *= 2;
+        hw2.par_conv_ich *= 2;
+        let big = PipelineModel::new(hw2, CpuModel::default());
+        assert!(
+            big.hybrid_frame_seconds(2) < base.hybrid_frame_seconds(2) * 0.7,
+            "doubling conv parallelism should cut the PL time"
+        );
+    }
+
+    #[test]
+    fn extern_crossings_counted() {
+        // cvf_finish(1) + CL LNs(2) + CVD: b0: 1 mid-LN + 1 final-LN;
+        // b1..b3: ups + mid + final; b4: ups + final; + depth(1)
+        assert_eq!(extern_crossings(), 1 + 2 + (2 + 3 + 3 + 3 + 2) + 1);
+    }
+
+    #[test]
+    fn overhead_share_matches_paper_order() {
+        let m = PipelineModel::with_defaults();
+        let total = m.hybrid_frame_seconds(2);
+        let ovh = extern_crossings() as f64 * EXTERN_OVERHEAD_S;
+        let share = ovh / total;
+        // paper: 1.69%
+        assert!(share > 0.002 && share < 0.08, "share {share}");
+    }
+}

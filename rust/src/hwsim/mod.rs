@@ -1,0 +1,23 @@
+//! ZCU104 hardware model — the NNgen-style cycle + resource estimator
+//! behind the *modeled* column of Table II and all of Table III.
+//!
+//! The host in this reproduction is an x86 CPU, not a Zynq UltraScale+;
+//! measured wall-clock therefore cannot equal the paper's. This module
+//! prices the same design point the paper built (dedicated arithmetic
+//! pipelines per stage type, conv parallelism 2x4 — 2x2 for k=5 —
+//! element-wise parallelism 4, 187.512 MHz, two A53 cores for software)
+//! and reproduces the paper's *shape*: the ~60x end-to-end speedup and
+//! the near-full device utilization.
+//!
+//! Calibration: the per-MAC CPU costs and per-pipeline LUT/FF costs are
+//! calibrated so that the paper's own design point lands on the paper's
+//! measurements (Table II CPU rows, Table III). The model's structure —
+//! costs summed over the pipeline inventory, cycles from the parallelism
+//! degrees — is what makes the co-design ablations (`fadec resources
+//! --par-och 8`, etc.) meaningful.
+
+pub mod cycles;
+pub mod resources;
+
+pub use cycles::{CpuModel, HwConfig, PipelineModel, TableIIModel};
+pub use resources::{ResourceModel, Utilization, ZCU104};

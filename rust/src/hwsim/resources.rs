@@ -1,0 +1,234 @@
+//! Resource model — Table III. Prices the pipeline inventory (one
+//! dedicated arithmetic pipeline per distinct stage type, as in the
+//! paper's Fig. 3 architecture) in Slice/LUT/FF/DSP/BRAM on the
+//! XCZU7EV-2FFVC1156.
+//!
+//! Per-pipeline costs are NNgen-shaped (base + per-lane) and calibrated
+//! so the paper's design point (2x4 conv parallelism, element-wise x4)
+//! reproduces the paper's Vivado report; changing the parallelism then
+//! produces a consistent what-if estimate for the co-design ablations.
+
+use std::collections::BTreeSet;
+
+use crate::config;
+use crate::hwsim::cycles::HwConfig;
+use crate::model::specs;
+
+/// XCZU7EV-2FFVC1156 device capacity (Table III "Available" column).
+pub struct ZCU104;
+
+impl ZCU104 {
+    pub const SLICE: u64 = 28800;
+    pub const LUT: u64 = 230400;
+    pub const FF: u64 = 460800;
+    pub const DSP: u64 = 1728;
+    pub const BRAM: u64 = 312; // 36Kb-equivalent units as the paper counts
+}
+
+/// Paper's Table III (utilization row).
+pub const PAPER_TABLE_III: [(&str, u64); 5] = [
+    ("Slice", 28256),
+    ("LUT", 176377),
+    ("FF", 143072),
+    ("DSP", 128),
+    ("BRAM", 309),
+];
+
+/// Estimated usage.
+#[derive(Clone, Debug, Default)]
+pub struct Utilization {
+    pub slice: u64,
+    pub lut: u64,
+    pub ff: u64,
+    pub dsp: u64,
+    pub bram: u64,
+}
+
+impl Utilization {
+    pub fn rows(&self) -> [(&'static str, u64, u64); 5] {
+        [
+            ("Slice", self.slice, ZCU104::SLICE),
+            ("LUT", self.lut, ZCU104::LUT),
+            ("FF", self.ff, ZCU104::FF),
+            ("DSP", self.dsp, ZCU104::DSP),
+            ("BRAM", self.bram, ZCU104::BRAM),
+        ]
+    }
+}
+
+/// The resource estimator.
+pub struct ResourceModel {
+    pub hw: HwConfig,
+}
+
+impl ResourceModel {
+    pub fn new(hw: HwConfig) -> Self {
+        ResourceModel { hw }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(HwConfig::default())
+    }
+
+    /// Distinct dense / depthwise pipeline types ((k, stride) pairs) in
+    /// the model — the paper reuses one pipeline per stage type (Fig. 3).
+    pub fn pipeline_inventory(&self) -> (BTreeSet<(usize, usize)>, BTreeSet<(usize, usize)>) {
+        let mut dense = BTreeSet::new();
+        let mut dw = BTreeSet::new();
+        for s in specs::all_conv_specs() {
+            if s.dw {
+                dw.insert((s.k, s.stride));
+            } else {
+                dense.insert((s.k, s.stride));
+            }
+        }
+        (dense, dw)
+    }
+
+    /// Weight storage in bits (int8 weights + int32 biases, all resident
+    /// in BRAM as in NNgen's fully on-chip parameter layout).
+    pub fn weight_bits(&self) -> u64 {
+        let mut bits = 0u64;
+        for s in specs::all_conv_specs() {
+            let wn = if s.dw {
+                s.cout * s.k * s.k
+            } else {
+                s.cout * s.cin * s.k * s.k
+            };
+            bits += (wn * 8 + s.cout * 32) as u64;
+        }
+        bits
+    }
+
+    /// Largest intermediate activation (bits) — sized for the ping-pong
+    /// activation buffers.
+    pub fn max_activation_bits(&self) -> u64 {
+        // the cost volume at 1/2 scale is the largest tensor on the PL
+        let (h1, w1) = config::level_hw(1);
+        (config::N_HYPOTHESES * h1 * w1 * 16) as u64
+    }
+
+    /// Largest single layer's parameters (bits) — sizes the on-chip
+    /// weight cache (weights stream from DRAM, double-buffered).
+    pub fn max_weight_layer_bits(&self) -> u64 {
+        specs::all_conv_specs()
+            .iter()
+            .map(|s| {
+                let wn = if s.dw {
+                    s.cout * s.k * s.k
+                } else {
+                    s.cout * s.cin * s.k * s.k
+                };
+                (wn * 8 + s.cout * 32) as u64
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn estimate(&self) -> Utilization {
+        let (dense, dw) = self.pipeline_inventory();
+        let hw = &self.hw;
+        let mut lut = 0u64;
+        let mut ff = 0u64;
+        let mut dsp = 0u64;
+
+        for &(k, _s) in &dense {
+            let poch = if k == 5 { hw.par_conv_och_k5 } else { hw.par_conv_och };
+            let lanes = hw.par_conv_ich * poch;
+            // MAC array + scale/bias lane + accumulator tree
+            dsp += lanes + poch + lanes / 2;
+            lut += 6000 + 2000 * lanes;
+            ff += 5000 + 1500 * lanes;
+        }
+        for &(_k, _s) in &dw {
+            let lanes = hw.par_elemwise;
+            dsp += lanes + lanes / 2;
+            lut += 4000 + 1200 * lanes;
+            ff += 2500 + 1000 * lanes;
+        }
+        // element-wise units (add stream, mul stream) + LUT activations
+        lut += 2 * 800 * hw.par_elemwise;
+        ff += 2 * 600 * hw.par_elemwise;
+        dsp += hw.par_elemwise; // the multiply stream
+        lut += 2 * (1200 + 1024); // sigmoid + ELU tables in LUTRAM
+        ff += 2 * 400;
+        // FSM control + extern/DMA engine + inter-pipeline routing
+        let n_pipelines = (dense.len() + dw.len()) as u64;
+        lut += 15000 + 4000 + 2000 * n_pipelines;
+        ff += 25000 + 6000 + 1000 * n_pipelines;
+
+        // BRAM: weights stream from DRAM (NNgen's layout) with a
+        // double-buffered on-chip cache sized for the largest layer;
+        // activations use in/out/skip buffers sized for the largest map.
+        let bram_bits = 36 * 1024u64; // paper counts 36Kb blocks (312 avail)
+        let mut bram = 2 * self.max_weight_layer_bits().div_ceil(bram_bits);
+        bram += 3 * self.max_activation_bits().div_ceil(bram_bits);
+        for &(k, _) in dense.iter().chain(dw.iter()) {
+            // (k-1) line buffers x max width x 16-bit x input parallelism
+            let bits = ((k - 1) * config::IMG_W * 16) as u64 * hw.par_conv_ich;
+            bram += bits.div_ceil(bram_bits).max(1);
+        }
+        bram += 4; // extern/DMA FIFOs
+
+        // slices from LUT occupancy with a routing/packing factor
+        let slice = ((lut as f64 / 8.0) * 1.281) as u64;
+        Utilization {
+            slice: slice.min(ZCU104::SLICE),
+            lut,
+            ff,
+            dsp,
+            bram,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_point_lands_near_paper_table_iii() {
+        let u = ResourceModel::with_defaults().estimate();
+        let within = |got: u64, paper: u64, tol: f64| {
+            (got as f64 - paper as f64).abs() / paper as f64 <= tol
+        };
+        // shape: slices + BRAM near full, DSP in single-digit %, FF ~1/3
+        assert!(u.slice as f64 / ZCU104::SLICE as f64 > 0.85, "slice {u:?}");
+        assert!(u.bram as f64 / ZCU104::BRAM as f64 > 0.70, "bram {u:?}");
+        assert!((u.dsp as f64 / ZCU104::DSP as f64) < 0.15, "dsp {u:?}");
+        assert!(within(u.lut, 176377, 0.25), "lut {}", u.lut);
+        assert!(within(u.ff, 143072, 0.30), "ff {}", u.ff);
+    }
+
+    #[test]
+    fn everything_fits_the_device() {
+        let u = ResourceModel::with_defaults().estimate();
+        for (name, used, avail) in u.rows() {
+            assert!(used <= avail, "{name}: {used} > {avail}");
+        }
+    }
+
+    #[test]
+    fn parallelism_scales_dsp() {
+        let base = ResourceModel::with_defaults().estimate();
+        let mut hw = HwConfig::default();
+        hw.par_conv_och *= 2;
+        hw.par_conv_ich *= 2;
+        let big = ResourceModel::new(hw).estimate();
+        assert!(big.dsp > base.dsp * 2, "{} vs {}", big.dsp, base.dsp);
+        assert!(big.lut > base.lut);
+    }
+
+    #[test]
+    fn inventory_has_expected_pipeline_types() {
+        let (dense, dw) = ResourceModel::with_defaults().pipeline_inventory();
+        assert_eq!(
+            dense,
+            [(1, 1), (3, 1), (3, 2), (5, 1), (5, 2)].into_iter().collect()
+        );
+        assert_eq!(
+            dw,
+            [(3, 1), (3, 2), (5, 1), (5, 2)].into_iter().collect()
+        );
+    }
+}

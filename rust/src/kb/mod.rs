@@ -1,0 +1,144 @@
+//! Keyframe buffer (paper Fig. 1, §II-B2): stores the FS output feature
+//! together with its camera pose; a frame becomes a keyframe when its
+//! pose moved far enough from the last stored keyframe. CVF consumes the
+//! buffered (feature, pose) pairs.
+//!
+//! Mirrors `python/compile/pipeline.KeyframeBuffer` exactly (policy and
+//! distance metric), which the cross-language tests rely on.
+
+use crate::config::{KB_CAPACITY, KB_MIN_POSE_DIST};
+use crate::poses::{pose_distance, Mat4};
+
+/// Pose-gated ring buffer of (pose, feature).
+#[derive(Clone, Debug)]
+pub struct KeyframeBuffer<F> {
+    capacity: usize,
+    min_dist: f64,
+    entries: Vec<(Mat4, F)>,
+    inserted_total: usize,
+    rejected_total: usize,
+}
+
+impl<F> KeyframeBuffer<F> {
+    pub fn new() -> Self {
+        Self::with_policy(KB_CAPACITY, KB_MIN_POSE_DIST)
+    }
+
+    pub fn with_policy(capacity: usize, min_dist: f64) -> Self {
+        assert!(capacity > 0);
+        KeyframeBuffer {
+            capacity,
+            min_dist,
+            entries: Vec::new(),
+            inserted_total: 0,
+            rejected_total: 0,
+        }
+    }
+
+    /// Insert when the buffer is empty or the pose moved >= `min_dist`
+    /// from the most recent keyframe; evicts the oldest entry.
+    pub fn maybe_insert(&mut self, pose: Mat4, feat: F) -> bool {
+        if let Some((last, _)) = self.entries.last() {
+            if pose_distance(last, &pose) < self.min_dist {
+                self.rejected_total += 1;
+                return false;
+            }
+        }
+        self.entries.push((pose, feat));
+        if self.entries.len() > self.capacity {
+            self.entries.remove(0);
+        }
+        self.inserted_total += 1;
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Buffered (pose, feature) pairs, oldest first.
+    pub fn contents(&self) -> &[(Mat4, F)] {
+        &self.entries
+    }
+
+    pub fn stats(&self) -> (usize, usize) {
+        (self.inserted_total, self.rejected_total)
+    }
+}
+
+impl<F> Default for KeyframeBuffer<F> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pose_at(x: f64) -> Mat4 {
+        let mut p = Mat4::identity();
+        p.0[3] = x;
+        p
+    }
+
+    #[test]
+    fn policy_matches_python_reference() {
+        // same scenario as python/tests/test_model.py::test_kb_policy
+        let mut kb = KeyframeBuffer::with_policy(2, 0.1);
+        assert!(kb.maybe_insert(pose_at(0.0), "f0"));
+        assert!(!kb.maybe_insert(pose_at(0.0), "f1"));
+        assert!(kb.maybe_insert(pose_at(0.2), "f2"));
+        assert!(kb.maybe_insert(pose_at(0.4), "f3"));
+        let feats: Vec<&str> = kb.contents().iter().map(|(_, f)| *f).collect();
+        assert_eq!(feats, ["f2", "f3"]);
+        assert_eq!(kb.stats(), (3, 1));
+    }
+
+    #[test]
+    fn capacity_invariant_under_random_walk() {
+        // property: len <= capacity; last insert always newest
+        let mut rng = crate::util::Rng::new(9);
+        let mut kb = KeyframeBuffer::with_policy(3, 0.05);
+        let mut x = 0.0f64;
+        for i in 0..500 {
+            x += (rng.unit_f32() as f64 - 0.3) * 0.1;
+            let inserted = kb.maybe_insert(pose_at(x), i);
+            assert!(kb.len() <= 3);
+            assert!(!kb.is_empty());
+            if inserted {
+                assert_eq!(kb.contents().last().unwrap().1, i);
+            }
+        }
+        let (ins, rej) = kb.stats();
+        assert_eq!(ins + rej, 500);
+        assert!(ins > 0 && rej > 0, "walk should both insert and reject");
+    }
+
+    #[test]
+    fn consecutive_keyframes_respect_min_dist() {
+        // property: any two *adjacent* stored keyframes are >= min_dist
+        // apart at insertion time (the gating invariant)
+        let mut rng = crate::util::Rng::new(33);
+        let mut kb = KeyframeBuffer::with_policy(4, 0.2);
+        let mut x = 0.0f64;
+        let mut last_inserted: Option<f64> = None;
+        for _ in 0..300 {
+            x += rng.unit_f32() as f64 * 0.15;
+            if kb.maybe_insert(pose_at(x), ()) {
+                if let Some(prev) = last_inserted {
+                    assert!((x - prev).abs() >= 0.2 - 1e-9);
+                }
+                last_inserted = Some(x);
+            }
+        }
+    }
+}

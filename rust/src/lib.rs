@@ -1,0 +1,33 @@
+//! FADEC — FPGA-style HW/SW co-designed video depth estimation,
+//! reproduced as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Paper: *FADEC: FPGA-based Acceleration of Video Depth Estimation by
+//! HW/SW Co-design* (Hashimoto & Takamaeda-Yamazaki, ICFPT 2022).
+//!
+//! Layer map (see `DESIGN.md`):
+//! * **L3 (this crate)** — the coordinator: the paper's HW/SW scheduling
+//!   contribution (extern protocol, Fig-5 task-level pipeline, keyframe
+//!   buffer, software-friendly operators) plus the CPU-only baselines of
+//!   Table II and the FPGA cycle/resource model behind Tables II/III.
+//! * **L2/L1 (python/, build-time only)** — the DeepVideoMVS compute
+//!   graph in JAX with quantized Pallas kernels, AOT-lowered to the
+//!   `artifacts/*.hlo.txt` executables this crate loads via PJRT.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `fadec` binary is self-contained.
+
+pub mod codesign;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hwsim;
+pub mod kb;
+pub mod metrics;
+pub mod model;
+pub mod ops;
+pub mod poses;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

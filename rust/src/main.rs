@@ -1,0 +1,17 @@
+//! `fadec` CLI — reproduction driver for every table and figure.
+//!
+//! Subcommands (see README):
+//!   analyze        Table I op census + Fig 2 multiplication shares
+//!   resources      Table III hardware resource model
+//!   run            run one pipeline over a scene
+//!   eval           Table II + Fig 8 + qualitative depth maps
+//!   pipeline-chart Fig 5 schedule + overlap accounting
+//!   overhead       extern-overhead measurement (paper §IV-A)
+
+fn main() {
+    let args = fadec::util::Args::parse(std::env::args().skip(1));
+    if let Err(e) = fadec::report::cli::dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,77 @@
+//! Evaluation metrics: MSE against ground-truth depth (the paper's
+//! accuracy metric for Figs 6-8) and simple aggregates.
+
+use crate::tensor::TensorF;
+
+/// Mean squared error between two depth maps (metres^2).
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = *x as f64 - *y as f64;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+pub fn mse_tensor(a: &TensorF, b: &TensorF) -> f64 {
+    mse(a.data(), b.data())
+}
+
+/// Mean absolute relative error (a standard depth metric, used in the
+/// extended evaluation).
+pub fn abs_rel(pred: &[f32], gt: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for (p, g) in pred.iter().zip(gt) {
+        if *g > 1e-6 {
+            acc += ((*p - *g).abs() / *g) as f64;
+            n += 1;
+        }
+    }
+    acc / n.max(1) as f64
+}
+
+/// delta < 1.25 accuracy (fraction of pixels within 25% of GT).
+pub fn delta1(pred: &[f32], gt: &[f32]) -> f64 {
+    let mut ok = 0usize;
+    let mut n = 0usize;
+    for (p, g) in pred.iter().zip(gt) {
+        if *g > 1e-6 && *p > 1e-6 {
+            let r = (p / g).max(g / p);
+            if r < 1.25 {
+                ok += 1;
+            }
+            n += 1;
+        }
+    }
+    ok as f64 / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert_eq!(mse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn mse_unit_offset() {
+        let a = [0.0f32, 0.0];
+        let b = [1.0f32, -1.0];
+        assert!((mse(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn abs_rel_and_delta() {
+        let gt = [2.0f32, 4.0];
+        let pred = [2.2f32, 4.0];
+        assert!((abs_rel(&pred, &gt) - 0.05).abs() < 1e-6);
+        assert_eq!(delta1(&pred, &gt), 1.0);
+        let bad = [4.0f32, 1.0];
+        assert_eq!(delta1(&bad, &gt), 0.0);
+    }
+}

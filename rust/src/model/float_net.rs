@@ -1,0 +1,211 @@
+//! Float DeepVideoMVS forward — the "CPU-only" baseline of Table II
+//! (the paper's C++ -O3 implementation). Mirrors `model.step_f`.
+
+use crate::config::{self, CVD_BODY_K3, CVE_BODY_KERNELS, CVE_DOWN_KERNEL, CL_CH};
+use crate::kb::KeyframeBuffer;
+use crate::ops::{
+    conv2d, conv2d_dw, elu_tensor, layer_norm, relu_inplace, sigmoid_tensor,
+    upsample_bilinear2x, upsample_nearest2x,
+};
+use crate::poses::Mat4;
+use crate::tensor::TensorF;
+
+use super::specs::{fe_specs, Act};
+use super::sw;
+use super::weights::FloatParams;
+
+/// Cross-frame state (paper Fig. 1 bold dotted arrows).
+pub struct FloatState {
+    pub h: TensorF,
+    pub c: TensorF,
+    pub depth_full: TensorF,
+    pub pose_prev: Option<Mat4>,
+}
+
+impl FloatState {
+    pub fn zero() -> Self {
+        let (h5, w5) = config::level_hw(5);
+        FloatState {
+            h: TensorF::zeros(&[1, CL_CH, h5, w5]),
+            c: TensorF::zeros(&[1, CL_CH, h5, w5]),
+            depth_full: TensorF::full(
+                &[1, 1, config::IMG_H, config::IMG_W],
+                config::MAX_DEPTH,
+            ),
+            pose_prev: None,
+        }
+    }
+}
+
+/// The float model with a resolved spec table (avoids name lookups on the
+/// hot path).
+pub struct FloatModel<'a> {
+    pub params: &'a FloatParams,
+    specs: Vec<super::specs::ConvSpec>,
+}
+
+impl<'a> FloatModel<'a> {
+    pub fn new(params: &'a FloatParams) -> Self {
+        FloatModel { params, specs: super::specs::all_conv_specs() }
+    }
+
+    fn conv(&self, name: &str, x: &TensorF) -> TensorF {
+        let spec = self
+            .specs
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("unknown conv '{name}'"));
+        let c = self.params.conv(name);
+        let mut y = if spec.dw {
+            conv2d_dw(x, &c.w, &c.b, spec.stride)
+        } else {
+            conv2d(x, &c.w, &c.b, spec.stride)
+        };
+        let (_, oc, _, _) = y.nchw();
+        let hw = y.len() / oc;
+        {
+            let d = y.data_mut();
+            for ch in 0..oc {
+                let g = c.gamma[ch] * c.s;
+                let b = c.beta[ch] * c.s;
+                for v in &mut d[ch * hw..(ch + 1) * hw] {
+                    *v = *v * g + b;
+                }
+            }
+        }
+        match spec.act {
+            Act::Relu => relu_inplace(&mut y),
+            Act::Sigmoid => y = sigmoid_tensor(&y),
+            Act::None => {}
+        }
+        y
+    }
+
+    /// FE + FS: image -> 5 FPN pyramid features (1/2 .. 1/32).
+    pub fn fe_fs(&self, img: &TensorF) -> Vec<TensorF> {
+        let (_, wiring) = fe_specs();
+        let mut x = self.conv("fe.stem", img);
+        x = self.conv("fe.sep.dw", &x);
+        x = self.conv("fe.sep.pw", &x);
+        let mut taps = vec![x.clone()];
+        let mut wi = 0;
+        for (si, st) in config::FE_STAGES.iter().enumerate() {
+            for _ri in 0..st.repeats {
+                let base = &wiring[wi].base;
+                let inp = x.clone();
+                x = self.conv(&format!("{base}.exp"), &x);
+                x = self.conv(&format!("{base}.dw"), &x);
+                x = self.conv(&format!("{base}.pw"), &x);
+                if wiring[wi].residual {
+                    x = inp.add(&x);
+                }
+                wi += 1;
+            }
+            if config::FE_TAP_STAGES.contains(&(si as isize)) {
+                taps.push(x.clone());
+            }
+        }
+        assert_eq!(taps.len(), 5);
+        let lats: Vec<TensorF> = (0..5)
+            .map(|i| self.conv(&format!("fs.lat{i}"), &taps[i]))
+            .collect();
+        let mut feats: Vec<Option<TensorF>> = vec![None; 5];
+        feats[4] = Some(lats[4].clone());
+        for i in (0..4).rev() {
+            let up = upsample_nearest2x(feats[i + 1].as_ref().unwrap());
+            let s = lats[i].add(&up);
+            feats[i] = Some(self.conv(&format!("fs.smooth{i}"), &s));
+        }
+        feats.into_iter().map(|f| f.unwrap()).collect()
+    }
+
+    /// CVE: cost volume + pyramid features -> encoder outputs e0..e4.
+    pub fn cve(&self, cost: &TensorF, feats: &[TensorF]) -> Vec<TensorF> {
+        let mut outs = Vec::with_capacity(5);
+        let mut x = cost.clone();
+        for lv in 0..5 {
+            if CVE_DOWN_KERNEL[lv].is_some() {
+                x = self.conv(&format!("cve.l{lv}.down"), &x);
+                x = TensorF::concat_channels(&[&x, &feats[lv]]);
+            }
+            for bi in 0..CVE_BODY_KERNELS[lv].len() {
+                x = self.conv(&format!("cve.l{lv}.c{bi}"), &x);
+            }
+            outs.push(x.clone());
+        }
+        outs
+    }
+
+    /// ConvLSTM cell. Returns (h', c').
+    pub fn cl(&self, x: &TensorF, h: &TensorF, c: &TensorF) -> (TensorF, TensorF) {
+        let cat = TensorF::concat_channels(&[x, h]);
+        let gates = self.conv("cl.gates", &cat);
+        let lnp = self.params.ln("cl.ln_gates");
+        let gates = layer_norm(&gates, &lnp.gamma, &lnp.beta);
+        let cc = CL_CH;
+        let gi = sigmoid_tensor(&gates.slice_channels(0, cc));
+        let gf = sigmoid_tensor(&gates.slice_channels(cc, 2 * cc));
+        let gg = elu_tensor(&gates.slice_channels(2 * cc, 3 * cc));
+        let go = sigmoid_tensor(&gates.slice_channels(3 * cc, 4 * cc));
+        let c_new = gf.mul(c).add(&gi.mul(&gg));
+        let lnc = self.params.ln("cl.ln_cell");
+        let ln_c = layer_norm(&c_new, &lnc.gamma, &lnc.beta);
+        let h_new = go.mul(&elu_tensor(&ln_c));
+        (h_new, c_new)
+    }
+
+    /// Decoder: hidden state + encoder skips -> 5 sigmoid heads
+    /// (coarse -> fine); the caller upsamples the last one.
+    pub fn cvd(&self, h: &TensorF, enc: &[TensorF]) -> Vec<TensorF> {
+        let mut heads = Vec::with_capacity(5);
+        let mut feat: Option<TensorF> = None;
+        let mut d: Option<TensorF> = None;
+        for b in 0..5 {
+            let x0 = if b == 0 {
+                TensorF::concat_channels(&[h, &enc[4]])
+            } else {
+                let upf = upsample_bilinear2x(feat.as_ref().unwrap());
+                let upd = upsample_bilinear2x(d.as_ref().unwrap());
+                TensorF::concat_channels(&[&upf, &enc[4 - b], &upd])
+            };
+            let mut x = self.conv(&format!("cvd.b{b}.c3e"), &x0);
+            for i in 0..CVD_BODY_K3[b] {
+                x = self.conv(&super::specs::cvd_body_name(b, i), &x);
+                let lnp = self.params.ln(&format!("cvd.b{b}.ln{i}"));
+                x = layer_norm(&x, &lnp.gamma, &lnp.beta);
+            }
+            feat = Some(x.clone());
+            let head = self.conv(&format!("cvd.b{b}.head"), &x);
+            d = Some(head.clone());
+            heads.push(head);
+        }
+        heads
+    }
+
+    /// One full frame (the CPU-only baseline step). Returns (metric depth
+    /// (1,1,H,W), 1/2-scale feature for the KB).
+    pub fn step(
+        &self,
+        img: &TensorF,
+        pose: &Mat4,
+        kb: &KeyframeBuffer<TensorF>,
+        state: &mut FloatState,
+    ) -> (TensorF, TensorF) {
+        let feats = self.fe_fs(img);
+        let f_half = feats[0].clone();
+        let cost = sw::cost_volume(&f_half, kb.contents(), pose);
+        let enc = self.cve(&cost, &feats);
+        let h_in = match &state.pose_prev {
+            Some(pp) => sw::correct_hidden(&state.h, pp, pose, &state.depth_full),
+            None => state.h.clone(),
+        };
+        let (h_new, c_new) = self.cl(&enc[4], &h_in, &state.c);
+        let heads = self.cvd(&h_new, &enc);
+        let depth = sw::depth_from_head(heads.last().unwrap());
+        state.h = h_new;
+        state.c = c_new;
+        state.depth_full = depth.clone();
+        state.pose_prev = Some(*pose);
+        (depth, f_half)
+    }
+}

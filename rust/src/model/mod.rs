@@ -1,0 +1,13 @@
+//! The DeepVideoMVS model in Rust: graph specs (Table-I topology), weight
+//! containers, the float CPU-only baseline, the quantized CPU-PTQ
+//! baseline, and the shared software ops (CVF, hidden-state correction).
+
+pub mod float_net;
+pub mod quant_net;
+pub mod specs;
+pub mod sw;
+pub mod weights;
+
+pub use float_net::{FloatModel, FloatState};
+pub use quant_net::{QuantModel, QuantState};
+pub use weights::{FloatParams, QuantParams};

@@ -1,0 +1,332 @@
+//! Quantized DeepVideoMVS forward — the "CPU-only (w/ PTQ)" baseline of
+//! Table II, and the bit-exact Rust mirror of the hybrid pipeline's HW
+//! segments (same integer semantics as the Pallas kernels inside the
+//! AOT artifacts; pinned against the python goldens).
+//!
+//! The segment functions here have the *same* boundaries as the HLO
+//! artifacts (`seg_*` in model.py), so the coordinator can swap any
+//! segment between "execute the artifact on PJRT" and "run the Rust
+//! mirror" — which is also how the extern-overhead ablation works.
+
+use crate::config::{
+    self, CVD_BODY_K3, CVE_BODY_KERNELS, CVE_DOWN_KERNEL, CL_CH,
+    SIGMOID_OUT_EXP,
+};
+use crate::kb::KeyframeBuffer;
+use crate::ops::{
+    conv2d_dw_q, conv2d_q, layer_norm, upsample_bilinear2x,
+    upsample_nearest2x_i16,
+};
+use crate::poses::Mat4;
+use crate::quant::{
+    add_q, concat_q, dequantize_tensor, mul_q, quantize_tensor, QTensor,
+};
+use crate::tensor::TensorF;
+
+use super::specs::{cvd_carry_name, cve_out_name, fe_specs};
+use super::sw;
+use super::weights::QuantParams;
+
+/// Quantized conv block via the shared integer semantics.
+pub fn qconv(qp: &QuantParams, name: &str, x: &QTensor, out_exp: i32,
+             relu: bool, dw: bool, stride: usize) -> QTensor {
+    let c = qp.conv(name);
+    debug_assert_eq!(
+        c.e_in, x.exp,
+        "conv '{name}': input exponent {} != traced {}", x.exp, c.e_in
+    );
+    let r = x.exp + c.e_w + c.e_s - out_exp;
+    if dw {
+        conv2d_dw_q(x, &c.w, &c.b, stride, c.s_q, r, relu, out_exp)
+    } else {
+        conv2d_q(x, &c.w, &c.b, stride, c.s_q, r, relu, out_exp)
+    }
+}
+
+/// The SW layer-norm op at an extern boundary: dequant -> float LN ->
+/// requant (paper: LN stays on the CPU in float for precision).
+pub fn ln_sw(qp: &QuantParams, name: &str, x: &QTensor, out_exp: i32) -> QTensor {
+    let xf = dequantize_tensor(x);
+    let p = qp.ln(name);
+    let y = layer_norm(&xf, &p.gamma, &p.beta);
+    quantize_tensor(&y, out_exp)
+}
+
+/// Quantized model with resolved specs.
+pub struct QuantModel<'a> {
+    pub qp: &'a QuantParams,
+    specs: Vec<super::specs::ConvSpec>,
+}
+
+/// Cross-frame state of the quantized pipeline.
+pub struct QuantState {
+    pub h: QTensor,
+    pub c: QTensor,
+    pub depth_full: TensorF,
+    pub pose_prev: Option<Mat4>,
+}
+
+impl QuantState {
+    pub fn zero(qp: &QuantParams) -> Self {
+        let (h5, w5) = config::level_hw(5);
+        QuantState {
+            h: QTensor::zeros(&[1, CL_CH, h5, w5], qp.aexp("cl.hnew")),
+            c: QTensor::zeros(&[1, CL_CH, h5, w5], qp.aexp("cl.cnew")),
+            depth_full: TensorF::full(
+                &[1, 1, config::IMG_H, config::IMG_W],
+                config::MAX_DEPTH,
+            ),
+            pose_prev: None,
+        }
+    }
+}
+
+impl<'a> QuantModel<'a> {
+    pub fn new(qp: &'a QuantParams) -> Self {
+        QuantModel { qp, specs: super::specs::all_conv_specs() }
+    }
+
+    fn conv(&self, name: &str, x: &QTensor) -> QTensor {
+        let spec = self
+            .specs
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("unknown conv '{name}'"));
+        let relu = spec.act == super::specs::Act::Relu;
+        qconv(self.qp, name, x, self.qp.aexp(name), relu, spec.dw, spec.stride)
+    }
+
+    fn conv_to(&self, name: &str, x: &QTensor, out_exp: i32) -> QTensor {
+        let spec = self.specs.iter().find(|s| s.name == name).unwrap();
+        qconv(self.qp, name, x, out_exp, false, spec.dw, spec.stride)
+    }
+
+    /// Quantize a normalised image to the calibrated input exponent.
+    pub fn quantize_image(&self, img: &TensorF) -> QTensor {
+        quantize_tensor(img, self.qp.aexp("image"))
+    }
+
+    // --- HW segment mirrors (same boundaries as the HLO artifacts) -------
+
+    /// Segment `fe_fs`: image -> 5 pyramid features.
+    pub fn seg_fe_fs(&self, img_q: &QTensor) -> Vec<QTensor> {
+        let (_, wiring) = fe_specs();
+        let mut x = self.conv("fe.stem", img_q);
+        x = self.conv("fe.sep.dw", &x);
+        x = self.conv("fe.sep.pw", &x);
+        let mut taps = vec![x.clone()];
+        let mut wi = 0;
+        for (si, st) in config::FE_STAGES.iter().enumerate() {
+            for _ri in 0..st.repeats {
+                let base = wiring[wi].base.clone();
+                let inp = x.clone();
+                x = self.conv(&format!("{base}.exp"), &x);
+                x = self.conv(&format!("{base}.dw"), &x);
+                x = self.conv(&format!("{base}.pw"), &x);
+                if wiring[wi].residual {
+                    x = add_q(&inp, &x, self.qp.aexp(&format!("{base}.addout")));
+                }
+                wi += 1;
+            }
+            if config::FE_TAP_STAGES.contains(&(si as isize)) {
+                taps.push(x.clone());
+            }
+        }
+        let lats: Vec<QTensor> = (0..5)
+            .map(|i| self.conv(&format!("fs.lat{i}"), &taps[i]))
+            .collect();
+        let mut feats: Vec<Option<QTensor>> = vec![None; 5];
+        feats[4] = Some(lats[4].clone());
+        for i in (0..4).rev() {
+            let prev = feats[i + 1].as_ref().unwrap();
+            let up = QTensor {
+                t: upsample_nearest2x_i16(&prev.t),
+                exp: prev.exp,
+            };
+            let s = add_q(&up, &lats[i], self.qp.aexp(&format!("fs.add{i}")));
+            feats[i] = Some(self.conv(&format!("fs.smooth{i}"), &s));
+        }
+        feats.into_iter().map(|f| f.unwrap()).collect()
+    }
+
+    /// Segment `cve`: cost volume + pyramid features (f1..f4, i.e. the
+    /// 1/4..1/32 levels) -> e0..e4.
+    pub fn seg_cve(&self, cost_q: &QTensor, feats: &[QTensor]) -> Vec<QTensor> {
+        assert_eq!(feats.len(), 4, "seg_cve expects f1..f4");
+        let mut outs = Vec::with_capacity(5);
+        let mut x = cost_q.clone();
+        for lv in 0..5 {
+            if CVE_DOWN_KERNEL[lv].is_some() {
+                x = self.conv(&format!("cve.l{lv}.down"), &x);
+                x = concat_q(&[&x, &feats[lv - 1]], self.qp.aexp(&format!("cve.l{lv}.cat")));
+            }
+            for bi in 0..CVE_BODY_KERNELS[lv].len() {
+                x = self.conv(&format!("cve.l{lv}.c{bi}"), &x);
+            }
+            outs.push(x.clone());
+        }
+        outs
+    }
+
+    /// Segment `cl_gates`: concat(e4, corrected hidden) -> gate conv.
+    pub fn seg_cl_gates(&self, e4: &QTensor, h_corr: &QTensor) -> QTensor {
+        let cat = concat_q(&[e4, h_corr], self.qp.aexp("cl.cat"));
+        self.conv("cl.gates", &cat)
+    }
+
+    /// Segment `cl_state`: post-LN gates + cell -> (c_new, o_gate).
+    pub fn seg_cl_state(&self, gates_ln: &QTensor, c: &QTensor) -> (QTensor, QTensor) {
+        let cc = CL_CH;
+        let sl: Vec<QTensor> = (0..4)
+            .map(|i| QTensor {
+                t: gates_ln.t.slice_channels(i * cc, (i + 1) * cc),
+                exp: gates_ln.exp,
+            })
+            .collect();
+        let gi = self.qp.lut_sigmoid.apply(&sl[0]);
+        let gf = self.qp.lut_sigmoid.apply(&sl[1]);
+        let gg = self.qp.lut_elu.apply(&sl[2]);
+        let go = self.qp.lut_sigmoid.apply(&sl[3]);
+        let e_c = self.qp.aexp("cl.cnew");
+        let fc = mul_q(&gf, c, e_c);
+        let ig = mul_q(&gi, &gg, e_c);
+        (add_q(&fc, &ig, e_c), go)
+    }
+
+    /// Segment `cl_out`: ELU(LN(c')) * o -> h'.
+    pub fn seg_cl_out(&self, ln_c: &QTensor, o: &QTensor) -> QTensor {
+        let elu_c = self.qp.lut_elu.apply(ln_c);
+        mul_q(o, &elu_c, self.qp.aexp("cl.hnew"))
+    }
+
+    /// Segment `cvd_b{b}_entry`: concat -> conv3 entry -> conv5 (pre-LN).
+    pub fn seg_cvd_entry(&self, b: usize, parts: &[&QTensor]) -> QTensor {
+        let cat = concat_q(parts, self.qp.aexp(&format!("cvd.b{b}.cat")));
+        let x = self.conv(&format!("cvd.b{b}.c3e"), &cat);
+        self.conv(&format!("cvd.b{b}.c5"), &x)
+    }
+
+    /// Segment `cvd_b{b}_mid{i}`: post-LN conv3_i (i >= 1).
+    pub fn seg_cvd_mid(&self, b: usize, i: usize, x_ln: &QTensor) -> QTensor {
+        self.conv(&format!("cvd.b{b}.c3_{i}"), x_ln)
+    }
+
+    /// Segment `cvd_b{b}_head`: conv3 -> LUT sigmoid.
+    pub fn seg_cvd_head(&self, b: usize, x_ln: &QTensor) -> QTensor {
+        let pre = self.conv_to(
+            &format!("cvd.b{b}.head"),
+            x_ln,
+            self.qp.aexp(&format!("cvd.b{b}.head.pre")),
+        );
+        self.qp.lut_sigmoid.apply(&pre)
+    }
+
+    // --- full CPU-PTQ frame step (Table II row 2) --------------------------
+
+    /// One full frame, everything on the CPU with integer convs + float
+    /// software ops — semantically identical to `hybrid_step` in python.
+    pub fn step(
+        &self,
+        img: &TensorF,
+        pose: &Mat4,
+        kb: &KeyframeBuffer<QTensor>,
+        st: &mut QuantState,
+    ) -> (TensorF, QTensor) {
+        let img_q = self.quantize_image(img);
+        let feats = self.seg_fe_fs(&img_q);
+        let f_half = feats[0].clone();
+
+        // CVF in float (software op)
+        let kf_float: Vec<(Mat4, TensorF)> = kb
+            .contents()
+            .iter()
+            .map(|(p, f)| (*p, dequantize_tensor(f)))
+            .collect();
+        let cost = sw::cost_volume(&dequantize_tensor(&f_half), &kf_float, pose);
+        let cost_q = quantize_tensor(&cost, self.qp.aexp("cvf.cost"));
+
+        let enc = self.seg_cve(&cost_q, &feats[1..]);
+
+        // hidden-state correction (software op, float)
+        let h_corr_f = match &st.pose_prev {
+            Some(pp) => sw::correct_hidden(
+                &dequantize_tensor(&st.h),
+                pp,
+                pose,
+                &st.depth_full,
+            ),
+            None => dequantize_tensor(&st.h),
+        };
+        let h_corr = quantize_tensor(&h_corr_f, self.qp.aexp("cl.hcorr"));
+
+        // ConvLSTM with SW layer norms
+        let gates = self.seg_cl_gates(&enc[4], &h_corr);
+        let gates_ln = ln_sw(self.qp, "cl.ln_gates", &gates,
+                             self.qp.aexp("cl.ln_gates"));
+        let (c_new, o_gate) = self.seg_cl_state(&gates_ln, &st.c);
+        let ln_c = ln_sw(self.qp, "cl.ln_cell", &c_new,
+                         self.qp.aexp("cl.ln_cell"));
+        let h_new = self.seg_cl_out(&ln_c, &o_gate);
+
+        // decoder: HW conv segments / SW LNs + bilinear ups
+        let mut feat_q: Option<QTensor> = None;
+        let mut d_q: Option<QTensor> = None;
+        for b in 0..5 {
+            let mut x = if b == 0 {
+                self.seg_cvd_entry(0, &[&h_new, &enc[4]])
+            } else {
+                let carry = feat_q.as_ref().unwrap();
+                let upf = upsample_bilinear2x(&dequantize_tensor(carry));
+                let upd = upsample_bilinear2x(&dequantize_tensor(
+                    d_q.as_ref().unwrap(),
+                ));
+                let upf_q = quantize_tensor(&upf, carry.exp);
+                let upd_q =
+                    quantize_tensor(&upd, self.qp.aexp(&format!("cvd.b{b}.upd")));
+                self.seg_cvd_entry(b, &[&upf_q, &enc[4 - b], &upd_q])
+            };
+            for i in 1..CVD_BODY_K3[b] {
+                let x_ln = ln_sw(
+                    self.qp,
+                    &format!("cvd.b{b}.ln{}", i - 1),
+                    &x,
+                    self.qp.aexp(&format!("cvd.b{b}.ln{}", i - 1)),
+                );
+                x = self.seg_cvd_mid(b, i, &x_ln);
+            }
+            let last = CVD_BODY_K3[b] - 1;
+            let x_ln = ln_sw(
+                self.qp,
+                &format!("cvd.b{b}.ln{last}"),
+                &x,
+                self.qp.aexp(&cvd_carry_name(b)),
+            );
+            d_q = Some(self.seg_cvd_head(b, &x_ln));
+            feat_q = Some(x_ln);
+        }
+
+        // final SW: bilinear upsample + depth un-normalisation
+        let head = d_q.unwrap();
+        debug_assert_eq!(head.exp, SIGMOID_OUT_EXP);
+        let depth = sw::depth_from_head(&dequantize_tensor(&head));
+
+        st.h = h_new;
+        st.c = c_new;
+        st.depth_full = depth.clone();
+        st.pose_prev = Some(*pose);
+        (depth, f_half)
+    }
+}
+
+/// Convenience: the e4 skip index — `seg_cve` returns e0..e4; callers use
+/// `cve_out_name` exponents when crossing extern boundaries.
+pub fn e4_exp(qp: &QuantParams) -> i32 {
+    qp.aexp(&cve_out_name(4))
+}
+
+#[cfg(test)]
+mod tests {
+    // quant-net correctness is pinned by rust/tests/golden.rs against the
+    // python hybrid traces (requires artifacts); unit-level integer
+    // semantics are covered in ops::conv and quant.
+}

@@ -1,0 +1,255 @@
+//! Graph description — the Rust mirror of `model.py`'s ConvSpec registry.
+//! The census over these specs reproduces Table I of the paper exactly
+//! (pinned by `codesign::census` tests).
+
+use crate::config::{
+    CVD_BODY_K3, CVD_CH, CVE_BODY_KERNELS, CVE_CH, CVE_DOWN_KERNEL, CL_CH,
+    FE_STAGES, FE_STEM_CH, FE_TAP_CHANNELS, FE_TAP_STAGES, FPN_CH,
+    N_HYPOTHESES,
+};
+
+/// Activation fused after a conv block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Sigmoid,
+}
+
+/// One convolution block: conv (+folded affine) -> scalar gain -> act.
+#[derive(Clone, Debug)]
+pub struct ConvSpec {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub dw: bool,
+    pub act: Act,
+}
+
+impl ConvSpec {
+    fn new(name: &str, cin: usize, cout: usize, k: usize, stride: usize) -> Self {
+        ConvSpec {
+            name: name.to_string(),
+            cin,
+            cout,
+            k,
+            stride,
+            dw: false,
+            act: Act::None,
+        }
+    }
+
+    fn relu(mut self) -> Self {
+        self.act = Act::Relu;
+        self
+    }
+
+    fn sigmoid(mut self) -> Self {
+        self.act = Act::Sigmoid;
+        self
+    }
+
+    fn depthwise(mut self) -> Self {
+        self.dw = true;
+        self
+    }
+}
+
+/// MBConv block wiring (residual adds of the FE).
+#[derive(Clone, Debug)]
+pub struct MbWiring {
+    pub base: String,
+    pub stage: usize,
+    pub residual: bool,
+}
+
+/// FE = MnasNet-b1 skeleton. Returns (conv specs, block wiring).
+pub fn fe_specs() -> (Vec<ConvSpec>, Vec<MbWiring>) {
+    let mut specs = vec![
+        ConvSpec::new("fe.stem", 3, FE_STEM_CH, 3, 2).relu(),
+        ConvSpec::new("fe.sep.dw", FE_STEM_CH, FE_STEM_CH, 3, 1)
+            .depthwise()
+            .relu(),
+        ConvSpec::new("fe.sep.pw", FE_STEM_CH, FE_STEM_CH, 1, 1),
+    ];
+    let mut wiring = Vec::new();
+    let mut cin = FE_STEM_CH;
+    for (si, st) in FE_STAGES.iter().enumerate() {
+        for ri in 0..st.repeats {
+            let stride = if ri == 0 { st.stride } else { 1 };
+            let exp_ch = cin * st.expand;
+            let base = format!("fe.s{si}.b{ri}");
+            specs.push(ConvSpec::new(&format!("{base}.exp"), cin, exp_ch, 1, 1).relu());
+            specs.push(
+                ConvSpec::new(&format!("{base}.dw"), exp_ch, exp_ch, st.kernel, stride)
+                    .depthwise()
+                    .relu(),
+            );
+            specs.push(ConvSpec::new(&format!("{base}.pw"), exp_ch, st.out_ch, 1, 1));
+            wiring.push(MbWiring {
+                base,
+                stage: si,
+                // no residual on the first block of a stage (MnasNet-b1)
+                residual: ri > 0 && stride == 1 && cin == st.out_ch,
+            });
+            cin = st.out_ch;
+        }
+    }
+    (specs, wiring)
+}
+
+/// FS = FPN laterals + smoothing convs (no activations — Table I).
+pub fn fs_specs() -> Vec<ConvSpec> {
+    let mut specs: Vec<ConvSpec> = (0..5)
+        .map(|i| ConvSpec::new(&format!("fs.lat{i}"), FE_TAP_CHANNELS[i], FPN_CH, 1, 1))
+        .collect();
+    for i in 0..4 {
+        specs.push(ConvSpec::new(&format!("fs.smooth{i}"), FPN_CH, FPN_CH, 3, 1));
+    }
+    specs
+}
+
+/// CVE = U-Net encoder over the cost volume.
+pub fn cve_specs() -> Vec<ConvSpec> {
+    let mut specs = Vec::new();
+    let mut cin = N_HYPOTHESES;
+    for lv in 0..5 {
+        let ch = CVE_CH[lv];
+        if let Some(dk) = CVE_DOWN_KERNEL[lv] {
+            specs.push(ConvSpec::new(&format!("cve.l{lv}.down"), cin, ch, dk, 2).relu());
+            cin = ch + FPN_CH; // concat pyramid feature
+        }
+        for (bi, &bk) in CVE_BODY_KERNELS[lv].iter().enumerate() {
+            specs.push(ConvSpec::new(&format!("cve.l{lv}.c{bi}"), cin, ch, bk, 1).relu());
+            cin = ch;
+        }
+    }
+    specs
+}
+
+/// CL = ConvLSTM gate conv.
+pub fn cl_specs() -> Vec<ConvSpec> {
+    vec![ConvSpec::new("cl.gates", 2 * CL_CH, 4 * CL_CH, 3, 1)]
+}
+
+/// CVD = decoder with 5 depth heads. Block: conv3 entry (cin->ch) ->
+/// conv5 (ch->ch) + LN -> (K3-1) x [conv3 + LN] -> conv3 head.
+pub fn cvd_specs() -> Vec<ConvSpec> {
+    let mut specs = Vec::new();
+    for b in 0..5 {
+        let ch = CVD_CH[b];
+        let cin = if b == 0 {
+            CL_CH + CVE_CH[4]
+        } else {
+            CVD_CH[b - 1] + CVE_CH[4 - b] + 1 // +1: upsampled coarser depth
+        };
+        specs.push(ConvSpec::new(&format!("cvd.b{b}.c3e"), cin, ch, 3, 1).relu());
+        specs.push(ConvSpec::new(&format!("cvd.b{b}.c5"), ch, ch, 5, 1).relu());
+        for i in 1..CVD_BODY_K3[b] {
+            specs.push(ConvSpec::new(&format!("cvd.b{b}.c3_{i}"), ch, ch, 3, 1).relu());
+        }
+        specs.push(ConvSpec::new(&format!("cvd.b{b}.head"), ch, 1, 3, 1).sigmoid());
+    }
+    specs
+}
+
+/// Conv producing the pre-LN tensor of LN site `i` of CVD block `b`.
+pub fn cvd_body_name(b: usize, i: usize) -> String {
+    if i == 0 {
+        format!("cvd.b{b}.c5")
+    } else {
+        format!("cvd.b{b}.c3_{i}")
+    }
+}
+
+pub fn all_conv_specs() -> Vec<ConvSpec> {
+    let (mut specs, _) = fe_specs();
+    specs.extend(fs_specs());
+    specs.extend(cve_specs());
+    specs.extend(cl_specs());
+    specs.extend(cvd_specs());
+    specs
+}
+
+/// Layer-norm sites (run in SW in the hybrid pipeline).
+pub fn ln_names() -> Vec<String> {
+    let mut names = vec!["cl.ln_gates".to_string(), "cl.ln_cell".to_string()];
+    for b in 0..5 {
+        for i in 0..CVD_BODY_K3[b] {
+            names.push(format!("cvd.b{b}.ln{i}"));
+        }
+    }
+    names
+}
+
+pub fn ln_channels(name: &str) -> usize {
+    match name {
+        "cl.ln_gates" => 4 * CL_CH,
+        "cl.ln_cell" => CL_CH,
+        _ => {
+            let b: usize = name
+                .split('.')
+                .nth(1)
+                .and_then(|s| s[1..].parse().ok())
+                .expect("bad LN name");
+            CVD_CH[b]
+        }
+    }
+}
+
+/// Name of the last conv output of a CVE level (the skip tensor).
+pub fn cve_out_name(lv: usize) -> String {
+    format!("cve.l{lv}.c{}", CVE_BODY_KERNELS[lv].len() - 1)
+}
+
+/// The post-LN decoder feature carried from block b to block b+1.
+pub fn cvd_carry_name(b: usize) -> String {
+    format!("cvd.b{b}.ln{}", CVD_BODY_K3[b] - 1)
+}
+
+/// FE pyramid tap points: conv/wiring index after which each tap fires.
+pub fn fe_taps() -> [isize; 5] {
+    FE_TAP_STAGES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_counts_match_python() {
+        let (fe, wiring) = fe_specs();
+        assert_eq!(fe.len(), 3 + 16 * 3);
+        assert_eq!(wiring.len(), 16);
+        assert_eq!(wiring.iter().filter(|w| w.residual).count(), 10);
+        assert_eq!(fs_specs().len(), 9);
+        assert_eq!(cve_specs().len(), 16);
+        assert_eq!(cl_specs().len(), 1);
+        assert_eq!(cvd_specs().len(), 5 + 9 + 5);
+        assert_eq!(all_conv_specs().len(), 51 + 9 + 16 + 1 + 19);
+    }
+
+    #[test]
+    fn channel_chain_is_consistent() {
+        // every conv's cin equals its actual input channel count by
+        // construction; spot-check the concat arithmetic
+        let cve = cve_specs();
+        let l1_c0 = cve.iter().find(|s| s.name == "cve.l1.c0").unwrap();
+        assert_eq!(l1_c0.cin, CVE_CH[1] + FPN_CH);
+        let cvd = cvd_specs();
+        let b1 = cvd.iter().find(|s| s.name == "cvd.b1.c3e").unwrap();
+        assert_eq!(b1.cin, CVD_CH[0] + CVE_CH[3] + 1);
+        let b1c5 = cvd.iter().find(|s| s.name == "cvd.b1.c5").unwrap();
+        assert_eq!(b1c5.cin, CVD_CH[1]);
+    }
+
+    #[test]
+    fn ln_sites_match_table_i() {
+        let names = ln_names();
+        assert_eq!(names.len(), 2 + 9);
+        assert_eq!(ln_channels("cl.ln_gates"), 4 * CL_CH);
+        assert_eq!(ln_channels("cvd.b2.ln1"), CVD_CH[2]);
+    }
+}

@@ -1,0 +1,174 @@
+//! The software-friendly processes (paper §III-A3, §III-C): CVF plane
+//! sweep (grid sampling + cost volume), hidden-state correction, image
+//! normalization and depth un-normalization. Float on the CPU, shared by
+//! the CPU baselines and the hybrid coordinator.
+
+use crate::config::{self, N_HYPOTHESES};
+use crate::ops::{grid_sample, resize_bilinear};
+use crate::poses::{correction_grid, Mat4};
+use crate::tensor::TensorF;
+
+/// CVF: warp every keyframe feature to the current view for each of the
+/// 64 inverse-depth hypotheses, sum over keyframes, dot with the current
+/// feature, average over channels (mirrors `model.cost_volume`).
+///
+/// `kf` = buffered (pose, feature) pairs; features are (1,C,h,w) float.
+pub fn cost_volume(
+    feat_cur: &TensorF,
+    kf: &[(Mat4, TensorF)],
+    pose_cur: &Mat4,
+) -> TensorF {
+    let (_, _, h, w) = feat_cur.nchw();
+    if kf.is_empty() {
+        return TensorF::zeros(&[1, N_HYPOTHESES, h, w]);
+    }
+    let prep = cvf_prepare(kf, pose_cur, h, w);
+    cvf_finish(feat_cur, &prep, kf.len())
+}
+
+/// CVF *preparation* (paper Fig. 5): everything that does not need the
+/// current FS feature — grid generation + grid sampling of the keyframe
+/// features. This is what the coordinator overlaps with FE/FS on the PL.
+///
+/// Returns per-hypothesis keyframe-sum warps: `N_HYPOTHESES` tensors of
+/// (1,C,h,w).
+pub fn cvf_prepare(
+    kf: &[(Mat4, TensorF)],
+    pose_cur: &Mat4,
+    h: usize,
+    w: usize,
+) -> Vec<TensorF> {
+    cvf_prepare_range(kf, pose_cur, h, w, 0, N_HYPOTHESES)
+}
+
+/// CVF preparation restricted to hypotheses [d0, d1) — the unit the
+/// coordinator shards across the CPU worker pool (the paper parallelises
+/// the software side over the board's two cores, §III-C).
+pub fn cvf_prepare_range(
+    kf: &[(Mat4, TensorF)],
+    pose_cur: &Mat4,
+    h: usize,
+    w: usize,
+    d0: usize,
+    d1: usize,
+) -> Vec<TensorF> {
+    let (_, c, _, _) = kf[0].1.nchw();
+    let mut acc: Vec<TensorF> =
+        (d0..d1).map(|_| TensorF::zeros(&[1, c, h, w])).collect();
+    for (pose_kf, feat_kf) in kf {
+        let grids =
+            crate::poses::sweep_grids_range(pose_cur, pose_kf, 1, h, w, d0, d1);
+        for (d, grid) in grids.iter().enumerate() {
+            crate::ops::sample::grid_sample_accumulate(feat_kf, grid, &mut acc[d]);
+        }
+    }
+    acc
+}
+
+/// CVF *finish* (needs the current feature — the extern hand-off point):
+/// cost_d = sum_c(warp_d * feat) / (C * n_kf).
+pub fn cvf_finish(feat_cur: &TensorF, warps: &[TensorF], n_kf: usize) -> TensorF {
+    let (_, c, h, w) = feat_cur.nchw();
+    let mut cost = TensorF::zeros(&[1, N_HYPOTHESES, h, w]);
+    let norm = 1.0 / (c * n_kf.max(1)) as f32;
+    let fd = feat_cur.data();
+    for (d, warp) in warps.iter().enumerate() {
+        let wd = warp.data();
+        let plane = cost.plane_mut(d);
+        for ch in 0..c {
+            let base = ch * h * w;
+            for i in 0..h * w {
+                plane[i] += wd[base + i] * fd[base + i];
+            }
+        }
+        for v in plane.iter_mut() {
+            *v *= norm;
+        }
+    }
+    cost
+}
+
+/// Hidden-state correction: warp h_{t-1} into the current viewpoint using
+/// the previous depth estimate (grid sampling — a software op).
+pub fn correct_hidden(
+    h_prev: &TensorF,
+    pose_prev: &Mat4,
+    pose_cur: &Mat4,
+    depth_prev_full: &TensorF,
+) -> TensorF {
+    let (_, _, h, w) = h_prev.nchw();
+    let grid = correction_grid(pose_prev, pose_cur, depth_prev_full, 5);
+    grid_sample(h_prev, &grid, h, w)
+}
+
+/// Final software stage: upsample the finest sigmoid head to full
+/// resolution and un-normalise to metric depth.
+pub fn depth_from_head(head_half: &TensorF) -> TensorF {
+    let full = resize_bilinear(head_half, config::IMG_H, config::IMG_W);
+    full.map(config::depth_from_sigmoid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn cost_volume_empty_kb_is_zero() {
+        let f = TensorF::full(&[1, 4, 4, 6], 1.0);
+        let cv = cost_volume(&f, &[], &Mat4::identity());
+        assert_eq!(cv.shape(), &[1, N_HYPOTHESES, 4, 6]);
+        assert!(cv.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cost_volume_identity_pose_self_similarity() {
+        // keyframe == current frame at identity pose: every hypothesis
+        // warps to identity, so cost = mean(feat^2) everywhere
+        let mut rng = Rng::new(4);
+        let f = TensorF::from_vec(
+            &[1, 3, 4, 6],
+            (0..72).map(|_| rng.normal_f32()).collect(),
+        );
+        let kf = vec![(Mat4::identity(), f.clone())];
+        let cv = cost_volume(&f, &kf, &Mat4::identity());
+        let (_, c, h, w) = f.nchw();
+        for d in [0usize, 63] {
+            for i in 0..h * w {
+                let mut want = 0.0f32;
+                for ch in 0..c {
+                    let v = f.data()[ch * h * w + i];
+                    want += v * v;
+                }
+                want /= c as f32;
+                let got = cv.plane(d)[i];
+                assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepare_finish_composition_equals_cost_volume() {
+        let mut rng = Rng::new(8);
+        let f = TensorF::from_vec(
+            &[1, 2, 3, 4],
+            (0..24).map(|_| rng.normal_f32()).collect(),
+        );
+        let mut pose_kf = Mat4::identity();
+        pose_kf.0[3] = 0.05;
+        let kf = vec![(pose_kf, f.clone())];
+        let full = cost_volume(&f, &kf, &Mat4::identity());
+        let prep = cvf_prepare(&kf, &Mat4::identity(), 3, 4);
+        let two_phase = cvf_finish(&f, &prep, 1);
+        assert_eq!(full.data(), two_phase.data());
+    }
+
+    #[test]
+    fn depth_from_head_range() {
+        let head = TensorF::full(&[1, 1, 32, 48], 0.5);
+        let d = depth_from_head(&head);
+        assert_eq!(d.shape(), &[1, 1, 64, 96]);
+        let v = d.data()[0];
+        assert!(v > crate::config::MIN_DEPTH && v < crate::config::MAX_DEPTH);
+    }
+}

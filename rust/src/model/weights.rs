@@ -1,0 +1,189 @@
+//! Weight containers: float parameters (`weights.bin`) for the CPU-only
+//! baseline and quantized parameters (`qparams.bin` + manifest exponents)
+//! for the CPU-PTQ baseline and the software side of the hybrid pipeline.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::{LUT_ENTRIES, SIGMOID_OUT_EXP};
+use crate::data::manifest::Manifest;
+use crate::data::tlv::TlvFile;
+use crate::quant::ActLut;
+use crate::tensor::{TensorF, TensorI32, TensorI8};
+
+/// Float parameters of one conv block (pre-folding, as trained).
+#[derive(Clone, Debug)]
+pub struct FloatConv {
+    pub w: TensorF,
+    pub b: Vec<f32>,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub s: f32,
+}
+
+/// Float LN site.
+#[derive(Clone, Debug)]
+pub struct LnParams {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+/// All float parameters by conv/LN name.
+pub struct FloatParams {
+    pub convs: HashMap<String, FloatConv>,
+    pub lns: HashMap<String, LnParams>,
+}
+
+impl FloatParams {
+    pub fn load(path: &Path) -> Result<Self> {
+        let tlv = TlvFile::load(path)?;
+        let mut convs = HashMap::new();
+        let mut lns = HashMap::new();
+        for spec in super::specs::all_conv_specs() {
+            let n = &spec.name;
+            convs.insert(
+                n.clone(),
+                FloatConv {
+                    w: tlv.f32(&format!("{n}.w"))?.clone(),
+                    b: tlv.f32(&format!("{n}.b"))?.data().to_vec(),
+                    gamma: tlv.f32(&format!("{n}.gamma"))?.data().to_vec(),
+                    beta: tlv.f32(&format!("{n}.beta"))?.data().to_vec(),
+                    s: tlv.f32(&format!("{n}.s"))?.data()[0],
+                },
+            );
+        }
+        for n in super::specs::ln_names() {
+            lns.insert(
+                n.clone(),
+                LnParams {
+                    gamma: tlv.f32(&format!("{n}.gamma"))?.data().to_vec(),
+                    beta: tlv.f32(&format!("{n}.beta"))?.data().to_vec(),
+                },
+            );
+        }
+        Ok(FloatParams { convs, lns })
+    }
+
+    pub fn conv(&self, name: &str) -> &FloatConv {
+        self.convs
+            .get(name)
+            .unwrap_or_else(|| panic!("missing float conv '{name}'"))
+    }
+
+    pub fn ln(&self, name: &str) -> &LnParams {
+        self.lns
+            .get(name)
+            .unwrap_or_else(|| panic!("missing LN '{name}'"))
+    }
+}
+
+/// Quantized parameters of one conv block (paper §III-B2).
+#[derive(Clone, Debug)]
+pub struct QuantConv {
+    pub w: TensorI8,
+    pub b: TensorI32,
+    pub e_w: i32,
+    pub e_b: i32,
+    pub s_q: i32,
+    pub e_s: i32,
+    /// Input exponent recorded when the artifact was traced.
+    pub e_in: i32,
+}
+
+/// All quantized parameters + activation exponents + LUTs + float LN.
+pub struct QuantParams {
+    pub convs: HashMap<String, QuantConv>,
+    pub lns: HashMap<String, LnParams>,
+    pub aexp: HashMap<String, i32>,
+    pub lut_sigmoid: ActLut,
+    pub lut_elu: ActLut,
+}
+
+impl QuantParams {
+    pub fn load(qparams: &Path, manifest: &Manifest) -> Result<Self> {
+        let tlv = TlvFile::load(qparams)?;
+        let mut convs = HashMap::new();
+        let mut lns = HashMap::new();
+        for spec in super::specs::all_conv_specs() {
+            let n = &spec.name;
+            let w_e = tlv.get(&format!("{n}.w"))?;
+            let b_e = tlv.get(&format!("{n}.b"))?;
+            let s_e = tlv.get(&format!("{n}.s_q"))?;
+            let e_in = *manifest
+                .conv_in_exp
+                .get(n)
+                .with_context(|| format!("conv '{n}' has no input exponent"))?;
+            convs.insert(
+                n.clone(),
+                QuantConv {
+                    w: w_e.as_i8()?.clone(),
+                    b: b_e.as_i32()?.clone(),
+                    e_w: w_e.exp,
+                    e_b: b_e.exp,
+                    s_q: s_e.as_i32()?.data()[0],
+                    e_s: s_e.exp,
+                    e_in,
+                },
+            );
+        }
+        for n in super::specs::ln_names() {
+            lns.insert(
+                n.clone(),
+                LnParams {
+                    gamma: tlv.f32(&format!("{n}.gamma"))?.data().to_vec(),
+                    beta: tlv.f32(&format!("{n}.beta"))?.data().to_vec(),
+                },
+            );
+        }
+        let sig = tlv.get("lut.sigmoid")?;
+        let elu = tlv.get("lut.elu")?;
+        anyhow::ensure!(sig.exp == SIGMOID_OUT_EXP, "sigmoid LUT exponent");
+        anyhow::ensure!(
+            sig.as_i16()?.len() == LUT_ENTRIES && elu.as_i16()?.len() == LUT_ENTRIES,
+            "LUT size"
+        );
+        Ok(QuantParams {
+            convs,
+            lns,
+            aexp: manifest.aexp.clone(),
+            lut_sigmoid: ActLut::from_table(sig.as_i16()?.data().to_vec(), sig.exp),
+            lut_elu: ActLut::from_table(elu.as_i16()?.data().to_vec(), elu.exp),
+        })
+    }
+
+    pub fn conv(&self, name: &str) -> &QuantConv {
+        self.convs
+            .get(name)
+            .unwrap_or_else(|| panic!("missing quant conv '{name}'"))
+    }
+
+    pub fn ln(&self, name: &str) -> &LnParams {
+        self.lns
+            .get(name)
+            .unwrap_or_else(|| panic!("missing LN '{name}'"))
+    }
+
+    pub fn aexp(&self, name: &str) -> i32 {
+        *self
+            .aexp
+            .get(name)
+            .unwrap_or_else(|| panic!("missing activation exponent '{name}'"))
+    }
+
+    /// Bias-exponent consistency: e_b == e_in + e_w for every conv (the
+    /// contract between calibration and the traced artifacts).
+    pub fn validate(&self) -> Result<()> {
+        for (n, c) in &self.convs {
+            anyhow::ensure!(
+                c.e_b == c.e_in + c.e_w,
+                "conv '{n}': e_b {} != e_in {} + e_w {}",
+                c.e_b,
+                c.e_in,
+                c.e_w
+            );
+        }
+        Ok(())
+    }
+}

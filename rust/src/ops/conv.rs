@@ -1,0 +1,340 @@
+//! Convolutions: float (CPU-only baseline) and power-of-two quantized
+//! (CPU-only-with-PTQ baseline; bit-exact with the Pallas kernels).
+//!
+//! Padding is symmetric `k/2`; `out = (in + 2p - k)/stride + 1` — the
+//! convention shared by fops.py / conv_quant.py / the HLO artifacts.
+
+use crate::config::{A_QMAX, A_QMIN};
+use crate::quant::{rshift_round, QTensor};
+use crate::tensor::{Tensor, TensorF, TensorI32, TensorI8};
+
+#[inline]
+fn out_dim(n: usize, k: usize, stride: usize) -> usize {
+    let p = k / 2;
+    (n + 2 * p - k) / stride + 1
+}
+
+/// Dense float conv. x: (1,IC,H,W); w: (OC,IC,k,k); b: (OC,).
+pub fn conv2d(x: &TensorF, w: &TensorF, b: &[f32], stride: usize) -> TensorF {
+    let (_, ic, h, wd) = x.nchw();
+    let (oc, wic, k, _) = w.nchw();
+    assert_eq!(ic, wic, "channel mismatch");
+    let p = k / 2;
+    let (ho, wo) = (out_dim(h, k, stride), out_dim(wd, k, stride));
+    let mut out = TensorF::zeros(&[1, oc, ho, wo]);
+    let xd = x.data();
+    let wdta = w.data();
+    let od = out.data_mut();
+    for o in 0..oc {
+        let ob = o * ho * wo;
+        for c in 0..ic {
+            let xb = c * h * wd;
+            let wb = (o * ic + c) * k * k;
+            for ky in 0..k {
+                for kx in 0..k {
+                    let wv = wdta[wb + ky * k + kx];
+                    if wv == 0.0 {
+                        continue;
+                    }
+                    for oy in 0..ho {
+                        let iy = (oy * stride + ky) as isize - p as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        let row = xb + iy as usize * wd;
+                        let orow = ob + oy * wo;
+                        for ox in 0..wo {
+                            let ix = (ox * stride + kx) as isize - p as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            od[orow + ox] += wv * xd[row + ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+        let orow = &mut od[ob..ob + ho * wo];
+        for v in orow {
+            *v += b[o];
+        }
+    }
+    out
+}
+
+/// Depthwise float conv. w: (C,1,k,k).
+pub fn conv2d_dw(x: &TensorF, w: &TensorF, b: &[f32], stride: usize) -> TensorF {
+    let (_, c, h, wd) = x.nchw();
+    let (wc, one, k, _) = w.nchw();
+    assert_eq!(c, wc);
+    assert_eq!(one, 1);
+    let p = k / 2;
+    let (ho, wo) = (out_dim(h, k, stride), out_dim(wd, k, stride));
+    let mut out = TensorF::zeros(&[1, c, ho, wo]);
+    let xd = x.data();
+    let wdta = w.data();
+    let od = out.data_mut();
+    for ch in 0..c {
+        let xb = ch * h * wd;
+        let ob = ch * ho * wo;
+        let wb = ch * k * k;
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = b[ch];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - p as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - p as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        acc += wdta[wb + ky * k + kx]
+                            * xd[xb + iy as usize * wd + ix as usize];
+                    }
+                }
+                od[ob + oy * wo + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn epilogue(acc: i32, s_q: i32, r: i32, relu: bool) -> i16 {
+    let m2 = acc as i64 * s_q as i64;
+    let y = rshift_round(m2, r).clamp(A_QMIN as i64, A_QMAX as i64) as i16;
+    if relu && y < 0 { 0 } else { y }
+}
+
+/// Dense quantized conv (paper §III-B2), bit-exact with `conv2d_q_ref`.
+/// x: i16 QTensor; w: (OC,IC,k,k) i8; b: (OC,) i32 at exponent e_x+e_w;
+/// `r = e_x + e_w + e_s - e_y`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_q(
+    x: &QTensor,
+    w: &TensorI8,
+    b: &TensorI32,
+    stride: usize,
+    s_q: i32,
+    r: i32,
+    relu: bool,
+    out_exp: i32,
+) -> QTensor {
+    let (_, ic, h, wd) = x.t.nchw();
+    let (oc, wic, k, _) = w.nchw();
+    assert_eq!(ic, wic);
+    let p = k / 2;
+    let (ho, wo) = (out_dim(h, k, stride), out_dim(wd, k, stride));
+    let xd = x.t.data();
+    let wdta = w.data();
+    let bd = b.data();
+    let mut acc = vec![0i32; ho * wo];
+    let mut out = Tensor::<i16>::zeros(&[1, oc, ho, wo]);
+    let od = out.data_mut();
+    for o in 0..oc {
+        acc.fill(bd[o]);
+        for c in 0..ic {
+            let xb = c * h * wd;
+            let wb = (o * ic + c) * k * k;
+            for ky in 0..k {
+                for kx in 0..k {
+                    let wv = wdta[wb + ky * k + kx] as i32;
+                    if wv == 0 {
+                        continue;
+                    }
+                    for oy in 0..ho {
+                        let iy = (oy * stride + ky) as isize - p as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        let row = xb + iy as usize * wd;
+                        let arow = oy * wo;
+                        for ox in 0..wo {
+                            let ix = (ox * stride + kx) as isize - p as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            acc[arow + ox] += wv * xd[row + ix as usize] as i32;
+                        }
+                    }
+                }
+            }
+        }
+        let ob = o * ho * wo;
+        for (i, &a) in acc.iter().enumerate() {
+            od[ob + i] = epilogue(a, s_q, r, relu);
+        }
+    }
+    QTensor { t: out, exp: out_exp }
+}
+
+/// Depthwise quantized conv, bit-exact with `conv2d_dw_q_ref`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_dw_q(
+    x: &QTensor,
+    w: &TensorI8,
+    b: &TensorI32,
+    stride: usize,
+    s_q: i32,
+    r: i32,
+    relu: bool,
+    out_exp: i32,
+) -> QTensor {
+    let (_, c, h, wd) = x.t.nchw();
+    let (wc, _, k, _) = w.nchw();
+    assert_eq!(c, wc);
+    let p = k / 2;
+    let (ho, wo) = (out_dim(h, k, stride), out_dim(wd, k, stride));
+    let xd = x.t.data();
+    let wdta = w.data();
+    let bd = b.data();
+    let mut out = Tensor::<i16>::zeros(&[1, c, ho, wo]);
+    let od = out.data_mut();
+    for ch in 0..c {
+        let xb = ch * h * wd;
+        let ob = ch * ho * wo;
+        let wb = ch * k * k;
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = bd[ch];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - p as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - p as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        acc += wdta[wb + ky * k + kx] as i32
+                            * xd[xb + iy as usize * wd + ix as usize] as i32;
+                    }
+                }
+                od[ob + oy * wo + ox] = epilogue(acc, s_q, r, relu);
+            }
+        }
+    }
+    QTensor { t: out, exp: out_exp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_conv_ref(
+        x: &TensorF,
+        w: &TensorF,
+        b: &[f32],
+        stride: usize,
+    ) -> TensorF {
+        // direct per-output-pixel reference (different loop order)
+        let (_, ic, h, wd) = x.nchw();
+        let (oc, _, k, _) = w.nchw();
+        let p = k / 2;
+        let (ho, wo) = (out_dim(h, k, stride), out_dim(wd, k, stride));
+        let mut out = TensorF::zeros(&[1, oc, ho, wo]);
+        for o in 0..oc {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = b[o];
+                    for c in 0..ic {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = (oy * stride + ky) as isize - p as isize;
+                                let ix = (ox * stride + kx) as isize - p as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                    continue;
+                                }
+                                acc += w.at4(o, c, ky, kx)
+                                    * x.at4(0, c, iy as usize, ix as usize);
+                            }
+                        }
+                    }
+                    out.set4(0, o, oy, ox, acc);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv2d_matches_naive_reference() {
+        let mut rng = Rng::new(3);
+        for &(ic, oc, h, w, k, s) in
+            &[(2usize, 3usize, 5usize, 6usize, 3usize, 1usize),
+              (1, 2, 6, 6, 5, 2), (3, 4, 4, 4, 1, 1), (2, 2, 7, 5, 3, 2)]
+        {
+            let x = TensorF::from_vec(
+                &[1, ic, h, w],
+                (0..ic * h * w).map(|_| rng.normal_f32()).collect(),
+            );
+            let wt = TensorF::from_vec(
+                &[oc, ic, k, k],
+                (0..oc * ic * k * k).map(|_| rng.normal_f32()).collect(),
+            );
+            let b: Vec<f32> = (0..oc).map(|_| rng.normal_f32()).collect();
+            let got = conv2d(&x, &wt, &b, s);
+            let expect = naive_conv_ref(&x, &wt, &b, s);
+            assert_eq!(got.shape(), expect.shape());
+            for (a, e) in got.data().iter().zip(expect.data()) {
+                assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv2d_q_epilogue_rounding() {
+        // single 1x1 conv: y = rshift_round(acc * s, r)
+        let x = QTensor {
+            t: Tensor::from_vec(&[1, 1, 1, 2], vec![10i16, -10]),
+            exp: 4,
+        };
+        let w = TensorI8::from_vec(&[1, 1, 1, 1], vec![3i8]);
+        let b = TensorI32::from_vec(&[1], vec![2i32]);
+        // acc = 3*10+2 = 32, m2 = 32*5 = 160, r=5 -> (160+16)>>5 = 5
+        let y = conv2d_q(&x, &w, &b, 1, 5, 5, false, 4);
+        assert_eq!(y.t.data()[0], 5);
+        // acc = -28, m2 = -140, (-140+16)>>5 = -4 (floor(-3.875))
+        assert_eq!(y.t.data()[1], -4);
+    }
+
+    #[test]
+    fn conv2d_q_relu_folds_after_requant() {
+        let x = QTensor {
+            t: Tensor::from_vec(&[1, 1, 1, 1], vec![-100i16]),
+            exp: 4,
+        };
+        let w = TensorI8::from_vec(&[1, 1, 1, 1], vec![5i8]);
+        let b = TensorI32::from_vec(&[1], vec![0i32]);
+        let y = conv2d_q(&x, &w, &b, 1, 1, 0, true, 4);
+        assert_eq!(y.t.data()[0], 0);
+    }
+
+    #[test]
+    fn dw_conv_shapes_and_identity_kernel() {
+        // identity depthwise kernel: centre tap 1 -> output == input
+        let x = TensorF::from_vec(&[1, 2, 3, 3], (0..18).map(|i| i as f32).collect());
+        let mut wv = vec![0.0f32; 2 * 9];
+        wv[4] = 1.0;
+        wv[9 + 4] = 1.0;
+        let w = TensorF::from_vec(&[2, 1, 3, 3], wv);
+        let y = conv2d_dw(&x, &w, &[0.0, 0.0], 1);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn strided_output_dims() {
+        let x = TensorF::zeros(&[1, 1, 64, 96]);
+        let w = TensorF::zeros(&[1, 1, 3, 3]);
+        let y = conv2d(&x, &w, &[0.0], 2);
+        assert_eq!(y.shape(), &[1, 1, 32, 48]);
+        let w5 = TensorF::zeros(&[1, 1, 5, 5]);
+        let y5 = conv2d(&x, &w5, &[0.0], 2);
+        assert_eq!(y5.shape(), &[1, 1, 32, 48]);
+    }
+}

@@ -1,0 +1,72 @@
+//! Operator library: the software-friendly operators of the paper
+//! (grid sampling, layer norm, bilinear upsampling — §III-A3) plus the
+//! full float/quantized conv stack used by the CPU-only baselines of
+//! Table II.
+//!
+//! Float semantics mirror `python/compile/fops.py`; integer semantics are
+//! bit-exact with `python/compile/kernels/ref.py` (and therefore with the
+//! Pallas kernels inside the AOT artifacts).
+
+pub mod conv;
+pub mod norm;
+pub mod sample;
+
+pub use conv::{conv2d, conv2d_dw, conv2d_dw_q, conv2d_q};
+pub use norm::layer_norm;
+pub use sample::{grid_sample, resize_bilinear, upsample_bilinear2x, upsample_nearest2x, upsample_nearest2x_i16};
+
+use crate::tensor::TensorF;
+
+#[inline]
+pub fn relu_inplace(x: &mut TensorF) {
+    for v in x.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn elu(x: f32) -> f32 {
+    if x >= 0.0 { x } else { x.min(0.0).exp() - 1.0 }
+}
+
+pub fn sigmoid_tensor(x: &TensorF) -> TensorF {
+    x.map(sigmoid)
+}
+
+pub fn elu_tensor(x: &TensorF) -> TensorF {
+    x.map(elu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut t = Tensor::from_vec(&[1, 1, 1, 4], vec![-1.0, 0.0, 2.0, -0.5]);
+        relu_inplace(&mut t);
+        assert_eq!(t.data(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn elu_definition() {
+        assert_eq!(elu(1.5), 1.5);
+        assert!((elu(-1.0) - ((-1.0f32).exp() - 1.0)).abs() < 1e-7);
+        assert_eq!(elu(0.0), 0.0);
+    }
+
+    #[test]
+    fn sigmoid_bounds() {
+        assert!(sigmoid(100.0) > 0.999);
+        assert!(sigmoid(-100.0) < 0.001);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+}

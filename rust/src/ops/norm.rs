@@ -1,0 +1,91 @@
+//! Layer normalization — a *software-friendly* operator in the paper's
+//! partitioning (§III-A3: two passes over memory, square root + division;
+//! kept in float on the CPU for precision).
+
+use crate::tensor::TensorF;
+
+pub const LN_EPS: f64 = 1e-5;
+
+/// LN over (C,H,W) of a (1,C,H,W) tensor with per-channel affine.
+/// Accumulates in f64 (the CPU has no precision constraint — exactly why
+/// the paper keeps this op in software).
+pub fn layer_norm(x: &TensorF, gamma: &[f32], beta: &[f32]) -> TensorF {
+    let (_, c, h, w) = x.nchw();
+    assert_eq!(gamma.len(), c);
+    assert_eq!(beta.len(), c);
+    let n = (c * h * w) as f64;
+    let xd = x.data();
+    // pass 1: mean + variance (each element touched twice overall — the
+    // memory-bandwidth profile called out in §III-A2)
+    let mut sum = 0.0f64;
+    for &v in xd {
+        sum += v as f64;
+    }
+    let mean = sum / n;
+    let mut var = 0.0f64;
+    for &v in xd {
+        let d = v as f64 - mean;
+        var += d * d;
+    }
+    var /= n;
+    let inv = 1.0 / (var + LN_EPS).sqrt();
+    // pass 2: normalise + affine
+    let mut out = TensorF::zeros(x.shape());
+    let od = out.data_mut();
+    let hw = h * w;
+    for ch in 0..c {
+        let g = gamma[ch] as f64;
+        let b = beta[ch] as f64;
+        for i in ch * hw..(ch + 1) * hw {
+            od[i] = ((xd[i] as f64 - mean) * inv * g + b) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_mean_unit_var() {
+        let mut rng = Rng::new(11);
+        let x = Tensor::from_vec(
+            &[1, 4, 5, 6],
+            (0..120).map(|_| 2.0 + 3.0 * rng.normal_f32()).collect(),
+        );
+        let y = layer_norm(&x, &[1.0; 4], &[0.0; 4]);
+        let m: f64 = y.data().iter().map(|&v| v as f64).sum::<f64>() / 120.0;
+        let v: f64 =
+            y.data().iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / 120.0;
+        assert!(m.abs() < 1e-6);
+        assert!((v - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn affine_applies_per_channel() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::from_vec(
+            &[1, 2, 3, 3],
+            (0..18).map(|_| rng.normal_f32()).collect(),
+        );
+        let y0 = layer_norm(&x, &[1.0, 1.0], &[0.0, 0.0]);
+        let y1 = layer_norm(&x, &[2.0, 0.5], &[1.0, -1.0]);
+        for i in 0..9 {
+            assert!((y1.data()[i] - (y0.data()[i] * 2.0 + 1.0)).abs() < 1e-5);
+            assert!((y1.data()[9 + i] - (y0.data()[9 + i] * 0.5 - 1.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn constant_input_maps_to_beta() {
+        let x = Tensor::full(&[1, 2, 2, 2], 5.0f32);
+        let y = layer_norm(&x, &[3.0, 3.0], &[0.25, -0.25]);
+        for i in 0..4 {
+            assert!((y.data()[i] - 0.25).abs() < 1e-4);
+            assert!((y.data()[4 + i] + 0.25).abs() < 1e-4);
+        }
+    }
+}

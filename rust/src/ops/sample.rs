@@ -1,0 +1,283 @@
+//! Sampling operators: grid sampling (the irregular-access op the paper
+//! keeps in software — §III-A2), bilinear resize/upsampling (software,
+//! float for precision), nearest upsampling (hardware-friendly, also
+//! mirrored here for the CPU baselines).
+//!
+//! Semantics are identical to `python/compile/fops.py`: pixel centres at
+//! integer coordinates for `grid_sample` (zero padding outside), and
+//! half-pixel-centre convention for `resize_bilinear`.
+
+use crate::tensor::TensorF;
+
+/// Precomputed bilinear tap: four source offsets + weights per output
+/// point (out-of-range taps get weight 0 and a safe offset). Sharing the
+/// table across channels amortises all address math — the key software-side
+/// optimisation of the paper's §III-C ("optimize memory access patterns").
+struct TapTable {
+    /// per point: [idx0..idx3], then [w0..w3]
+    idx: Vec<[u32; 4]>,
+    wgt: Vec<[f32; 4]>,
+}
+
+fn build_taps(grid: &[(f32, f32)], h: usize, w: usize) -> TapTable {
+    let mut idx = Vec::with_capacity(grid.len());
+    let mut wgt = Vec::with_capacity(grid.len());
+    for &(gx, gy) in grid {
+        let x0f = gx.floor();
+        let y0f = gy.floor();
+        let fx = gx - x0f;
+        let fy = gy - y0f;
+        let x0 = x0f as isize;
+        let y0 = y0f as isize;
+        let mut ids = [0u32; 4];
+        let mut ws = [0f32; 4];
+        let taps = [
+            (y0, x0, (1.0 - fx) * (1.0 - fy)),
+            (y0, x0 + 1, fx * (1.0 - fy)),
+            (y0 + 1, x0, (1.0 - fx) * fy),
+            (y0 + 1, x0 + 1, fx * fy),
+        ];
+        for (t, &(ty, tx, tw)) in taps.iter().enumerate() {
+            if ty >= 0 && ty < h as isize && tx >= 0 && tx < w as isize {
+                ids[t] = (ty as usize * w + tx as usize) as u32;
+                ws[t] = tw;
+            } // else: weight stays 0, offset 0 is safe to read
+        }
+        idx.push(ids);
+        wgt.push(ws);
+    }
+    TapTable { idx, wgt }
+}
+
+/// Bilinear grid sampling with zero padding (paper §II-B equation).
+/// x: (1,C,H,W); grid: (Ho*Wo) pairs of (gx, gy) in input pixel coords.
+pub fn grid_sample(x: &TensorF, grid: &[(f32, f32)], ho: usize, wo: usize) -> TensorF {
+    let (_, c, h, w) = x.nchw();
+    assert_eq!(grid.len(), ho * wo);
+    let taps = build_taps(grid, h, w);
+    let mut out = TensorF::zeros(&[1, c, ho, wo]);
+    let xd = x.data();
+    let od = out.data_mut();
+    let hw_in = h * w;
+    let hw_out = ho * wo;
+    for ch in 0..c {
+        let src = &xd[ch * hw_in..(ch + 1) * hw_in];
+        let dst = &mut od[ch * hw_out..(ch + 1) * hw_out];
+        for gi in 0..hw_out {
+            let ids = &taps.idx[gi];
+            let ws = &taps.wgt[gi];
+            dst[gi] = ws[0] * src[ids[0] as usize]
+                + ws[1] * src[ids[1] as usize]
+                + ws[2] * src[ids[2] as usize]
+                + ws[3] * src[ids[3] as usize];
+        }
+    }
+    out
+}
+
+/// Fused grid-sample-and-accumulate: `acc += sample(x, grid)`. Saves the
+/// temporary warp tensor and one full pass over memory in CVF prep.
+pub fn grid_sample_accumulate(
+    x: &TensorF,
+    grid: &[(f32, f32)],
+    acc: &mut TensorF,
+) {
+    let (_, c, h, w) = x.nchw();
+    let (_, ca, ho, wo) = acc.nchw();
+    assert_eq!(c, ca);
+    assert_eq!(grid.len(), ho * wo);
+    let taps = build_taps(grid, h, w);
+    let xd = x.data();
+    let od = acc.data_mut();
+    let hw_in = h * w;
+    let hw_out = ho * wo;
+    for ch in 0..c {
+        let src = &xd[ch * hw_in..(ch + 1) * hw_in];
+        let dst = &mut od[ch * hw_out..(ch + 1) * hw_out];
+        for gi in 0..hw_out {
+            let ids = &taps.idx[gi];
+            let ws = &taps.wgt[gi];
+            dst[gi] += ws[0] * src[ids[0] as usize]
+                + ws[1] * src[ids[1] as usize]
+                + ws[2] * src[ids[2] as usize]
+                + ws[3] * src[ids[3] as usize];
+        }
+    }
+}
+
+/// Bilinear resize with half-pixel-centre convention (matches
+/// `fops.resize_bilinear`): source coord = (i + 0.5) * (in/out) - 0.5,
+/// clamped taps (edge padding), fractional weights clamped to [0,1].
+pub fn resize_bilinear(x: &TensorF, oh: usize, ow: usize) -> TensorF {
+    let (_, c, h, w) = x.nchw();
+    let mut y0s = vec![0usize; oh];
+    let mut y1s = vec![0usize; oh];
+    let mut fys = vec![0.0f32; oh];
+    for oy in 0..oh {
+        let sy = (oy as f32 + 0.5) * (h as f32 / oh as f32) - 0.5;
+        let y0 = sy.floor().clamp(0.0, (h - 1) as f32);
+        let y1 = (y0 + 1.0).min((h - 1) as f32);
+        y0s[oy] = y0 as usize;
+        y1s[oy] = y1 as usize;
+        fys[oy] = (sy - y0).clamp(0.0, 1.0);
+    }
+    let mut x0s = vec![0usize; ow];
+    let mut x1s = vec![0usize; ow];
+    let mut fxs = vec![0.0f32; ow];
+    for ox in 0..ow {
+        let sx = (ox as f32 + 0.5) * (w as f32 / ow as f32) - 0.5;
+        let x0 = sx.floor().clamp(0.0, (w - 1) as f32);
+        let x1 = (x0 + 1.0).min((w - 1) as f32);
+        x0s[ox] = x0 as usize;
+        x1s[ox] = x1 as usize;
+        fxs[ox] = (sx - x0).clamp(0.0, 1.0);
+    }
+    let mut out = TensorF::zeros(&[1, c, oh, ow]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for ch in 0..c {
+        let ib = ch * h * w;
+        let ob = ch * oh * ow;
+        for oy in 0..oh {
+            let r0 = ib + y0s[oy] * w;
+            let r1 = ib + y1s[oy] * w;
+            let fy = fys[oy];
+            let orow = ob + oy * ow;
+            for ox in 0..ow {
+                let (x0, x1, fx) = (x0s[ox], x1s[ox], fxs[ox]);
+                let top = xd[r0 + x0] * (1.0 - fx) + xd[r0 + x1] * fx;
+                let bot = xd[r1 + x0] * (1.0 - fx) + xd[r1 + x1] * fx;
+                od[orow + ox] = top * (1.0 - fy) + bot * fy;
+            }
+        }
+    }
+    out
+}
+
+/// Bilinear x2 upsampling (a software op in the paper's partitioning).
+pub fn upsample_bilinear2x(x: &TensorF) -> TensorF {
+    let (_, _, h, w) = x.nchw();
+    resize_bilinear(x, 2 * h, 2 * w)
+}
+
+/// Nearest-neighbour x2 upsampling (hardware-friendly; used by the FPN).
+pub fn upsample_nearest2x(x: &TensorF) -> TensorF {
+    let (_, c, h, w) = x.nchw();
+    let mut out = TensorF::zeros(&[1, c, 2 * h, 2 * w]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for ch in 0..c {
+        let ib = ch * h * w;
+        let ob = ch * 4 * h * w;
+        for y in 0..h {
+            for x_ in 0..w {
+                let v = xd[ib + y * w + x_];
+                let o = ob + 2 * y * 2 * w + 2 * x_;
+                od[o] = v;
+                od[o + 1] = v;
+                od[o + 2 * w] = v;
+                od[o + 2 * w + 1] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Nearest x2 on int16 payloads (the FPN upsample inside HW segments; the
+/// CPU-PTQ baseline needs the integer version too).
+pub fn upsample_nearest2x_i16(
+    x: &crate::tensor::TensorI16,
+) -> crate::tensor::TensorI16 {
+    let (_, c, h, w) = x.nchw();
+    let mut out = crate::tensor::TensorI16::zeros(&[1, c, 2 * h, 2 * w]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for ch in 0..c {
+        let ib = ch * h * w;
+        let ob = ch * 4 * h * w;
+        for y in 0..h {
+            for x_ in 0..w {
+                let v = xd[ib + y * w + x_];
+                let o = ob + 2 * y * 2 * w + 2 * x_;
+                od[o] = v;
+                od[o + 1] = v;
+                od[o + 2 * w] = v;
+                od[o + 2 * w + 1] = v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn grid_sample_integer_coords_identity() {
+        let x = Tensor::from_vec(&[1, 2, 3, 4], (0..24).map(|i| i as f32).collect());
+        let mut grid = Vec::new();
+        for y in 0..3 {
+            for xx in 0..4 {
+                grid.push((xx as f32, y as f32));
+            }
+        }
+        let y = grid_sample(&x, &grid, 3, 4);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn grid_sample_zero_outside() {
+        let x = Tensor::full(&[1, 1, 4, 4], 1.0f32);
+        let y = grid_sample(&x, &[(-10.0, -10.0), (100.0, 2.0)], 1, 2);
+        assert_eq!(y.data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn grid_sample_halfway() {
+        let mut x = Tensor::zeros(&[1, 1, 2, 2]);
+        x.set4(0, 0, 0, 0, 4.0);
+        let y = grid_sample(&x, &[(0.5, 0.0)], 1, 1);
+        assert!((y.data()[0] - 2.0).abs() < 1e-6);
+        let y = grid_sample(&x, &[(0.5, 0.5)], 1, 1);
+        assert!((y.data()[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grid_sample_border_partial() {
+        let x = Tensor::full(&[1, 1, 3, 3], 1.0f32);
+        let y = grid_sample(&x, &[(-0.5, 0.0)], 1, 1);
+        assert!((y.data()[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bilinear_constant_preserved() {
+        let x = Tensor::full(&[1, 2, 3, 4], 2.5f32);
+        let y = upsample_bilinear2x(&x);
+        assert_eq!(y.shape(), &[1, 2, 6, 8]);
+        assert!(y.data().iter().all(|&v| (v - 2.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn bilinear_downscale_average() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = resize_bilinear(&x, 1, 1);
+        assert!((y.data()[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nearest_replicates() {
+        let x = Tensor::from_vec(&[1, 1, 1, 2], vec![7.0, 9.0]);
+        let y = upsample_nearest2x(&x);
+        assert_eq!(y.shape(), &[1, 1, 2, 4]);
+        assert_eq!(y.data(), &[7.0, 7.0, 9.0, 9.0, 7.0, 7.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn nearest_i16_matches_f32_pattern() {
+        let x = crate::tensor::TensorI16::from_vec(&[1, 1, 2, 2], vec![1, 2, 3, 4]);
+        let y = upsample_nearest2x_i16(&x);
+        assert_eq!(y.data(), &[1, 1, 2, 2, 1, 1, 2, 2, 3, 3, 4, 4, 3, 3, 4, 4]);
+    }
+}

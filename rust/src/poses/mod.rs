@@ -1,0 +1,272 @@
+//! Camera pose algebra + warp-grid generation (software-side, §III-A3).
+//!
+//! Poses are 4x4 camera-to-world matrices (OpenCV convention: +x right,
+//! +y down, +z forward), matching the synthetic dataset and
+//! `python/compile/model.py`. Grid generation feeds the grid-sampling
+//! software op: the plane-sweep grids of CVF (which depend only on poses
+//! and intrinsics — the key to overlapping CVF preparation with FE/FS on
+//! the accelerator) and the hidden-state correction grid.
+
+use crate::config::{self, N_HYPOTHESES};
+use crate::ops::resize_bilinear;
+use crate::tensor::TensorF;
+
+/// Row-major 4x4 matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat4(pub [f64; 16]);
+
+impl Mat4 {
+    pub fn identity() -> Self {
+        let mut m = [0.0; 16];
+        m[0] = 1.0;
+        m[5] = 1.0;
+        m[10] = 1.0;
+        m[15] = 1.0;
+        Mat4(m)
+    }
+
+    pub fn from_f32(v: &[f32]) -> Self {
+        assert_eq!(v.len(), 16);
+        let mut m = [0.0; 16];
+        for (i, &x) in v.iter().enumerate() {
+            m[i] = x as f64;
+        }
+        Mat4(m)
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.0[r * 4 + c]
+    }
+
+    pub fn matmul(&self, o: &Mat4) -> Mat4 {
+        let mut out = [0.0; 16];
+        for r in 0..4 {
+            for c in 0..4 {
+                let mut acc = 0.0;
+                for k in 0..4 {
+                    acc += self.at(r, k) * o.at(k, c);
+                }
+                out[r * 4 + c] = acc;
+            }
+        }
+        Mat4(out)
+    }
+
+    /// Inverse of a rigid transform [R|t; 0 1]: [R'| -R't; 0 1].
+    pub fn rigid_inverse(&self) -> Mat4 {
+        let mut out = [0.0; 16];
+        for r in 0..3 {
+            for c in 0..3 {
+                out[r * 4 + c] = self.at(c, r);
+            }
+        }
+        for r in 0..3 {
+            let mut acc = 0.0;
+            for k in 0..3 {
+                acc += self.at(k, r) * self.at(k, 3);
+            }
+            out[r * 4 + 3] = -acc;
+        }
+        out[15] = 1.0;
+        Mat4(out)
+    }
+
+    pub fn translation(&self) -> [f64; 3] {
+        [self.at(0, 3), self.at(1, 3), self.at(2, 3)]
+    }
+}
+
+/// Combined translation + rotation distance used by the keyframe buffer:
+/// `||t1 - t2|| + 0.5 * ||R1 - R2||_F` (mirrors `pipeline.pose_distance`).
+pub fn pose_distance(a: &Mat4, b: &Mat4) -> f64 {
+    let ta = a.translation();
+    let tb = b.translation();
+    let mut dt = 0.0;
+    for i in 0..3 {
+        dt += (ta[i] - tb[i]) * (ta[i] - tb[i]);
+    }
+    let mut dr = 0.0;
+    for r in 0..3 {
+        for c in 0..3 {
+            let d = a.at(r, c) - b.at(r, c);
+            dr += d * d;
+        }
+    }
+    dt.sqrt() + 0.5 * dr.sqrt()
+}
+
+/// Plane-sweep warp grids (CVF preparation, runs on the CPU): for each of
+/// the 64 inverse-depth hypotheses, the keyframe-image pixel coordinate of
+/// every current-frame pixel at pyramid `level`.
+///
+/// Returns `N_HYPOTHESES` grids of `(h*w)` `(gx, gy)` pairs — the exact
+/// float math of `model.sweep_grids`.
+pub fn sweep_grids(
+    pose_cur: &Mat4,
+    pose_kf: &Mat4,
+    level: usize,
+    h: usize,
+    w: usize,
+) -> Vec<Vec<(f32, f32)>> {
+    sweep_grids_range(pose_cur, pose_kf, level, h, w, 0, N_HYPOTHESES)
+}
+
+/// `sweep_grids` restricted to hypotheses [d0, d1) — lets the coordinator
+/// shard CVF preparation across CPU workers without redundant grid math.
+pub fn sweep_grids_range(
+    pose_cur: &Mat4,
+    pose_kf: &Mat4,
+    level: usize,
+    h: usize,
+    w: usize,
+    d0: usize,
+    d1: usize,
+) -> Vec<Vec<(f32, f32)>> {
+    let (fx, fy, cx, cy) = config::level_intrinsics(level);
+    let rel = pose_kf.rigid_inverse().matmul(pose_cur); // cur cam -> kf cam
+    let inv_depths = config::hypothesis_inv_depths()[d0..d1].to_vec();
+    let mut grids = Vec::with_capacity(d1 - d0);
+    // unit-depth rays per pixel (pixel centres at integer coords: +0.5)
+    let mut rays = Vec::with_capacity(h * w);
+    for y in 0..h {
+        let ry = (y as f32 + 0.5 - cy) / fy;
+        for x in 0..w {
+            let rx = (x as f32 + 0.5 - cx) / fx;
+            rays.push((rx, ry));
+        }
+    }
+    let r = |i: usize, j: usize| rel.at(i, j) as f32;
+    for &inv_d in &inv_depths {
+        let depth = 1.0 / inv_d;
+        let mut grid = Vec::with_capacity(h * w);
+        for &(rx, ry) in &rays {
+            let px = rx * depth;
+            let py = ry * depth;
+            let pz = depth;
+            let kx = r(0, 0) * px + r(0, 1) * py + r(0, 2) * pz + r(0, 3);
+            let ky = r(1, 0) * px + r(1, 1) * py + r(1, 2) * pz + r(1, 3);
+            let kz = (r(2, 0) * px + r(2, 1) * py + r(2, 2) * pz + r(2, 3))
+                .max(1e-4);
+            grid.push((kx / kz * fx + cx - 0.5, ky / kz * fy + cy - 0.5));
+        }
+        grids.push(grid);
+    }
+    grids
+}
+
+/// Hidden-state correction grid (paper: "grid sampling is also performed
+/// to apply viewpoint changes to the previous hidden state"): backproject
+/// the previous depth estimate at 1/32 scale, reproject into the current
+/// camera. Mirrors `model.correction_grid`.
+pub fn correction_grid(
+    pose_prev: &Mat4,
+    pose_cur: &Mat4,
+    depth_prev_full: &TensorF,
+    level: usize,
+) -> Vec<(f32, f32)> {
+    let (h, w) = config::level_hw(level);
+    let (fx, fy, cx, cy) = config::level_intrinsics(level);
+    let dsmall = resize_bilinear(depth_prev_full, h, w);
+    let rel = pose_prev.rigid_inverse().matmul(pose_cur);
+    let r = |i: usize, j: usize| rel.at(i, j) as f32;
+    let mut grid = Vec::with_capacity(h * w);
+    for y in 0..h {
+        for x in 0..w {
+            let d = dsmall.at4(0, 0, y, x);
+            let px = (x as f32 + 0.5 - cx) / fx * d;
+            let py = (y as f32 + 0.5 - cy) / fy * d;
+            let pz = d;
+            let kx = r(0, 0) * px + r(0, 1) * py + r(0, 2) * pz + r(0, 3);
+            let ky = r(1, 0) * px + r(1, 1) * py + r(1, 2) * pz + r(1, 3);
+            let kz = (r(2, 0) * px + r(2, 1) * py + r(2, 2) * pz + r(2, 3))
+                .max(1e-4);
+            grid.push((kx / kz * fx + cx - 0.5, ky / kz * fy + cy - 0.5));
+        }
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rot_z(angle: f64) -> Mat4 {
+        let (s, c) = angle.sin_cos();
+        let mut m = Mat4::identity();
+        m.0[0] = c;
+        m.0[1] = -s;
+        m.0[4] = s;
+        m.0[5] = c;
+        m
+    }
+
+    #[test]
+    fn rigid_inverse_is_inverse() {
+        let mut p = rot_z(0.7);
+        p.0[3] = 1.5;
+        p.0[7] = -0.25;
+        p.0[11] = 2.0;
+        let inv = p.rigid_inverse();
+        let id = p.matmul(&inv);
+        for r in 0..4 {
+            for c in 0..4 {
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((id.at(r, c) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn pose_distance_properties() {
+        let a = Mat4::identity();
+        let mut b = rot_z(0.3);
+        b.0[3] = 0.5;
+        assert_eq!(pose_distance(&a, &a), 0.0);
+        assert!((pose_distance(&a, &b) - pose_distance(&b, &a)).abs() < 1e-12);
+        assert!(pose_distance(&a, &b) > 0.5); // at least the translation
+    }
+
+    #[test]
+    fn sweep_grid_identity_pose_is_identity_map() {
+        let p = Mat4::identity();
+        let grids = sweep_grids(&p, &p, 1, 8, 12);
+        assert_eq!(grids.len(), N_HYPOTHESES);
+        for g in [&grids[0], &grids[31], &grids[63]] {
+            for y in 0..8usize {
+                for x in 0..12usize {
+                    let (gx, gy) = g[y * 12 + x];
+                    assert!((gx - x as f32).abs() < 1e-3, "{gx} vs {x}");
+                    assert!((gy - y as f32).abs() < 1e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_grid_translation_shifts_parallax() {
+        // keyframe shifted along +x: nearer hypotheses shift further
+        let cur = Mat4::identity();
+        let mut kf = Mat4::identity();
+        kf.0[3] = 0.1; // 10 cm to the right
+        let grids = sweep_grids(&cur, &kf, 1, 4, 6);
+        let far = grids[0][0].0 - 0.0; // hypothesis 0 = farthest
+        let near = grids[N_HYPOTHESES - 1][0].0 - 0.0;
+        assert!(near.abs() > far.abs());
+    }
+
+    #[test]
+    fn correction_grid_identity() {
+        let p = Mat4::identity();
+        let depth = TensorF::full(&[1, 1, config::IMG_H, config::IMG_W], 2.0);
+        let g = correction_grid(&p, &p, &depth, 5);
+        let (h, w) = config::level_hw(5);
+        for y in 0..h {
+            for x in 0..w {
+                let (gx, gy) = g[y * w + x];
+                assert!((gx - x as f32).abs() < 1e-3);
+                assert!((gy - y as f32).abs() < 1e-3);
+            }
+        }
+    }
+}

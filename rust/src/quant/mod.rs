@@ -1,0 +1,317 @@
+//! Power-of-two fixed-point arithmetic (paper §III-B2) — the Rust mirror
+//! of `python/compile/kernels/ref.py`. Every operation here is *bit-exact*
+//! with the Pallas kernels and the jnp oracles; the golden integration
+//! tests pin this.
+//!
+//! A quantized activation is `(i16 tensor, exponent e)` meaning
+//! `x_float ≈ x_q / 2^e`. All multipliers are powers of two, so every
+//! rescale is an add + arithmetic shift, and rounding is
+//! "half towards +inf" (`rshift_round`) — the detail the paper credits
+//! for the accelerator's accuracy edge over C++-with-PTQ.
+
+use crate::config::{A_QMAX, A_QMIN, LUT_ENTRIES, LUT_RANGE_T};
+use crate::tensor::{Tensor, TensorI16};
+
+/// Quantized tensor: int16 payload + power-of-two exponent.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub t: TensorI16,
+    pub exp: i32,
+}
+
+impl QTensor {
+    pub fn zeros(shape: &[usize], exp: i32) -> Self {
+        QTensor { t: Tensor::zeros(shape), exp }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.t.shape()
+    }
+}
+
+/// `(v + (1 << (r-1))) >> r` for r > 0 (arithmetic shift), `v << -r`
+/// for r < 0, identity for r == 0. Round half towards +inf.
+#[inline]
+pub fn rshift_round(v: i64, r: i32) -> i64 {
+    if r > 0 {
+        (v + (1i64 << (r - 1))) >> r
+    } else if r < 0 {
+        v << (-r)
+    } else {
+        v
+    }
+}
+
+/// Clip to the int16 activation range.
+#[inline]
+pub fn clip_act(v: i64) -> i16 {
+    v.clamp(A_QMIN as i64, A_QMAX as i64) as i16
+}
+
+/// Float -> fixed point: `clip(floor(x * 2^exp + 0.5))`.
+#[inline]
+pub fn quantize_f32(x: f32, exp: i32) -> i16 {
+    let scaled = (x as f64 * (2.0f64).powi(exp) + 0.5).floor();
+    scaled.clamp(A_QMIN as f64, A_QMAX as f64) as i16
+}
+
+#[inline]
+pub fn dequantize_i16(q: i16, exp: i32) -> f32 {
+    (q as f64 / (2.0f64).powi(exp)) as f32
+}
+
+/// Quantize a float tensor (SW requantization at extern boundaries).
+pub fn quantize_tensor(x: &Tensor<f32>, exp: i32) -> QTensor {
+    let data = x.data().iter().map(|&v| quantize_f32(v, exp)).collect();
+    QTensor { t: Tensor::from_vec(x.shape(), data), exp }
+}
+
+/// Dequantize to float (SW side of an extern transfer).
+pub fn dequantize_tensor(x: &QTensor) -> Tensor<f32> {
+    let s = (2.0f64).powi(x.exp);
+    let data = x.t.data().iter().map(|&v| (v as f64 / s) as f32).collect();
+    Tensor::from_vec(x.t.shape(), data)
+}
+
+/// Requantize int16 -> int16 at a new exponent (the HW 'shift' stage).
+pub fn requant(x: &QTensor, out_exp: i32) -> QTensor {
+    if x.exp == out_exp {
+        return x.clone();
+    }
+    let r = x.exp - out_exp;
+    let data = x
+        .t
+        .data()
+        .iter()
+        .map(|&v| clip_act(rshift_round(v as i64, r)))
+        .collect();
+    QTensor { t: Tensor::from_vec(x.t.shape(), data), exp: out_exp }
+}
+
+/// Quantized elementwise add: lshift into the max exponent (one lshift —
+/// the power-of-two property), add in i32, rshift-round-clip.
+pub fn add_q(a: &QTensor, b: &QTensor, out_exp: i32) -> QTensor {
+    assert_eq!(a.shape(), b.shape());
+    let em = a.exp.max(b.exp);
+    let (la, lb) = (em - a.exp, em - b.exp);
+    let r = em - out_exp;
+    let data = a
+        .t
+        .data()
+        .iter()
+        .zip(b.t.data())
+        .map(|(&x, &y)| {
+            let wide = ((x as i32) << la) as i64 + ((y as i32) << lb) as i64;
+            clip_act(rshift_round(wide, r))
+        })
+        .collect();
+    QTensor { t: Tensor::from_vec(a.shape(), data), exp: out_exp }
+}
+
+/// Quantized elementwise multiply: i16*i16 -> i32, rshift-round-clip.
+pub fn mul_q(a: &QTensor, b: &QTensor, out_exp: i32) -> QTensor {
+    assert_eq!(a.shape(), b.shape());
+    let r = a.exp + b.exp - out_exp;
+    let data = a
+        .t
+        .data()
+        .iter()
+        .zip(b.t.data())
+        .map(|(&x, &y)| clip_act(rshift_round(x as i64 * y as i64, r)))
+        .collect();
+    QTensor { t: Tensor::from_vec(a.shape(), data), exp: out_exp }
+}
+
+/// Concat along channels after requantizing every part to `out_exp`.
+pub fn concat_q(parts: &[&QTensor], out_exp: i32) -> QTensor {
+    let reqs: Vec<QTensor> = parts.iter().map(|p| requant(p, out_exp)).collect();
+    let refs: Vec<&TensorI16> = reqs.iter().map(|q| &q.t).collect();
+    QTensor { t: Tensor::concat_channels(&refs), exp: out_exp }
+}
+
+// ---------------------------------------------------------------------------
+// LUT activations (paper §III-B3)
+// ---------------------------------------------------------------------------
+
+/// 256-entry activation table over [-t, t] with midpoint sampling.
+#[derive(Clone, Debug)]
+pub struct ActLut {
+    pub table: Vec<i16>,
+    pub out_exp: i32,
+}
+
+impl ActLut {
+    /// Build from a float function (must equal the python `build_lut`).
+    pub fn build(f: impl Fn(f64) -> f64, out_exp: i32) -> Self {
+        let n = LUT_ENTRIES;
+        let t = LUT_RANGE_T as f64;
+        let table = (0..n)
+            .map(|i| {
+                let x = -t + (i as f64 + 0.5) * (2.0 * t / n as f64);
+                let y = f(x) * (2.0f64).powi(out_exp) + 0.5;
+                y.floor().clamp(A_QMIN as f64, A_QMAX as f64) as i16
+            })
+            .collect();
+        ActLut { table, out_exp }
+    }
+
+    pub fn from_table(table: Vec<i16>, out_exp: i32) -> Self {
+        assert_eq!(table.len(), LUT_ENTRIES);
+        ActLut { table, out_exp }
+    }
+
+    /// Table index of an int16 activation at exponent `in_exp`:
+    /// `clamp((x + t*2^e) >> (e - 4))` (t = 8, 256 entries).
+    #[inline]
+    pub fn index(&self, x: i16, in_exp: i32) -> usize {
+        let bias = (LUT_RANGE_T as i64) * (1i64 << in_exp.max(0));
+        debug_assert!(in_exp >= 0);
+        let v = x as i64 + bias;
+        let shift = in_exp - 4;
+        let idx = if shift > 0 {
+            v >> shift
+        } else if shift < 0 {
+            v << (-shift)
+        } else {
+            v
+        };
+        idx.clamp(0, LUT_ENTRIES as i64 - 1) as usize
+    }
+
+    /// Apply to a whole tensor.
+    pub fn apply(&self, x: &QTensor) -> QTensor {
+        let data = x
+            .t
+            .data()
+            .iter()
+            .map(|&v| self.table[self.index(v, x.exp)])
+            .collect();
+        QTensor { t: Tensor::from_vec(x.shape(), data), exp: self.out_exp }
+    }
+}
+
+pub fn sigmoid_f64(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+pub fn elu_f64(x: f64) -> f64 {
+    if x >= 0.0 { x } else { x.min(0.0).exp() - 1.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SIGMOID_OUT_EXP;
+    use crate::util::Rng;
+
+    #[test]
+    fn rshift_round_matches_python_semantics() {
+        // same vector as python/tests/test_kernels.py
+        let v = [5i64, -5, 6, -6, 7, -7];
+        let got: Vec<i64> = v.iter().map(|&x| rshift_round(x, 2)).collect();
+        assert_eq!(got, [1, -1, 2, -1, 2, -2]);
+        assert_eq!(rshift_round(3, -2), 12);
+        assert_eq!(rshift_round(-9, 0), -9);
+    }
+
+    #[test]
+    fn quantize_round_half_up() {
+        assert_eq!(quantize_f32(0.5, 0), 1);
+        assert_eq!(quantize_f32(-0.5, 0), 0);
+        assert_eq!(quantize_f32(1.4999, 0), 1);
+        assert_eq!(quantize_f32(-1.5, 0), -1);
+        assert_eq!(quantize_f32(1e9, 0), A_QMAX as i16);
+        assert_eq!(quantize_f32(-1e9, 0), A_QMIN as i16);
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bound() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = rng.range_f32(-2.0, 2.0);
+            let e = 12;
+            let q = quantize_f32(x, e);
+            let y = dequantize_i16(q, e);
+            assert!((x - y).abs() <= 1.0 / (1 << e) as f32);
+        }
+    }
+
+    #[test]
+    fn add_q_property_vs_float() {
+        // quantized add approximates float add within one output LSB
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let ea = rng.range_i64(8, 12) as i32;
+            let eb = rng.range_i64(8, 12) as i32;
+            let eo = rng.range_i64(6, 10) as i32;
+            let xa = rng.range_f32(-1.5, 1.5);
+            let xb = rng.range_f32(-1.5, 1.5);
+            let a = QTensor {
+                t: Tensor::from_vec(&[1, 1, 1, 1], vec![quantize_f32(xa, ea)]),
+                exp: ea,
+            };
+            let b = QTensor {
+                t: Tensor::from_vec(&[1, 1, 1, 1], vec![quantize_f32(xb, eb)]),
+                exp: eb,
+            };
+            let y = add_q(&a, &b, eo);
+            let yf = dequantize_i16(y.t.data()[0], eo);
+            let lsb = 1.0 / (1 << eo.min(ea.min(eb))) as f32;
+            assert!(
+                (yf - (xa + xb)).abs() <= 2.0 * lsb,
+                "{xa}+{xb} -> {yf} (ea={ea} eb={eb} eo={eo})"
+            );
+        }
+    }
+
+    #[test]
+    fn mul_q_exact_for_small_ints() {
+        let a = QTensor {
+            t: Tensor::from_vec(&[1, 1, 1, 2], vec![6, -10]),
+            exp: 1,
+        };
+        let b = QTensor {
+            t: Tensor::from_vec(&[1, 1, 1, 2], vec![4, 4]),
+            exp: 1,
+        };
+        // (6/2)*(4/2)=6 ; out exp 1 -> 12 ; r = 1+1-1 = 1
+        let y = mul_q(&a, &b, 1);
+        assert_eq!(y.t.data(), &[12, -20]);
+    }
+
+    #[test]
+    fn lut_sigmoid_matches_reference_shape() {
+        let lut = ActLut::build(sigmoid_f64, SIGMOID_OUT_EXP);
+        assert_eq!(lut.table.len(), LUT_ENTRIES);
+        // monotone, clamped ends
+        assert!(lut.table.windows(2).all(|w| w[1] >= w[0]));
+        let q = QTensor {
+            t: Tensor::from_vec(&[1, 1, 1, 3], vec![0, 32000, -32000]),
+            exp: 10,
+        };
+        let y = lut.apply(&q);
+        let half = (1 << (SIGMOID_OUT_EXP - 1)) as i16;
+        assert!((y.t.data()[0] - half).abs() <= half / 16);
+        assert_eq!(y.t.data()[1], *lut.table.last().unwrap());
+        assert_eq!(y.t.data()[2], lut.table[0]);
+    }
+
+    #[test]
+    fn requant_roundtrip_lossless_when_widening() {
+        let q = QTensor {
+            t: Tensor::from_vec(&[1, 1, 1, 3], vec![100, -7, 3]),
+            exp: 8,
+        };
+        let up = requant(&q, 10); // lshift 2
+        let back = requant(&up, 8);
+        assert_eq!(back.t.data(), q.t.data());
+    }
+
+    #[test]
+    fn concat_q_requantizes_parts() {
+        let a = QTensor { t: Tensor::from_vec(&[1, 1, 1, 2], vec![4, 8]), exp: 2 };
+        let b = QTensor { t: Tensor::from_vec(&[1, 1, 1, 2], vec![4, 8]), exp: 3 };
+        let y = concat_q(&[&a, &b], 2);
+        assert_eq!(y.t.data(), &[4, 8, 2, 4]);
+    }
+}

@@ -1,0 +1,127 @@
+//! CLI dispatch for the `fadec` binary.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::PipelineOptions;
+use crate::hwsim::TableIIModel;
+use crate::util::Args;
+
+use super::eval::{self, EvalCtx};
+use super::{tables, Paths};
+
+const USAGE: &str = "\
+fadec — FADEC reproduction driver (see DESIGN.md §7)
+
+USAGE: fadec <command> [--artifacts DIR] [options]
+
+COMMANDS
+  analyze           Table I census + HW/SW partition (+ --mults for Fig 2)
+  resources         Table III resource model
+  model             Table II modeled ZCU104 column
+  run               one pipeline over a scene
+                      --platform float|ptq|hybrid  --scene NAME  --frames N
+  eval              evaluation suite:
+                      --table2 [--frames N] | --fig8 [--frames N]
+                      --qualitative [--out DIR] | --overhead [--frames N]
+  pipeline-chart    Fig 5 chart + overlap accounting [--frames N]
+  help              this text
+";
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "analyze" => {
+            print!("{}", tables::table_i());
+            println!();
+            print!("{}", tables::partition());
+            if args.has("mults") {
+                println!();
+                print!("{}", tables::fig_2());
+            }
+            Ok(())
+        }
+        "resources" => {
+            print!("{}", tables::resources_report());
+            Ok(())
+        }
+        "model" => {
+            print!("{}", tables::table_ii_modeled(&TableIIModel::compute()));
+            Ok(())
+        }
+        "run" => {
+            let ctx = EvalCtx::load(Paths::from_args(args))?;
+            let scene_name = args.get("scene").unwrap_or("chess-01");
+            let frames = args.get_usize("frames", 8);
+            let platform = args.get("platform").unwrap_or("hybrid");
+            let scene = ctx.dataset.load_scene(scene_name)?;
+            let run = match platform {
+                "float" => eval::run_float(&ctx, &scene, frames),
+                "ptq" => eval::run_ptq(&ctx, &scene, frames),
+                "hybrid" => {
+                    let mut coord = ctx.coordinator(PipelineOptions::default())?;
+                    eval::run_hybrid(&mut coord, &scene, frames)?
+                }
+                other => bail!("unknown platform '{other}'"),
+            };
+            let mut mse_sum = 0.0;
+            for (i, d) in run.depths.iter().enumerate() {
+                mse_sum += crate::metrics::mse_tensor(d, &scene.depth_tensor(i));
+            }
+            println!(
+                "{platform} on {scene_name}: {} frames, median {:.4} s/frame \
+                 (std {:.4}), mean MSE {:.4}",
+                run.depths.len(),
+                run.timing.median(),
+                run.timing.std(),
+                mse_sum / run.depths.len() as f64
+            );
+            Ok(())
+        }
+        "eval" => {
+            let ctx = EvalCtx::load(Paths::from_args(args))?;
+            let mut did = false;
+            if args.has("table2") {
+                let frames = args.get_usize("frames", 8);
+                let scenes: Vec<&str> =
+                    crate::data::dataset::EVAL_SCENES[..4].to_vec();
+                print!("{}", eval::table_ii_measured(&ctx, frames, &scenes)?);
+                print!("{}", tables::table_ii_modeled(&TableIIModel::compute()));
+                did = true;
+            }
+            if args.has("fig8") {
+                print!("{}", eval::fig8(&ctx, args.get_usize("frames", 8))?);
+                did = true;
+            }
+            if args.has("qualitative") {
+                let out = PathBuf::from(args.get("out").unwrap_or("depth_maps"));
+                print!("{}", eval::qualitative(&ctx, &out)?);
+                did = true;
+            }
+            if args.has("overhead") {
+                print!(
+                    "{}",
+                    eval::overhead_report(&ctx, args.get_usize("frames", 16))?
+                );
+                did = true;
+            }
+            if !did {
+                bail!("eval needs one of --table2 --fig8 --qualitative --overhead");
+            }
+            Ok(())
+        }
+        "pipeline-chart" => {
+            let ctx = EvalCtx::load(Paths::from_args(args))?;
+            print!(
+                "{}",
+                eval::pipeline_chart(&ctx, args.get_usize("frames", 8))?
+            );
+            Ok(())
+        }
+        "help" | _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Evaluation drivers: the measured Table II, the extern overhead
+//! (paper §IV-A), Fig 5 (pipeline chart), Figs 6/7 (qualitative depth
+//! maps), Fig 8 (scene-by-scene ΔMSE).
+
+use std::fs;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config;
+use crate::coordinator::{Coordinator, PipelineOptions};
+use crate::data::dataset::{Dataset, Scene, EVAL_SCENES};
+use crate::data::manifest::Manifest;
+use crate::kb::KeyframeBuffer;
+use crate::metrics;
+use crate::model::{FloatModel, FloatParams, FloatState, QuantModel, QuantParams, QuantState};
+use crate::tensor::TensorF;
+use crate::util::TimingStats;
+
+use super::Paths;
+
+/// Everything loaded once for evaluation.
+pub struct EvalCtx {
+    pub manifest: Manifest,
+    pub fp: FloatParams,
+    pub qp: Arc<QuantParams>,
+    pub dataset: Dataset,
+    pub paths: Paths,
+}
+
+impl EvalCtx {
+    pub fn load(paths: Paths) -> Result<Self> {
+        let manifest = Manifest::load(&paths.manifest())?;
+        let fp = FloatParams::load(&paths.weights())?;
+        let qp = Arc::new(QuantParams::load(&paths.qparams(), &manifest)?);
+        qp.validate()?;
+        let dataset = Dataset::open(&paths.dataset())?;
+        Ok(EvalCtx { manifest, fp, qp, dataset, paths })
+    }
+
+    pub fn coordinator(&self, opts: PipelineOptions) -> Result<Coordinator> {
+        Coordinator::new(&self.paths.artifacts, &self.manifest,
+                         Arc::clone(&self.qp), opts)
+    }
+}
+
+/// Per-frame depths of one platform over one scene.
+pub struct SceneRun {
+    pub depths: Vec<TensorF>,
+    pub timing: TimingStats,
+}
+
+/// CPU-only float baseline over a scene (Table II row 1).
+pub fn run_float(ctx: &EvalCtx, scene: &Scene, n: usize) -> SceneRun {
+    let model = FloatModel::new(&ctx.fp);
+    let mut kb = KeyframeBuffer::new();
+    let mut state = FloatState::zero();
+    let mut out = SceneRun { depths: Vec::new(), timing: TimingStats::default() };
+    for i in 0..n.min(scene.len()) {
+        let img = scene.normalized_image(i);
+        let t0 = Instant::now();
+        let (depth, f_half) = model.step(&img, &scene.poses[i], &kb, &mut state);
+        out.timing.push(t0.elapsed().as_secs_f64());
+        kb.maybe_insert(scene.poses[i], f_half);
+        out.depths.push(depth);
+    }
+    out
+}
+
+/// CPU-only PTQ baseline over a scene (Table II row 2).
+pub fn run_ptq(ctx: &EvalCtx, scene: &Scene, n: usize) -> SceneRun {
+    let model = QuantModel::new(&ctx.qp);
+    let mut kb = KeyframeBuffer::new();
+    let mut state = QuantState::zero(&ctx.qp);
+    let mut out = SceneRun { depths: Vec::new(), timing: TimingStats::default() };
+    for i in 0..n.min(scene.len()) {
+        let img = scene.normalized_image(i);
+        let t0 = Instant::now();
+        let (depth, f_half) = model.step(&img, &scene.poses[i], &kb, &mut state);
+        out.timing.push(t0.elapsed().as_secs_f64());
+        kb.maybe_insert(scene.poses[i], f_half);
+        out.depths.push(depth);
+    }
+    out
+}
+
+/// Hybrid PL+CPU over a scene (Table II row 3).
+pub fn run_hybrid(coord: &mut Coordinator, scene: &Scene, n: usize) -> Result<SceneRun> {
+    coord.reset_stream();
+    let mut out = SceneRun { depths: Vec::new(), timing: TimingStats::default() };
+    for i in 0..n.min(scene.len()) {
+        let img = scene.normalized_image(i);
+        let t0 = Instant::now();
+        let fo = coord.step(&img, &scene.poses[i])?;
+        out.timing.push(t0.elapsed().as_secs_f64());
+        out.depths.push(fo.depth);
+    }
+    Ok(out)
+}
+
+/// Measured Table II over the evaluation scenes.
+pub fn table_ii_measured(ctx: &EvalCtx, frames_per_scene: usize,
+                         scenes: &[&str]) -> Result<String> {
+    let mut t_float = TimingStats::default();
+    let mut t_ptq = TimingStats::default();
+    let mut t_hyb = TimingStats::default();
+    let mut coord = ctx.coordinator(PipelineOptions::default())?;
+    for name in scenes {
+        let scene = ctx.dataset.load_scene(name)?;
+        let rf = run_float(ctx, &scene, frames_per_scene);
+        let rq = run_ptq(ctx, &scene, frames_per_scene);
+        let rh = run_hybrid(&mut coord, &scene, frames_per_scene)?;
+        t_float.samples.extend(rf.timing.samples);
+        t_ptq.samples.extend(rq.timing.samples);
+        t_hyb.samples.extend(rh.timing.samples);
+    }
+    let speedup = t_float.median() / t_hyb.median();
+    Ok(format!(
+        "Table II — measured on this host (median / std per frame, {} scenes x {} frames)\n\
+         platform            median [s]   std [s]\n\
+         CPU-only            {:9.4}   {:8.4}   (paper 16.744 / 0.049)\n\
+         CPU-only (w/ PTQ)   {:9.4}   {:8.4}   (paper 13.248 / 0.035)\n\
+         PL + CPU (ours)     {:9.4}   {:8.4}   (paper  0.278 / 0.118)\n\
+         measured speedup    {:9.1}x               (paper 60.2x)\n",
+        scenes.len(), frames_per_scene,
+        t_float.median(), t_float.std(),
+        t_ptq.median(), t_ptq.std(),
+        t_hyb.median(), t_hyb.std(),
+        speedup,
+    ))
+}
+
+/// Extern overhead (paper §IV-A: 4.7 ms median, 1.69% of execution time).
+pub fn overhead_report(ctx: &EvalCtx, frames: usize) -> Result<String> {
+    let mut coord = ctx.coordinator(PipelineOptions::default())?;
+    let scene = ctx.dataset.load_scene(EVAL_SCENES[0])?;
+    coord.reset_stream();
+    let _ = coord.take_extern_stats();
+    let mut frame_times = TimingStats::default();
+    let mut per_frame_overhead = TimingStats::default();
+    for i in 0..frames.min(scene.len()) {
+        let img = scene.normalized_image(i);
+        let t0 = Instant::now();
+        coord.step(&img, &scene.poses[i])?;
+        frame_times.push(t0.elapsed().as_secs_f64());
+        let stats = coord.take_extern_stats();
+        per_frame_overhead.push(stats.total_overhead());
+    }
+    let share = per_frame_overhead.median() / frame_times.median();
+    Ok(format!(
+        "extern overhead — (HW wait) - (SW processing) per frame\n\
+         median overhead: {:.3} ms   (paper: 4.7 ms)\n\
+         median frame:    {:.3} ms\n\
+         share:           {:.2}%     (paper: 1.69%)\n",
+        per_frame_overhead.median() * 1e3,
+        frame_times.median() * 1e3,
+        share * 100.0
+    ))
+}
+
+/// Fig 5: pipeline chart of a representative frame + overlap accounting.
+pub fn pipeline_chart(ctx: &EvalCtx, frames: usize) -> Result<String> {
+    let mut coord = ctx.coordinator(PipelineOptions::default())?;
+    let scene = ctx.dataset.load_scene(EVAL_SCENES[0])?;
+    let mut last = None;
+    let mut cvf_hidden = TimingStats::default();
+    for i in 0..frames.min(scene.len()) {
+        let img = scene.normalized_image(i);
+        let fo = coord.step(&img, &scene.poses[i])?;
+        if i >= 2 {
+            // steady state: KB populated, correction active
+            cvf_hidden.push(fo.profile.hidden_fraction("cvf_prep"));
+        }
+        last = Some(fo.profile);
+    }
+    let p = last.context("no frames")?;
+    Ok(format!(
+        "Fig 5 — pipeline chart (last frame, steady state)\n{}\n\
+         CVF preparation hidden behind PL: {:.1}% median (paper: 93% of CVF hidden)\n",
+        p.chart(72),
+        cvf_hidden.median() * 100.0
+    ))
+}
+
+/// Fig 8: per-scene MSE difference (accelerator - float reference).
+pub fn fig8(ctx: &EvalCtx, frames_per_scene: usize) -> Result<String> {
+    let mut coord = ctx.coordinator(PipelineOptions::default())?;
+    let mut out = String::from(
+        "Fig 8 — scene-by-scene MSE (float, PTQ-CPU, hybrid, Δ = hybrid - float)\n\
+         scene            MSE(float)  MSE(ptq)   MSE(ours)  ΔMSE      Δ/float\n",
+    );
+    for name in EVAL_SCENES {
+        let scene = ctx.dataset.load_scene(name)?;
+        let n = frames_per_scene.min(scene.len());
+        let rf = run_float(ctx, &scene, n);
+        let rq = run_ptq(ctx, &scene, n);
+        let rh = run_hybrid(&mut coord, &scene, n)?;
+        // frame 0 is the cold-start frame (empty KB -> zero cost
+        // volume); stereo from video needs a measurement frame, so the
+        // accuracy average starts at frame 1 (as does DeepVideoMVS)
+        let (mut mf, mut mq, mut mh) = (0.0, 0.0, 0.0);
+        for i in 1..n {
+            let gt = scene.depth_tensor(i);
+            mf += metrics::mse_tensor(&rf.depths[i], &gt);
+            mq += metrics::mse_tensor(&rq.depths[i], &gt);
+            mh += metrics::mse_tensor(&rh.depths[i], &gt);
+        }
+        let m = (n - 1).max(1) as f64;
+        let (mf, mq, mh) = (mf / m, mq / m, mh / m);
+        out.push_str(&format!(
+            "{name:<16} {mf:>10.4} {mq:>10.4} {mh:>10.4} {:>+9.4} {:>+8.1}%\n",
+            mh - mf,
+            100.0 * (mh - mf) / mf
+        ));
+    }
+    out.push_str("paper: degradation below 10% of the float MSE in most scenes\n");
+    Ok(out)
+}
+
+/// Figs 6/7: qualitative depth maps for two frames, written as PGMs.
+pub fn qualitative(ctx: &EvalCtx, out_dir: &Path) -> Result<String> {
+    fs::create_dir_all(out_dir)?;
+    let mut coord = ctx.coordinator(PipelineOptions::default())?;
+    let mut report = String::from(
+        "Figs 6/7 — qualitative depth maps (PGMs under the output dir)\n\
+         frame                         MSE(float)  MSE(ptq)  MSE(ours)\n",
+    );
+    // fire-01 frame 13 and redkitchen-07 frame 26 stand in for the
+    // paper's fire-seq-01 #000139 and redkitchen-seq-07 #000268
+    for (scene_name, fidx) in [("fire-01", 13usize), ("redkitchen-07", 26)] {
+        let scene = ctx.dataset.load_scene(scene_name)?;
+        let n = fidx + 1;
+        let rf = run_float(ctx, &scene, n);
+        let rq = run_ptq(ctx, &scene, n);
+        let rh = run_hybrid(&mut coord, &scene, n)?;
+        let gt = scene.depth_tensor(fidx);
+        let tag = format!("{scene_name}_{fidx:06}");
+        write_pgm(&out_dir.join(format!("{tag}_gt.pgm")), &gt)?;
+        write_pgm(&out_dir.join(format!("{tag}_float.pgm")), &rf.depths[fidx])?;
+        write_pgm(&out_dir.join(format!("{tag}_ptq.pgm")), &rq.depths[fidx])?;
+        write_pgm(&out_dir.join(format!("{tag}_ours.pgm")), &rh.depths[fidx])?;
+        report.push_str(&format!(
+            "{tag:<28} {:>10.4} {:>9.4} {:>9.4}\n",
+            metrics::mse_tensor(&rf.depths[fidx], &gt),
+            metrics::mse_tensor(&rq.depths[fidx], &gt),
+            metrics::mse_tensor(&rh.depths[fidx], &gt),
+        ));
+    }
+    Ok(report)
+}
+
+/// Write a depth map as an 8-bit PGM (near = bright).
+pub fn write_pgm(path: &Path, depth: &TensorF) -> Result<()> {
+    let (_, _, h, w) = depth.nchw();
+    let mut buf = format!("P5\n{w} {h}\n255\n").into_bytes();
+    for &d in depth.data() {
+        let t = (config::MAX_DEPTH - d.clamp(config::MIN_DEPTH, config::MAX_DEPTH))
+            / (config::MAX_DEPTH - config::MIN_DEPTH);
+        buf.push((t * 255.0) as u8);
+    }
+    fs::write(path, buf)?;
+    Ok(())
+}

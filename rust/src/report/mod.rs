@@ -1,0 +1,43 @@
+//! Report generation: every table and figure of the paper, printed from
+//! the living system (see DESIGN.md §7 for the experiment index).
+
+pub mod cli;
+pub mod eval;
+pub mod tables;
+
+use std::path::PathBuf;
+
+/// Locations of the build artifacts (relative to the repo root by
+/// default; override with `--artifacts`).
+pub struct Paths {
+    pub artifacts: PathBuf,
+}
+
+impl Paths {
+    pub fn from_args(args: &crate::util::Args) -> Self {
+        let artifacts = PathBuf::from(
+            args.get("artifacts").unwrap_or("artifacts"),
+        );
+        Paths { artifacts }
+    }
+
+    pub fn manifest(&self) -> PathBuf {
+        self.artifacts.join("manifest.txt")
+    }
+
+    pub fn weights(&self) -> PathBuf {
+        self.artifacts.join("weights.bin")
+    }
+
+    pub fn qparams(&self) -> PathBuf {
+        self.artifacts.join("qparams.bin")
+    }
+
+    pub fn dataset(&self) -> PathBuf {
+        self.artifacts.join("dataset")
+    }
+
+    pub fn golden(&self) -> PathBuf {
+        self.artifacts.join("golden")
+    }
+}

@@ -1,0 +1,155 @@
+//! Table/figure printers (paper-formatted rows next to ours).
+
+use crate::codesign;
+use crate::hwsim::{ResourceModel, TableIIModel, Utilization};
+
+/// Table I: operator census per process.
+pub fn table_i() -> String {
+    let got = codesign::op_census();
+    let mut out = String::new();
+    out.push_str(
+        "Table I — operations per process (ours / paper)\n\
+         operation            FE        FS        CVF       CVE       CL        CVD\n",
+    );
+    for (row, paper) in codesign::PAPER_TABLE_I {
+        out.push_str(&format!("{row:<16}"));
+        for (pi, p) in codesign::PROCESSES.iter().enumerate() {
+            let g = got[p][row];
+            let mark = if g == paper[pi] { ' ' } else { '!' };
+            out.push_str(&format!(" {g:>4}/{:<4}{mark}", paper[pi]));
+        }
+        out.push('\n');
+    }
+    let status = match codesign::table_i_matches() {
+        Ok(()) => "MATCHES the paper exactly".to_string(),
+        Err(e) => format!("MISMATCH: {e}"),
+    };
+    out.push_str(&format!("census {status}\n"));
+    out
+}
+
+/// Fig 2: multiplication share per process.
+pub fn fig_2() -> String {
+    let m = codesign::total_mults();
+    let tot: u64 = m.values().sum();
+    let mut out = String::new();
+    out.push_str("Fig 2 — multiplications per process (weighted by tensor size)\n");
+    for p in codesign::PROCESSES {
+        let v = m[p];
+        let pct = 100.0 * v as f64 / tot as f64;
+        let bar = "#".repeat((pct / 2.0).round() as usize);
+        out.push_str(&format!("{p:<4} {v:>12}  {pct:5.1}%  {bar}\n"));
+    }
+    let cve_cvd = 100.0 * (m["CVE"] + m["CVD"]) as f64 / tot as f64;
+    let cvf = 100.0 * m["CVF"] as f64 / tot as f64;
+    out.push_str(&format!(
+        "CVE+CVD share: {cve_cvd:.1}% (paper: 82.4%)   CVF share: {cvf:.1}% (paper: 5.0%)\n"
+    ));
+    let cm = codesign::conv_mults();
+    out.push_str(&format!(
+        "conv share inside CVE+CVD: {:.1}% (paper: >99%)\n",
+        100.0 * (cm["CVE"] + cm["CVD"]) as f64 / (m["CVE"] + m["CVD"]) as f64
+    ));
+    out
+}
+
+/// The HW/SW partition table (paper §III-A3).
+pub fn partition() -> String {
+    let mut out = String::new();
+    out.push_str("HW/SW partitioning (derived, paper §III-A3)\n");
+    out.push_str(&format!(
+        "{:<16} {:<5} {:<22} rationale\n",
+        "operation", "where", "access pattern"
+    ));
+    for d in codesign::partition() {
+        out.push_str(&format!(
+            "{:<16} {:<5} {:<22} {}\n",
+            d.op,
+            match d.assign {
+                codesign::Assign::Hw => "HW",
+                codesign::Assign::Sw => "SW",
+            },
+            d.access_pattern,
+            d.rationale
+        ));
+    }
+    out
+}
+
+/// Table III: resource utilization (modeled).
+pub fn table_iii(u: &Utilization) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Table III — ZCU104 resource model (ours vs paper's Vivado report)\n\
+         name   modeled   paper    available  modeled%  paper%\n",
+    );
+    let paper: std::collections::BTreeMap<&str, u64> =
+        crate::hwsim::resources::PAPER_TABLE_III.into_iter().collect();
+    for (name, used, avail) in u.rows() {
+        let p = paper[name];
+        out.push_str(&format!(
+            "{name:<6} {used:>8} {p:>8} {avail:>10} {:>8.1}% {:>6.1}%\n",
+            100.0 * used as f64 / avail as f64,
+            100.0 * p as f64 / avail as f64
+        ));
+    }
+    out
+}
+
+/// Table II (modeled ZCU104 column).
+pub fn table_ii_modeled(t: &TableIIModel) -> String {
+    format!(
+        "Table II — modeled ZCU104 times (paper measured in parentheses)\n\
+         CPU-only          {:8.3} s   (16.744 s)\n\
+         CPU-only (w/ PTQ) {:8.3} s   (13.248 s)\n\
+         PL + CPU (ours)   {:8.3} s   (0.278 s)  @ {:.3} MHz\n\
+         speedup           {:8.1} x   (60.2 x)\n",
+        t.cpu_only_s, t.cpu_ptq_s, t.hybrid_s, t.clock_mhz, t.speedup
+    )
+}
+
+/// Full resource report with the inventory.
+pub fn resources_report() -> String {
+    let model = ResourceModel::with_defaults();
+    let (dense, dw) = model.pipeline_inventory();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "pipeline inventory: dense {:?}, depthwise {:?}\n\
+         weight storage: {:.1} Kb, largest activation: {:.1} Kb\n\n",
+        dense,
+        dw,
+        model.weight_bits() as f64 / 1024.0,
+        model.max_activation_bits() as f64 / 1024.0,
+    ));
+    out.push_str(&table_iii(&model.estimate()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_i_prints_and_matches() {
+        let t = table_i();
+        assert!(t.contains("MATCHES the paper exactly"), "{t}");
+        assert!(!t.contains('!'), "mismatch marker present:\n{t}");
+    }
+
+    #[test]
+    fn fig2_mentions_all_processes() {
+        let f = fig_2();
+        for p in codesign::PROCESSES {
+            assert!(f.contains(p));
+        }
+    }
+
+    #[test]
+    fn table_iii_prints_five_rows() {
+        let u = ResourceModel::with_defaults().estimate();
+        let t = table_iii(&u);
+        for name in ["Slice", "LUT", "FF", "DSP", "BRAM"] {
+            assert!(t.contains(name));
+        }
+    }
+}

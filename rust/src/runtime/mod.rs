@@ -1,0 +1,156 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the CPU PJRT client. This is the "programmable
+//! logic" of the reproduction: each artifact plays the role of one
+//! FSM-sequenced stage group of FADEC's accelerator, compiled once at
+//! startup (the analog of configuring the bitstream) and executed many
+//! times per frame.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md §9).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::manifest::{Manifest, SegmentDesc};
+use crate::quant::QTensor;
+use crate::tensor::Tensor;
+
+/// One compiled HW segment.
+pub struct Segment {
+    pub desc: SegmentDesc,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Segment {
+    /// Execute with int16 inputs in manifest order; returns the outputs
+    /// as QTensors with manifest exponents.
+    pub fn execute(&self, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.desc.inputs.len(),
+            "segment {}: {} inputs given, {} expected",
+            self.desc.name,
+            inputs.len(),
+            self.desc.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (q, d) in inputs.iter().zip(&self.desc.inputs) {
+            anyhow::ensure!(
+                q.t.shape() == d.shape.as_slice(),
+                "segment {}: input '{}' shape {:?} != manifest {:?}",
+                self.desc.name,
+                d.name,
+                q.t.shape(),
+                d.shape
+            );
+            anyhow::ensure!(
+                q.exp == d.exp,
+                "segment {}: input '{}' exponent {} != manifest {}",
+                self.desc.name,
+                d.name,
+                q.exp,
+                d.exp
+            );
+            literals.push(literal_from_i16(&q.t, &d.shape));
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple result
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.desc.outputs.len(),
+            "segment {}: {} outputs returned, {} in manifest",
+            self.desc.name,
+            parts.len(),
+            self.desc.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, d) in parts.into_iter().zip(&self.desc.outputs) {
+            let v: Vec<i16> = lit.to_vec::<i16>()?;
+            anyhow::ensure!(
+                v.len() == d.numel(),
+                "segment {}: output '{}' size {} != {:?}",
+                self.desc.name,
+                d.name,
+                v.len(),
+                d.shape
+            );
+            out.push(QTensor {
+                t: Tensor::from_vec(&d.shape, v),
+                exp: d.exp,
+            });
+        }
+        Ok(out)
+    }
+}
+
+fn literal_from_i16(t: &Tensor<i16>, shape: &[usize]) -> xla::Literal {
+    let dims: Vec<usize> = shape.to_vec();
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 2)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S16,
+        &dims,
+        bytes,
+    )
+    .expect("literal creation")
+}
+
+/// The PL analog: a PJRT CPU client plus every compiled segment.
+pub struct HwRuntime {
+    pub client: xla::PjRtClient,
+    pub segments: HashMap<String, Segment>,
+    pub compile_seconds: f64,
+}
+
+impl HwRuntime {
+    /// Load + compile every artifact in the manifest ("flash the
+    /// bitstream"). Compilation happens once; execution is reused across
+    /// frames, matching the paper's deployment model.
+    pub fn load(artifacts_dir: &Path, manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let t0 = Instant::now();
+        let mut segments = HashMap::new();
+        for desc in &manifest.segments {
+            let path = artifacts_dir.join(&desc.hlo);
+            if !path.is_file() {
+                bail!(
+                    "artifact {} missing — run `make artifacts`",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", desc.name))?;
+            segments.insert(
+                desc.name.clone(),
+                Segment { desc: desc.clone(), exe },
+            );
+        }
+        Ok(HwRuntime {
+            client,
+            segments,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn segment(&self, name: &str) -> Result<&Segment> {
+        self.segments
+            .get(name)
+            .with_context(|| format!("segment '{name}' not loaded"))
+    }
+
+    /// Execute a segment by name.
+    pub fn run(&self, name: &str, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+        self.segment(name)?.execute(inputs)
+    }
+}

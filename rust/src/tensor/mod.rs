@@ -1,0 +1,219 @@
+//! Minimal dense tensor (row-major, owned) used by the software operators
+//! and the CPU-only baselines.
+//!
+//! The request path manipulates small NCHW maps (at most 64x32x48), so a
+//! simple `Vec`-backed container with contiguous row-major layout is both
+//! sufficient and cache-friendly. No views/strides: the paper's software
+//! side also works on packed buffers in CMA memory.
+
+use std::fmt;
+
+/// Dense row-major tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI16 = Tensor<i16>;
+pub type TensorI32 = Tensor<i32>;
+pub type TensorI8 = Tensor<i8>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], v: T) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // --- NCHW helpers (the only layout used on the request path) ---------
+
+    /// (N, C, H, W) of a 4-D tensor.
+    #[inline]
+    pub fn nchw(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.shape.len(), 4, "expected 4-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> T {
+        let (_, cc, hh, ww) = self.nchw();
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: T) {
+        let (_, cc, hh, ww) = self.nchw();
+        self.data[((n * cc + c) * hh + h) * ww + w] = v;
+    }
+
+    /// Contiguous channel plane (h*w slice) of batch 0.
+    #[inline]
+    pub fn plane(&self, c: usize) -> &[T] {
+        let (_, cc, hh, ww) = self.nchw();
+        assert!(c < cc);
+        &self.data[c * hh * ww..(c + 1) * hh * ww]
+    }
+
+    #[inline]
+    pub fn plane_mut(&mut self, c: usize) -> &mut [T] {
+        let (_, cc, hh, ww) = self.nchw();
+        assert!(c < cc);
+        &mut self.data[c * hh * ww..(c + 1) * hh * ww]
+    }
+
+    /// Concatenate along the channel axis (dim 1), batch 1 assumed.
+    pub fn concat_channels(parts: &[&Tensor<T>]) -> Self {
+        assert!(!parts.is_empty());
+        let (_, _, h, w) = parts[0].nchw();
+        let c_total: usize = parts.iter().map(|p| p.nchw().1).sum();
+        let mut out = Vec::with_capacity(c_total * h * w);
+        for p in parts {
+            let (_, _, ph, pw) = p.nchw();
+            assert_eq!((ph, pw), (h, w), "spatial mismatch in concat");
+            out.extend_from_slice(p.data());
+        }
+        Tensor::from_vec(&[1, c_total, h, w], out)
+    }
+
+    /// Channel slice [c0, c1) (dim 1), batch 1 assumed.
+    pub fn slice_channels(&self, c0: usize, c1: usize) -> Self {
+        let (_, c, h, w) = self.nchw();
+        assert!(c0 < c1 && c1 <= c);
+        let data = self.data[c0 * h * w..c1 * h * w].to_vec();
+        Tensor::from_vec(&[1, c1 - c0, h, w], data)
+    }
+}
+
+impl TensorF {
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> TensorF {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &TensorF) -> TensorF {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn mul(&self, other: &TensorF) -> TensorF {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a * b)
+                .collect(),
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+impl<T> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{}]", self.shape, self.data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut t = TensorF::zeros(&[1, 2, 3, 4]);
+        t.set4(0, 1, 2, 3, 7.5);
+        assert_eq!(t.at4(0, 1, 2, 3), 7.5);
+        assert_eq!(t.data()[1 * 12 + 2 * 4 + 3], 7.5);
+    }
+
+    #[test]
+    fn concat_and_slice_roundtrip() {
+        let a = TensorF::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let b = TensorF::from_vec(&[1, 2, 2, 2],
+                                  vec![5., 6., 7., 8., 9., 10., 11., 12.]);
+        let cat = TensorF::concat_channels(&[&a, &b]);
+        assert_eq!(cat.shape(), &[1, 3, 2, 2]);
+        assert_eq!(cat.slice_channels(0, 1), a);
+        assert_eq!(cat.slice_channels(1, 3), b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        TensorF::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn plane_is_contiguous() {
+        let t = TensorF::from_vec(&[1, 2, 1, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(t.plane(1), &[3., 4.]);
+    }
+}

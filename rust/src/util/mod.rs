@@ -1,0 +1,217 @@
+//! Small self-contained utilities: a seeded PRNG for the property tests
+//! (no external crates are vendored beyond `xla`/`anyhow`), timing
+//! aggregation helpers, and a tiny CLI argument reader.
+
+/// SplitMix64 — tiny, high-quality seeded PRNG for tests and workload
+/// generation. Deterministic across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_add(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + (self.below((hi - lo + 1) as u64) as i64)
+    }
+
+    /// Uniform float in [0, 1).
+    #[inline]
+    pub fn unit_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform float in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.unit_f32()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal_f32(&mut self) -> f32 {
+        let u1 = self.unit_f32().max(1e-12);
+        let u2 = self.unit_f32();
+        (-2.0 * u1.ln()).sqrt() * (std::f32::consts::TAU * u2).cos()
+    }
+}
+
+/// Median / std aggregation as reported in Table II of the paper.
+#[derive(Clone, Debug, Default)]
+pub struct TimingStats {
+    pub samples: Vec<f64>,
+}
+
+impl TimingStats {
+    pub fn push(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+
+    pub fn median(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n % 2 == 1 { s[n / 2] } else { 0.5 * (s[n / 2 - 1] + s[n / 2]) }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let v = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        v.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Tiny benchmark harness (criterion is not vendored): warmup + timed
+/// iterations, reporting the paper's statistics (median / std).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> TimingStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = TimingStats::default();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "bench {name:<32} median {:>10.4} ms   std {:>8.4} ms   min {:>10.4} ms   (n={iters})",
+        stats.median() * 1e3,
+        stats.std() * 1e3,
+        stats.min() * 1e3
+    );
+    stats
+}
+
+/// Minimal `--flag value` / `--switch` argument reader (no clap vendored).
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Self {
+        let mut positional = Vec::new();
+        let mut flags: Vec<(String, Option<String>)> = Vec::new();
+        let argv: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.push((k.to_string(), Some(v.to_string())));
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.push((name.to_string(), Some(argv[i + 1].clone())));
+                    i += 1;
+                } else {
+                    flags.push((name.to_string(), None));
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == name)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_unit_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.unit_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn median_and_std() {
+        let mut t = TimingStats::default();
+        for v in [3.0, 1.0, 2.0] {
+            t.push(v);
+        }
+        assert_eq!(t.median(), 2.0);
+        assert!((t.std() - 1.0).abs() < 1e-12);
+        t.push(4.0);
+        assert_eq!(t.median(), 2.5);
+    }
+
+    #[test]
+    fn args_parsing() {
+        let a = Args::parse(
+            ["run", "--scene", "chess-01", "--verbose", "--n=5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.positional, ["run"]);
+        assert_eq!(a.get("scene"), Some("chess-01"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("n", 0), 5);
+    }
+}

@@ -1,0 +1,162 @@
+//! System-level integration tests over the built artifacts: dataset
+//! integrity, manifest/weights/spec consistency, coordinator invariants
+//! under randomized streams, and report generation.
+//!
+//! Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use fadec::config;
+use fadec::coordinator::PipelineOptions;
+use fadec::data::dataset::{Dataset, EVAL_SCENES};
+use fadec::data::manifest::Manifest;
+use fadec::model::{specs, FloatParams, QuantParams};
+use fadec::util::Rng;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn dataset_all_scenes_load_and_are_sane() {
+    let ds = Dataset::open(&artifacts().join("dataset")).unwrap();
+    for name in EVAL_SCENES {
+        let s = ds.load_scene(name).unwrap();
+        assert!(s.len() >= 8, "{name} too short");
+        for i in 0..s.len() {
+            let d = &s.depths[i];
+            assert!(d.iter().all(|&v| (config::MIN_DEPTH..=config::MAX_DEPTH)
+                .contains(&v)));
+            // rigid pose
+            let p = &s.poses[i];
+            for r in 0..3 {
+                let mut norm = 0.0;
+                for c in 0..3 {
+                    norm += p.at(r, c) * p.at(r, c);
+                }
+                assert!((norm - 1.0).abs() < 1e-4, "{name} frame {i} row {r}");
+            }
+        }
+        // camera actually moves between first and last frame
+        let d = fadec::poses::pose_distance(&s.poses[0], &s.poses[s.len() - 1]);
+        assert!(d > 0.05, "{name}: static camera ({d})");
+    }
+}
+
+#[test]
+fn manifest_matches_specs_and_weights() {
+    let art = artifacts();
+    let manifest = Manifest::load(&art.join("manifest.txt")).unwrap();
+    let fp = FloatParams::load(&art.join("weights.bin")).unwrap();
+    let qp = QuantParams::load(&art.join("qparams.bin"), &manifest).unwrap();
+    qp.validate().unwrap();
+
+    // every conv spec has float + quant weights of matching shapes
+    for s in specs::all_conv_specs() {
+        let f = fp.conv(&s.name);
+        let q = qp.conv(&s.name);
+        let expect: Vec<usize> = if s.dw {
+            vec![s.cout, 1, s.k, s.k]
+        } else {
+            vec![s.cout, s.cin, s.k, s.k]
+        };
+        assert_eq!(f.w.shape(), expect.as_slice(), "{}", s.name);
+        assert_eq!(q.w.shape(), expect.as_slice(), "{}", s.name);
+        assert_eq!(f.b.len(), s.cout);
+        assert_eq!(q.b.len(), s.cout);
+        // quantized weights fit the 8-bit range by construction
+        assert!(q.w.data().iter().all(|&v| (-127..=127).contains(&v)),
+                "{} weights out of int8 range", s.name);
+    }
+    // every LN site has parameters
+    for n in specs::ln_names() {
+        assert_eq!(fp.ln(&n).gamma.len(), specs::ln_channels(&n));
+        assert_eq!(qp.ln(&n).gamma.len(), specs::ln_channels(&n));
+    }
+    // the manifest's 19 segments with consistent I/O shapes
+    assert_eq!(manifest.segments.len(), 19);
+    for seg in &manifest.segments {
+        assert!(!seg.inputs.is_empty() && !seg.outputs.is_empty());
+        for t in seg.inputs.iter().chain(&seg.outputs) {
+            assert_eq!(t.shape.len(), 4, "{}:{}", seg.name, t.name);
+            assert_eq!(t.shape[0], 1);
+        }
+    }
+    // training actually ran and converged below the init-loss regime
+    assert!(manifest.train_steps >= 100);
+    assert!(manifest.train_final_loss < 0.1,
+            "final loss {}", manifest.train_final_loss);
+}
+
+#[test]
+fn coordinator_invariants_under_randomized_stream() {
+    // Property test: whatever the (valid) pose sequence, the coordinator
+    // must produce depths within range, keep the KB within capacity, and
+    // never deadlock. Randomized poses around the dataset trajectory.
+    let art = artifacts();
+    let manifest = Manifest::load(&art.join("manifest.txt")).unwrap();
+    let qp = Arc::new(QuantParams::load(&art.join("qparams.bin"), &manifest).unwrap());
+    let ds = Dataset::open(&art.join("dataset")).unwrap();
+    let scene = ds.load_scene("office-03").unwrap();
+    let mut coord = fadec::coordinator::Coordinator::new(
+        &art, &manifest, qp, PipelineOptions::default(),
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(0xFADEC);
+    for trial in 0..3 {
+        coord.reset_stream();
+        for i in 0..5 {
+            // random frame / pose pairing stresses the KB + correction
+            let fi = rng.below(scene.len() as u64) as usize;
+            let img = scene.normalized_image(fi);
+            let pose = scene.poses[rng.below(scene.len() as u64) as usize];
+            let out = coord.step(&img, &pose).unwrap();
+            assert!(
+                out.depth.data().iter().all(|&d| (config::MIN_DEPTH - 1e-3
+                    ..=config::MAX_DEPTH + 1e-3)
+                    .contains(&d)),
+                "trial {trial} frame {i}: depth out of range"
+            );
+            assert!(coord.kb.len() <= config::KB_CAPACITY);
+            // profile sanity: stages within the frame, HW lane non-empty
+            let p = &out.profile;
+            assert!(p.hw_busy() > 0.0);
+            for s in &p.stages {
+                assert!(s.end_s >= s.start_s);
+                assert!(s.end_s <= p.total_s + 1e-6);
+            }
+        }
+    }
+}
+
+#[test]
+fn extern_overhead_definition_holds() {
+    // overhead = (HW wait) - (SW time) must be non-negative and small
+    // relative to the SW time for synchronous ops on an idle pool.
+    let link = fadec::coordinator::ExternLink::new(2);
+    for _ in 0..50 {
+        link.call("spin", || {
+            std::hint::black_box((0..20_000).fold(0u64, |a, b| a ^ b));
+        });
+    }
+    let stats = link.take_stats();
+    assert_eq!(stats.records.len(), 50);
+    for r in &stats.records {
+        assert!(r.overhead_seconds >= 0.0);
+        assert!(r.total_seconds >= r.sw_seconds);
+    }
+}
+
+#[test]
+fn reports_generate() {
+    let t1 = fadec::report::tables::table_i();
+    assert!(t1.contains("MATCHES"));
+    let f2 = fadec::report::tables::fig_2();
+    assert!(f2.contains("CVE+CVD share"));
+    let r = fadec::report::tables::resources_report();
+    assert!(r.contains("BRAM"));
+    let m = fadec::hwsim::TableIIModel::compute();
+    assert!(m.speedup > 10.0);
+}
