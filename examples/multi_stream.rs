@@ -1,0 +1,81 @@
+//! Multi-stream serving demo: one shared backend ("one bitstream"),
+//! N concurrent video streams multiplexed round-robin by `StreamServer`.
+//!
+//! Runs from a clean checkout — no `artifacts/` needed: the segments are
+//! served by the pure-software RefBackend with synthetic calibration,
+//! and each stream gets its own procedurally generated video. Per-stream
+//! and aggregate throughput are reported at the end.
+//!
+//!     cargo run --release --example multi_stream [-- --streams N --frames M]
+
+use std::sync::Arc;
+
+use fadec::config;
+use fadec::coordinator::{PipelineOptions, StreamServer};
+use fadec::data::dataset::Scene;
+use fadec::runtime::{HwBackend, RefBackend};
+use fadec::tensor::TensorF;
+use fadec::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_streams = args.get_usize("streams", config::DEFAULT_STREAMS);
+    let frames = args.get_usize("frames", 6);
+
+    // one backend instance, shared by every stream
+    let backend = Arc::new(RefBackend::synthetic(0));
+    let qp = Arc::clone(backend.qp());
+    println!(
+        "backend '{}': {} segments, serving {} concurrent streams x {} frames",
+        backend.kind(),
+        backend.manifest().segments.len(),
+        n_streams,
+        frames
+    );
+
+    let mut server = StreamServer::new(
+        Arc::clone(&backend) as Arc<dyn HwBackend>,
+        qp,
+        PipelineOptions::default(),
+    )?;
+    let streams: Vec<usize> = (0..n_streams).map(|_| server.open_stream()).collect();
+    // every stream is a different video (different seed/trajectory)
+    let scenes: Vec<Scene> = streams
+        .iter()
+        .map(|&s| Scene::synthetic(&format!("cam-{s}"), frames, 100 + s as u64))
+        .collect();
+
+    for i in 0..frames {
+        let imgs: Vec<TensorF> =
+            scenes.iter().map(|sc| sc.normalized_image(i)).collect();
+        let inputs: Vec<_> = streams
+            .iter()
+            .map(|&s| (s, &imgs[s], &scenes[s].poses[i]))
+            .collect();
+        let outs = server.run_round(&inputs)?;
+        let served: Vec<String> = outs
+            .iter()
+            .map(|(sid, out)| {
+                format!("s{sid}:{:5.1}ms", out.profile.total_s * 1e3)
+            })
+            .collect();
+        println!("round {i:>2}  [{}]", served.join(" "));
+    }
+
+    println!("\n{}", server.report());
+    let stats = server.take_extern_stats();
+    println!(
+        "extern crossings: {}   total overhead: {:.3} ms",
+        stats.records.len(),
+        stats.total_overhead() * 1e3
+    );
+
+    // isolation sanity: every session advanced exactly `frames` frames
+    // and kept its keyframe buffer within capacity
+    for &s in &streams {
+        assert_eq!(server.session(s).frames_done(), frames);
+        assert!(server.session(s).kb.len() <= config::KB_CAPACITY);
+    }
+    println!("all {n_streams} sessions isolated and up to date");
+    Ok(())
+}

@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
         Coordinator::new(art, &manifest, Arc::clone(&qp), PipelineOptions::default())?;
 
     let float_model = FloatModel::new(&fp);
-    let quant_model = QuantModel::new(&qp);
+    let quant_model = QuantModel::new(Arc::clone(&qp));
 
     let mut a_float = Acc::new();
     let mut a_ptq = Acc::new();

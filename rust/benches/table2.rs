@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // CPU-only PTQ (row 2)
-    let quant_model = QuantModel::new(&qp);
+    let quant_model = QuantModel::new(Arc::clone(&qp));
     let mut t_ptq = TimingStats::default();
     {
         let mut kb = KeyframeBuffer::new();

@@ -37,6 +37,23 @@ pub const A_QMIN: i32 = -(1 << (A_BITS - 1));
 pub const LUT_ENTRIES: usize = 256;
 pub const LUT_RANGE_T: f32 = 8.0;
 pub const SIGMOID_OUT_EXP: i32 = 14;
+/// ELU LUT output exponent (the `quant elu_exp` line of the manifest).
+pub const ELU_OUT_EXP: i32 = 13;
+
+// --- synthetic calibration (artifact-free RefBackend) ----------------------
+
+/// Uniform activation exponent used by `Manifest::synthetic` /
+/// `QuantParams::synthetic`: every boundary tensor and conv input runs at
+/// this exponent, so the whole segment graph is consistent by
+/// construction without a calibration pass.
+pub const SYNTH_ACT_EXP: i32 = 8;
+/// Weight exponent of synthetic int8 weights (w ≈ q / 2^7 ∈ [-0.5, 0.5]).
+pub const SYNTH_W_EXP: i32 = 7;
+
+// --- serving (coordinator::StreamServer) -----------------------------------
+
+/// Concurrent streams the multi-stream demo/tests open by default.
+pub const DEFAULT_STREAMS: usize = 4;
 
 // --- hardware model (paper §IV parallelism; consumed by hwsim) ------------
 

@@ -185,6 +185,11 @@ impl ExternLink {
     pub fn take_stats(&self) -> ExternStats {
         std::mem::take(&mut *self.stats.lock().unwrap())
     }
+
+    /// Number of CPU worker threads serving the opcode queue.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
 }
 
 impl Drop for ExternLink {

@@ -1,12 +1,27 @@
-//! L3 coordinator — the paper's system contribution: the extern HW<->SW
-//! protocol (§III-D1), the Fig-5 task-level pipeline (§III-D2) and its
-//! profiler, over the PJRT-loaded AOT segments ("PL") and the Rust
-//! software operators ("CPU").
+//! L3 coordinator — the paper's system contribution, split into the
+//! three serving layers (see `lib.rs` for the map):
+//!
+//! * `extern_link` — the HW<->SW *extern* protocol (§III-D1) as a job
+//!   queue over a CPU worker pool, with the paper's overhead accounting.
+//! * `session` — the **Session layer**: all cross-frame state of one
+//!   stream (`StreamSession`).
+//! * `pipeline` — the Fig-5 task-level pipeline (§III-D2) as an explicit
+//!   FSM (`PipelineEngine` + `FrameStage`), plus the single-stream
+//!   `Coordinator` facade; `profiler` records its schedule.
+//! * `server` — the **Server layer**: `StreamServer` multiplexes many
+//!   sessions over one shared `HwBackend`.
 
 pub mod extern_link;
 pub mod pipeline;
 pub mod profiler;
+pub mod server;
+pub mod session;
 
 pub use extern_link::{ExternLink, ExternRecord, ExternStats, Pending};
-pub use pipeline::{Coordinator, FrameOutput, PipelineOptions};
+pub use pipeline::{
+    Coordinator, FrameOutput, FrameStage, PipelineEngine, PipelineOptions,
+    SegmentHandles,
+};
 pub use profiler::{FrameProfile, Lane, Profiler, StageRecord};
+pub use server::StreamServer;
+pub use session::StreamSession;

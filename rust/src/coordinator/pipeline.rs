@@ -1,22 +1,30 @@
 //! The Fig-5 task-level pipeline (paper §III-D2) — the heart of the L3
-//! coordinator.
+//! coordinator, expressed as an explicit FSM.
 //!
-//! Per frame, the PL-driving thread executes the AOT segments in FSM
-//! order while the CPU workers run the software-friendly processes, with
-//! the paper's two overlaps:
+//! [`PipelineEngine`] is stateless across frames: it owns the shared
+//! backend handle, the extern link (CPU worker pool) and the pre-resolved
+//! [`SegmentHandles`]. One frame is a [`FrameTask`] walked through the
+//! named [`FrameStage`]s by `advance`, every stage taking
+//! `(&dyn HwBackend, &mut StreamSession)` — the cross-frame state lives
+//! entirely in the session (see `session.rs`), which is what lets a
+//! `StreamServer` multiplex many streams over one backend.
+//!
+//! The paper's two overlaps survive as schedule structure, not inline
+//! code:
 //!
 //!  * **CVF preparation** (plane-sweep grid sampling of the keyframe
-//!    features — needs only poses) runs concurrently with FE/FS on the
-//!    PL; only the small *finish* step (dot with the current feature)
-//!    blocks. The paper hides 93% of CVF this way.
-//!  * **Hidden-state correction** runs concurrently with FE/FS/CVE,
-//!    joined just before CL needs the corrected hidden state.
+//!    features — needs only poses) is posted in `SpawnSwTasks` and joined
+//!    in `CvfFinish`, so it runs concurrently with `FeFs` on the PL. The
+//!    paper hides 93% of CVF this way.
+//!  * **Hidden-state correction** is posted in `SpawnSwTasks` and joined
+//!    in `JoinHiddenCorrection`, concurrent with FE/FS/CVE.
 //!
 //! Everything else ping-pongs synchronously through the extern link
 //! (layer norms, bilinear upsamples, depth un-normalisation), exactly as
 //! FADEC's FSM suspends for each software op.
 
 use std::collections::HashMap;
+use std::mem;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -24,18 +32,18 @@ use anyhow::Result;
 
 use crate::config::{self, CVD_BODY_K3, N_HYPOTHESES, SW_THREADS};
 use crate::data::manifest::Manifest;
-use crate::kb::KeyframeBuffer;
 use crate::model::specs::cvd_carry_name;
 use crate::model::sw;
 use crate::model::weights::QuantParams;
 use crate::ops::{layer_norm, upsample_bilinear2x};
 use crate::poses::Mat4;
 use crate::quant::{dequantize_tensor, quantize_tensor, QTensor};
-use crate::runtime::HwRuntime;
+use crate::runtime::{HwBackend, HwRuntime, RefBackend, SegmentId};
 use crate::tensor::TensorF;
 
 use super::extern_link::{ExternLink, ExternStats, Pending};
 use super::profiler::{FrameProfile, Lane, Profiler};
+use super::session::StreamSession;
 
 /// Output of one pipelined frame.
 pub struct FrameOutput {
@@ -60,84 +68,306 @@ impl Default for PipelineOptions {
     }
 }
 
-/// The PL+CPU coordinator (Table II row 3).
-pub struct Coordinator {
-    pub hw: HwRuntime,
-    pub qp: Arc<QuantParams>,
-    pub link: ExternLink,
-    pub kb: KeyframeBuffer<QTensor>,
-    pub opts: PipelineOptions,
-    // cross-frame state (paper Fig. 1 bold dotted arrows)
-    h: QTensor,
-    c: QTensor,
-    depth_full: Arc<TensorF>,
-    pose_prev: Option<Mat4>,
-    frames_done: usize,
+/// Segment handles resolved once at engine construction; the per-frame
+/// hot path indexes the backend directly instead of hashing names.
+pub struct SegmentHandles {
+    pub fe_fs: SegmentId,
+    pub cve: SegmentId,
+    pub cl_gates: SegmentId,
+    pub cl_state: SegmentId,
+    pub cl_out: SegmentId,
+    pub cvd_entry: Vec<SegmentId>,
+    /// `cvd_mid[b][i-1]` = handle of `cvd_b{b}_mid{i}`.
+    pub cvd_mid: Vec<Vec<SegmentId>>,
+    pub cvd_head: Vec<SegmentId>,
 }
 
-impl Coordinator {
+impl SegmentHandles {
+    pub fn resolve(backend: &dyn HwBackend) -> Result<Self> {
+        let mut cvd_entry = Vec::with_capacity(5);
+        let mut cvd_mid = Vec::with_capacity(5);
+        let mut cvd_head = Vec::with_capacity(5);
+        for b in 0..5 {
+            cvd_entry.push(backend.resolve(&format!("cvd_b{b}_entry"))?);
+            let mut mids = Vec::new();
+            for i in 1..CVD_BODY_K3[b] {
+                mids.push(backend.resolve(&format!("cvd_b{b}_mid{i}"))?);
+            }
+            cvd_mid.push(mids);
+            cvd_head.push(backend.resolve(&format!("cvd_b{b}_head"))?);
+        }
+        Ok(SegmentHandles {
+            fe_fs: backend.resolve("fe_fs")?,
+            cve: backend.resolve("cve")?,
+            cl_gates: backend.resolve("cl_gates")?,
+            cl_state: backend.resolve("cl_state")?,
+            cl_out: backend.resolve("cl_out")?,
+            cvd_entry,
+            cvd_mid,
+            cvd_head,
+        })
+    }
+}
+
+/// Named stages of the per-frame FSM (paper Fig. 5). Frames traverse
+/// them strictly in order; the two posted SW tasks give the schedule its
+/// HW/SW overlap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameStage {
+    /// Post CVF preparation shards + hidden-state correction to the CPU
+    /// pool (join them immediately when `overlap` is off).
+    SpawnSwTasks,
+    /// Quantize the input image (input DMA analog).
+    QuantizeImage,
+    /// HW: feature extraction + shrinking (CVF prep runs meanwhile).
+    FeFs,
+    /// Extern: join CVF preparation, dot with the current feature.
+    CvfFinish,
+    /// HW: cost-volume encoder (correction still in flight).
+    Cve,
+    /// Join the corrected hidden state (must precede CL).
+    JoinHiddenCorrection,
+    /// ConvLSTM: HW gate conv / SW LN ping-pong.
+    ConvLstm,
+    /// Decoder: HW conv segments / SW LNs + bilinear upsamples.
+    Decoder,
+    /// SW: final upsample + depth un-normalisation.
+    DepthOut,
+    /// KB insertion + session state update (SW bookkeeping).
+    Commit,
+    Done,
+}
+
+impl FrameStage {
+    pub fn next(self) -> FrameStage {
+        use FrameStage::*;
+        match self {
+            SpawnSwTasks => QuantizeImage,
+            QuantizeImage => FeFs,
+            FeFs => CvfFinish,
+            CvfFinish => Cve,
+            Cve => JoinHiddenCorrection,
+            JoinHiddenCorrection => ConvLstm,
+            ConvLstm => Decoder,
+            Decoder => DepthOut,
+            DepthOut => Commit,
+            Commit => Done,
+            Done => Done,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        use FrameStage::*;
+        match self {
+            SpawnSwTasks => "spawn_sw_tasks",
+            QuantizeImage => "quantize_image",
+            FeFs => "fe_fs",
+            CvfFinish => "cvf_finish",
+            Cve => "cve",
+            JoinHiddenCorrection => "join_hidden_correction",
+            ConvLstm => "conv_lstm",
+            Decoder => "decoder",
+            DepthOut => "depth_out",
+            Commit => "commit",
+            Done => "done",
+        }
+    }
+}
+
+/// One in-flight frame: its FSM position plus every intra-frame carry.
+pub struct FrameTask<'f> {
+    img: &'f TensorF,
+    pose: Mat4,
+    pub stage: FrameStage,
+    prof: Profiler,
+    trace: Option<HashMap<String, QTensor>>,
+    // posted SW work (Fig-5 overlap)
+    prep_pending: Vec<Pending<Vec<TensorF>>>,
+    prep_ready: Option<Vec<TensorF>>,
+    corr_pending: Option<Pending<QTensor>>,
+    corr_ready: Option<QTensor>,
+    n_kf: usize,
+    // tensors flowing between stages
+    img_q: Option<QTensor>,
+    feats: Vec<QTensor>,
+    cost_q: Option<QTensor>,
+    enc: Vec<QTensor>,
+    h_corr: Option<QTensor>,
+    h_new: Option<QTensor>,
+    c_new: Option<QTensor>,
+    head_q: Option<QTensor>,
+    depth: Option<TensorF>,
+}
+
+impl<'f> FrameTask<'f> {
+    fn new(img: &'f TensorF, pose: Mat4, traced: bool) -> Self {
+        FrameTask {
+            img,
+            pose,
+            stage: FrameStage::SpawnSwTasks,
+            prof: Profiler::start(),
+            trace: if traced { Some(HashMap::new()) } else { None },
+            prep_pending: Vec::new(),
+            prep_ready: None,
+            corr_pending: None,
+            corr_ready: None,
+            n_kf: 0,
+            img_q: None,
+            feats: Vec::new(),
+            cost_q: None,
+            enc: Vec::new(),
+            h_corr: None,
+            h_new: None,
+            c_new: None,
+            head_q: None,
+            depth: None,
+        }
+    }
+
+    fn tr(&mut self, name: impl Into<String>, q: &QTensor) {
+        if let Some(m) = self.trace.as_mut() {
+            m.insert(name.into(), q.clone());
+        }
+    }
+}
+
+/// The frame-stepping machinery: shared backend + extern link + resolved
+/// handles + options. Stateless across frames — all cross-frame state is
+/// in the `StreamSession` passed to `step_session`.
+pub struct PipelineEngine {
+    backend: Arc<dyn HwBackend>,
+    qp: Arc<QuantParams>,
+    link: ExternLink,
+    handles: SegmentHandles,
+    opts: PipelineOptions,
+}
+
+impl PipelineEngine {
     pub fn new(
-        artifacts: &Path,
-        manifest: &Manifest,
+        backend: Arc<dyn HwBackend>,
         qp: Arc<QuantParams>,
         opts: PipelineOptions,
     ) -> Result<Self> {
-        let hw = HwRuntime::load(artifacts, manifest)?;
-        let (h5, w5) = config::level_hw(5);
-        let h = QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.hnew"));
-        let c = QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.cnew"));
-        Ok(Coordinator {
-            hw,
-            link: ExternLink::new(opts.sw_threads),
+        let handles = SegmentHandles::resolve(backend.as_ref())?;
+        Ok(PipelineEngine {
+            backend,
             qp,
-            kb: KeyframeBuffer::new(),
+            link: ExternLink::new(opts.sw_threads),
+            handles,
             opts,
-            h,
-            c,
-            depth_full: Arc::new(TensorF::full(
-                &[1, 1, config::IMG_H, config::IMG_W],
-                config::MAX_DEPTH,
-            )),
-            pose_prev: None,
-            frames_done: 0,
         })
     }
 
-    /// Reset the per-sequence state (new video stream).
-    pub fn reset_stream(&mut self) {
-        let (h5, w5) = config::level_hw(5);
-        self.h =
-            QTensor::zeros(&[1, config::CL_CH, h5, w5], self.qp.aexp("cl.hnew"));
-        self.c =
-            QTensor::zeros(&[1, config::CL_CH, h5, w5], self.qp.aexp("cl.cnew"));
-        self.depth_full = Arc::new(TensorF::full(
-            &[1, 1, config::IMG_H, config::IMG_W],
-            config::MAX_DEPTH,
-        ));
-        self.pose_prev = None;
-        self.kb = KeyframeBuffer::new();
+    pub fn backend(&self) -> &dyn HwBackend {
+        self.backend.as_ref()
+    }
+
+    /// Another handle to the shared backend (for a second engine/server).
+    pub fn shared_backend(&self) -> Arc<dyn HwBackend> {
+        Arc::clone(&self.backend)
+    }
+
+    pub fn qp(&self) -> &Arc<QuantParams> {
+        &self.qp
+    }
+
+    pub fn options(&self) -> PipelineOptions {
+        self.opts
+    }
+
+    pub fn handles(&self) -> &SegmentHandles {
+        &self.handles
+    }
+
+    /// A fresh cold session bound to this engine's parameters.
+    pub fn new_session(&self, id: usize) -> StreamSession {
+        StreamSession::new(id, &self.qp)
     }
 
     pub fn take_extern_stats(&self) -> ExternStats {
         self.link.take_stats()
     }
 
-    pub fn frames_done(&self) -> usize {
-        self.frames_done
+    /// Run one frame of one stream through the whole FSM.
+    pub fn step_session(
+        &self,
+        session: &mut StreamSession,
+        img: &TensorF,
+        pose: &Mat4,
+    ) -> Result<FrameOutput> {
+        self.step_inner(session, img, pose, false)
+    }
+
+    /// As `step_session`, recording boundary tensors for the golden tests.
+    pub fn step_session_traced(
+        &self,
+        session: &mut StreamSession,
+        img: &TensorF,
+        pose: &Mat4,
+    ) -> Result<FrameOutput> {
+        self.step_inner(session, img, pose, true)
+    }
+
+    fn step_inner(
+        &self,
+        session: &mut StreamSession,
+        img: &TensorF,
+        pose: &Mat4,
+        traced: bool,
+    ) -> Result<FrameOutput> {
+        let mut task = FrameTask::new(img, *pose, traced);
+        while task.stage != FrameStage::Done {
+            self.advance(&mut task, session)?;
+        }
+        let FrameTask { prof, trace, depth, .. } = task;
+        Ok(FrameOutput {
+            depth: depth.expect("Commit ran"),
+            profile: prof.finish(),
+            trace,
+        })
+    }
+
+    /// Execute the task's current stage and move to the next one. The
+    /// backend is always the engine's own — `SegmentHandles` are only
+    /// valid for the backend they were resolved against.
+    pub fn advance(
+        &self,
+        task: &mut FrameTask,
+        session: &mut StreamSession,
+    ) -> Result<()> {
+        let hw = self.backend.as_ref();
+        match task.stage {
+            FrameStage::SpawnSwTasks => self.stage_spawn_sw_tasks(task, session),
+            FrameStage::QuantizeImage => self.stage_quantize_image(task),
+            FrameStage::FeFs => self.stage_fe_fs(hw, task)?,
+            FrameStage::CvfFinish => self.stage_cvf_finish(task),
+            FrameStage::Cve => self.stage_cve(hw, task)?,
+            FrameStage::JoinHiddenCorrection => {
+                self.stage_join_hidden_correction(task)
+            }
+            FrameStage::ConvLstm => self.stage_conv_lstm(hw, task, session)?,
+            FrameStage::Decoder => self.stage_decoder(hw, task)?,
+            FrameStage::DepthOut => self.stage_depth_out(task),
+            FrameStage::Commit => self.stage_commit(task, session),
+            FrameStage::Done => {}
+        }
+        task.stage = task.stage.next();
+        Ok(())
     }
 
     // --- helpers -----------------------------------------------------------
 
-    /// Run one HW segment, recording it in the profile.
+    /// Run one HW segment by pre-resolved handle, recording the profile.
     fn run_hw(
         &self,
-        seg: &str,
+        hw: &dyn HwBackend,
+        id: SegmentId,
         label: &'static str,
         inputs: &[&QTensor],
         prof: &mut Profiler,
     ) -> Result<Vec<QTensor>> {
         let t0 = prof.now();
-        let out = self.hw.run(seg, inputs)?;
+        let out = hw.run(id, inputs)?;
         prof.record(label, Lane::Hw, t0);
         Ok(out)
     }
@@ -184,65 +414,40 @@ impl Coordinator {
         })
     }
 
-    // --- the frame step ------------------------------------------------------
+    // --- the FSM stages ----------------------------------------------------
 
-    pub fn step(&mut self, img: &TensorF, pose: &Mat4) -> Result<FrameOutput> {
-        self.step_inner(img, pose, false)
-    }
-
-    pub fn step_traced(&mut self, img: &TensorF, pose: &Mat4) -> Result<FrameOutput> {
-        self.step_inner(img, pose, true)
-    }
-
-    fn step_inner(
-        &mut self,
-        img: &TensorF,
-        pose: &Mat4,
-        traced: bool,
-    ) -> Result<FrameOutput> {
-        let mut prof = Profiler::start();
-        let mut trace: Option<HashMap<String, QTensor>> =
-            if traced { Some(HashMap::new()) } else { None };
-        fn tr(trace: &mut Option<HashMap<String, QTensor>>, name: String, t: &QTensor) {
-            if let Some(m) = trace.as_mut() {
-                m.insert(name, t.clone());
-            }
-        }
-
-        // ---- post the overlappable SW tasks (Fig 5) -----------------------
+    /// Post the overlappable SW tasks (Fig 5): sharded CVF preparation
+    /// and the hidden-state correction.
+    fn stage_spawn_sw_tasks(&self, t: &mut FrameTask, s: &mut StreamSession) {
         let (hc, wc) = config::level_hw(1);
-        let kf: Vec<(Mat4, TensorF)> = self
+        let kf: Vec<(Mat4, TensorF)> = s
             .kb
             .contents()
             .iter()
             .map(|(p, f)| (*p, dequantize_tensor(f)))
             .collect();
-        let n_kf = kf.len();
-        let pose_c = *pose;
+        t.n_kf = kf.len();
+        let pose_c = t.pose;
         // shard CVF preparation over the worker pool (the paper runs the
         // software side on both A53 cores); each shard covers a
         // contiguous hypothesis range
         let shards = self.opts.sw_threads.max(1).min(N_HYPOTHESES);
-        let mut prep_pending: Vec<Pending<Vec<TensorF>>> = if n_kf > 0 {
-            (0..shards)
-                .map(|s| {
+        if t.n_kf > 0 {
+            t.prep_pending = (0..shards)
+                .map(|sh| {
                     let kf = kf.clone();
-                    let d0 = s * N_HYPOTHESES / shards;
-                    let d1 = (s + 1) * N_HYPOTHESES / shards;
+                    let d0 = sh * N_HYPOTHESES / shards;
+                    let d1 = (sh + 1) * N_HYPOTHESES / shards;
                     self.link.post("cvf_prep", move || {
                         sw::cvf_prepare_range(&kf, &pose_c, hc, wc, d0, d1)
                     })
                 })
-                .collect()
-        } else {
-            Vec::new()
-        };
-
-        let mut corr_pending: Option<Pending<QTensor>> = Some({
-            let h_prev = self.h.clone();
-            let depth_prev = Arc::clone(&self.depth_full);
-            let pose_prev = self.pose_prev;
-            let pose_c = *pose;
+                .collect();
+        }
+        t.corr_pending = Some({
+            let h_prev = s.h.clone();
+            let depth_prev = Arc::clone(&s.depth_full);
+            let pose_prev = s.pose_prev;
             let e_hcorr = self.qp.aexp("cl.hcorr");
             self.link.post("hidden_corr", move || {
                 let hf = dequantize_tensor(&h_prev);
@@ -253,44 +458,53 @@ impl Coordinator {
                 quantize_tensor(&corrected, e_hcorr)
             })
         });
-
         // ablation: no task-level parallelism — join both tasks up front,
         // fully serialising SW before HW (the pre-optimization baseline)
-        let mut prep_ready: Option<Vec<TensorF>> = None;
-        let mut corr_ready: Option<QTensor> = None;
         if !self.opts.overlap {
-            if !prep_pending.is_empty() {
+            if !t.prep_pending.is_empty() {
                 let mut warps = Vec::new();
-                for p in prep_pending.drain(..) {
-                    warps.extend(self.join_sw("cvf_prep", p, false, &mut prof));
+                for p in mem::take(&mut t.prep_pending) {
+                    warps.extend(self.join_sw("cvf_prep", p, false, &mut t.prof));
                 }
-                prep_ready = Some(warps);
+                t.prep_ready = Some(warps);
             }
-            if let Some(p) = corr_pending.take() {
-                corr_ready = Some(self.join_sw("hidden_corr", p, false, &mut prof));
+            if let Some(p) = t.corr_pending.take() {
+                t.corr_ready =
+                    Some(self.join_sw("hidden_corr", p, false, &mut t.prof));
             }
         }
+    }
 
-        // ---- image quantization (input DMA analog) ------------------------
-        let t0 = prof.now();
-        let img_q = quantize_tensor(img, self.qp.aexp("image"));
-        prof.record("img_quant", Lane::Sw, t0);
-        tr(&mut trace, "image_q".into(), &img_q);
+    /// Image quantization (input DMA analog).
+    fn stage_quantize_image(&self, t: &mut FrameTask) {
+        let t0 = t.prof.now();
+        let img_q = quantize_tensor(t.img, self.qp.aexp("image"));
+        t.prof.record("img_quant", Lane::Sw, t0);
+        t.tr("image_q", &img_q);
+        t.img_q = Some(img_q);
+    }
 
-        // ---- HW: FE + FS (CVF prep runs on the CPU meanwhile) --------------
-        let feats = self.run_hw("fe_fs", "fe_fs", &[&img_q], &mut prof)?;
+    /// HW: FE + FS (CVF prep runs on the CPU meanwhile).
+    fn stage_fe_fs(&self, hw: &dyn HwBackend, t: &mut FrameTask) -> Result<()> {
+        let img_q = t.img_q.take().expect("QuantizeImage ran");
+        let feats =
+            self.run_hw(hw, self.handles.fe_fs, "fe_fs", &[&img_q], &mut t.prof)?;
         for (i, f) in feats.iter().enumerate() {
-            tr(&mut trace, format!("feat{i}_q"), f);
+            t.tr(format!("feat{i}_q"), f);
         }
-        let f_half = feats[0].clone();
+        t.feats = feats;
+        Ok(())
+    }
 
-        // ---- extern: feature out, cost volume in (CVF finish) --------------
-        let warps = match prep_ready.take() {
+    /// Extern: feature out, cost volume in (CVF finish).
+    fn stage_cvf_finish(&self, t: &mut FrameTask) {
+        let (hc, wc) = config::level_hw(1);
+        let warps = match t.prep_ready.take() {
             Some(v) => Some(v),
-            None if !prep_pending.is_empty() => {
+            None if !t.prep_pending.is_empty() => {
                 let mut warps = Vec::new();
-                for p in prep_pending.drain(..) {
-                    warps.extend(self.join_sw("cvf_prep", p, true, &mut prof));
+                for p in mem::take(&mut t.prep_pending) {
+                    warps.extend(self.join_sw("cvf_prep", p, true, &mut t.prof));
                 }
                 Some(warps)
             }
@@ -299,73 +513,122 @@ impl Coordinator {
         let e_cost = self.qp.aexp("cvf.cost");
         let cost_q = match warps {
             Some(warps) => {
-                let f_half_c = f_half.clone();
-                self.call_sw("cvf_finish", &mut prof, move || {
-                    let ff = dequantize_tensor(&f_half_c);
+                let f_half = t.feats.first().cloned().expect("FeFs ran");
+                let n_kf = t.n_kf;
+                self.call_sw("cvf_finish", &mut t.prof, move || {
+                    let ff = dequantize_tensor(&f_half);
                     quantize_tensor(&sw::cvf_finish(&ff, &warps, n_kf), e_cost)
                 })
             }
             None => QTensor::zeros(&[1, N_HYPOTHESES, hc, wc], e_cost),
         };
-        tr(&mut trace, "cost_q".into(), &cost_q);
+        t.tr("cost_q", &cost_q);
+        t.cost_q = Some(cost_q);
+    }
 
-        // ---- HW: CVE (hidden-state correction still in flight) -------------
+    /// HW: CVE (hidden-state correction still in flight).
+    fn stage_cve(&self, hw: &dyn HwBackend, t: &mut FrameTask) -> Result<()> {
+        let cost_q = t.cost_q.take().expect("CvfFinish ran");
         let enc = self.run_hw(
+            hw,
+            self.handles.cve,
             "cve",
-            "cve",
-            &[&cost_q, &feats[1], &feats[2], &feats[3], &feats[4]],
-            &mut prof,
+            &[&cost_q, &t.feats[1], &t.feats[2], &t.feats[3], &t.feats[4]],
+            &mut t.prof,
         )?;
-        tr(&mut trace, "e4_q".into(), &enc[4]);
+        t.tr("e4_q", &enc[4]);
+        t.enc = enc;
+        Ok(())
+    }
 
-        // ---- join the corrected hidden state (must precede CL) -------------
-        let h_corr = match corr_ready.take() {
+    /// Join the corrected hidden state (must precede CL).
+    fn stage_join_hidden_correction(&self, t: &mut FrameTask) {
+        let h_corr = match t.corr_ready.take() {
             Some(v) => v,
             None => {
-                let p = corr_pending.take().unwrap();
-                self.join_sw("hidden_corr", p, true, &mut prof)
+                let p = t.corr_pending.take().expect("correction posted");
+                self.join_sw("hidden_corr", p, true, &mut t.prof)
             }
         };
-        tr(&mut trace, "hcorr_q".into(), &h_corr);
+        t.tr("hcorr_q", &h_corr);
+        t.h_corr = Some(h_corr);
+    }
 
-        // ---- ConvLSTM: HW gate conv / SW LN ping-pong -----------------------
-        let gates =
-            self.run_hw("cl_gates", "cl_gates", &[&enc[4], &h_corr], &mut prof)?;
-        tr(&mut trace, "gates_q".into(), &gates[0]);
+    /// ConvLSTM: HW gate conv / SW LN ping-pong.
+    fn stage_conv_lstm(
+        &self,
+        hw: &dyn HwBackend,
+        t: &mut FrameTask,
+        s: &mut StreamSession,
+    ) -> Result<()> {
+        let h_corr = t.h_corr.take().expect("correction joined");
+        let gates = self.run_hw(
+            hw,
+            self.handles.cl_gates,
+            "cl_gates",
+            &[&t.enc[4], &h_corr],
+            &mut t.prof,
+        )?;
+        t.tr("gates_q", &gates[0]);
         let gates_ln = self.sw_layer_norm(
             "cl.ln_gates".into(),
             &gates[0],
             self.qp.aexp("cl.ln_gates"),
-            &mut prof,
+            &mut t.prof,
         );
-        let cl_state =
-            self.run_hw("cl_state", "cl_state", &[&gates_ln, &self.c], &mut prof)?;
+        let cl_state = self.run_hw(
+            hw,
+            self.handles.cl_state,
+            "cl_state",
+            &[&gates_ln, &s.c],
+            &mut t.prof,
+        )?;
         let (c_new, o_gate) = (cl_state[0].clone(), cl_state[1].clone());
-        tr(&mut trace, "cnew_q".into(), &c_new);
+        t.tr("cnew_q", &c_new);
         let ln_c = self.sw_layer_norm(
             "cl.ln_cell".into(),
             &c_new,
             self.qp.aexp("cl.ln_cell"),
-            &mut prof,
+            &mut t.prof,
         );
-        let h_new = self.run_hw("cl_out", "cl_out", &[&ln_c, &o_gate], &mut prof)?;
-        let h_new = h_new.into_iter().next().unwrap();
-        tr(&mut trace, "hnew_q".into(), &h_new);
+        let h_new = self
+            .run_hw(
+                hw,
+                self.handles.cl_out,
+                "cl_out",
+                &[&ln_c, &o_gate],
+                &mut t.prof,
+            )?
+            .into_iter()
+            .next()
+            .expect("cl_out output");
+        t.tr("hnew_q", &h_new);
+        t.h_new = Some(h_new);
+        t.c_new = Some(c_new);
+        Ok(())
+    }
 
-        // ---- decoder: HW conv segments / SW LNs + bilinear upsamples --------
+    /// Decoder: HW conv segments / SW LNs + bilinear upsamples.
+    fn stage_decoder(&self, hw: &dyn HwBackend, t: &mut FrameTask) -> Result<()> {
+        let h_new = t.h_new.clone().expect("ConvLstm ran");
         let mut feat_q: Option<QTensor> = None; // post-LN carry
         let mut d_q: Option<QTensor> = None; // head sigmoid
         for b in 0..5 {
-            let seg_entry = format!("cvd_b{b}_entry");
             let mut x = if b == 0 {
-                self.run_hw(&seg_entry, "cvd_entry", &[&h_new, &enc[4]], &mut prof)?
+                self.run_hw(
+                    hw,
+                    self.handles.cvd_entry[0],
+                    "cvd_entry",
+                    &[&h_new, &t.enc[4]],
+                    &mut t.prof,
+                )?
             } else {
                 // SW: bilinear upsample carry feature + coarse depth
-                let carry = feat_q.take().unwrap();
-                let head = d_q.take().unwrap();
+                let carry = feat_q.take().expect("carry from block b-1");
+                let head = d_q.take().expect("head from block b-1");
                 let e_upd = self.qp.aexp(&format!("cvd.b{b}.upd"));
                 let (upf_q, upd_q) =
-                    self.call_sw("cvd_upsample", &mut prof, move || {
+                    self.call_sw("cvd_upsample", &mut t.prof, move || {
                         let upf = upsample_bilinear2x(&dequantize_tensor(&carry));
                         let upd = upsample_bilinear2x(&dequantize_tensor(&head));
                         (
@@ -374,60 +637,195 @@ impl Coordinator {
                         )
                     });
                 self.run_hw(
-                    &seg_entry,
+                    hw,
+                    self.handles.cvd_entry[b],
                     "cvd_entry",
-                    &[&upf_q, &enc[4 - b], &upd_q],
-                    &mut prof,
+                    &[&upf_q, &t.enc[4 - b], &upd_q],
+                    &mut t.prof,
                 )?
             }
             .into_iter()
             .next()
-            .unwrap();
+            .expect("cvd_entry output");
             for i in 1..CVD_BODY_K3[b] {
                 let x_ln = self.sw_layer_norm(
                     format!("cvd.b{b}.ln{}", i - 1),
                     &x,
                     self.qp.aexp(&format!("cvd.b{b}.ln{}", i - 1)),
-                    &mut prof,
+                    &mut t.prof,
                 );
                 x = self
-                    .run_hw(&format!("cvd_b{b}_mid{i}"), "cvd_mid", &[&x_ln], &mut prof)?
+                    .run_hw(
+                        hw,
+                        self.handles.cvd_mid[b][i - 1],
+                        "cvd_mid",
+                        &[&x_ln],
+                        &mut t.prof,
+                    )?
                     .into_iter()
                     .next()
-                    .unwrap();
+                    .expect("cvd_mid output");
             }
             let x_ln = self.sw_layer_norm(
                 cvd_carry_name(b),
                 &x,
                 self.qp.aexp(&cvd_carry_name(b)),
-                &mut prof,
+                &mut t.prof,
             );
             let head = self
-                .run_hw(&format!("cvd_b{b}_head"), "cvd_head", &[&x_ln], &mut prof)?
+                .run_hw(
+                    hw,
+                    self.handles.cvd_head[b],
+                    "cvd_head",
+                    &[&x_ln],
+                    &mut t.prof,
+                )?
                 .into_iter()
                 .next()
-                .unwrap();
-            tr(&mut trace, format!("head{b}_q"), &head);
+                .expect("cvd_head output");
+            t.tr(format!("head{b}_q"), &head);
             d_q = Some(head);
             feat_q = Some(x_ln);
         }
+        t.head_q = d_q;
+        Ok(())
+    }
 
-        // ---- SW: final upsample + depth un-normalisation ---------------------
-        let head = d_q.unwrap();
-        let depth = self.call_sw("depth_out", &mut prof, move || {
+    /// SW: final upsample + depth un-normalisation.
+    fn stage_depth_out(&self, t: &mut FrameTask) {
+        let head = t.head_q.take().expect("Decoder ran");
+        let depth = self.call_sw("depth_out", &mut t.prof, move || {
             sw::depth_from_head(&dequantize_tensor(&head))
         });
+        t.depth = Some(depth);
+    }
 
-        // ---- KB insertion + state update (SW bookkeeping) --------------------
-        let t0 = prof.now();
-        self.kb.maybe_insert(*pose, f_half);
-        prof.record("kb_update", Lane::Sw, t0);
-        self.h = h_new;
-        self.c = c_new;
-        self.depth_full = Arc::new(depth.clone());
-        self.pose_prev = Some(*pose);
-        self.frames_done += 1;
+    /// KB insertion + session state update (SW bookkeeping).
+    fn stage_commit(&self, t: &mut FrameTask, s: &mut StreamSession) {
+        let t0 = t.prof.now();
+        // feats[0] is the half-resolution FS feature; CVE only reads
+        // feats[1..], so the keyframe buffer takes it without a copy
+        s.kb.maybe_insert(t.pose, t.feats.swap_remove(0));
+        t.prof.record("kb_update", Lane::Sw, t0);
+        s.h = t.h_new.take().expect("ConvLstm ran");
+        s.c = t.c_new.take().expect("ConvLstm ran");
+        s.depth_full = Arc::new(t.depth.clone().expect("DepthOut ran"));
+        s.pose_prev = Some(t.pose);
+        s.frames_done += 1;
+    }
+}
 
-        Ok(FrameOutput { depth, profile: prof.finish(), trace })
+/// Single-stream facade over the engine: the Table II row-3 platform.
+/// All cross-frame state lives in its one `StreamSession`.
+pub struct Coordinator {
+    engine: PipelineEngine,
+    session: StreamSession,
+}
+
+impl Coordinator {
+    /// PJRT-backed coordinator over the AOT artifacts (the deployment
+    /// configuration; requires `make artifacts` + the xla runtime).
+    pub fn new(
+        artifacts: &Path,
+        manifest: &Manifest,
+        qp: Arc<QuantParams>,
+        opts: PipelineOptions,
+    ) -> Result<Self> {
+        let hw = HwRuntime::load(artifacts, manifest)?;
+        Self::with_backend(Arc::new(hw), qp, opts)
+    }
+
+    /// Coordinator over any backend (one backend may be shared by many
+    /// coordinators/servers — the "one bitstream, many streams" model).
+    pub fn with_backend(
+        backend: Arc<dyn HwBackend>,
+        qp: Arc<QuantParams>,
+        opts: PipelineOptions,
+    ) -> Result<Self> {
+        let engine = PipelineEngine::new(backend, qp, opts)?;
+        let session = engine.new_session(0);
+        Ok(Coordinator { engine, session })
+    }
+
+    /// Artifact-free coordinator on a synthetic `RefBackend` (runs from a
+    /// clean checkout; deterministic in `seed`).
+    pub fn on_ref_backend(seed: u64, opts: PipelineOptions) -> Result<Self> {
+        let backend = RefBackend::synthetic(seed);
+        let qp = Arc::clone(backend.qp());
+        Self::with_backend(Arc::new(backend), qp, opts)
+    }
+
+    pub fn engine(&self) -> &PipelineEngine {
+        &self.engine
+    }
+
+    pub fn session(&self) -> &StreamSession {
+        &self.session
+    }
+
+    pub fn backend(&self) -> &dyn HwBackend {
+        self.engine.backend()
+    }
+
+    /// Reset the per-sequence state (new video stream).
+    pub fn reset_stream(&mut self) {
+        let qp = Arc::clone(self.engine.qp());
+        self.session.reset(&qp);
+    }
+
+    pub fn take_extern_stats(&self) -> ExternStats {
+        self.engine.take_extern_stats()
+    }
+
+    pub fn frames_done(&self) -> usize {
+        self.session.frames_done()
+    }
+
+    pub fn step(&mut self, img: &TensorF, pose: &Mat4) -> Result<FrameOutput> {
+        self.engine.step_session(&mut self.session, img, pose)
+    }
+
+    pub fn step_traced(&mut self, img: &TensorF, pose: &Mat4) -> Result<FrameOutput> {
+        self.engine.step_session_traced(&mut self.session, img, pose)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsm_stage_order_is_total_and_terminates() {
+        let mut s = FrameStage::SpawnSwTasks;
+        let mut seen = vec![s];
+        while s != FrameStage::Done {
+            s = s.next();
+            assert!(seen.len() <= 16, "stage cycle detected");
+            seen.push(s);
+        }
+        // the 10 executable stages + Done, each visited exactly once
+        assert_eq!(seen.len(), 11);
+        assert_eq!(FrameStage::Done.next(), FrameStage::Done);
+        assert_eq!(FrameStage::Cve.name(), "cve");
+        // the overlap structure: both SW posts precede their joins
+        let pos = |x: FrameStage| seen.iter().position(|&y| y == x).unwrap();
+        assert!(pos(FrameStage::SpawnSwTasks) < pos(FrameStage::FeFs));
+        assert!(pos(FrameStage::FeFs) < pos(FrameStage::CvfFinish));
+        assert!(pos(FrameStage::Cve) < pos(FrameStage::JoinHiddenCorrection));
+        assert!(pos(FrameStage::JoinHiddenCorrection) < pos(FrameStage::ConvLstm));
+    }
+
+    #[test]
+    fn handles_resolve_against_the_synthetic_catalogue() {
+        let backend = RefBackend::synthetic(1);
+        let h = SegmentHandles::resolve(&backend).unwrap();
+        assert_eq!(backend.segment_desc(h.fe_fs).name, "fe_fs");
+        assert_eq!(backend.segment_desc(h.cvd_head[4]).name, "cvd_b4_head");
+        assert_eq!(h.cvd_entry.len(), 5);
+        // CVD_BODY_K3 = [2,2,2,2,1] -> one mid conv for b0..b3, none for b4
+        assert_eq!(
+            h.cvd_mid.iter().map(|m| m.len()).collect::<Vec<_>>(),
+            vec![1, 1, 1, 1, 0]
+        );
     }
 }

@@ -33,22 +33,23 @@ pub struct FrameProfile {
 }
 
 impl FrameProfile {
-    /// Sum of HW-lane stage durations.
-    pub fn hw_busy(&self) -> f64 {
+    /// Sum of stage durations on one lane.
+    pub fn lane_busy(&self, lane: Lane) -> f64 {
         self.stages
             .iter()
-            .filter(|s| s.lane == Lane::Hw)
+            .filter(|s| s.lane == lane)
             .map(|s| s.duration())
             .sum()
     }
 
+    /// Sum of HW-lane stage durations.
+    pub fn hw_busy(&self) -> f64 {
+        self.lane_busy(Lane::Hw)
+    }
+
     /// Sum of SW-lane stage durations.
     pub fn sw_busy(&self) -> f64 {
-        self.stages
-            .iter()
-            .filter(|s| s.lane == Lane::Sw)
-            .map(|s| s.duration())
-            .sum()
+        self.lane_busy(Lane::Sw)
     }
 
     /// Seconds of SW work overlapped with HW work (computed by interval

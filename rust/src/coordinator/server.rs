@@ -1,0 +1,165 @@
+//! Server layer — multiplexes N concurrent [`StreamSession`]s over one
+//! shared backend (the "one bitstream, many streams" model).
+//!
+//! The PL is a single resource: HW segments of different streams are
+//! serialized on the serving thread, scheduled round-robin so no stream
+//! starves, while each frame's software side still overlaps its own HW
+//! via the shared `ExternLink` worker pool (the Fig-5 schedule is
+//! per-frame and unaffected by multiplexing). Because every stream's
+//! cross-frame state is confined to its session, interleaved serving is
+//! bit-identical to running the streams back to back — pinned by the
+//! stream-isolation tests.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{AggregateThroughput, StreamThroughput};
+use crate::model::weights::QuantParams;
+use crate::poses::Mat4;
+use crate::runtime::HwBackend;
+use crate::tensor::TensorF;
+
+use super::extern_link::ExternStats;
+use super::pipeline::{FrameOutput, PipelineEngine, PipelineOptions};
+use super::session::StreamSession;
+
+/// Multi-stream depth server over one shared backend.
+pub struct StreamServer {
+    engine: PipelineEngine,
+    sessions: Vec<StreamSession>,
+    throughput: Vec<StreamThroughput>,
+    rr_next: usize,
+    started: Instant,
+}
+
+impl StreamServer {
+    pub fn new(
+        backend: Arc<dyn HwBackend>,
+        qp: Arc<QuantParams>,
+        opts: PipelineOptions,
+    ) -> Result<Self> {
+        Ok(StreamServer {
+            engine: PipelineEngine::new(backend, qp, opts)?,
+            sessions: Vec::new(),
+            throughput: Vec::new(),
+            rr_next: 0,
+            started: Instant::now(),
+        })
+    }
+
+    /// Open a new stream; returns its id (dense, starting at 0).
+    pub fn open_stream(&mut self) -> usize {
+        let id = self.sessions.len();
+        self.sessions.push(self.engine.new_session(id));
+        self.throughput.push(StreamThroughput::default());
+        id
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn engine(&self) -> &PipelineEngine {
+        &self.engine
+    }
+
+    pub fn session(&self, id: usize) -> &StreamSession {
+        &self.sessions[id]
+    }
+
+    /// Reset one stream to cold start (new video on the same slot).
+    pub fn reset_stream(&mut self, id: usize) {
+        let qp = Arc::clone(self.engine.qp());
+        self.sessions[id].reset(&qp);
+    }
+
+    /// Serve one frame of one stream.
+    pub fn step_stream(
+        &mut self,
+        id: usize,
+        img: &TensorF,
+        pose: &Mat4,
+    ) -> Result<FrameOutput> {
+        let session = self
+            .sessions
+            .get_mut(id)
+            .with_context(|| format!("stream {id} not open"))?;
+        let t0 = Instant::now();
+        let out = self.engine.step_session(session, img, pose)?;
+        self.throughput[id].record_frame(
+            t0.elapsed().as_secs_f64(),
+            out.profile.hw_busy(),
+            out.profile.sw_busy(),
+            out.profile.overlapped_sw(),
+        );
+        Ok(out)
+    }
+
+    /// One scheduling round: every `(stream, frame)` pair executes once,
+    /// in round-robin order rotated one slot per round so no stream is
+    /// permanently served first. Returns `(stream id, output)` in the
+    /// order served.
+    pub fn run_round(
+        &mut self,
+        inputs: &[(usize, &TensorF, &Mat4)],
+    ) -> Result<Vec<(usize, FrameOutput)>> {
+        let mut order: Vec<usize> = (0..inputs.len()).collect();
+        if !inputs.is_empty() {
+            order.rotate_left(self.rr_next % inputs.len());
+            self.rr_next = self.rr_next.wrapping_add(1);
+        }
+        let mut out = Vec::with_capacity(inputs.len());
+        for idx in order {
+            let (sid, img, pose) = inputs[idx];
+            out.push((sid, self.step_stream(sid, img, pose)?));
+        }
+        Ok(out)
+    }
+
+    /// Per-stream serving statistics.
+    pub fn stream_throughput(&self, id: usize) -> &StreamThroughput {
+        &self.throughput[id]
+    }
+
+    /// Aggregate across all streams since server start.
+    pub fn aggregate(&self) -> AggregateThroughput {
+        AggregateThroughput::over(
+            &self.throughput,
+            self.started.elapsed().as_secs_f64(),
+        )
+    }
+
+    pub fn take_extern_stats(&self) -> ExternStats {
+        self.engine.take_extern_stats()
+    }
+
+    /// Human-readable per-stream + aggregate throughput table.
+    pub fn report(&self) -> String {
+        let mut out = String::from(
+            "stream   frames   fps(busy)   HW busy[s]   SW busy[s]   SW hidden\n",
+        );
+        for (id, t) in self.throughput.iter().enumerate() {
+            out.push_str(&format!(
+                "{id:<8} {:<8} {:<11.2} {:<12.3} {:<12.3} {:5.1}%\n",
+                t.frames,
+                t.fps(),
+                t.hw_busy_seconds,
+                t.sw_busy_seconds,
+                100.0 * t.overlap_ratio(),
+            ));
+        }
+        let a = self.aggregate();
+        out.push_str(&format!(
+            "aggregate: {} streams, {} frames, {:.2} fps over serving time \
+             ({:.2} fps wall), backend '{}'\n",
+            a.streams,
+            a.frames,
+            a.busy_fps(),
+            a.wall_fps(),
+            self.engine.backend().kind(),
+        ));
+        out
+    }
+}

@@ -1,0 +1,116 @@
+//! Session layer — all cross-frame state of one video stream (paper
+//! Fig. 1, bold dotted arrows), separated from the scheduling machinery.
+//!
+//! A [`StreamSession`] is cheap: two small hidden-state tensors, the last
+//! full-resolution depth, the previous pose and the keyframe buffer. The
+//! `PipelineEngine` is stateless across frames and takes `&mut
+//! StreamSession` per step, so any number of sessions can share one
+//! backend ("one bitstream, many streams" — see `StreamServer`).
+
+use std::sync::Arc;
+
+use crate::config;
+use crate::kb::KeyframeBuffer;
+use crate::model::weights::QuantParams;
+use crate::poses::Mat4;
+use crate::quant::QTensor;
+use crate::tensor::TensorF;
+
+/// Per-stream cross-frame state: ConvLSTM hidden/cell, previous depth
+/// (for hidden-state correction), previous pose, keyframe buffer.
+pub struct StreamSession {
+    /// Server-assigned stream id (0 for a standalone coordinator).
+    pub id: usize,
+    /// Keyframe buffer feeding CVF (pose-gated FS features).
+    pub kb: KeyframeBuffer<QTensor>,
+    pub(crate) h: QTensor,
+    pub(crate) c: QTensor,
+    pub(crate) depth_full: Arc<TensorF>,
+    pub(crate) pose_prev: Option<Mat4>,
+    pub(crate) frames_done: usize,
+}
+
+impl StreamSession {
+    pub fn new(id: usize, qp: &QuantParams) -> Self {
+        let (h5, w5) = config::level_hw(5);
+        StreamSession {
+            id,
+            kb: KeyframeBuffer::new(),
+            h: QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.hnew")),
+            c: QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.cnew")),
+            depth_full: Arc::new(TensorF::full(
+                &[1, 1, config::IMG_H, config::IMG_W],
+                config::MAX_DEPTH,
+            )),
+            pose_prev: None,
+            frames_done: 0,
+        }
+    }
+
+    /// Reset to the cold-start state (new video on the same stream id).
+    /// Clears the keyframe buffer in place (keeping its policy) and
+    /// zeroes the hidden state and counters.
+    pub fn reset(&mut self, qp: &QuantParams) {
+        let (h5, w5) = config::level_hw(5);
+        self.kb.reset();
+        self.h = QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.hnew"));
+        self.c = QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.cnew"));
+        self.depth_full = Arc::new(TensorF::full(
+            &[1, 1, config::IMG_H, config::IMG_W],
+            config::MAX_DEPTH,
+        ));
+        self.pose_prev = None;
+        self.frames_done = 0;
+    }
+
+    /// Frames completed since creation/reset.
+    pub fn frames_done(&self) -> usize {
+        self.frames_done
+    }
+
+    /// Whether any frame has been processed (cold-start detection).
+    pub fn is_cold(&self) -> bool {
+        self.frames_done == 0
+    }
+
+    /// The most recent full-resolution depth estimate (MAX_DEPTH-filled
+    /// before the first frame completes).
+    pub fn last_depth(&self) -> &TensorF {
+        &self.depth_full
+    }
+
+    /// The previous camera pose, if a frame has been processed.
+    pub fn last_pose(&self) -> Option<Mat4> {
+        self.pose_prev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::manifest::Manifest;
+
+    #[test]
+    fn session_starts_cold_and_resets_clean() {
+        let manifest = Manifest::synthetic();
+        let qp = QuantParams::synthetic(&manifest, 1);
+        let mut s = StreamSession::new(3, &qp);
+        assert_eq!(s.id, 3);
+        assert!(s.is_cold());
+        assert!(s.kb.is_empty());
+        assert_eq!(s.last_pose(), None);
+        assert_eq!(
+            s.last_depth().data()[0],
+            crate::config::MAX_DEPTH
+        );
+        // dirty it, then reset
+        s.frames_done = 5;
+        s.pose_prev = Some(Mat4::identity());
+        s.kb.maybe_insert(Mat4::identity(), s.h.clone());
+        s.reset(&qp);
+        assert!(s.is_cold());
+        assert!(s.kb.is_empty());
+        assert_eq!(s.id, 3, "reset keeps the stream id");
+        assert_eq!(s.last_pose(), None);
+    }
+}

@@ -54,6 +54,62 @@ impl Scene {
     pub fn depth_tensor(&self, i: usize) -> TensorF {
         TensorF::from_vec(&[1, 1, IMG_H, IMG_W], self.depths[i].clone())
     }
+
+    /// Procedurally generated scene — the artifact-free workload for the
+    /// RefBackend demos and tests (no `artifacts/dataset` needed). A
+    /// textured gradient drifts across the frames, depth is a smooth ramp
+    /// inside `[MIN_DEPTH, MAX_DEPTH]`, and the camera walks mostly along
+    /// +x with steps straddling the keyframe pose gate, so the KB both
+    /// accepts and rejects frames. Deterministic in `seed`.
+    pub fn synthetic(name: &str, n: usize, seed: u64) -> Scene {
+        use crate::config::{MAX_DEPTH, MIN_DEPTH};
+        let mut rng = crate::util::Rng::new(seed);
+        let mut frames = Vec::with_capacity(n);
+        let mut depths = Vec::with_capacity(n);
+        let mut poses = Vec::with_capacity(n);
+        let mut tx = 0.0f64;
+        for i in 0..n {
+            let drift = i as f32 * 3.0;
+            let mut rgb = vec![0u8; IMG_H * IMG_W * 3];
+            for y in 0..IMG_H {
+                for x in 0..IMG_W {
+                    let fx = (x as f32 + drift) / IMG_W as f32;
+                    let fy = y as f32 / IMG_H as f32;
+                    let checker =
+                        if ((x / 8) + (y / 8) + i) % 2 == 0 { 40.0 } else { 0.0 };
+                    let base = 60.0 + 120.0 * (fx.fract() + fy) * 0.5 + checker;
+                    for c in 0..3 {
+                        let chan = base + 20.0 * c as f32
+                            + 8.0 * rng.unit_f32();
+                        rgb[(y * IMG_W + x) * 3 + c] =
+                            chan.clamp(0.0, 255.0) as u8;
+                    }
+                }
+            }
+            frames.push(rgb);
+            let mut d = Vec::with_capacity(IMG_H * IMG_W);
+            for y in 0..IMG_H {
+                for x in 0..IMG_W {
+                    let t = 0.15
+                        + 0.7
+                            * (x as f32 / IMG_W as f32 + y as f32 / IMG_H as f32)
+                            / 2.0;
+                    let v = MIN_DEPTH + (MAX_DEPTH - MIN_DEPTH) * t;
+                    d.push(v.clamp(MIN_DEPTH, MAX_DEPTH));
+                }
+            }
+            depths.push(d);
+            // walk along +x; steps straddle KB_MIN_POSE_DIST = 0.10
+            if i > 0 {
+                tx += rng.range_f32(0.04, 0.16) as f64;
+            }
+            let mut p = Mat4::identity();
+            p.0[3] = tx;
+            p.0[7] = 0.02 * (i % 3) as f64;
+            poses.push(p);
+        }
+        Scene { name: name.to_string(), frames, depths, poses }
+    }
 }
 
 /// Dataset root (directory of scene subdirectories).
@@ -145,6 +201,30 @@ mod tests {
             32
         );
         assert!(parse_meta_frames("{}").is_err());
+    }
+
+    #[test]
+    fn synthetic_scene_is_wellformed_and_deterministic() {
+        let s = Scene::synthetic("synth", 6, 9);
+        assert_eq!(s.len(), 6);
+        assert_eq!(s.name, "synth");
+        let img = s.normalized_image(0);
+        assert_eq!(img.shape(), &[1, 3, IMG_H, IMG_W]);
+        // normalisation maps u8 into [-2, 2]
+        assert!(img.data().iter().all(|v| (-2.01..=2.01).contains(v)));
+        let (lo, hi) = (crate::config::MIN_DEPTH, crate::config::MAX_DEPTH);
+        assert!(s
+            .depths
+            .iter()
+            .flatten()
+            .all(|&v| (lo..=hi).contains(&v)));
+        let d = crate::poses::pose_distance(&s.poses[0], &s.poses[5]);
+        assert!(d > 0.1, "camera should move ({d})");
+        let s2 = Scene::synthetic("synth", 6, 9);
+        assert_eq!(s.frames[3], s2.frames[3], "deterministic in the seed");
+        for m in &s.poses {
+            assert_eq!(m.at(3, 3), 1.0);
+        }
     }
 
     // loading real scenes is covered by rust/tests/ (requires artifacts)

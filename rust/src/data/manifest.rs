@@ -126,6 +126,166 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Segment catalogue for the artifact-free `RefBackend`: the same 19
+    /// segment boundaries `aot.py` emits, with the uniform synthetic
+    /// exponent scheme of `config::SYNTH_ACT_EXP` (every boundary tensor
+    /// and conv input at one exponent, LUT outputs at their fixed
+    /// exponents), so the graph is consistent without a calibration run.
+    pub fn synthetic() -> Self {
+        use crate::config::{
+            self, CVD_BODY_K3, CVD_CH, CVE_CH, CVE_DOWN_KERNEL, CL_CH,
+            FPN_CH, IMG_H, IMG_W, N_HYPOTHESES,
+        };
+        use crate::model::specs;
+
+        let e = config::SYNTH_ACT_EXP;
+        let es = config::SIGMOID_OUT_EXP;
+        let mut m = Manifest {
+            segments: Vec::new(),
+            aexp: HashMap::new(),
+            conv_in_exp: HashMap::new(),
+            sigmoid_exp: es,
+            elu_exp: config::ELU_OUT_EXP,
+            train_steps: 0,
+            train_final_loss: 0.0,
+        };
+
+        // exponent tables: one uniform activation exponent everywhere
+        for s in specs::all_conv_specs() {
+            m.aexp.insert(s.name.clone(), e);
+            m.conv_in_exp.insert(s.name.clone(), e);
+        }
+        for n in specs::ln_names() {
+            m.aexp.insert(n, e);
+        }
+        for n in ["image", "cvf.cost", "cl.hcorr", "cl.hnew", "cl.cnew", "cl.cat"] {
+            m.aexp.insert(n.to_string(), e);
+        }
+        let (_, wiring) = specs::fe_specs();
+        for w in wiring.iter().filter(|w| w.residual) {
+            m.aexp.insert(format!("{}.addout", w.base), e);
+        }
+        for i in 0..4 {
+            m.aexp.insert(format!("fs.add{i}"), e);
+        }
+        for (lv, down) in CVE_DOWN_KERNEL.iter().enumerate() {
+            if down.is_some() {
+                m.aexp.insert(format!("cve.l{lv}.cat"), e);
+            }
+        }
+        for b in 0..5 {
+            m.aexp.insert(format!("cvd.b{b}.cat"), e);
+            m.aexp.insert(format!("cvd.b{b}.head.pre"), e);
+            if b > 0 {
+                m.aexp.insert(format!("cvd.b{b}.upd"), e);
+            }
+        }
+
+        let t = |name: &str, shape: &[usize], exp: i32| TensorDesc {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            exp,
+        };
+        let seg = |name: &str, inputs: Vec<TensorDesc>, outputs: Vec<TensorDesc>| {
+            SegmentDesc {
+                name: name.to_string(),
+                hlo: format!("ref://{name}"),
+                inputs,
+                outputs,
+            }
+        };
+        let (h1, w1) = config::level_hw(1);
+        let (h5, w5) = config::level_hw(5);
+
+        // fe_fs: image -> 5-level FPN pyramid
+        m.segments.push(seg(
+            "fe_fs",
+            vec![t("image_q", &[1, 3, IMG_H, IMG_W], e)],
+            (0..5)
+                .map(|i| {
+                    let (h, w) = config::level_hw(i + 1);
+                    t(&format!("feat{i}_q"), &[1, FPN_CH, h, w], e)
+                })
+                .collect(),
+        ));
+        // cve: cost volume + f1..f4 -> e0..e4
+        let mut cve_in = vec![t("cost_q", &[1, N_HYPOTHESES, h1, w1], e)];
+        for i in 1..5 {
+            let (h, w) = config::level_hw(i + 1);
+            cve_in.push(t(&format!("feat{i}_q"), &[1, FPN_CH, h, w], e));
+        }
+        m.segments.push(seg(
+            "cve",
+            cve_in,
+            (0..5)
+                .map(|lv| {
+                    let (h, w) = config::level_hw(lv + 1);
+                    t(&format!("e{lv}_q"), &[1, CVE_CH[lv], h, w], e)
+                })
+                .collect(),
+        ));
+        // ConvLSTM at 1/32 scale
+        let cl = [1, CL_CH, h5, w5];
+        m.segments.push(seg(
+            "cl_gates",
+            vec![t("e4_q", &cl, e), t("hcorr_q", &cl, e)],
+            vec![t("gates_q", &[1, 4 * CL_CH, h5, w5], e)],
+        ));
+        m.segments.push(seg(
+            "cl_state",
+            vec![t("gates_ln_q", &[1, 4 * CL_CH, h5, w5], e), t("c_q", &cl, e)],
+            vec![t("cnew_q", &cl, e), t("ogate_q", &cl, es)],
+        ));
+        m.segments.push(seg(
+            "cl_out",
+            vec![t("ln_c_q", &cl, e), t("ogate_q", &cl, es)],
+            vec![t("hnew_q", &cl, e)],
+        ));
+        // decoder: block b at pyramid level 5-b
+        for b in 0..5usize {
+            let (h, w) = config::level_hw(5 - b);
+            let x_out = vec![t(&format!("x_b{b}"), &[1, CVD_CH[b], h, w], e)];
+            if b == 0 {
+                m.segments.push(seg(
+                    "cvd_b0_entry",
+                    vec![t("hnew_q", &cl, e), t("e4_q", &cl, e)],
+                    x_out.clone(),
+                ));
+            } else {
+                m.segments.push(seg(
+                    &format!("cvd_b{b}_entry"),
+                    vec![
+                        t("upf_q", &[1, CVD_CH[b - 1], h, w], e),
+                        t(
+                            &format!("e{}_q", 4 - b),
+                            &[1, CVE_CH[4 - b], h, w],
+                            e,
+                        ),
+                        t("upd_q", &[1, 1, h, w], e),
+                    ],
+                    x_out.clone(),
+                ));
+            }
+            for i in 1..CVD_BODY_K3[b] {
+                m.segments.push(seg(
+                    &format!("cvd_b{b}_mid{i}"),
+                    vec![t(
+                        &format!("xln_b{b}"),
+                        &[1, CVD_CH[b], h, w],
+                        e,
+                    )],
+                    x_out.clone(),
+                ));
+            }
+            m.segments.push(seg(
+                &format!("cvd_b{b}_head"),
+                vec![t(&format!("xln_b{b}"), &[1, CVD_CH[b], h, w], e)],
+                vec![t(&format!("head{b}_q"), &[1, 1, h, w], es)],
+            ));
+        }
+        m
+    }
+
     pub fn segment(&self, name: &str) -> Result<&SegmentDesc> {
         self.segments
             .iter()
@@ -177,6 +337,31 @@ out e0_q 1,32,32,48 6
         assert_eq!(fe.outputs[1].exp, 9);
         assert_eq!(fe.inputs[0].numel(), 3 * 64 * 96);
         assert!(m.segment("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_matches_the_aot_catalogue() {
+        let m = Manifest::synthetic();
+        assert_eq!(m.segments.len(), 19, "aot.py emits 19 segments");
+        assert_eq!(m.sigmoid_exp, crate::config::SIGMOID_OUT_EXP);
+        assert_eq!(
+            m.aexp("image").unwrap(),
+            crate::config::SYNTH_ACT_EXP
+        );
+        for seg in &m.segments {
+            assert!(!seg.inputs.is_empty() && !seg.outputs.is_empty());
+            for d in seg.inputs.iter().chain(&seg.outputs) {
+                assert_eq!(d.shape.len(), 4, "{}:{}", seg.name, d.name);
+                assert_eq!(d.shape[0], 1);
+            }
+        }
+        // every conv has an input exponent (the QuantParams contract)
+        for s in crate::model::specs::all_conv_specs() {
+            assert!(m.conv_in_exp.contains_key(&s.name), "{}", s.name);
+            assert!(m.aexp.contains_key(&s.name), "{}", s.name);
+        }
+        assert!(m.segment("cvd_b4_head").is_ok());
+        assert!(m.segment("cvd_b4_mid1").is_err(), "b4 has a single body conv");
     }
 
     #[test]

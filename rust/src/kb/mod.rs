@@ -52,6 +52,15 @@ impl<F> KeyframeBuffer<F> {
         true
     }
 
+    /// Drop every buffered keyframe and zero the counters, keeping the
+    /// policy (capacity / min distance). Used on stream reset so a
+    /// recycled session cannot leak keyframes into the next video.
+    pub fn reset(&mut self) {
+        self.entries.clear();
+        self.inserted_total = 0;
+        self.rejected_total = 0;
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -121,6 +130,27 @@ mod tests {
         let (ins, rej) = kb.stats();
         assert_eq!(ins + rej, 500);
         assert!(ins > 0 && rej > 0, "walk should both insert and reject");
+    }
+
+    #[test]
+    fn reset_and_eviction_behave() {
+        let mut kb = KeyframeBuffer::with_policy(2, 0.1);
+        assert!(kb.maybe_insert(pose_at(0.0), "a"));
+        assert!(kb.maybe_insert(pose_at(0.2), "b"));
+        // at capacity: the next accepted insert evicts the oldest
+        assert!(kb.maybe_insert(pose_at(0.4), "c"));
+        assert_eq!(kb.len(), 2);
+        let feats: Vec<&str> = kb.contents().iter().map(|(_, f)| *f).collect();
+        assert_eq!(feats, ["b", "c"], "oldest entry evicted");
+        // reset: empty buffer, zeroed counters, same policy
+        kb.reset();
+        assert!(kb.is_empty());
+        assert_eq!(kb.stats(), (0, 0));
+        assert_eq!(kb.capacity(), 2);
+        // after reset the buffer accepts the first pose again even if it
+        // is close to a pre-reset keyframe (no leaked gating state)
+        assert!(kb.maybe_insert(pose_at(0.4), "d"));
+        assert_eq!(kb.len(), 1);
     }
 
     #[test]

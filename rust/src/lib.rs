@@ -1,20 +1,52 @@
 //! FADEC — FPGA-style HW/SW co-designed video depth estimation,
-//! reproduced as a three-layer Rust + JAX + Pallas stack.
+//! reproduced as a three-layer Rust + JAX + Pallas stack and grown into
+//! a multi-stream serving system.
 //!
 //! Paper: *FADEC: FPGA-based Acceleration of Video Depth Estimation by
 //! HW/SW Co-design* (Hashimoto & Takamaeda-Yamazaki, ICFPT 2022).
 //!
-//! Layer map (see `DESIGN.md`):
-//! * **L3 (this crate)** — the coordinator: the paper's HW/SW scheduling
-//!   contribution (extern protocol, Fig-5 task-level pipeline, keyframe
-//!   buffer, software-friendly operators) plus the CPU-only baselines of
-//!   Table II and the FPGA cycle/resource model behind Tables II/III.
-//! * **L2/L1 (python/, build-time only)** — the DeepVideoMVS compute
-//!   graph in JAX with quantized Pallas kernels, AOT-lowered to the
-//!   `artifacts/*.hlo.txt` executables this crate loads via PJRT.
+//! # Layer map
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! `fadec` binary is self-contained.
+//! The L3 serving stack is split Backend / Session / Server:
+//!
+//! * **Backend** (`runtime`) — the [`runtime::HwBackend`] trait: a
+//!   catalogue of FSM-sequenced segments resolved once into
+//!   [`runtime::SegmentId`] handles and executed many times per frame.
+//!   Implementations: [`runtime::HwRuntime`] (PJRT over the AOT
+//!   `artifacts/*.hlo.txt`, the "configured bitstream") and
+//!   [`runtime::RefBackend`] (the bit-exact pure-software mirror, which
+//!   also runs artifact-free on synthetic calibration —
+//!   `Manifest::synthetic` + `QuantParams::synthetic`).
+//! * **Session** (`coordinator::session`) — one
+//!   [`coordinator::StreamSession`] per video stream holds *all*
+//!   cross-frame state (ConvLSTM hidden/cell, previous depth + pose, the
+//!   keyframe buffer). Sessions are cheap and independent; nothing about
+//!   a stream lives anywhere else.
+//! * **Server** (`coordinator`) — the paper's scheduling contribution:
+//!   the extern HW<->SW protocol (`extern_link`, §III-D1) and the Fig-5
+//!   task-level pipeline (§III-D2) as an explicit FSM
+//!   ([`coordinator::PipelineEngine`] walking
+//!   [`coordinator::FrameStage`]s over `(&dyn HwBackend, &mut
+//!   StreamSession)`). [`coordinator::Coordinator`] is the single-stream
+//!   facade; [`coordinator::StreamServer`] multiplexes N sessions
+//!   round-robin over one shared backend ("one bitstream, many
+//!   streams") with per-stream + aggregate throughput in `metrics`.
+//!
+//! Around the serving stack: the CPU-only baselines of Table II
+//! (`model`), the FPGA cycle/resource model behind Tables II/III
+//! (`hwsim`, `codesign`), and the report generators (`report`).
+//!
+//! **L2/L1 (python/, build-time only)** — the DeepVideoMVS compute graph
+//! in JAX with quantized Pallas kernels, AOT-lowered to the
+//! `artifacts/*.hlo.txt` executables the PJRT backend loads. Python
+//! never runs on the request path: after `make artifacts` the `fadec`
+//! binary is self-contained, and without artifacts the RefBackend serves
+//! the identical pipeline in pure Rust.
+//!
+//! Later scaling PRs plug into these seams: new backends (async,
+//! sharded, batched) implement `HwBackend`; admission/batching policies
+//! sit in `StreamServer`; per-stream state stays session-local so
+//! streams can migrate between backends.
 
 pub mod codesign;
 pub mod config;

@@ -1,7 +1,100 @@
 //! Evaluation metrics: MSE against ground-truth depth (the paper's
-//! accuracy metric for Figs 6-8) and simple aggregates.
+//! accuracy metric for Figs 6-8), simple aggregates, and the serving
+//! throughput counters used by `coordinator::StreamServer`.
 
 use crate::tensor::TensorF;
+
+/// Per-stream serving statistics, fed one frame at a time by the server.
+#[derive(Clone, Debug, Default)]
+pub struct StreamThroughput {
+    /// Frames served on this stream.
+    pub frames: usize,
+    /// Wall time the serving thread spent on this stream's frames.
+    pub busy_seconds: f64,
+    /// Sum of HW-lane stage time across frames.
+    pub hw_busy_seconds: f64,
+    /// Sum of SW-lane stage time across frames.
+    pub sw_busy_seconds: f64,
+    /// SW time hidden behind HW (the Fig-5 overlap), summed.
+    pub sw_hidden_seconds: f64,
+}
+
+impl StreamThroughput {
+    pub fn record_frame(
+        &mut self,
+        busy: f64,
+        hw_busy: f64,
+        sw_busy: f64,
+        sw_hidden: f64,
+    ) {
+        self.frames += 1;
+        self.busy_seconds += busy;
+        self.hw_busy_seconds += hw_busy;
+        self.sw_busy_seconds += sw_busy;
+        self.sw_hidden_seconds += sw_hidden;
+    }
+
+    /// Frames per second of serving-thread time spent on this stream.
+    /// Streams multiplexed on one backend share the wall clock, so this
+    /// is throughput per unit of *busy* time, not wall time.
+    pub fn fps(&self) -> f64 {
+        if self.busy_seconds > 0.0 {
+            self.frames as f64 / self.busy_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of SW time hidden behind HW execution.
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.sw_busy_seconds > 0.0 {
+            self.sw_hidden_seconds / self.sw_busy_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Aggregate serving statistics across all streams of a server.
+#[derive(Clone, Debug, Default)]
+pub struct AggregateThroughput {
+    pub streams: usize,
+    pub frames: usize,
+    /// Total serving-thread time across streams (streams are serialized
+    /// on the shared backend, so this is also the busy wall time).
+    pub busy_seconds: f64,
+    /// Wall time since the server started (includes idle time).
+    pub wall_seconds: f64,
+}
+
+impl AggregateThroughput {
+    pub fn over(streams: &[StreamThroughput], wall_seconds: f64) -> Self {
+        AggregateThroughput {
+            streams: streams.len(),
+            frames: streams.iter().map(|s| s.frames).sum(),
+            busy_seconds: streams.iter().map(|s| s.busy_seconds).sum(),
+            wall_seconds,
+        }
+    }
+
+    /// Aggregate frames per second of backend busy time.
+    pub fn busy_fps(&self) -> f64 {
+        if self.busy_seconds > 0.0 {
+            self.frames as f64 / self.busy_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Aggregate frames per second of wall time since server start.
+    pub fn wall_fps(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.frames as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
 
 /// Mean squared error between two depth maps (metres^2).
 pub fn mse(a: &[f32], b: &[f32]) -> f64 {
@@ -63,6 +156,27 @@ mod tests {
         let a = [0.0f32, 0.0];
         let b = [1.0f32, -1.0];
         assert!((mse(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_counters_accumulate() {
+        let mut t = StreamThroughput::default();
+        assert_eq!(t.fps(), 0.0);
+        assert_eq!(t.overlap_ratio(), 0.0);
+        t.record_frame(0.5, 0.3, 0.4, 0.2);
+        t.record_frame(0.5, 0.3, 0.4, 0.2);
+        assert_eq!(t.frames, 2);
+        assert!((t.fps() - 2.0).abs() < 1e-12);
+        assert!((t.overlap_ratio() - 0.5).abs() < 1e-12);
+
+        let agg = AggregateThroughput::over(
+            &[t.clone(), StreamThroughput::default()],
+            4.0,
+        );
+        assert_eq!(agg.streams, 2);
+        assert_eq!(agg.frames, 2);
+        assert!((agg.busy_fps() - 2.0).abs() < 1e-12);
+        assert!((agg.wall_fps() - 0.5).abs() < 1e-12);
     }
 
     #[test]

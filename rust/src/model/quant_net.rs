@@ -52,9 +52,10 @@ pub fn ln_sw(qp: &QuantParams, name: &str, x: &QTensor, out_exp: i32) -> QTensor
     quantize_tensor(&y, out_exp)
 }
 
-/// Quantized model with resolved specs.
-pub struct QuantModel<'a> {
-    pub qp: &'a QuantParams,
+/// Quantized model with resolved specs. Owns (a share of) its parameters
+/// so backends can hold it without a self-referential borrow.
+pub struct QuantModel {
+    pub qp: std::sync::Arc<QuantParams>,
     specs: Vec<super::specs::ConvSpec>,
 }
 
@@ -81,8 +82,8 @@ impl QuantState {
     }
 }
 
-impl<'a> QuantModel<'a> {
-    pub fn new(qp: &'a QuantParams) -> Self {
+impl QuantModel {
+    pub fn new(qp: std::sync::Arc<QuantParams>) -> Self {
         QuantModel { qp, specs: super::specs::all_conv_specs() }
     }
 
@@ -93,12 +94,12 @@ impl<'a> QuantModel<'a> {
             .find(|s| s.name == name)
             .unwrap_or_else(|| panic!("unknown conv '{name}'"));
         let relu = spec.act == super::specs::Act::Relu;
-        qconv(self.qp, name, x, self.qp.aexp(name), relu, spec.dw, spec.stride)
+        qconv(&self.qp, name, x, self.qp.aexp(name), relu, spec.dw, spec.stride)
     }
 
     fn conv_to(&self, name: &str, x: &QTensor, out_exp: i32) -> QTensor {
         let spec = self.specs.iter().find(|s| s.name == name).unwrap();
-        qconv(self.qp, name, x, out_exp, false, spec.dw, spec.stride)
+        qconv(&self.qp, name, x, out_exp, false, spec.dw, spec.stride)
     }
 
     /// Quantize a normalised image to the calibrated input exponent.
@@ -151,14 +152,14 @@ impl<'a> QuantModel<'a> {
 
     /// Segment `cve`: cost volume + pyramid features (f1..f4, i.e. the
     /// 1/4..1/32 levels) -> e0..e4.
-    pub fn seg_cve(&self, cost_q: &QTensor, feats: &[QTensor]) -> Vec<QTensor> {
+    pub fn seg_cve(&self, cost_q: &QTensor, feats: &[&QTensor]) -> Vec<QTensor> {
         assert_eq!(feats.len(), 4, "seg_cve expects f1..f4");
         let mut outs = Vec::with_capacity(5);
         let mut x = cost_q.clone();
         for lv in 0..5 {
             if CVE_DOWN_KERNEL[lv].is_some() {
                 x = self.conv(&format!("cve.l{lv}.down"), &x);
-                x = concat_q(&[&x, &feats[lv - 1]], self.qp.aexp(&format!("cve.l{lv}.cat")));
+                x = concat_q(&[&x, feats[lv - 1]], self.qp.aexp(&format!("cve.l{lv}.cat")));
             }
             for bi in 0..CVE_BODY_KERNELS[lv].len() {
                 x = self.conv(&format!("cve.l{lv}.c{bi}"), &x);
@@ -245,7 +246,8 @@ impl<'a> QuantModel<'a> {
         let cost = sw::cost_volume(&dequantize_tensor(&f_half), &kf_float, pose);
         let cost_q = quantize_tensor(&cost, self.qp.aexp("cvf.cost"));
 
-        let enc = self.seg_cve(&cost_q, &feats[1..]);
+        let frefs: Vec<&QTensor> = feats[1..].iter().collect();
+        let enc = self.seg_cve(&cost_q, &frefs);
 
         // hidden-state correction (software op, float)
         let h_corr_f = match &st.pose_prev {
@@ -261,10 +263,10 @@ impl<'a> QuantModel<'a> {
 
         // ConvLSTM with SW layer norms
         let gates = self.seg_cl_gates(&enc[4], &h_corr);
-        let gates_ln = ln_sw(self.qp, "cl.ln_gates", &gates,
+        let gates_ln = ln_sw(&self.qp, "cl.ln_gates", &gates,
                              self.qp.aexp("cl.ln_gates"));
         let (c_new, o_gate) = self.seg_cl_state(&gates_ln, &st.c);
-        let ln_c = ln_sw(self.qp, "cl.ln_cell", &c_new,
+        let ln_c = ln_sw(&self.qp, "cl.ln_cell", &c_new,
                          self.qp.aexp("cl.ln_cell"));
         let h_new = self.seg_cl_out(&ln_c, &o_gate);
 
@@ -287,7 +289,7 @@ impl<'a> QuantModel<'a> {
             };
             for i in 1..CVD_BODY_K3[b] {
                 let x_ln = ln_sw(
-                    self.qp,
+                    &self.qp,
                     &format!("cvd.b{b}.ln{}", i - 1),
                     &x,
                     self.qp.aexp(&format!("cvd.b{b}.ln{}", i - 1)),
@@ -296,7 +298,7 @@ impl<'a> QuantModel<'a> {
             }
             let last = CVD_BODY_K3[b] - 1;
             let x_ln = ln_sw(
-                self.qp,
+                &self.qp,
                 &format!("cvd.b{b}.ln{last}"),
                 &x,
                 self.qp.aexp(&cvd_carry_name(b)),

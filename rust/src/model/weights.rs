@@ -153,6 +153,66 @@ impl QuantParams {
         })
     }
 
+    /// Deterministic synthetic parameters for the artifact-free
+    /// `RefBackend`: random int8 weights / int32 biases at the manifest's
+    /// exponents (usually `Manifest::synthetic`), identity layer norms,
+    /// and freshly built activation LUTs. Satisfies `validate()` by
+    /// construction; same `seed` → bit-identical parameters.
+    pub fn synthetic(manifest: &Manifest, seed: u64) -> Self {
+        use crate::config::SYNTH_W_EXP;
+        use crate::tensor::Tensor;
+
+        let mut rng = crate::util::Rng::new(seed);
+        let mut convs = HashMap::new();
+        let mut lns = HashMap::new();
+        for spec in super::specs::all_conv_specs() {
+            let n = &spec.name;
+            let e_in = *manifest
+                .conv_in_exp
+                .get(n)
+                .unwrap_or_else(|| panic!("conv '{n}' has no input exponent"));
+            let shape: Vec<usize> = if spec.dw {
+                vec![spec.cout, 1, spec.k, spec.k]
+            } else {
+                vec![spec.cout, spec.cin, spec.k, spec.k]
+            };
+            let numel: usize = shape.iter().product();
+            let w: TensorI8 = Tensor::from_vec(
+                &shape,
+                (0..numel).map(|_| rng.range_i64(-64, 64) as i8).collect(),
+            );
+            let b: TensorI32 = Tensor::from_vec(
+                &[spec.cout],
+                (0..spec.cout)
+                    .map(|_| rng.range_i64(-512, 512) as i32)
+                    .collect(),
+            );
+            convs.insert(
+                n.clone(),
+                QuantConv {
+                    w,
+                    b,
+                    e_w: SYNTH_W_EXP,
+                    e_b: e_in + SYNTH_W_EXP,
+                    s_q: 1,
+                    e_s: 0,
+                    e_in,
+                },
+            );
+        }
+        for n in super::specs::ln_names() {
+            let c = super::specs::ln_channels(&n);
+            lns.insert(n, LnParams { gamma: vec![1.0; c], beta: vec![0.0; c] });
+        }
+        QuantParams {
+            convs,
+            lns,
+            aexp: manifest.aexp.clone(),
+            lut_sigmoid: ActLut::build(crate::quant::sigmoid_f64, SIGMOID_OUT_EXP),
+            lut_elu: ActLut::build(crate::quant::elu_f64, manifest.elu_exp),
+        }
+    }
+
     pub fn conv(&self, name: &str) -> &QuantConv {
         self.convs
             .get(name)
@@ -185,5 +245,43 @@ impl QuantParams {
             );
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::specs;
+
+    #[test]
+    fn synthetic_params_satisfy_the_exponent_contract() {
+        let manifest = Manifest::synthetic();
+        let qp = QuantParams::synthetic(&manifest, 11);
+        qp.validate().unwrap();
+        for s in specs::all_conv_specs() {
+            let c = qp.conv(&s.name);
+            let expect: Vec<usize> = if s.dw {
+                vec![s.cout, 1, s.k, s.k]
+            } else {
+                vec![s.cout, s.cin, s.k, s.k]
+            };
+            assert_eq!(c.w.shape(), expect.as_slice(), "{}", s.name);
+            assert_eq!(c.b.len(), s.cout);
+            assert!(c.w.data().iter().all(|&v| (-127..=127).contains(&v)));
+        }
+        for n in specs::ln_names() {
+            assert_eq!(qp.ln(&n).gamma.len(), specs::ln_channels(&n));
+        }
+        // deterministic in the seed
+        let qp2 = QuantParams::synthetic(&manifest, 11);
+        assert_eq!(
+            qp.conv("fe.stem").w.data(),
+            qp2.conv("fe.stem").w.data()
+        );
+        let qp3 = QuantParams::synthetic(&manifest, 12);
+        assert_ne!(
+            qp.conv("fe.stem").w.data(),
+            qp3.conv("fe.stem").w.data()
+        );
     }
 }

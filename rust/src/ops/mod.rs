@@ -33,7 +33,7 @@ pub fn sigmoid(x: f32) -> f32 {
 
 #[inline]
 pub fn elu(x: f32) -> f32 {
-    if x >= 0.0 { x } else { x.min(0.0).exp() - 1.0 }
+    if x >= 0.0 { x } else { x.exp() - 1.0 }
 }
 
 pub fn sigmoid_tensor(x: &TensorF) -> TensorF {
@@ -61,6 +61,29 @@ mod tests {
         assert_eq!(elu(1.5), 1.5);
         assert!((elu(-1.0) - ((-1.0f32).exp() - 1.0)).abs() < 1e-7);
         assert_eq!(elu(0.0), 0.0);
+    }
+
+    #[test]
+    fn elu_branch_boundary_is_continuous_and_exact() {
+        // pin the values around the x == 0 branch point: the positive
+        // branch is the identity, the negative branch is exp(x) - 1
+        // (the redundant `.min(0.0)` guard was dropped — x < 0 is
+        // already guaranteed on that branch)
+        assert_eq!(elu(0.0), 0.0);
+        assert_eq!(elu(f32::MIN_POSITIVE), f32::MIN_POSITIVE);
+        let eps = 1e-6f32;
+        assert!((elu(-eps) - ((-eps).exp() - 1.0)).abs() < 1e-12);
+        // continuity across the boundary: lim x->0- elu(x) == elu(0)
+        assert!(elu(-eps).abs() < 2.0 * eps);
+        assert!(elu(-eps) < 0.0 && elu(eps) > 0.0);
+        // negative tail saturates toward -1 (never below it)
+        assert!(elu(-10.0) > -1.0 && elu(-10.0) < -0.9999);
+        assert!(elu(-40.0) >= -1.0);
+        // exactness vs the reference formula on a sweep of negatives
+        for i in 1..=64 {
+            let x = -(i as f32) / 8.0;
+            assert_eq!(elu(x), x.exp() - 1.0, "x = {x}");
+        }
     }
 
     #[test]

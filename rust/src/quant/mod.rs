@@ -195,7 +195,7 @@ pub fn sigmoid_f64(x: f64) -> f64 {
 }
 
 pub fn elu_f64(x: f64) -> f64 {
-    if x >= 0.0 { x } else { x.min(0.0).exp() - 1.0 }
+    if x >= 0.0 { x } else { x.exp() - 1.0 }
 }
 
 #[cfg(test)]

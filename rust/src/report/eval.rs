@@ -71,7 +71,7 @@ pub fn run_float(ctx: &EvalCtx, scene: &Scene, n: usize) -> SceneRun {
 
 /// CPU-only PTQ baseline over a scene (Table II row 2).
 pub fn run_ptq(ctx: &EvalCtx, scene: &Scene, n: usize) -> SceneRun {
-    let model = QuantModel::new(&ctx.qp);
+    let model = QuantModel::new(Arc::clone(&ctx.qp));
     let mut kb = KeyframeBuffer::new();
     let mut state = QuantState::zero(&ctx.qp);
     let mut out = SceneRun { depths: Vec::new(), timing: TimingStats::default() };

@@ -1,13 +1,25 @@
-//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`) and
-//! executes them on the CPU PJRT client. This is the "programmable
-//! logic" of the reproduction: each artifact plays the role of one
-//! FSM-sequenced stage group of FADEC's accelerator, compiled once at
-//! startup (the analog of configuring the bitstream) and executed many
-//! times per frame.
+//! Backend layer — the "programmable logic" abstraction of the stack.
 //!
-//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md §9).
+//! [`HwBackend`] is the contract the coordinator schedules against: a
+//! catalogue of FSM-sequenced segments (the analog of FADEC's accelerator
+//! stage groups) executed many times per frame. Two implementations:
+//!
+//! * [`HwRuntime`] — loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//!   executes them on the PJRT CPU client, compiled once at startup (the
+//!   analog of configuring the bitstream). Interchange is HLO *text*
+//!   (not serialized protos): jax >= 0.5 emits 64-bit instruction ids
+//!   that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! * [`RefBackend`] — the pure-software reference in
+//!   [`ref_backend`]: the same segment boundaries served by the bit-exact
+//!   Rust integer mirrors, runnable with no `artifacts/` directory.
+//!
+//! Segment lookup is split in two: [`HwBackend::resolve`] turns a name
+//! into a [`SegmentId`] once at pipeline construction, and the hot
+//! [`HwBackend::run`] path is a plain index — no per-call map lookup.
+
+pub mod ref_backend;
+
+pub use ref_backend::RefBackend;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -19,6 +31,76 @@ use crate::data::manifest::{Manifest, SegmentDesc};
 use crate::quant::QTensor;
 use crate::tensor::Tensor;
 
+/// Pre-resolved handle to one backend segment. Obtained from
+/// [`HwBackend::resolve`] once; valid for the lifetime of that backend.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct SegmentId(pub(crate) usize);
+
+impl SegmentId {
+    /// Position of the segment in the backend's manifest order.
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// A compute backend serving the manifest's HW segments. One backend
+/// instance plays the role of the single configured bitstream; any number
+/// of streams may share it (see `coordinator::StreamServer`).
+pub trait HwBackend: Send + Sync {
+    /// Short backend kind tag ("pjrt", "ref").
+    fn kind(&self) -> &'static str;
+
+    /// The segment catalogue + exponent tables this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Resolve a segment name to a handle. Called once per segment at
+    /// pipeline construction; the hot path uses only [`HwBackend::run`].
+    fn resolve(&self, name: &str) -> Result<SegmentId>;
+
+    /// Descriptor of a resolved segment.
+    fn segment_desc(&self, id: SegmentId) -> &SegmentDesc;
+
+    /// Execute a segment with int16 inputs in manifest order; returns
+    /// outputs as QTensors with manifest exponents.
+    fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>>;
+
+    /// Resolve + run in one call (cold paths and tests).
+    fn run_named(&self, name: &str, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+        self.run(self.resolve(name)?, inputs)
+    }
+}
+
+/// Shape/exponent validation shared by every backend: inputs must match
+/// the manifest descriptors exactly (the DMA contract of the PL).
+pub(crate) fn check_inputs(desc: &SegmentDesc, inputs: &[&QTensor]) -> Result<()> {
+    anyhow::ensure!(
+        inputs.len() == desc.inputs.len(),
+        "segment {}: {} inputs given, {} expected",
+        desc.name,
+        inputs.len(),
+        desc.inputs.len()
+    );
+    for (q, d) in inputs.iter().zip(&desc.inputs) {
+        anyhow::ensure!(
+            q.t.shape() == d.shape.as_slice(),
+            "segment {}: input '{}' shape {:?} != manifest {:?}",
+            desc.name,
+            d.name,
+            q.t.shape(),
+            d.shape
+        );
+        anyhow::ensure!(
+            q.exp == d.exp,
+            "segment {}: input '{}' exponent {} != manifest {}",
+            desc.name,
+            d.name,
+            q.exp,
+            d.exp
+        );
+    }
+    Ok(())
+}
+
 /// One compiled HW segment.
 pub struct Segment {
     pub desc: SegmentDesc,
@@ -29,31 +111,9 @@ impl Segment {
     /// Execute with int16 inputs in manifest order; returns the outputs
     /// as QTensors with manifest exponents.
     pub fn execute(&self, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
-        anyhow::ensure!(
-            inputs.len() == self.desc.inputs.len(),
-            "segment {}: {} inputs given, {} expected",
-            self.desc.name,
-            inputs.len(),
-            self.desc.inputs.len()
-        );
+        check_inputs(&self.desc, inputs)?;
         let mut literals = Vec::with_capacity(inputs.len());
         for (q, d) in inputs.iter().zip(&self.desc.inputs) {
-            anyhow::ensure!(
-                q.t.shape() == d.shape.as_slice(),
-                "segment {}: input '{}' shape {:?} != manifest {:?}",
-                self.desc.name,
-                d.name,
-                q.t.shape(),
-                d.shape
-            );
-            anyhow::ensure!(
-                q.exp == d.exp,
-                "segment {}: input '{}' exponent {} != manifest {}",
-                self.desc.name,
-                d.name,
-                q.exp,
-                d.exp
-            );
             literals.push(literal_from_i16(&q.t, &d.shape));
         }
         let result = self.exe.execute::<xla::Literal>(&literals)?;
@@ -100,10 +160,13 @@ fn literal_from_i16(t: &Tensor<i16>, shape: &[usize]) -> xla::Literal {
     .expect("literal creation")
 }
 
-/// The PL analog: a PJRT CPU client plus every compiled segment.
+/// The PL analog: a PJRT CPU client plus every compiled segment, indexed
+/// in manifest order (names are resolved once, not per call).
 pub struct HwRuntime {
     pub client: xla::PjRtClient,
-    pub segments: HashMap<String, Segment>,
+    segments: Vec<Segment>,
+    index: HashMap<String, usize>,
+    manifest: Manifest,
     pub compile_seconds: f64,
 }
 
@@ -114,7 +177,8 @@ impl HwRuntime {
     pub fn load(artifacts_dir: &Path, manifest: &Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
         let t0 = Instant::now();
-        let mut segments = HashMap::new();
+        let mut segments = Vec::with_capacity(manifest.segments.len());
+        let mut index = HashMap::with_capacity(manifest.segments.len());
         for desc in &manifest.segments {
             let path = artifacts_dir.join(&desc.hlo);
             if !path.is_file() {
@@ -131,26 +195,49 @@ impl HwRuntime {
             let exe = client
                 .compile(&comp)
                 .with_context(|| format!("compiling {}", desc.name))?;
-            segments.insert(
-                desc.name.clone(),
-                Segment { desc: desc.clone(), exe },
-            );
+            index.insert(desc.name.clone(), segments.len());
+            segments.push(Segment { desc: desc.clone(), exe });
         }
         Ok(HwRuntime {
             client,
             segments,
+            index,
+            manifest: manifest.clone(),
             compile_seconds: t0.elapsed().as_secs_f64(),
         })
     }
 
     pub fn segment(&self, name: &str) -> Result<&Segment> {
-        self.segments
+        let idx = self
+            .index
             .get(name)
+            .with_context(|| format!("segment '{name}' not loaded"))?;
+        Ok(&self.segments[*idx])
+    }
+}
+
+impl HwBackend for HwRuntime {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn resolve(&self, name: &str) -> Result<SegmentId> {
+        self.index
+            .get(name)
+            .map(|&i| SegmentId(i))
             .with_context(|| format!("segment '{name}' not loaded"))
     }
 
-    /// Execute a segment by name.
-    pub fn run(&self, name: &str, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
-        self.segment(name)?.execute(inputs)
+    fn segment_desc(&self, id: SegmentId) -> &SegmentDesc {
+        &self.segments[id.0].desc
+    }
+
+    fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+        anyhow::ensure!(id.0 < self.segments.len(), "segment id {} out of range", id.0);
+        self.segments[id.0].execute(inputs)
     }
 }

@@ -1,0 +1,262 @@
+//! Pure-software reference backend: serves every manifest segment with
+//! the bit-exact Rust integer mirrors (`model::quant_net`) instead of
+//! PJRT-compiled artifacts.
+//!
+//! Two uses:
+//! * **Artifact-free operation** — paired with [`Manifest::synthetic`]
+//!   and [`QuantParams::synthetic`], the whole Backend/Session/Server
+//!   stack runs and is testable from a clean checkout (no `make
+//!   artifacts`, no `libxla_extension`).
+//! * **Cross-checking** — given the *real* manifest + qparams it computes
+//!   exactly what the PJRT artifacts compute (the golden tests pin both
+//!   against the same python traces).
+//!
+//! Segment names are classified once at construction; the hot `run` path
+//! is an index into a flat table (same contract as `HwRuntime`).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::manifest::{Manifest, SegmentDesc};
+use crate::model::weights::QuantParams;
+use crate::model::QuantModel;
+use crate::quant::QTensor;
+
+use super::{check_inputs, HwBackend, SegmentId};
+
+/// What a manifest segment computes (parsed from its name once).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SegKind {
+    FeFs,
+    Cve,
+    ClGates,
+    ClState,
+    ClOut,
+    CvdEntry(usize),
+    CvdMid(usize, usize),
+    CvdHead(usize),
+}
+
+fn classify(name: &str) -> Result<SegKind> {
+    Ok(match name {
+        "fe_fs" => SegKind::FeFs,
+        "cve" => SegKind::Cve,
+        "cl_gates" => SegKind::ClGates,
+        "cl_state" => SegKind::ClState,
+        "cl_out" => SegKind::ClOut,
+        other => {
+            let rest = other
+                .strip_prefix("cvd_b")
+                .with_context(|| format!("unknown segment '{other}'"))?;
+            let (b_str, tail) = rest
+                .split_once('_')
+                .with_context(|| format!("malformed segment '{other}'"))?;
+            let b: usize = b_str
+                .parse()
+                .with_context(|| format!("bad block index in '{other}'"))?;
+            if tail == "entry" {
+                SegKind::CvdEntry(b)
+            } else if tail == "head" {
+                SegKind::CvdHead(b)
+            } else if let Some(i) = tail.strip_prefix("mid") {
+                SegKind::CvdMid(
+                    b,
+                    i.parse()
+                        .with_context(|| format!("bad mid index in '{other}'"))?,
+                )
+            } else {
+                bail!("unknown segment '{other}'");
+            }
+        }
+    })
+}
+
+/// The software PL: quantized Rust mirrors behind the backend contract.
+pub struct RefBackend {
+    qp: Arc<QuantParams>,
+    model: QuantModel,
+    manifest: Manifest,
+    kinds: Vec<SegKind>,
+    index: HashMap<String, usize>,
+}
+
+impl RefBackend {
+    /// Serve `manifest`'s segments with the integer mirrors parametrised
+    /// by `qp` (real calibrated parameters or synthetic ones).
+    pub fn new(qp: Arc<QuantParams>, manifest: Manifest) -> Result<Self> {
+        let kinds = manifest
+            .segments
+            .iter()
+            .map(|d| classify(&d.name))
+            .collect::<Result<Vec<_>>>()?;
+        let index = manifest
+            .segments
+            .iter()
+            .enumerate()
+            .map(|(i, d)| (d.name.clone(), i))
+            .collect();
+        let model = QuantModel::new(Arc::clone(&qp));
+        Ok(RefBackend { qp, model, manifest, kinds, index })
+    }
+
+    /// Fully self-contained backend: synthetic manifest + deterministic
+    /// synthetic quantized parameters. This is what makes the whole
+    /// pipeline runnable from a clean checkout with no `artifacts/`.
+    pub fn synthetic(seed: u64) -> Self {
+        let manifest = Manifest::synthetic();
+        let qp = Arc::new(QuantParams::synthetic(&manifest, seed));
+        Self::new(qp, manifest).expect("synthetic manifest is well-formed")
+    }
+
+    /// The quantized parameters this backend computes with.
+    pub fn qp(&self) -> &Arc<QuantParams> {
+        &self.qp
+    }
+}
+
+impl HwBackend for RefBackend {
+    fn kind(&self) -> &'static str {
+        "ref"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn resolve(&self, name: &str) -> Result<SegmentId> {
+        self.index
+            .get(name)
+            .map(|&i| SegmentId(i))
+            .with_context(|| format!("segment '{name}' not in manifest"))
+    }
+
+    fn segment_desc(&self, id: SegmentId) -> &SegmentDesc {
+        &self.manifest.segments[id.0]
+    }
+
+    fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+        let desc = self
+            .manifest
+            .segments
+            .get(id.0)
+            .with_context(|| format!("segment id {} out of range", id.0))?;
+        check_inputs(desc, inputs)?;
+        let out = match self.kinds[id.0] {
+            SegKind::FeFs => self.model.seg_fe_fs(inputs[0]),
+            SegKind::Cve => self.model.seg_cve(inputs[0], &inputs[1..]),
+            SegKind::ClGates => {
+                vec![self.model.seg_cl_gates(inputs[0], inputs[1])]
+            }
+            SegKind::ClState => {
+                let (c_new, o_gate) =
+                    self.model.seg_cl_state(inputs[0], inputs[1]);
+                vec![c_new, o_gate]
+            }
+            SegKind::ClOut => vec![self.model.seg_cl_out(inputs[0], inputs[1])],
+            SegKind::CvdEntry(b) => vec![self.model.seg_cvd_entry(b, inputs)],
+            SegKind::CvdMid(b, i) => {
+                vec![self.model.seg_cvd_mid(b, i, inputs[0])]
+            }
+            SegKind::CvdHead(b) => vec![self.model.seg_cvd_head(b, inputs[0])],
+        };
+        anyhow::ensure!(
+            out.len() == desc.outputs.len(),
+            "segment {}: {} outputs computed, {} in manifest",
+            desc.name,
+            out.len(),
+            desc.outputs.len()
+        );
+        for (o, d) in out.iter().zip(&desc.outputs) {
+            anyhow::ensure!(
+                o.t.shape() == d.shape.as_slice(),
+                "segment {}: output '{}' shape {:?} != manifest {:?}",
+                desc.name,
+                d.name,
+                o.t.shape(),
+                d.shape
+            );
+            anyhow::ensure!(
+                o.exp == d.exp,
+                "segment {}: output '{}' exponent {} != manifest {}",
+                desc.name,
+                d.name,
+                o.exp,
+                d.exp
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::quant::quantize_tensor;
+    use crate::tensor::TensorF;
+    use crate::util::Rng;
+
+    fn random_image(seed: u64) -> TensorF {
+        let mut rng = Rng::new(seed);
+        let n = 3 * config::IMG_H * config::IMG_W;
+        TensorF::from_vec(
+            &[1, 3, config::IMG_H, config::IMG_W],
+            (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect(),
+        )
+    }
+
+    #[test]
+    fn synthetic_backend_serves_all_19_segments() {
+        let be = RefBackend::synthetic(7);
+        assert_eq!(be.manifest().segments.len(), 19);
+        assert_eq!(be.kind(), "ref");
+        for seg in &be.manifest().segments {
+            let id = be.resolve(&seg.name).unwrap();
+            assert_eq!(be.segment_desc(id).name, seg.name);
+        }
+        assert!(be.resolve("nope").is_err());
+    }
+
+    #[test]
+    fn fe_fs_runs_and_matches_manifest_shapes() {
+        let be = RefBackend::synthetic(7);
+        let img_q =
+            quantize_tensor(&random_image(1), be.qp().aexp("image"));
+        let id = be.resolve("fe_fs").unwrap();
+        let outs = be.run(id, &[&img_q]).unwrap();
+        assert_eq!(outs.len(), 5);
+        for (o, d) in outs.iter().zip(&be.segment_desc(id).outputs) {
+            assert_eq!(o.t.shape(), d.shape.as_slice());
+            assert_eq!(o.exp, d.exp);
+        }
+    }
+
+    #[test]
+    fn run_rejects_wrong_shape_and_exponent() {
+        let be = RefBackend::synthetic(7);
+        let id = be.resolve("fe_fs").unwrap();
+        let bad_shape = QTensor::zeros(&[1, 3, 8, 8], be.qp().aexp("image"));
+        assert!(be.run(id, &[&bad_shape]).is_err());
+        let bad_exp = QTensor::zeros(
+            &[1, 3, config::IMG_H, config::IMG_W],
+            be.qp().aexp("image") + 1,
+        );
+        assert!(be.run(id, &[&bad_exp]).is_err());
+    }
+
+    #[test]
+    fn same_seed_is_bit_deterministic() {
+        let a = RefBackend::synthetic(3);
+        let b = RefBackend::synthetic(3);
+        let img_q = quantize_tensor(&random_image(2), a.qp().aexp("image"));
+        let ia = a.resolve("fe_fs").unwrap();
+        let ib = b.resolve("fe_fs").unwrap();
+        let oa = a.run(ia, &[&img_q]).unwrap();
+        let ob = b.run(ib, &[&img_q]).unwrap();
+        for (x, y) in oa.iter().zip(&ob) {
+            assert_eq!(x.t.data(), y.t.data());
+        }
+    }
+}

@@ -12,7 +12,10 @@
 //!     ops differ across languages at the ulp level, so requantized
 //!     boundaries may flip the odd LSB).
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and a real xla runtime, so every test here
+//! is `#[ignore]`d — tier-1 `cargo test` passes from a clean checkout
+//! (artifact-free coverage lives in `server.rs` on the RefBackend). Run
+//! these with `cargo test --test golden -- --ignored` after the build.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -24,7 +27,7 @@ use fadec::data::manifest::Manifest;
 use fadec::data::tlv::TlvFile;
 use fadec::model::{QuantModel, QuantParams};
 use fadec::quant::QTensor;
-use fadec::runtime::HwRuntime;
+use fadec::runtime::{HwBackend, HwRuntime};
 use fadec::tensor::{Tensor, TensorF};
 
 fn artifacts() -> PathBuf {
@@ -103,10 +106,11 @@ fn golden_qtensor(
 }
 
 #[test]
+#[ignore = "requires `make artifacts` + the real xla runtime"]
 fn segments_bit_exact_via_pjrt_and_rust_mirror() {
     let (manifest, qp, frames) = load_all();
     let hw = HwRuntime::load(&artifacts(), &manifest).expect("runtime");
-    let qm = QuantModel::new(&qp);
+    let qm = QuantModel::new(Arc::clone(&qp));
     let mut checked = 0usize;
     for (fi, frame) in frames.iter().enumerate() {
         // frame 0 has kf_count == 0 -> cost volume is all zeros, which the
@@ -133,11 +137,11 @@ fn segments_bit_exact_via_pjrt_and_rust_mirror() {
                 continue;
             }
             let refs: Vec<&QTensor> = inputs.iter().collect();
-            let outs = hw.run(&seg.name, &refs).expect("segment exec");
+            let outs = hw.run_named(&seg.name, &refs).expect("segment exec");
             // 2) the Rust integer mirror on the same inputs
             let mirror: Vec<QTensor> = match seg.name.as_str() {
                 "fe_fs" => qm.seg_fe_fs(&inputs[0]),
-                "cve" => qm.seg_cve(&inputs[0], &inputs[1..]),
+                "cve" => qm.seg_cve(&inputs[0], &refs[1..]),
                 "cl_gates" => vec![qm.seg_cl_gates(&inputs[0], &inputs[1])],
                 "cl_state" => {
                     let (c, o) = qm.seg_cl_state(&inputs[0], &inputs[1]);
@@ -214,6 +218,7 @@ fn i16_diff(a: &[i16], b: &[i16]) -> (i32, f64) {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` + the real xla runtime"]
 fn coordinator_tracks_python_golden_sequence() {
     let (manifest, qp, frames) = load_all();
     let mut coord = fadec::coordinator::Coordinator::new(
@@ -257,6 +262,7 @@ fn coordinator_tracks_python_golden_sequence() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` + the real xla runtime"]
 fn coordinator_equals_rust_ptq_mirror_exactly() {
     // The coordinator (PJRT artifacts + SW ops) and the QuantModel (pure
     // Rust mirror) implement the same integer contract over the same SW
@@ -269,7 +275,7 @@ fn coordinator_equals_rust_ptq_mirror_exactly() {
         PipelineOptions::default(),
     )
     .unwrap();
-    let qm = QuantModel::new(&qp);
+    let qm = QuantModel::new(Arc::clone(&qp));
     let mut kb = fadec::kb::KeyframeBuffer::new();
     let mut st = fadec::model::QuantState::zero(&qp);
     let (imgs, poses, _) = load_scene_frames(4);
@@ -286,6 +292,7 @@ fn coordinator_equals_rust_ptq_mirror_exactly() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` + the real xla runtime"]
 fn overlap_ablation_is_bit_identical() {
     // Task-level parallelization must not change results, only timing.
     let (manifest, qp, _) = load_all();
@@ -309,6 +316,7 @@ fn overlap_ablation_is_bit_identical() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` + the real xla runtime"]
 fn float_model_tracks_python_float_tape() {
     // Layer-by-layer comparison of the Rust float model against the jnp
     // float activations of frame 0 (tolerances absorb conv-order ulps).

@@ -1,0 +1,204 @@
+//! Server-layer tests on the artifact-free RefBackend: stream isolation
+//! (interleaved == sequential, bit-exact), multi-stream serving, and
+//! session recycling. These are the tier-1 guarantees behind the
+//! "one bitstream, many streams" model.
+
+use std::sync::Arc;
+
+use fadec::config;
+use fadec::coordinator::{Coordinator, PipelineOptions, StreamServer};
+use fadec::data::dataset::Scene;
+use fadec::model::QuantParams;
+use fadec::runtime::{HwBackend, RefBackend};
+use fadec::tensor::TensorF;
+
+fn shared_backend(seed: u64) -> (Arc<RefBackend>, Arc<QuantParams>) {
+    let backend = Arc::new(RefBackend::synthetic(seed));
+    let qp = Arc::clone(backend.qp());
+    (backend, qp)
+}
+
+/// Run one scene start-to-finish on a fresh coordinator over `backend`.
+fn run_sequential(
+    backend: &Arc<RefBackend>,
+    qp: &Arc<QuantParams>,
+    scene: &Scene,
+    n: usize,
+) -> Vec<TensorF> {
+    let mut coord = Coordinator::with_backend(
+        Arc::clone(backend) as Arc<dyn HwBackend>,
+        Arc::clone(qp),
+        PipelineOptions::default(),
+    )
+    .unwrap();
+    (0..n)
+        .map(|i| {
+            let img = scene.normalized_image(i);
+            coord.step(&img, &scene.poses[i]).unwrap().depth
+        })
+        .collect()
+}
+
+#[test]
+fn interleaved_streams_are_bit_identical_to_sequential() {
+    // Two streams with *different* trajectories share one backend. The
+    // server interleaves them frame by frame; every per-stream depth must
+    // be bit-identical to running each stream alone — any leaked h / c /
+    // depth / keyframe state between sessions breaks this exactly.
+    let (backend, qp) = shared_backend(99);
+    let scene_a = Scene::synthetic("stream-a", 4, 1);
+    let scene_b = Scene::synthetic("stream-b", 4, 2);
+    let n = 4;
+
+    let seq_a = run_sequential(&backend, &qp, &scene_a, n);
+    let seq_b = run_sequential(&backend, &qp, &scene_b, n);
+
+    let mut server = StreamServer::new(
+        Arc::clone(&backend) as Arc<dyn HwBackend>,
+        Arc::clone(&qp),
+        PipelineOptions::default(),
+    )
+    .unwrap();
+    let a = server.open_stream();
+    let b = server.open_stream();
+    assert_eq!((a, b), (0, 1));
+
+    let mut inter_a = Vec::new();
+    let mut inter_b = Vec::new();
+    for i in 0..n {
+        let img_a = scene_a.normalized_image(i);
+        let img_b = scene_b.normalized_image(i);
+        let outs = server
+            .run_round(&[
+                (a, &img_a, &scene_a.poses[i]),
+                (b, &img_b, &scene_b.poses[i]),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        for (sid, out) in outs {
+            if sid == a {
+                inter_a.push(out.depth);
+            } else {
+                inter_b.push(out.depth);
+            }
+        }
+    }
+
+    for i in 0..n {
+        assert_eq!(
+            inter_a[i].data(),
+            seq_a[i].data(),
+            "stream A frame {i}: interleaving changed the output"
+        );
+        assert_eq!(
+            inter_b[i].data(),
+            seq_b[i].data(),
+            "stream B frame {i}: interleaving changed the output"
+        );
+    }
+    assert_eq!(server.session(a).frames_done(), n);
+    assert_eq!(server.session(b).frames_done(), n);
+}
+
+#[test]
+fn four_streams_serve_concurrently_with_throughput_accounting() {
+    let (backend, qp) = shared_backend(5);
+    let mut server = StreamServer::new(
+        Arc::clone(&backend) as Arc<dyn HwBackend>,
+        qp,
+        PipelineOptions::default(),
+    )
+    .unwrap();
+    let streams: Vec<usize> =
+        (0..config::DEFAULT_STREAMS).map(|_| server.open_stream()).collect();
+    assert_eq!(server.n_streams(), config::DEFAULT_STREAMS);
+    let scenes: Vec<Scene> = streams
+        .iter()
+        .map(|&s| Scene::synthetic(&format!("s{s}"), 2, 30 + s as u64))
+        .collect();
+
+    for i in 0..2 {
+        let imgs: Vec<TensorF> =
+            scenes.iter().map(|sc| sc.normalized_image(i)).collect();
+        let inputs: Vec<_> = streams
+            .iter()
+            .map(|&s| (s, &imgs[s], &scenes[s].poses[i]))
+            .collect();
+        let outs = server.run_round(&inputs).unwrap();
+        assert_eq!(outs.len(), config::DEFAULT_STREAMS);
+        for (_, out) in &outs {
+            assert!(out.depth.data().iter().all(|&d| {
+                (config::MIN_DEPTH - 1e-3..=config::MAX_DEPTH + 1e-3)
+                    .contains(&d)
+            }));
+        }
+    }
+
+    for &s in &streams {
+        let t = server.stream_throughput(s);
+        assert_eq!(t.frames, 2);
+        assert!(t.busy_seconds > 0.0);
+        assert!(t.fps() > 0.0);
+    }
+    let agg = server.aggregate();
+    assert_eq!(agg.streams, config::DEFAULT_STREAMS);
+    assert_eq!(agg.frames, 2 * config::DEFAULT_STREAMS);
+    assert!(agg.busy_fps() > 0.0 && agg.wall_fps() > 0.0);
+    let report = server.report();
+    assert!(report.contains("aggregate:"), "{report}");
+    assert!(report.contains("backend 'ref'"), "{report}");
+    // extern crossings happened and the overhead definition held
+    let stats = server.take_extern_stats();
+    assert!(!stats.records.is_empty());
+    assert!(stats.total_overhead() >= 0.0);
+}
+
+#[test]
+fn stream_reset_recycles_a_slot_without_leaking_state() {
+    // Serving video 1 on a slot, resetting it, then serving video 2 must
+    // equal serving video 2 on a fresh server (KB + hidden state fully
+    // cleared).
+    let (backend, qp) = shared_backend(13);
+    let video1 = Scene::synthetic("v1", 3, 3);
+    let video2 = Scene::synthetic("v2", 3, 4);
+
+    let fresh = run_sequential(&backend, &qp, &video2, 3);
+
+    let mut server = StreamServer::new(
+        Arc::clone(&backend) as Arc<dyn HwBackend>,
+        Arc::clone(&qp),
+        PipelineOptions::default(),
+    )
+    .unwrap();
+    let s = server.open_stream();
+    for i in 0..3 {
+        let img = video1.normalized_image(i);
+        server.step_stream(s, &img, &video1.poses[i]).unwrap();
+    }
+    assert!(server.session(s).frames_done() == 3);
+    assert!(!server.session(s).kb.is_empty(), "video 1 populated the KB");
+    server.reset_stream(s);
+    assert!(server.session(s).is_cold());
+    assert!(server.session(s).kb.is_empty());
+    for i in 0..3 {
+        let img = video2.normalized_image(i);
+        let out = server.step_stream(s, &img, &video2.poses[i]).unwrap();
+        assert_eq!(
+            out.depth.data(),
+            fresh[i].data(),
+            "frame {i}: recycled slot diverged from a fresh session"
+        );
+    }
+}
+
+#[test]
+fn stepping_an_unknown_stream_errors() {
+    let (backend, qp) = shared_backend(1);
+    let mut server =
+        StreamServer::new(backend as Arc<dyn HwBackend>, qp, PipelineOptions::default())
+            .unwrap();
+    let scene = Scene::synthetic("x", 1, 1);
+    let img = scene.normalized_image(0);
+    let err = server.step_stream(7, &img, &scene.poses[0]).err().unwrap();
+    assert!(format!("{err}").contains("stream 7"), "{err}");
+}

@@ -1,0 +1,244 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository has no crates.io access, so
+//! the exact API subset the `fadec` crate uses is reimplemented here:
+//! `Error`, `Result`, the `anyhow!` / `bail!` / `ensure!` macros, and the
+//! `Context` extension trait for `Result` and `Option`. Contexts are kept
+//! as a simple message chain; `{:#}` prints the full chain inline and
+//! `{:?}` prints it as anyhow's familiar "Caused by:" block.
+
+use std::convert::Infallible;
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A message-chain error: `msg` is the outermost context, `source` the
+/// next layer down (ending at the root cause).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error in one more layer of context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Messages outermost-first (context chain ending at the root cause).
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        *self.chain().last().expect("non-empty chain")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain inline, outermost first
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(mut cur) = self.source.as_deref() {
+            write!(f, "\n\nCaused by:")?;
+            loop {
+                write!(f, "\n    {}", cur.msg)?;
+                match cur.source.as_deref() {
+                    Some(next) => cur = next,
+                    None => break,
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (same trick as anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // flatten the std error source chain into the message chain
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut err = Error::msg(it.next().expect("at least one message"));
+        for m in it {
+            err = Error { msg: m, source: Some(Box::new(err)) };
+        }
+        err
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with `Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Anything convertible into [`Error`] (std errors and `Error` itself);
+/// the dispatch trait behind [`Context`]. Not intended for direct use.
+#[doc(hidden)]
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` (any std error type, or `Error` itself) and `Option`.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("not an integer")?;
+        ensure!(v >= 0, "negative value {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = parse("x").unwrap_err();
+        assert_eq!(format!("{e}"), "not an integer");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("not an integer: "), "{full}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("-3").unwrap_err();
+        assert_eq!(format!("{e}"), "negative value -3");
+        fn fail() -> Result<()> {
+            bail!("boom {}", 42);
+        }
+        assert_eq!(format!("{}", fail().unwrap_err()), "boom 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        let e = (None as Option<i32>)
+            .with_context(|| format!("missing {}", "thing"))
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+    }
+
+    #[test]
+    fn from_std_error_keeps_source_chain() {
+        let io = std::io::Error::other("root");
+        let e = Error::from(io).context("outer");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+}

@@ -1,0 +1,131 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate links `libxla_extension`, which this build environment
+//! does not ship. The stub keeps the exact API surface `fadec::runtime`
+//! uses so the crate compiles everywhere; every entry point returns a
+//! "PJRT unavailable" error at runtime. `PjRtClient::cpu()` is the single
+//! gate: it always fails here, so no executable, buffer or literal can
+//! ever be constructed, and the methods past that gate are unreachable.
+//!
+//! Swapping this path dependency for the real xla-rs crate restores the
+//! hardware-artifact backend without touching `fadec` source.
+
+use std::fmt;
+
+/// Stub error ("PJRT unavailable: ...").
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PJRT unavailable: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the xla_extension runtime; this build uses the \
+         offline stub (vendor/xla-stub). Use the RefBackend instead, or \
+         link the real xla-rs crate."
+    ))
+}
+
+/// Element types the runtime constructs literals with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    S16,
+}
+
+/// Stub PJRT client — `cpu()` always fails in the offline build.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT unavailable"), "{msg}");
+        assert!(msg.contains("RefBackend"), "{msg}");
+    }
+}
