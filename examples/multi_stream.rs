@@ -6,7 +6,8 @@
 //! and each stream gets its own procedurally generated video. Per-stream
 //! and aggregate throughput are reported at the end.
 //!
-//!     cargo run --release --example multi_stream [-- --streams N --frames M]
+//!     cargo run --release --example multi_stream \
+//!         [-- --streams N --frames M --conv-threads T]
 
 use std::sync::Arc;
 
@@ -21,23 +22,27 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n_streams = args.get_usize("streams", config::DEFAULT_STREAMS);
     let frames = args.get_usize("frames", 6);
+    let conv_threads = args.get_usize("conv-threads", 1);
 
-    // one backend instance, shared by every stream
+    // one backend instance, shared by every stream; the server's engine
+    // applies --conv-threads to it (output channels striped over that
+    // many workers, bit-identical results)
     let backend = Arc::new(RefBackend::synthetic(0));
     let qp = Arc::clone(backend.qp());
-    println!(
-        "backend '{}': {} segments, serving {} concurrent streams x {} frames",
-        backend.kind(),
-        backend.manifest().segments.len(),
-        n_streams,
-        frames
-    );
-
     let mut server = StreamServer::new(
         Arc::clone(&backend) as Arc<dyn HwBackend>,
         qp,
-        PipelineOptions::default(),
+        PipelineOptions { conv_threads, ..Default::default() },
     )?;
+    println!(
+        "backend '{}': {} segments, serving {} concurrent streams x {} frames \
+         (conv threads: {})",
+        backend.kind(),
+        backend.manifest().segments.len(),
+        n_streams,
+        frames,
+        backend.conv_threads(),
+    );
     let streams: Vec<usize> = (0..n_streams).map(|_| server.open_stream()).collect();
     // every stream is a different video (different seed/trajectory)
     let scenes: Vec<Scene> = streams

@@ -42,11 +42,11 @@ fn main() -> anyhow::Result<()> {
 
     let mut with = Coordinator::new(
         art, &manifest, Arc::clone(&qp),
-        PipelineOptions { overlap: true, sw_threads: 2 },
+        PipelineOptions { overlap: true, sw_threads: 2, ..Default::default() },
     )?;
     let mut without = Coordinator::new(
         art, &manifest, Arc::clone(&qp),
-        PipelineOptions { overlap: false, sw_threads: 2 },
+        PipelineOptions { overlap: false, sw_threads: 2, ..Default::default() },
     )?;
 
     let (t_with, prof_with) = run(&mut with, &scene, frames)?;

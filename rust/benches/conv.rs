@@ -1,0 +1,150 @@
+//! Conv-stack benchmarks: reference guarded loops vs the packed
+//! interior/border kernels, single- and multi-threaded, at
+//! pipeline-representative shapes — the data behind the PR-2 speedup
+//! claim. Results are merged into `BENCH_conv.json` (see
+//! `util::benchjson` for the schema).
+//!
+//!     cargo bench --bench conv [-- --smoke] [-- --threads T]
+//!
+//! `--threads T` benches at powers of two up to and including T
+//! (default 4). `--smoke` runs each kernel once and validates the
+//! emitted JSON schema (the CI regression gate for the bench harness
+//! itself); smoke timings are cold-iteration noise, so they go to
+//! `BENCH_conv.smoke.json` and never overwrite the real perf record.
+
+use fadec::ops::{
+    conv2d_dw_q_ref, conv2d_q_packed, conv2d_q_ref, out_dim, Arena, PackedQConv,
+};
+use fadec::quant::QTensor;
+use fadec::tensor::{Tensor, TensorI32, TensorI8};
+use fadec::util::benchjson::{self, BenchRecord};
+use fadec::util::{bench, Args, Rng};
+
+struct Case {
+    name: &'static str,
+    ic: usize,
+    oc: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    dw: bool,
+}
+
+/// Pipeline-representative shapes (see config::CVE_CH / FE_STAGES):
+/// the dense quantized 3x3 at 1/2-scale is the acceptance shape.
+const CASES: &[Case] = &[
+    Case { name: "conv2d_q_3x3", ic: 64, oc: 32, h: 32, w: 48, k: 3, stride: 1, dw: false },
+    Case { name: "conv2d_q_5x5", ic: 48, oc: 56, h: 8, w: 12, k: 5, stride: 1, dw: false },
+    Case { name: "conv2d_q_1x1", ic: 72, oc: 12, h: 16, w: 24, k: 1, stride: 1, dw: false },
+    Case { name: "conv2d_q_3x3_s2", ic: 16, oc: 24, h: 32, w: 48, k: 3, stride: 2, dw: false },
+    Case { name: "conv2d_dw_q_3x3", ic: 1, oc: 48, h: 32, w: 48, k: 3, stride: 1, dw: true },
+    Case { name: "conv2d_dw_q_5x5_s2", ic: 1, oc: 48, h: 16, w: 24, k: 5, stride: 2, dw: true },
+];
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let smoke = args.has("smoke");
+    let max_threads = args.get_usize("threads", 4).max(1);
+    // powers of two up to max_threads, plus max_threads itself
+    let mut thread_counts: Vec<usize> =
+        (0..).map(|i| 1usize << i).take_while(|&t| t < max_threads).collect();
+    thread_counts.push(max_threads);
+    let (warm, iters) = if smoke { (0, 1) } else { (3, 30) };
+    let mut rng = Rng::new(42);
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    for case in CASES {
+        let xc = if case.dw { case.oc } else { case.ic };
+        let x = QTensor {
+            t: Tensor::from_vec(
+                &[1, xc, case.h, case.w],
+                (0..xc * case.h * case.w)
+                    .map(|_| rng.range_i64(-2000, 2000) as i16)
+                    .collect(),
+            ),
+            exp: 8,
+        };
+        let wshape = [case.oc, case.ic, case.k, case.k];
+        let w = TensorI8::from_vec(
+            &wshape,
+            (0..wshape.iter().product::<usize>())
+                .map(|_| rng.range_i64(-127, 127) as i8)
+                .collect(),
+        );
+        let b = TensorI32::from_vec(
+            &[case.oc],
+            (0..case.oc).map(|_| rng.range_i64(-512, 512) as i32).collect(),
+        );
+        let pw = if case.dw {
+            PackedQConv::pack_depthwise(&w)
+        } else {
+            PackedQConv::pack_dense(&w)
+        };
+        let (ho, wo) =
+            (out_dim(case.h, case.k, case.stride), out_dim(case.w, case.k, case.stride));
+        let macs = case.oc * case.ic * case.k * case.k * ho * wo;
+        let shape = format!(
+            "x=1x{}x{}x{} w={}x{}x{}x{} s={}",
+            xc, case.h, case.w, case.oc, case.ic, case.k, case.k, case.stride
+        );
+        let gops = |ns: f64| if ns > 0.0 { 2.0 * macs as f64 / ns } else { 0.0 };
+
+        // reference guarded loops (the executable spec; threads n/a -> 1)
+        let ref_iters = if smoke { 1 } else { iters.min(10) };
+        let st = bench(&format!("{}_ref", case.name), warm, ref_iters, || {
+            let y = if case.dw {
+                conv2d_dw_q_ref(&x, &w, &b, case.stride, 17, 12, true, 8)
+            } else {
+                conv2d_q_ref(&x, &w, &b, case.stride, 17, 12, true, 8)
+            };
+            std::hint::black_box(y);
+        });
+        let ref_ns = st.median() * 1e9;
+        records.push(BenchRecord {
+            op: format!("{}_ref", case.name),
+            shape: shape.clone(),
+            ns_per_iter: ref_ns,
+            gops: gops(ref_ns),
+            threads: 1,
+        });
+
+        // packed kernels at each worker count
+        let mut fast1_ns = f64::NAN;
+        for &threads in &thread_counts {
+            let mut arena = Arena::with_threads(threads);
+            let st = bench(
+                &format!("{}_t{}", case.name, threads),
+                warm,
+                iters,
+                || {
+                    let y = conv2d_q_packed(
+                        &x, &pw, b.data(), case.stride, 17, 12, true, 8,
+                        &mut arena,
+                    );
+                    arena.recycle_q(std::hint::black_box(y));
+                },
+            );
+            let ns = st.median() * 1e9;
+            if threads == 1 {
+                fast1_ns = ns;
+            }
+            records.push(BenchRecord {
+                op: case.name.to_string(),
+                shape: shape.clone(),
+                ns_per_iter: ns,
+                gops: gops(ns),
+                threads,
+            });
+        }
+        if !smoke {
+            println!(
+                "  -> {}: single-thread speedup vs ref: {:.2}x",
+                case.name,
+                ref_ns / fast1_ns
+            );
+        }
+    }
+
+    benchjson::write_and_validate(smoke, &records);
+}

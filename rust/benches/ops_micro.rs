@@ -1,15 +1,21 @@
 //! Micro-benchmarks of the software-friendly operators (the CPU side of
 //! the co-design) and the conv baselines — the data behind §Perf in
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md. Conv records are merged into `BENCH_conv.json`
+//! (`util::benchjson` schema) alongside the `conv` bench's.
 //!
-//!     cargo bench --bench ops_micro
+//!     cargo bench --bench ops_micro [-- --smoke]
+//!
+//! `--smoke` runs each kernel once and validates the emitted JSON schema
+//! (the CI bench-smoke step); smoke timings go to
+//! `BENCH_conv.smoke.json` so they never overwrite the real perf record.
 
 use fadec::config::N_HYPOTHESES;
-use fadec::ops;
+use fadec::ops::{self, Arena, PackedFConv, PackedQConv};
 use fadec::poses::{sweep_grids, Mat4};
 use fadec::quant::QTensor;
 use fadec::tensor::{Tensor, TensorF, TensorI32, TensorI8};
-use fadec::util::{bench, Rng};
+use fadec::util::benchjson::{self, BenchRecord};
+use fadec::util::{bench, Args, Rng};
 
 fn randn(shape: &[usize], rng: &mut Rng) -> TensorF {
     let n: usize = shape.iter().product();
@@ -17,6 +23,10 @@ fn randn(shape: &[usize], rng: &mut Rng) -> TensorF {
 }
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let smoke = args.has("smoke");
+    let it = |n: usize| if smoke { 1 } else { n };
+    let warm = |n: usize| if smoke { 0 } else { n };
     let mut rng = Rng::new(42);
 
     // grid sampling: the irregular-access op the paper keeps in software.
@@ -25,10 +35,10 @@ fn main() {
     let mut kf_pose = Mat4::identity();
     kf_pose.0[3] = 0.08;
     let grids = sweep_grids(&Mat4::identity(), &kf_pose, 1, 32, 48);
-    bench("grid_sample_single_hypothesis", 10, 200, || {
+    bench("grid_sample_single_hypothesis", warm(10), it(200), || {
         std::hint::black_box(ops::grid_sample(&feat, &grids[31], 32, 48));
     });
-    bench("cvf_prep_full_128_warps", 2, 20, || {
+    bench("cvf_prep_full_128_warps", warm(2), it(20), || {
         for g in &grids {
             std::hint::black_box(ops::grid_sample(&feat, g, 32, 48));
         }
@@ -41,29 +51,46 @@ fn main() {
     let gates = randn(&[1, 256, 2, 3], &mut rng);
     let g = vec![1.0f32; 256];
     let b = vec![0.0f32; 256];
-    bench("layer_norm_cl_gates", 10, 500, || {
+    bench("layer_norm_cl_gates", warm(10), it(500), || {
         std::hint::black_box(ops::layer_norm(&gates, &g, &b));
     });
     let big = randn(&[1, 32, 32, 48], &mut rng);
     let g32 = vec![1.0f32; 32];
     let b32 = vec![0.0f32; 32];
-    bench("layer_norm_cvd_b4", 10, 200, || {
+    bench("layer_norm_cvd_b4", warm(10), it(200), || {
         std::hint::black_box(ops::layer_norm(&big, &g32, &b32));
     });
 
     // bilinear upsampling (float SW op)
     let carry = randn(&[1, 40, 16, 24], &mut rng);
-    bench("upsample_bilinear2x_cvd", 10, 200, || {
+    bench("upsample_bilinear2x_cvd", warm(10), it(200), || {
         std::hint::black_box(ops::upsample_bilinear2x(&carry));
     });
 
     // conv baselines: the float vs quantized CPU cost (Table II rows 1-2)
+    // at the 1/2-scale CVE-like shape; both use the packed fast path and
+    // land in BENCH_conv.json
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let macs = 32 * 64 * 9 * 32 * 48;
+    let gops = |ns: f64| if ns > 0.0 { 2.0 * macs as f64 / ns } else { 0.0 };
+    let shape = "x=1x64x32x48 w=32x64x3x3 s=1".to_string();
+
     let x = randn(&[1, 64, 32, 48], &mut rng);
     let w = randn(&[32, 64, 3, 3], &mut rng);
     let bias = vec![0.0f32; 32];
-    bench("conv2d_f32_64x32_3x3_32x48", 3, 30, || {
-        std::hint::black_box(ops::conv2d(&x, &w, &bias, 1));
+    let pwf = PackedFConv::pack_dense(&w);
+    let mut arena_f = Arena::new();
+    let st = bench("conv2d_f32_64x32_3x3_32x48", warm(3), it(30), || {
+        std::hint::black_box(ops::conv2d_packed(&x, &pwf, &bias, 1, &mut arena_f));
     });
+    records.push(BenchRecord {
+        op: "ops_micro_conv2d_f32".into(),
+        shape: shape.clone(),
+        ns_per_iter: st.median() * 1e9,
+        gops: gops(st.median() * 1e9),
+        threads: 1,
+    });
+
     let xq = QTensor {
         t: Tensor::from_vec(
             &[1, 64, 32, 48],
@@ -76,14 +103,27 @@ fn main() {
         (0..32 * 64 * 9).map(|_| rng.range_i64(-127, 127) as i8).collect(),
     );
     let bq = TensorI32::from_vec(&[32], vec![0; 32]);
-    bench("conv2d_q_64x32_3x3_32x48", 3, 30, || {
-        std::hint::black_box(ops::conv2d_q(&xq, &wq, &bq, 1, 17, 12, true, 8));
+    let pw = PackedQConv::pack_dense(&wq);
+    let mut arena = Arena::new();
+    let st = bench("conv2d_q_64x32_3x3_32x48", warm(3), it(30), || {
+        let y = ops::conv2d_q_packed(&xq, &pw, bq.data(), 1, 17, 12, true, 8,
+                                     &mut arena);
+        arena.recycle_q(std::hint::black_box(y));
+    });
+    records.push(BenchRecord {
+        op: "ops_micro_conv2d_q".into(),
+        shape,
+        ns_per_iter: st.median() * 1e9,
+        gops: gops(st.median() * 1e9),
+        threads: 1,
     });
 
     // cost volume finish (the synchronous extern op)
     let warps: Vec<TensorF> =
         (0..N_HYPOTHESES).map(|_| randn(&[1, 16, 32, 48], &mut rng)).collect();
-    bench("cvf_finish", 5, 100, || {
+    bench("cvf_finish", warm(5), it(100), || {
         std::hint::black_box(fadec::model::sw::cvf_finish(&feat, &warps, 2));
     });
+
+    benchjson::write_and_validate(smoke, &records);
 }

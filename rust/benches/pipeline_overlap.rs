@@ -41,10 +41,10 @@ fn main() -> anyhow::Result<()> {
     let scene = dataset.load_scene("redkitchen-01")?;
 
     let configs = [
-        ("overlap=on  threads=2 (paper)", PipelineOptions { overlap: true, sw_threads: 2 }),
-        ("overlap=off threads=2", PipelineOptions { overlap: false, sw_threads: 2 }),
-        ("overlap=on  threads=1", PipelineOptions { overlap: true, sw_threads: 1 }),
-        ("overlap=off threads=1", PipelineOptions { overlap: false, sw_threads: 1 }),
+        ("overlap=on  threads=2 (paper)", PipelineOptions { overlap: true, sw_threads: 2, ..Default::default() }),
+        ("overlap=off threads=2", PipelineOptions { overlap: false, sw_threads: 2, ..Default::default() }),
+        ("overlap=on  threads=1", PipelineOptions { overlap: true, sw_threads: 1, ..Default::default() }),
+        ("overlap=off threads=1", PipelineOptions { overlap: false, sw_threads: 1, ..Default::default() }),
     ];
     let mut results = Vec::new();
     for (name, opts) in configs {

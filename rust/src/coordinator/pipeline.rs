@@ -60,11 +60,23 @@ pub struct PipelineOptions {
     pub overlap: bool,
     /// CPU worker threads (the ZCU104 has two cores).
     pub sw_threads: usize,
+    /// Conv worker threads for backends with software conv kernels:
+    /// output channels of each conv are striped over this many scoped
+    /// threads (bit-identical results for any value). Applied to the
+    /// backend at engine construction through
+    /// `HwBackend::set_conv_threads`, so it works with every
+    /// coordinator/server constructor. `0` (the default) leaves the
+    /// backend's current setting untouched — a fresh `RefBackend` is
+    /// serial, and a backend pre-configured with
+    /// `RefBackend::with_conv_threads` keeps its value. Note the setting
+    /// lives on the (possibly shared) backend: the last engine built over
+    /// it with a non-zero value wins.
+    pub conv_threads: usize,
 }
 
 impl Default for PipelineOptions {
     fn default() -> Self {
-        PipelineOptions { overlap: true, sw_threads: SW_THREADS }
+        PipelineOptions { overlap: true, sw_threads: SW_THREADS, conv_threads: 0 }
     }
 }
 
@@ -249,6 +261,9 @@ impl PipelineEngine {
         opts: PipelineOptions,
     ) -> Result<Self> {
         let handles = SegmentHandles::resolve(backend.as_ref())?;
+        if opts.conv_threads > 0 {
+            backend.set_conv_threads(opts.conv_threads);
+        }
         Ok(PipelineEngine {
             backend,
             qp,
@@ -748,7 +763,8 @@ impl Coordinator {
     }
 
     /// Artifact-free coordinator on a synthetic `RefBackend` (runs from a
-    /// clean checkout; deterministic in `seed`).
+    /// clean checkout; deterministic in `seed`, bit-identical for every
+    /// `opts.conv_threads` — the engine applies that knob to any backend).
     pub fn on_ref_backend(seed: u64, opts: PipelineOptions) -> Result<Self> {
         let backend = RefBackend::synthetic(seed);
         let qp = Arc::clone(backend.qp());

@@ -18,7 +18,7 @@ use anyhow::{Context, Result};
 use crate::metrics::{AggregateThroughput, StreamThroughput};
 use crate::model::weights::QuantParams;
 use crate::poses::Mat4;
-use crate::runtime::HwBackend;
+use crate::runtime::{HwBackend, RefBackend};
 use crate::tensor::TensorF;
 
 use super::extern_link::ExternStats;
@@ -47,6 +47,15 @@ impl StreamServer {
             rr_next: 0,
             started: Instant::now(),
         })
+    }
+
+    /// Artifact-free server on a synthetic `RefBackend` (deterministic in
+    /// `seed`); like every constructor, `opts.conv_threads` reaches the
+    /// backend's conv kernels through `HwBackend::set_conv_threads`.
+    pub fn on_ref_backend(seed: u64, opts: PipelineOptions) -> Result<Self> {
+        let backend = RefBackend::synthetic(seed);
+        let qp = Arc::clone(backend.qp());
+        Self::new(Arc::new(backend), qp, opts)
     }
 
     /// Open a new stream; returns its id (dense, starting at 0).

@@ -36,6 +36,37 @@
 //! (`model`), the FPGA cycle/resource model behind Tables II/III
 //! (`hwsim`, `codesign`), and the report generators (`report`).
 //!
+//! # Ops layer (the conv fast path, PR 2)
+//!
+//! Every backend above ultimately lands in `ops`; the quantized conv
+//! stack there is the serving hot path and is organised around three
+//! ideas (measured in `BENCH_conv.json` by `benches/conv.rs`):
+//!
+//! * **Packed weights** — [`ops::PackedConv`] is built once per layer at
+//!   load time (`model::weights`): a per-output-channel tap list,
+//!   kernel-major within each input channel, with zero-weight taps
+//!   dropped. The per-frame kernels never re-read the `(OC,IC,k,k)`
+//!   layout.
+//! * **Interior/border split** — padding bounds checks are hoisted out of
+//!   the inner loops analytically (`valid_range` in `ops::conv`): the
+//!   interior is a branch-free slice FMA, the `k/2`-wide border is
+//!   handled by clipping each tap's output range. The original guarded
+//!   loops survive as `conv2d*_ref`, the executable specification the
+//!   property tests (`rust/tests/conv_exact.rs`) pin against.
+//! * **Scratch arena + channel threads** — [`ops::Arena`] owns the
+//!   accumulators and a freelist of activation payloads (lifetime rules
+//!   in `ops::arena`); `QuantModel`/`FloatModel` thread it through every
+//!   conv and recycle chain intermediates. Output channels stripe over
+//!   `Arena::threads` scoped workers (`PipelineOptions::conv_threads`),
+//!   bit-identically for any thread count.
+//!
+//! Where a future SIMD/batching PR plugs in: the branch-free interior row
+//! loop in `ops::conv::accum_channel_q` is the vectorisation point (swap
+//! the scalar zip for an explicit i16xN widening-multiply kernel without
+//! touching packing or drivers); an N-stream batched backend adds a
+//! batch dimension to the arena accumulators and reuses the same tap
+//! lists, since `PackedConv` is input-independent.
+//!
 //! **L2/L1 (python/, build-time only)** — the DeepVideoMVS compute graph
 //! in JAX with quantized Pallas kernels, AOT-lowered to the
 //! `artifacts/*.hlo.txt` executables the PJRT backend loads. Python

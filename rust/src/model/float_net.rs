@@ -4,8 +4,8 @@
 use crate::config::{self, CVD_BODY_K3, CVE_BODY_KERNELS, CVE_DOWN_KERNEL, CL_CH};
 use crate::kb::KeyframeBuffer;
 use crate::ops::{
-    conv2d, conv2d_dw, elu_tensor, layer_norm, relu_inplace, sigmoid_tensor,
-    upsample_bilinear2x, upsample_nearest2x,
+    conv2d_dw_packed, conv2d_packed, elu_tensor, layer_norm, relu_inplace,
+    sigmoid_tensor, upsample_bilinear2x, upsample_nearest2x, Arena,
 };
 use crate::poses::Mat4;
 use crate::tensor::TensorF;
@@ -38,15 +38,26 @@ impl FloatState {
 }
 
 /// The float model with a resolved spec table (avoids name lookups on the
-/// hot path).
+/// hot path) and a conv scratch arena (same lifetime rules as
+/// `QuantModel`'s; the `Mutex` keeps `&self` methods shareable).
 pub struct FloatModel<'a> {
     pub params: &'a FloatParams,
     specs: Vec<super::specs::ConvSpec>,
+    scratch: std::sync::Mutex<Arena>,
 }
 
 impl<'a> FloatModel<'a> {
     pub fn new(params: &'a FloatParams) -> Self {
-        FloatModel { params, specs: super::specs::all_conv_specs() }
+        Self::with_conv_threads(params, 1)
+    }
+
+    /// Model whose convs stripe output channels over `threads` workers.
+    pub fn with_conv_threads(params: &'a FloatParams, threads: usize) -> Self {
+        FloatModel {
+            params,
+            specs: super::specs::all_conv_specs(),
+            scratch: std::sync::Mutex::new(Arena::with_threads(threads)),
+        }
     }
 
     fn conv(&self, name: &str, x: &TensorF) -> TensorF {
@@ -56,10 +67,13 @@ impl<'a> FloatModel<'a> {
             .find(|s| s.name == name)
             .unwrap_or_else(|| panic!("unknown conv '{name}'"));
         let c = self.params.conv(name);
-        let mut y = if spec.dw {
-            conv2d_dw(x, &c.w, &c.b, spec.stride)
-        } else {
-            conv2d(x, &c.w, &c.b, spec.stride)
+        let mut y = {
+            let mut arena = self.scratch.lock().unwrap();
+            if spec.dw {
+                conv2d_dw_packed(x, &c.packed, &c.b, spec.stride, &mut arena)
+            } else {
+                conv2d_packed(x, &c.packed, &c.b, spec.stride, &mut arena)
+            }
         };
         let (_, oc, _, _) = y.nchw();
         let hw = y.len() / oc;

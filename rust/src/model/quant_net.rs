@@ -14,8 +14,8 @@ use crate::config::{
 };
 use crate::kb::KeyframeBuffer;
 use crate::ops::{
-    conv2d_dw_q, conv2d_q, layer_norm, upsample_bilinear2x,
-    upsample_nearest2x_i16,
+    conv2d_dw_q_packed, conv2d_q_packed, layer_norm, upsample_bilinear2x,
+    upsample_nearest2x_i16, Arena,
 };
 use crate::poses::Mat4;
 use crate::quant::{
@@ -27,9 +27,12 @@ use super::specs::{cvd_carry_name, cve_out_name, fe_specs};
 use super::sw;
 use super::weights::QuantParams;
 
-/// Quantized conv block via the shared integer semantics.
+/// Quantized conv block via the shared integer semantics, over the
+/// weights packed at load time. `arena` supplies the accumulators and the
+/// output payload (see `ops::arena` for the lifetime rules).
+#[allow(clippy::too_many_arguments)]
 pub fn qconv(qp: &QuantParams, name: &str, x: &QTensor, out_exp: i32,
-             relu: bool, dw: bool, stride: usize) -> QTensor {
+             relu: bool, dw: bool, stride: usize, arena: &mut Arena) -> QTensor {
     let c = qp.conv(name);
     debug_assert_eq!(
         c.e_in, x.exp,
@@ -37,9 +40,11 @@ pub fn qconv(qp: &QuantParams, name: &str, x: &QTensor, out_exp: i32,
     );
     let r = x.exp + c.e_w + c.e_s - out_exp;
     if dw {
-        conv2d_dw_q(x, &c.w, &c.b, stride, c.s_q, r, relu, out_exp)
+        conv2d_dw_q_packed(x, &c.packed, c.b.data(), stride, c.s_q, r, relu,
+                           out_exp, arena)
     } else {
-        conv2d_q(x, &c.w, &c.b, stride, c.s_q, r, relu, out_exp)
+        conv2d_q_packed(x, &c.packed, c.b.data(), stride, c.s_q, r, relu,
+                        out_exp, arena)
     }
 }
 
@@ -53,10 +58,15 @@ pub fn ln_sw(qp: &QuantParams, name: &str, x: &QTensor, out_exp: i32) -> QTensor
 }
 
 /// Quantized model with resolved specs. Owns (a share of) its parameters
-/// so backends can hold it without a self-referential borrow.
+/// so backends can hold it without a self-referential borrow, plus the
+/// conv scratch arena (accumulators + recycled payloads, shared across
+/// layers and frames). The arena sits behind a `Mutex` so `&self` segment
+/// methods stay shareable (`RefBackend` is used behind `Arc<dyn
+/// HwBackend>`); the lock is per conv call and uncontended in practice.
 pub struct QuantModel {
     pub qp: std::sync::Arc<QuantParams>,
     specs: Vec<super::specs::ConvSpec>,
+    scratch: std::sync::Mutex<Arena>,
 }
 
 /// Cross-frame state of the quantized pipeline.
@@ -84,7 +94,30 @@ impl QuantState {
 
 impl QuantModel {
     pub fn new(qp: std::sync::Arc<QuantParams>) -> Self {
-        QuantModel { qp, specs: super::specs::all_conv_specs() }
+        Self::with_conv_threads(qp, 1)
+    }
+
+    /// Model whose convs stripe output channels over `threads` workers
+    /// (bit-identical results for every thread count).
+    pub fn with_conv_threads(
+        qp: std::sync::Arc<QuantParams>,
+        threads: usize,
+    ) -> Self {
+        QuantModel {
+            qp,
+            specs: super::specs::all_conv_specs(),
+            scratch: std::sync::Mutex::new(Arena::with_threads(threads)),
+        }
+    }
+
+    /// Change the conv worker count (threads > 1 only pays off on shapes
+    /// above the kernel's internal work threshold).
+    pub fn set_conv_threads(&self, threads: usize) {
+        self.scratch.lock().unwrap().set_threads(threads);
+    }
+
+    pub fn conv_threads(&self) -> usize {
+        self.scratch.lock().unwrap().threads()
     }
 
     fn conv(&self, name: &str, x: &QTensor) -> QTensor {
@@ -94,12 +127,30 @@ impl QuantModel {
             .find(|s| s.name == name)
             .unwrap_or_else(|| panic!("unknown conv '{name}'"));
         let relu = spec.act == super::specs::Act::Relu;
-        qconv(&self.qp, name, x, self.qp.aexp(name), relu, spec.dw, spec.stride)
+        let mut arena = self.scratch.lock().unwrap();
+        qconv(&self.qp, name, x, self.qp.aexp(name), relu, spec.dw,
+              spec.stride, &mut arena)
+    }
+
+    /// As [`QuantModel::conv`], consuming the input and recycling its
+    /// payload into the arena — the allocation-free steady state for
+    /// layer-chain intermediates.
+    fn conv_owned(&self, name: &str, x: QTensor) -> QTensor {
+        let y = self.conv(name, &x);
+        self.scratch.lock().unwrap().recycle_q(x);
+        y
     }
 
     fn conv_to(&self, name: &str, x: &QTensor, out_exp: i32) -> QTensor {
         let spec = self.specs.iter().find(|s| s.name == name).unwrap();
-        qconv(&self.qp, name, x, out_exp, false, spec.dw, spec.stride)
+        let mut arena = self.scratch.lock().unwrap();
+        qconv(&self.qp, name, x, out_exp, false, spec.dw, spec.stride,
+              &mut arena)
+    }
+
+    /// Recycle a spent intermediate's payload for later conv outputs.
+    fn recycle(&self, x: QTensor) {
+        self.scratch.lock().unwrap().recycle_q(x);
     }
 
     /// Quantize a normalised image to the calibrated input exponent.
@@ -109,33 +160,47 @@ impl QuantModel {
 
     // --- HW segment mirrors (same boundaries as the HLO artifacts) -------
 
-    /// Segment `fe_fs`: image -> 5 pyramid features.
+    /// Segment `fe_fs`: image -> 5 pyramid features. Layer-chain
+    /// intermediates are consumed (`conv_owned`) or recycled so the
+    /// steady state reuses arena payloads instead of allocating.
     pub fn seg_fe_fs(&self, img_q: &QTensor) -> Vec<QTensor> {
         let (_, wiring) = fe_specs();
-        let mut x = self.conv("fe.stem", img_q);
-        x = self.conv("fe.sep.dw", &x);
-        x = self.conv("fe.sep.pw", &x);
+        let stem = self.conv("fe.stem", img_q);
+        let sep = self.conv_owned("fe.sep.dw", stem);
+        let mut x = self.conv_owned("fe.sep.pw", sep);
         let mut taps = vec![x.clone()];
         let mut wi = 0;
         for (si, st) in config::FE_STAGES.iter().enumerate() {
             for _ri in 0..st.repeats {
                 let base = wiring[wi].base.clone();
-                let inp = x.clone();
-                x = self.conv(&format!("{base}.exp"), &x);
-                x = self.conv(&format!("{base}.dw"), &x);
-                x = self.conv(&format!("{base}.pw"), &x);
-                if wiring[wi].residual {
-                    x = add_q(&inp, &x, self.qp.aexp(&format!("{base}.addout")));
-                }
+                let y = self.conv(&format!("{base}.exp"), &x);
+                let y = self.conv_owned(&format!("{base}.dw"), y);
+                let y = self.conv_owned(&format!("{base}.pw"), y);
+                // the block input is only needed for the residual; either
+                // way it retires here (taps hold their own clones)
+                let inp = x;
+                x = if wiring[wi].residual {
+                    let sum =
+                        add_q(&inp, &y, self.qp.aexp(&format!("{base}.addout")));
+                    self.recycle(y);
+                    sum
+                } else {
+                    y
+                };
+                self.recycle(inp);
                 wi += 1;
             }
             if config::FE_TAP_STAGES.contains(&(si as isize)) {
                 taps.push(x.clone());
             }
         }
+        self.recycle(x);
         let lats: Vec<QTensor> = (0..5)
             .map(|i| self.conv(&format!("fs.lat{i}"), &taps[i]))
             .collect();
+        for t in taps {
+            self.recycle(t);
+        }
         let mut feats: Vec<Option<QTensor>> = vec![None; 5];
         feats[4] = Some(lats[4].clone());
         for i in (0..4).rev() {
@@ -145,7 +210,11 @@ impl QuantModel {
                 exp: prev.exp,
             };
             let s = add_q(&up, &lats[i], self.qp.aexp(&format!("fs.add{i}")));
-            feats[i] = Some(self.conv(&format!("fs.smooth{i}"), &s));
+            self.recycle(up);
+            feats[i] = Some(self.conv_owned(&format!("fs.smooth{i}"), s));
+        }
+        for l in lats {
+            self.recycle(l);
         }
         feats.into_iter().map(|f| f.unwrap()).collect()
     }
@@ -158,14 +227,19 @@ impl QuantModel {
         let mut x = cost_q.clone();
         for lv in 0..5 {
             if CVE_DOWN_KERNEL[lv].is_some() {
-                x = self.conv(&format!("cve.l{lv}.down"), &x);
-                x = concat_q(&[&x, feats[lv - 1]], self.qp.aexp(&format!("cve.l{lv}.cat")));
+                let down = self.conv_owned(&format!("cve.l{lv}.down"), x);
+                x = concat_q(
+                    &[&down, feats[lv - 1]],
+                    self.qp.aexp(&format!("cve.l{lv}.cat")),
+                );
+                self.recycle(down);
             }
             for bi in 0..CVE_BODY_KERNELS[lv].len() {
-                x = self.conv(&format!("cve.l{lv}.c{bi}"), &x);
+                x = self.conv_owned(&format!("cve.l{lv}.c{bi}"), x);
             }
             outs.push(x.clone());
         }
+        self.recycle(x);
         outs
     }
 
@@ -203,8 +277,8 @@ impl QuantModel {
     /// Segment `cvd_b{b}_entry`: concat -> conv3 entry -> conv5 (pre-LN).
     pub fn seg_cvd_entry(&self, b: usize, parts: &[&QTensor]) -> QTensor {
         let cat = concat_q(parts, self.qp.aexp(&format!("cvd.b{b}.cat")));
-        let x = self.conv(&format!("cvd.b{b}.c3e"), &cat);
-        self.conv(&format!("cvd.b{b}.c5"), &x)
+        let x = self.conv_owned(&format!("cvd.b{b}.c3e"), cat);
+        self.conv_owned(&format!("cvd.b{b}.c5"), x)
     }
 
     /// Segment `cvd_b{b}_mid{i}`: post-LN conv3_i (i >= 1).

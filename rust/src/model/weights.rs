@@ -10,6 +10,7 @@ use anyhow::{Context, Result};
 use crate::config::{LUT_ENTRIES, SIGMOID_OUT_EXP};
 use crate::data::manifest::Manifest;
 use crate::data::tlv::TlvFile;
+use crate::ops::{PackedFConv, PackedQConv};
 use crate::quant::ActLut;
 use crate::tensor::{TensorF, TensorI32, TensorI8};
 
@@ -21,6 +22,21 @@ pub struct FloatConv {
     pub gamma: Vec<f32>,
     pub beta: Vec<f32>,
     pub s: f32,
+    /// Tap-list form of `w`, packed once at load (`ops::conv::PackedConv`)
+    /// so the per-frame path never re-reads the `(OC,IC,k,k)` layout.
+    pub packed: PackedFConv,
+}
+
+impl FloatConv {
+    fn new(w: TensorF, b: Vec<f32>, gamma: Vec<f32>, beta: Vec<f32>, s: f32,
+           dw: bool) -> Self {
+        let packed = if dw {
+            PackedFConv::pack_depthwise(&w)
+        } else {
+            PackedFConv::pack_dense(&w)
+        };
+        FloatConv { w, b, gamma, beta, s, packed }
+    }
 }
 
 /// Float LN site.
@@ -45,13 +61,14 @@ impl FloatParams {
             let n = &spec.name;
             convs.insert(
                 n.clone(),
-                FloatConv {
-                    w: tlv.f32(&format!("{n}.w"))?.clone(),
-                    b: tlv.f32(&format!("{n}.b"))?.data().to_vec(),
-                    gamma: tlv.f32(&format!("{n}.gamma"))?.data().to_vec(),
-                    beta: tlv.f32(&format!("{n}.beta"))?.data().to_vec(),
-                    s: tlv.f32(&format!("{n}.s"))?.data()[0],
-                },
+                FloatConv::new(
+                    tlv.f32(&format!("{n}.w"))?.clone(),
+                    tlv.f32(&format!("{n}.b"))?.data().to_vec(),
+                    tlv.f32(&format!("{n}.gamma"))?.data().to_vec(),
+                    tlv.f32(&format!("{n}.beta"))?.data().to_vec(),
+                    tlv.f32(&format!("{n}.s"))?.data()[0],
+                    spec.dw,
+                ),
             );
         }
         for n in super::specs::ln_names() {
@@ -90,6 +107,22 @@ pub struct QuantConv {
     pub e_s: i32,
     /// Input exponent recorded when the artifact was traced.
     pub e_in: i32,
+    /// Tap-list form of `w` (int8 pre-widened to i32, zero taps dropped),
+    /// packed once here so `qconv` never re-reads the 4-D layout.
+    pub packed: PackedQConv,
+}
+
+impl QuantConv {
+    #[allow(clippy::too_many_arguments)]
+    fn new(w: TensorI8, b: TensorI32, e_w: i32, e_b: i32, s_q: i32, e_s: i32,
+           e_in: i32, dw: bool) -> Self {
+        let packed = if dw {
+            PackedQConv::pack_depthwise(&w)
+        } else {
+            PackedQConv::pack_dense(&w)
+        };
+        QuantConv { w, b, e_w, e_b, s_q, e_s, e_in, packed }
+    }
 }
 
 /// All quantized parameters + activation exponents + LUTs + float LN.
@@ -117,15 +150,16 @@ impl QuantParams {
                 .with_context(|| format!("conv '{n}' has no input exponent"))?;
             convs.insert(
                 n.clone(),
-                QuantConv {
-                    w: w_e.as_i8()?.clone(),
-                    b: b_e.as_i32()?.clone(),
-                    e_w: w_e.exp,
-                    e_b: b_e.exp,
-                    s_q: s_e.as_i32()?.data()[0],
-                    e_s: s_e.exp,
+                QuantConv::new(
+                    w_e.as_i8()?.clone(),
+                    b_e.as_i32()?.clone(),
+                    w_e.exp,
+                    b_e.exp,
+                    s_e.as_i32()?.data()[0],
+                    s_e.exp,
                     e_in,
-                },
+                    spec.dw,
+                ),
             );
         }
         for n in super::specs::ln_names() {
@@ -189,15 +223,16 @@ impl QuantParams {
             );
             convs.insert(
                 n.clone(),
-                QuantConv {
+                QuantConv::new(
                     w,
                     b,
-                    e_w: SYNTH_W_EXP,
-                    e_b: e_in + SYNTH_W_EXP,
-                    s_q: 1,
-                    e_s: 0,
+                    SYNTH_W_EXP,
+                    e_in + SYNTH_W_EXP,
+                    1,
+                    0,
                     e_in,
-                },
+                    spec.dw,
+                ),
             );
         }
         for n in super::specs::ln_names() {
@@ -283,5 +318,19 @@ mod tests {
             qp.conv("fe.stem").w.data(),
             qp3.conv("fe.stem").w.data()
         );
+    }
+
+    #[test]
+    fn packed_weights_mirror_the_dense_tensors() {
+        let manifest = Manifest::synthetic();
+        let qp = QuantParams::synthetic(&manifest, 5);
+        for s in specs::all_conv_specs() {
+            let c = qp.conv(&s.name);
+            let nnz = c.w.data().iter().filter(|&&v| v != 0).count();
+            assert_eq!(c.packed.nnz(), nnz, "{}", s.name);
+            assert_eq!(c.packed.oc, s.cout);
+            assert_eq!(c.packed.k, s.k);
+            assert_eq!(c.packed.dw, s.dw);
+        }
     }
 }

@@ -1,0 +1,171 @@
+//! Scratch arena for the conv stack — reuses accumulator buffers and
+//! intermediate activation payloads across layers and frames instead of
+//! allocating per call.
+//!
+//! Lifetime rules (see also the ops-layer notes in `lib.rs`):
+//!
+//! * The arena owns **worker-indexed accumulators** (`acc_i32`/`acc_f32`,
+//!   one per conv worker thread) and a **freelist of i16 payloads** for
+//!   quantized activations. Nothing in the arena outlives a single conv
+//!   call except as recycled capacity.
+//! * Conv kernels draw their output payload from [`Arena::take_i16`];
+//!   model code hands spent intermediates back via [`Arena::recycle_i16`]
+//!   (or [`Arena::recycle_q`]). Recycling is optional — an un-recycled
+//!   tensor is simply freed by `Vec`'s destructor — so ownership stays
+//!   ordinary Rust, the arena is only a capacity cache.
+//! * `threads` is the conv worker count: output channels of one conv are
+//!   striped over `min(threads, oc)` scoped threads, each with its own
+//!   accumulator, so results are bit-identical for every thread count.
+//!
+//! The arena is deliberately not `Sync`; owners that are shared (e.g.
+//! `QuantModel` inside a `RefBackend`) wrap it in a `Mutex` and lock per
+//! conv call — uncontended lock cost is noise next to a conv.
+
+/// Freelist capacity: beyond this many parked payloads, extra buffers are
+/// dropped (bounds memory when a burst of large intermediates retires).
+const MAX_FREE_I16: usize = 64;
+
+/// Reusable conv scratch: per-worker accumulators + activation freelist.
+#[derive(Debug)]
+pub struct Arena {
+    threads: usize,
+    acc_i32: Vec<Vec<i32>>,
+    acc_f32: Vec<Vec<f32>>,
+    free_i16: Vec<Vec<i16>>,
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Arena {
+    /// Single-threaded arena (the default everywhere).
+    pub fn new() -> Self {
+        Self::with_threads(1)
+    }
+
+    /// Arena whose convs stripe output channels over `threads` workers.
+    pub fn with_threads(threads: usize) -> Self {
+        Arena {
+            threads: threads.max(1),
+            acc_i32: Vec::new(),
+            acc_f32: Vec::new(),
+            free_i16: Vec::new(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// `n` integer accumulators of `len` elements each (bias-filled by the
+    /// kernel; contents on entry are stale).
+    pub(crate) fn acc_i32(&mut self, n: usize, len: usize) -> &mut [Vec<i32>] {
+        if self.acc_i32.len() < n {
+            self.acc_i32.resize_with(n, Vec::new);
+        }
+        for a in &mut self.acc_i32[..n] {
+            a.resize(len, 0);
+        }
+        &mut self.acc_i32[..n]
+    }
+
+    /// Float twin of [`Arena::acc_i32`].
+    pub(crate) fn acc_f32(&mut self, n: usize, len: usize) -> &mut [Vec<f32>] {
+        if self.acc_f32.len() < n {
+            self.acc_f32.resize_with(n, Vec::new);
+        }
+        for a in &mut self.acc_f32[..n] {
+            a.resize(len, 0.0);
+        }
+        &mut self.acc_f32[..n]
+    }
+
+    /// An i16 payload of exactly `len` elements, reusing recycled
+    /// capacity when available. **Contents are unspecified** (recycled
+    /// buffers keep their stale values; only growth is zero-filled): the
+    /// conv drivers write every element, and skipping the memset is part
+    /// of the point of recycling. Callers that need zeroed memory must
+    /// fill it themselves.
+    pub fn take_i16(&mut self, len: usize) -> Vec<i16> {
+        let mut v = self.free_i16.pop().unwrap_or_default();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Park a spent payload for reuse by a later [`Arena::take_i16`].
+    pub fn recycle_i16(&mut self, v: Vec<i16>) {
+        if self.free_i16.len() < MAX_FREE_I16 && v.capacity() > 0 {
+            self.free_i16.push(v);
+        }
+    }
+
+    /// Recycle a whole quantized tensor's payload.
+    pub fn recycle_q(&mut self, q: crate::quant::QTensor) {
+        self.recycle_i16(q.t.into_data());
+    }
+
+    /// Parked payload count (observability for tests).
+    pub fn free_buffers(&self) -> usize {
+        self.free_i16.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_recycled_capacity() {
+        let mut a = Arena::new();
+        let mut v = a.take_i16(16);
+        v.iter_mut().for_each(|x| *x = 7);
+        let cap = v.capacity();
+        a.recycle_i16(v);
+        assert_eq!(a.free_buffers(), 1);
+        // exact length, recycled capacity, no memset contract: stale
+        // values may remain (the conv drivers overwrite every element)
+        let v2 = a.take_i16(8);
+        assert_eq!(v2.len(), 8);
+        assert!(v2.capacity() >= cap.min(8));
+        assert_eq!(a.free_buffers(), 0);
+        // growth beyond the recycled length is zero-filled
+        let v3 = a.take_i16(4);
+        let mut v3m = v3;
+        v3m.iter_mut().for_each(|x| *x = 9);
+        a.recycle_i16(v3m);
+        let v4 = a.take_i16(6);
+        assert_eq!(v4.len(), 6);
+        assert!(v4[4] == 0 && v4[5] == 0);
+    }
+
+    #[test]
+    fn accumulators_are_per_worker_and_resized() {
+        let mut a = Arena::with_threads(3);
+        assert_eq!(a.threads(), 3);
+        let accs = a.acc_i32(3, 10);
+        assert_eq!(accs.len(), 3);
+        assert!(accs.iter().all(|v| v.len() == 10));
+        // shrinking reuse keeps it valid
+        let accs = a.acc_i32(2, 4);
+        assert_eq!(accs.len(), 2);
+        assert!(accs.iter().all(|v| v.len() == 4));
+        a.set_threads(0);
+        assert_eq!(a.threads(), 1, "thread count is clamped to >= 1");
+    }
+
+    #[test]
+    fn freelist_is_bounded() {
+        let mut a = Arena::new();
+        for _ in 0..(MAX_FREE_I16 + 10) {
+            a.recycle_i16(vec![0i16; 4]);
+        }
+        assert_eq!(a.free_buffers(), MAX_FREE_I16);
+    }
+}

@@ -3,19 +3,552 @@
 //!
 //! Padding is symmetric `k/2`; `out = (in + 2p - k)/stride + 1` — the
 //! convention shared by fops.py / conv_quant.py / the HLO artifacts.
+//!
+//! # Fast path (PR 2)
+//!
+//! The serving kernels are restructured around data layout and reuse
+//! (the software analogue of the paper's §III-B2 loop nest and the
+//! loop-tiling/dataflow taxonomy of the CNN-on-FPGA literature):
+//!
+//! * **Packed weights** — [`PackedConv`] flattens an `(OC,IC,k,k)` weight
+//!   tensor once, at load time, into a per-output-channel tap list
+//!   (kernel-major within each input channel, zero-weight taps dropped),
+//!   so the per-frame path never re-walks the 4-D layout.
+//! * **Interior/border split** — every padding bounds check is hoisted
+//!   out of the inner loops: for each tap the valid output range is
+//!   computed analytically once per call ([`valid_range`]), the interior
+//!   runs as a branch-free fused multiply-add over contiguous slices,
+//!   and the `k/2`-wide border is handled by clipping that range (a
+//!   clipped tap contributes exactly the zero padding would).
+//! * **Scratch arena** — accumulators and output payloads come from an
+//!   [`Arena`](super::Arena) instead of per-call `vec!`s; see
+//!   `ops::arena` for the lifetime rules.
+//! * **Channel parallelism** — output channels are striped over
+//!   `Arena::threads` scoped threads (`std::thread::scope`; disjoint
+//!   output stripes, one accumulator per worker), so any thread count
+//!   produces bit-identical results.
+//!
+//! The `*_ref` functions are the original guarded scalar loops, kept as
+//! the executable specification: the property tests
+//! (`rust/tests/conv_exact.rs`) pin the fast kernels against them over
+//! randomized shapes, strides and exponents.
 
 use crate::config::{A_QMAX, A_QMIN};
 use crate::quant::{rshift_round, QTensor};
 use crate::tensor::{Tensor, TensorF, TensorI32, TensorI8};
 
+use super::arena::Arena;
+
+/// Output extent of one spatial dim under the repo-wide symmetric-`k/2`
+/// padding convention (shared with fops.py / conv_quant.py / the HLO
+/// artifacts). Public so benches and tools derive shapes/MACs from the
+/// one definition.
 #[inline]
-fn out_dim(n: usize, k: usize, stride: usize) -> usize {
+pub fn out_dim(n: usize, k: usize, stride: usize) -> usize {
     let p = k / 2;
     (n + 2 * p - k) / stride + 1
 }
 
+/// Stop striping channels over threads below this many tap-MACs.
+/// `thread::scope` spawns+joins fresh OS threads per call (~tens of µs);
+/// at ~1 GMAC/s scalar throughput, 2^18 MACs is a few hundred µs of
+/// compute — the point where two workers reliably win. Below it (the
+/// pipeline's small/coarse levels) the serial kernel is faster.
+const PAR_MIN_MACS: usize = 1 << 18;
+
+// ---------------------------------------------------------------------------
+// Packed weights
+// ---------------------------------------------------------------------------
+
+/// One non-zero weight tap: source plane + kernel offset + weight.
+#[derive(Clone, Copy, Debug)]
+pub struct Tap<W> {
+    /// Input plane index: the input channel for dense convs, the
+    /// (input == output) channel for depthwise convs.
+    pub plane: u32,
+    pub ky: u8,
+    pub kx: u8,
+    pub w: W,
+}
+
+/// A conv weight tensor packed once at load time: per-output-channel tap
+/// lists, kernel-major within each input channel, zero weights dropped.
+#[derive(Clone, Debug)]
+pub struct PackedConv<W> {
+    pub oc: usize,
+    /// Input channels per group (1 for depthwise).
+    pub ic: usize,
+    pub k: usize,
+    pub dw: bool,
+    taps: Vec<Tap<W>>,
+    /// `taps[offsets[o]..offsets[o+1]]` are output channel `o`'s taps.
+    offsets: Vec<u32>,
+}
+
+/// Quantized taps, pre-widened from int8 to i32.
+pub type PackedQConv = PackedConv<i32>;
+/// Float taps.
+pub type PackedFConv = PackedConv<f32>;
+
+impl<W: Copy> PackedConv<W> {
+    #[inline]
+    pub fn taps(&self, o: usize) -> &[Tap<W>] {
+        &self.taps[self.offsets[o] as usize..self.offsets[o + 1] as usize]
+    }
+
+    /// Non-zero taps across all output channels.
+    pub fn nnz(&self) -> usize {
+        self.taps.len()
+    }
+}
+
+/// Shared packing walk; `keep` maps a stored weight to its widened tap
+/// value, or `None` for zero weights (pre-skipped forever after).
+fn pack_impl<T: Copy, W: Copy>(
+    w: &Tensor<T>,
+    dw: bool,
+    keep: impl Fn(T) -> Option<W>,
+) -> PackedConv<W> {
+    let (oc, ic, k, k2) = w.nchw();
+    assert_eq!(k, k2, "non-square kernel");
+    if dw {
+        assert_eq!(ic, 1, "depthwise weights are (C,1,k,k)");
+    }
+    let wd = w.data();
+    let mut taps = Vec::new();
+    let mut offsets = Vec::with_capacity(oc + 1);
+    offsets.push(0u32);
+    for o in 0..oc {
+        for c in 0..ic {
+            let base = (o * ic + c) * k * k;
+            for ky in 0..k {
+                for kx in 0..k {
+                    if let Some(wv) = keep(wd[base + ky * k + kx]) {
+                        let plane = (if dw { o } else { c }) as u32;
+                        taps.push(Tap { plane, ky: ky as u8, kx: kx as u8, w: wv });
+                    }
+                }
+            }
+        }
+        offsets.push(taps.len() as u32);
+    }
+    PackedConv { oc, ic, k, dw, taps, offsets }
+}
+
+impl PackedQConv {
+    /// Pack dense int8 weights `(OC,IC,k,k)`.
+    pub fn pack_dense(w: &TensorI8) -> Self {
+        pack_impl(w, false, |v| if v != 0 { Some(v as i32) } else { None })
+    }
+
+    /// Pack depthwise int8 weights `(C,1,k,k)`.
+    pub fn pack_depthwise(w: &TensorI8) -> Self {
+        pack_impl(w, true, |v| if v != 0 { Some(v as i32) } else { None })
+    }
+}
+
+impl PackedFConv {
+    /// Pack dense float weights `(OC,IC,k,k)`.
+    pub fn pack_dense(w: &TensorF) -> Self {
+        pack_impl(w, false, |v| if v != 0.0 { Some(v) } else { None })
+    }
+
+    /// Pack depthwise float weights `(C,1,k,k)`.
+    pub fn pack_depthwise(w: &TensorF) -> Self {
+        pack_impl(w, true, |v| if v != 0.0 { Some(v) } else { None })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interior/border range hoisting
+// ---------------------------------------------------------------------------
+
+/// Output index range `[lo, hi)` for which a tap at kernel offset `k`
+/// reads in-bounds input (`0 <= o*stride + k - p < dim_in`). The border
+/// exclusion happens here, once per tap — the loop body over the range is
+/// branch-free, and the excluded indices contribute exactly what zero
+/// padding would (nothing).
+#[inline(always)]
+fn valid_range(
+    k: usize,
+    p: usize,
+    stride: usize,
+    dim_in: usize,
+    dim_out: usize,
+) -> (usize, usize) {
+    let lo = if p > k { (p - k).div_ceil(stride) } else { 0 };
+    if dim_in + p <= k {
+        return (0, 0);
+    }
+    let hi = ((dim_in + p - k - 1) / stride + 1).min(dim_out);
+    (lo, hi)
+}
+
+/// Accumulate all of one output channel's taps into `acc` (pre-filled
+/// with the bias by the caller's driver). Branch-free interior: per tap,
+/// per valid row, a contiguous (stride-1) or strided slice FMA.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn accum_channel_q(
+    xd: &[i16],
+    h: usize,
+    wd: usize,
+    stride: usize,
+    p: usize,
+    taps: &[Tap<i32>],
+    acc: &mut [i32],
+    wo: usize,
+) {
+    for t in taps {
+        let (oy0, oy1) = valid_range(t.ky as usize, p, stride, h, acc.len() / wo);
+        let (ox0, ox1) = valid_range(t.kx as usize, p, stride, wd, wo);
+        if oy0 >= oy1 || ox0 >= ox1 {
+            continue;
+        }
+        let wv = t.w;
+        let n = ox1 - ox0;
+        let xb = t.plane as usize * h * wd;
+        for oy in oy0..oy1 {
+            let iy = oy * stride + t.ky as usize - p;
+            let ix0 = ox0 * stride + t.kx as usize - p;
+            let row = &xd[xb + iy * wd + ix0..];
+            let arow = &mut acc[oy * wo + ox0..oy * wo + ox1];
+            if stride == 1 {
+                for (a, &xv) in arow.iter_mut().zip(&row[..n]) {
+                    *a += wv * xv as i32;
+                }
+            } else {
+                for (a, &xv) in arow.iter_mut().zip(row.iter().step_by(stride)) {
+                    *a += wv * xv as i32;
+                }
+            }
+        }
+    }
+}
+
+/// Float twin of [`accum_channel_q`].
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn accum_channel_f(
+    xd: &[f32],
+    h: usize,
+    wd: usize,
+    stride: usize,
+    p: usize,
+    taps: &[Tap<f32>],
+    acc: &mut [f32],
+    wo: usize,
+) {
+    for t in taps {
+        let (oy0, oy1) = valid_range(t.ky as usize, p, stride, h, acc.len() / wo);
+        let (ox0, ox1) = valid_range(t.kx as usize, p, stride, wd, wo);
+        if oy0 >= oy1 || ox0 >= ox1 {
+            continue;
+        }
+        let wv = t.w;
+        let n = ox1 - ox0;
+        let xb = t.plane as usize * h * wd;
+        for oy in oy0..oy1 {
+            let iy = oy * stride + t.ky as usize - p;
+            let ix0 = ox0 * stride + t.kx as usize - p;
+            let row = &xd[xb + iy * wd + ix0..];
+            let arow = &mut acc[oy * wo + ox0..oy * wo + ox1];
+            if stride == 1 {
+                for (a, &xv) in arow.iter_mut().zip(&row[..n]) {
+                    *a += wv * xv;
+                }
+            } else {
+                for (a, &xv) in arow.iter_mut().zip(row.iter().step_by(stride)) {
+                    *a += wv * xv;
+                }
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn epilogue(acc: i32, s_q: i32, r: i32, relu: bool) -> i16 {
+    let m2 = acc as i64 * s_q as i64;
+    let y = rshift_round(m2, r).clamp(A_QMIN as i64, A_QMAX as i64) as i16;
+    if relu && y < 0 { 0 } else { y }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized drivers (dense + depthwise share one channel kernel)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn run_conv_q(
+    xd: &[i16],
+    h: usize,
+    wd: usize,
+    pw: &PackedQConv,
+    b: &[i32],
+    stride: usize,
+    s_q: i32,
+    r: i32,
+    relu: bool,
+    od: &mut [i16],
+    ho: usize,
+    wo: usize,
+    arena: &mut Arena,
+) {
+    let plane = ho * wo;
+    let p = pw.k / 2;
+    let nthreads = arena.threads().min(pw.oc);
+    if nthreads <= 1 || pw.nnz() * plane < PAR_MIN_MACS {
+        let acc = &mut arena.acc_i32(1, plane)[0];
+        for (o, od_chan) in od.chunks_exact_mut(plane).enumerate() {
+            acc.fill(b[o]);
+            accum_channel_q(xd, h, wd, stride, p, pw.taps(o), acc, wo);
+            for (y, &a) in od_chan.iter_mut().zip(acc.iter()) {
+                *y = epilogue(a, s_q, r, relu);
+            }
+        }
+    } else {
+        // stripe output channels over scoped workers: disjoint output
+        // stripes + one accumulator each, so results are thread-count
+        // independent by construction
+        let per = pw.oc.div_ceil(nthreads);
+        let accs = arena.acc_i32(nthreads, plane);
+        std::thread::scope(|s| {
+            for ((wi, od_stripe), acc) in
+                od.chunks_mut(per * plane).enumerate().zip(accs.iter_mut())
+            {
+                // handles join implicitly at scope exit
+                let _ = s.spawn(move || {
+                    for (j, od_chan) in
+                        od_stripe.chunks_exact_mut(plane).enumerate()
+                    {
+                        let o = wi * per + j;
+                        acc.fill(b[o]);
+                        accum_channel_q(xd, h, wd, stride, p, pw.taps(o), acc, wo);
+                        for (y, &a) in od_chan.iter_mut().zip(acc.iter()) {
+                            *y = epilogue(a, s_q, r, relu);
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Dense quantized conv over pre-packed weights — the serving hot path.
+/// Bit-exact with [`conv2d_q_ref`] for every shape/stride/thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_q_packed(
+    x: &QTensor,
+    pw: &PackedQConv,
+    b: &[i32],
+    stride: usize,
+    s_q: i32,
+    r: i32,
+    relu: bool,
+    out_exp: i32,
+    arena: &mut Arena,
+) -> QTensor {
+    let (_, ic, h, wd) = x.t.nchw();
+    if pw.dw {
+        assert_eq!(ic, pw.oc, "depthwise channel mismatch");
+    } else {
+        assert_eq!(ic, pw.ic, "channel mismatch");
+    }
+    assert_eq!(b.len(), pw.oc, "bias length");
+    let (ho, wo) = (out_dim(h, pw.k, stride), out_dim(wd, pw.k, stride));
+    let mut data = arena.take_i16(pw.oc * ho * wo);
+    run_conv_q(
+        x.t.data(), h, wd, pw, b, stride, s_q, r, relu, &mut data, ho, wo,
+        arena,
+    );
+    QTensor { t: Tensor::from_vec(&[1, pw.oc, ho, wo], data), exp: out_exp }
+}
+
+/// Depthwise quantized conv over pre-packed weights. Bit-exact with
+/// [`conv2d_dw_q_ref`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_dw_q_packed(
+    x: &QTensor,
+    pw: &PackedQConv,
+    b: &[i32],
+    stride: usize,
+    s_q: i32,
+    r: i32,
+    relu: bool,
+    out_exp: i32,
+    arena: &mut Arena,
+) -> QTensor {
+    assert!(pw.dw, "conv2d_dw_q_packed needs depthwise-packed weights");
+    conv2d_q_packed(x, pw, b, stride, s_q, r, relu, out_exp, arena)
+}
+
+/// Dense quantized conv (paper §III-B2). Convenience wrapper that packs
+/// per call; the serving path packs once at load and calls
+/// [`conv2d_q_packed`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_q(
+    x: &QTensor,
+    w: &TensorI8,
+    b: &TensorI32,
+    stride: usize,
+    s_q: i32,
+    r: i32,
+    relu: bool,
+    out_exp: i32,
+) -> QTensor {
+    let pw = PackedQConv::pack_dense(w);
+    let mut arena = Arena::new();
+    conv2d_q_packed(x, &pw, b.data(), stride, s_q, r, relu, out_exp, &mut arena)
+}
+
+/// Depthwise quantized conv. Convenience wrapper around
+/// [`conv2d_dw_q_packed`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_dw_q(
+    x: &QTensor,
+    w: &TensorI8,
+    b: &TensorI32,
+    stride: usize,
+    s_q: i32,
+    r: i32,
+    relu: bool,
+    out_exp: i32,
+) -> QTensor {
+    let pw = PackedQConv::pack_depthwise(w);
+    let mut arena = Arena::new();
+    conv2d_dw_q_packed(x, &pw, b.data(), stride, s_q, r, relu, out_exp, &mut arena)
+}
+
+// ---------------------------------------------------------------------------
+// Float drivers
+// ---------------------------------------------------------------------------
+
+/// `bias_pre`: depthwise float convs seed the accumulator with the bias
+/// (matching `conv2d_dw_ref`'s summation order); dense float convs add it
+/// after the taps (matching `conv2d_ref`). Keeping the original orders
+/// keeps the fast kernels float-bit-identical to the references.
+#[allow(clippy::too_many_arguments)]
+fn run_conv_f(
+    xd: &[f32],
+    h: usize,
+    wd: usize,
+    pw: &PackedFConv,
+    b: &[f32],
+    stride: usize,
+    bias_pre: bool,
+    od: &mut [f32],
+    ho: usize,
+    wo: usize,
+    arena: &mut Arena,
+) {
+    let plane = ho * wo;
+    let p = pw.k / 2;
+    let nthreads = arena.threads().min(pw.oc);
+    if nthreads <= 1 || pw.nnz() * plane < PAR_MIN_MACS {
+        let acc = &mut arena.acc_f32(1, plane)[0];
+        for (o, od_chan) in od.chunks_exact_mut(plane).enumerate() {
+            acc.fill(if bias_pre { b[o] } else { 0.0 });
+            accum_channel_f(xd, h, wd, stride, p, pw.taps(o), acc, wo);
+            if bias_pre {
+                od_chan.copy_from_slice(&acc[..]);
+            } else {
+                for (y, &a) in od_chan.iter_mut().zip(acc.iter()) {
+                    *y = a + b[o];
+                }
+            }
+        }
+    } else {
+        let per = pw.oc.div_ceil(nthreads);
+        let accs = arena.acc_f32(nthreads, plane);
+        std::thread::scope(|s| {
+            for ((wi, od_stripe), acc) in
+                od.chunks_mut(per * plane).enumerate().zip(accs.iter_mut())
+            {
+                // handles join implicitly at scope exit
+                let _ = s.spawn(move || {
+                    for (j, od_chan) in
+                        od_stripe.chunks_exact_mut(plane).enumerate()
+                    {
+                        let o = wi * per + j;
+                        acc.fill(if bias_pre { b[o] } else { 0.0 });
+                        accum_channel_f(xd, h, wd, stride, p, pw.taps(o), acc, wo);
+                        if bias_pre {
+                            od_chan.copy_from_slice(&acc[..]);
+                        } else {
+                            for (y, &a) in od_chan.iter_mut().zip(acc.iter()) {
+                                *y = a + b[o];
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Dense float conv over pre-packed weights. Float-bit-identical to
+/// [`conv2d_ref`] (same per-element summation order).
+pub fn conv2d_packed(
+    x: &TensorF,
+    pw: &PackedFConv,
+    b: &[f32],
+    stride: usize,
+    arena: &mut Arena,
+) -> TensorF {
+    let (_, ic, h, wd) = x.nchw();
+    assert!(!pw.dw, "conv2d_packed needs dense-packed weights");
+    assert_eq!(ic, pw.ic, "channel mismatch");
+    assert_eq!(b.len(), pw.oc, "bias length");
+    let (ho, wo) = (out_dim(h, pw.k, stride), out_dim(wd, pw.k, stride));
+    let mut out = TensorF::zeros(&[1, pw.oc, ho, wo]);
+    run_conv_f(
+        x.data(), h, wd, pw, b, stride, false, out.data_mut(), ho, wo, arena,
+    );
+    out
+}
+
+/// Depthwise float conv over pre-packed weights. Float-bit-identical to
+/// [`conv2d_dw_ref`].
+pub fn conv2d_dw_packed(
+    x: &TensorF,
+    pw: &PackedFConv,
+    b: &[f32],
+    stride: usize,
+    arena: &mut Arena,
+) -> TensorF {
+    let (_, c, h, wd) = x.nchw();
+    assert!(pw.dw, "conv2d_dw_packed needs depthwise-packed weights");
+    assert_eq!(c, pw.oc, "depthwise channel mismatch");
+    assert_eq!(b.len(), pw.oc, "bias length");
+    let (ho, wo) = (out_dim(h, pw.k, stride), out_dim(wd, pw.k, stride));
+    let mut out = TensorF::zeros(&[1, pw.oc, ho, wo]);
+    run_conv_f(
+        x.data(), h, wd, pw, b, stride, true, out.data_mut(), ho, wo, arena,
+    );
+    out
+}
+
 /// Dense float conv. x: (1,IC,H,W); w: (OC,IC,k,k); b: (OC,).
+/// Convenience wrapper that packs per call.
 pub fn conv2d(x: &TensorF, w: &TensorF, b: &[f32], stride: usize) -> TensorF {
+    let pw = PackedFConv::pack_dense(w);
+    let mut arena = Arena::new();
+    conv2d_packed(x, &pw, b, stride, &mut arena)
+}
+
+/// Depthwise float conv. w: (C,1,k,k). Convenience wrapper.
+pub fn conv2d_dw(x: &TensorF, w: &TensorF, b: &[f32], stride: usize) -> TensorF {
+    let pw = PackedFConv::pack_depthwise(w);
+    let mut arena = Arena::new();
+    conv2d_dw_packed(x, &pw, b, stride, &mut arena)
+}
+
+// ---------------------------------------------------------------------------
+// Reference kernels (the executable specification)
+// ---------------------------------------------------------------------------
+
+/// Dense float conv, original guarded scalar loops. The fast kernels are
+/// pinned against this by the property tests.
+pub fn conv2d_ref(x: &TensorF, w: &TensorF, b: &[f32], stride: usize) -> TensorF {
     let (_, ic, h, wd) = x.nchw();
     let (oc, wic, k, _) = w.nchw();
     assert_eq!(ic, wic, "channel mismatch");
@@ -62,8 +595,8 @@ pub fn conv2d(x: &TensorF, w: &TensorF, b: &[f32], stride: usize) -> TensorF {
     out
 }
 
-/// Depthwise float conv. w: (C,1,k,k).
-pub fn conv2d_dw(x: &TensorF, w: &TensorF, b: &[f32], stride: usize) -> TensorF {
+/// Depthwise float conv, original guarded scalar loops.
+pub fn conv2d_dw_ref(x: &TensorF, w: &TensorF, b: &[f32], stride: usize) -> TensorF {
     let (_, c, h, wd) = x.nchw();
     let (wc, one, k, _) = w.nchw();
     assert_eq!(c, wc);
@@ -102,18 +635,12 @@ pub fn conv2d_dw(x: &TensorF, w: &TensorF, b: &[f32], stride: usize) -> TensorF 
     out
 }
 
-#[inline]
-fn epilogue(acc: i32, s_q: i32, r: i32, relu: bool) -> i16 {
-    let m2 = acc as i64 * s_q as i64;
-    let y = rshift_round(m2, r).clamp(A_QMIN as i64, A_QMAX as i64) as i16;
-    if relu && y < 0 { 0 } else { y }
-}
-
-/// Dense quantized conv (paper §III-B2), bit-exact with `conv2d_q_ref`.
+/// Dense quantized conv, original guarded scalar loops — the executable
+/// integer specification (bit-exact with the Pallas kernels).
 /// x: i16 QTensor; w: (OC,IC,k,k) i8; b: (OC,) i32 at exponent e_x+e_w;
 /// `r = e_x + e_w + e_s - e_y`.
 #[allow(clippy::too_many_arguments)]
-pub fn conv2d_q(
+pub fn conv2d_q_ref(
     x: &QTensor,
     w: &TensorI8,
     b: &TensorI32,
@@ -164,16 +691,16 @@ pub fn conv2d_q(
             }
         }
         let ob = o * ho * wo;
-        for (i, &a) in acc.iter().enumerate() {
-            od[ob + i] = epilogue(a, s_q, r, relu);
+        for (y, &a) in od[ob..ob + ho * wo].iter_mut().zip(acc.iter()) {
+            *y = epilogue(a, s_q, r, relu);
         }
     }
     QTensor { t: out, exp: out_exp }
 }
 
-/// Depthwise quantized conv, bit-exact with `conv2d_dw_q_ref`.
+/// Depthwise quantized conv, original guarded scalar loops.
 #[allow(clippy::too_many_arguments)]
-pub fn conv2d_dw_q(
+pub fn conv2d_dw_q_ref(
     x: &QTensor,
     w: &TensorI8,
     b: &TensorI32,
@@ -226,13 +753,17 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
-    fn naive_conv_ref(
+    /// Implementation-independent oracle: direct per-output-pixel loops,
+    /// different loop order, no zero-weight skip. Deliberately shares no
+    /// structure with either `conv2d_ref` or the packed kernels, so a
+    /// consistent-but-wrong change to both (e.g. an `out_dim`/padding
+    /// tweak) still fails here.
+    fn naive_conv_oracle(
         x: &TensorF,
         w: &TensorF,
         b: &[f32],
         stride: usize,
     ) -> TensorF {
-        // direct per-output-pixel reference (different loop order)
         let (_, ic, h, wd) = x.nchw();
         let (oc, _, k, _) = w.nchw();
         let p = k / 2;
@@ -263,7 +794,7 @@ mod tests {
     }
 
     #[test]
-    fn conv2d_matches_naive_reference() {
+    fn conv2d_matches_reference_loops() {
         let mut rng = Rng::new(3);
         for &(ic, oc, h, w, k, s) in
             &[(2usize, 3usize, 5usize, 6usize, 3usize, 1usize),
@@ -279,9 +810,15 @@ mod tests {
             );
             let b: Vec<f32> = (0..oc).map(|_| rng.normal_f32()).collect();
             let got = conv2d(&x, &wt, &b, s);
-            let expect = naive_conv_ref(&x, &wt, &b, s);
+            let expect = conv2d_ref(&x, &wt, &b, s);
             assert_eq!(got.shape(), expect.shape());
-            for (a, e) in got.data().iter().zip(expect.data()) {
+            // same summation order -> float-bit-identical
+            assert_eq!(got.data(), expect.data());
+            // both must also track the independent per-pixel oracle
+            // (different summation order -> tolerance, not equality)
+            let oracle = naive_conv_oracle(&x, &wt, &b, s);
+            assert_eq!(got.shape(), oracle.shape());
+            for (a, e) in got.data().iter().zip(oracle.data()) {
                 assert!((a - e).abs() < 1e-4, "{a} vs {e}");
             }
         }
@@ -336,5 +873,68 @@ mod tests {
         let w5 = TensorF::zeros(&[1, 1, 5, 5]);
         let y5 = conv2d(&x, &w5, &[0.0], 2);
         assert_eq!(y5.shape(), &[1, 1, 32, 48]);
+    }
+
+    #[test]
+    fn packing_drops_zero_taps_and_keeps_order() {
+        // (1,2,3,3) with a few zeros: taps are (c, ky, kx)-ordered
+        let mut wv = vec![0i8; 2 * 9];
+        wv[0] = 1; // c0 ky0 kx0
+        wv[4] = 2; // c0 ky1 kx1
+        wv[9 + 8] = 3; // c1 ky2 kx2
+        let w = TensorI8::from_vec(&[1, 2, 3, 3], wv);
+        let pw = PackedQConv::pack_dense(&w);
+        assert_eq!(pw.nnz(), 3);
+        let taps = pw.taps(0);
+        assert_eq!(
+            taps.iter().map(|t| (t.plane, t.ky, t.kx, t.w)).collect::<Vec<_>>(),
+            vec![(0, 0, 0, 1), (0, 1, 1, 2), (1, 2, 2, 3)]
+        );
+    }
+
+    #[test]
+    fn valid_range_clips_borders_exactly() {
+        // k=3, p=1, stride 1, dim 5: tap kx=0 misses ox=0; kx=2 misses ox=4
+        assert_eq!(valid_range(0, 1, 1, 5, 5), (1, 5));
+        assert_eq!(valid_range(1, 1, 1, 5, 5), (0, 5));
+        assert_eq!(valid_range(2, 1, 1, 5, 5), (0, 4));
+        // stride 2, k=3, p=1, dim_in 48 -> dim_out 24
+        assert_eq!(valid_range(0, 1, 2, 48, 24), (1, 24));
+        assert_eq!(valid_range(2, 1, 2, 48, 24), (0, 24));
+        // k=1, p=0: full range
+        assert_eq!(valid_range(0, 0, 1, 7, 7), (0, 7));
+        // degenerate: input smaller than the reach
+        assert_eq!(valid_range(4, 2, 1, 1, 1), (0, 0));
+    }
+
+    #[test]
+    fn threaded_channels_are_bit_identical() {
+        // shape chosen to clear PAR_MIN_MACS so the scoped-thread path
+        // actually runs: 6*8*9 taps x 32*48 outputs ~= 660k MACs
+        let mut rng = Rng::new(9);
+        let x = QTensor {
+            t: Tensor::from_vec(
+                &[1, 8, 32, 48],
+                (0..8 * 32 * 48)
+                    .map(|_| rng.range_i64(-2000, 2000) as i16)
+                    .collect(),
+            ),
+            exp: 8,
+        };
+        let w = TensorI8::from_vec(
+            &[6, 8, 3, 3],
+            (0..6 * 8 * 9).map(|_| rng.range_i64(-64, 64) as i8).collect(),
+        );
+        let b: Vec<i32> =
+            (0..6).map(|_| rng.range_i64(-512, 512) as i32).collect();
+        let pw = PackedQConv::pack_dense(&w);
+        assert!(pw.nnz() * 32 * 48 >= PAR_MIN_MACS, "shape must be threaded");
+        let mut a1 = Arena::with_threads(1);
+        let y1 = conv2d_q_packed(&x, &pw, &b, 1, 3, 7, true, 8, &mut a1);
+        for threads in [2, 3, 4, 7] {
+            let mut at = Arena::with_threads(threads);
+            let yt = conv2d_q_packed(&x, &pw, &b, 1, 3, 7, true, 8, &mut at);
+            assert_eq!(y1.t.data(), yt.t.data(), "threads={threads}");
+        }
     }
 }

@@ -7,11 +7,18 @@
 //! bit-exact with `python/compile/kernels/ref.py` (and therefore with the
 //! Pallas kernels inside the AOT artifacts).
 
+pub mod arena;
 pub mod conv;
 pub mod norm;
 pub mod sample;
 
-pub use conv::{conv2d, conv2d_dw, conv2d_dw_q, conv2d_q};
+pub use arena::Arena;
+pub use conv::{
+    conv2d, conv2d_dw, conv2d_dw_packed, conv2d_dw_q, conv2d_dw_q_packed,
+    conv2d_dw_q_ref, conv2d_dw_ref, conv2d_packed, conv2d_q, conv2d_q_packed,
+    conv2d_q_ref, conv2d_ref, out_dim, PackedConv, PackedFConv, PackedQConv,
+    Tap,
+};
 pub use norm::layer_norm;
 pub use sample::{grid_sample, resize_bilinear, upsample_bilinear2x, upsample_nearest2x, upsample_nearest2x_i16};
 

@@ -31,7 +31,9 @@ impl QTensor {
 
 /// `(v + (1 << (r-1))) >> r` for r > 0 (arithmetic shift), `v << -r`
 /// for r < 0, identity for r == 0. Round half towards +inf.
-#[inline]
+/// `inline(always)`: this is the innermost step of every conv epilogue;
+/// it must fold into the caller's loop in release code.
+#[inline(always)]
 pub fn rshift_round(v: i64, r: i32) -> i64 {
     if r > 0 {
         (v + (1i64 << (r - 1))) >> r
@@ -43,7 +45,7 @@ pub fn rshift_round(v: i64, r: i32) -> i64 {
 }
 
 /// Clip to the int16 activation range.
-#[inline]
+#[inline(always)]
 pub fn clip_act(v: i64) -> i16 {
     v.clamp(A_QMIN as i64, A_QMAX as i64) as i16
 }

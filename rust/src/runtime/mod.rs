@@ -68,6 +68,14 @@ pub trait HwBackend: Send + Sync {
     fn run_named(&self, name: &str, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
         self.run(self.resolve(name)?, inputs)
     }
+
+    /// Hint: stripe software conv output channels over `threads` workers.
+    /// Called by `PipelineEngine` construction with
+    /// `PipelineOptions::conv_threads` (when non-zero), so the knob works
+    /// through every coordinator/server constructor. Results must stay
+    /// bit-identical for any value. Default: no-op — hardware backends
+    /// bring their own parallelism.
+    fn set_conv_threads(&self, _threads: usize) {}
 }
 
 /// Shape/exponent validation shared by every backend: inputs must match

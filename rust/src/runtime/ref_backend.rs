@@ -114,11 +114,27 @@ impl RefBackend {
     pub fn qp(&self) -> &Arc<QuantParams> {
         &self.qp
     }
+
+    /// Stripe every conv's output channels over `threads` scoped workers
+    /// (the `PipelineOptions::conv_threads` knob). Results are
+    /// bit-identical for every thread count — only the latency changes.
+    pub fn with_conv_threads(self, threads: usize) -> Self {
+        self.model.set_conv_threads(threads);
+        self
+    }
+
+    pub fn conv_threads(&self) -> usize {
+        self.model.conv_threads()
+    }
 }
 
 impl HwBackend for RefBackend {
     fn kind(&self) -> &'static str {
         "ref"
+    }
+
+    fn set_conv_threads(&self, threads: usize) {
+        self.model.set_conv_threads(threads);
     }
 
     fn manifest(&self) -> &Manifest {

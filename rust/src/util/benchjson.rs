@@ -1,0 +1,385 @@
+//! Machine-readable bench output: `BENCH_conv.json` records the repo's
+//! perf trajectory instead of scrolling it away in stdout.
+//!
+//! The schema is a flat JSON array of flat objects:
+//!
+//! ```json
+//! [
+//!   {"op": "conv2d_q_3x3", "shape": "x=1x64x32x48 w=32x64x3x3 s=1",
+//!    "ns_per_iter": 412345.0, "gops": 13.7, "threads": 1}
+//! ]
+//! ```
+//!
+//! Benches *merge* into the file keyed by `(op, threads)` — `ops_micro`
+//! and the `conv` bench both write `BENCH_conv.json` without clobbering
+//! each other's records. The writer/parser below handle exactly this
+//! schema (no external JSON crate is vendored); [`validate`] is what the
+//! CI bench-smoke step runs after `--smoke`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One kernel measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Kernel + variant name, e.g. `conv2d_q_3x3`.
+    pub op: String,
+    /// Human-readable shape key, e.g. `x=1x64x32x48 w=32x64x3x3 s=1`.
+    pub shape: String,
+    /// Median wall time per iteration, nanoseconds.
+    pub ns_per_iter: f64,
+    /// Giga-ops/s (2 ops per MAC) at that median.
+    pub gops: f64,
+    /// Conv worker threads the measurement used.
+    pub threads: usize,
+}
+
+impl BenchRecord {
+    /// Records with the same key overwrite each other on merge.
+    pub fn key(&self) -> (String, usize) {
+        (self.op.clone(), self.threads)
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize records to the schema above (stable field order, one object
+/// per line — diffs stay readable in git).
+pub fn to_json(records: &[BenchRecord]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let _ = write!(
+            out,
+            "  {{\"op\": \"{}\", \"shape\": \"{}\", \"ns_per_iter\": {:.1}, \
+             \"gops\": {:.3}, \"threads\": {}}}{}",
+            esc(&r.op),
+            esc(&r.shape),
+            r.ns_per_iter,
+            r.gops,
+            r.threads,
+            if i + 1 < records.len() { ",\n" } else { "\n" },
+        );
+    }
+    out.push(']');
+    out.push('\n');
+    out
+}
+
+// --- minimal JSON reader for the schema above ------------------------------
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        self.skip_ws();
+        if self.i < self.s.len() && self.s[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected '{}' at byte {} of bench JSON",
+                c as char,
+                self.i
+            )
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.s.get(self.i).copied()
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        // collect raw bytes (UTF-8 passes through) and convert once
+        let mut out: Vec<u8> = Vec::new();
+        while self.i < self.s.len() {
+            let c = self.s[self.i];
+            self.i += 1;
+            match c {
+                b'"' => return Ok(String::from_utf8(out)?),
+                b'\\' => {
+                    let e = *self
+                        .s
+                        .get(self.i)
+                        .context("dangling escape in bench JSON")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'n' => out.push(b'\n'),
+                        b'u' => {
+                            let hex = self
+                                .s
+                                .get(self.i..self.i + 4)
+                                .context("short \\u escape")?;
+                            let v = u32::from_str_radix(
+                                std::str::from_utf8(hex)?,
+                                16,
+                            )?;
+                            let ch = char::from_u32(v)
+                                .context("bad \\u escape")?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(
+                                ch.encode_utf8(&mut buf).as_bytes(),
+                            );
+                            self.i += 4;
+                        }
+                        other => bail!("unsupported escape '\\{}'", other as char),
+                    }
+                }
+                c => out.push(c),
+            }
+        }
+        bail!("unterminated string in bench JSON")
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.s.len()
+            && matches!(self.s[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.i])?
+            .parse::<f64>()
+            .with_context(|| format!("bad number at byte {start}"))
+    }
+}
+
+/// Parse the schema emitted by [`to_json`]. Unknown keys are rejected —
+/// the file is ours, drift means a bug.
+pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
+    let mut p = Parser { s: text.as_bytes(), i: 0 };
+    p.eat(b'[')?;
+    let mut records = Vec::new();
+    if p.peek() == Some(b']') {
+        p.eat(b']')?;
+        return Ok(records);
+    }
+    loop {
+        p.eat(b'{')?;
+        let (mut op, mut shape) = (None, None);
+        let (mut ns, mut gops, mut threads) = (None, None, None);
+        loop {
+            let key = p.string()?;
+            p.eat(b':')?;
+            match key.as_str() {
+                "op" => op = Some(p.string()?),
+                "shape" => shape = Some(p.string()?),
+                "ns_per_iter" => ns = Some(p.number()?),
+                "gops" => gops = Some(p.number()?),
+                "threads" => threads = Some(p.number()? as usize),
+                other => bail!("unknown bench-record key '{other}'"),
+            }
+            match p.peek() {
+                Some(b',') => p.eat(b',')?,
+                _ => break,
+            }
+        }
+        p.eat(b'}')?;
+        records.push(BenchRecord {
+            op: op.context("record missing 'op'")?,
+            shape: shape.context("record missing 'shape'")?,
+            ns_per_iter: ns.context("record missing 'ns_per_iter'")?,
+            gops: gops.context("record missing 'gops'")?,
+            threads: threads.context("record missing 'threads'")?,
+        });
+        match p.peek() {
+            Some(b',') => p.eat(b',')?,
+            _ => break,
+        }
+    }
+    p.eat(b']')?;
+    Ok(records)
+}
+
+/// Merge `fresh` into the records already in `path` (keyed by
+/// `(op, threads)`; existing records keep their position, new ones
+/// append) and rewrite the file. A missing file starts empty; an
+/// existing-but-unparseable file is an error — silently wiping the
+/// accumulated perf history would defeat the file's purpose.
+pub fn merge_into(path: &Path, fresh: &[BenchRecord]) -> Result<()> {
+    let mut records = match std::fs::read_to_string(path) {
+        Ok(t) => from_json(&t).with_context(|| {
+            format!(
+                "{} exists but does not parse; fix or remove it before \
+                 merging new records",
+                path.display()
+            )
+        })?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => {
+            return Err(e).with_context(|| {
+                format!("reading existing {}", path.display())
+            })
+        }
+    };
+    for r in fresh {
+        match records.iter_mut().find(|e| e.key() == r.key()) {
+            Some(slot) => *slot = r.clone(),
+            None => records.push(r.clone()),
+        }
+    }
+    std::fs::write(path, to_json(&records))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Shared bench-`main` epilogue: write `records` — to the
+/// `BENCH_conv.smoke.json` scratch file when `smoke` (cold-iteration
+/// timings must never overwrite the real perf record), else merged into
+/// `BENCH_conv.json` — then validate the schema, printing the outcome and
+/// exiting non-zero on drift.
+pub fn write_and_validate(smoke: bool, records: &[BenchRecord]) {
+    let path = Path::new(if smoke {
+        "BENCH_conv.smoke.json"
+    } else {
+        "BENCH_conv.json"
+    });
+    if smoke {
+        let _ = std::fs::remove_file(path);
+    }
+    if let Err(e) = merge_into(path, records) {
+        eprintln!("writing {}: {e:#}", path.display());
+        std::process::exit(1);
+    }
+    match validate(path) {
+        Ok(n) => println!("{} schema OK ({n} records)", path.display()),
+        Err(e) => {
+            eprintln!("{} schema INVALID: {e:#}", path.display());
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Schema check for the CI bench-smoke step: the file parses, is
+/// non-empty, and every record has a finite positive time and a thread
+/// count.
+pub fn validate(path: &Path) -> Result<usize> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let records = from_json(&text)?;
+    anyhow::ensure!(!records.is_empty(), "no bench records in file");
+    for r in &records {
+        anyhow::ensure!(!r.op.is_empty(), "empty op name");
+        anyhow::ensure!(
+            r.ns_per_iter.is_finite() && r.ns_per_iter > 0.0,
+            "op '{}': bad ns_per_iter {}",
+            r.op,
+            r.ns_per_iter
+        );
+        anyhow::ensure!(
+            r.gops.is_finite() && r.gops >= 0.0,
+            "op '{}': bad gops {}",
+            r.op,
+            r.gops
+        );
+        anyhow::ensure!(r.threads >= 1, "op '{}': bad thread count", r.op);
+    }
+    Ok(records.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(op: &str, threads: usize, ns: f64) -> BenchRecord {
+        BenchRecord {
+            op: op.into(),
+            shape: "x=1x2x3x4 w=2x2x3x3 s=1".into(),
+            ns_per_iter: ns,
+            gops: 1.5,
+            threads,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_records() {
+        let recs =
+            vec![rec("conv2d_q_3x3", 1, 1234.5), rec("conv2d_q_3x3", 4, 400.0)];
+        let parsed = from_json(&to_json(&recs)).unwrap();
+        assert_eq!(parsed, recs);
+    }
+
+    #[test]
+    fn empty_array_roundtrips() {
+        assert_eq!(from_json("[]\n").unwrap(), vec![]);
+        assert_eq!(from_json(&to_json(&[])).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn escapes_survive() {
+        let mut r = rec("odd\"op\\name", 1, 5.0);
+        r.shape = "line\nbreak".into();
+        let parsed = from_json(&to_json(&[r.clone()])).unwrap();
+        assert_eq!(parsed, vec![r]);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let bad = r#"[{"op": "x", "shape": "s", "ns_per_iter": 1.0,
+                       "gops": 0.1, "threads": 1, "extra": 7}]"#;
+        assert!(from_json(bad).is_err());
+        assert!(from_json(r#"[{"op": "x"}]"#).is_err());
+    }
+
+    #[test]
+    fn merge_refuses_to_wipe_a_corrupt_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_benchjson_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_conv.json");
+        std::fs::write(&path, "[{\"op\": trunca").unwrap();
+        assert!(merge_into(&path, &[rec("a", 1, 1.0)]).is_err());
+        // the corrupt history is left in place for the operator to inspect
+        let kept = std::fs::read_to_string(&path).unwrap();
+        assert!(kept.contains("trunca"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn merge_upserts_by_op_and_threads() {
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_benchjson_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_conv.json");
+        let _ = std::fs::remove_file(&path);
+        merge_into(&path, &[rec("a", 1, 10.0), rec("b", 1, 20.0)]).unwrap();
+        // same key overwrites, new thread count appends
+        merge_into(&path, &[rec("a", 1, 11.0), rec("a", 4, 3.0)]).unwrap();
+        let recs = from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].ns_per_iter, 11.0);
+        assert_eq!(recs[1].op, "b");
+        assert_eq!(recs[2].threads, 4);
+        assert_eq!(validate(&path).unwrap(), 3);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,6 +1,9 @@
 //! Small self-contained utilities: a seeded PRNG for the property tests
 //! (no external crates are vendored beyond `xla`/`anyhow`), timing
-//! aggregation helpers, and a tiny CLI argument reader.
+//! aggregation helpers, a tiny CLI argument reader, and the
+//! machine-readable bench-record writer (`benchjson`).
+
+pub mod benchjson;
 
 /// SplitMix64 — tiny, high-quality seeded PRNG for tests and workload
 /// generation. Deterministic across platforms.

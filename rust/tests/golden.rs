@@ -301,7 +301,7 @@ fn overlap_ablation_is_bit_identical() {
             &artifacts(),
             &manifest,
             Arc::clone(&qp),
-            PipelineOptions { overlap, sw_threads: 2 },
+            PipelineOptions { overlap, sw_threads: 2, ..Default::default() },
         )
         .unwrap()
     };

@@ -40,6 +40,61 @@ fn run_sequential(
 }
 
 #[test]
+fn conv_threads_do_not_change_any_depth_bit() {
+    // the conv_threads knob stripes conv output channels over scoped
+    // workers; the full pipeline output must be bit-identical to the
+    // serial kernel for every thread count
+    let scene = Scene::synthetic("threads", 3, 5);
+    let run = |threads: usize| -> Vec<TensorF> {
+        let mut coord = Coordinator::on_ref_backend(
+            31,
+            PipelineOptions { conv_threads: threads, ..Default::default() },
+        )
+        .unwrap();
+        (0..3)
+            .map(|i| {
+                let img = scene.normalized_image(i);
+                coord.step(&img, &scene.poses[i]).unwrap().depth
+            })
+            .collect()
+    };
+    let base = run(1);
+    for threads in [2, 4] {
+        let got = run(threads);
+        for (f, (a, b)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(a.data(), b.data(), "frame {f}, conv_threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn server_on_ref_backend_honors_conv_threads() {
+    // the StreamServer convenience constructor must serve frames and
+    // apply conv_threads through the same HwBackend hint as the
+    // coordinator path — bit-identically for any worker count
+    let scene = Scene::synthetic("srv", 2, 6);
+    let run = |threads: usize| -> Vec<TensorF> {
+        let mut server = StreamServer::on_ref_backend(
+            17,
+            PipelineOptions { conv_threads: threads, ..Default::default() },
+        )
+        .unwrap();
+        let s = server.open_stream();
+        (0..2)
+            .map(|i| {
+                let img = scene.normalized_image(i);
+                server.step_stream(s, &img, &scene.poses[i]).unwrap().depth
+            })
+            .collect()
+    };
+    let serial = run(1);
+    let threaded = run(4);
+    for (f, (a, b)) in serial.iter().zip(&threaded).enumerate() {
+        assert_eq!(a.data(), b.data(), "frame {f}");
+    }
+}
+
+#[test]
 fn interleaved_streams_are_bit_identical_to_sequential() {
     // Two streams with *different* trajectories share one backend. The
     // server interleaves them frame by frame; every per-stream depth must

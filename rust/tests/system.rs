@@ -139,7 +139,7 @@ fn overlap_ablation_is_bit_identical_on_ref_backend() {
     let mk = |overlap: bool| {
         Coordinator::on_ref_backend(
             42,
-            PipelineOptions { overlap, sw_threads: 2 },
+            PipelineOptions { overlap, sw_threads: 2, ..Default::default() },
         )
         .unwrap()
     };
