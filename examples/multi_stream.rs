@@ -1,15 +1,25 @@
 //! Multi-stream serving demo: one shared backend ("one bitstream"),
-//! N concurrent video streams multiplexed round-robin by `StreamServer`.
+//! N concurrent video streams multiplexed by `StreamServer` — served two
+//! ways over the *same* workload:
 //!
-//! Runs from a clean checkout — no `artifacts/` needed: the segments are
-//! served by the pure-software RefBackend with synthetic calibration,
-//! and each stream gets its own procedurally generated video. Per-stream
-//! and aggregate throughput are reported at the end.
+//! 1. **per-stream stepping** — each `(stream, frame)` walks the whole
+//!    Fig-5 FSM alone (`step_stream`), streams strictly serialized;
+//! 2. **batched rounds** — `run_round` advances the round's frames in
+//!    lockstep, batching every HW segment into one
+//!    `HwBackend::run_batch` call and spreading the per-stream SW ops
+//!    over the extern worker pool.
+//!
+//! Both runs must produce bit-identical depth maps (asserted below);
+//! batching is a latency optimisation only. Runs from a clean checkout —
+//! no `artifacts/` needed: the segments are served by the pure-software
+//! RefBackend with synthetic calibration, and each stream gets its own
+//! procedurally generated video.
 //!
 //!     cargo run --release --example multi_stream \
 //!         [-- --streams N --frames M --conv-threads T]
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use fadec::config;
 use fadec::coordinator::{PipelineOptions, StreamServer};
@@ -22,34 +32,58 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n_streams = args.get_usize("streams", config::DEFAULT_STREAMS);
     let frames = args.get_usize("frames", 6);
-    let conv_threads = args.get_usize("conv-threads", 1);
+    let conv_threads = args.get_usize("conv-threads", 2);
 
     // one backend instance, shared by every stream; the server's engine
-    // applies --conv-threads to it (output channels striped over that
-    // many workers, bit-identical results)
-    let backend = Arc::new(RefBackend::synthetic(0));
-    let qp = Arc::clone(backend.qp());
-    let mut server = StreamServer::new(
-        Arc::clone(&backend) as Arc<dyn HwBackend>,
-        qp,
-        PipelineOptions { conv_threads, ..Default::default() },
-    )?;
-    println!(
-        "backend '{}': {} segments, serving {} concurrent streams x {} frames \
-         (conv threads: {})",
-        backend.kind(),
-        backend.manifest().segments.len(),
-        n_streams,
-        frames,
-        backend.conv_threads(),
-    );
-    let streams: Vec<usize> = (0..n_streams).map(|_| server.open_stream()).collect();
+    // applies --conv-threads to it (output channels — and, in batched
+    // rounds, (batch, channel) jobs — striped over that many workers,
+    // bit-identical results)
+    let make_server = || -> anyhow::Result<StreamServer> {
+        let backend = Arc::new(RefBackend::synthetic(0));
+        let qp = Arc::clone(backend.qp());
+        StreamServer::new(
+            backend as Arc<dyn HwBackend>,
+            qp,
+            PipelineOptions { conv_threads, ..Default::default() },
+        )
+    };
     // every stream is a different video (different seed/trajectory)
-    let scenes: Vec<Scene> = streams
-        .iter()
-        .map(|&s| Scene::synthetic(&format!("cam-{s}"), frames, 100 + s as u64))
+    let scenes: Vec<Scene> = (0..n_streams)
+        .map(|s| Scene::synthetic(&format!("cam-{s}"), frames, 100 + s as u64))
         .collect();
+    println!(
+        "serving {} concurrent streams x {} frames on a shared RefBackend \
+         (conv threads: {})\n",
+        n_streams, frames, conv_threads,
+    );
 
+    // --- mode 1: per-stream stepping (streams serialized) ---------------
+    let mut seq_server = make_server()?;
+    let seq_streams: Vec<usize> =
+        (0..n_streams).map(|_| seq_server.open_stream()).collect();
+    let t0 = Instant::now();
+    let mut seq_last: Vec<TensorF> = Vec::new();
+    for i in 0..frames {
+        seq_last.clear();
+        for &s in &seq_streams {
+            let img = scenes[s].normalized_image(i);
+            let out = seq_server.step_stream(s, &img, &scenes[s].poses[i])?;
+            seq_last.push(out.depth);
+        }
+    }
+    let seq_wall = t0.elapsed().as_secs_f64();
+    let seq_fps = (n_streams * frames) as f64 / seq_wall;
+    println!(
+        "per-stream stepping: {:7.3} s wall, {:6.2} fps aggregate",
+        seq_wall, seq_fps
+    );
+
+    // --- mode 2: batched rounds (lockstep run_round) ---------------------
+    let mut server = make_server()?;
+    let streams: Vec<usize> =
+        (0..n_streams).map(|_| server.open_stream()).collect();
+    let t0 = Instant::now();
+    let mut batch_last: Vec<TensorF> = Vec::new();
     for i in 0..frames {
         let imgs: Vec<TensorF> =
             scenes.iter().map(|sc| sc.normalized_image(i)).collect();
@@ -57,22 +91,45 @@ fn main() -> anyhow::Result<()> {
             .iter()
             .map(|&s| (s, &imgs[s], &scenes[s].poses[i]))
             .collect();
-        let outs = server.run_round(&inputs)?;
-        let served: Vec<String> = outs
-            .iter()
-            .map(|(sid, out)| {
-                format!("s{sid}:{:5.1}ms", out.profile.total_s * 1e3)
-            })
-            .collect();
-        println!("round {i:>2}  [{}]", served.join(" "));
+        let mut outs = server.run_round(&inputs)?;
+        outs.sort_by_key(|(sid, _)| *sid);
+        batch_last = outs.into_iter().map(|(_, o)| o.depth).collect();
     }
+    let batch_wall = t0.elapsed().as_secs_f64();
+    let batch_fps = (n_streams * frames) as f64 / batch_wall;
+    println!(
+        "batched rounds:      {:7.3} s wall, {:6.2} fps aggregate  \
+         (speedup x{:.2})",
+        batch_wall,
+        batch_fps,
+        seq_wall / batch_wall.max(1e-9),
+    );
 
-    println!("\n{}", server.report());
+    // batching must be a pure latency optimisation: last round's depth
+    // maps are bit-identical to per-stream stepping
+    assert_eq!(seq_last.len(), batch_last.len());
+    for (s, (a, b)) in seq_last.iter().zip(&batch_last).enumerate() {
+        assert_eq!(
+            a.data(),
+            b.data(),
+            "stream {s}: batched round diverged from per-stream stepping"
+        );
+    }
+    println!("bit-exact: batched rounds == per-stream stepping\n");
+
+    println!("{}", server.report());
     let stats = server.take_extern_stats();
     println!(
         "extern crossings: {}   total overhead: {:.3} ms",
         stats.records.len(),
         stats.total_overhead() * 1e3
+    );
+    let bs = server.batch_stats();
+    println!(
+        "rounds: {}   mean batch width: {:.1}   max: {}",
+        bs.rounds,
+        bs.mean_width(),
+        bs.max_width
     );
 
     // isolation sanity: every session advanced exactly `frames` frames

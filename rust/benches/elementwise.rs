@@ -1,0 +1,169 @@
+//! Elementwise / sampling / norm / batched-conv micro-benchmarks (PR 3):
+//! the allocating reference path vs the `_into`/arena fast path vs (for
+//! conv) the batched kernel, at pipeline-representative shapes. Records
+//! merge into `BENCH_ops.json` (`util::benchjson` schema).
+//!
+//!     cargo bench --bench elementwise [-- --smoke]
+//!
+//! `--smoke` runs each kernel once and validates the emitted JSON schema
+//! (the CI bench-smoke step); smoke timings go to `BENCH_ops.smoke.json`
+//! so they never overwrite the real perf record.
+
+use fadec::ops::{
+    self, Arena, PackedQConv,
+};
+use fadec::quant::{
+    add_q, add_q_arena, concat_q, concat_q_arena, mul_q, mul_q_arena, requant,
+    requant_arena, QTensor,
+};
+use fadec::tensor::{Tensor, TensorF, TensorI8};
+use fadec::util::benchjson::{self, BenchRecord};
+use fadec::util::{bench, Args, Rng, TimingStats};
+
+fn rand_q(rng: &mut Rng, shape: &[usize], exp: i32) -> QTensor {
+    let n: usize = shape.iter().product();
+    QTensor {
+        t: Tensor::from_vec(
+            shape,
+            (0..n).map(|_| rng.range_i64(-20000, 20000) as i16).collect(),
+        ),
+        exp,
+    }
+}
+
+fn rec(op: &str, shape: &str, st: &TimingStats, ops_per_iter: f64, threads: usize) -> BenchRecord {
+    let ns = st.median() * 1e9;
+    BenchRecord {
+        op: op.into(),
+        shape: shape.into(),
+        ns_per_iter: ns,
+        gops: if ns > 0.0 { ops_per_iter / ns } else { 0.0 },
+        threads,
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let smoke = args.has("smoke");
+    let it = |n: usize| if smoke { 1 } else { n };
+    let warm = |n: usize| if smoke { 0 } else { n };
+    let mut rng = Rng::new(7);
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    // --- elementwise at the FPN half-res shape --------------------------
+    let shape = [1usize, 16, 32, 48];
+    let shape_s = "1x16x32x48";
+    let n = 16 * 32 * 48;
+    let a = rand_q(&mut rng, &shape, 9);
+    let b = rand_q(&mut rng, &shape, 8);
+    let mut arena = Arena::new();
+
+    let st = bench("add_q_ref", warm(10), it(400), || {
+        std::hint::black_box(add_q(&a, &b, 8));
+    });
+    records.push(rec("add_q_ref", shape_s, &st, n as f64, 1));
+    let st = bench("add_q_arena", warm(10), it(400), || {
+        let y = add_q_arena(&a, &b, 8, &mut arena);
+        arena.recycle_q(std::hint::black_box(y));
+    });
+    records.push(rec("add_q_arena", shape_s, &st, n as f64, 1));
+
+    let st = bench("mul_q_ref", warm(10), it(400), || {
+        std::hint::black_box(mul_q(&a, &b, 8));
+    });
+    records.push(rec("mul_q_ref", shape_s, &st, n as f64, 1));
+    let st = bench("mul_q_arena", warm(10), it(400), || {
+        let y = mul_q_arena(&a, &b, 8, &mut arena);
+        arena.recycle_q(std::hint::black_box(y));
+    });
+    records.push(rec("mul_q_arena", shape_s, &st, n as f64, 1));
+
+    let st = bench("requant_ref", warm(10), it(400), || {
+        std::hint::black_box(requant(&a, 7));
+    });
+    records.push(rec("requant_ref", shape_s, &st, n as f64, 1));
+    let st = bench("requant_arena", warm(10), it(400), || {
+        let y = requant_arena(&a, 7, &mut arena);
+        arena.recycle_q(std::hint::black_box(y));
+    });
+    records.push(rec("requant_arena", shape_s, &st, n as f64, 1));
+
+    let st = bench("concat_q_ref", warm(10), it(400), || {
+        std::hint::black_box(concat_q(&[&a, &b], 8));
+    });
+    records.push(rec("concat_q", shape_s, &st, 2.0 * n as f64, 1));
+    let st = bench("concat_q_arena", warm(10), it(400), || {
+        let y = concat_q_arena(&[&a, &b], 8, &mut arena);
+        arena.recycle_q(std::hint::black_box(y));
+    });
+    records.push(rec("concat_q_arena", shape_s, &st, 2.0 * n as f64, 1));
+
+    // --- i16 nearest upsample (FPN) -------------------------------------
+    let up_in = rand_q(&mut rng, &[1, 16, 16, 24], 8);
+    let st = bench("upsample_nearest_i16_ref", warm(10), it(400), || {
+        std::hint::black_box(ops::upsample_nearest2x_i16(&up_in.t));
+    });
+    records.push(rec("upsample_nearest_i16_ref", "1x16x16x24", &st,
+                     (16 * 32 * 48) as f64, 1));
+    let st = bench("upsample_nearest_i16_arena", warm(10), it(400), || {
+        let y = ops::upsample_nearest2x_i16_arena(&up_in.t, &mut arena);
+        arena.recycle_i16(std::hint::black_box(y).into_data());
+    });
+    records.push(rec("upsample_nearest_i16_arena", "1x16x16x24", &st,
+                     (16 * 32 * 48) as f64, 1));
+
+    // --- layer norm (ConvLSTM gates shape) ------------------------------
+    let gates = TensorF::from_vec(
+        &[1, 256, 2, 3],
+        (0..256 * 6).map(|_| rng.normal_f32()).collect(),
+    );
+    let g = vec![1.0f32; 256];
+    let bb = vec![0.0f32; 256];
+    let st = bench("layer_norm_ref", warm(10), it(400), || {
+        std::hint::black_box(ops::layer_norm(&gates, &g, &bb));
+    });
+    records.push(rec("layer_norm_ref", "1x256x2x3", &st, (256 * 6) as f64, 1));
+    let mut lbuf = vec![0f32; 256 * 6];
+    let st = bench("layer_norm_into", warm(10), it(400), || {
+        ops::layer_norm_into(&gates, &g, &bb, &mut lbuf);
+        std::hint::black_box(&lbuf);
+    });
+    records.push(rec("layer_norm_into", "1x256x2x3", &st, (256 * 6) as f64, 1));
+
+    // --- batched conv: 4 streams solo vs one batch ----------------------
+    let wq = TensorI8::from_vec(
+        &[32, 64, 3, 3],
+        (0..32 * 64 * 9).map(|_| rng.range_i64(-127, 127) as i8).collect(),
+    );
+    let bias = vec![0i32; 32];
+    let pw = PackedQConv::pack_dense(&wq);
+    let xs: Vec<QTensor> =
+        (0..4).map(|_| rand_q(&mut rng, &[1, 64, 32, 48], 8)).collect();
+    let macs4 = 4.0 * 2.0 * (32 * 64 * 9 * 32 * 48) as f64;
+    for threads in [1usize, 2] {
+        let mut ar = Arena::with_threads(threads);
+        let st = bench(&format!("conv2d_q_solo_x4_t{threads}"), warm(2), it(20), || {
+            for x in &xs {
+                let y = ops::conv2d_q_packed(
+                    x, &pw, &bias, 1, 17, 12, true, 8, &mut ar,
+                );
+                ar.recycle_q(std::hint::black_box(y));
+            }
+        });
+        records.push(rec("conv2d_q_solo_x4", "4x(1x64x32x48) w=32x64x3x3",
+                         &st, macs4, threads));
+        let st = bench(&format!("conv2d_q_batch4_t{threads}"), warm(2), it(20), || {
+            let refs: Vec<&QTensor> = xs.iter().collect();
+            let ys = ops::conv2d_q_packed_batch(
+                &refs, &pw, &bias, 1, 17, 12, true, 8, &mut ar,
+            );
+            for y in std::hint::black_box(ys) {
+                ar.recycle_q(y);
+            }
+        });
+        records.push(rec("conv2d_q_batch4", "4x(1x64x32x48) w=32x64x3x3",
+                         &st, macs4, threads));
+    }
+
+    benchjson::write_and_validate_named("BENCH_ops", smoke, &records);
+}

@@ -4,10 +4,24 @@
 //! [`PipelineEngine`] is stateless across frames: it owns the shared
 //! backend handle, the extern link (CPU worker pool) and the pre-resolved
 //! [`SegmentHandles`]. One frame is a [`FrameTask`] walked through the
-//! named [`FrameStage`]s by `advance`, every stage taking
+//! named [`FrameStage`]s, every stage taking
 //! `(&dyn HwBackend, &mut StreamSession)` — the cross-frame state lives
 //! entirely in the session (see `session.rs`), which is what lets a
 //! `StreamServer` multiplex many streams over one backend.
+//!
+//! # Batched rounds (PR 3)
+//!
+//! Every stage is implemented over a *slice* of tasks advancing in
+//! lockstep: a single frame is the 1-element case, and
+//! [`PipelineEngine::step_round`] walks N streams' frames together. At
+//! each HW stage the round's per-stream segment inputs are collected
+//! into one [`HwBackend::run_batch`] call (the `RefBackend` shares tap
+//! lists and thread-scopes across the batch; hardware backends fall back
+//! to a loop), and at each SW stage the per-stream ops are *posted* to
+//! the extern link's worker pool before any is joined, so different
+//! streams' software ops overlap even where one stream's schedule is
+//! serial. Lockstep batching is latency-only: every stream's outputs are
+//! bit-identical to stepping it alone (pinned by `rust/tests/server.rs`).
 //!
 //! The paper's two overlaps survive as schedule structure, not inline
 //! code:
@@ -27,6 +41,7 @@ use std::collections::HashMap;
 use std::mem;
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -41,7 +56,7 @@ use crate::quant::{dequantize_tensor, quantize_tensor, QTensor};
 use crate::runtime::{HwBackend, HwRuntime, RefBackend, SegmentId};
 use crate::tensor::TensorF;
 
-use super::extern_link::{ExternLink, ExternStats, Pending};
+use super::extern_link::{ExternStats, ExternLink, Pending};
 use super::profiler::{FrameProfile, Lane, Profiler};
 use super::session::StreamSession;
 
@@ -241,11 +256,18 @@ impl<'f> FrameTask<'f> {
             m.insert(name.into(), q.clone());
         }
     }
+
+    /// Record a batched HW call's wall interval on this frame's profile
+    /// (each stream in the round waited for the whole batch).
+    fn span_hw(&mut self, label: &'static str, a: Instant, b: Instant) {
+        let (ra, rb) = (self.prof.rel(a), self.prof.rel(b));
+        self.prof.record_span(label, Lane::Hw, ra, rb);
+    }
 }
 
 /// The frame-stepping machinery: shared backend + extern link + resolved
 /// handles + options. Stateless across frames — all cross-frame state is
-/// in the `StreamSession` passed to `step_session`.
+/// in the `StreamSession`(s) passed to `step_session` / `step_round`.
 pub struct PipelineEngine {
     backend: Arc<dyn HwBackend>,
     qp: Arc<QuantParams>,
@@ -342,6 +364,37 @@ impl PipelineEngine {
         })
     }
 
+    /// Run one frame of each of N streams through the FSM in lockstep:
+    /// every HW stage issues one batched backend call over the round's
+    /// per-stream segment inputs, and every SW stage posts all streams'
+    /// ops to the worker pool before joining any. Each stream's outputs
+    /// are bit-identical to stepping it alone.
+    pub fn step_round(
+        &self,
+        sessions: &mut [&mut StreamSession],
+        frames: &[(&TensorF, Mat4)],
+    ) -> Result<Vec<FrameOutput>> {
+        assert_eq!(sessions.len(), frames.len(), "one frame per session");
+        let mut tasks: Vec<FrameTask> = frames
+            .iter()
+            .map(|&(img, pose)| FrameTask::new(img, pose, false))
+            .collect();
+        while tasks.first().is_some_and(|t| t.stage != FrameStage::Done) {
+            self.advance_round(&mut tasks, sessions)?;
+        }
+        Ok(tasks
+            .into_iter()
+            .map(|t| {
+                let FrameTask { prof, trace, depth, .. } = t;
+                FrameOutput {
+                    depth: depth.expect("Commit ran"),
+                    profile: prof.finish(),
+                    trace,
+                }
+            })
+            .collect())
+    }
+
     /// Execute the task's current stage and move to the next one. The
     /// backend is always the engine's own — `SegmentHandles` are only
     /// valid for the backend they were resolved against.
@@ -350,53 +403,60 @@ impl PipelineEngine {
         task: &mut FrameTask,
         session: &mut StreamSession,
     ) -> Result<()> {
+        let mut sessions = [session];
+        self.advance_round(std::slice::from_mut(task), &mut sessions)
+    }
+
+    /// Execute the current stage of every task in the round (all tasks
+    /// sit at the same stage — the lockstep invariant) and move them on.
+    fn advance_round(
+        &self,
+        tasks: &mut [FrameTask],
+        sessions: &mut [&mut StreamSession],
+    ) -> Result<()> {
+        assert_eq!(tasks.len(), sessions.len());
+        let Some(first) = tasks.first() else { return Ok(()) };
+        let stage = first.stage;
+        debug_assert!(
+            tasks.iter().all(|t| t.stage == stage),
+            "round lost lockstep"
+        );
         let hw = self.backend.as_ref();
-        match task.stage {
-            FrameStage::SpawnSwTasks => self.stage_spawn_sw_tasks(task, session),
-            FrameStage::QuantizeImage => self.stage_quantize_image(task),
-            FrameStage::FeFs => self.stage_fe_fs(hw, task)?,
-            FrameStage::CvfFinish => self.stage_cvf_finish(task),
-            FrameStage::Cve => self.stage_cve(hw, task)?,
+        match stage {
+            FrameStage::SpawnSwTasks => self.stage_spawn_sw_tasks(tasks, sessions),
+            FrameStage::QuantizeImage => self.stage_quantize_image(tasks),
+            FrameStage::FeFs => self.stage_fe_fs(hw, tasks)?,
+            FrameStage::CvfFinish => self.stage_cvf_finish(tasks),
+            FrameStage::Cve => self.stage_cve(hw, tasks)?,
             FrameStage::JoinHiddenCorrection => {
-                self.stage_join_hidden_correction(task)
+                self.stage_join_hidden_correction(tasks)
             }
-            FrameStage::ConvLstm => self.stage_conv_lstm(hw, task, session)?,
-            FrameStage::Decoder => self.stage_decoder(hw, task)?,
-            FrameStage::DepthOut => self.stage_depth_out(task),
-            FrameStage::Commit => self.stage_commit(task, session),
+            FrameStage::ConvLstm => self.stage_conv_lstm(hw, tasks, sessions)?,
+            FrameStage::Decoder => self.stage_decoder(hw, tasks)?,
+            FrameStage::DepthOut => self.stage_depth_out(tasks),
+            FrameStage::Commit => self.stage_commit(tasks, sessions),
             FrameStage::Done => {}
         }
-        task.stage = task.stage.next();
+        for t in tasks.iter_mut() {
+            t.stage = t.stage.next();
+        }
         Ok(())
     }
 
     // --- helpers -----------------------------------------------------------
 
-    /// Run one HW segment by pre-resolved handle, recording the profile.
-    fn run_hw(
+    /// One batched HW call over the round's per-stream inputs; returns
+    /// the outputs plus the call's wall interval (recorded on each
+    /// participant's profile by the caller via `FrameTask::span_hw`).
+    fn run_hw_batch(
         &self,
         hw: &dyn HwBackend,
         id: SegmentId,
-        label: &'static str,
-        inputs: &[&QTensor],
-        prof: &mut Profiler,
-    ) -> Result<Vec<QTensor>> {
-        let t0 = prof.now();
-        let out = hw.run(id, inputs)?;
-        prof.record(label, Lane::Hw, t0);
-        Ok(out)
-    }
-
-    /// Synchronous SW op through the extern link, profiled.
-    fn call_sw<T: Send + 'static>(
-        &self,
-        label: &'static str,
-        prof: &mut Profiler,
-        f: impl FnOnce() -> T + Send + 'static,
-    ) -> T {
-        let (v, a, b) = self.link.post(label, f).wait_timed(&self.link.stats, true);
-        prof.record_span(label, Lane::Sw, prof.rel(a), prof.rel(b));
-        v
+        batch: &[Vec<&QTensor>],
+    ) -> Result<(Vec<Vec<QTensor>>, Instant, Instant)> {
+        let a = Instant::now();
+        let outs = hw.run_batch(id, batch)?;
+        Ok((outs, a, Instant::now()))
     }
 
     /// Join a pending SW op. `overlapped` marks latency as hidden.
@@ -412,28 +472,63 @@ impl PipelineEngine {
         v
     }
 
-    /// SW layer norm at an extern boundary (dequant -> LN -> requant).
-    fn sw_layer_norm(
-        &self,
-        ln_name: String,
-        x: &QTensor,
-        out_exp: i32,
-        prof: &mut Profiler,
-    ) -> QTensor {
-        let qp = Arc::clone(&self.qp);
-        let x = x.clone();
-        self.call_sw("layer_norm", prof, move || {
-            let xf = dequantize_tensor(&x);
-            let p = qp.ln(&ln_name);
-            quantize_tensor(&layer_norm(&xf, &p.gamma, &p.beta), out_exp)
-        })
+    /// Whether fan-out SW joins of a round should be accounted as
+    /// overlapped. Width 1 keeps the paper's synchronous ping-pong
+    /// accounting (`overhead = wall - sw`); in a wider round the N jobs
+    /// are pool-scheduled behind each other, so counting each join's
+    /// queue time as "extern overhead" would inflate the metric
+    /// superlinearly with batch width — those waits are shared compute,
+    /// not transfer/control waste.
+    fn round_overlapped(ts: &[FrameTask]) -> bool {
+        ts.len() > 1
     }
 
-    // --- the FSM stages ----------------------------------------------------
+    /// SW layer norm at an extern boundary for every task in the round:
+    /// all N `dequant -> LN -> requant` jobs are posted before any is
+    /// joined, so they spread over the worker pool.
+    fn sw_layer_norm_all(
+        &self,
+        ts: &mut [FrameTask],
+        ln_name: &str,
+        xs: &[QTensor],
+        out_exp: i32,
+    ) -> Vec<QTensor> {
+        debug_assert_eq!(ts.len(), xs.len());
+        let ov = Self::round_overlapped(ts);
+        let pendings: Vec<Pending<QTensor>> = xs
+            .iter()
+            .map(|x| {
+                let qp = Arc::clone(&self.qp);
+                let name = ln_name.to_string();
+                let x = x.clone();
+                self.link.post("layer_norm", move || {
+                    let xf = dequantize_tensor(&x);
+                    let p = qp.ln(&name);
+                    quantize_tensor(&layer_norm(&xf, &p.gamma, &p.beta), out_exp)
+                })
+            })
+            .collect();
+        ts.iter_mut()
+            .zip(pendings)
+            .map(|(t, p)| self.join_sw("layer_norm", p, ov, &mut t.prof))
+            .collect()
+    }
+
+    // --- the FSM stages (each over the whole lockstep round) --------------
 
     /// Post the overlappable SW tasks (Fig 5): sharded CVF preparation
-    /// and the hidden-state correction.
-    fn stage_spawn_sw_tasks(&self, t: &mut FrameTask, s: &mut StreamSession) {
+    /// and the hidden-state correction, for every stream in the round.
+    fn stage_spawn_sw_tasks(
+        &self,
+        ts: &mut [FrameTask],
+        sessions: &mut [&mut StreamSession],
+    ) {
+        for (t, s) in ts.iter_mut().zip(sessions.iter_mut()) {
+            self.spawn_sw_tasks_one(t, s);
+        }
+    }
+
+    fn spawn_sw_tasks_one(&self, t: &mut FrameTask, s: &mut StreamSession) {
         let (hc, wc) = config::level_hw(1);
         let kf: Vec<(Mat4, TensorF)> = s
             .kb
@@ -491,242 +586,333 @@ impl PipelineEngine {
     }
 
     /// Image quantization (input DMA analog).
-    fn stage_quantize_image(&self, t: &mut FrameTask) {
-        let t0 = t.prof.now();
-        let img_q = quantize_tensor(t.img, self.qp.aexp("image"));
-        t.prof.record("img_quant", Lane::Sw, t0);
-        t.tr("image_q", &img_q);
-        t.img_q = Some(img_q);
+    fn stage_quantize_image(&self, ts: &mut [FrameTask]) {
+        for t in ts.iter_mut() {
+            let t0 = t.prof.now();
+            let img_q = quantize_tensor(t.img, self.qp.aexp("image"));
+            t.prof.record("img_quant", Lane::Sw, t0);
+            t.tr("image_q", &img_q);
+            t.img_q = Some(img_q);
+        }
     }
 
-    /// HW: FE + FS (CVF prep runs on the CPU meanwhile).
-    fn stage_fe_fs(&self, hw: &dyn HwBackend, t: &mut FrameTask) -> Result<()> {
-        let img_q = t.img_q.take().expect("QuantizeImage ran");
-        let feats =
-            self.run_hw(hw, self.handles.fe_fs, "fe_fs", &[&img_q], &mut t.prof)?;
-        for (i, f) in feats.iter().enumerate() {
-            t.tr(format!("feat{i}_q"), f);
+    /// HW: FE + FS, batched across the round (CVF prep runs on the CPU
+    /// meanwhile).
+    fn stage_fe_fs(&self, hw: &dyn HwBackend, ts: &mut [FrameTask]) -> Result<()> {
+        let imgs: Vec<QTensor> = ts
+            .iter_mut()
+            .map(|t| t.img_q.take().expect("QuantizeImage ran"))
+            .collect();
+        let (outs, a, b) = {
+            let batch: Vec<Vec<&QTensor>> = imgs.iter().map(|q| vec![q]).collect();
+            self.run_hw_batch(hw, self.handles.fe_fs, &batch)?
+        };
+        for (t, feats) in ts.iter_mut().zip(outs) {
+            t.span_hw("fe_fs", a, b);
+            for (i, f) in feats.iter().enumerate() {
+                t.tr(format!("feat{i}_q"), f);
+            }
+            t.feats = feats;
         }
-        t.feats = feats;
         Ok(())
     }
 
-    /// Extern: feature out, cost volume in (CVF finish).
-    fn stage_cvf_finish(&self, t: &mut FrameTask) {
+    /// Extern: feature out, cost volume in (CVF finish) — the per-stream
+    /// finish ops are posted together and joined in round order.
+    fn stage_cvf_finish(&self, ts: &mut [FrameTask]) {
         let (hc, wc) = config::level_hw(1);
-        let warps = match t.prep_ready.take() {
-            Some(v) => Some(v),
-            None if !t.prep_pending.is_empty() => {
-                let mut warps = Vec::new();
-                for p in mem::take(&mut t.prep_pending) {
-                    warps.extend(self.join_sw("cvf_prep", p, true, &mut t.prof));
-                }
-                Some(warps)
-            }
-            None => None,
-        };
         let e_cost = self.qp.aexp("cvf.cost");
-        let cost_q = match warps {
-            Some(warps) => {
+        let mut posted: Vec<Option<Pending<QTensor>>> = Vec::with_capacity(ts.len());
+        for t in ts.iter_mut() {
+            let warps = match t.prep_ready.take() {
+                Some(v) => Some(v),
+                None if !t.prep_pending.is_empty() => {
+                    let mut warps = Vec::new();
+                    for p in mem::take(&mut t.prep_pending) {
+                        warps.extend(self.join_sw("cvf_prep", p, true, &mut t.prof));
+                    }
+                    Some(warps)
+                }
+                None => None,
+            };
+            posted.push(warps.map(|warps| {
                 let f_half = t.feats.first().cloned().expect("FeFs ran");
                 let n_kf = t.n_kf;
-                self.call_sw("cvf_finish", &mut t.prof, move || {
+                self.link.post("cvf_finish", move || {
                     let ff = dequantize_tensor(&f_half);
                     quantize_tensor(&sw::cvf_finish(&ff, &warps, n_kf), e_cost)
                 })
-            }
-            None => QTensor::zeros(&[1, N_HYPOTHESES, hc, wc], e_cost),
-        };
-        t.tr("cost_q", &cost_q);
-        t.cost_q = Some(cost_q);
+            }));
+        }
+        let ov = Self::round_overlapped(ts);
+        for (t, p) in ts.iter_mut().zip(posted) {
+            let cost_q = match p {
+                Some(p) => self.join_sw("cvf_finish", p, ov, &mut t.prof),
+                None => QTensor::zeros(&[1, N_HYPOTHESES, hc, wc], e_cost),
+            };
+            t.tr("cost_q", &cost_q);
+            t.cost_q = Some(cost_q);
+        }
     }
 
-    /// HW: CVE (hidden-state correction still in flight).
-    fn stage_cve(&self, hw: &dyn HwBackend, t: &mut FrameTask) -> Result<()> {
-        let cost_q = t.cost_q.take().expect("CvfFinish ran");
-        let enc = self.run_hw(
-            hw,
-            self.handles.cve,
-            "cve",
-            &[&cost_q, &t.feats[1], &t.feats[2], &t.feats[3], &t.feats[4]],
-            &mut t.prof,
-        )?;
-        t.tr("e4_q", &enc[4]);
-        t.enc = enc;
+    /// HW: CVE, batched (hidden-state correction still in flight).
+    fn stage_cve(&self, hw: &dyn HwBackend, ts: &mut [FrameTask]) -> Result<()> {
+        let costs: Vec<QTensor> = ts
+            .iter_mut()
+            .map(|t| t.cost_q.take().expect("CvfFinish ran"))
+            .collect();
+        let (outs, a, b) = {
+            let batch: Vec<Vec<&QTensor>> = ts
+                .iter()
+                .zip(&costs)
+                .map(|(t, c)| {
+                    vec![c, &t.feats[1], &t.feats[2], &t.feats[3], &t.feats[4]]
+                })
+                .collect();
+            self.run_hw_batch(hw, self.handles.cve, &batch)?
+        };
+        for (t, enc) in ts.iter_mut().zip(outs) {
+            t.span_hw("cve", a, b);
+            t.tr("e4_q", &enc[4]);
+            t.enc = enc;
+        }
         Ok(())
     }
 
     /// Join the corrected hidden state (must precede CL).
-    fn stage_join_hidden_correction(&self, t: &mut FrameTask) {
-        let h_corr = match t.corr_ready.take() {
-            Some(v) => v,
-            None => {
-                let p = t.corr_pending.take().expect("correction posted");
-                self.join_sw("hidden_corr", p, true, &mut t.prof)
-            }
-        };
-        t.tr("hcorr_q", &h_corr);
-        t.h_corr = Some(h_corr);
+    fn stage_join_hidden_correction(&self, ts: &mut [FrameTask]) {
+        for t in ts.iter_mut() {
+            let h_corr = match t.corr_ready.take() {
+                Some(v) => v,
+                None => {
+                    let p = t.corr_pending.take().expect("correction posted");
+                    self.join_sw("hidden_corr", p, true, &mut t.prof)
+                }
+            };
+            t.tr("hcorr_q", &h_corr);
+            t.h_corr = Some(h_corr);
+        }
     }
 
-    /// ConvLSTM: HW gate conv / SW LN ping-pong.
+    /// ConvLSTM: batched HW gate/state/out convs, pooled SW LNs.
     fn stage_conv_lstm(
         &self,
         hw: &dyn HwBackend,
-        t: &mut FrameTask,
-        s: &mut StreamSession,
+        ts: &mut [FrameTask],
+        sessions: &mut [&mut StreamSession],
     ) -> Result<()> {
-        let h_corr = t.h_corr.take().expect("correction joined");
-        let gates = self.run_hw(
-            hw,
-            self.handles.cl_gates,
-            "cl_gates",
-            &[&t.enc[4], &h_corr],
-            &mut t.prof,
-        )?;
-        t.tr("gates_q", &gates[0]);
-        let gates_ln = self.sw_layer_norm(
-            "cl.ln_gates".into(),
-            &gates[0],
-            self.qp.aexp("cl.ln_gates"),
-            &mut t.prof,
-        );
-        let cl_state = self.run_hw(
-            hw,
-            self.handles.cl_state,
-            "cl_state",
-            &[&gates_ln, &s.c],
-            &mut t.prof,
-        )?;
-        let (c_new, o_gate) = (cl_state[0].clone(), cl_state[1].clone());
-        t.tr("cnew_q", &c_new);
-        let ln_c = self.sw_layer_norm(
-            "cl.ln_cell".into(),
-            &c_new,
-            self.qp.aexp("cl.ln_cell"),
-            &mut t.prof,
-        );
-        let h_new = self
-            .run_hw(
-                hw,
-                self.handles.cl_out,
-                "cl_out",
-                &[&ln_c, &o_gate],
-                &mut t.prof,
-            )?
-            .into_iter()
-            .next()
-            .expect("cl_out output");
-        t.tr("hnew_q", &h_new);
-        t.h_new = Some(h_new);
-        t.c_new = Some(c_new);
-        Ok(())
-    }
-
-    /// Decoder: HW conv segments / SW LNs + bilinear upsamples.
-    fn stage_decoder(&self, hw: &dyn HwBackend, t: &mut FrameTask) -> Result<()> {
-        let h_new = t.h_new.clone().expect("ConvLstm ran");
-        let mut feat_q: Option<QTensor> = None; // post-LN carry
-        let mut d_q: Option<QTensor> = None; // head sigmoid
-        for b in 0..5 {
-            let mut x = if b == 0 {
-                self.run_hw(
-                    hw,
-                    self.handles.cvd_entry[0],
-                    "cvd_entry",
-                    &[&h_new, &t.enc[4]],
-                    &mut t.prof,
-                )?
-            } else {
-                // SW: bilinear upsample carry feature + coarse depth
-                let carry = feat_q.take().expect("carry from block b-1");
-                let head = d_q.take().expect("head from block b-1");
-                let e_upd = self.qp.aexp(&format!("cvd.b{b}.upd"));
-                let (upf_q, upd_q) =
-                    self.call_sw("cvd_upsample", &mut t.prof, move || {
-                        let upf = upsample_bilinear2x(&dequantize_tensor(&carry));
-                        let upd = upsample_bilinear2x(&dequantize_tensor(&head));
-                        (
-                            quantize_tensor(&upf, carry.exp),
-                            quantize_tensor(&upd, e_upd),
-                        )
-                    });
-                self.run_hw(
-                    hw,
-                    self.handles.cvd_entry[b],
-                    "cvd_entry",
-                    &[&upf_q, &t.enc[4 - b], &upd_q],
-                    &mut t.prof,
-                )?
-            }
-            .into_iter()
-            .next()
-            .expect("cvd_entry output");
-            for i in 1..CVD_BODY_K3[b] {
-                let x_ln = self.sw_layer_norm(
-                    format!("cvd.b{b}.ln{}", i - 1),
-                    &x,
-                    self.qp.aexp(&format!("cvd.b{b}.ln{}", i - 1)),
-                    &mut t.prof,
-                );
-                x = self
-                    .run_hw(
-                        hw,
-                        self.handles.cvd_mid[b][i - 1],
-                        "cvd_mid",
-                        &[&x_ln],
-                        &mut t.prof,
-                    )?
-                    .into_iter()
-                    .next()
-                    .expect("cvd_mid output");
-            }
-            let x_ln = self.sw_layer_norm(
-                cvd_carry_name(b),
-                &x,
-                self.qp.aexp(&cvd_carry_name(b)),
-                &mut t.prof,
-            );
-            let head = self
-                .run_hw(
-                    hw,
-                    self.handles.cvd_head[b],
-                    "cvd_head",
-                    &[&x_ln],
-                    &mut t.prof,
-                )?
-                .into_iter()
-                .next()
-                .expect("cvd_head output");
-            t.tr(format!("head{b}_q"), &head);
-            d_q = Some(head);
-            feat_q = Some(x_ln);
+        let h_corrs: Vec<QTensor> = ts
+            .iter_mut()
+            .map(|t| t.h_corr.take().expect("correction joined"))
+            .collect();
+        let (outs, a, b) = {
+            let batch: Vec<Vec<&QTensor>> = ts
+                .iter()
+                .zip(&h_corrs)
+                .map(|(t, h)| vec![&t.enc[4], h])
+                .collect();
+            self.run_hw_batch(hw, self.handles.cl_gates, &batch)?
+        };
+        let mut gates: Vec<QTensor> = Vec::with_capacity(ts.len());
+        for (t, mut g) in ts.iter_mut().zip(outs) {
+            t.span_hw("cl_gates", a, b);
+            let g0 = g.swap_remove(0);
+            t.tr("gates_q", &g0);
+            gates.push(g0);
         }
-        t.head_q = d_q;
+        let gates_ln = self.sw_layer_norm_all(
+            ts,
+            "cl.ln_gates",
+            &gates,
+            self.qp.aexp("cl.ln_gates"),
+        );
+        let (outs, a, b) = {
+            let batch: Vec<Vec<&QTensor>> = gates_ln
+                .iter()
+                .zip(sessions.iter())
+                .map(|(g, s)| vec![g, &s.c])
+                .collect();
+            self.run_hw_batch(hw, self.handles.cl_state, &batch)?
+        };
+        let mut c_news: Vec<QTensor> = Vec::with_capacity(ts.len());
+        let mut o_gates: Vec<QTensor> = Vec::with_capacity(ts.len());
+        for (t, mut o) in ts.iter_mut().zip(outs) {
+            t.span_hw("cl_state", a, b);
+            let o_gate = o.swap_remove(1);
+            let c_new = o.swap_remove(0);
+            t.tr("cnew_q", &c_new);
+            c_news.push(c_new);
+            o_gates.push(o_gate);
+        }
+        let ln_cs = self.sw_layer_norm_all(
+            ts,
+            "cl.ln_cell",
+            &c_news,
+            self.qp.aexp("cl.ln_cell"),
+        );
+        let (outs, a, b) = {
+            let batch: Vec<Vec<&QTensor>> = ln_cs
+                .iter()
+                .zip(&o_gates)
+                .map(|(l, o)| vec![l, o])
+                .collect();
+            self.run_hw_batch(hw, self.handles.cl_out, &batch)?
+        };
+        for ((t, mut o), c_new) in ts.iter_mut().zip(outs).zip(c_news) {
+            t.span_hw("cl_out", a, b);
+            let h_new = o.swap_remove(0);
+            t.tr("hnew_q", &h_new);
+            t.h_new = Some(h_new);
+            t.c_new = Some(c_new);
+        }
         Ok(())
     }
 
-    /// SW: final upsample + depth un-normalisation.
-    fn stage_depth_out(&self, t: &mut FrameTask) {
-        let head = t.head_q.take().expect("Decoder ran");
-        let depth = self.call_sw("depth_out", &mut t.prof, move || {
-            sw::depth_from_head(&dequantize_tensor(&head))
-        });
-        t.depth = Some(depth);
+    /// Decoder: batched HW conv segments / pooled SW LNs + bilinear
+    /// upsamples.
+    fn stage_decoder(&self, hw: &dyn HwBackend, ts: &mut [FrameTask]) -> Result<()> {
+        let n = ts.len();
+        let mut feat_q: Vec<Option<QTensor>> = (0..n).map(|_| None).collect();
+        let mut d_q: Vec<Option<QTensor>> = (0..n).map(|_| None).collect();
+        for b in 0..5 {
+            let entry_outs = if b == 0 {
+                let (outs, s0, s1) = {
+                    let batch: Vec<Vec<&QTensor>> = ts
+                        .iter()
+                        .map(|t| {
+                            vec![t.h_new.as_ref().expect("ConvLstm ran"), &t.enc[4]]
+                        })
+                        .collect();
+                    self.run_hw_batch(hw, self.handles.cvd_entry[0], &batch)?
+                };
+                for t in ts.iter_mut() {
+                    t.span_hw("cvd_entry", s0, s1);
+                }
+                outs
+            } else {
+                // SW: post every stream's carry/depth upsample, join in
+                // round order
+                let e_upd = self.qp.aexp(&format!("cvd.b{b}.upd"));
+                let pendings: Vec<Pending<(QTensor, QTensor)>> = feat_q
+                    .iter_mut()
+                    .zip(d_q.iter_mut())
+                    .map(|(f, d)| {
+                        let carry = f.take().expect("carry from block b-1");
+                        let head = d.take().expect("head from block b-1");
+                        self.link.post("cvd_upsample", move || {
+                            let upf =
+                                upsample_bilinear2x(&dequantize_tensor(&carry));
+                            let upd =
+                                upsample_bilinear2x(&dequantize_tensor(&head));
+                            (
+                                quantize_tensor(&upf, carry.exp),
+                                quantize_tensor(&upd, e_upd),
+                            )
+                        })
+                    })
+                    .collect();
+                let ov = Self::round_overlapped(ts);
+                let ups: Vec<(QTensor, QTensor)> = ts
+                    .iter_mut()
+                    .zip(pendings)
+                    .map(|(t, p)| {
+                        self.join_sw("cvd_upsample", p, ov, &mut t.prof)
+                    })
+                    .collect();
+                let (outs, s0, s1) = {
+                    let batch: Vec<Vec<&QTensor>> = ts
+                        .iter()
+                        .zip(&ups)
+                        .map(|(t, (upf_q, upd_q))| {
+                            vec![upf_q, &t.enc[4 - b], upd_q]
+                        })
+                        .collect();
+                    self.run_hw_batch(hw, self.handles.cvd_entry[b], &batch)?
+                };
+                for t in ts.iter_mut() {
+                    t.span_hw("cvd_entry", s0, s1);
+                }
+                outs
+            };
+            let mut xs: Vec<QTensor> = entry_outs
+                .into_iter()
+                .map(|mut o| o.swap_remove(0))
+                .collect();
+            for i in 1..CVD_BODY_K3[b] {
+                let ln_name = format!("cvd.b{b}.ln{}", i - 1);
+                let e = self.qp.aexp(&ln_name);
+                let x_lns = self.sw_layer_norm_all(ts, &ln_name, &xs, e);
+                let (outs, s0, s1) = {
+                    let batch: Vec<Vec<&QTensor>> =
+                        x_lns.iter().map(|x| vec![x]).collect();
+                    self.run_hw_batch(hw, self.handles.cvd_mid[b][i - 1], &batch)?
+                };
+                for t in ts.iter_mut() {
+                    t.span_hw("cvd_mid", s0, s1);
+                }
+                xs = outs.into_iter().map(|mut o| o.swap_remove(0)).collect();
+            }
+            let carry_name = cvd_carry_name(b);
+            let e = self.qp.aexp(&carry_name);
+            let x_lns = self.sw_layer_norm_all(ts, &carry_name, &xs, e);
+            let (outs, s0, s1) = {
+                let batch: Vec<Vec<&QTensor>> =
+                    x_lns.iter().map(|x| vec![x]).collect();
+                self.run_hw_batch(hw, self.handles.cvd_head[b], &batch)?
+            };
+            for ((i, t), mut o) in ts.iter_mut().enumerate().zip(outs) {
+                t.span_hw("cvd_head", s0, s1);
+                let head = o.swap_remove(0);
+                t.tr(format!("head{b}_q"), &head);
+                d_q[i] = Some(head);
+            }
+            for (slot, x_ln) in feat_q.iter_mut().zip(x_lns) {
+                *slot = Some(x_ln);
+            }
+        }
+        for (t, d) in ts.iter_mut().zip(d_q) {
+            t.head_q = d;
+        }
+        Ok(())
+    }
+
+    /// SW: final upsample + depth un-normalisation, pooled across the
+    /// round.
+    fn stage_depth_out(&self, ts: &mut [FrameTask]) {
+        let pendings: Vec<Pending<TensorF>> = ts
+            .iter_mut()
+            .map(|t| {
+                let head = t.head_q.take().expect("Decoder ran");
+                self.link.post("depth_out", move || {
+                    sw::depth_from_head(&dequantize_tensor(&head))
+                })
+            })
+            .collect();
+        let ov = Self::round_overlapped(ts);
+        for (t, p) in ts.iter_mut().zip(pendings) {
+            let depth = self.join_sw("depth_out", p, ov, &mut t.prof);
+            t.depth = Some(depth);
+        }
     }
 
     /// KB insertion + session state update (SW bookkeeping).
-    fn stage_commit(&self, t: &mut FrameTask, s: &mut StreamSession) {
-        let t0 = t.prof.now();
-        // feats[0] is the half-resolution FS feature; CVE only reads
-        // feats[1..], so the keyframe buffer takes it without a copy
-        s.kb.maybe_insert(t.pose, t.feats.swap_remove(0));
-        t.prof.record("kb_update", Lane::Sw, t0);
-        s.h = t.h_new.take().expect("ConvLstm ran");
-        s.c = t.c_new.take().expect("ConvLstm ran");
-        s.depth_full = Arc::new(t.depth.clone().expect("DepthOut ran"));
-        s.pose_prev = Some(t.pose);
-        s.frames_done += 1;
+    fn stage_commit(
+        &self,
+        ts: &mut [FrameTask],
+        sessions: &mut [&mut StreamSession],
+    ) {
+        for (t, s) in ts.iter_mut().zip(sessions.iter_mut()) {
+            let t0 = t.prof.now();
+            // feats[0] is the half-resolution FS feature; CVE only reads
+            // feats[1..], so the keyframe buffer takes it without a copy
+            s.kb.maybe_insert(t.pose, t.feats.swap_remove(0));
+            t.prof.record("kb_update", Lane::Sw, t0);
+            s.h = t.h_new.take().expect("ConvLstm ran");
+            s.c = t.c_new.take().expect("ConvLstm ran");
+            s.depth_full = Arc::new(t.depth.clone().expect("DepthOut ran"));
+            s.pose_prev = Some(t.pose);
+            s.frames_done += 1;
+        }
     }
 }
 
@@ -843,5 +1029,37 @@ mod tests {
             h.cvd_mid.iter().map(|m| m.len()).collect::<Vec<_>>(),
             vec![1, 1, 1, 1, 0]
         );
+    }
+
+    #[test]
+    fn step_round_of_one_equals_step_session() {
+        use crate::data::dataset::Scene;
+        let backend = Arc::new(RefBackend::synthetic(23));
+        let qp = Arc::clone(backend.qp());
+        let engine = PipelineEngine::new(
+            backend as Arc<dyn HwBackend>,
+            qp,
+            PipelineOptions::default(),
+        )
+        .unwrap();
+        let scene = Scene::synthetic("round1", 3, 9);
+        let mut s_solo = engine.new_session(0);
+        let mut s_round = engine.new_session(1);
+        for i in 0..3 {
+            let img = scene.normalized_image(i);
+            let solo = engine
+                .step_session(&mut s_solo, &img, &scene.poses[i])
+                .unwrap();
+            let mut sess = [&mut s_round];
+            let round = engine
+                .step_round(&mut sess, &[(&img, scene.poses[i])])
+                .unwrap();
+            assert_eq!(round.len(), 1);
+            assert_eq!(
+                solo.depth.data(),
+                round[0].depth.data(),
+                "frame {i}: a 1-wide round diverged from solo stepping"
+            );
+        }
     }
 }

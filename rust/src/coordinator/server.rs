@@ -15,7 +15,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::metrics::{AggregateThroughput, StreamThroughput};
+use crate::metrics::{AggregateThroughput, BatchStats, StreamThroughput};
 use crate::model::weights::QuantParams;
 use crate::poses::Mat4;
 use crate::runtime::{HwBackend, RefBackend};
@@ -30,6 +30,7 @@ pub struct StreamServer {
     engine: PipelineEngine,
     sessions: Vec<StreamSession>,
     throughput: Vec<StreamThroughput>,
+    batches: BatchStats,
     rr_next: usize,
     started: Instant,
 }
@@ -44,6 +45,7 @@ impl StreamServer {
             engine: PipelineEngine::new(backend, qp, opts)?,
             sessions: Vec::new(),
             throughput: Vec::new(),
+            batches: BatchStats::default(),
             rr_next: 0,
             started: Instant::now(),
         })
@@ -107,29 +109,74 @@ impl StreamServer {
     }
 
     /// One scheduling round: every `(stream, frame)` pair executes once,
-    /// in round-robin order rotated one slot per round so no stream is
-    /// permanently served first. Returns `(stream id, output)` in the
-    /// order served.
+    /// advanced in **lockstep** so each HW segment of the round runs as a
+    /// single batched `HwBackend::run_batch` call and the per-stream SW
+    /// ops spread over the worker pool (see `PipelineEngine::step_round`).
+    /// The round order is rotated one slot per round so no stream is
+    /// permanently first in the batch/output order. Returns
+    /// `(stream id, output)` in the order served — every output is
+    /// bit-identical to serving the streams one `step_stream` at a time.
     pub fn run_round(
         &mut self,
         inputs: &[(usize, &TensorF, &Mat4)],
     ) -> Result<Vec<(usize, FrameOutput)>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
         let mut order: Vec<usize> = (0..inputs.len()).collect();
-        if !inputs.is_empty() {
-            order.rotate_left(self.rr_next % inputs.len());
-            self.rr_next = self.rr_next.wrapping_add(1);
+        order.rotate_left(self.rr_next % inputs.len());
+        self.rr_next = self.rr_next.wrapping_add(1);
+        let (outs, elapsed) = {
+            // check the ids out of the session table (rejects unknown and
+            // duplicated stream ids) in rotated round order
+            let mut slots: Vec<Option<&mut StreamSession>> =
+                self.sessions.iter_mut().map(Some).collect();
+            let mut sessions: Vec<&mut StreamSession> =
+                Vec::with_capacity(inputs.len());
+            let mut frames: Vec<(&TensorF, Mat4)> =
+                Vec::with_capacity(inputs.len());
+            for &idx in &order {
+                let (sid, img, pose) = inputs[idx];
+                let session = slots
+                    .get_mut(sid)
+                    .and_then(|s| s.take())
+                    .with_context(|| {
+                        format!("stream {sid} not open (or repeated in round)")
+                    })?;
+                sessions.push(session);
+                frames.push((img, *pose));
+            }
+            let t0 = Instant::now();
+            let outs = self.engine.step_round(&mut sessions, &frames)?;
+            (outs, t0.elapsed().as_secs_f64())
+        };
+        let width = inputs.len();
+        self.batches.record_round(width);
+        // serving-thread time is shared by the whole batch: attribute it
+        // evenly so aggregate busy-fps stays comparable across modes
+        let share = elapsed / width as f64;
+        let mut result = Vec::with_capacity(width);
+        for (&idx, out) in order.iter().zip(outs) {
+            let sid = inputs[idx].0;
+            self.throughput[sid].record_frame(
+                share,
+                out.profile.hw_busy(),
+                out.profile.sw_busy(),
+                out.profile.overlapped_sw(),
+            );
+            result.push((sid, out));
         }
-        let mut out = Vec::with_capacity(inputs.len());
-        for idx in order {
-            let (sid, img, pose) = inputs[idx];
-            out.push((sid, self.step_stream(sid, img, pose)?));
-        }
-        Ok(out)
+        Ok(result)
     }
 
     /// Per-stream serving statistics.
     pub fn stream_throughput(&self, id: usize) -> &StreamThroughput {
         &self.throughput[id]
+    }
+
+    /// Batched-round accounting (rounds served, mean/max batch width).
+    pub fn batch_stats(&self) -> &BatchStats {
+        &self.batches
     }
 
     /// Aggregate across all streams since server start.
@@ -169,6 +216,14 @@ impl StreamServer {
             a.wall_fps(),
             self.engine.backend().kind(),
         ));
+        if self.batches.rounds > 0 {
+            out.push_str(&format!(
+                "batched rounds: {} (mean width {:.1}, max {})\n",
+                self.batches.rounds,
+                self.batches.mean_width(),
+                self.batches.max_width,
+            ));
+        }
         out
     }
 }

@@ -36,36 +36,47 @@
 //! (`model`), the FPGA cycle/resource model behind Tables II/III
 //! (`hwsim`, `codesign`), and the report generators (`report`).
 //!
-//! # Ops layer (the conv fast path, PR 2)
+//! # Ops layer (the op-stack fast path, PR 2 + PR 3)
 //!
-//! Every backend above ultimately lands in `ops`; the quantized conv
-//! stack there is the serving hot path and is organised around three
-//! ideas (measured in `BENCH_conv.json` by `benches/conv.rs`):
+//! Every backend above ultimately lands in `ops`; the whole per-frame op
+//! stack is the serving hot path and is organised around five ideas
+//! (measured in `BENCH_conv.json` / `BENCH_ops.json` by `benches/conv.rs`
+//! and `benches/elementwise.rs`):
 //!
 //! * **Packed weights** — [`ops::PackedConv`] is built once per layer at
 //!   load time (`model::weights`): a per-output-channel tap list,
 //!   kernel-major within each input channel, with zero-weight taps
 //!   dropped. The per-frame kernels never re-read the `(OC,IC,k,k)`
 //!   layout.
-//! * **Interior/border split** — padding bounds checks are hoisted out of
-//!   the inner loops analytically (`valid_range` in `ops::conv`): the
-//!   interior is a branch-free slice FMA, the `k/2`-wide border is
-//!   handled by clipping each tap's output range. The original guarded
-//!   loops survive as `conv2d*_ref`, the executable specification the
-//!   property tests (`rust/tests/conv_exact.rs`) pin against.
-//! * **Scratch arena + channel threads** — [`ops::Arena`] owns the
-//!   accumulators and a freelist of activation payloads (lifetime rules
-//!   in `ops::arena`); `QuantModel`/`FloatModel` thread it through every
-//!   conv and recycle chain intermediates. Output channels stripe over
-//!   `Arena::threads` scoped workers (`PipelineOptions::conv_threads`),
-//!   bit-identically for any thread count.
-//!
-//! Where a future SIMD/batching PR plugs in: the branch-free interior row
-//! loop in `ops::conv::accum_channel_q` is the vectorisation point (swap
-//! the scalar zip for an explicit i16xN widening-multiply kernel without
-//! touching packing or drivers); an N-stream batched backend adds a
-//! batch dimension to the arena accumulators and reuses the same tap
-//! lists, since `PackedConv` is input-independent.
+//! * **Interior/border split + SIMD lanes** — padding bounds checks are
+//!   hoisted out of the inner loops analytically (`valid_range` in
+//!   `ops::conv`); the branch-free interior row is an i16→i32
+//!   widening-multiply lane kernel (`ops::simd::fma_row_i16`): a
+//!   fixed-width chunked form the autovectorizer lowers to
+//!   `pmaddwd`/`smlal`-class code, with optional explicit SSE2/NEON
+//!   bodies behind the `arch-simd` feature. The original guarded loops
+//!   survive as `conv2d*_ref`, the executable specification the property
+//!   tests (`rust/tests/conv_exact.rs`, `rust/tests/ops_exact.rs`) pin
+//!   against.
+//! * **Scratch arena everywhere** — [`ops::Arena`] owns the conv
+//!   accumulators plus i16/f32 payload freelists (lifetime + checkout
+//!   rules in `ops::arena`). Beyond the convs, every elementwise /
+//!   sampling / norm op has an `_into` core and an arena twin
+//!   (`quant::add_q_arena`, `concat_q_arena`, `requant_owned`,
+//!   `ops::upsample_nearest2x_i16_arena`, `ops::layer_norm_into`, …), so
+//!   the `QuantModel`/`FloatModel` chains run allocation-free per frame
+//!   in steady state — only outputs that escape to the caller allocate.
+//! * **Channel threads** — output channels stripe over `Arena::threads`
+//!   scoped workers (`PipelineOptions::conv_threads`), bit-identically
+//!   for any thread count.
+//! * **Batch dimension** — `ops::conv2d_q_packed_batch` runs one packed
+//!   conv over N streams' inputs at once (`(batch, channel)` jobs over
+//!   the same workers, one thread-scope per conv); `HwBackend::run_batch`
+//!   lifts this to whole segments (real batched impl in `RefBackend`,
+//!   loop fallback elsewhere) and `StreamServer::run_round` advances a
+//!   round of streams in lockstep so every HW segment call is batched
+//!   and per-stream SW ops spread over the extern worker pool. Batching
+//!   is latency-only: every stream stays bit-identical to solo serving.
 //!
 //! **L2/L1 (python/, build-time only)** — the DeepVideoMVS compute graph
 //! in JAX with quantized Pallas kernels, AOT-lowered to the

@@ -55,6 +55,35 @@ impl StreamThroughput {
     }
 }
 
+/// Batched-round accounting: how many scheduling rounds the server ran
+/// and how wide they were (frames per `HwBackend::run_batch` lockstep).
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    /// Scheduling rounds served (`StreamServer::run_round` calls).
+    pub rounds: usize,
+    /// Frames served inside those rounds.
+    pub frames: usize,
+    /// Widest round seen.
+    pub max_width: usize,
+}
+
+impl BatchStats {
+    pub fn record_round(&mut self, width: usize) {
+        self.rounds += 1;
+        self.frames += width;
+        self.max_width = self.max_width.max(width);
+    }
+
+    /// Mean frames per round (the effective batch width).
+    pub fn mean_width(&self) -> f64 {
+        if self.rounds > 0 {
+            self.frames as f64 / self.rounds as f64
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Aggregate serving statistics across all streams of a server.
 #[derive(Clone, Debug, Default)]
 pub struct AggregateThroughput {
@@ -177,6 +206,18 @@ mod tests {
         assert_eq!(agg.frames, 2);
         assert!((agg.busy_fps() - 2.0).abs() < 1e-12);
         assert!((agg.wall_fps() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_stats_track_width() {
+        let mut b = BatchStats::default();
+        assert_eq!(b.mean_width(), 0.0);
+        b.record_round(4);
+        b.record_round(2);
+        assert_eq!(b.rounds, 2);
+        assert_eq!(b.frames, 6);
+        assert_eq!(b.max_width, 4);
+        assert!((b.mean_width() - 3.0).abs() < 1e-12);
     }
 
     #[test]

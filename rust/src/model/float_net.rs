@@ -4,8 +4,8 @@
 use crate::config::{self, CVD_BODY_K3, CVE_BODY_KERNELS, CVE_DOWN_KERNEL, CL_CH};
 use crate::kb::KeyframeBuffer;
 use crate::ops::{
-    conv2d_dw_packed, conv2d_packed, elu_tensor, layer_norm, relu_inplace,
-    sigmoid_tensor, upsample_bilinear2x, upsample_nearest2x, Arena,
+    conv2d_dw_packed, conv2d_packed, elu_inplace, layer_norm, relu_inplace,
+    sigmoid_inplace, upsample_bilinear2x_arena, upsample_nearest2x, Arena,
 };
 use crate::poses::Mat4;
 use crate::tensor::TensorF;
@@ -89,46 +89,71 @@ impl<'a> FloatModel<'a> {
         }
         match spec.act {
             Act::Relu => relu_inplace(&mut y),
-            Act::Sigmoid => y = sigmoid_tensor(&y),
+            Act::Sigmoid => sigmoid_inplace(&mut y),
             Act::None => {}
         }
         y
     }
 
+    /// As [`FloatModel::conv`], consuming the input and recycling its
+    /// payload into the scratch arena (the float chain's allocation-free
+    /// steady state).
+    fn conv_owned(&self, name: &str, x: TensorF) -> TensorF {
+        let y = self.conv(name, &x);
+        self.scratch.lock().unwrap().recycle_tf(x);
+        y
+    }
+
+    /// Recycle a spent float intermediate's payload.
+    fn recycle(&self, x: TensorF) {
+        self.scratch.lock().unwrap().recycle_tf(x);
+    }
+
     /// FE + FS: image -> 5 FPN pyramid features (1/2 .. 1/32).
     pub fn fe_fs(&self, img: &TensorF) -> Vec<TensorF> {
         let (_, wiring) = fe_specs();
-        let mut x = self.conv("fe.stem", img);
-        x = self.conv("fe.sep.dw", &x);
-        x = self.conv("fe.sep.pw", &x);
+        let stem = self.conv("fe.stem", img);
+        let sep = self.conv_owned("fe.sep.dw", stem);
+        let mut x = self.conv_owned("fe.sep.pw", sep);
         let mut taps = vec![x.clone()];
         let mut wi = 0;
         for (si, st) in config::FE_STAGES.iter().enumerate() {
             for _ri in 0..st.repeats {
                 let base = &wiring[wi].base;
-                let inp = x.clone();
-                x = self.conv(&format!("{base}.exp"), &x);
-                x = self.conv(&format!("{base}.dw"), &x);
-                x = self.conv(&format!("{base}.pw"), &x);
+                let y = self.conv(&format!("{base}.exp"), &x);
+                let y = self.conv_owned(&format!("{base}.dw"), y);
+                let mut y = self.conv_owned(&format!("{base}.pw"), y);
+                let inp = x;
                 if wiring[wi].residual {
-                    x = inp.add(&x);
+                    // inp + y; IEEE add is commutative, so accumulating
+                    // in place is bit-identical to the old `inp.add(&y)`
+                    y.add_assign(&inp);
                 }
+                self.recycle(inp);
+                x = y;
                 wi += 1;
             }
             if config::FE_TAP_STAGES.contains(&(si as isize)) {
                 taps.push(x.clone());
             }
         }
+        self.recycle(x);
         assert_eq!(taps.len(), 5);
         let lats: Vec<TensorF> = (0..5)
             .map(|i| self.conv(&format!("fs.lat{i}"), &taps[i]))
             .collect();
+        for t in taps {
+            self.recycle(t);
+        }
         let mut feats: Vec<Option<TensorF>> = vec![None; 5];
         feats[4] = Some(lats[4].clone());
         for i in (0..4).rev() {
-            let up = upsample_nearest2x(feats[i + 1].as_ref().unwrap());
-            let s = lats[i].add(&up);
-            feats[i] = Some(self.conv(&format!("fs.smooth{i}"), &s));
+            let mut up = upsample_nearest2x(feats[i + 1].as_ref().unwrap());
+            up.add_assign(&lats[i]);
+            feats[i] = Some(self.conv_owned(&format!("fs.smooth{i}"), up));
+        }
+        for l in lats {
+            self.recycle(l);
         }
         feats.into_iter().map(|f| f.unwrap()).collect()
     }
@@ -139,33 +164,40 @@ impl<'a> FloatModel<'a> {
         let mut x = cost.clone();
         for lv in 0..5 {
             if CVE_DOWN_KERNEL[lv].is_some() {
-                x = self.conv(&format!("cve.l{lv}.down"), &x);
-                x = TensorF::concat_channels(&[&x, &feats[lv]]);
+                let down = self.conv_owned(&format!("cve.l{lv}.down"), x);
+                x = TensorF::concat_channels(&[&down, &feats[lv]]);
+                self.recycle(down);
             }
             for bi in 0..CVE_BODY_KERNELS[lv].len() {
-                x = self.conv(&format!("cve.l{lv}.c{bi}"), &x);
+                x = self.conv_owned(&format!("cve.l{lv}.c{bi}"), x);
             }
             outs.push(x.clone());
         }
+        self.recycle(x);
         outs
     }
 
     /// ConvLSTM cell. Returns (h', c').
     pub fn cl(&self, x: &TensorF, h: &TensorF, c: &TensorF) -> (TensorF, TensorF) {
         let cat = TensorF::concat_channels(&[x, h]);
-        let gates = self.conv("cl.gates", &cat);
+        let gates = self.conv_owned("cl.gates", cat);
         let lnp = self.params.ln("cl.ln_gates");
         let gates = layer_norm(&gates, &lnp.gamma, &lnp.beta);
         let cc = CL_CH;
-        let gi = sigmoid_tensor(&gates.slice_channels(0, cc));
-        let gf = sigmoid_tensor(&gates.slice_channels(cc, 2 * cc));
-        let gg = elu_tensor(&gates.slice_channels(2 * cc, 3 * cc));
-        let go = sigmoid_tensor(&gates.slice_channels(3 * cc, 4 * cc));
+        let mut gi = gates.slice_channels(0, cc);
+        sigmoid_inplace(&mut gi);
+        let mut gf = gates.slice_channels(cc, 2 * cc);
+        sigmoid_inplace(&mut gf);
+        let mut gg = gates.slice_channels(2 * cc, 3 * cc);
+        elu_inplace(&mut gg);
+        let mut go = gates.slice_channels(3 * cc, 4 * cc);
+        sigmoid_inplace(&mut go);
         let c_new = gf.mul(c).add(&gi.mul(&gg));
         let lnc = self.params.ln("cl.ln_cell");
-        let ln_c = layer_norm(&c_new, &lnc.gamma, &lnc.beta);
-        let h_new = go.mul(&elu_tensor(&ln_c));
-        (h_new, c_new)
+        let mut ln_c = layer_norm(&c_new, &lnc.gamma, &lnc.beta);
+        elu_inplace(&mut ln_c);
+        go.mul_assign(&ln_c);
+        (go, c_new)
     }
 
     /// Decoder: hidden state + encoder skips -> 5 sigmoid heads
@@ -178,19 +210,35 @@ impl<'a> FloatModel<'a> {
             let x0 = if b == 0 {
                 TensorF::concat_channels(&[h, &enc[4]])
             } else {
-                let upf = upsample_bilinear2x(feat.as_ref().unwrap());
-                let upd = upsample_bilinear2x(d.as_ref().unwrap());
-                TensorF::concat_channels(&[&upf, &enc[4 - b], &upd])
+                let (upf, upd) = {
+                    let mut arena = self.scratch.lock().unwrap();
+                    (
+                        upsample_bilinear2x_arena(
+                            feat.as_ref().unwrap(),
+                            &mut arena,
+                        ),
+                        upsample_bilinear2x_arena(d.as_ref().unwrap(), &mut arena),
+                    )
+                };
+                let x0 = TensorF::concat_channels(&[&upf, &enc[4 - b], &upd]);
+                self.recycle(upf);
+                self.recycle(upd);
+                x0
             };
-            let mut x = self.conv(&format!("cvd.b{b}.c3e"), &x0);
+            let mut x = self.conv_owned(&format!("cvd.b{b}.c3e"), x0);
             for i in 0..CVD_BODY_K3[b] {
-                x = self.conv(&super::specs::cvd_body_name(b, i), &x);
+                let y = self.conv_owned(&super::specs::cvd_body_name(b, i), x);
                 let lnp = self.params.ln(&format!("cvd.b{b}.ln{i}"));
-                x = layer_norm(&x, &lnp.gamma, &lnp.beta);
+                x = layer_norm(&y, &lnp.gamma, &lnp.beta);
+                self.recycle(y);
             }
-            feat = Some(x.clone());
-            let head = self.conv(&format!("cvd.b{b}.head"), &x);
-            d = Some(head.clone());
+            if let Some(old) = feat.replace(x.clone()) {
+                self.recycle(old);
+            }
+            let head = self.conv_owned(&format!("cvd.b{b}.head"), x);
+            if let Some(old) = d.replace(head.clone()) {
+                self.recycle(old);
+            }
             heads.push(head);
         }
         heads

@@ -7,6 +7,19 @@
 //! artifacts (`seg_*` in model.py), so the coordinator can swap any
 //! segment between "execute the artifact on PJRT" and "run the Rust
 //! mirror" — which is also how the extern-overhead ablation works.
+//!
+//! # Per-frame allocation discipline (PR 3)
+//!
+//! Every segment mirror draws its intermediates from the model's scratch
+//! [`Arena`] (conv accumulators, elementwise/upsample/LUT payloads, LN
+//! float scratch) and recycles them before returning: in steady state the
+//! only fresh allocations per frame are the segment outputs that escape
+//! to the caller. The `seg_*_batch` twins run the same math over N
+//! streams at once, batching every conv through one
+//! [`conv2d_q_packed_batch`] call (shared tap lists, one thread-scope per
+//! conv) while the cheap elementwise glue loops per stream — each batch
+//! element is bit-identical to the solo segment (pinned by
+//! `rust/tests/ops_exact.rs`).
 
 use crate::config::{
     self, CVD_BODY_K3, CVE_BODY_KERNELS, CVE_DOWN_KERNEL, CL_CH,
@@ -14,14 +27,15 @@ use crate::config::{
 };
 use crate::kb::KeyframeBuffer;
 use crate::ops::{
-    conv2d_dw_q_packed, conv2d_q_packed, layer_norm, upsample_bilinear2x,
-    upsample_nearest2x_i16, Arena,
+    conv2d_dw_q_packed, conv2d_q_packed, conv2d_q_packed_batch, layer_norm,
+    layer_norm_into, upsample_bilinear2x, upsample_nearest2x_i16_arena, Arena,
 };
 use crate::poses::Mat4;
 use crate::quant::{
-    add_q, concat_q, dequantize_tensor, mul_q, quantize_tensor, QTensor,
+    add_q_arena, concat_q_arena, dequantize_slice, dequantize_tensor, mul_q_arena,
+    quantize_slice, quantize_tensor, ActLut, QTensor,
 };
-use crate::tensor::TensorF;
+use crate::tensor::{Tensor, TensorF};
 
 use super::specs::{cvd_carry_name, cve_out_name, fe_specs};
 use super::sw;
@@ -49,7 +63,8 @@ pub fn qconv(qp: &QuantParams, name: &str, x: &QTensor, out_exp: i32,
 }
 
 /// The SW layer-norm op at an extern boundary: dequant -> float LN ->
-/// requant (paper: LN stays on the CPU in float for precision).
+/// requant (paper: LN stays on the CPU in float for precision). The
+/// allocating spec; `QuantModel::ln` is the arena-routed twin.
 pub fn ln_sw(qp: &QuantParams, name: &str, x: &QTensor, out_exp: i32) -> QTensor {
     let xf = dequantize_tensor(x);
     let p = qp.ln(name);
@@ -57,12 +72,18 @@ pub fn ln_sw(qp: &QuantParams, name: &str, x: &QTensor, out_exp: i32) -> QTensor
     quantize_tensor(&y, out_exp)
 }
 
+/// Borrow every element of an owned batch (the batched mirrors pass
+/// `&[&QTensor]` down to the conv kernels).
+fn refs(v: &[QTensor]) -> Vec<&QTensor> {
+    v.iter().collect()
+}
+
 /// Quantized model with resolved specs. Owns (a share of) its parameters
 /// so backends can hold it without a self-referential borrow, plus the
-/// conv scratch arena (accumulators + recycled payloads, shared across
+/// op scratch arena (accumulators + recycled payloads, shared across
 /// layers and frames). The arena sits behind a `Mutex` so `&self` segment
 /// methods stay shareable (`RefBackend` is used behind `Arc<dyn
-/// HwBackend>`); the lock is per conv call and uncontended in practice.
+/// HwBackend>`); the lock is per op call and uncontended in practice.
 pub struct QuantModel {
     pub qp: std::sync::Arc<QuantParams>,
     specs: Vec<super::specs::ConvSpec>,
@@ -120,12 +141,15 @@ impl QuantModel {
         self.scratch.lock().unwrap().threads()
     }
 
-    fn conv(&self, name: &str, x: &QTensor) -> QTensor {
-        let spec = self
-            .specs
+    fn spec(&self, name: &str) -> &super::specs::ConvSpec {
+        self.specs
             .iter()
             .find(|s| s.name == name)
-            .unwrap_or_else(|| panic!("unknown conv '{name}'"));
+            .unwrap_or_else(|| panic!("unknown conv '{name}'"))
+    }
+
+    fn conv(&self, name: &str, x: &QTensor) -> QTensor {
+        let spec = self.spec(name);
         let relu = spec.act == super::specs::Act::Relu;
         let mut arena = self.scratch.lock().unwrap();
         qconv(&self.qp, name, x, self.qp.aexp(name), relu, spec.dw,
@@ -142,15 +166,39 @@ impl QuantModel {
     }
 
     fn conv_to(&self, name: &str, x: &QTensor, out_exp: i32) -> QTensor {
-        let spec = self.specs.iter().find(|s| s.name == name).unwrap();
+        let spec = self.spec(name);
         let mut arena = self.scratch.lock().unwrap();
         qconv(&self.qp, name, x, out_exp, false, spec.dw, spec.stride,
               &mut arena)
     }
 
-    /// Recycle a spent intermediate's payload for later conv outputs.
+    /// Recycle a spent intermediate's payload for later op outputs.
     fn recycle(&self, x: QTensor) {
         self.scratch.lock().unwrap().recycle_q(x);
+    }
+
+    /// Arena-backed clone for chain taps that must outlive their
+    /// producer (the allocation-free form of `x.clone()`).
+    fn dup(&self, x: &QTensor) -> QTensor {
+        self.scratch.lock().unwrap().duplicate_q(x)
+    }
+
+    /// SW layer norm with every temporary (dequant floats, LN output,
+    /// requant payload) drawn from the scratch arena. Bit-identical to
+    /// [`ln_sw`].
+    fn ln(&self, name: &str, x: &QTensor, out_exp: i32) -> QTensor {
+        let p = self.qp.ln(name);
+        let mut arena = self.scratch.lock().unwrap();
+        let mut xf = arena.take_f32(x.t.len());
+        dequantize_slice(x.t.data(), x.exp, &mut xf);
+        let xt = Tensor::from_vec(x.shape(), xf);
+        let mut yf = arena.take_f32(x.t.len());
+        layer_norm_into(&xt, &p.gamma, &p.beta, &mut yf);
+        let mut data = arena.take_i16(x.t.len());
+        quantize_slice(&yf, out_exp, &mut data);
+        arena.recycle_f32(yf);
+        arena.recycle_tf(xt);
+        QTensor { t: Tensor::from_vec(x.shape(), data), exp: out_exp }
     }
 
     /// Quantize a normalised image to the calibrated input exponent.
@@ -168,7 +216,7 @@ impl QuantModel {
         let stem = self.conv("fe.stem", img_q);
         let sep = self.conv_owned("fe.sep.dw", stem);
         let mut x = self.conv_owned("fe.sep.pw", sep);
-        let mut taps = vec![x.clone()];
+        let mut taps = vec![self.dup(&x)];
         let mut wi = 0;
         for (si, st) in config::FE_STAGES.iter().enumerate() {
             for _ri in 0..st.repeats {
@@ -177,11 +225,12 @@ impl QuantModel {
                 let y = self.conv_owned(&format!("{base}.dw"), y);
                 let y = self.conv_owned(&format!("{base}.pw"), y);
                 // the block input is only needed for the residual; either
-                // way it retires here (taps hold their own clones)
+                // way it retires here (taps hold their own copies)
                 let inp = x;
                 x = if wiring[wi].residual {
+                    let e = self.qp.aexp(&format!("{base}.addout"));
                     let sum =
-                        add_q(&inp, &y, self.qp.aexp(&format!("{base}.addout")));
+                        self.with_arena(|a| add_q_arena(&inp, &y, e, a));
                     self.recycle(y);
                     sum
                 } else {
@@ -191,7 +240,7 @@ impl QuantModel {
                 wi += 1;
             }
             if config::FE_TAP_STAGES.contains(&(si as isize)) {
-                taps.push(x.clone());
+                taps.push(self.dup(&x));
             }
         }
         self.recycle(x);
@@ -202,15 +251,19 @@ impl QuantModel {
             self.recycle(t);
         }
         let mut feats: Vec<Option<QTensor>> = vec![None; 5];
-        feats[4] = Some(lats[4].clone());
+        feats[4] = Some(self.dup(&lats[4]));
         for i in (0..4).rev() {
             let prev = feats[i + 1].as_ref().unwrap();
-            let up = QTensor {
-                t: upsample_nearest2x_i16(&prev.t),
-                exp: prev.exp,
-            };
-            let s = add_q(&up, &lats[i], self.qp.aexp(&format!("fs.add{i}")));
-            self.recycle(up);
+            let e = self.qp.aexp(&format!("fs.add{i}"));
+            let s = self.with_arena(|a| {
+                let up = QTensor {
+                    t: upsample_nearest2x_i16_arena(&prev.t, a),
+                    exp: prev.exp,
+                };
+                let s = add_q_arena(&up, &lats[i], e, a);
+                a.recycle_q(up);
+                s
+            });
             feats[i] = Some(self.conv_owned(&format!("fs.smooth{i}"), s));
         }
         for l in lats {
@@ -224,20 +277,19 @@ impl QuantModel {
     pub fn seg_cve(&self, cost_q: &QTensor, feats: &[&QTensor]) -> Vec<QTensor> {
         assert_eq!(feats.len(), 4, "seg_cve expects f1..f4");
         let mut outs = Vec::with_capacity(5);
-        let mut x = cost_q.clone();
+        let mut x = self.dup(cost_q);
         for lv in 0..5 {
             if CVE_DOWN_KERNEL[lv].is_some() {
                 let down = self.conv_owned(&format!("cve.l{lv}.down"), x);
-                x = concat_q(
-                    &[&down, feats[lv - 1]],
-                    self.qp.aexp(&format!("cve.l{lv}.cat")),
-                );
+                let e = self.qp.aexp(&format!("cve.l{lv}.cat"));
+                x = self
+                    .with_arena(|a| concat_q_arena(&[&down, feats[lv - 1]], e, a));
                 self.recycle(down);
             }
             for bi in 0..CVE_BODY_KERNELS[lv].len() {
                 x = self.conv_owned(&format!("cve.l{lv}.c{bi}"), x);
             }
-            outs.push(x.clone());
+            outs.push(self.dup(&x));
         }
         self.recycle(x);
         outs
@@ -245,38 +297,60 @@ impl QuantModel {
 
     /// Segment `cl_gates`: concat(e4, corrected hidden) -> gate conv.
     pub fn seg_cl_gates(&self, e4: &QTensor, h_corr: &QTensor) -> QTensor {
-        let cat = concat_q(&[e4, h_corr], self.qp.aexp("cl.cat"));
-        self.conv("cl.gates", &cat)
+        let e = self.qp.aexp("cl.cat");
+        let cat = self.with_arena(|a| concat_q_arena(&[e4, h_corr], e, a));
+        let y = self.conv("cl.gates", &cat);
+        self.recycle(cat);
+        y
     }
 
-    /// Segment `cl_state`: post-LN gates + cell -> (c_new, o_gate).
+    /// Segment `cl_state`: post-LN gates + cell -> (c_new, o_gate). The
+    /// four gate LUTs read their channel range straight out of the packed
+    /// gates payload — no slice tensors are materialised.
     pub fn seg_cl_state(&self, gates_ln: &QTensor, c: &QTensor) -> (QTensor, QTensor) {
         let cc = CL_CH;
-        let sl: Vec<QTensor> = (0..4)
-            .map(|i| QTensor {
-                t: gates_ln.t.slice_channels(i * cc, (i + 1) * cc),
-                exp: gates_ln.exp,
-            })
-            .collect();
-        let gi = self.qp.lut_sigmoid.apply(&sl[0]);
-        let gf = self.qp.lut_sigmoid.apply(&sl[1]);
-        let gg = self.qp.lut_elu.apply(&sl[2]);
-        let go = self.qp.lut_sigmoid.apply(&sl[3]);
+        let (_, gc, h, w) = gates_ln.t.nchw();
+        debug_assert_eq!(gc, 4 * cc, "gates hold 4 stacked channel groups");
+        let hw = h * w;
+        let gd = gates_ln.t.data();
+        let mut arena = self.scratch.lock().unwrap();
+        let gate = |i: usize, lut: &ActLut, a: &mut Arena| -> QTensor {
+            let mut data = a.take_i16(cc * hw);
+            lut.apply_into(
+                &gd[i * cc * hw..(i + 1) * cc * hw],
+                gates_ln.exp,
+                &mut data,
+            );
+            QTensor { t: Tensor::from_vec(&[1, cc, h, w], data), exp: lut.out_exp }
+        };
+        let gi = gate(0, &self.qp.lut_sigmoid, &mut arena);
+        let gf = gate(1, &self.qp.lut_sigmoid, &mut arena);
+        let gg = gate(2, &self.qp.lut_elu, &mut arena);
+        let go = gate(3, &self.qp.lut_sigmoid, &mut arena);
         let e_c = self.qp.aexp("cl.cnew");
-        let fc = mul_q(&gf, c, e_c);
-        let ig = mul_q(&gi, &gg, e_c);
-        (add_q(&fc, &ig, e_c), go)
+        let fc = mul_q_arena(&gf, c, e_c, &mut arena);
+        let ig = mul_q_arena(&gi, &gg, e_c, &mut arena);
+        let c_new = add_q_arena(&fc, &ig, e_c, &mut arena);
+        for q in [gi, gf, gg, fc, ig] {
+            arena.recycle_q(q);
+        }
+        (c_new, go)
     }
 
     /// Segment `cl_out`: ELU(LN(c')) * o -> h'.
     pub fn seg_cl_out(&self, ln_c: &QTensor, o: &QTensor) -> QTensor {
-        let elu_c = self.qp.lut_elu.apply(ln_c);
-        mul_q(o, &elu_c, self.qp.aexp("cl.hnew"))
+        let e = self.qp.aexp("cl.hnew");
+        let mut arena = self.scratch.lock().unwrap();
+        let elu_c = self.qp.lut_elu.apply_arena(ln_c, &mut arena);
+        let h = mul_q_arena(o, &elu_c, e, &mut arena);
+        arena.recycle_q(elu_c);
+        h
     }
 
     /// Segment `cvd_b{b}_entry`: concat -> conv3 entry -> conv5 (pre-LN).
     pub fn seg_cvd_entry(&self, b: usize, parts: &[&QTensor]) -> QTensor {
-        let cat = concat_q(parts, self.qp.aexp(&format!("cvd.b{b}.cat")));
+        let e = self.qp.aexp(&format!("cvd.b{b}.cat"));
+        let cat = self.with_arena(|a| concat_q_arena(parts, e, a));
         let x = self.conv_owned(&format!("cvd.b{b}.c3e"), cat);
         self.conv_owned(&format!("cvd.b{b}.c5"), x)
     }
@@ -293,7 +367,264 @@ impl QuantModel {
             x_ln,
             self.qp.aexp(&format!("cvd.b{b}.head.pre")),
         );
-        self.qp.lut_sigmoid.apply(&pre)
+        let y = self.with_arena(|a| self.qp.lut_sigmoid.apply_arena(&pre, a));
+        self.recycle(pre);
+        y
+    }
+
+    /// Run a closure under the scratch-arena lock.
+    fn with_arena<R>(&self, f: impl FnOnce(&mut Arena) -> R) -> R {
+        f(&mut self.scratch.lock().unwrap())
+    }
+
+    // --- batched HW segment mirrors (N streams per call) ------------------
+
+    /// Batched conv: N equally-shaped inputs through one
+    /// [`conv2d_q_packed_batch`] call (shared tap list, `(batch, channel)`
+    /// jobs striped over the arena workers).
+    fn conv_batch(&self, name: &str, xs: &[&QTensor]) -> Vec<QTensor> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let spec = self.spec(name);
+        let relu = spec.act == super::specs::Act::Relu;
+        self.conv_batch_inner(name, xs, self.qp.aexp(name), relu, spec.stride)
+    }
+
+    /// Batched [`QuantModel::conv_to`] (explicit out_exp, no relu).
+    fn conv_to_batch(&self, name: &str, xs: &[&QTensor], out_exp: i32) -> Vec<QTensor> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let spec = self.spec(name);
+        self.conv_batch_inner(name, xs, out_exp, false, spec.stride)
+    }
+
+    fn conv_batch_inner(
+        &self,
+        name: &str,
+        xs: &[&QTensor],
+        out_exp: i32,
+        relu: bool,
+        stride: usize,
+    ) -> Vec<QTensor> {
+        let c = self.qp.conv(name);
+        debug_assert_eq!(
+            c.e_in, xs[0].exp,
+            "conv '{name}': input exponent {} != traced {}", xs[0].exp, c.e_in
+        );
+        let r = xs[0].exp + c.e_w + c.e_s - out_exp;
+        let mut arena = self.scratch.lock().unwrap();
+        conv2d_q_packed_batch(
+            xs, &c.packed, c.b.data(), stride, c.s_q, r, relu, out_exp,
+            &mut arena,
+        )
+    }
+
+    /// Batched [`QuantModel::conv_owned`]: consumes the batch, recycling
+    /// every input payload.
+    fn conv_owned_batch(&self, name: &str, xs: Vec<QTensor>) -> Vec<QTensor> {
+        let ys = self.conv_batch(name, &refs(&xs));
+        self.recycle_all(xs);
+        ys
+    }
+
+    fn dup_all(&self, xs: &[QTensor]) -> Vec<QTensor> {
+        let mut arena = self.scratch.lock().unwrap();
+        xs.iter().map(|x| arena.duplicate_q(x)).collect()
+    }
+
+    fn recycle_all(&self, xs: Vec<QTensor>) {
+        let mut arena = self.scratch.lock().unwrap();
+        for x in xs {
+            arena.recycle_q(x);
+        }
+    }
+
+    /// Batched `fe_fs`: every conv of the chain runs once over the whole
+    /// batch. Returns one 5-feature pyramid per stream, each bit-identical
+    /// to [`QuantModel::seg_fe_fs`] on that stream alone.
+    pub fn seg_fe_fs_batch(&self, imgs: &[&QTensor]) -> Vec<Vec<QTensor>> {
+        if imgs.is_empty() {
+            return Vec::new();
+        }
+        let nb = imgs.len();
+        let (_, wiring) = fe_specs();
+        let stem = self.conv_batch("fe.stem", imgs);
+        let sep = self.conv_owned_batch("fe.sep.dw", stem);
+        let mut x = self.conv_owned_batch("fe.sep.pw", sep);
+        let mut taps: Vec<Vec<QTensor>> = vec![self.dup_all(&x)];
+        let mut wi = 0;
+        for (si, st) in config::FE_STAGES.iter().enumerate() {
+            for _ri in 0..st.repeats {
+                let base = wiring[wi].base.clone();
+                let y = self.conv_batch(&format!("{base}.exp"), &refs(&x));
+                let y = self.conv_owned_batch(&format!("{base}.dw"), y);
+                let y = self.conv_owned_batch(&format!("{base}.pw"), y);
+                let inp = x;
+                x = if wiring[wi].residual {
+                    let e = self.qp.aexp(&format!("{base}.addout"));
+                    let sums: Vec<QTensor> = self.with_arena(|a| {
+                        inp.iter()
+                            .zip(&y)
+                            .map(|(i0, y0)| add_q_arena(i0, y0, e, a))
+                            .collect()
+                    });
+                    self.recycle_all(y);
+                    sums
+                } else {
+                    y
+                };
+                self.recycle_all(inp);
+                wi += 1;
+            }
+            if config::FE_TAP_STAGES.contains(&(si as isize)) {
+                taps.push(self.dup_all(&x));
+            }
+        }
+        self.recycle_all(x);
+        let lats: Vec<Vec<QTensor>> = (0..5)
+            .map(|i| self.conv_batch(&format!("fs.lat{i}"), &refs(&taps[i])))
+            .collect();
+        for t in taps {
+            self.recycle_all(t);
+        }
+        let mut feats: Vec<Option<Vec<QTensor>>> = vec![None; 5];
+        feats[4] = Some(self.dup_all(&lats[4]));
+        for i in (0..4).rev() {
+            let prev = feats[i + 1].as_ref().unwrap();
+            let e = self.qp.aexp(&format!("fs.add{i}"));
+            let s: Vec<QTensor> = self.with_arena(|a| {
+                prev.iter()
+                    .zip(&lats[i])
+                    .map(|(p, l)| {
+                        let up = QTensor {
+                            t: upsample_nearest2x_i16_arena(&p.t, a),
+                            exp: p.exp,
+                        };
+                        let s = add_q_arena(&up, l, e, a);
+                        a.recycle_q(up);
+                        s
+                    })
+                    .collect()
+            });
+            feats[i] = Some(self.conv_owned_batch(&format!("fs.smooth{i}"), s));
+        }
+        for l in lats {
+            self.recycle_all(l);
+        }
+        // transpose level-major -> stream-major
+        let mut out: Vec<Vec<QTensor>> =
+            (0..nb).map(|_| Vec::with_capacity(5)).collect();
+        for level in feats.into_iter().map(|f| f.unwrap()) {
+            for (bi, q) in level.into_iter().enumerate() {
+                out[bi].push(q);
+            }
+        }
+        out
+    }
+
+    /// Batched `cve`. `inputs[bi]` = `[cost, f1, f2, f3, f4]` of stream
+    /// `bi` (the segment's manifest input order).
+    pub fn seg_cve_batch(&self, inputs: &[Vec<&QTensor>]) -> Vec<Vec<QTensor>> {
+        if inputs.is_empty() {
+            return Vec::new();
+        }
+        let nb = inputs.len();
+        for ins in inputs {
+            assert_eq!(ins.len(), 5, "cve expects cost + f1..f4");
+        }
+        let mut outs: Vec<Vec<QTensor>> =
+            (0..nb).map(|_| Vec::with_capacity(5)).collect();
+        let mut x: Vec<QTensor> = self.with_arena(|a| {
+            inputs.iter().map(|ins| a.duplicate_q(ins[0])).collect()
+        });
+        for lv in 0..5 {
+            if CVE_DOWN_KERNEL[lv].is_some() {
+                let down = self.conv_owned_batch(&format!("cve.l{lv}.down"), x);
+                let e = self.qp.aexp(&format!("cve.l{lv}.cat"));
+                x = self.with_arena(|a| {
+                    down.iter()
+                        .enumerate()
+                        .map(|(bi, d)| {
+                            // inputs[bi][lv] is f{lv}: the (lv-1)-th of f1..f4
+                            concat_q_arena(&[d, inputs[bi][lv]], e, a)
+                        })
+                        .collect()
+                });
+                self.recycle_all(down);
+            }
+            for bi in 0..CVE_BODY_KERNELS[lv].len() {
+                x = self.conv_owned_batch(&format!("cve.l{lv}.c{bi}"), x);
+            }
+            for (bi, d) in self.dup_all(&x).into_iter().enumerate() {
+                outs[bi].push(d);
+            }
+        }
+        self.recycle_all(x);
+        outs
+    }
+
+    /// Batched `cl_gates`. `inputs[bi]` = `[e4, h_corr]`.
+    pub fn seg_cl_gates_batch(&self, inputs: &[Vec<&QTensor>]) -> Vec<QTensor> {
+        if inputs.is_empty() {
+            return Vec::new();
+        }
+        let e = self.qp.aexp("cl.cat");
+        let cats: Vec<QTensor> = self.with_arena(|a| {
+            inputs
+                .iter()
+                .map(|ins| concat_q_arena(&[ins[0], ins[1]], e, a))
+                .collect()
+        });
+        let ys = self.conv_batch("cl.gates", &refs(&cats));
+        self.recycle_all(cats);
+        ys
+    }
+
+    /// Batched `cvd_b{b}_entry`. `inputs[bi]` = the block's concat parts.
+    pub fn seg_cvd_entry_batch(
+        &self,
+        b: usize,
+        inputs: &[Vec<&QTensor>],
+    ) -> Vec<QTensor> {
+        if inputs.is_empty() {
+            return Vec::new();
+        }
+        let e = self.qp.aexp(&format!("cvd.b{b}.cat"));
+        let cats: Vec<QTensor> = self.with_arena(|a| {
+            inputs.iter().map(|ins| concat_q_arena(ins, e, a)).collect()
+        });
+        let x = self.conv_owned_batch(&format!("cvd.b{b}.c3e"), cats);
+        self.conv_owned_batch(&format!("cvd.b{b}.c5"), x)
+    }
+
+    /// Batched `cvd_b{b}_mid{i}`.
+    pub fn seg_cvd_mid_batch(
+        &self,
+        b: usize,
+        i: usize,
+        xs: &[&QTensor],
+    ) -> Vec<QTensor> {
+        self.conv_batch(&format!("cvd.b{b}.c3_{i}"), xs)
+    }
+
+    /// Batched `cvd_b{b}_head`.
+    pub fn seg_cvd_head_batch(&self, b: usize, xs: &[&QTensor]) -> Vec<QTensor> {
+        let pre = self.conv_to_batch(
+            &format!("cvd.b{b}.head"),
+            xs,
+            self.qp.aexp(&format!("cvd.b{b}.head.pre")),
+        );
+        let mut arena = self.scratch.lock().unwrap();
+        let ys: Vec<QTensor> = pre
+            .iter()
+            .map(|p| self.qp.lut_sigmoid.apply_arena(p, &mut arena))
+            .collect();
+        for p in pre {
+            arena.recycle_q(p);
+        }
+        ys
     }
 
     // --- full CPU-PTQ frame step (Table II row 2) --------------------------
@@ -337,11 +668,10 @@ impl QuantModel {
 
         // ConvLSTM with SW layer norms
         let gates = self.seg_cl_gates(&enc[4], &h_corr);
-        let gates_ln = ln_sw(&self.qp, "cl.ln_gates", &gates,
-                             self.qp.aexp("cl.ln_gates"));
+        let gates_ln =
+            self.ln("cl.ln_gates", &gates, self.qp.aexp("cl.ln_gates"));
         let (c_new, o_gate) = self.seg_cl_state(&gates_ln, &st.c);
-        let ln_c = ln_sw(&self.qp, "cl.ln_cell", &c_new,
-                         self.qp.aexp("cl.ln_cell"));
+        let ln_c = self.ln("cl.ln_cell", &c_new, self.qp.aexp("cl.ln_cell"));
         let h_new = self.seg_cl_out(&ln_c, &o_gate);
 
         // decoder: HW conv segments / SW LNs + bilinear ups
@@ -362,8 +692,7 @@ impl QuantModel {
                 self.seg_cvd_entry(b, &[&upf_q, &enc[4 - b], &upd_q])
             };
             for i in 1..CVD_BODY_K3[b] {
-                let x_ln = ln_sw(
-                    &self.qp,
+                let x_ln = self.ln(
                     &format!("cvd.b{b}.ln{}", i - 1),
                     &x,
                     self.qp.aexp(&format!("cvd.b{b}.ln{}", i - 1)),
@@ -371,8 +700,7 @@ impl QuantModel {
                 x = self.seg_cvd_mid(b, i, &x_ln);
             }
             let last = CVD_BODY_K3[b] - 1;
-            let x_ln = ln_sw(
-                &self.qp,
+            let x_ln = self.ln(
                 &format!("cvd.b{b}.ln{last}"),
                 &x,
                 self.qp.aexp(&cvd_carry_name(b)),
@@ -404,5 +732,7 @@ pub fn e4_exp(qp: &QuantParams) -> i32 {
 mod tests {
     // quant-net correctness is pinned by rust/tests/golden.rs against the
     // python hybrid traces (requires artifacts); unit-level integer
-    // semantics are covered in ops::conv and quant.
+    // semantics are covered in ops::conv and quant, and the batched
+    // segment mirrors are pinned against the solo mirrors segment by
+    // segment in rust/tests/ops_exact.rs.
 }

@@ -1,37 +1,51 @@
-//! Scratch arena for the conv stack — reuses accumulator buffers and
+//! Scratch arena for the op stack — reuses accumulator buffers and
 //! intermediate activation payloads across layers and frames instead of
 //! allocating per call.
 //!
 //! Lifetime rules (see also the ops-layer notes in `lib.rs`):
 //!
 //! * The arena owns **worker-indexed accumulators** (`acc_i32`/`acc_f32`,
-//!   one per conv worker thread) and a **freelist of i16 payloads** for
-//!   quantized activations. Nothing in the arena outlives a single conv
-//!   call except as recycled capacity.
-//! * Conv kernels draw their output payload from [`Arena::take_i16`];
-//!   model code hands spent intermediates back via [`Arena::recycle_i16`]
-//!   (or [`Arena::recycle_q`]). Recycling is optional — an un-recycled
+//!   one per conv worker thread — batched convs stripe
+//!   `(batch, channel)` jobs over the same set) and **freelists of
+//!   i16/f32 payloads** for activations. Nothing in the arena outlives a
+//!   single op call except as recycled capacity.
+//! * Kernels draw output payloads from [`Arena::take_i16`] /
+//!   [`Arena::take_f32`] (or the shaped [`Arena::take_q`] /
+//!   [`Arena::take_tf`]); model code hands spent intermediates back via
+//!   the `recycle_*` twins. Recycling is optional — an un-recycled
 //!   tensor is simply freed by `Vec`'s destructor — so ownership stays
 //!   ordinary Rust, the arena is only a capacity cache.
-//! * `threads` is the conv worker count: output channels of one conv are
-//!   striped over `min(threads, oc)` scoped threads, each with its own
-//!   accumulator, so results are bit-identical for every thread count.
+//! * **Checkout contract:** contents of a taken payload are unspecified
+//!   beyond the zero-filled growth region; every `_into`/arena op writes
+//!   all elements, and skipping the memset is part of the point.
+//! * `threads` is the conv worker count: output channels of one conv
+//!   (or `(batch, channel)` jobs of one batched conv) are striped over
+//!   at most that many scoped threads, each with its own accumulator, so
+//!   results are bit-identical for every thread count.
 //!
 //! The arena is deliberately not `Sync`; owners that are shared (e.g.
 //! `QuantModel` inside a `RefBackend`) wrap it in a `Mutex` and lock per
-//! conv call — uncontended lock cost is noise next to a conv.
+//! op call — uncontended lock cost is noise next to a conv.
+
+use crate::quant::QTensor;
+use crate::tensor::{Tensor, TensorF};
 
 /// Freelist capacity: beyond this many parked payloads, extra buffers are
 /// dropped (bounds memory when a burst of large intermediates retires).
 const MAX_FREE_I16: usize = 64;
 
-/// Reusable conv scratch: per-worker accumulators + activation freelist.
+/// Bound of the f32 payload freelist (float intermediates are larger and
+/// fewer than quantized ones).
+const MAX_FREE_F32: usize = 32;
+
+/// Reusable op scratch: per-worker accumulators + activation freelists.
 #[derive(Debug)]
 pub struct Arena {
     threads: usize,
     acc_i32: Vec<Vec<i32>>,
     acc_f32: Vec<Vec<f32>>,
     free_i16: Vec<Vec<i16>>,
+    free_f32: Vec<Vec<f32>>,
 }
 
 impl Default for Arena {
@@ -53,6 +67,7 @@ impl Arena {
             acc_i32: Vec::new(),
             acc_f32: Vec::new(),
             free_i16: Vec::new(),
+            free_f32: Vec::new(),
         }
     }
 
@@ -111,9 +126,59 @@ impl Arena {
         self.recycle_i16(q.t.into_data());
     }
 
-    /// Parked payload count (observability for tests).
+    /// An f32 payload of exactly `len` elements — same contract as
+    /// [`Arena::take_i16`]: contents are unspecified (only growth beyond
+    /// a recycled buffer's length is zero-filled); callers write every
+    /// element.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free_f32.pop().unwrap_or_default();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Park a spent f32 payload for reuse by a later [`Arena::take_f32`].
+    pub fn recycle_f32(&mut self, v: Vec<f32>) {
+        if self.free_f32.len() < MAX_FREE_F32 && v.capacity() > 0 {
+            self.free_f32.push(v);
+        }
+    }
+
+    /// Recycle a whole float tensor's payload.
+    pub fn recycle_tf(&mut self, t: TensorF) {
+        self.recycle_f32(t.into_data());
+    }
+
+    /// Shaped i16 checkout: a quantized tensor of `shape` at `exp` whose
+    /// payload comes from the freelist. **Contents are unspecified** —
+    /// for `_into`-style ops that write every element.
+    pub fn take_q(&mut self, shape: &[usize], exp: i32) -> QTensor {
+        let n: usize = shape.iter().product();
+        QTensor { t: Tensor::from_vec(shape, self.take_i16(n)), exp }
+    }
+
+    /// Shaped f32 checkout (same unspecified-contents contract).
+    pub fn take_tf(&mut self, shape: &[usize]) -> TensorF {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, self.take_f32(n))
+    }
+
+    /// Copy of `x` whose payload comes from the freelist — the
+    /// allocation-free form of `x.clone()` for chain taps that must
+    /// outlive their producer.
+    pub fn duplicate_q(&mut self, x: &QTensor) -> QTensor {
+        let mut d = self.take_i16(x.t.len());
+        d.copy_from_slice(x.t.data());
+        QTensor { t: Tensor::from_vec(x.shape(), d), exp: x.exp }
+    }
+
+    /// Parked i16 payload count (observability for tests).
     pub fn free_buffers(&self) -> usize {
         self.free_i16.len()
+    }
+
+    /// Parked f32 payload count (observability for tests).
+    pub fn free_f32_buffers(&self) -> usize {
+        self.free_f32.len()
     }
 }
 
@@ -167,5 +232,33 @@ mod tests {
             a.recycle_i16(vec![0i16; 4]);
         }
         assert_eq!(a.free_buffers(), MAX_FREE_I16);
+        for _ in 0..(MAX_FREE_F32 + 10) {
+            a.recycle_f32(vec![0f32; 4]);
+        }
+        assert_eq!(a.free_f32_buffers(), MAX_FREE_F32);
+    }
+
+    #[test]
+    fn f32_freelist_and_shaped_checkout() {
+        let mut a = Arena::new();
+        let mut v = a.take_f32(8);
+        v.iter_mut().for_each(|x| *x = 1.5);
+        a.recycle_f32(v);
+        assert_eq!(a.free_f32_buffers(), 1);
+        let t = a.take_tf(&[1, 2, 2, 2]);
+        assert_eq!(t.shape(), &[1, 2, 2, 2]);
+        assert_eq!(a.free_f32_buffers(), 0);
+        a.recycle_tf(t);
+        assert_eq!(a.free_f32_buffers(), 1);
+        let q = a.take_q(&[1, 1, 2, 3], 5);
+        assert_eq!(q.shape(), &[1, 1, 2, 3]);
+        assert_eq!(q.exp, 5);
+        let src = QTensor {
+            t: Tensor::from_vec(&[1, 1, 1, 4], vec![1i16, 2, 3, 4]),
+            exp: 7,
+        };
+        let dup = a.duplicate_q(&src);
+        assert_eq!(dup.t.data(), src.t.data());
+        assert_eq!(dup.exp, 7);
     }
 }

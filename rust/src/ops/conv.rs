@@ -38,6 +38,7 @@ use crate::quant::{rshift_round, QTensor};
 use crate::tensor::{Tensor, TensorF, TensorI32, TensorI8};
 
 use super::arena::Arena;
+use super::simd::{fma_row_f32, fma_row_i16};
 
 /// Output extent of one spatial dim under the repo-wide symmetric-`k/2`
 /// padding convention (shared with fops.py / conv_quant.py / the HLO
@@ -214,9 +215,8 @@ fn accum_channel_q(
             let row = &xd[xb + iy * wd + ix0..];
             let arow = &mut acc[oy * wo + ox0..oy * wo + ox1];
             if stride == 1 {
-                for (a, &xv) in arow.iter_mut().zip(&row[..n]) {
-                    *a += wv * xv as i32;
-                }
+                // contiguous row: the i16xN widening-multiply lane kernel
+                fma_row_i16(arow, &row[..n], wv);
             } else {
                 for (a, &xv) in arow.iter_mut().zip(row.iter().step_by(stride)) {
                     *a += wv * xv as i32;
@@ -254,9 +254,9 @@ fn accum_channel_f(
             let row = &xd[xb + iy * wd + ix0..];
             let arow = &mut acc[oy * wo + ox0..oy * wo + ox1];
             if stride == 1 {
-                for (a, &xv) in arow.iter_mut().zip(&row[..n]) {
-                    *a += wv * xv;
-                }
+                // per-element operation order is unchanged by the lane
+                // chunking, so this stays float-bit-identical to the ref
+                fma_row_f32(arow, &row[..n], wv);
             } else {
                 for (a, &xv) in arow.iter_mut().zip(row.iter().step_by(stride)) {
                     *a += wv * xv;
@@ -277,63 +277,36 @@ fn epilogue(acc: i32, s_q: i32, r: i32, relu: bool) -> i16 {
 // Quantized drivers (dense + depthwise share one channel kernel)
 // ---------------------------------------------------------------------------
 
+/// One `(batch element, output channel)` conv job — the single copy of
+/// the quantized kernel body (bias fill -> tap accumulation -> epilogue)
+/// that the serial and threaded driver branches both run, so solo and
+/// batched serving stay bit-identical by construction.
+#[inline(always)]
 #[allow(clippy::too_many_arguments)]
-fn run_conv_q(
+fn conv_job_q(
     xd: &[i16],
     h: usize,
     wd: usize,
-    pw: &PackedQConv,
-    b: &[i32],
     stride: usize,
+    p: usize,
+    taps: &[Tap<i32>],
+    bias: i32,
     s_q: i32,
     r: i32,
     relu: bool,
-    od: &mut [i16],
-    ho: usize,
+    acc: &mut [i32],
+    od_chan: &mut [i16],
     wo: usize,
-    arena: &mut Arena,
 ) {
-    let plane = ho * wo;
-    let p = pw.k / 2;
-    let nthreads = arena.threads().min(pw.oc);
-    if nthreads <= 1 || pw.nnz() * plane < PAR_MIN_MACS {
-        let acc = &mut arena.acc_i32(1, plane)[0];
-        for (o, od_chan) in od.chunks_exact_mut(plane).enumerate() {
-            acc.fill(b[o]);
-            accum_channel_q(xd, h, wd, stride, p, pw.taps(o), acc, wo);
-            for (y, &a) in od_chan.iter_mut().zip(acc.iter()) {
-                *y = epilogue(a, s_q, r, relu);
-            }
-        }
-    } else {
-        // stripe output channels over scoped workers: disjoint output
-        // stripes + one accumulator each, so results are thread-count
-        // independent by construction
-        let per = pw.oc.div_ceil(nthreads);
-        let accs = arena.acc_i32(nthreads, plane);
-        std::thread::scope(|s| {
-            for ((wi, od_stripe), acc) in
-                od.chunks_mut(per * plane).enumerate().zip(accs.iter_mut())
-            {
-                // handles join implicitly at scope exit
-                let _ = s.spawn(move || {
-                    for (j, od_chan) in
-                        od_stripe.chunks_exact_mut(plane).enumerate()
-                    {
-                        let o = wi * per + j;
-                        acc.fill(b[o]);
-                        accum_channel_q(xd, h, wd, stride, p, pw.taps(o), acc, wo);
-                        for (y, &a) in od_chan.iter_mut().zip(acc.iter()) {
-                            *y = epilogue(a, s_q, r, relu);
-                        }
-                    }
-                });
-            }
-        });
+    acc.fill(bias);
+    accum_channel_q(xd, h, wd, stride, p, taps, acc, wo);
+    for (y, &a) in od_chan.iter_mut().zip(acc.iter()) {
+        *y = epilogue(a, s_q, r, relu);
     }
 }
 
-/// Dense quantized conv over pre-packed weights — the serving hot path.
+/// Dense quantized conv over pre-packed weights — the serving hot path,
+/// the 1-wide case of [`conv2d_q_packed_batch`]'s driver.
 /// Bit-exact with [`conv2d_q_ref`] for every shape/stride/thread count.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_q_packed(
@@ -356,8 +329,19 @@ pub fn conv2d_q_packed(
     assert_eq!(b.len(), pw.oc, "bias length");
     let (ho, wo) = (out_dim(h, pw.k, stride), out_dim(wd, pw.k, stride));
     let mut data = arena.take_i16(pw.oc * ho * wo);
-    run_conv_q(
-        x.t.data(), h, wd, pw, b, stride, s_q, r, relu, &mut data, ho, wo,
+    run_conv_q_batch(
+        &[x.t.data()],
+        h,
+        wd,
+        pw,
+        b,
+        stride,
+        s_q,
+        r,
+        relu,
+        std::slice::from_mut(&mut data),
+        ho,
+        wo,
         arena,
     );
     QTensor { t: Tensor::from_vec(&[1, pw.oc, ho, wo], data), exp: out_exp }
@@ -379,6 +363,127 @@ pub fn conv2d_dw_q_packed(
 ) -> QTensor {
     assert!(pw.dw, "conv2d_dw_q_packed needs depthwise-packed weights");
     conv2d_q_packed(x, pw, b, stride, s_q, r, relu, out_exp, arena)
+}
+
+// ---------------------------------------------------------------------------
+// Batched quantized driver (N-stream serving)
+// ---------------------------------------------------------------------------
+
+/// Batched inner driver: `(batch, output channel)` pairs are the job
+/// units, striped over the arena's workers. Each job runs exactly the
+/// unbatched per-channel kernel (bias fill -> tap accumulation ->
+/// epilogue), so every output is bit-identical to a solo call on that
+/// batch element for any thread count.
+#[allow(clippy::too_many_arguments)]
+fn run_conv_q_batch(
+    xs: &[&[i16]],
+    h: usize,
+    wd: usize,
+    pw: &PackedQConv,
+    b: &[i32],
+    stride: usize,
+    s_q: i32,
+    r: i32,
+    relu: bool,
+    outs: &mut [Vec<i16>],
+    ho: usize,
+    wo: usize,
+    arena: &mut Arena,
+) {
+    let plane = ho * wo;
+    let p = pw.k / 2;
+    let jobs = xs.len() * pw.oc;
+    // flatten to per-(batch, channel) output planes: disjoint &mut slices
+    // the scoped workers can own
+    let mut planes: Vec<&mut [i16]> = outs
+        .iter_mut()
+        .flat_map(|o| o.chunks_exact_mut(plane))
+        .collect();
+    let nthreads = arena.threads().min(jobs);
+    if nthreads <= 1 || xs.len() * pw.nnz() * plane < PAR_MIN_MACS {
+        let acc = &mut arena.acc_i32(1, plane)[0];
+        for (j, od_chan) in planes.iter_mut().enumerate() {
+            let (bi, o) = (j / pw.oc, j % pw.oc);
+            conv_job_q(
+                xs[bi], h, wd, stride, p, pw.taps(o), b[o], s_q, r, relu, acc,
+                od_chan, wo,
+            );
+        }
+    } else {
+        // one thread-scope per *batched* conv: the spawn/join cost is
+        // paid once for the whole batch instead of once per stream
+        let per = jobs.div_ceil(nthreads);
+        let accs = arena.acc_i32(nthreads, plane);
+        std::thread::scope(|s| {
+            for ((wi, chunk), acc) in
+                planes.chunks_mut(per).enumerate().zip(accs.iter_mut())
+            {
+                // handles join implicitly at scope exit
+                let _ = s.spawn(move || {
+                    for (jj, od_chan) in chunk.iter_mut().enumerate() {
+                        let j = wi * per + jj;
+                        let (bi, o) = (j / pw.oc, j % pw.oc);
+                        conv_job_q(
+                            xs[bi], h, wd, stride, p, pw.taps(o), b[o], s_q, r,
+                            relu, acc, od_chan, wo,
+                        );
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Quantized conv over a batch of equally-shaped inputs (one per stream),
+/// dense or depthwise depending on how `pw` was packed. Reuses one
+/// `PackedConv` tap list across the whole batch and stripes
+/// `(batch, channel)` jobs over the arena's workers: small per-stream
+/// convs that never cleared the parallel threshold alone do as a batch,
+/// and the scoped-thread spawn cost is paid once per conv instead of
+/// once per stream.
+///
+/// Bit-exact: output `i` equals `conv2d_q_packed` on `xs[i]` alone, for
+/// every batch width and thread count (pinned by `rust/tests/ops_exact.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_q_packed_batch(
+    xs: &[&QTensor],
+    pw: &PackedQConv,
+    b: &[i32],
+    stride: usize,
+    s_q: i32,
+    r: i32,
+    relu: bool,
+    out_exp: i32,
+    arena: &mut Arena,
+) -> Vec<QTensor> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let (_, ic, h, wd) = xs[0].t.nchw();
+    if pw.dw {
+        assert_eq!(ic, pw.oc, "depthwise channel mismatch");
+    } else {
+        assert_eq!(ic, pw.ic, "channel mismatch");
+    }
+    assert_eq!(b.len(), pw.oc, "bias length");
+    for x in xs {
+        assert_eq!(x.t.shape(), xs[0].t.shape(), "batch shape mismatch");
+        assert_eq!(x.exp, xs[0].exp, "batch exponent mismatch");
+    }
+    let (ho, wo) = (out_dim(h, pw.k, stride), out_dim(wd, pw.k, stride));
+    let mut outs: Vec<Vec<i16>> = (0..xs.len())
+        .map(|_| arena.take_i16(pw.oc * ho * wo))
+        .collect();
+    let xds: Vec<&[i16]> = xs.iter().map(|x| x.t.data()).collect();
+    run_conv_q_batch(
+        &xds, h, wd, pw, b, stride, s_q, r, relu, &mut outs, ho, wo, arena,
+    );
+    outs.into_iter()
+        .map(|d| QTensor {
+            t: Tensor::from_vec(&[1, pw.oc, ho, wo], d),
+            exp: out_exp,
+        })
+        .collect()
 }
 
 /// Dense quantized conv (paper §III-B2). Convenience wrapper that packs
@@ -499,7 +604,8 @@ pub fn conv2d_packed(
     assert_eq!(ic, pw.ic, "channel mismatch");
     assert_eq!(b.len(), pw.oc, "bias length");
     let (ho, wo) = (out_dim(h, pw.k, stride), out_dim(wd, pw.k, stride));
-    let mut out = TensorF::zeros(&[1, pw.oc, ho, wo]);
+    // arena payload (recycled capacity; every element is written below)
+    let mut out = arena.take_tf(&[1, pw.oc, ho, wo]);
     run_conv_f(
         x.data(), h, wd, pw, b, stride, false, out.data_mut(), ho, wo, arena,
     );
@@ -520,7 +626,8 @@ pub fn conv2d_dw_packed(
     assert_eq!(c, pw.oc, "depthwise channel mismatch");
     assert_eq!(b.len(), pw.oc, "bias length");
     let (ho, wo) = (out_dim(h, pw.k, stride), out_dim(wd, pw.k, stride));
-    let mut out = TensorF::zeros(&[1, pw.oc, ho, wo]);
+    // arena payload (recycled capacity; every element is written below)
+    let mut out = arena.take_tf(&[1, pw.oc, ho, wo]);
     run_conv_f(
         x.data(), h, wd, pw, b, stride, true, out.data_mut(), ho, wo, arena,
     );
@@ -936,5 +1043,50 @@ mod tests {
             let yt = conv2d_q_packed(&x, &pw, &b, 1, 3, 7, true, 8, &mut at);
             assert_eq!(y1.t.data(), yt.t.data(), "threads={threads}");
         }
+    }
+
+    #[test]
+    fn batched_conv_equals_per_stream_calls() {
+        // a batch is just N independent streams: every element must match
+        // the solo kernel bit-for-bit, for serial and threaded striping
+        let mut rng = Rng::new(33);
+        let w = TensorI8::from_vec(
+            &[5, 3, 3, 3],
+            (0..5 * 3 * 9).map(|_| rng.range_i64(-64, 64) as i8).collect(),
+        );
+        let b: Vec<i32> =
+            (0..5).map(|_| rng.range_i64(-256, 256) as i32).collect();
+        let pw = PackedQConv::pack_dense(&w);
+        let xs: Vec<QTensor> = (0..3)
+            .map(|_| QTensor {
+                t: Tensor::from_vec(
+                    &[1, 3, 6, 7],
+                    (0..3 * 6 * 7)
+                        .map(|_| rng.range_i64(-2000, 2000) as i16)
+                        .collect(),
+                ),
+                exp: 8,
+            })
+            .collect();
+        let solo: Vec<QTensor> = xs
+            .iter()
+            .map(|x| {
+                let mut a = Arena::new();
+                conv2d_q_packed(x, &pw, &b, 1, 7, 9, true, 8, &mut a)
+            })
+            .collect();
+        for threads in [1, 2, 5] {
+            let mut a = Arena::with_threads(threads);
+            let refs: Vec<&QTensor> = xs.iter().collect();
+            let got =
+                conv2d_q_packed_batch(&refs, &pw, &b, 1, 7, 9, true, 8, &mut a);
+            assert_eq!(got.len(), solo.len());
+            for (i, (g, s)) in got.iter().zip(&solo).enumerate() {
+                assert_eq!(g.t.data(), s.t.data(), "batch {i} threads={threads}");
+                assert_eq!(g.exp, s.exp);
+            }
+        }
+        assert!(conv2d_q_packed_batch(&[], &pw, &b, 1, 7, 9, true, 8,
+                                      &mut Arena::new()).is_empty());
     }
 }

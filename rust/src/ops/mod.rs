@@ -11,16 +11,21 @@ pub mod arena;
 pub mod conv;
 pub mod norm;
 pub mod sample;
+pub mod simd;
 
 pub use arena::Arena;
 pub use conv::{
     conv2d, conv2d_dw, conv2d_dw_packed, conv2d_dw_q, conv2d_dw_q_packed,
     conv2d_dw_q_ref, conv2d_dw_ref, conv2d_packed, conv2d_q, conv2d_q_packed,
-    conv2d_q_ref, conv2d_ref, out_dim, PackedConv, PackedFConv, PackedQConv,
-    Tap,
+    conv2d_q_packed_batch, conv2d_q_ref, conv2d_ref, out_dim, PackedConv,
+    PackedFConv, PackedQConv, Tap,
 };
-pub use norm::layer_norm;
-pub use sample::{grid_sample, resize_bilinear, upsample_bilinear2x, upsample_nearest2x, upsample_nearest2x_i16};
+pub use norm::{layer_norm, layer_norm_into};
+pub use sample::{
+    grid_sample, resize_bilinear, resize_bilinear_into, upsample_bilinear2x,
+    upsample_bilinear2x_arena, upsample_nearest2x, upsample_nearest2x_i16,
+    upsample_nearest2x_i16_arena, upsample_nearest2x_i16_into,
+};
 
 use crate::tensor::TensorF;
 
@@ -49,6 +54,22 @@ pub fn sigmoid_tensor(x: &TensorF) -> TensorF {
 
 pub fn elu_tensor(x: &TensorF) -> TensorF {
     x.map(elu)
+}
+
+/// In-place [`sigmoid`] (allocation-free twin of [`sigmoid_tensor`]).
+#[inline]
+pub fn sigmoid_inplace(x: &mut TensorF) {
+    for v in x.data_mut() {
+        *v = sigmoid(*v);
+    }
+}
+
+/// In-place [`elu`] (allocation-free twin of [`elu_tensor`]).
+#[inline]
+pub fn elu_inplace(x: &mut TensorF) {
+    for v in x.data_mut() {
+        *v = elu(*v);
+    }
 }
 
 #[cfg(test)]

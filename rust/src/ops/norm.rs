@@ -10,9 +10,18 @@ pub const LN_EPS: f64 = 1e-5;
 /// Accumulates in f64 (the CPU has no precision constraint — exactly why
 /// the paper keeps this op in software).
 pub fn layer_norm(x: &TensorF, gamma: &[f32], beta: &[f32]) -> TensorF {
+    let mut out = TensorF::zeros(x.shape());
+    layer_norm_into(x, gamma, beta, out.data_mut());
+    out
+}
+
+/// [`layer_norm`] into a caller-provided buffer of `c * h * w` elements
+/// (the allocation-free core; every element is written).
+pub fn layer_norm_into(x: &TensorF, gamma: &[f32], beta: &[f32], od: &mut [f32]) {
     let (_, c, h, w) = x.nchw();
     assert_eq!(gamma.len(), c);
     assert_eq!(beta.len(), c);
+    debug_assert_eq!(od.len(), c * h * w);
     let n = (c * h * w) as f64;
     let xd = x.data();
     // pass 1: mean + variance (each element touched twice overall — the
@@ -30,8 +39,6 @@ pub fn layer_norm(x: &TensorF, gamma: &[f32], beta: &[f32]) -> TensorF {
     var /= n;
     let inv = 1.0 / (var + LN_EPS).sqrt();
     // pass 2: normalise + affine
-    let mut out = TensorF::zeros(x.shape());
-    let od = out.data_mut();
     let hw = h * w;
     for ch in 0..c {
         let g = gamma[ch] as f64;
@@ -40,7 +47,6 @@ pub fn layer_norm(x: &TensorF, gamma: &[f32], beta: &[f32]) -> TensorF {
             od[i] = ((xd[i] as f64 - mean) * inv * g + b) as f32;
         }
     }
-    out
 }
 
 #[cfg(test)]

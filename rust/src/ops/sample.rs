@@ -7,7 +7,9 @@
 //! integer coordinates for `grid_sample` (zero padding outside), and
 //! half-pixel-centre convention for `resize_bilinear`.
 
-use crate::tensor::TensorF;
+use crate::tensor::{TensorF, TensorI16};
+
+use super::arena::Arena;
 
 /// Precomputed bilinear tap: four source offsets + weights per output
 /// point (out-of-range taps get weight 0 and a safe offset). Sharing the
@@ -109,7 +111,18 @@ pub fn grid_sample_accumulate(
 /// `fops.resize_bilinear`): source coord = (i + 0.5) * (in/out) - 0.5,
 /// clamped taps (edge padding), fractional weights clamped to [0,1].
 pub fn resize_bilinear(x: &TensorF, oh: usize, ow: usize) -> TensorF {
+    let (_, c, _, _) = x.nchw();
+    let mut out = TensorF::zeros(&[1, c, oh, ow]);
+    resize_bilinear_into(x, oh, ow, out.data_mut());
+    out
+}
+
+/// [`resize_bilinear`] into a caller-provided buffer of `c * oh * ow`
+/// elements (allocation-free core; coefficient tables still allocate —
+/// they are O(oh + ow), noise next to the O(c*oh*ow) payload).
+pub fn resize_bilinear_into(x: &TensorF, oh: usize, ow: usize, od: &mut [f32]) {
     let (_, c, h, w) = x.nchw();
+    debug_assert_eq!(od.len(), c * oh * ow);
     let mut y0s = vec![0usize; oh];
     let mut y1s = vec![0usize; oh];
     let mut fys = vec![0.0f32; oh];
@@ -132,9 +145,7 @@ pub fn resize_bilinear(x: &TensorF, oh: usize, ow: usize) -> TensorF {
         x1s[ox] = x1 as usize;
         fxs[ox] = (sx - x0).clamp(0.0, 1.0);
     }
-    let mut out = TensorF::zeros(&[1, c, oh, ow]);
     let xd = x.data();
-    let od = out.data_mut();
     for ch in 0..c {
         let ib = ch * h * w;
         let ob = ch * oh * ow;
@@ -151,13 +162,21 @@ pub fn resize_bilinear(x: &TensorF, oh: usize, ow: usize) -> TensorF {
             }
         }
     }
-    out
 }
 
 /// Bilinear x2 upsampling (a software op in the paper's partitioning).
 pub fn upsample_bilinear2x(x: &TensorF) -> TensorF {
     let (_, _, h, w) = x.nchw();
     resize_bilinear(x, 2 * h, 2 * w)
+}
+
+/// [`upsample_bilinear2x`] drawing the output payload from the arena
+/// freelist.
+pub fn upsample_bilinear2x_arena(x: &TensorF, arena: &mut Arena) -> TensorF {
+    let (_, c, h, w) = x.nchw();
+    let mut out = arena.take_tf(&[1, c, 2 * h, 2 * w]);
+    resize_bilinear_into(x, 2 * h, 2 * w, out.data_mut());
+    out
 }
 
 /// Nearest-neighbour x2 upsampling (hardware-friendly; used by the FPN).
@@ -185,13 +204,19 @@ pub fn upsample_nearest2x(x: &TensorF) -> TensorF {
 
 /// Nearest x2 on int16 payloads (the FPN upsample inside HW segments; the
 /// CPU-PTQ baseline needs the integer version too).
-pub fn upsample_nearest2x_i16(
-    x: &crate::tensor::TensorI16,
-) -> crate::tensor::TensorI16 {
+pub fn upsample_nearest2x_i16(x: &TensorI16) -> TensorI16 {
     let (_, c, h, w) = x.nchw();
-    let mut out = crate::tensor::TensorI16::zeros(&[1, c, 2 * h, 2 * w]);
+    let mut out = TensorI16::zeros(&[1, c, 2 * h, 2 * w]);
+    upsample_nearest2x_i16_into(x, out.data_mut());
+    out
+}
+
+/// [`upsample_nearest2x_i16`] into a caller-provided buffer of
+/// `c * 2h * 2w` elements (every element is written).
+pub fn upsample_nearest2x_i16_into(x: &TensorI16, od: &mut [i16]) {
+    let (_, c, h, w) = x.nchw();
+    debug_assert_eq!(od.len(), c * 4 * h * w);
     let xd = x.data();
-    let od = out.data_mut();
     for ch in 0..c {
         let ib = ch * h * w;
         let ob = ch * 4 * h * w;
@@ -206,7 +231,15 @@ pub fn upsample_nearest2x_i16(
             }
         }
     }
-    out
+}
+
+/// [`upsample_nearest2x_i16`] drawing the output payload from the arena
+/// freelist.
+pub fn upsample_nearest2x_i16_arena(x: &TensorI16, arena: &mut Arena) -> TensorI16 {
+    let (_, c, h, w) = x.nchw();
+    let mut data = arena.take_i16(c * 4 * h * w);
+    upsample_nearest2x_i16_into(x, &mut data);
+    crate::tensor::Tensor::from_vec(&[1, c, 2 * h, 2 * w], data)
 }
 
 #[cfg(test)]
@@ -279,5 +312,28 @@ mod tests {
         let x = crate::tensor::TensorI16::from_vec(&[1, 1, 2, 2], vec![1, 2, 3, 4]);
         let y = upsample_nearest2x_i16(&x);
         assert_eq!(y.data(), &[1, 1, 2, 2, 1, 1, 2, 2, 3, 3, 4, 4, 3, 3, 4, 4]);
+        // arena twin over a dirty recycled buffer is still exact
+        let mut arena = Arena::new();
+        arena.recycle_i16(vec![9i16; 16]);
+        let ya = upsample_nearest2x_i16_arena(&x, &mut arena);
+        assert_eq!(ya.data(), y.data());
+        assert_eq!(ya.shape(), y.shape());
+    }
+
+    #[test]
+    fn bilinear_arena_twin_is_bit_identical() {
+        let x = Tensor::from_vec(
+            &[1, 2, 3, 4],
+            (0..24).map(|i| (i as f32).sin()).collect(),
+        );
+        let base = upsample_bilinear2x(&x);
+        let mut arena = Arena::new();
+        arena.recycle_f32(vec![7.0f32; 8]); // dirty recycled capacity
+        let got = upsample_bilinear2x_arena(&x, &mut arena);
+        assert_eq!(got.shape(), base.shape());
+        assert_eq!(
+            got.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            base.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
     }
 }

@@ -1,0 +1,197 @@
+//! Lane-structured inner kernels for the conv interior (PR 3).
+//!
+//! The conv hot loop is `acc[i] += w * x[i]` over a contiguous row — an
+//! i16→i32 widening multiply-accumulate, the exact operation FPGA CNN
+//! accelerators unroll across MAC arrays. On the CPU the same structure
+//! is exposed to the vector units two ways:
+//!
+//! * **Portable lanes** (always on) — the row is walked in fixed-width
+//!   chunks of [`LANES`] with an inner loop of constant trip count. This
+//!   is the shape LLVM's autovectorizer reliably lowers to `pmaddwd` /
+//!   `smlal`-class vector code on x86-64 and aarch64, without any
+//!   `unsafe` or platform dependence. The remainder tail stays scalar.
+//! * **`std::arch` intrinsics** (opt-in, `--features arch-simd`) —
+//!   explicit SSE2 (baseline on every x86_64) and NEON (baseline on
+//!   every aarch64) bodies for the same kernel. Integer SIMD is exact,
+//!   so these are bit-identical to the portable form by construction;
+//!   the property tests in `rust/tests/ops_exact.rs` pin it anyway.
+//!
+//! Float rows use the same chunking. Each output element still receives
+//! its products in the identical order (one tap at a time), so the f32
+//! kernels remain float-bit-identical to the `conv2d*_ref` specs —
+//! chunking never reassociates a single element's sum.
+
+/// Fixed lane width of the portable kernels. Eight i16 lanes fill one
+/// 128-bit vector — the common denominator of SSE2 and NEON — and let
+/// AVX2 targets process two chunks per iteration after unrolling.
+pub const LANES: usize = 8;
+
+/// `acc[i] += w * x[i] as i32` over a contiguous row. `acc` and `x` must
+/// have equal lengths (debug-asserted; callers slice exactly).
+#[inline]
+pub fn fma_row_i16(acc: &mut [i32], x: &[i16], w: i32) {
+    debug_assert_eq!(acc.len(), x.len());
+    // SSE2 / NEON are part of the x86_64 / aarch64 baselines: no runtime
+    // feature detection needed when the intrinsic paths are compiled in.
+    #[cfg(all(feature = "arch-simd", target_arch = "x86_64"))]
+    return unsafe { fma_row_i16_sse2(acc, x, w) };
+    #[cfg(all(feature = "arch-simd", target_arch = "aarch64"))]
+    return unsafe { fma_row_i16_neon(acc, x, w) };
+    #[cfg(not(all(
+        feature = "arch-simd",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    )))]
+    fma_row_i16_lanes(acc, x, w)
+}
+
+/// Portable fixed-width form of [`fma_row_i16`].
+// the explicit 0..LANES index loop over constant-length chunks is the
+// point: a fixed trip count with both slices indexed in lockstep is the
+// form LLVM unrolls into one vector op per chunk
+#[allow(clippy::needless_range_loop)]
+#[inline]
+pub fn fma_row_i16_lanes(acc: &mut [i32], x: &[i16], w: i32) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = acc.len();
+    let main = n - n % LANES;
+    let (a_main, a_tail) = acc.split_at_mut(main);
+    let (x_main, x_tail) = x.split_at(main);
+    for (a, xv) in a_main.chunks_exact_mut(LANES).zip(x_main.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            a[i] += w * xv[i] as i32;
+        }
+    }
+    for (a, &xv) in a_tail.iter_mut().zip(x_tail) {
+        *a += w * xv as i32;
+    }
+}
+
+/// Float twin: `acc[i] += w * x[i]`. Same chunking; per-element operation
+/// order is unchanged, so results are float-bit-identical to a scalar
+/// walk of the same row.
+#[allow(clippy::needless_range_loop)]
+#[inline]
+pub fn fma_row_f32(acc: &mut [f32], x: &[f32], w: f32) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = acc.len();
+    let main = n - n % LANES;
+    let (a_main, a_tail) = acc.split_at_mut(main);
+    let (x_main, x_tail) = x.split_at(main);
+    for (a, xv) in a_main.chunks_exact_mut(LANES).zip(x_main.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            a[i] += w * xv[i];
+        }
+    }
+    for (a, &xv) in a_tail.iter_mut().zip(x_tail) {
+        *a += w * xv;
+    }
+}
+
+/// SSE2 body: widen i16×i16 products to i32 via the mullo/mulhi
+/// interleave (exact — every i16×i16 product fits in i32) and add into
+/// the accumulator. Conv weights start as int8, so `w` always fits i16.
+#[cfg(all(feature = "arch-simd", target_arch = "x86_64"))]
+unsafe fn fma_row_i16_sse2(acc: &mut [i32], x: &[i16], w: i32) {
+    use std::arch::x86_64::*;
+    debug_assert!(i16::try_from(w).is_ok(), "conv weights are int8-range");
+    let n = acc.len();
+    let wv = _mm_set1_epi16(w as i16);
+    let mut i = 0;
+    while i + 8 <= n {
+        let xv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+        let lo = _mm_mullo_epi16(xv, wv);
+        let hi = _mm_mulhi_epi16(xv, wv);
+        let p0 = _mm_unpacklo_epi16(lo, hi); // products 0..4 as i32
+        let p1 = _mm_unpackhi_epi16(lo, hi); // products 4..8 as i32
+        let a0 = acc.as_mut_ptr().add(i) as *mut __m128i;
+        let a1 = acc.as_mut_ptr().add(i + 4) as *mut __m128i;
+        _mm_storeu_si128(a0, _mm_add_epi32(_mm_loadu_si128(a0), p0));
+        _mm_storeu_si128(a1, _mm_add_epi32(_mm_loadu_si128(a1), p1));
+        i += 8;
+    }
+    while i < n {
+        acc[i] += w * x[i] as i32;
+        i += 1;
+    }
+}
+
+/// NEON body: `vmlal_n_s16` is the widening multiply-accumulate this
+/// whole kernel is shaped around.
+#[cfg(all(feature = "arch-simd", target_arch = "aarch64"))]
+unsafe fn fma_row_i16_neon(acc: &mut [i32], x: &[i16], w: i32) {
+    use std::arch::aarch64::*;
+    debug_assert!(i16::try_from(w).is_ok(), "conv weights are int8-range");
+    let n = acc.len();
+    let ws = w as i16;
+    let mut i = 0;
+    while i + 8 <= n {
+        let xv = vld1q_s16(x.as_ptr().add(i));
+        let a0 = vld1q_s32(acc.as_ptr().add(i));
+        let a1 = vld1q_s32(acc.as_ptr().add(i + 4));
+        let r0 = vmlal_n_s16(a0, vget_low_s16(xv), ws);
+        let r1 = vmlal_n_s16(a1, vget_high_s16(xv), ws);
+        vst1q_s32(acc.as_mut_ptr().add(i), r0);
+        vst1q_s32(acc.as_mut_ptr().add(i + 4), r1);
+        i += 8;
+    }
+    while i < n {
+        acc[i] += w * x[i] as i32;
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn scalar_i16(acc: &mut [i32], x: &[i16], w: i32) {
+        for (a, &v) in acc.iter_mut().zip(x) {
+            *a += w * v as i32;
+        }
+    }
+
+    #[test]
+    fn i16_lanes_match_scalar_for_every_tail_length() {
+        let mut rng = Rng::new(0x51D);
+        for n in 0..=3 * LANES + 1 {
+            let x: Vec<i16> =
+                (0..n).map(|_| rng.range_i64(-32768, 32767) as i16).collect();
+            let base: Vec<i32> = (0..n)
+                .map(|_| rng.range_i64(-(1 << 20), 1 << 20) as i32)
+                .collect();
+            for w in [-128i32, -7, 0, 1, 127] {
+                let mut a = base.clone();
+                let mut b = base.clone();
+                fma_row_i16(&mut a, &x, w);
+                scalar_i16(&mut b, &x, w);
+                assert_eq!(a, b, "n={n} w={w}");
+                let mut c = base.clone();
+                fma_row_i16_lanes(&mut c, &x, w);
+                assert_eq!(c, b, "lanes n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_lanes_are_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0xF32);
+        for n in [0usize, 1, 7, 8, 9, 24, 31] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let w = rng.normal_f32();
+            let mut a = base.clone();
+            let mut b = base;
+            fma_row_f32(&mut a, &x, w);
+            for (bv, &xv) in b.iter_mut().zip(&x) {
+                *bv += w * xv;
+            }
+            // bitwise: same per-element operation, just chunked
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "n={n}"
+            );
+        }
+    }
+}

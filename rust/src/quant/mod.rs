@@ -10,6 +10,7 @@
 //! for the accelerator's accuracy edge over C++-with-PTQ.
 
 use crate::config::{A_QMAX, A_QMIN, LUT_ENTRIES, LUT_RANGE_T};
+use crate::ops::Arena;
 use crate::tensor::{Tensor, TensorI16};
 
 /// Quantized tensor: int16 payload + power-of-two exponent.
@@ -62,73 +63,226 @@ pub fn dequantize_i16(q: i16, exp: i32) -> f32 {
     (q as f64 / (2.0f64).powi(exp)) as f32
 }
 
+/// Quantize a float slice into a caller-provided buffer (allocation-free
+/// core of [`quantize_tensor`]).
+#[inline]
+pub fn quantize_slice(src: &[f32], exp: i32, out: &mut [i16]) {
+    debug_assert_eq!(src.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(src) {
+        *o = quantize_f32(v, exp);
+    }
+}
+
+/// Dequantize an i16 slice into a caller-provided buffer (allocation-free
+/// core of [`dequantize_tensor`]).
+#[inline]
+pub fn dequantize_slice(src: &[i16], exp: i32, out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    let s = (2.0f64).powi(exp);
+    for (o, &v) in out.iter_mut().zip(src) {
+        *o = (v as f64 / s) as f32;
+    }
+}
+
 /// Quantize a float tensor (SW requantization at extern boundaries).
 pub fn quantize_tensor(x: &Tensor<f32>, exp: i32) -> QTensor {
-    let data = x.data().iter().map(|&v| quantize_f32(v, exp)).collect();
+    let mut data = vec![0i16; x.len()];
+    quantize_slice(x.data(), exp, &mut data);
     QTensor { t: Tensor::from_vec(x.shape(), data), exp }
 }
 
 /// Dequantize to float (SW side of an extern transfer).
 pub fn dequantize_tensor(x: &QTensor) -> Tensor<f32> {
-    let s = (2.0f64).powi(x.exp);
-    let data = x.t.data().iter().map(|&v| (v as f64 / s) as f32).collect();
+    let mut data = vec![0f32; x.t.len()];
+    dequantize_slice(x.t.data(), x.exp, &mut data);
     Tensor::from_vec(x.t.shape(), data)
 }
 
+/// Shift a payload between exponents: `r = in_exp - out_exp`. The r == 0
+/// case is a plain copy. Shared core of every requant entry point.
+#[inline]
+fn requant_slice(src: &[i16], r: i32, out: &mut [i16]) {
+    debug_assert_eq!(src.len(), out.len());
+    if r == 0 {
+        out.copy_from_slice(src);
+        return;
+    }
+    for (o, &v) in out.iter_mut().zip(src) {
+        *o = clip_act(rshift_round(v as i64, r));
+    }
+}
+
 /// Requantize int16 -> int16 at a new exponent (the HW 'shift' stage).
+/// Allocating by-ref form; prefer [`requant_owned`] (which forwards the
+/// payload untouched when `x.exp == out_exp`) or [`requant_arena`] on
+/// per-frame paths.
 pub fn requant(x: &QTensor, out_exp: i32) -> QTensor {
     if x.exp == out_exp {
         return x.clone();
     }
-    let r = x.exp - out_exp;
-    let data = x
-        .t
-        .data()
-        .iter()
-        .map(|&v| clip_act(rshift_round(v as i64, r)))
-        .collect();
+    let mut data = vec![0i16; x.t.len()];
+    requant_slice(x.t.data(), x.exp - out_exp, &mut data);
     QTensor { t: Tensor::from_vec(x.t.shape(), data), exp: out_exp }
 }
 
+/// Requant into a caller-provided buffer (no allocation, no-op-safe).
+pub fn requant_into(x: &QTensor, out_exp: i32, out: &mut [i16]) {
+    requant_slice(x.t.data(), x.exp - out_exp, out);
+}
+
+/// Requant drawing the output payload from the arena freelist.
+pub fn requant_arena(x: &QTensor, out_exp: i32, arena: &mut Arena) -> QTensor {
+    let mut data = arena.take_i16(x.t.len());
+    requant_slice(x.t.data(), x.exp - out_exp, &mut data);
+    QTensor { t: Tensor::from_vec(x.shape(), data), exp: out_exp }
+}
+
+/// Requant that consumes its input: the `x.exp == out_exp` no-op case
+/// returns the payload unchanged (no deep copy — the fix for the old
+/// `requant(..) -> x.clone()` path), and otherwise the spent input is
+/// recycled into the arena.
+pub fn requant_owned(x: QTensor, out_exp: i32, arena: &mut Arena) -> QTensor {
+    if x.exp == out_exp {
+        return x;
+    }
+    let y = requant_arena(&x, out_exp, arena);
+    arena.recycle_q(x);
+    y
+}
+
+/// Elementwise-add core. The lshifts into the common exponent happen in
+/// **i64**: `(x as i32) << la` overflowed i32 for exponent gaps >= 17
+/// (and panicked in debug for gaps >= 32) — the latent bug fixed in PR 3
+/// and pinned by `add_q_survives_extreme_exponent_spreads`. The i64 form
+/// is exact for gaps < 48 (`|x| <= 2^15`, so `x << 47` still fits i64);
+/// real calibrated exponents are single digits, and the bound is
+/// debug-asserted rather than silently wrapped.
+#[inline]
+fn add_q_slices(
+    a: &[i16],
+    b: &[i16],
+    la: i32,
+    lb: i32,
+    r: i32,
+    out: &mut [i16],
+) {
+    debug_assert_eq!(a.len(), out.len());
+    debug_assert_eq!(b.len(), out.len());
+    debug_assert!(
+        la < 48 && lb < 48,
+        "add_q exponent gap {la}/{lb} exceeds the exact i64 range"
+    );
+    for (o, (&x, &y)) in out.iter_mut().zip(a.iter().zip(b)) {
+        let wide = ((x as i64) << la) + ((y as i64) << lb);
+        *o = clip_act(rshift_round(wide, r));
+    }
+}
+
 /// Quantized elementwise add: lshift into the max exponent (one lshift —
-/// the power-of-two property), add in i32, rshift-round-clip.
+/// the power-of-two property), add in i64, rshift-round-clip.
 pub fn add_q(a: &QTensor, b: &QTensor, out_exp: i32) -> QTensor {
     assert_eq!(a.shape(), b.shape());
+    let mut data = vec![0i16; a.t.len()];
+    add_q_into(a, b, out_exp, &mut data);
+    QTensor { t: Tensor::from_vec(a.shape(), data), exp: out_exp }
+}
+
+/// [`add_q`] into a caller-provided buffer.
+pub fn add_q_into(a: &QTensor, b: &QTensor, out_exp: i32, out: &mut [i16]) {
+    assert_eq!(a.shape(), b.shape());
     let em = a.exp.max(b.exp);
-    let (la, lb) = (em - a.exp, em - b.exp);
-    let r = em - out_exp;
-    let data = a
-        .t
-        .data()
-        .iter()
-        .zip(b.t.data())
-        .map(|(&x, &y)| {
-            let wide = ((x as i32) << la) as i64 + ((y as i32) << lb) as i64;
-            clip_act(rshift_round(wide, r))
-        })
-        .collect();
+    add_q_slices(
+        a.t.data(),
+        b.t.data(),
+        em - a.exp,
+        em - b.exp,
+        em - out_exp,
+        out,
+    );
+}
+
+/// [`add_q`] drawing the output payload from the arena freelist.
+pub fn add_q_arena(
+    a: &QTensor,
+    b: &QTensor,
+    out_exp: i32,
+    arena: &mut Arena,
+) -> QTensor {
+    assert_eq!(a.shape(), b.shape());
+    let mut data = arena.take_i16(a.t.len());
+    add_q_into(a, b, out_exp, &mut data);
     QTensor { t: Tensor::from_vec(a.shape(), data), exp: out_exp }
 }
 
 /// Quantized elementwise multiply: i16*i16 -> i32, rshift-round-clip.
 pub fn mul_q(a: &QTensor, b: &QTensor, out_exp: i32) -> QTensor {
     assert_eq!(a.shape(), b.shape());
-    let r = a.exp + b.exp - out_exp;
-    let data = a
-        .t
-        .data()
-        .iter()
-        .zip(b.t.data())
-        .map(|(&x, &y)| clip_act(rshift_round(x as i64 * y as i64, r)))
-        .collect();
+    let mut data = vec![0i16; a.t.len()];
+    mul_q_into(a, b, out_exp, &mut data);
     QTensor { t: Tensor::from_vec(a.shape(), data), exp: out_exp }
 }
 
+/// [`mul_q`] into a caller-provided buffer.
+pub fn mul_q_into(a: &QTensor, b: &QTensor, out_exp: i32, out: &mut [i16]) {
+    assert_eq!(a.shape(), b.shape());
+    debug_assert_eq!(a.t.len(), out.len());
+    let r = a.exp + b.exp - out_exp;
+    for (o, (&x, &y)) in out.iter_mut().zip(a.t.data().iter().zip(b.t.data())) {
+        *o = clip_act(rshift_round(x as i64 * y as i64, r));
+    }
+}
+
+/// [`mul_q`] drawing the output payload from the arena freelist.
+pub fn mul_q_arena(
+    a: &QTensor,
+    b: &QTensor,
+    out_exp: i32,
+    arena: &mut Arena,
+) -> QTensor {
+    assert_eq!(a.shape(), b.shape());
+    let mut data = arena.take_i16(a.t.len());
+    mul_q_into(a, b, out_exp, &mut data);
+    QTensor { t: Tensor::from_vec(a.shape(), data), exp: out_exp }
+}
+
+/// Concat shape check + per-part requant straight into the output
+/// payload: no per-part intermediates, no no-op deep copies (the old
+/// path cloned every part whose exponent already matched).
+fn concat_q_impl(parts: &[&QTensor], out_exp: i32, data: &mut [i16]) -> Vec<usize> {
+    assert!(!parts.is_empty());
+    let (_, _, h, w) = parts[0].t.nchw();
+    let mut off = 0;
+    for p in parts {
+        let (_, _, ph, pw) = p.t.nchw();
+        assert_eq!((ph, pw), (h, w), "spatial mismatch in concat");
+        let n = p.t.len();
+        requant_slice(p.t.data(), p.exp - out_exp, &mut data[off..off + n]);
+        off += n;
+    }
+    debug_assert_eq!(off, data.len());
+    let c_total: usize = parts.iter().map(|p| p.t.nchw().1).sum();
+    vec![1, c_total, h, w]
+}
+
 /// Concat along channels after requantizing every part to `out_exp`.
+/// The per-part requants write directly into the output buffer.
 pub fn concat_q(parts: &[&QTensor], out_exp: i32) -> QTensor {
-    let reqs: Vec<QTensor> = parts.iter().map(|p| requant(p, out_exp)).collect();
-    let refs: Vec<&TensorI16> = reqs.iter().map(|q| &q.t).collect();
-    QTensor { t: Tensor::concat_channels(&refs), exp: out_exp }
+    let total: usize = parts.iter().map(|p| p.t.len()).sum();
+    let mut data = vec![0i16; total];
+    let shape = concat_q_impl(parts, out_exp, &mut data);
+    QTensor { t: Tensor::from_vec(&shape, data), exp: out_exp }
+}
+
+/// [`concat_q`] drawing the output payload from the arena freelist.
+pub fn concat_q_arena(
+    parts: &[&QTensor],
+    out_exp: i32,
+    arena: &mut Arena,
+) -> QTensor {
+    let total: usize = parts.iter().map(|p| p.t.len()).sum();
+    let mut data = arena.take_i16(total);
+    let shape = concat_q_impl(parts, out_exp, &mut data);
+    QTensor { t: Tensor::from_vec(&shape, data), exp: out_exp }
 }
 
 // ---------------------------------------------------------------------------
@@ -180,14 +334,29 @@ impl ActLut {
         idx.clamp(0, LUT_ENTRIES as i64 - 1) as usize
     }
 
+    /// Apply to a raw slice at exponent `in_exp`, writing into `out`
+    /// (allocation-free core; also lets callers run the LUT over a
+    /// channel range of a larger payload without materialising a slice
+    /// tensor first).
+    pub fn apply_into(&self, src: &[i16], in_exp: i32, out: &mut [i16]) {
+        debug_assert_eq!(src.len(), out.len());
+        for (o, &v) in out.iter_mut().zip(src) {
+            *o = self.table[self.index(v, in_exp)];
+        }
+    }
+
     /// Apply to a whole tensor.
     pub fn apply(&self, x: &QTensor) -> QTensor {
-        let data = x
-            .t
-            .data()
-            .iter()
-            .map(|&v| self.table[self.index(v, x.exp)])
-            .collect();
+        let mut data = vec![0i16; x.t.len()];
+        self.apply_into(x.t.data(), x.exp, &mut data);
+        QTensor { t: Tensor::from_vec(x.shape(), data), exp: self.out_exp }
+    }
+
+    /// [`ActLut::apply`] drawing the output payload from the arena
+    /// freelist.
+    pub fn apply_arena(&self, x: &QTensor, arena: &mut Arena) -> QTensor {
+        let mut data = arena.take_i16(x.t.len());
+        self.apply_into(x.t.data(), x.exp, &mut data);
         QTensor { t: Tensor::from_vec(x.shape(), data), exp: self.out_exp }
     }
 }
@@ -315,5 +484,95 @@ mod tests {
         let b = QTensor { t: Tensor::from_vec(&[1, 1, 1, 2], vec![4, 8]), exp: 3 };
         let y = concat_q(&[&a, &b], 2);
         assert_eq!(y.t.data(), &[4, 8, 2, 4]);
+        assert_eq!(y.shape(), &[1, 2, 1, 2]);
+        // arena twin is bit-identical
+        let mut arena = Arena::new();
+        let ya = concat_q_arena(&[&a, &b], 2, &mut arena);
+        assert_eq!(ya.t.data(), y.t.data());
+        assert_eq!(ya.shape(), y.shape());
+    }
+
+    #[test]
+    fn add_q_survives_extreme_exponent_spreads() {
+        // regression for the latent `(x as i32) << la` overflow: with a
+        // 20-bit exponent gap the old i32 lshift wrapped (x = 4000 << 20
+        // > i32::MAX), and a 35-bit gap panicked in debug builds. The
+        // i64 path must keep the algebra exact: here y contributes
+        // nothing after the rshift, so out == requant(a).
+        // (0, 20) wraps the old i32 value (4000 << 20 > i32::MAX);
+        // (0, 35) additionally hit the debug shift-amount panic
+        for (ea, eb) in [(20i32, 0i32), (35, 0), (0, 20), (0, 35)] {
+            let a = QTensor {
+                t: Tensor::from_vec(&[1, 1, 1, 2], vec![4000i16, -4000]),
+                exp: ea,
+            };
+            let b = QTensor {
+                t: Tensor::from_vec(&[1, 1, 1, 2], vec![0i16, 0]),
+                exp: eb,
+            };
+            // out_exp == a.exp: the sum rshifts straight back down, so
+            // adding zero must return a's payload exactly
+            let y = add_q(&a, &b, ea);
+            assert_eq!(y.t.data(), a.t.data(), "ea={ea} eb={eb}");
+            // and a genuinely mixed add at a 20-bit gap stays exact:
+            // 3/2^0 + 1/2^20 at out_exp 0 rounds to 3
+            let big = QTensor {
+                t: Tensor::from_vec(&[1, 1, 1, 1], vec![3i16]),
+                exp: 0,
+            };
+            let tiny = QTensor {
+                t: Tensor::from_vec(&[1, 1, 1, 1], vec![1i16]),
+                exp: 20,
+            };
+            let s = add_q(&big, &tiny, 0);
+            assert_eq!(s.t.data(), &[3]);
+        }
+    }
+
+    #[test]
+    fn into_and_arena_variants_match_the_allocating_ops() {
+        let mut rng = Rng::new(17);
+        let mut arena = Arena::new();
+        for _ in 0..50 {
+            let n = rng.range_i64(1, 40) as usize;
+            let ea = rng.range_i64(2, 12) as i32;
+            let eb = rng.range_i64(2, 12) as i32;
+            let eo = rng.range_i64(2, 12) as i32;
+            let a = QTensor {
+                t: Tensor::from_vec(
+                    &[1, 1, 1, n],
+                    (0..n).map(|_| rng.range_i64(-30000, 30000) as i16).collect(),
+                ),
+                exp: ea,
+            };
+            let b = QTensor {
+                t: Tensor::from_vec(
+                    &[1, 1, 1, n],
+                    (0..n).map(|_| rng.range_i64(-30000, 30000) as i16).collect(),
+                ),
+                exp: eb,
+            };
+            assert_eq!(
+                add_q(&a, &b, eo).t.data(),
+                add_q_arena(&a, &b, eo, &mut arena).t.data()
+            );
+            assert_eq!(
+                mul_q(&a, &b, eo).t.data(),
+                mul_q_arena(&a, &b, eo, &mut arena).t.data()
+            );
+            let rq = requant(&a, eo);
+            assert_eq!(rq.t.data(), requant_arena(&a, eo, &mut arena).t.data());
+            let owned = requant_owned(a.clone(), eo, &mut arena);
+            assert_eq!(owned.t.data(), rq.t.data());
+            assert_eq!(owned.exp, eo);
+        }
+        // the no-op requant_owned forwards the payload without copying
+        let q = QTensor {
+            t: Tensor::from_vec(&[1, 1, 1, 2], vec![5i16, -5]),
+            exp: 6,
+        };
+        let ptr = q.t.data().as_ptr();
+        let same = requant_owned(q, 6, &mut arena);
+        assert_eq!(same.t.data().as_ptr(), ptr, "no-op requant must not copy");
     }
 }

@@ -64,6 +64,24 @@ pub trait HwBackend: Send + Sync {
     /// outputs as QTensors with manifest exponents.
     fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>>;
 
+    /// Execute one segment over a batch of input sets (one per stream in
+    /// a serving round). `batch[i]` is the `i`-th stream's inputs in
+    /// manifest order; `result[i]` is that stream's outputs. Every
+    /// element must be bit-identical to `run(id, &batch[i])` — batching
+    /// is a latency optimisation, never a semantic one.
+    ///
+    /// Default: the loop fallback, so every backend is batch-callable.
+    /// `RefBackend` overrides this with a real batched implementation
+    /// (shared `PackedConv` tap lists, one conv call per layer for the
+    /// whole batch).
+    fn run_batch(
+        &self,
+        id: SegmentId,
+        batch: &[Vec<&QTensor>],
+    ) -> Result<Vec<Vec<QTensor>>> {
+        batch.iter().map(|inputs| self.run(id, inputs)).collect()
+    }
+
     /// Resolve + run in one call (cold paths and tests).
     fn run_named(&self, name: &str, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
         self.run(self.resolve(name)?, inputs)

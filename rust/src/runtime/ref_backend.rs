@@ -177,33 +177,119 @@ impl HwBackend for RefBackend {
             }
             SegKind::CvdHead(b) => vec![self.model.seg_cvd_head(b, inputs[0])],
         };
-        anyhow::ensure!(
-            out.len() == desc.outputs.len(),
-            "segment {}: {} outputs computed, {} in manifest",
-            desc.name,
-            out.len(),
-            desc.outputs.len()
-        );
-        for (o, d) in out.iter().zip(&desc.outputs) {
-            anyhow::ensure!(
-                o.t.shape() == d.shape.as_slice(),
-                "segment {}: output '{}' shape {:?} != manifest {:?}",
-                desc.name,
-                d.name,
-                o.t.shape(),
-                d.shape
-            );
-            anyhow::ensure!(
-                o.exp == d.exp,
-                "segment {}: output '{}' exponent {} != manifest {}",
-                desc.name,
-                d.name,
-                o.exp,
-                d.exp
-            );
-        }
+        check_outputs(desc, &out)?;
         Ok(out)
     }
+
+    /// Real batched execution: conv-bearing segments run every conv once
+    /// over the whole batch through the batched model mirrors (shared
+    /// `PackedConv` tap lists, one thread-scope per conv); conv-free
+    /// segments (`cl_state`, `cl_out`) loop — they are pure elementwise
+    /// glue with nothing to amortise. Each batch element is bit-identical
+    /// to `run` on that element alone.
+    fn run_batch(
+        &self,
+        id: SegmentId,
+        batch: &[Vec<&QTensor>],
+    ) -> Result<Vec<Vec<QTensor>>> {
+        let desc = self
+            .manifest
+            .segments
+            .get(id.0)
+            .with_context(|| format!("segment id {} out of range", id.0))?;
+        for inputs in batch {
+            check_inputs(desc, inputs)?;
+        }
+        let outs: Vec<Vec<QTensor>> = match self.kinds[id.0] {
+            SegKind::FeFs => {
+                let imgs: Vec<&QTensor> =
+                    batch.iter().map(|ins| ins[0]).collect();
+                self.model.seg_fe_fs_batch(&imgs)
+            }
+            SegKind::Cve => self.model.seg_cve_batch(batch),
+            SegKind::ClGates => self
+                .model
+                .seg_cl_gates_batch(batch)
+                .into_iter()
+                .map(|y| vec![y])
+                .collect(),
+            SegKind::ClState => batch
+                .iter()
+                .map(|ins| {
+                    let (c_new, o_gate) =
+                        self.model.seg_cl_state(ins[0], ins[1]);
+                    vec![c_new, o_gate]
+                })
+                .collect(),
+            SegKind::ClOut => batch
+                .iter()
+                .map(|ins| vec![self.model.seg_cl_out(ins[0], ins[1])])
+                .collect(),
+            SegKind::CvdEntry(b) => self
+                .model
+                .seg_cvd_entry_batch(b, batch)
+                .into_iter()
+                .map(|y| vec![y])
+                .collect(),
+            SegKind::CvdMid(b, i) => {
+                let xs: Vec<&QTensor> = batch.iter().map(|ins| ins[0]).collect();
+                self.model
+                    .seg_cvd_mid_batch(b, i, &xs)
+                    .into_iter()
+                    .map(|y| vec![y])
+                    .collect()
+            }
+            SegKind::CvdHead(b) => {
+                let xs: Vec<&QTensor> = batch.iter().map(|ins| ins[0]).collect();
+                self.model
+                    .seg_cvd_head_batch(b, &xs)
+                    .into_iter()
+                    .map(|y| vec![y])
+                    .collect()
+            }
+        };
+        anyhow::ensure!(
+            outs.len() == batch.len(),
+            "segment {}: {} batch outputs for {} inputs",
+            desc.name,
+            outs.len(),
+            batch.len()
+        );
+        for out in &outs {
+            check_outputs(desc, out)?;
+        }
+        Ok(outs)
+    }
+}
+
+/// Output shape/exponent validation shared by `run` and `run_batch`.
+fn check_outputs(desc: &SegmentDesc, out: &[QTensor]) -> Result<()> {
+    anyhow::ensure!(
+        out.len() == desc.outputs.len(),
+        "segment {}: {} outputs computed, {} in manifest",
+        desc.name,
+        out.len(),
+        desc.outputs.len()
+    );
+    for (o, d) in out.iter().zip(&desc.outputs) {
+        anyhow::ensure!(
+            o.t.shape() == d.shape.as_slice(),
+            "segment {}: output '{}' shape {:?} != manifest {:?}",
+            desc.name,
+            d.name,
+            o.t.shape(),
+            d.shape
+        );
+        anyhow::ensure!(
+            o.exp == d.exp,
+            "segment {}: output '{}' exponent {} != manifest {}",
+            desc.name,
+            d.name,
+            o.exp,
+            d.exp
+        );
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -260,6 +346,26 @@ mod tests {
             be.qp().aexp("image") + 1,
         );
         assert!(be.run(id, &[&bad_exp]).is_err());
+    }
+
+    #[test]
+    fn run_batch_matches_per_stream_runs_on_fe_fs() {
+        let be = RefBackend::synthetic(7);
+        let id = be.resolve("fe_fs").unwrap();
+        let imgs: Vec<QTensor> = (0..3u64)
+            .map(|i| quantize_tensor(&random_image(i + 10), be.qp().aexp("image")))
+            .collect();
+        let batch: Vec<Vec<&QTensor>> = imgs.iter().map(|q| vec![q]).collect();
+        let batched = be.run_batch(id, &batch).unwrap();
+        assert_eq!(batched.len(), 3);
+        for (bi, ins) in batch.iter().enumerate() {
+            let solo = be.run(id, ins).unwrap();
+            assert_eq!(solo.len(), batched[bi].len());
+            for (a, b) in solo.iter().zip(&batched[bi]) {
+                assert_eq!(a.t.data(), b.t.data(), "stream {bi}");
+                assert_eq!(a.exp, b.exp);
+            }
+        }
     }
 
     #[test]

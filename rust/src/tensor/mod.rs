@@ -158,6 +158,16 @@ impl TensorF {
         }
     }
 
+    /// In-place elementwise add — the allocation-free twin of
+    /// [`TensorF::add`] (IEEE addition is commutative, so `a.add_assign(b)`
+    /// is bit-identical to `b.add(a)` too).
+    pub fn add_assign(&mut self, other: &TensorF) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
     pub fn mul(&self, other: &TensorF) -> TensorF {
         assert_eq!(self.shape, other.shape);
         Tensor {
@@ -168,6 +178,15 @@ impl TensorF {
                 .zip(&other.data)
                 .map(|(a, b)| a * b)
                 .collect(),
+        }
+    }
+
+    /// In-place elementwise multiply (allocation-free twin of
+    /// [`TensorF::mul`]; bit-identical by IEEE commutativity).
+    pub fn mul_assign(&mut self, other: &TensorF) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a *= *b;
         }
     }
 

@@ -258,11 +258,19 @@ pub fn merge_into(path: &Path, fresh: &[BenchRecord]) -> Result<()> {
 /// `BENCH_conv.json` — then validate the schema, printing the outcome and
 /// exiting non-zero on drift.
 pub fn write_and_validate(smoke: bool, records: &[BenchRecord]) {
-    let path = Path::new(if smoke {
-        "BENCH_conv.smoke.json"
+    write_and_validate_named("BENCH_conv", smoke, records);
+}
+
+/// As [`write_and_validate`] for an arbitrary record-file stem: the
+/// records land in `{stem}.json` (or the `{stem}.smoke.json` scratch
+/// file under `--smoke`). `benches/elementwise.rs` uses `BENCH_ops`.
+pub fn write_and_validate_named(stem: &str, smoke: bool, records: &[BenchRecord]) {
+    let name = if smoke {
+        format!("{stem}.smoke.json")
     } else {
-        "BENCH_conv.json"
-    });
+        format!("{stem}.json")
+    };
+    let path = Path::new(&name);
     if smoke {
         let _ = std::fs::remove_file(path);
     }

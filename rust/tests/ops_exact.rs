@@ -1,0 +1,315 @@
+//! Bit-exactness property tests for the PR-3 op-stack fast paths:
+//! the SIMD-lane conv interior, the allocation-free `_into`/arena
+//! elementwise + sampling + norm ops, the batched conv kernel, and the
+//! batched `RefBackend`. Every fast path is pinned against its scalar /
+//! allocating / solo specification over randomized shapes, exponents,
+//! batch widths and thread counts — mirroring `conv_exact.rs`.
+
+use fadec::ops::{
+    conv2d_q_packed, conv2d_q_packed_batch, conv2d_q_ref, layer_norm,
+    layer_norm_into, resize_bilinear, resize_bilinear_into, upsample_nearest2x_i16,
+    upsample_nearest2x_i16_arena, upsample_nearest2x_i16_into, Arena,
+    PackedQConv,
+};
+use fadec::quant::{
+    add_q, add_q_arena, add_q_into, concat_q, concat_q_arena, mul_q, mul_q_arena,
+    mul_q_into, requant, requant_arena, requant_into, requant_owned, QTensor,
+};
+use fadec::runtime::{HwBackend, RefBackend};
+use fadec::tensor::{Tensor, TensorF, TensorI16, TensorI32, TensorI8};
+use fadec::util::Rng;
+
+fn rand_q(rng: &mut Rng, shape: &[usize], exp: i32) -> QTensor {
+    let n: usize = shape.iter().product();
+    QTensor {
+        t: Tensor::from_vec(
+            shape,
+            (0..n).map(|_| rng.range_i64(-30000, 30000) as i16).collect(),
+        ),
+        exp,
+    }
+}
+
+/// An arena pre-seeded with dirty recycled buffers, so stale-content
+/// bugs in any `take_*` consumer show up as value differences.
+fn dirty_arena(threads: usize) -> Arena {
+    let mut a = Arena::with_threads(threads);
+    for _ in 0..4 {
+        a.recycle_i16(vec![i16::MAX; 97]);
+        a.recycle_f32(vec![f32::NAN; 61]);
+    }
+    a
+}
+
+#[test]
+fn simd_conv_interior_matches_ref_over_lane_remainder_widths() {
+    // widths 1..=20 sweep every n % LANES tail; heights catch row bases
+    let mut rng = Rng::new(0x51AD);
+    for w in 1..=20usize {
+        let (ic, oc, h, k, stride) = (3usize, 4usize, 5usize, 3usize, 1usize);
+        let x = QTensor {
+            t: Tensor::from_vec(
+                &[1, ic, h, w],
+                (0..ic * h * w)
+                    .map(|_| rng.range_i64(-4000, 4000) as i16)
+                    .collect(),
+            ),
+            exp: 8,
+        };
+        let wt = TensorI8::from_vec(
+            &[oc, ic, k, k],
+            (0..oc * ic * k * k)
+                .map(|_| rng.range_i64(-127, 127) as i8)
+                .collect(),
+        );
+        let b = TensorI32::from_vec(
+            &[oc],
+            (0..oc).map(|_| rng.range_i64(-512, 512) as i32).collect(),
+        );
+        let expect = conv2d_q_ref(&x, &wt, &b, stride, 11, 9, false, 8);
+        let pw = PackedQConv::pack_dense(&wt);
+        let mut arena = dirty_arena(1);
+        let got =
+            conv2d_q_packed(&x, &pw, b.data(), stride, 11, 9, false, 8, &mut arena);
+        assert_eq!(got.t.data(), expect.t.data(), "w={w}");
+    }
+}
+
+#[test]
+fn elementwise_into_and_arena_variants_match_the_specs() {
+    let mut rng = Rng::new(0xE1E);
+    let mut arena = dirty_arena(1);
+    for trial in 0..100 {
+        let c = rng.range_i64(1, 4) as usize;
+        let h = rng.range_i64(1, 6) as usize;
+        let w = rng.range_i64(1, 9) as usize;
+        let shape = [1usize, c, h, w];
+        let ea = rng.range_i64(2, 14) as i32;
+        let eb = rng.range_i64(2, 14) as i32;
+        let eo = rng.range_i64(2, 14) as i32;
+        let a = rand_q(&mut rng, &shape, ea);
+        let b = rand_q(&mut rng, &shape, eb);
+        let n = a.t.len();
+
+        // add
+        let spec = add_q(&a, &b, eo);
+        let got = add_q_arena(&a, &b, eo, &mut arena);
+        assert_eq!(spec.t.data(), got.t.data(), "add trial {trial}");
+        assert_eq!(spec.exp, got.exp);
+        let mut buf = vec![0i16; n];
+        add_q_into(&a, &b, eo, &mut buf);
+        assert_eq!(spec.t.data(), &buf[..], "add_into trial {trial}");
+        arena.recycle_q(got);
+
+        // mul
+        let spec = mul_q(&a, &b, eo);
+        let got = mul_q_arena(&a, &b, eo, &mut arena);
+        assert_eq!(spec.t.data(), got.t.data(), "mul trial {trial}");
+        mul_q_into(&a, &b, eo, &mut buf);
+        assert_eq!(spec.t.data(), &buf[..], "mul_into trial {trial}");
+        arena.recycle_q(got);
+
+        // requant (incl. the exp == out_exp no-op case every few trials)
+        let eo_r = if trial % 5 == 0 { ea } else { eo };
+        let spec = requant(&a, eo_r);
+        let got = requant_arena(&a, eo_r, &mut arena);
+        assert_eq!(spec.t.data(), got.t.data(), "requant trial {trial}");
+        requant_into(&a, eo_r, &mut buf);
+        assert_eq!(spec.t.data(), &buf[..], "requant_into trial {trial}");
+        let owned = requant_owned(a.clone(), eo_r, &mut arena);
+        assert_eq!(spec.t.data(), owned.t.data(), "requant_owned trial {trial}");
+        assert_eq!(owned.exp, eo_r);
+        arena.recycle_q(got);
+        arena.recycle_q(owned);
+
+        // concat: new direct-into-output path vs the naive reference
+        // (requant every part, then memcpy-concat)
+        let parts: Vec<&QTensor> = vec![&a, &b];
+        let naive: Vec<QTensor> =
+            parts.iter().map(|p| requant(p, eo)).collect();
+        let naive_refs: Vec<&TensorI16> = naive.iter().map(|q| &q.t).collect();
+        let expect = Tensor::concat_channels(&naive_refs);
+        let got = concat_q(&parts, eo);
+        assert_eq!(got.t.data(), expect.data(), "concat trial {trial}");
+        assert_eq!(got.t.shape(), expect.shape());
+        let got_a = concat_q_arena(&parts, eo, &mut arena);
+        assert_eq!(got_a.t.data(), expect.data(), "concat_arena trial {trial}");
+        arena.recycle_q(got_a);
+    }
+}
+
+#[test]
+fn requant_owned_noop_forwards_the_payload() {
+    let mut arena = Arena::new();
+    let q = QTensor {
+        t: Tensor::from_vec(&[1, 1, 1, 3], vec![1i16, -2, 3]),
+        exp: 9,
+    };
+    let ptr = q.t.data().as_ptr();
+    let out = requant_owned(q, 9, &mut arena);
+    assert_eq!(out.t.data().as_ptr(), ptr, "no-op requant must not copy");
+    assert_eq!(out.t.data(), &[1, -2, 3]);
+}
+
+#[test]
+fn upsample_and_layer_norm_into_match_their_specs() {
+    let mut rng = Rng::new(0x0755);
+    for trial in 0..30 {
+        let c = rng.range_i64(1, 4) as usize;
+        let h = rng.range_i64(1, 7) as usize;
+        let w = rng.range_i64(1, 7) as usize;
+        // i16 nearest upsample
+        let x = TensorI16::from_vec(
+            &[1, c, h, w],
+            (0..c * h * w)
+                .map(|_| rng.range_i64(-30000, 30000) as i16)
+                .collect(),
+        );
+        let spec = upsample_nearest2x_i16(&x);
+        let mut buf = vec![0i16; c * 4 * h * w];
+        upsample_nearest2x_i16_into(&x, &mut buf);
+        assert_eq!(spec.data(), &buf[..], "upsample_into trial {trial}");
+        let mut arena = dirty_arena(1);
+        let got = upsample_nearest2x_i16_arena(&x, &mut arena);
+        assert_eq!(spec.data(), got.data(), "upsample_arena trial {trial}");
+        assert_eq!(spec.shape(), got.shape());
+
+        // float bilinear resize (exercise up- and down-scaling)
+        let xf = TensorF::from_vec(
+            &[1, c, h, w],
+            (0..c * h * w).map(|_| rng.normal_f32()).collect(),
+        );
+        let (oh, ow) = (
+            rng.range_i64(1, 10) as usize,
+            rng.range_i64(1, 10) as usize,
+        );
+        let spec = resize_bilinear(&xf, oh, ow);
+        let mut fbuf = vec![0f32; c * oh * ow];
+        resize_bilinear_into(&xf, oh, ow, &mut fbuf);
+        assert_eq!(
+            spec.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            fbuf.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "bilinear trial {trial}"
+        );
+
+        // layer norm
+        let gamma: Vec<f32> = (0..c).map(|_| rng.normal_f32()).collect();
+        let beta: Vec<f32> = (0..c).map(|_| rng.normal_f32()).collect();
+        let spec = layer_norm(&xf, &gamma, &beta);
+        let mut lbuf = vec![0f32; c * h * w];
+        layer_norm_into(&xf, &gamma, &beta, &mut lbuf);
+        assert_eq!(
+            spec.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            lbuf.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "layer_norm trial {trial}"
+        );
+    }
+}
+
+#[test]
+fn batched_conv_matches_solo_over_random_shapes_widths_threads() {
+    let mut rng = Rng::new(0xBA7C);
+    for trial in 0..40 {
+        let k = [1usize, 3, 5][rng.below(3) as usize];
+        let stride = [1usize, 2][rng.below(2) as usize];
+        let ic = rng.range_i64(1, 5) as usize;
+        let oc = rng.range_i64(1, 6) as usize;
+        let h = rng.range_i64(1, 9) as usize;
+        let w = rng.range_i64(1, 9) as usize;
+        let width = rng.range_i64(1, 5) as usize;
+        let threads = rng.range_i64(1, 4) as usize;
+        let s_q = rng.range_i64(1, 127) as i32;
+        let r = rng.range_i64(-2, 14) as i32;
+        let relu = rng.below(2) == 0;
+
+        let wt = TensorI8::from_vec(
+            &[oc, ic, k, k],
+            (0..oc * ic * k * k)
+                .map(|_| rng.range_i64(-127, 127) as i8)
+                .collect(),
+        );
+        let b: Vec<i32> =
+            (0..oc).map(|_| rng.range_i64(-1024, 1024) as i32).collect();
+        let pw = PackedQConv::pack_dense(&wt);
+        let xs: Vec<QTensor> = (0..width)
+            .map(|_| QTensor {
+                t: Tensor::from_vec(
+                    &[1, ic, h, w],
+                    (0..ic * h * w)
+                        .map(|_| rng.range_i64(-4000, 4000) as i16)
+                        .collect(),
+                ),
+                exp: 8,
+            })
+            .collect();
+        let solo: Vec<QTensor> = xs
+            .iter()
+            .map(|x| {
+                let mut a = Arena::new();
+                conv2d_q_packed(x, &pw, &b, stride, s_q, r, relu, 8, &mut a)
+            })
+            .collect();
+        let refs: Vec<&QTensor> = xs.iter().collect();
+        let mut arena = dirty_arena(threads);
+        let got = conv2d_q_packed_batch(
+            &refs, &pw, &b, stride, s_q, r, relu, 8, &mut arena,
+        );
+        assert_eq!(got.len(), width);
+        for (bi, (g, s)) in got.iter().zip(&solo).enumerate() {
+            assert_eq!(
+                g.t.data(),
+                s.t.data(),
+                "trial {trial} batch {bi}: k={k} s={stride} ic={ic} oc={oc} \
+                 h={h} w={w} width={width} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ref_backend_run_batch_matches_run_for_every_segment() {
+    // for every manifest segment, random manifest-shaped inputs, batch of
+    // three, per-element comparison against solo `run` — covers the whole
+    // batched mirror surface (fe_fs / cve / cl_* / cvd_*) in one sweep
+    let be = RefBackend::synthetic(11);
+    let mut rng = Rng::new(0x5E6);
+    let segs = be.manifest().segments.clone();
+    for seg in &segs {
+        let id = be.resolve(&seg.name).unwrap();
+        let batch_inputs: Vec<Vec<QTensor>> = (0..3)
+            .map(|_| {
+                seg.inputs
+                    .iter()
+                    .map(|d| QTensor {
+                        t: Tensor::from_vec(
+                            &d.shape,
+                            (0..d.numel())
+                                .map(|_| rng.range_i64(-2000, 2000) as i16)
+                                .collect(),
+                        ),
+                        exp: d.exp,
+                    })
+                    .collect()
+            })
+            .collect();
+        let batch: Vec<Vec<&QTensor>> = batch_inputs
+            .iter()
+            .map(|ins| ins.iter().collect())
+            .collect();
+        let batched = be.run_batch(id, &batch).unwrap();
+        assert_eq!(batched.len(), 3, "{}", seg.name);
+        for (bi, ins) in batch.iter().enumerate() {
+            let solo = be.run(id, ins).unwrap();
+            assert_eq!(solo.len(), batched[bi].len(), "{}", seg.name);
+            for (oi, (s, g)) in solo.iter().zip(&batched[bi]).enumerate() {
+                assert_eq!(
+                    s.t.data(),
+                    g.t.data(),
+                    "segment {} batch {bi} output {oi}",
+                    seg.name
+                );
+                assert_eq!(s.exp, g.exp);
+            }
+        }
+    }
+}

@@ -156,6 +156,54 @@ fn interleaved_streams_are_bit_identical_to_sequential() {
 }
 
 #[test]
+fn batched_rounds_are_bit_identical_for_every_width_and_thread_count() {
+    // run_round advances the round in lockstep and batches every HW
+    // segment through HwBackend::run_batch; sweep batch widths and conv
+    // worker counts and pin each stream's depths against solo serving
+    let n_frames = 2;
+    let scenes: Vec<Scene> = (0..3)
+        .map(|s| Scene::synthetic(&format!("bw{s}"), n_frames, 40 + s as u64))
+        .collect();
+    let (backend, qp) = shared_backend(77);
+    let solo: Vec<Vec<TensorF>> = scenes
+        .iter()
+        .map(|sc| run_sequential(&backend, &qp, sc, n_frames))
+        .collect();
+    for width in 1..=3usize {
+        for threads in [1usize, 3] {
+            let mut server = StreamServer::on_ref_backend(
+                77,
+                PipelineOptions { conv_threads: threads, ..Default::default() },
+            )
+            .unwrap();
+            let streams: Vec<usize> =
+                (0..width).map(|_| server.open_stream()).collect();
+            for i in 0..n_frames {
+                let imgs: Vec<TensorF> = (0..width)
+                    .map(|s| scenes[s].normalized_image(i))
+                    .collect();
+                let inputs: Vec<_> = streams
+                    .iter()
+                    .map(|&s| (s, &imgs[s], &scenes[s].poses[i]))
+                    .collect();
+                let outs = server.run_round(&inputs).unwrap();
+                assert_eq!(outs.len(), width);
+                for (sid, out) in outs {
+                    assert_eq!(
+                        out.depth.data(),
+                        solo[sid][i].data(),
+                        "width={width} threads={threads} stream={sid} frame={i}"
+                    );
+                }
+            }
+            let bs = server.batch_stats();
+            assert_eq!(bs.rounds, n_frames);
+            assert_eq!(bs.max_width, width);
+        }
+    }
+}
+
+#[test]
 fn four_streams_serve_concurrently_with_throughput_accounting() {
     let (backend, qp) = shared_backend(5);
     let mut server = StreamServer::new(
