@@ -7,16 +7,21 @@
 //! 2. **batched rounds** — `run_round` advances the round's frames in
 //!    lockstep, batching every HW segment into one
 //!    `HwBackend::run_batch` call and spreading the per-stream SW ops
-//!    over the extern worker pool.
+//!    over the extern worker pool;
+//! 3. **pipelined rounds** — `run_pipelined` additionally keeps up to
+//!    `--pipeline-depth` rounds in flight through the backend's async
+//!    submit/await queue, so the HW lane executes one round's segments
+//!    while the CPU runs another round's software stages (the paper's
+//!    Fig-5 overlap lifted across rounds).
 //!
-//! Both runs must produce bit-identical depth maps (asserted below);
-//! batching is a latency optimisation only. Runs from a clean checkout —
-//! no `artifacts/` needed: the segments are served by the pure-software
-//! RefBackend with synthetic calibration, and each stream gets its own
-//! procedurally generated video.
+//! All runs must produce bit-identical depth maps (asserted below);
+//! batching and pipelining are latency optimisations only. Runs from a
+//! clean checkout — no `artifacts/` needed: the segments are served by
+//! the pure-software RefBackend with synthetic calibration, and each
+//! stream gets its own procedurally generated video.
 //!
 //!     cargo run --release --example multi_stream \
-//!         [-- --streams N --frames M --conv-threads T]
+//!         [-- --streams N --frames M --conv-threads T --pipeline-depth K]
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -24,6 +29,7 @@ use std::time::Instant;
 use fadec::config;
 use fadec::coordinator::{PipelineOptions, StreamServer};
 use fadec::data::dataset::Scene;
+use fadec::poses::Mat4;
 use fadec::runtime::{HwBackend, RefBackend};
 use fadec::tensor::TensorF;
 use fadec::util::Args;
@@ -33,6 +39,7 @@ fn main() -> anyhow::Result<()> {
     let n_streams = args.get_usize("streams", config::DEFAULT_STREAMS);
     let frames = args.get_usize("frames", 6);
     let conv_threads = args.get_usize("conv-threads", 2);
+    let pipeline_depth = args.get_usize("pipeline-depth", 2);
 
     // one backend instance, shared by every stream; the server's engine
     // applies --conv-threads to it (output channels — and, in batched
@@ -117,6 +124,67 @@ fn main() -> anyhow::Result<()> {
     }
     println!("bit-exact: batched rounds == per-stream stepping\n");
 
+    // --- mode 3: pipelined rounds (depth-K run_pipelined) ----------------
+    let mut pipe_server = make_server()?;
+    let pipe_streams: Vec<usize> =
+        (0..n_streams).map(|_| pipe_server.open_stream()).collect();
+    // materialize the whole workload so K rounds can be in flight at once
+    let all_imgs: Vec<Vec<TensorF>> = (0..frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..frames)
+        .map(|i| {
+            pipe_streams
+                .iter()
+                .map(|&s| (s, &all_imgs[i][s], &scenes[s].poses[i]))
+                .collect()
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut results = pipe_server.run_pipelined(&rounds, pipeline_depth)?;
+    let pipe_wall = t0.elapsed().as_secs_f64();
+    let pipe_fps = (n_streams * frames) as f64 / pipe_wall;
+    println!(
+        "pipelined depth {pipeline_depth}:   {:7.3} s wall, {:6.2} fps \
+         aggregate  (speedup x{:.2} vs sequential, x{:.2} vs batched)",
+        pipe_wall,
+        pipe_fps,
+        seq_wall / pipe_wall.max(1e-9),
+        batch_wall / pipe_wall.max(1e-9),
+    );
+
+    // pipelining must also be bit-exact: every stream's last depth map
+    // equals per-stream stepping
+    let mut last = results.pop().expect("at least one round");
+    last.sort_by_key(|(sid, _)| *sid);
+    let pipe_last: Vec<TensorF> =
+        last.into_iter().map(|(_, o)| o.depth).collect();
+    assert_eq!(seq_last.len(), pipe_last.len());
+    for (s, (a, b)) in seq_last.iter().zip(&pipe_last).enumerate() {
+        assert_eq!(
+            a.data(),
+            b.data(),
+            "stream {s}: pipelined serving diverged from per-stream stepping"
+        );
+    }
+    println!("bit-exact: pipelined rounds == per-stream stepping\n");
+
+    let pbs = pipe_server.batch_stats();
+    println!(
+        "pipeline overlap: {:.1}% of HW time hidden behind SW \
+         (fill {:.1} ms, drain {:.1} ms, depth {})",
+        100.0 * pbs.overlapped_hw_ratio(),
+        pbs.fill_seconds * 1e3,
+        pbs.drain_seconds * 1e3,
+        pbs.max_inflight,
+    );
+    let sw_hidden: f64 = pipe_streams
+        .iter()
+        .map(|&s| pipe_server.stream_throughput(s).overlap_ratio())
+        .sum::<f64>()
+        / n_streams as f64;
+    println!("per-stream SW hidden behind HW: {:.1}% (mean)\n", 100.0 * sw_hidden);
+
     println!("{}", server.report());
     let stats = server.take_extern_stats();
     println!(
@@ -133,10 +201,14 @@ fn main() -> anyhow::Result<()> {
     );
 
     // isolation sanity: every session advanced exactly `frames` frames
-    // and kept its keyframe buffer within capacity
+    // and kept its keyframe buffer within capacity — in both servers
     for &s in &streams {
         assert_eq!(server.session(s).frames_done(), frames);
         assert!(server.session(s).kb.len() <= config::KB_CAPACITY);
+    }
+    for &s in &pipe_streams {
+        assert_eq!(pipe_server.session(s).frames_done(), frames);
+        assert!(pipe_server.session(s).kb.len() <= config::KB_CAPACITY);
     }
     println!("all {n_streams} sessions isolated and up to date");
     Ok(())

@@ -1,0 +1,138 @@
+//! End-to-end multi-stream serving benchmark (PR 4): the same N-stream
+//! workload served three ways on the artifact-free RefBackend —
+//!
+//! 1. **sequential** — per-stream stepping (`step_stream`), streams
+//!    strictly serialized;
+//! 2. **batched**    — lockstep rounds (`run_round`), one batched HW
+//!    call per segment;
+//! 3. **pipelined**  — depth-K rounds in flight (`run_pipelined`), HW
+//!    segments overlapping other rounds' software stages.
+//!
+//! Records merge into `BENCH_serve.json` (`util::benchjson` schema).
+//! One frame is the unit of work: `ns_per_iter` is nanoseconds per
+//! served frame and the `gops` column holds the aggregate frames per
+//! *second* (fps) — frames/ns would vanish in the schema's 3-decimal
+//! serialization.
+//!
+//!     cargo bench --bench serve [-- --smoke]
+//!
+//! `--smoke` shrinks the workload to one warm pass and writes the
+//! `BENCH_serve.smoke.json` scratch file (the CI bench-smoke step), so
+//! cold timings never overwrite the real perf record.
+
+use std::time::Instant;
+
+use fadec::coordinator::{PipelineOptions, StreamServer};
+use fadec::data::dataset::Scene;
+use fadec::poses::Mat4;
+use fadec::tensor::TensorF;
+use fadec::util::benchjson::{self, BenchRecord};
+use fadec::util::Args;
+
+const CONV_THREADS: usize = 2;
+
+fn make_server() -> StreamServer {
+    StreamServer::on_ref_backend(
+        5,
+        PipelineOptions { conv_threads: CONV_THREADS, ..Default::default() },
+    )
+    .expect("synthetic server")
+}
+
+fn rec(op: &str, shape: &str, wall_s: f64, frames: usize) -> BenchRecord {
+    let ns = wall_s * 1e9 / frames as f64;
+    BenchRecord {
+        op: op.into(),
+        shape: shape.into(),
+        ns_per_iter: ns,
+        // aggregate fps (see module docs: frames/ns would round to 0.000
+        // in the serialized schema)
+        gops: if wall_s > 0.0 { frames as f64 / wall_s } else { 0.0 },
+        threads: CONV_THREADS,
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let smoke = args.has("smoke");
+    let n_streams = args.get_usize("streams", 4);
+    let n_frames = args.get_usize("frames", if smoke { 2 } else { 8 });
+    let shape = format!("{n_streams}streams x {n_frames}frames");
+    let total = n_streams * n_frames;
+
+    let scenes: Vec<Scene> = (0..n_streams)
+        .map(|s| Scene::synthetic(&format!("bench-{s}"), n_frames, 500 + s as u64))
+        .collect();
+    let imgs: Vec<Vec<TensorF>> = (0..n_frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    // --- sequential: per-stream stepping --------------------------------
+    let mut server = make_server();
+    let streams: Vec<usize> =
+        (0..n_streams).map(|_| server.open_stream()).collect();
+    let t0 = Instant::now();
+    for i in 0..n_frames {
+        for &s in &streams {
+            server
+                .step_stream(s, &imgs[i][s], &scenes[s].poses[i])
+                .expect("step");
+        }
+    }
+    let seq_wall = t0.elapsed().as_secs_f64();
+    records.push(rec("serve_sequential", &shape, seq_wall, total));
+
+    // --- batched: lockstep rounds ---------------------------------------
+    let mut server = make_server();
+    let streams: Vec<usize> =
+        (0..n_streams).map(|_| server.open_stream()).collect();
+    let t0 = Instant::now();
+    for i in 0..n_frames {
+        let inputs: Vec<(usize, &TensorF, &Mat4)> = streams
+            .iter()
+            .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+            .collect();
+        server.run_round(&inputs).expect("round");
+    }
+    let batch_wall = t0.elapsed().as_secs_f64();
+    records.push(rec("serve_batched", &shape, batch_wall, total));
+
+    // --- pipelined: depth-K rounds in flight ----------------------------
+    for k in [2usize, 4] {
+        let mut server = make_server();
+        let streams: Vec<usize> =
+            (0..n_streams).map(|_| server.open_stream()).collect();
+        let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..n_frames)
+            .map(|i| {
+                streams
+                    .iter()
+                    .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                    .collect()
+            })
+            .collect();
+        let t0 = Instant::now();
+        server.run_pipelined(&rounds, k).expect("pipelined");
+        let wall = t0.elapsed().as_secs_f64();
+        records.push(rec(&format!("serve_pipelined_k{k}"), &shape, wall, total));
+        let bs = server.batch_stats();
+        println!(
+            "pipelined k={k}: {:7.3} s wall ({:6.2} fps), HW hidden {:.1}% \
+             (fill {:.1} ms, drain {:.1} ms)",
+            wall,
+            total as f64 / wall.max(1e-9),
+            100.0 * bs.overlapped_hw_ratio(),
+            bs.fill_seconds * 1e3,
+            bs.drain_seconds * 1e3,
+        );
+    }
+    println!(
+        "sequential: {:7.3} s ({:6.2} fps)   batched: {:7.3} s ({:6.2} fps)",
+        seq_wall,
+        total as f64 / seq_wall.max(1e-9),
+        batch_wall,
+        total as f64 / batch_wall.max(1e-9),
+    );
+
+    benchjson::write_and_validate_named("BENCH_serve", smoke, &records);
+}

@@ -20,8 +20,8 @@ pub mod session;
 pub use extern_link::{ExternLink, ExternRecord, ExternStats, Pending};
 pub use pipeline::{
     Coordinator, FrameOutput, FrameStage, PipelineEngine, PipelineOptions,
-    SegmentHandles,
+    RoundInFlight, SegmentHandles,
 };
-pub use profiler::{FrameProfile, Lane, Profiler, StageRecord};
+pub use profiler::{overlap_seconds, FrameProfile, Lane, Profiler, StageRecord};
 pub use server::StreamServer;
 pub use session::StreamSession;

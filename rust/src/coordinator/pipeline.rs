@@ -23,6 +23,23 @@
 //! serial. Lockstep batching is latency-only: every stream's outputs are
 //! bit-identical to stepping it alone (pinned by `rust/tests/server.rs`).
 //!
+//! # Cross-round pipelining (PR 4)
+//!
+//! The lockstep round is also available as a *resumable value*:
+//! [`PipelineEngine::begin_round`] runs the session-free prologue
+//! (image quantization) and **submits** the round's batched FeFs segment
+//! through the backend's async submit/await interface, returning a
+//! [`RoundInFlight`] instead of blocking; [`PipelineEngine::finish_round`]
+//! later resumes it through the remaining stages, with every HW call
+//! routed through the same FIFO submit queue. `StreamServer::run_pipelined`
+//! keeps up to K rounds in this begun-but-unfinished state, so the
+//! backend executes round r+1's FeFs while the CPU side runs round r's
+//! software stages — the paper's HW/SW overlap lifted from within one
+//! frame to across consecutive rounds. The split is bit-exact because
+//! FeFs consumes only the quantized image: every session-dependent stage
+//! still runs in `finish_round`, strictly after the previous round's
+//! commit.
+//!
 //! The paper's two overlaps survive as schedule structure, not inline
 //! code:
 //!
@@ -53,7 +70,7 @@ use crate::model::weights::QuantParams;
 use crate::ops::{layer_norm, upsample_bilinear2x};
 use crate::poses::Mat4;
 use crate::quant::{dequantize_tensor, quantize_tensor, QTensor};
-use crate::runtime::{HwBackend, HwRuntime, RefBackend, SegmentId};
+use crate::runtime::{HwBackend, HwRuntime, RefBackend, SegmentId, SubmitHandle};
 use crate::tensor::TensorF;
 
 use super::extern_link::{ExternStats, ExternLink, Pending};
@@ -64,6 +81,10 @@ use super::session::StreamSession;
 pub struct FrameOutput {
     pub depth: TensorF,
     pub profile: FrameProfile,
+    /// The instant the frame's profile times are relative to (its task
+    /// creation). Lets the pipelined server place many frames' spans on
+    /// one timeline for cross-round overlap accounting.
+    pub started: Instant,
     /// Boundary tensors (only when tracing for the golden tests).
     pub trace: Option<HashMap<String, QTensor>>,
 }
@@ -166,6 +187,22 @@ pub enum FrameStage {
 }
 
 impl FrameStage {
+    /// Every stage in FSM order (see [`FrameStage::index`] for the
+    /// guard that keeps this list exhaustive).
+    pub const ALL: [FrameStage; 11] = [
+        FrameStage::SpawnSwTasks,
+        FrameStage::QuantizeImage,
+        FrameStage::FeFs,
+        FrameStage::CvfFinish,
+        FrameStage::Cve,
+        FrameStage::JoinHiddenCorrection,
+        FrameStage::ConvLstm,
+        FrameStage::Decoder,
+        FrameStage::DepthOut,
+        FrameStage::Commit,
+        FrameStage::Done,
+    ];
+
     pub fn next(self) -> FrameStage {
         use FrameStage::*;
         match self {
@@ -180,6 +217,27 @@ impl FrameStage {
             DepthOut => Commit,
             Commit => Done,
             Done => Done,
+        }
+    }
+
+    /// Position of the stage in [`FrameStage::ALL`]. The exhaustive
+    /// match is the compile-time guard: a new variant fails to build
+    /// until it's given an index here and a slot in `ALL`, and the
+    /// FSM exhaustiveness test then pins `next()` visiting it.
+    pub fn index(self) -> usize {
+        use FrameStage::*;
+        match self {
+            SpawnSwTasks => 0,
+            QuantizeImage => 1,
+            FeFs => 2,
+            CvfFinish => 3,
+            Cve => 4,
+            JoinHiddenCorrection => 5,
+            ConvLstm => 6,
+            Decoder => 7,
+            DepthOut => 8,
+            Commit => 9,
+            Done => 10,
         }
     }
 
@@ -262,6 +320,49 @@ impl<'f> FrameTask<'f> {
     fn span_hw(&mut self, label: &'static str, a: Instant, b: Instant) {
         let (ra, rb) = (self.prof.rel(a), self.prof.rel(b));
         self.prof.record_span(label, Lane::Hw, ra, rb);
+    }
+
+    /// Finish the profile and hand the results to the caller (requires
+    /// `Commit` to have run).
+    fn into_output(self) -> FrameOutput {
+        let FrameTask { prof, trace, depth, .. } = self;
+        let started = prof.origin();
+        FrameOutput {
+            depth: depth.expect("Commit ran"),
+            profile: prof.finish(),
+            started,
+            trace,
+        }
+    }
+}
+
+/// One serving round suspended between its session-free prologue and the
+/// rest of its FSM walk — the resumable value cross-round software
+/// pipelining is built from.
+///
+/// [`PipelineEngine::begin_round`] quantizes the round's images and
+/// *submits* the batched FeFs segment, returning this handle instead of
+/// blocking: the HW lane is now busy on this round while the caller
+/// keeps running other rounds' software stages (and their commits).
+/// [`PipelineEngine::finish_round`] then walks the remaining stages —
+/// which is also the first point the round touches its sessions, so a
+/// previous round over the same streams must have committed by then (the
+/// serving loop's FIFO finish order guarantees it).
+///
+/// Only the FeFs prologue is session-free, which is what makes this
+/// split bit-exact: `SpawnSwTasks` reads `h`/`depth`/`pose`/KB state,
+/// every later stage consumes it, and FeFs consumes nothing but the
+/// quantized image. A round is also a self-contained unit a future shard
+/// router can hold while other rounds interleave on other backends.
+pub struct RoundInFlight<'f> {
+    tasks: Vec<FrameTask<'f>>,
+    fe_fs: Option<SubmitHandle>,
+}
+
+impl RoundInFlight<'_> {
+    /// Streams in the round.
+    pub fn width(&self) -> usize {
+        self.tasks.len()
     }
 }
 
@@ -356,12 +457,7 @@ impl PipelineEngine {
         while task.stage != FrameStage::Done {
             self.advance(&mut task, session)?;
         }
-        let FrameTask { prof, trace, depth, .. } = task;
-        Ok(FrameOutput {
-            depth: depth.expect("Commit ran"),
-            profile: prof.finish(),
-            trace,
-        })
+        Ok(task.into_output())
     }
 
     /// Run one frame of each of N streams through the FSM in lockstep:
@@ -382,17 +478,62 @@ impl PipelineEngine {
         while tasks.first().is_some_and(|t| t.stage != FrameStage::Done) {
             self.advance_round(&mut tasks, sessions)?;
         }
-        Ok(tasks
-            .into_iter()
-            .map(|t| {
-                let FrameTask { prof, trace, depth, .. } = t;
-                FrameOutput {
-                    depth: depth.expect("Commit ran"),
-                    profile: prof.finish(),
-                    trace,
-                }
-            })
-            .collect())
+        Ok(tasks.into_iter().map(FrameTask::into_output).collect())
+    }
+
+    /// Start a round without touching any session: quantize every
+    /// frame's image and submit the batched FeFs segment to the backend.
+    /// On an async backend (`RefBackend`) this returns immediately with
+    /// the segment queued/executing; on a default-eager backend it runs
+    /// inline and the pipelined schedule degrades to lockstep — both
+    /// bit-identical to `step_round` on the same frames.
+    pub fn begin_round<'f>(
+        &self,
+        frames: &[(&'f TensorF, Mat4)],
+    ) -> Result<RoundInFlight<'f>> {
+        let mut tasks: Vec<FrameTask<'f>> = frames
+            .iter()
+            .map(|&(img, pose)| FrameTask::new(img, pose, false))
+            .collect();
+        self.stage_quantize_image(&mut tasks);
+        let handle =
+            self.stage_fe_fs_submit(self.backend.as_ref(), &mut tasks)?;
+        Ok(RoundInFlight { tasks, fe_fs: Some(handle) })
+    }
+
+    /// Resume a begun round and walk it to completion. `sessions` must
+    /// be the round's streams in the same order as the `begin_round`
+    /// frames, with every earlier round over those streams already
+    /// finished (their commits are this round's inputs).
+    ///
+    /// All software stages run here — on the serving thread and the
+    /// extern pool — while the backend's FIFO queue may still be
+    /// executing *other* rounds' submitted segments; every HW stage of
+    /// this round goes through submit/await, so it takes its place in
+    /// that queue. That is the cross-round overlap: this round's CPU
+    /// work hides behind whatever the PL is busy with.
+    pub fn finish_round(
+        &self,
+        mut round: RoundInFlight<'_>,
+        sessions: &mut [&mut StreamSession],
+    ) -> Result<Vec<FrameOutput>> {
+        let ts = &mut round.tasks;
+        assert_eq!(ts.len(), sessions.len(), "one session per round frame");
+        let hw = self.backend.as_ref();
+        // Session-dependent SW posts (CVF prep + hidden correction):
+        // legal now that the previous round has committed, and running
+        // them before the FeFs wait keeps the Fig-5 intra-frame overlap.
+        self.stage_spawn_sw_tasks(ts, sessions);
+        let handle = round.fe_fs.take().expect("begun round has FeFs in flight");
+        self.stage_fe_fs_complete(handle, ts)?;
+        self.stage_cvf_finish(ts);
+        self.stage_cve(hw, ts, true)?;
+        self.stage_join_hidden_correction(ts);
+        self.stage_conv_lstm(hw, ts, sessions, true)?;
+        self.stage_decoder(hw, ts, true)?;
+        self.stage_depth_out(ts);
+        self.stage_commit(ts, sessions);
+        Ok(round.tasks.into_iter().map(FrameTask::into_output).collect())
     }
 
     /// Execute the task's current stage and move to the next one. The
@@ -425,14 +566,16 @@ impl PipelineEngine {
         match stage {
             FrameStage::SpawnSwTasks => self.stage_spawn_sw_tasks(tasks, sessions),
             FrameStage::QuantizeImage => self.stage_quantize_image(tasks),
-            FrameStage::FeFs => self.stage_fe_fs(hw, tasks)?,
+            FrameStage::FeFs => self.stage_fe_fs(hw, tasks, false)?,
             FrameStage::CvfFinish => self.stage_cvf_finish(tasks),
-            FrameStage::Cve => self.stage_cve(hw, tasks)?,
+            FrameStage::Cve => self.stage_cve(hw, tasks, false)?,
             FrameStage::JoinHiddenCorrection => {
                 self.stage_join_hidden_correction(tasks)
             }
-            FrameStage::ConvLstm => self.stage_conv_lstm(hw, tasks, sessions)?,
-            FrameStage::Decoder => self.stage_decoder(hw, tasks)?,
+            FrameStage::ConvLstm => {
+                self.stage_conv_lstm(hw, tasks, sessions, false)?
+            }
+            FrameStage::Decoder => self.stage_decoder(hw, tasks, false)?,
             FrameStage::DepthOut => self.stage_depth_out(tasks),
             FrameStage::Commit => self.stage_commit(tasks, sessions),
             FrameStage::Done => {}
@@ -446,17 +589,31 @@ impl PipelineEngine {
     // --- helpers -----------------------------------------------------------
 
     /// One batched HW call over the round's per-stream inputs; returns
-    /// the outputs plus the call's wall interval (recorded on each
+    /// the outputs plus the call's execution interval (recorded on each
     /// participant's profile by the caller via `FrameTask::span_hw`).
+    ///
+    /// `queued` selects how the call reaches the backend: `false` is the
+    /// direct blocking path (lockstep rounds); `true` routes through
+    /// `submit_batch`/`wait`, so the call takes its place in the
+    /// backend's FIFO command queue *behind* any other round's segments
+    /// already submitted — the single-PL ordering the pipelined serving
+    /// loop relies on. Either way the outputs are bit-identical; with
+    /// `queued` the interval is the worker-side execution window (which
+    /// may predate the wait — the job ran while this thread did SW).
     fn run_hw_batch(
         &self,
         hw: &dyn HwBackend,
         id: SegmentId,
         batch: &[Vec<&QTensor>],
+        queued: bool,
     ) -> Result<(Vec<Vec<QTensor>>, Instant, Instant)> {
-        let a = Instant::now();
-        let outs = hw.run_batch(id, batch)?;
-        Ok((outs, a, Instant::now()))
+        if queued {
+            hw.submit_batch(id, batch)?.wait_batch_timed()
+        } else {
+            let a = Instant::now();
+            let outs = hw.run_batch(id, batch)?;
+            Ok((outs, a, Instant::now()))
+        }
     }
 
     /// Join a pending SW op. `overlapped` marks latency as hidden.
@@ -598,15 +755,66 @@ impl PipelineEngine {
 
     /// HW: FE + FS, batched across the round (CVF prep runs on the CPU
     /// meanwhile).
-    fn stage_fe_fs(&self, hw: &dyn HwBackend, ts: &mut [FrameTask]) -> Result<()> {
+    fn stage_fe_fs(
+        &self,
+        hw: &dyn HwBackend,
+        ts: &mut [FrameTask],
+        queued: bool,
+    ) -> Result<()> {
         let imgs: Vec<QTensor> = ts
             .iter_mut()
             .map(|t| t.img_q.take().expect("QuantizeImage ran"))
             .collect();
         let (outs, a, b) = {
             let batch: Vec<Vec<&QTensor>> = imgs.iter().map(|q| vec![q]).collect();
-            self.run_hw_batch(hw, self.handles.fe_fs, &batch)?
+            self.run_hw_batch(hw, self.handles.fe_fs, &batch, queued)?
         };
+        self.scatter_fe_fs(ts, outs, a, b);
+        Ok(())
+    }
+
+    /// Submit the round's batched FeFs segment without waiting — the
+    /// front half of `stage_fe_fs`, used by `begin_round` so the HW lane
+    /// starts on this round while the caller keeps running other rounds'
+    /// software stages.
+    fn stage_fe_fs_submit(
+        &self,
+        hw: &dyn HwBackend,
+        ts: &mut [FrameTask],
+    ) -> Result<SubmitHandle> {
+        let imgs: Vec<QTensor> = ts
+            .iter_mut()
+            .map(|t| t.img_q.take().expect("QuantizeImage ran"))
+            .collect();
+        let batch: Vec<Vec<&QTensor>> = imgs.iter().map(|q| vec![q]).collect();
+        hw.submit_batch(self.handles.fe_fs, &batch)
+    }
+
+    /// Await a `stage_fe_fs_submit` handle and scatter the features —
+    /// the back half of `stage_fe_fs`.
+    fn stage_fe_fs_complete(
+        &self,
+        handle: SubmitHandle,
+        ts: &mut [FrameTask],
+    ) -> Result<()> {
+        let (outs, a, b) = handle.wait_batch_timed()?;
+        anyhow::ensure!(
+            outs.len() == ts.len(),
+            "fe_fs completion width {} != round width {}",
+            outs.len(),
+            ts.len()
+        );
+        self.scatter_fe_fs(ts, outs, a, b);
+        Ok(())
+    }
+
+    fn scatter_fe_fs(
+        &self,
+        ts: &mut [FrameTask],
+        outs: Vec<Vec<QTensor>>,
+        a: Instant,
+        b: Instant,
+    ) {
         for (t, feats) in ts.iter_mut().zip(outs) {
             t.span_hw("fe_fs", a, b);
             for (i, f) in feats.iter().enumerate() {
@@ -614,7 +822,6 @@ impl PipelineEngine {
             }
             t.feats = feats;
         }
-        Ok(())
     }
 
     /// Extern: feature out, cost volume in (CVF finish) — the per-stream
@@ -656,7 +863,12 @@ impl PipelineEngine {
     }
 
     /// HW: CVE, batched (hidden-state correction still in flight).
-    fn stage_cve(&self, hw: &dyn HwBackend, ts: &mut [FrameTask]) -> Result<()> {
+    fn stage_cve(
+        &self,
+        hw: &dyn HwBackend,
+        ts: &mut [FrameTask],
+        queued: bool,
+    ) -> Result<()> {
         let costs: Vec<QTensor> = ts
             .iter_mut()
             .map(|t| t.cost_q.take().expect("CvfFinish ran"))
@@ -669,7 +881,7 @@ impl PipelineEngine {
                     vec![c, &t.feats[1], &t.feats[2], &t.feats[3], &t.feats[4]]
                 })
                 .collect();
-            self.run_hw_batch(hw, self.handles.cve, &batch)?
+            self.run_hw_batch(hw, self.handles.cve, &batch, queued)?
         };
         for (t, enc) in ts.iter_mut().zip(outs) {
             t.span_hw("cve", a, b);
@@ -700,6 +912,7 @@ impl PipelineEngine {
         hw: &dyn HwBackend,
         ts: &mut [FrameTask],
         sessions: &mut [&mut StreamSession],
+        queued: bool,
     ) -> Result<()> {
         let h_corrs: Vec<QTensor> = ts
             .iter_mut()
@@ -711,7 +924,7 @@ impl PipelineEngine {
                 .zip(&h_corrs)
                 .map(|(t, h)| vec![&t.enc[4], h])
                 .collect();
-            self.run_hw_batch(hw, self.handles.cl_gates, &batch)?
+            self.run_hw_batch(hw, self.handles.cl_gates, &batch, queued)?
         };
         let mut gates: Vec<QTensor> = Vec::with_capacity(ts.len());
         for (t, mut g) in ts.iter_mut().zip(outs) {
@@ -732,7 +945,7 @@ impl PipelineEngine {
                 .zip(sessions.iter())
                 .map(|(g, s)| vec![g, &s.c])
                 .collect();
-            self.run_hw_batch(hw, self.handles.cl_state, &batch)?
+            self.run_hw_batch(hw, self.handles.cl_state, &batch, queued)?
         };
         let mut c_news: Vec<QTensor> = Vec::with_capacity(ts.len());
         let mut o_gates: Vec<QTensor> = Vec::with_capacity(ts.len());
@@ -756,7 +969,7 @@ impl PipelineEngine {
                 .zip(&o_gates)
                 .map(|(l, o)| vec![l, o])
                 .collect();
-            self.run_hw_batch(hw, self.handles.cl_out, &batch)?
+            self.run_hw_batch(hw, self.handles.cl_out, &batch, queued)?
         };
         for ((t, mut o), c_new) in ts.iter_mut().zip(outs).zip(c_news) {
             t.span_hw("cl_out", a, b);
@@ -770,7 +983,12 @@ impl PipelineEngine {
 
     /// Decoder: batched HW conv segments / pooled SW LNs + bilinear
     /// upsamples.
-    fn stage_decoder(&self, hw: &dyn HwBackend, ts: &mut [FrameTask]) -> Result<()> {
+    fn stage_decoder(
+        &self,
+        hw: &dyn HwBackend,
+        ts: &mut [FrameTask],
+        queued: bool,
+    ) -> Result<()> {
         let n = ts.len();
         let mut feat_q: Vec<Option<QTensor>> = (0..n).map(|_| None).collect();
         let mut d_q: Vec<Option<QTensor>> = (0..n).map(|_| None).collect();
@@ -783,7 +1001,12 @@ impl PipelineEngine {
                             vec![t.h_new.as_ref().expect("ConvLstm ran"), &t.enc[4]]
                         })
                         .collect();
-                    self.run_hw_batch(hw, self.handles.cvd_entry[0], &batch)?
+                    self.run_hw_batch(
+                        hw,
+                        self.handles.cvd_entry[0],
+                        &batch,
+                        queued,
+                    )?
                 };
                 for t in ts.iter_mut() {
                     t.span_hw("cvd_entry", s0, s1);
@@ -827,7 +1050,12 @@ impl PipelineEngine {
                             vec![upf_q, &t.enc[4 - b], upd_q]
                         })
                         .collect();
-                    self.run_hw_batch(hw, self.handles.cvd_entry[b], &batch)?
+                    self.run_hw_batch(
+                        hw,
+                        self.handles.cvd_entry[b],
+                        &batch,
+                        queued,
+                    )?
                 };
                 for t in ts.iter_mut() {
                     t.span_hw("cvd_entry", s0, s1);
@@ -845,7 +1073,12 @@ impl PipelineEngine {
                 let (outs, s0, s1) = {
                     let batch: Vec<Vec<&QTensor>> =
                         x_lns.iter().map(|x| vec![x]).collect();
-                    self.run_hw_batch(hw, self.handles.cvd_mid[b][i - 1], &batch)?
+                    self.run_hw_batch(
+                        hw,
+                        self.handles.cvd_mid[b][i - 1],
+                        &batch,
+                        queued,
+                    )?
                 };
                 for t in ts.iter_mut() {
                     t.span_hw("cvd_mid", s0, s1);
@@ -858,7 +1091,7 @@ impl PipelineEngine {
             let (outs, s0, s1) = {
                 let batch: Vec<Vec<&QTensor>> =
                     x_lns.iter().map(|x| vec![x]).collect();
-                self.run_hw_batch(hw, self.handles.cvd_head[b], &batch)?
+                self.run_hw_batch(hw, self.handles.cvd_head[b], &batch, queued)?
             };
             for ((i, t), mut o) in ts.iter_mut().enumerate().zip(outs) {
                 t.span_hw("cvd_head", s0, s1);
@@ -1015,6 +1248,66 @@ mod tests {
         assert!(pos(FrameStage::FeFs) < pos(FrameStage::CvfFinish));
         assert!(pos(FrameStage::Cve) < pos(FrameStage::JoinHiddenCorrection));
         assert!(pos(FrameStage::JoinHiddenCorrection) < pos(FrameStage::ConvLstm));
+    }
+
+    #[test]
+    fn fsm_walk_is_exhaustive_over_all_stages() {
+        // ALL is in FSM order and complete (FrameStage::index is the
+        // compile-time guard forcing new variants into it)
+        for (i, s) in FrameStage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i, "ALL out of FSM order at {}", s.name());
+        }
+        // walking next() from the entry stage visits every variant
+        // exactly once before Done...
+        let mut s = FrameStage::SpawnSwTasks;
+        let mut seen = vec![s];
+        while s != FrameStage::Done {
+            s = s.next();
+            assert!(
+                seen.len() < FrameStage::ALL.len(),
+                "walk exceeded the stage count — cycle before Done"
+            );
+            seen.push(s);
+        }
+        assert_eq!(
+            seen,
+            FrameStage::ALL.to_vec(),
+            "next() skipped or repeated a stage"
+        );
+        // ...and Done is a fixed point
+        assert_eq!(FrameStage::Done.next(), FrameStage::Done);
+    }
+
+    #[test]
+    fn begin_finish_round_equals_step_session() {
+        use crate::data::dataset::Scene;
+        let backend = Arc::new(RefBackend::synthetic(29));
+        let qp = Arc::clone(backend.qp());
+        let engine = PipelineEngine::new(
+            backend as Arc<dyn HwBackend>,
+            qp,
+            PipelineOptions::default(),
+        )
+        .unwrap();
+        let scene = Scene::synthetic("rif", 3, 11);
+        let mut s_solo = engine.new_session(0);
+        let mut s_pipe = engine.new_session(1);
+        for i in 0..3 {
+            let img = scene.normalized_image(i);
+            let solo = engine
+                .step_session(&mut s_solo, &img, &scene.poses[i])
+                .unwrap();
+            let round = engine.begin_round(&[(&img, scene.poses[i])]).unwrap();
+            assert_eq!(round.width(), 1);
+            let mut sess = [&mut s_pipe];
+            let outs = engine.finish_round(round, &mut sess).unwrap();
+            assert_eq!(outs.len(), 1);
+            assert_eq!(
+                solo.depth.data(),
+                outs[0].depth.data(),
+                "frame {i}: begun/finished round diverged from solo stepping"
+            );
+        }
     }
 
     #[test]

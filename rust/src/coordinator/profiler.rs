@@ -72,6 +72,28 @@ impl FrameProfile {
             .sum()
     }
 
+    /// Seconds of HW work overlapped with SW work — the complement of
+    /// [`FrameProfile::overlapped_sw`]: how much of the PL's busy time
+    /// was hidden behind concurrent CPU work. Computed against the
+    /// *union* of the SW spans, so several pool workers covering the
+    /// same HW interval count it once (unlike `overlapped_sw`, whose
+    /// per-span sum keeps the paper's per-op hidden-latency accounting).
+    pub fn overlapped_hw(&self) -> f64 {
+        let hw: Vec<(f64, f64)> = self
+            .stages
+            .iter()
+            .filter(|s| s.lane == Lane::Hw)
+            .map(|s| (s.start_s, s.end_s))
+            .collect();
+        let sw: Vec<(f64, f64)> = self
+            .stages
+            .iter()
+            .filter(|s| s.lane == Lane::Sw)
+            .map(|s| (s.start_s, s.end_s))
+            .collect();
+        overlap_seconds(&hw, &sw)
+    }
+
     /// Fraction of a named SW stage hidden behind HW stages.
     pub fn hidden_fraction(&self, name: &str) -> f64 {
         let hw: Vec<(f64, f64)> = self
@@ -126,6 +148,36 @@ impl FrameProfile {
     }
 }
 
+/// Total measure of `spans` covered by the union of `others` (all in
+/// seconds on one timeline). The union is merged first, so overlapping
+/// `others` never double-count — this is the primitive behind
+/// [`FrameProfile::overlapped_hw`] and the server's cross-round
+/// pipeline-overlap accounting.
+pub fn overlap_seconds(spans: &[(f64, f64)], others: &[(f64, f64)]) -> f64 {
+    let mut sorted: Vec<(f64, f64)> = others
+        .iter()
+        .copied()
+        .filter(|&(a, b)| b > a)
+        .collect();
+    sorted.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(sorted.len());
+    for (a, b) in sorted {
+        match merged.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => merged.push((a, b)),
+        }
+    }
+    spans
+        .iter()
+        .map(|&(a, b)| {
+            merged
+                .iter()
+                .map(|&(ua, ub)| (b.min(ub) - a.max(ua)).max(0.0))
+                .sum::<f64>()
+        })
+        .sum()
+}
+
 /// Builder used by the pipeline while a frame executes.
 pub struct Profiler {
     origin: Instant,
@@ -139,6 +191,14 @@ impl Profiler {
 
     pub fn now(&self) -> f64 {
         self.origin.elapsed().as_secs_f64()
+    }
+
+    /// The instant all of this profiler's relative times are measured
+    /// from (the frame start). The pipelined server uses it to place
+    /// different frames' spans on one shared timeline for cross-round
+    /// overlap accounting.
+    pub fn origin(&self) -> Instant {
+        self.origin
     }
 
     /// Convert an absolute instant (e.g. a worker-side timestamp) into
@@ -208,6 +268,58 @@ mod tests {
         assert!((p.hidden_fraction("cvf_prep") - 1.0).abs() < 1e-12);
         assert!((p.hidden_fraction("cvf_finish") - 1.0 / 3.0).abs() < 1e-12);
         assert_eq!(p.hidden_fraction("absent"), 0.0);
+    }
+
+    #[test]
+    fn overlapped_hw_uses_the_sw_union() {
+        // two pool workers cover overlapping windows of one HW span:
+        // pairwise overlapped_sw double-counts the [3,4] overlap (2+3),
+        // union-based overlapped_hw counts the covered HW time once
+        let p = mk(
+            &[
+                ("fe_fs", Lane::Hw, 0.0, 10.0),
+                ("cvf_prep", Lane::Sw, 2.0, 4.0),
+                ("hidden_corr", Lane::Sw, 3.0, 6.0),
+            ],
+            10.0,
+        );
+        assert!((p.overlapped_sw() - 5.0).abs() < 1e-12);
+        assert!((p.overlapped_hw() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapped_hw_interleaved_multi_lane_spans() {
+        // HW [0,4] and [6,10] interleave with SW [3,7] and [9,12]:
+        // hidden HW = [3,4] + [6,7] + [9,10] = 3; a SW-only tail and an
+        // HW-only gap contribute nothing
+        let p = mk(
+            &[
+                ("fe_fs", Lane::Hw, 0.0, 4.0),
+                ("cvf_finish", Lane::Sw, 3.0, 7.0),
+                ("cve", Lane::Hw, 6.0, 10.0),
+                ("depth_out", Lane::Sw, 9.0, 12.0),
+            ],
+            12.0,
+        );
+        assert!((p.overlapped_hw() - 3.0).abs() < 1e-12);
+        // symmetric here: no double coverage on either lane
+        assert!((p.overlapped_sw() - 3.0).abs() < 1e-12);
+        // all-HW or all-SW profiles overlap nothing
+        let hw_only = mk(&[("a", Lane::Hw, 0.0, 5.0)], 5.0);
+        assert_eq!(hw_only.overlapped_hw(), 0.0);
+        assert_eq!(hw_only.overlapped_sw(), 0.0);
+    }
+
+    #[test]
+    fn overlap_seconds_merges_the_union() {
+        // others [1,3] + [2,5] merge to [1,5]; [7,8] is disjoint
+        let others = [(2.0, 5.0), (1.0, 3.0), (7.0, 8.0), (9.0, 9.0)];
+        let spans = [(0.0, 10.0)];
+        assert!((overlap_seconds(&spans, &others) - 5.0).abs() < 1e-12);
+        assert_eq!(overlap_seconds(&spans, &[]), 0.0);
+        assert_eq!(overlap_seconds(&[], &others), 0.0);
+        // a span fully inside one other is fully covered
+        assert!((overlap_seconds(&[(2.5, 4.5)], &others) - 2.0).abs() < 1e-12);
     }
 
     #[test]

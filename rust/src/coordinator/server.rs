@@ -9,7 +9,20 @@
 //! cross-frame state is confined to its session, interleaved serving is
 //! bit-identical to running the streams back to back — pinned by the
 //! stream-isolation tests.
+//!
+//! Three serving schedules, all bit-identical per stream:
+//!
+//! * [`StreamServer::step_stream`] — one frame of one stream, the whole
+//!   FSM alone;
+//! * [`StreamServer::run_round`] — N streams advanced in lockstep, every
+//!   HW segment one batched backend call;
+//! * [`StreamServer::run_pipelined`] — lockstep rounds *plus* up to K
+//!   rounds in flight through the backend's async submit/await queue, so
+//!   the PL executes one round's segments while the CPU runs another's
+//!   software stages (cross-round overlap, reported as `overlapped_hw`
+//!   in [`BatchStats`]).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -22,7 +35,10 @@ use crate::runtime::{HwBackend, RefBackend};
 use crate::tensor::TensorF;
 
 use super::extern_link::ExternStats;
-use super::pipeline::{FrameOutput, PipelineEngine, PipelineOptions};
+use super::pipeline::{
+    FrameOutput, PipelineEngine, PipelineOptions, RoundInFlight,
+};
+use super::profiler::{overlap_seconds, Lane};
 use super::session::StreamSession;
 
 /// Multi-stream depth server over one shared backend.
@@ -31,8 +47,25 @@ pub struct StreamServer {
     sessions: Vec<StreamSession>,
     throughput: Vec<StreamThroughput>,
     batches: BatchStats,
-    rr_next: usize,
+    /// Per-width round-robin counters: `(width, rounds served at that
+    /// width)`. Rotating each width by its own counter keeps the stream
+    /// order fair even when the round width varies between calls (a
+    /// global counter mod a varying width skips or repeats turns).
+    rr_widths: Vec<(usize, usize)>,
     started: Instant,
+}
+
+/// One begun-but-unfinished round inside a `run_pipelined` window.
+struct StagedRound<'f> {
+    round: RoundInFlight<'f>,
+    /// Index of this round in the caller's `rounds` slice.
+    idx: usize,
+    /// Rotated positions into that round's inputs (the served order).
+    order: Vec<usize>,
+    /// Serving-thread time spent in `begin_round` (added to the finish
+    /// time for throughput attribution — begin-to-finish wall time would
+    /// double-count the K overlapping rounds' shared wall clock).
+    begin_seconds: f64,
 }
 
 impl StreamServer {
@@ -46,7 +79,7 @@ impl StreamServer {
             sessions: Vec::new(),
             throughput: Vec::new(),
             batches: BatchStats::default(),
-            rr_next: 0,
+            rr_widths: Vec::new(),
             started: Instant::now(),
         })
     }
@@ -104,8 +137,55 @@ impl StreamServer {
             out.profile.hw_busy(),
             out.profile.sw_busy(),
             out.profile.overlapped_sw(),
+            out.profile.overlapped_hw(),
         );
         Ok(out)
+    }
+
+    /// Rotation for the next round of `width` streams: one slot per
+    /// round *of that width*, so no stream is permanently first in the
+    /// batch/output order and a width change (a stream joining or
+    /// leaving) never skips or repeats anyone's turn.
+    fn rotation(&mut self, width: usize) -> usize {
+        debug_assert!(width > 0);
+        match self.rr_widths.iter().position(|&(w, _)| w == width) {
+            Some(p) => {
+                let served = &mut self.rr_widths[p].1;
+                let r = *served % width;
+                *served = served.wrapping_add(1);
+                r
+            }
+            None => {
+                self.rr_widths.push((width, 1));
+                0
+            }
+        }
+    }
+
+    /// Check a round's sessions out of `table` in served order (rejects
+    /// unknown and duplicated stream ids). An associated fn over the
+    /// bare table so callers can keep borrowing the server's other
+    /// fields (engine, stats) while the checkout is live.
+    fn checkout_sessions<'s>(
+        table: &'s mut [StreamSession],
+        order: &[usize],
+        inputs: &[(usize, &TensorF, &Mat4)],
+    ) -> Result<Vec<&'s mut StreamSession>> {
+        let mut slots: Vec<Option<&mut StreamSession>> =
+            table.iter_mut().map(Some).collect();
+        let mut sessions: Vec<&'s mut StreamSession> =
+            Vec::with_capacity(order.len());
+        for &i in order {
+            let sid = inputs[i].0;
+            let session = slots
+                .get_mut(sid)
+                .and_then(|s| s.take())
+                .with_context(|| {
+                    format!("stream {sid} not open (or repeated in round)")
+                })?;
+            sessions.push(session);
+        }
+        Ok(sessions)
     }
 
     /// One scheduling round: every `(stream, frame)` pair executes once,
@@ -124,28 +204,15 @@ impl StreamServer {
             return Ok(Vec::new());
         }
         let mut order: Vec<usize> = (0..inputs.len()).collect();
-        order.rotate_left(self.rr_next % inputs.len());
-        self.rr_next = self.rr_next.wrapping_add(1);
+        let rot = self.rotation(inputs.len());
+        order.rotate_left(rot);
         let (outs, elapsed) = {
-            // check the ids out of the session table (rejects unknown and
-            // duplicated stream ids) in rotated round order
-            let mut slots: Vec<Option<&mut StreamSession>> =
-                self.sessions.iter_mut().map(Some).collect();
-            let mut sessions: Vec<&mut StreamSession> =
-                Vec::with_capacity(inputs.len());
-            let mut frames: Vec<(&TensorF, Mat4)> =
-                Vec::with_capacity(inputs.len());
-            for &idx in &order {
-                let (sid, img, pose) = inputs[idx];
-                let session = slots
-                    .get_mut(sid)
-                    .and_then(|s| s.take())
-                    .with_context(|| {
-                        format!("stream {sid} not open (or repeated in round)")
-                    })?;
-                sessions.push(session);
-                frames.push((img, *pose));
-            }
+            let mut sessions =
+                Self::checkout_sessions(&mut self.sessions, &order, inputs)?;
+            let frames: Vec<(&TensorF, Mat4)> = order
+                .iter()
+                .map(|&idx| (inputs[idx].1, *inputs[idx].2))
+                .collect();
             let t0 = Instant::now();
             let outs = self.engine.step_round(&mut sessions, &frames)?;
             (outs, t0.elapsed().as_secs_f64())
@@ -163,6 +230,166 @@ impl StreamServer {
                 out.profile.hw_busy(),
                 out.profile.sw_busy(),
                 out.profile.overlapped_sw(),
+                out.profile.overlapped_hw(),
+            );
+            result.push((sid, out));
+        }
+        Ok(result)
+    }
+
+    /// Depth-K software-pipelined serving (the cross-round analog of the
+    /// paper's Fig-5 overlap): walk `rounds` in order, keeping up to
+    /// `depth` rounds begun-but-unfinished. Beginning a round submits
+    /// its batched FeFs segment to the backend's FIFO command queue and
+    /// returns immediately, so on an async backend (`RefBackend`) the PL
+    /// executes round r+1's heaviest segment while the CPU side runs
+    /// round r's software stages — `overlapped_hw` in
+    /// [`BatchStats`] measures exactly that hidden HW time.
+    ///
+    /// `depth` ≤ 1 is today's lockstep schedule (begin, then finish
+    /// immediately). Any depth is bit-identical to serving each stream
+    /// alone: rounds finish strictly in order, and only the session-free
+    /// prologue (image quantization + FeFs) of a round ever runs before
+    /// its predecessor's commit. Results are returned per input round,
+    /// each in the served (rotated) order like [`StreamServer::run_round`].
+    ///
+    /// On error, rounds still in flight are abandoned (their submitted
+    /// segments complete on the worker but the results are dropped);
+    /// every round already finished has committed normally.
+    pub fn run_pipelined<'f>(
+        &mut self,
+        rounds: &[Vec<(usize, &'f TensorF, &'f Mat4)>],
+        depth: usize,
+    ) -> Result<Vec<Vec<(usize, FrameOutput)>>> {
+        let k = depth.max(1);
+        let epoch = Instant::now();
+        let mut results: Vec<Vec<(usize, FrameOutput)>> =
+            rounds.iter().map(|_| Vec::new()).collect();
+        let mut inflight: VecDeque<StagedRound<'f>> = VecDeque::new();
+        // absolute (epoch-relative) HW/SW spans of every finished frame,
+        // across rounds — the timeline the cross-round overlap is
+        // computed on once the window closes
+        let mut hw_spans: Vec<(f64, f64)> = Vec::new();
+        let mut sw_spans: Vec<(f64, f64)> = Vec::new();
+        let mut max_inflight = 0usize;
+        let mut fill_seconds = 0.0f64;
+        for (idx, round) in rounds.iter().enumerate() {
+            if round.is_empty() {
+                continue;
+            }
+            let mut order: Vec<usize> = (0..round.len()).collect();
+            let rot = self.rotation(round.len());
+            order.rotate_left(rot);
+            let frames: Vec<(&TensorF, Mat4)> =
+                order.iter().map(|&i| (round[i].1, *round[i].2)).collect();
+            let t0 = Instant::now();
+            let round = self.engine.begin_round(&frames)?;
+            inflight.push_back(StagedRound {
+                round,
+                idx,
+                order,
+                begin_seconds: t0.elapsed().as_secs_f64(),
+            });
+            if inflight.len() > max_inflight {
+                max_inflight = inflight.len();
+                if max_inflight == k {
+                    // first time the pipeline is full: the fill cost
+                    fill_seconds = epoch.elapsed().as_secs_f64();
+                }
+            }
+            while inflight.len() >= k {
+                let staged = inflight.pop_front().expect("len checked");
+                let idx = staged.idx;
+                results[idx] = self.finish_staged(
+                    staged,
+                    &rounds[idx],
+                    epoch,
+                    &mut hw_spans,
+                    &mut sw_spans,
+                )?;
+            }
+        }
+        let drain0 = Instant::now();
+        while let Some(staged) = inflight.pop_front() {
+            let idx = staged.idx;
+            results[idx] = self.finish_staged(
+                staged,
+                &rounds[idx],
+                epoch,
+                &mut hw_spans,
+                &mut sw_spans,
+            )?;
+        }
+        let drain_seconds = drain0.elapsed().as_secs_f64();
+        let hw_total: f64 = hw_spans.iter().map(|&(a, b)| b - a).sum();
+        let sw_total: f64 = sw_spans.iter().map(|&(a, b)| b - a).sum();
+        self.batches.record_pipeline_window(
+            max_inflight,
+            fill_seconds,
+            drain_seconds,
+            overlap_seconds(&hw_spans, &sw_spans),
+            hw_total,
+            sw_total,
+        );
+        Ok(results)
+    }
+
+    /// Finish one staged round: check its sessions out of the table in
+    /// served order, resume the FSM walk, and record throughput plus the
+    /// frame's spans on the window's shared timeline.
+    fn finish_staged<'f>(
+        &mut self,
+        staged: StagedRound<'f>,
+        inputs: &[(usize, &'f TensorF, &'f Mat4)],
+        epoch: Instant,
+        hw_spans: &mut Vec<(f64, f64)>,
+        sw_spans: &mut Vec<(f64, f64)>,
+    ) -> Result<Vec<(usize, FrameOutput)>> {
+        let width = staged.order.len();
+        let t0 = Instant::now();
+        let outs = {
+            let mut sessions = Self::checkout_sessions(
+                &mut self.sessions,
+                &staged.order,
+                inputs,
+            )?;
+            self.engine.finish_round(staged.round, &mut sessions)?
+        };
+        // serving-thread time actually spent on this round (begin +
+        // finish), attributed evenly across the batch — comparable to
+        // run_round's accounting; begin-to-finish wall time would count
+        // the in-flight window once per overlapping round
+        let share = (staged.begin_seconds + t0.elapsed().as_secs_f64())
+            / width as f64;
+        self.batches.record_pipelined_round(width);
+        let mut result = Vec::with_capacity(width);
+        for (j, (&i, out)) in staged.order.iter().zip(outs).enumerate() {
+            let sid = inputs[i].0;
+            let off = out
+                .started
+                .checked_duration_since(epoch)
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0);
+            for s in &out.profile.stages {
+                let span = (off + s.start_s, off + s.end_s);
+                match s.lane {
+                    // every HW call of the round is one batched backend
+                    // call recorded with the same interval on each
+                    // frame's profile: take the PL timeline from the
+                    // first frame only, or the window's HW busy/hidden
+                    // seconds would be width-multiplied
+                    Lane::Hw if j == 0 => hw_spans.push(span),
+                    Lane::Hw => {}
+                    // SW ops are genuinely per-stream jobs
+                    Lane::Sw => sw_spans.push(span),
+                }
+            }
+            self.throughput[sid].record_frame(
+                share,
+                out.profile.hw_busy(),
+                out.profile.sw_busy(),
+                out.profile.overlapped_sw(),
+                out.profile.overlapped_hw(),
             );
             result.push((sid, out));
         }
@@ -222,6 +449,17 @@ impl StreamServer {
                 self.batches.rounds,
                 self.batches.mean_width(),
                 self.batches.max_width,
+            ));
+        }
+        if self.batches.pipelined_rounds > 0 {
+            out.push_str(&format!(
+                "pipelined rounds: {} (depth {}, fill {:.1} ms, drain \
+                 {:.1} ms, HW hidden {:.1}%)\n",
+                self.batches.pipelined_rounds,
+                self.batches.max_inflight,
+                self.batches.fill_seconds * 1e3,
+                self.batches.drain_seconds * 1e3,
+                100.0 * self.batches.overlapped_hw_ratio(),
             ));
         }
         out

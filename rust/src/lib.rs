@@ -11,12 +11,17 @@
 //!
 //! * **Backend** (`runtime`) — the [`runtime::HwBackend`] trait: a
 //!   catalogue of FSM-sequenced segments resolved once into
-//!   [`runtime::SegmentId`] handles and executed many times per frame.
+//!   [`runtime::SegmentId`] handles and executed many times per frame,
+//!   synchronously (`run`/`run_batch`) or asynchronously
+//!   (`submit`/`submit_batch` returning a [`runtime::SubmitHandle`],
+//!   default-eager so plain backends stay correct unchanged; in-order
+//!   completion contract in the `runtime` module docs).
 //!   Implementations: [`runtime::HwRuntime`] (PJRT over the AOT
 //!   `artifacts/*.hlo.txt`, the "configured bitstream") and
 //!   [`runtime::RefBackend`] (the bit-exact pure-software mirror, which
 //!   also runs artifact-free on synthetic calibration —
-//!   `Manifest::synthetic` + `QuantParams::synthetic`).
+//!   `Manifest::synthetic` + `QuantParams::synthetic` — and serves
+//!   submissions from a dedicated FIFO worker thread).
 //! * **Session** (`coordinator::session`) — one
 //!   [`coordinator::StreamSession`] per video stream holds *all*
 //!   cross-frame state (ConvLSTM hidden/cell, previous depth + pose, the
@@ -31,6 +36,12 @@
 //!   facade; [`coordinator::StreamServer`] multiplexes N sessions
 //!   round-robin over one shared backend ("one bitstream, many
 //!   streams") with per-stream + aggregate throughput in `metrics`.
+//!   Rounds are also *resumable values*
+//!   ([`coordinator::RoundInFlight`]): `StreamServer::run_pipelined`
+//!   keeps up to K of them begun-but-unfinished, overlapping one
+//!   round's submitted HW segments with other rounds' software stages
+//!   (cross-round pipelining; `overlapped_hw` in `metrics::BatchStats`
+//!   measures the hidden HW time).
 //!
 //! Around the serving stack: the CPU-only baselines of Table II
 //! (`model`), the FPGA cycle/resource model behind Tables II/III
@@ -85,10 +96,13 @@
 //! binary is self-contained, and without artifacts the RefBackend serves
 //! the identical pipeline in pure Rust.
 //!
-//! Later scaling PRs plug into these seams: new backends (async,
-//! sharded, batched) implement `HwBackend`; admission/batching policies
-//! sit in `StreamServer`; per-stream state stays session-local so
-//! streams can migrate between backends.
+//! Later scaling PRs plug into these seams: new backends (sharded,
+//! remote) implement `HwBackend` — sync-only impls get submit/await for
+//! free via the default-eager path; admission/batching policies sit in
+//! `StreamServer`; per-stream state stays session-local and rounds are
+//! self-contained `RoundInFlight` values, so a shard router can
+//! interleave rounds across backends and streams can migrate between
+//! them.
 
 pub mod codesign;
 pub mod config;

@@ -17,6 +17,10 @@ pub struct StreamThroughput {
     pub sw_busy_seconds: f64,
     /// SW time hidden behind HW (the Fig-5 overlap), summed.
     pub sw_hidden_seconds: f64,
+    /// HW time hidden behind SW (the complement overlap — nonzero within
+    /// a frame whenever posted SW covers a HW segment, and the headline
+    /// metric of cross-round pipelined serving), summed.
+    pub hw_hidden_seconds: f64,
 }
 
 impl StreamThroughput {
@@ -26,12 +30,14 @@ impl StreamThroughput {
         hw_busy: f64,
         sw_busy: f64,
         sw_hidden: f64,
+        hw_hidden: f64,
     ) {
         self.frames += 1;
         self.busy_seconds += busy;
         self.hw_busy_seconds += hw_busy;
         self.sw_busy_seconds += sw_busy;
         self.sw_hidden_seconds += sw_hidden;
+        self.hw_hidden_seconds += hw_hidden;
     }
 
     /// Frames per second of serving-thread time spent on this stream.
@@ -53,18 +59,49 @@ impl StreamThroughput {
             0.0
         }
     }
+
+    /// Fraction of HW time hidden behind SW execution.
+    pub fn hw_overlap_ratio(&self) -> f64 {
+        if self.hw_busy_seconds > 0.0 {
+            self.hw_hidden_seconds / self.hw_busy_seconds
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Batched-round accounting: how many scheduling rounds the server ran
-/// and how wide they were (frames per `HwBackend::run_batch` lockstep).
+/// and how wide they were (frames per `HwBackend::run_batch` lockstep),
+/// plus cross-round pipelining statistics when rounds were served
+/// through `StreamServer::run_pipelined`.
 #[derive(Clone, Debug, Default)]
 pub struct BatchStats {
-    /// Scheduling rounds served (`StreamServer::run_round` calls).
+    /// Scheduling rounds served (lockstep `run_round` calls and
+    /// pipelined rounds alike).
     pub rounds: usize,
     /// Frames served inside those rounds.
     pub frames: usize,
     /// Widest round seen.
     pub max_width: usize,
+    /// Rounds that went through the pipelined (submit/await) path.
+    pub pipelined_rounds: usize,
+    /// Deepest begun-but-unfinished round count reached (≤ the serving
+    /// loop's K).
+    pub max_inflight: usize,
+    /// Time from a pipelined window's start until it first reached its
+    /// full depth (rounds begun but none yet finished) — the fill cost.
+    pub fill_seconds: f64,
+    /// Time finishing the still-in-flight rounds after the last round of
+    /// a pipelined window was begun — the drain cost.
+    pub drain_seconds: f64,
+    /// HW execution time inside pipelined windows that was covered by
+    /// concurrent SW work (union-based, across *all* rounds in flight —
+    /// the cross-round analog of `StreamThroughput::sw_hidden_seconds`).
+    pub overlapped_hw_seconds: f64,
+    /// Total HW execution time inside pipelined windows.
+    pub pipelined_hw_seconds: f64,
+    /// Total SW execution time inside pipelined windows.
+    pub pipelined_sw_seconds: f64,
 }
 
 impl BatchStats {
@@ -74,10 +111,47 @@ impl BatchStats {
         self.max_width = self.max_width.max(width);
     }
 
+    /// A round served through the pipelined path (also counts as a
+    /// round for the width statistics).
+    pub fn record_pipelined_round(&mut self, width: usize) {
+        self.record_round(width);
+        self.pipelined_rounds += 1;
+    }
+
+    /// Close one `run_pipelined` window: overlap + fill/drain totals
+    /// accumulated over the whole window (timelines of different windows
+    /// never overlap, so the sums stay meaningful across calls).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_pipeline_window(
+        &mut self,
+        max_inflight: usize,
+        fill_seconds: f64,
+        drain_seconds: f64,
+        overlapped_hw_seconds: f64,
+        hw_seconds: f64,
+        sw_seconds: f64,
+    ) {
+        self.max_inflight = self.max_inflight.max(max_inflight);
+        self.fill_seconds += fill_seconds;
+        self.drain_seconds += drain_seconds;
+        self.overlapped_hw_seconds += overlapped_hw_seconds;
+        self.pipelined_hw_seconds += hw_seconds;
+        self.pipelined_sw_seconds += sw_seconds;
+    }
+
     /// Mean frames per round (the effective batch width).
     pub fn mean_width(&self) -> f64 {
         if self.rounds > 0 {
             self.frames as f64 / self.rounds as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of pipelined HW time hidden behind concurrent SW work.
+    pub fn overlapped_hw_ratio(&self) -> f64 {
+        if self.pipelined_hw_seconds > 0.0 {
+            self.overlapped_hw_seconds / self.pipelined_hw_seconds
         } else {
             0.0
         }
@@ -192,11 +266,13 @@ mod tests {
         let mut t = StreamThroughput::default();
         assert_eq!(t.fps(), 0.0);
         assert_eq!(t.overlap_ratio(), 0.0);
-        t.record_frame(0.5, 0.3, 0.4, 0.2);
-        t.record_frame(0.5, 0.3, 0.4, 0.2);
+        assert_eq!(t.hw_overlap_ratio(), 0.0);
+        t.record_frame(0.5, 0.3, 0.4, 0.2, 0.15);
+        t.record_frame(0.5, 0.3, 0.4, 0.2, 0.15);
         assert_eq!(t.frames, 2);
         assert!((t.fps() - 2.0).abs() < 1e-12);
         assert!((t.overlap_ratio() - 0.5).abs() < 1e-12);
+        assert!((t.hw_overlap_ratio() - 0.5).abs() < 1e-12);
 
         let agg = AggregateThroughput::over(
             &[t.clone(), StreamThroughput::default()],
@@ -218,6 +294,29 @@ mod tests {
         assert_eq!(b.frames, 6);
         assert_eq!(b.max_width, 4);
         assert!((b.mean_width() - 3.0).abs() < 1e-12);
+        assert_eq!(b.pipelined_rounds, 0);
+    }
+
+    #[test]
+    fn batch_stats_track_pipelined_windows() {
+        let mut b = BatchStats::default();
+        assert_eq!(b.overlapped_hw_ratio(), 0.0);
+        b.record_pipelined_round(3);
+        b.record_pipelined_round(3);
+        // pipelined rounds also count toward the width statistics
+        assert_eq!(b.rounds, 2);
+        assert_eq!(b.frames, 6);
+        assert_eq!(b.pipelined_rounds, 2);
+        b.record_pipeline_window(2, 0.1, 0.2, 0.5, 2.0, 1.5);
+        // windows accumulate; depth is a running max
+        b.record_pipeline_window(3, 0.1, 0.1, 0.5, 2.0, 1.0);
+        assert_eq!(b.max_inflight, 3);
+        assert!((b.fill_seconds - 0.2).abs() < 1e-12);
+        assert!((b.drain_seconds - 0.3).abs() < 1e-12);
+        assert!((b.overlapped_hw_seconds - 1.0).abs() < 1e-12);
+        assert!((b.pipelined_hw_seconds - 4.0).abs() < 1e-12);
+        assert!((b.pipelined_sw_seconds - 2.5).abs() < 1e-12);
+        assert!((b.overlapped_hw_ratio() - 0.25).abs() < 1e-12);
     }
 
     #[test]

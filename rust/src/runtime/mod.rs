@@ -16,6 +16,36 @@
 //! Segment lookup is split in two: [`HwBackend::resolve`] turns a name
 //! into a [`SegmentId`] once at pipeline construction, and the hot
 //! [`HwBackend::run`] path is a plain index — no per-call map lookup.
+//!
+//! # The submit/await contract
+//!
+//! [`HwBackend::submit`] / [`HwBackend::submit_batch`] enqueue a segment
+//! and return a [`SubmitHandle`] without waiting for the result;
+//! [`SubmitHandle::wait_batch`] (or the trait-level [`HwBackend::wait`])
+//! blocks until the segment completes. The contract:
+//!
+//! * **Default-eager semantics** — the provided implementations execute
+//!   the segment *inside* `submit*` via [`HwBackend::run_batch`] and
+//!   return an already-complete handle. Any backend that only implements
+//!   `run`/`run_batch` (e.g. [`HwRuntime`], or a third-party impl) is
+//!   therefore automatically submit/await-correct: the pipelined serving
+//!   paths degrade to the lockstep schedule, bit-identically.
+//! * **In-order completion** — an async implementation must execute
+//!   submissions strictly in submission order (one PL, one command
+//!   queue). Handles may be *waited* in any order — each handle owns its
+//!   completion — but execution order is FIFO, so waiting handle N
+//!   implies every earlier submission has also finished executing.
+//! * **Bit-exactness** — `submit_batch(id, batch)` then `wait` must
+//!   return exactly what `run_batch(id, batch)` returns. Submission is a
+//!   scheduling optimisation, never a semantic one.
+//! * **Error surfacing** — input validation errors may surface at either
+//!   `submit*` (the DMA-descriptor check happens when the command is
+//!   queued) or at `wait`; execution errors always surface at `wait`.
+//!
+//! `RefBackend` overrides `submit_batch` with a real async
+//! implementation: a dedicated backend worker thread drains a FIFO job
+//! queue, so submitted segments execute while the caller runs software
+//! stages — the overlap `StreamServer::run_pipelined` is built on.
 
 pub mod ref_backend;
 
@@ -23,6 +53,7 @@ pub use ref_backend::RefBackend;
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -40,6 +71,77 @@ impl SegmentId {
     /// Position of the segment in the backend's manifest order.
     pub fn index(self) -> usize {
         self.0
+    }
+}
+
+/// Result of one completed submission: the per-stream outputs plus the
+/// execution interval, timestamped where the work actually ran (the
+/// backend worker for async backends, the submitting caller for the
+/// default-eager path) — the data behind the cross-round overlap
+/// accounting in `coordinator`.
+pub struct HwCompletion {
+    pub outs: Result<Vec<Vec<QTensor>>>,
+    pub start: Instant,
+    pub end: Instant,
+}
+
+enum HandleState {
+    /// Executed eagerly inside `submit*` (the default-impl contract):
+    /// the completion is already here.
+    Ready(HwCompletion),
+    /// Queued on a backend worker; the completion arrives on this
+    /// channel when the worker finishes the segment.
+    Queued(Receiver<HwCompletion>),
+}
+
+/// Handle to one in-flight [`HwBackend::submit`]/
+/// [`HwBackend::submit_batch`] call. Consumed by `wait*`; dropping it
+/// without waiting abandons the result (the submission still executes —
+/// the queue is FIFO and later submissions sit behind it).
+pub struct SubmitHandle {
+    state: HandleState,
+}
+
+impl SubmitHandle {
+    /// An already-completed submission (the default eager semantics).
+    pub fn ready(outs: Result<Vec<Vec<QTensor>>>, start: Instant, end: Instant) -> Self {
+        SubmitHandle { state: HandleState::Ready(HwCompletion { outs, start, end }) }
+    }
+
+    /// A submission whose completion will arrive on `rx` (async
+    /// backends send one [`HwCompletion`] per job, in execution order).
+    pub fn queued(rx: Receiver<HwCompletion>) -> Self {
+        SubmitHandle { state: HandleState::Queued(rx) }
+    }
+
+    /// Block until the submission completes; returns the batch outputs
+    /// plus the execution interval (for the overlap profiler).
+    pub fn wait_batch_timed(self) -> Result<(Vec<Vec<QTensor>>, Instant, Instant)> {
+        let c = match self.state {
+            HandleState::Ready(c) => c,
+            HandleState::Queued(rx) => rx.recv().map_err(|_| {
+                anyhow::anyhow!(
+                    "backend worker dropped before completing a submitted segment"
+                )
+            })?,
+        };
+        Ok((c.outs?, c.start, c.end))
+    }
+
+    /// Block until the submission completes; batch outputs only.
+    pub fn wait_batch(self) -> Result<Vec<Vec<QTensor>>> {
+        self.wait_batch_timed().map(|(outs, _, _)| outs)
+    }
+
+    /// Await a width-1 submission made with [`HwBackend::submit`].
+    pub fn wait(self) -> Result<Vec<QTensor>> {
+        let mut outs = self.wait_batch()?;
+        anyhow::ensure!(
+            outs.len() == 1,
+            "wait() on a batch submission of width {}",
+            outs.len()
+        );
+        Ok(outs.pop().expect("length checked"))
     }
 }
 
@@ -80,6 +182,40 @@ pub trait HwBackend: Send + Sync {
         batch: &[Vec<&QTensor>],
     ) -> Result<Vec<Vec<QTensor>>> {
         batch.iter().map(|inputs| self.run(id, inputs)).collect()
+    }
+
+    /// Submit one segment over a batch without waiting for the result
+    /// (see the module docs for the full submit/await contract).
+    ///
+    /// Default: execute eagerly via [`HwBackend::run_batch`] and return
+    /// an already-complete handle, so every backend is submit-callable
+    /// and bit-identical to its blocking path. Async backends override
+    /// this to enqueue the job on a worker and return a queued handle;
+    /// execution must stay FIFO in submission order.
+    fn submit_batch(
+        &self,
+        id: SegmentId,
+        batch: &[Vec<&QTensor>],
+    ) -> Result<SubmitHandle> {
+        let start = Instant::now();
+        let outs = self.run_batch(id, batch);
+        Ok(SubmitHandle::ready(outs, start, Instant::now()))
+    }
+
+    /// Width-1 [`HwBackend::submit_batch`]: submit one stream's segment
+    /// inputs; await with [`SubmitHandle::wait`].
+    fn submit(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<SubmitHandle> {
+        self.submit_batch(id, &[inputs.to_vec()])
+    }
+
+    /// Blocking await of a submission — a convenience equivalent to
+    /// [`SubmitHandle::wait_batch`]. Note the serving paths await their
+    /// handles directly (the handle owns its completion channel), so an
+    /// override here is *not* an interposition point for them; a backend
+    /// whose completions need custom plumbing should build it into the
+    /// handle it returns from `submit*` instead.
+    fn wait(&self, handle: SubmitHandle) -> Result<Vec<Vec<QTensor>>> {
+        handle.wait_batch()
     }
 
     /// Resolve + run in one call (cold paths and tests).

@@ -13,18 +13,35 @@
 //!
 //! Segment names are classified once at construction; the hot `run` path
 //! is an index into a flat table (same contract as `HwRuntime`).
+//!
+//! # Async submissions
+//!
+//! `RefBackend` implements the real (non-eager) side of the submit/await
+//! contract (`runtime` module docs): a dedicated **backend worker**
+//! thread — the analog of the PL command processor — drains a FIFO job
+//! queue. [`HwBackend::submit_batch`] validates the inputs, copies them
+//! into the job (the submitter's borrows don't outlive the call) and
+//! enqueues it; the worker executes jobs strictly in submission order
+//! through the very same segment mirrors as the blocking path, so
+//! submitted results are bit-identical to `run_batch` by construction.
+//! The worker shares the model (and its conv-thread arena) through an
+//! `Arc`, so the packed tap lists and scratch freelists are the same
+//! ones the blocking path uses.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::manifest::{Manifest, SegmentDesc};
 use crate::model::weights::QuantParams;
 use crate::model::QuantModel;
 use crate::quant::QTensor;
 
-use super::{check_inputs, HwBackend, SegmentId};
+use super::{check_inputs, HwBackend, HwCompletion, SegmentId, SubmitHandle};
 
 /// What a manifest segment computes (parsed from its name once).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,13 +90,31 @@ fn classify(name: &str) -> Result<SegKind> {
     })
 }
 
-/// The software PL: quantized Rust mirrors behind the backend contract.
-pub struct RefBackend {
+/// Segment-serving core, shared between the caller-facing backend and
+/// its submission worker thread.
+struct RefInner {
     qp: Arc<QuantParams>,
     model: QuantModel,
     manifest: Manifest,
     kinds: Vec<SegKind>,
     index: HashMap<String, usize>,
+}
+
+/// One queued submission: the segment, owned copies of the batch inputs,
+/// and the channel its [`HwCompletion`] is delivered on.
+struct HwJob {
+    id: SegmentId,
+    batch: Vec<Vec<QTensor>>,
+    resp: Sender<HwCompletion>,
+}
+
+/// The software PL: quantized Rust mirrors behind the backend contract.
+pub struct RefBackend {
+    inner: Arc<RefInner>,
+    /// Submission queue to the backend worker (the PL command queue):
+    /// jobs execute strictly in submission order. `None` after shutdown.
+    queue: Mutex<Option<Sender<HwJob>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl RefBackend {
@@ -98,7 +133,34 @@ impl RefBackend {
             .map(|(i, d)| (d.name.clone(), i))
             .collect();
         let model = QuantModel::new(Arc::clone(&qp));
-        Ok(RefBackend { qp, model, manifest, kinds, index })
+        let inner = Arc::new(RefInner { qp, model, manifest, kinds, index });
+        let (tx, rx) = channel::<HwJob>();
+        let exec = Arc::clone(&inner);
+        let worker = std::thread::Builder::new()
+            .name("fadec-hw-queue".into())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    let refs: Vec<Vec<&QTensor>> = job
+                        .batch
+                        .iter()
+                        .map(|inputs| inputs.iter().collect())
+                        .collect();
+                    let outs = exec.exec_batch(job.id, &refs);
+                    // a dropped handle abandons its result; that's fine
+                    let _ = job.resp.send(HwCompletion {
+                        outs,
+                        start: t0,
+                        end: Instant::now(),
+                    });
+                }
+            })
+            .map_err(|e| anyhow!("spawning backend worker: {e}"))?;
+        Ok(RefBackend {
+            inner,
+            queue: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+        })
     }
 
     /// Fully self-contained backend: synthetic manifest + deterministic
@@ -112,47 +174,36 @@ impl RefBackend {
 
     /// The quantized parameters this backend computes with.
     pub fn qp(&self) -> &Arc<QuantParams> {
-        &self.qp
+        &self.inner.qp
     }
 
     /// Stripe every conv's output channels over `threads` scoped workers
     /// (the `PipelineOptions::conv_threads` knob). Results are
     /// bit-identical for every thread count — only the latency changes.
     pub fn with_conv_threads(self, threads: usize) -> Self {
-        self.model.set_conv_threads(threads);
+        self.inner.model.set_conv_threads(threads);
         self
     }
 
     pub fn conv_threads(&self) -> usize {
-        self.model.conv_threads()
+        self.inner.model.conv_threads()
     }
 }
 
-impl HwBackend for RefBackend {
-    fn kind(&self) -> &'static str {
-        "ref"
+impl Drop for RefBackend {
+    fn drop(&mut self) {
+        // close the queue, then join the worker (mirrors ExternLink)
+        drop(self.queue.lock().unwrap().take());
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
+        }
     }
+}
 
-    fn set_conv_threads(&self, threads: usize) {
-        self.model.set_conv_threads(threads);
-    }
-
-    fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    fn resolve(&self, name: &str) -> Result<SegmentId> {
-        self.index
-            .get(name)
-            .map(|&i| SegmentId(i))
-            .with_context(|| format!("segment '{name}' not in manifest"))
-    }
-
-    fn segment_desc(&self, id: SegmentId) -> &SegmentDesc {
-        &self.manifest.segments[id.0]
-    }
-
-    fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+impl RefInner {
+    /// Blocking execution of one segment (the body of `HwBackend::run`;
+    /// also what the worker thread runs for width-1 jobs).
+    fn exec(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
         let desc = self
             .manifest
             .segments
@@ -186,8 +237,8 @@ impl HwBackend for RefBackend {
     /// `PackedConv` tap lists, one thread-scope per conv); conv-free
     /// segments (`cl_state`, `cl_out`) loop — they are pure elementwise
     /// glue with nothing to amortise. Each batch element is bit-identical
-    /// to `run` on that element alone.
-    fn run_batch(
+    /// to `exec` on that element alone.
+    fn exec_batch(
         &self,
         id: SegmentId,
         batch: &[Vec<&QTensor>],
@@ -259,6 +310,80 @@ impl HwBackend for RefBackend {
             check_outputs(desc, out)?;
         }
         Ok(outs)
+    }
+}
+
+impl HwBackend for RefBackend {
+    fn kind(&self) -> &'static str {
+        "ref"
+    }
+
+    fn set_conv_threads(&self, threads: usize) {
+        self.inner.model.set_conv_threads(threads);
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    fn resolve(&self, name: &str) -> Result<SegmentId> {
+        self.inner
+            .index
+            .get(name)
+            .map(|&i| SegmentId(i))
+            .with_context(|| format!("segment '{name}' not in manifest"))
+    }
+
+    fn segment_desc(&self, id: SegmentId) -> &SegmentDesc {
+        &self.inner.manifest.segments[id.0]
+    }
+
+    fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+        self.inner.exec(id, inputs)
+    }
+
+    fn run_batch(
+        &self,
+        id: SegmentId,
+        batch: &[Vec<&QTensor>],
+    ) -> Result<Vec<Vec<QTensor>>> {
+        self.inner.exec_batch(id, batch)
+    }
+
+    /// Real async submission: validate the inputs (the DMA-descriptor
+    /// check happens at enqueue time), copy them into the job and hand
+    /// it to the backend worker. The worker executes jobs strictly in
+    /// submission order through `exec_batch`, so a submitted segment is
+    /// bit-identical to the blocking `run_batch` path by construction —
+    /// and it executes while the caller runs software stages, which is
+    /// the overlap `StreamServer::run_pipelined` schedules around.
+    fn submit_batch(
+        &self,
+        id: SegmentId,
+        batch: &[Vec<&QTensor>],
+    ) -> Result<SubmitHandle> {
+        let desc = self
+            .inner
+            .manifest
+            .segments
+            .get(id.0)
+            .with_context(|| format!("segment id {} out of range", id.0))?;
+        for inputs in batch {
+            check_inputs(desc, inputs)?;
+        }
+        let owned: Vec<Vec<QTensor>> = batch
+            .iter()
+            .map(|inputs| inputs.iter().copied().cloned().collect())
+            .collect();
+        let (resp_tx, resp_rx) = channel();
+        self.queue
+            .lock()
+            .unwrap()
+            .as_ref()
+            .context("backend worker shut down")?
+            .send(HwJob { id, batch: owned, resp: resp_tx })
+            .map_err(|_| anyhow!("backend worker gone"))?;
+        Ok(SubmitHandle::queued(resp_rx))
     }
 }
 
@@ -365,6 +490,94 @@ mod tests {
                 assert_eq!(a.t.data(), b.t.data(), "stream {bi}");
                 assert_eq!(a.exp, b.exp);
             }
+        }
+    }
+
+    #[test]
+    fn submitted_segments_match_blocking_run_batch() {
+        let be = RefBackend::synthetic(7);
+        let id = be.resolve("fe_fs").unwrap();
+        let imgs: Vec<QTensor> = (0..2u64)
+            .map(|i| quantize_tensor(&random_image(i + 50), be.qp().aexp("image")))
+            .collect();
+        let batch: Vec<Vec<&QTensor>> = imgs.iter().map(|q| vec![q]).collect();
+        let blocking = be.run_batch(id, &batch).unwrap();
+        let handle = be.submit_batch(id, &batch).unwrap();
+        let (outs, start, end) = handle.wait_batch_timed().unwrap();
+        assert!(end >= start, "worker interval is ordered");
+        assert_eq!(outs.len(), blocking.len());
+        for (a, b) in outs.iter().zip(&blocking) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.t.data(), y.t.data());
+                assert_eq!(x.exp, y.exp);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_may_be_waited_out_of_submission_order() {
+        // execution is FIFO on the worker, but each handle owns its
+        // completion channel, so waits can happen in any order
+        let be = RefBackend::synthetic(7);
+        let id = be.resolve("fe_fs").unwrap();
+        let img_a = quantize_tensor(&random_image(60), be.qp().aexp("image"));
+        let img_b = quantize_tensor(&random_image(61), be.qp().aexp("image"));
+        let want_a = be.run(id, &[&img_a]).unwrap();
+        let want_b = be.run(id, &[&img_b]).unwrap();
+        let ha = be.submit(id, &[&img_a]).unwrap();
+        let hb = be.submit(id, &[&img_b]).unwrap();
+        let got_b = hb.wait().unwrap();
+        let got_a = ha.wait().unwrap();
+        for (x, y) in got_a.iter().zip(&want_a) {
+            assert_eq!(x.t.data(), y.t.data());
+        }
+        for (x, y) in got_b.iter().zip(&want_b) {
+            assert_eq!(x.t.data(), y.t.data());
+        }
+    }
+
+    #[test]
+    fn submit_rejects_bad_inputs_at_enqueue_time() {
+        let be = RefBackend::synthetic(7);
+        let id = be.resolve("fe_fs").unwrap();
+        let bad = QTensor::zeros(&[1, 3, 8, 8], be.qp().aexp("image"));
+        assert!(be.submit(id, &[&bad]).is_err());
+    }
+
+    /// Delegates `run`/`run_batch` but keeps the trait's default
+    /// `submit*`, exercising the eager fallback any third-party backend
+    /// gets for free.
+    struct EagerWrap(RefBackend);
+
+    impl HwBackend for EagerWrap {
+        fn kind(&self) -> &'static str {
+            "eager-test"
+        }
+        fn manifest(&self) -> &Manifest {
+            self.0.manifest()
+        }
+        fn resolve(&self, name: &str) -> Result<SegmentId> {
+            self.0.resolve(name)
+        }
+        fn segment_desc(&self, id: SegmentId) -> &SegmentDesc {
+            self.0.segment_desc(id)
+        }
+        fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+            self.0.run(id, inputs)
+        }
+    }
+
+    #[test]
+    fn default_eager_submit_matches_run() {
+        let be = EagerWrap(RefBackend::synthetic(7));
+        let id = be.resolve("fe_fs").unwrap();
+        let img = quantize_tensor(&random_image(70), be.0.qp().aexp("image"));
+        let want = be.run(id, &[&img]).unwrap();
+        let got = be.submit(id, &[&img]).unwrap().wait().unwrap();
+        assert_eq!(want.len(), got.len());
+        for (x, y) in got.iter().zip(&want) {
+            assert_eq!(x.t.data(), y.t.data());
+            assert_eq!(x.exp, y.exp);
         }
     }
 

@@ -9,6 +9,7 @@ use fadec::config;
 use fadec::coordinator::{Coordinator, PipelineOptions, StreamServer};
 use fadec::data::dataset::Scene;
 use fadec::model::QuantParams;
+use fadec::poses::Mat4;
 use fadec::runtime::{HwBackend, RefBackend};
 use fadec::tensor::TensorF;
 
@@ -201,6 +202,149 @@ fn batched_rounds_are_bit_identical_for_every_width_and_thread_count() {
             assert_eq!(bs.max_width, width);
         }
     }
+}
+
+#[test]
+fn pipelined_serving_is_bit_identical_to_sequential_for_any_depth() {
+    // run_pipelined keeps up to K rounds in flight through the backend's
+    // async submit queue; every frame of every stream must stay
+    // bit-identical to serving that stream alone, for K=1 (lockstep
+    // degenerate case) and for real pipelining depths. Every frame walks
+    // all 19 manifest segments, so this pins the whole segment path.
+    let n_frames = 3;
+    let n_streams = 3;
+    let scenes: Vec<Scene> = (0..n_streams)
+        .map(|s| Scene::synthetic(&format!("pl{s}"), n_frames, 60 + s as u64))
+        .collect();
+    let (backend, qp) = shared_backend(55);
+    let solo: Vec<Vec<TensorF>> = scenes
+        .iter()
+        .map(|sc| run_sequential(&backend, &qp, sc, n_frames))
+        .collect();
+    // materialize every frame so the rounds can borrow them
+    let imgs: Vec<Vec<TensorF>> = (0..n_frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    for k in 1..=3usize {
+        let mut server =
+            StreamServer::on_ref_backend(55, PipelineOptions::default())
+                .unwrap();
+        let streams: Vec<usize> =
+            (0..n_streams).map(|_| server.open_stream()).collect();
+        let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..n_frames)
+            .map(|i| {
+                streams
+                    .iter()
+                    .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                    .collect()
+            })
+            .collect();
+        let results = server.run_pipelined(&rounds, k).unwrap();
+        assert_eq!(results.len(), n_frames);
+        for (i, outs) in results.iter().enumerate() {
+            assert_eq!(outs.len(), n_streams, "depth={k} round {i}");
+            for (sid, out) in outs {
+                assert_eq!(
+                    out.depth.data(),
+                    solo[*sid][i].data(),
+                    "depth={k} stream={sid} frame={i}: pipelined serving \
+                     diverged from sequential"
+                );
+            }
+        }
+        let bs = server.batch_stats();
+        assert_eq!(bs.pipelined_rounds, n_frames, "depth={k}");
+        assert_eq!(bs.rounds, n_frames, "depth={k}");
+        assert_eq!(bs.max_width, n_streams, "depth={k}");
+        assert_eq!(bs.max_inflight, k.min(n_frames), "depth={k}");
+        assert!(bs.fill_seconds >= 0.0 && bs.drain_seconds >= 0.0);
+        for &s in &streams {
+            assert_eq!(server.session(s).frames_done(), n_frames);
+            assert_eq!(server.stream_throughput(s).frames, n_frames);
+        }
+    }
+}
+
+#[test]
+fn pipelined_depth2_reports_nonzero_hw_overlap() {
+    // with K=2 the backend worker executes round r+1's FeFs while the
+    // serving thread runs round r's software stages: the window's HW
+    // timeline must show time hidden behind SW
+    let n_frames = 4;
+    let n_streams = 4;
+    let scenes: Vec<Scene> = (0..n_streams)
+        .map(|s| Scene::synthetic(&format!("ov{s}"), n_frames, 80 + s as u64))
+        .collect();
+    let mut server =
+        StreamServer::on_ref_backend(21, PipelineOptions::default()).unwrap();
+    let streams: Vec<usize> =
+        (0..n_streams).map(|_| server.open_stream()).collect();
+    let imgs: Vec<Vec<TensorF>> = (0..n_frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..n_frames)
+        .map(|i| {
+            streams
+                .iter()
+                .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                .collect()
+        })
+        .collect();
+    server.run_pipelined(&rounds, 2).unwrap();
+    let bs = server.batch_stats();
+    assert_eq!(bs.max_inflight, 2);
+    assert!(
+        bs.pipelined_hw_seconds > 0.0 && bs.pipelined_sw_seconds > 0.0,
+        "window recorded busy time on both lanes: {bs:?}"
+    );
+    assert!(
+        bs.overlapped_hw_seconds > 0.0,
+        "K=2 pipelining hid no HW time behind SW: {bs:?}"
+    );
+    assert!(bs.overlapped_hw_ratio() > 0.0);
+    let report = server.report();
+    assert!(report.contains("pipelined rounds:"), "{report}");
+}
+
+#[test]
+fn round_rotation_is_fair_under_varying_widths() {
+    // width changes between rounds (a stream joining/leaving) must not
+    // skew whose turn it is to lead a round: each width rotates by its
+    // own served-round counter. The old global-counter scheme pinned
+    // width-2 rounds to the same leader forever (0%2, 2%2, 4%2, ...).
+    let mut server =
+        StreamServer::on_ref_backend(9, PipelineOptions::default()).unwrap();
+    let s0 = server.open_stream();
+    let s1 = server.open_stream();
+    let s2 = server.open_stream();
+    let scenes: Vec<Scene> = (0..3)
+        .map(|s| Scene::synthetic(&format!("rot{s}"), 6, 90 + s as u64))
+        .collect();
+    let mut next_frame = [0usize; 3];
+    let mut serve = |server: &mut StreamServer, sids: &[usize]| -> usize {
+        let imgs: Vec<TensorF> = sids
+            .iter()
+            .map(|&s| scenes[s].normalized_image(next_frame[s]))
+            .collect();
+        let inputs: Vec<_> = sids
+            .iter()
+            .zip(&imgs)
+            .map(|(&s, img)| (s, img, &scenes[s].poses[next_frame[s]]))
+            .collect();
+        let outs = server.run_round(&inputs).unwrap();
+        for &s in sids {
+            next_frame[s] += 1;
+        }
+        outs[0].0 // the round's leader (first served stream)
+    };
+    // alternate width-2 and width-3 rounds; each width rotates fairly
+    // through its own participants regardless of the other width's turns
+    assert_eq!(serve(&mut server, &[s0, s1]), s0);
+    assert_eq!(serve(&mut server, &[s0, s1, s2]), s0);
+    assert_eq!(serve(&mut server, &[s0, s1]), s1);
+    assert_eq!(serve(&mut server, &[s0, s1, s2]), s1);
+    assert_eq!(serve(&mut server, &[s0, s1]), s0);
+    assert_eq!(serve(&mut server, &[s0, s1, s2]), s2);
 }
 
 #[test]
