@@ -101,13 +101,13 @@ fn main() {
             std::hint::black_box(y);
         });
         let ref_ns = st.median() * 1e9;
-        records.push(BenchRecord {
-            op: format!("{}_ref", case.name),
-            shape: shape.clone(),
-            ns_per_iter: ref_ns,
-            gops: gops(ref_ns),
-            threads: 1,
-        });
+        records.push(BenchRecord::timing(
+            format!("{}_ref", case.name),
+            shape.clone(),
+            ref_ns,
+            gops(ref_ns),
+            1,
+        ));
 
         // packed kernels at each worker count
         let mut fast1_ns = f64::NAN;
@@ -129,13 +129,13 @@ fn main() {
             if threads == 1 {
                 fast1_ns = ns;
             }
-            records.push(BenchRecord {
-                op: case.name.to_string(),
-                shape: shape.clone(),
-                ns_per_iter: ns,
-                gops: gops(ns),
+            records.push(BenchRecord::timing(
+                case.name,
+                shape.clone(),
+                ns,
+                gops(ns),
                 threads,
-            });
+            ));
         }
         if !smoke {
             println!(

@@ -33,13 +33,13 @@ fn rand_q(rng: &mut Rng, shape: &[usize], exp: i32) -> QTensor {
 
 fn rec(op: &str, shape: &str, st: &TimingStats, ops_per_iter: f64, threads: usize) -> BenchRecord {
     let ns = st.median() * 1e9;
-    BenchRecord {
-        op: op.into(),
-        shape: shape.into(),
-        ns_per_iter: ns,
-        gops: if ns > 0.0 { ops_per_iter / ns } else { 0.0 },
+    BenchRecord::timing(
+        op,
+        shape,
+        ns,
+        if ns > 0.0 { ops_per_iter / ns } else { 0.0 },
         threads,
-    }
+    )
 }
 
 fn main() {

@@ -83,13 +83,13 @@ fn main() {
     let st = bench("conv2d_f32_64x32_3x3_32x48", warm(3), it(30), || {
         std::hint::black_box(ops::conv2d_packed(&x, &pwf, &bias, 1, &mut arena_f));
     });
-    records.push(BenchRecord {
-        op: "ops_micro_conv2d_f32".into(),
-        shape: shape.clone(),
-        ns_per_iter: st.median() * 1e9,
-        gops: gops(st.median() * 1e9),
-        threads: 1,
-    });
+    records.push(BenchRecord::timing(
+        "ops_micro_conv2d_f32",
+        shape.clone(),
+        st.median() * 1e9,
+        gops(st.median() * 1e9),
+        1,
+    ));
 
     let xq = QTensor {
         t: Tensor::from_vec(
@@ -110,13 +110,13 @@ fn main() {
                                      &mut arena);
         arena.recycle_q(std::hint::black_box(y));
     });
-    records.push(BenchRecord {
-        op: "ops_micro_conv2d_q".into(),
+    records.push(BenchRecord::timing(
+        "ops_micro_conv2d_q",
         shape,
-        ns_per_iter: st.median() * 1e9,
-        gops: gops(st.median() * 1e9),
-        threads: 1,
-    });
+        st.median() * 1e9,
+        gops(st.median() * 1e9),
+        1,
+    ));
 
     // cost volume finish (the synchronous extern op)
     let warps: Vec<TensorF> =

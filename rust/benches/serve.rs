@@ -1,5 +1,5 @@
-//! End-to-end multi-stream serving benchmark (PR 4): the same N-stream
-//! workload served three ways on the artifact-free RefBackend —
+//! End-to-end multi-stream serving benchmark (PR 4 + PR 5): the same
+//! N-stream workload served three ways on the artifact-free RefBackend —
 //!
 //! 1. **sequential** — per-stream stepping (`step_stream`), streams
 //!    strictly serialized;
@@ -14,42 +14,59 @@
 //! *second* (fps) — frames/ns would vanish in the schema's 3-decimal
 //! serialization.
 //!
+//! The pipelined records also carry the submit-path copy accounting
+//! (PR 5): `copy_bytes_before` is the input payload volume that crossed
+//! the submit queue — exactly what the PR-4 copying submit deep-copied
+//! per run — and `copy_bytes_after` is what the ownership-transferring
+//! submit actually copies: zero (payloads move as Arc handles; pinned
+//! by `rust/tests/alloc_free.rs` under `--features count-allocs`).
+//!
 //!     cargo bench --bench serve [-- --smoke]
 //!
 //! `--smoke` shrinks the workload to one warm pass and writes the
 //! `BENCH_serve.smoke.json` scratch file (the CI bench-smoke step), so
 //! cold timings never overwrite the real perf record.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use fadec::coordinator::{PipelineOptions, StreamServer};
 use fadec::data::dataset::Scene;
 use fadec::poses::Mat4;
+use fadec::runtime::{HwBackend, RefBackend};
 use fadec::tensor::TensorF;
 use fadec::util::benchjson::{self, BenchRecord};
 use fadec::util::Args;
 
 const CONV_THREADS: usize = 2;
 
-fn make_server() -> StreamServer {
-    StreamServer::on_ref_backend(
-        5,
+/// Server plus a typed handle onto its backend (the server only sees
+/// `dyn HwBackend`; the copy accounting lives on `RefBackend`).
+fn make_server() -> (StreamServer, Arc<RefBackend>) {
+    let backend = Arc::new(
+        RefBackend::synthetic(5).with_conv_threads(CONV_THREADS),
+    );
+    let qp = Arc::clone(backend.qp());
+    let server = StreamServer::new(
+        Arc::clone(&backend) as Arc<dyn HwBackend>,
+        qp,
         PipelineOptions { conv_threads: CONV_THREADS, ..Default::default() },
     )
-    .expect("synthetic server")
+    .expect("synthetic server");
+    (server, backend)
 }
 
 fn rec(op: &str, shape: &str, wall_s: f64, frames: usize) -> BenchRecord {
     let ns = wall_s * 1e9 / frames as f64;
-    BenchRecord {
-        op: op.into(),
-        shape: shape.into(),
-        ns_per_iter: ns,
+    BenchRecord::timing(
+        op,
+        shape,
+        ns,
         // aggregate fps (see module docs: frames/ns would round to 0.000
         // in the serialized schema)
-        gops: if wall_s > 0.0 { frames as f64 / wall_s } else { 0.0 },
-        threads: CONV_THREADS,
-    }
+        if wall_s > 0.0 { frames as f64 / wall_s } else { 0.0 },
+        CONV_THREADS,
+    )
 }
 
 fn main() {
@@ -69,7 +86,7 @@ fn main() {
     let mut records: Vec<BenchRecord> = Vec::new();
 
     // --- sequential: per-stream stepping --------------------------------
-    let mut server = make_server();
+    let (mut server, _) = make_server();
     let streams: Vec<usize> =
         (0..n_streams).map(|_| server.open_stream()).collect();
     let t0 = Instant::now();
@@ -84,7 +101,7 @@ fn main() {
     records.push(rec("serve_sequential", &shape, seq_wall, total));
 
     // --- batched: lockstep rounds ---------------------------------------
-    let mut server = make_server();
+    let (mut server, _) = make_server();
     let streams: Vec<usize> =
         (0..n_streams).map(|_| server.open_stream()).collect();
     let t0 = Instant::now();
@@ -100,7 +117,7 @@ fn main() {
 
     // --- pipelined: depth-K rounds in flight ----------------------------
     for k in [2usize, 4] {
-        let mut server = make_server();
+        let (mut server, backend) = make_server();
         let streams: Vec<usize> =
             (0..n_streams).map(|_| server.open_stream()).collect();
         let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..n_frames)
@@ -111,19 +128,28 @@ fn main() {
                     .collect()
             })
             .collect();
+        let bytes0 = backend.submit_payload_bytes();
         let t0 = Instant::now();
         server.run_pipelined(&rounds, k).expect("pipelined");
         let wall = t0.elapsed().as_secs_f64();
-        records.push(rec(&format!("serve_pipelined_k{k}"), &shape, wall, total));
+        // everything that crossed the submit queue would have been
+        // deep-copied by the PR-4 scheme; ownership transfer copies none
+        let queue_bytes = (backend.submit_payload_bytes() - bytes0) as f64;
+        let mut r = rec(&format!("serve_pipelined_k{k}"), &shape, wall, total);
+        r.copy_bytes_before = Some(queue_bytes);
+        r.copy_bytes_after = Some(0.0);
+        records.push(r);
         let bs = server.batch_stats();
         println!(
             "pipelined k={k}: {:7.3} s wall ({:6.2} fps), HW hidden {:.1}% \
-             (fill {:.1} ms, drain {:.1} ms)",
+             (fill {:.1} ms, drain {:.1} ms), submit moved {:.2} MiB \
+             copy-free",
             wall,
             total as f64 / wall.max(1e-9),
             100.0 * bs.overlapped_hw_ratio(),
             bs.fill_seconds * 1e3,
             bs.drain_seconds * 1e3,
+            queue_bytes / (1024.0 * 1024.0),
         );
     }
     println!(

@@ -592,26 +592,33 @@ impl PipelineEngine {
     /// the outputs plus the call's execution interval (recorded on each
     /// participant's profile by the caller via `FrameTask::span_hw`).
     ///
+    /// The batch is **owned handles**: inputs the round is done with are
+    /// moved in, inputs still needed later are O(1) CoW handle clones —
+    /// either way no payload bytes are copied building the call.
+    ///
     /// `queued` selects how the call reaches the backend: `false` is the
-    /// direct blocking path (lockstep rounds); `true` routes through
-    /// `submit_batch`/`wait`, so the call takes its place in the
-    /// backend's FIFO command queue *behind* any other round's segments
-    /// already submitted — the single-PL ordering the pipelined serving
-    /// loop relies on. Either way the outputs are bit-identical; with
-    /// `queued` the interval is the worker-side execution window (which
-    /// may predate the wait — the job ran while this thread did SW).
+    /// direct blocking path (lockstep rounds); `true` routes through the
+    /// ownership-transferring `submit_batch`/`wait`, so the handles move
+    /// into the backend's FIFO command queue *behind* any other round's
+    /// segments already submitted — the single-PL ordering the pipelined
+    /// serving loop relies on. Either way the outputs are bit-identical;
+    /// with `queued` the interval is the worker-side execution window
+    /// (which may predate the wait — the job ran while this thread did
+    /// SW).
     fn run_hw_batch(
         &self,
         hw: &dyn HwBackend,
         id: SegmentId,
-        batch: &[Vec<&QTensor>],
+        batch: Vec<Vec<QTensor>>,
         queued: bool,
     ) -> Result<(Vec<Vec<QTensor>>, Instant, Instant)> {
         if queued {
             hw.submit_batch(id, batch)?.wait_batch_timed()
         } else {
+            let refs: Vec<Vec<&QTensor>> =
+                batch.iter().map(|ins| ins.iter().collect()).collect();
             let a = Instant::now();
-            let outs = hw.run_batch(id, batch)?;
+            let outs = hw.run_batch(id, &refs)?;
             Ok((outs, a, Instant::now()))
         }
     }
@@ -712,8 +719,10 @@ impl PipelineEngine {
                 .collect();
         }
         t.corr_pending = Some({
+            // O(1) CoW handle clones: the posted task reads the session's
+            // hidden state and previous depth without copying a payload
             let h_prev = s.h.clone();
-            let depth_prev = Arc::clone(&s.depth_full);
+            let depth_prev = s.depth_full.clone();
             let pose_prev = s.pose_prev;
             let e_hcorr = self.qp.aexp("cl.hcorr");
             self.link.post("hidden_corr", move || {
@@ -761,14 +770,14 @@ impl PipelineEngine {
         ts: &mut [FrameTask],
         queued: bool,
     ) -> Result<()> {
-        let imgs: Vec<QTensor> = ts
+        // the quantized images are spent after FeFs: move them into the
+        // call (the queued path hands them to the backend outright)
+        let batch: Vec<Vec<QTensor>> = ts
             .iter_mut()
-            .map(|t| t.img_q.take().expect("QuantizeImage ran"))
+            .map(|t| vec![t.img_q.take().expect("QuantizeImage ran")])
             .collect();
-        let (outs, a, b) = {
-            let batch: Vec<Vec<&QTensor>> = imgs.iter().map(|q| vec![q]).collect();
-            self.run_hw_batch(hw, self.handles.fe_fs, &batch, queued)?
-        };
+        let (outs, a, b) =
+            self.run_hw_batch(hw, self.handles.fe_fs, batch, queued)?;
         self.scatter_fe_fs(ts, outs, a, b);
         Ok(())
     }
@@ -776,18 +785,19 @@ impl PipelineEngine {
     /// Submit the round's batched FeFs segment without waiting — the
     /// front half of `stage_fe_fs`, used by `begin_round` so the HW lane
     /// starts on this round while the caller keeps running other rounds'
-    /// software stages.
+    /// software stages. Ownership of the quantized images transfers to
+    /// the submission: nothing is copied, and the round no longer holds
+    /// them.
     fn stage_fe_fs_submit(
         &self,
         hw: &dyn HwBackend,
         ts: &mut [FrameTask],
     ) -> Result<SubmitHandle> {
-        let imgs: Vec<QTensor> = ts
+        let batch: Vec<Vec<QTensor>> = ts
             .iter_mut()
-            .map(|t| t.img_q.take().expect("QuantizeImage ran"))
+            .map(|t| vec![t.img_q.take().expect("QuantizeImage ran")])
             .collect();
-        let batch: Vec<Vec<&QTensor>> = imgs.iter().map(|q| vec![q]).collect();
-        hw.submit_batch(self.handles.fe_fs, &batch)
+        hw.submit_batch(self.handles.fe_fs, batch)
     }
 
     /// Await a `stage_fe_fs_submit` handle and scatter the features —
@@ -869,20 +879,23 @@ impl PipelineEngine {
         ts: &mut [FrameTask],
         queued: bool,
     ) -> Result<()> {
-        let costs: Vec<QTensor> = ts
+        // cost is spent here (moved); the pyramid features are still the
+        // round's state (commit takes feats[0], decoder reads enc), so
+        // the call gets O(1) handle clones of them
+        let batch: Vec<Vec<QTensor>> = ts
             .iter_mut()
-            .map(|t| t.cost_q.take().expect("CvfFinish ran"))
+            .map(|t| {
+                vec![
+                    t.cost_q.take().expect("CvfFinish ran"),
+                    t.feats[1].clone(),
+                    t.feats[2].clone(),
+                    t.feats[3].clone(),
+                    t.feats[4].clone(),
+                ]
+            })
             .collect();
-        let (outs, a, b) = {
-            let batch: Vec<Vec<&QTensor>> = ts
-                .iter()
-                .zip(&costs)
-                .map(|(t, c)| {
-                    vec![c, &t.feats[1], &t.feats[2], &t.feats[3], &t.feats[4]]
-                })
-                .collect();
-            self.run_hw_batch(hw, self.handles.cve, &batch, queued)?
-        };
+        let (outs, a, b) =
+            self.run_hw_batch(hw, self.handles.cve, batch, queued)?;
         for (t, enc) in ts.iter_mut().zip(outs) {
             t.span_hw("cve", a, b);
             t.tr("e4_q", &enc[4]);
@@ -914,18 +927,19 @@ impl PipelineEngine {
         sessions: &mut [&mut StreamSession],
         queued: bool,
     ) -> Result<()> {
-        let h_corrs: Vec<QTensor> = ts
+        // h_corr is spent (moved); e4 stays round state (decoder reads
+        // it), so the call clones its handle
+        let batch: Vec<Vec<QTensor>> = ts
             .iter_mut()
-            .map(|t| t.h_corr.take().expect("correction joined"))
+            .map(|t| {
+                vec![
+                    t.enc[4].clone(),
+                    t.h_corr.take().expect("correction joined"),
+                ]
+            })
             .collect();
-        let (outs, a, b) = {
-            let batch: Vec<Vec<&QTensor>> = ts
-                .iter()
-                .zip(&h_corrs)
-                .map(|(t, h)| vec![&t.enc[4], h])
-                .collect();
-            self.run_hw_batch(hw, self.handles.cl_gates, &batch, queued)?
-        };
+        let (outs, a, b) =
+            self.run_hw_batch(hw, self.handles.cl_gates, batch, queued)?;
         let mut gates: Vec<QTensor> = Vec::with_capacity(ts.len());
         for (t, mut g) in ts.iter_mut().zip(outs) {
             t.span_hw("cl_gates", a, b);
@@ -939,14 +953,15 @@ impl PipelineEngine {
             &gates,
             self.qp.aexp("cl.ln_gates"),
         );
-        let (outs, a, b) = {
-            let batch: Vec<Vec<&QTensor>> = gates_ln
-                .iter()
-                .zip(sessions.iter())
-                .map(|(g, s)| vec![g, &s.c])
-                .collect();
-            self.run_hw_batch(hw, self.handles.cl_state, &batch, queued)?
-        };
+        // normed gates are spent (moved); the session's cell state must
+        // survive until commit, so its handle is cloned
+        let batch: Vec<Vec<QTensor>> = gates_ln
+            .into_iter()
+            .zip(sessions.iter())
+            .map(|(g, s)| vec![g, s.c.clone()])
+            .collect();
+        let (outs, a, b) =
+            self.run_hw_batch(hw, self.handles.cl_state, batch, queued)?;
         let mut c_news: Vec<QTensor> = Vec::with_capacity(ts.len());
         let mut o_gates: Vec<QTensor> = Vec::with_capacity(ts.len());
         for (t, mut o) in ts.iter_mut().zip(outs) {
@@ -963,14 +978,14 @@ impl PipelineEngine {
             &c_news,
             self.qp.aexp("cl.ln_cell"),
         );
-        let (outs, a, b) = {
-            let batch: Vec<Vec<&QTensor>> = ln_cs
-                .iter()
-                .zip(&o_gates)
-                .map(|(l, o)| vec![l, o])
-                .collect();
-            self.run_hw_batch(hw, self.handles.cl_out, &batch, queued)?
-        };
+        // both inputs retire with this call: move them outright
+        let batch: Vec<Vec<QTensor>> = ln_cs
+            .into_iter()
+            .zip(o_gates)
+            .map(|(l, o)| vec![l, o])
+            .collect();
+        let (outs, a, b) =
+            self.run_hw_batch(hw, self.handles.cl_out, batch, queued)?;
         for ((t, mut o), c_new) in ts.iter_mut().zip(outs).zip(c_news) {
             t.span_hw("cl_out", a, b);
             let h_new = o.swap_remove(0);
@@ -994,20 +1009,23 @@ impl PipelineEngine {
         let mut d_q: Vec<Option<QTensor>> = (0..n).map(|_| None).collect();
         for b in 0..5 {
             let entry_outs = if b == 0 {
-                let (outs, s0, s1) = {
-                    let batch: Vec<Vec<&QTensor>> = ts
-                        .iter()
-                        .map(|t| {
-                            vec![t.h_new.as_ref().expect("ConvLstm ran"), &t.enc[4]]
-                        })
-                        .collect();
-                    self.run_hw_batch(
-                        hw,
-                        self.handles.cvd_entry[0],
-                        &batch,
-                        queued,
-                    )?
-                };
+                // h_new and e4 both stay round state (commit stores
+                // h_new; later blocks read enc) — handle clones only
+                let batch: Vec<Vec<QTensor>> = ts
+                    .iter()
+                    .map(|t| {
+                        vec![
+                            t.h_new.clone().expect("ConvLstm ran"),
+                            t.enc[4].clone(),
+                        ]
+                    })
+                    .collect();
+                let (outs, s0, s1) = self.run_hw_batch(
+                    hw,
+                    self.handles.cvd_entry[0],
+                    batch,
+                    queued,
+                )?;
                 for t in ts.iter_mut() {
                     t.span_hw("cvd_entry", s0, s1);
                 }
@@ -1042,21 +1060,21 @@ impl PipelineEngine {
                         self.join_sw("cvd_upsample", p, ov, &mut t.prof)
                     })
                     .collect();
-                let (outs, s0, s1) = {
-                    let batch: Vec<Vec<&QTensor>> = ts
-                        .iter()
-                        .zip(&ups)
-                        .map(|(t, (upf_q, upd_q))| {
-                            vec![upf_q, &t.enc[4 - b], upd_q]
-                        })
-                        .collect();
-                    self.run_hw_batch(
-                        hw,
-                        self.handles.cvd_entry[b],
-                        &batch,
-                        queued,
-                    )?
-                };
+                // the upsampled carry/depth retire with this call
+                // (moved); the skip feature is still round state
+                let batch: Vec<Vec<QTensor>> = ts
+                    .iter()
+                    .zip(ups)
+                    .map(|(t, (upf_q, upd_q))| {
+                        vec![upf_q, t.enc[4 - b].clone(), upd_q]
+                    })
+                    .collect();
+                let (outs, s0, s1) = self.run_hw_batch(
+                    hw,
+                    self.handles.cvd_entry[b],
+                    batch,
+                    queued,
+                )?;
                 for t in ts.iter_mut() {
                     t.span_hw("cvd_entry", s0, s1);
                 }
@@ -1069,17 +1087,16 @@ impl PipelineEngine {
             for i in 1..CVD_BODY_K3[b] {
                 let ln_name = format!("cvd.b{b}.ln{}", i - 1);
                 let e = self.qp.aexp(&ln_name);
+                // the normed activation is spent by the mid conv: move it
                 let x_lns = self.sw_layer_norm_all(ts, &ln_name, &xs, e);
-                let (outs, s0, s1) = {
-                    let batch: Vec<Vec<&QTensor>> =
-                        x_lns.iter().map(|x| vec![x]).collect();
-                    self.run_hw_batch(
-                        hw,
-                        self.handles.cvd_mid[b][i - 1],
-                        &batch,
-                        queued,
-                    )?
-                };
+                let batch: Vec<Vec<QTensor>> =
+                    x_lns.into_iter().map(|x| vec![x]).collect();
+                let (outs, s0, s1) = self.run_hw_batch(
+                    hw,
+                    self.handles.cvd_mid[b][i - 1],
+                    batch,
+                    queued,
+                )?;
                 for t in ts.iter_mut() {
                     t.span_hw("cvd_mid", s0, s1);
                 }
@@ -1088,11 +1105,12 @@ impl PipelineEngine {
             let carry_name = cvd_carry_name(b);
             let e = self.qp.aexp(&carry_name);
             let x_lns = self.sw_layer_norm_all(ts, &carry_name, &xs, e);
-            let (outs, s0, s1) = {
-                let batch: Vec<Vec<&QTensor>> =
-                    x_lns.iter().map(|x| vec![x]).collect();
-                self.run_hw_batch(hw, self.handles.cvd_head[b], &batch, queued)?
-            };
+            // the carry LN doubles as the next block's upsample input:
+            // the head call gets handle clones, the carry keeps the value
+            let batch: Vec<Vec<QTensor>> =
+                x_lns.iter().map(|x| vec![x.clone()]).collect();
+            let (outs, s0, s1) =
+                self.run_hw_batch(hw, self.handles.cvd_head[b], batch, queued)?;
             for ((i, t), mut o) in ts.iter_mut().enumerate().zip(outs) {
                 t.span_hw("cvd_head", s0, s1);
                 let head = o.swap_remove(0);
@@ -1142,7 +1160,9 @@ impl PipelineEngine {
             t.prof.record("kb_update", Lane::Sw, t0);
             s.h = t.h_new.take().expect("ConvLstm ran");
             s.c = t.c_new.take().expect("ConvLstm ran");
-            s.depth_full = Arc::new(t.depth.clone().expect("DepthOut ran"));
+            // the session and the frame output share the depth payload
+            // (CoW handle clone — full-res depth is never deep-copied)
+            s.depth_full = t.depth.clone().expect("DepthOut ran");
             s.pose_prev = Some(t.pose);
             s.frames_done += 1;
         }

@@ -7,8 +7,6 @@
 //! StreamSession` per step, so any number of sessions can share one
 //! backend ("one bitstream, many streams" — see `StreamServer`).
 
-use std::sync::Arc;
-
 use crate::config;
 use crate::kb::KeyframeBuffer;
 use crate::model::weights::QuantParams;
@@ -18,6 +16,13 @@ use crate::tensor::TensorF;
 
 /// Per-stream cross-frame state: ConvLSTM hidden/cell, previous depth
 /// (for hidden-state correction), previous pose, keyframe buffer.
+///
+/// All tensor fields are CoW handles (see `tensor`): handing `h` or
+/// `depth_full` to a posted SW task, or a feature to the keyframe
+/// buffer, is an O(1) handle clone — a session never deep-copies its
+/// state onto the data plane. (`depth_full` was an `Arc<TensorF>`
+/// before PR 5; the payload itself being Arc-backed made the extra
+/// wrapper redundant.)
 pub struct StreamSession {
     /// Server-assigned stream id (0 for a standalone coordinator).
     pub id: usize,
@@ -25,7 +30,7 @@ pub struct StreamSession {
     pub kb: KeyframeBuffer<QTensor>,
     pub(crate) h: QTensor,
     pub(crate) c: QTensor,
-    pub(crate) depth_full: Arc<TensorF>,
+    pub(crate) depth_full: TensorF,
     pub(crate) pose_prev: Option<Mat4>,
     pub(crate) frames_done: usize,
 }
@@ -38,10 +43,10 @@ impl StreamSession {
             kb: KeyframeBuffer::new(),
             h: QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.hnew")),
             c: QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.cnew")),
-            depth_full: Arc::new(TensorF::full(
+            depth_full: TensorF::full(
                 &[1, 1, config::IMG_H, config::IMG_W],
                 config::MAX_DEPTH,
-            )),
+            ),
             pose_prev: None,
             frames_done: 0,
         }
@@ -55,10 +60,10 @@ impl StreamSession {
         self.kb.reset();
         self.h = QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.hnew"));
         self.c = QTensor::zeros(&[1, config::CL_CH, h5, w5], qp.aexp("cl.cnew"));
-        self.depth_full = Arc::new(TensorF::full(
+        self.depth_full = TensorF::full(
             &[1, 1, config::IMG_H, config::IMG_W],
             config::MAX_DEPTH,
-        ));
+        );
         self.pose_prev = None;
         self.frames_done = 0;
     }

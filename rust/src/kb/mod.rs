@@ -5,6 +5,14 @@
 //!
 //! Mirrors `python/compile/pipeline.KeyframeBuffer` exactly (policy and
 //! distance metric), which the cross-language tests rely on.
+//!
+//! Storage is by value, but the tensor features stored here are CoW
+//! handles (see `tensor`): inserting a frame's encoder output *shares*
+//! the producer's payload instead of deep-copying it, and
+//! [`KeyframeBuffer::snapshot`] hands out O(1) handle clones of the
+//! whole buffer. A keyframe's bytes are therefore written exactly once,
+//! by the conv that produced them, no matter how many frames consume
+//! them from here.
 
 use crate::config::{KB_CAPACITY, KB_MIN_POSE_DIST};
 use crate::poses::{pose_distance, Mat4};
@@ -76,6 +84,17 @@ impl<F> KeyframeBuffer<F> {
     /// Buffered (pose, feature) pairs, oldest first.
     pub fn contents(&self) -> &[(Mat4, F)] {
         &self.entries
+    }
+
+    /// Owned snapshot of the buffered (pose, feature) pairs, oldest
+    /// first. For CoW tensor features this clones handles, not payloads
+    /// (O(1) per entry) — a consumer can release the buffer borrow and
+    /// ship the snapshot to worker threads without copying a byte.
+    pub fn snapshot(&self) -> Vec<(Mat4, F)>
+    where
+        F: Clone,
+    {
+        self.entries.clone()
     }
 
     pub fn stats(&self) -> (usize, usize) {
@@ -151,6 +170,21 @@ mod tests {
         // is close to a pre-reset keyframe (no leaked gating state)
         assert!(kb.maybe_insert(pose_at(0.4), "d"));
         assert_eq!(kb.len(), 1);
+    }
+
+    #[test]
+    fn snapshot_shares_cow_feature_payloads() {
+        use crate::tensor::TensorI16;
+        let mut kb = KeyframeBuffer::with_policy(2, 0.1);
+        let f = TensorI16::from_vec(&[1, 1, 1, 2], vec![3, 4]);
+        // inserting shares the producer's payload (no deep copy)...
+        assert!(kb.maybe_insert(pose_at(0.0), f.clone()));
+        assert!(kb.contents()[0].1.shares_payload_with(&f));
+        // ...and a snapshot is handle clones of the stored entries
+        let snap = kb.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert!(snap[0].1.shares_payload_with(&kb.contents()[0].1));
+        assert_eq!(snap[0].1.data(), &[3, 4]);
     }
 
     #[test]

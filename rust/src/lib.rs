@@ -43,6 +43,37 @@
 //!   (cross-round pipelining; `overlapped_hw` in `metrics::BatchStats`
 //!   measures the hidden HW time).
 //!
+//! # Data plane (PR 5)
+//!
+//! Tensor payloads are **Arc-backed copy-on-write handles** (`tensor`):
+//! `clone()` is O(1), mutation goes through `Tensor::data_mut`
+//! (`Arc::make_mut` — free on a unique payload, one copy when shared).
+//! Ownership rules across the stack:
+//!
+//! * **Who may mutate** — only code holding a freshly checked-out arena
+//!   buffer (every `_into`/arena op writes a unique payload) or its own
+//!   private handle. Backends must treat segment inputs as read-only:
+//!   CoW would keep a mutation *correct*, but the copy it triggers is
+//!   exactly what this plane exists to avoid.
+//! * **When CoW triggers** — never on the serving hot path: taps,
+//!   keyframe-buffer entries, session state hand-offs and submit-queue
+//!   inputs are all reads over shared handles. A caller that scribbles
+//!   on a returned output (e.g. a frame's depth, which shares its
+//!   payload with the session) pays one copy and diverges only itself.
+//! * **Submit-queue handle lifecycle** — `HwBackend::submit*` take
+//!   their batch **by value**: the caller moves spent inputs in (the
+//!   pipeline `take()`s quantized images in `begin_round`) and handle-
+//!   clones inputs it still needs; the queue owns the handles until the
+//!   segment executes, then drops them *before* delivering the
+//!   completion, so after `wait` returns the inputs have provably
+//!   retired. Steady-state queued rounds perform zero payload
+//!   allocations and zero payload memcpys on the submit path — pinned
+//!   by `rust/tests/alloc_free.rs` (`--features count-allocs`) and the
+//!   CoW aliasing properties in `rust/tests/cow.rs`.
+//! * **Arena interaction** — `Arena::recycle_*` park a payload only
+//!   when the recycled handle is its unique owner, so freelist reuse
+//!   can never resurrect storage a live handle still reads.
+//!
 //! Around the serving stack: the CPU-only baselines of Table II
 //! (`model`), the FPGA cycle/resource model behind Tables II/III
 //! (`hwsim`, `codesign`), and the report generators (`report`).

@@ -8,13 +8,16 @@
 //! segment between "execute the artifact on PJRT" and "run the Rust
 //! mirror" — which is also how the extern-overhead ablation works.
 //!
-//! # Per-frame allocation discipline (PR 3)
+//! # Per-frame allocation discipline (PR 3 + PR 5)
 //!
 //! Every segment mirror draws its intermediates from the model's scratch
 //! [`Arena`] (conv accumulators, elementwise/upsample/LUT payloads, LN
 //! float scratch) and recycles them before returning: in steady state the
 //! only fresh allocations per frame are the segment outputs that escape
-//! to the caller. The `seg_*_batch` twins run the same math over N
+//! to the caller. Chain taps (`dup`/`dup_all`) are O(1) CoW handle
+//! clones rather than payload copies; a recycled handle whose payload a
+//! tap still shares is dropped, not parked, so the freelist never
+//! resurrects aliased storage (the uniqueness gate in `ops::arena`). The `seg_*_batch` twins run the same math over N
 //! streams at once, batching every conv through one
 //! [`conv2d_q_packed_batch`] call (shared tap lists, one thread-scope per
 //! conv) while the cheap elementwise glue loops per stream — each batch
@@ -177,10 +180,12 @@ impl QuantModel {
         self.scratch.lock().unwrap().recycle_q(x);
     }
 
-    /// Arena-backed clone for chain taps that must outlive their
-    /// producer (the allocation-free form of `x.clone()`).
+    /// Chain tap that must outlive its producer: an O(1) CoW handle
+    /// clone (no arena checkout, no memcpy). The shared payload is
+    /// parked for reuse only when its *last* handle is recycled — the
+    /// uniqueness gate in `Arena::recycle_q`.
     fn dup(&self, x: &QTensor) -> QTensor {
-        self.scratch.lock().unwrap().duplicate_q(x)
+        x.clone()
     }
 
     /// SW layer norm with every temporary (dequant floats, LN output,
@@ -429,9 +434,9 @@ impl QuantModel {
         ys
     }
 
+    /// Batched [`QuantModel::dup`]: O(1) handle clones, no arena lock.
     fn dup_all(&self, xs: &[QTensor]) -> Vec<QTensor> {
-        let mut arena = self.scratch.lock().unwrap();
-        xs.iter().map(|x| arena.duplicate_q(x)).collect()
+        xs.to_vec()
     }
 
     fn recycle_all(&self, xs: Vec<QTensor>) {
@@ -536,9 +541,8 @@ impl QuantModel {
         }
         let mut outs: Vec<Vec<QTensor>> =
             (0..nb).map(|_| Vec::with_capacity(5)).collect();
-        let mut x: Vec<QTensor> = self.with_arena(|a| {
-            inputs.iter().map(|ins| a.duplicate_q(ins[0])).collect()
-        });
+        let mut x: Vec<QTensor> =
+            inputs.iter().map(|ins| ins[0].clone()).collect();
         for lv in 0..5 {
             if CVE_DOWN_KERNEL[lv].is_some() {
                 let down = self.conv_owned_batch(&format!("cve.l{lv}.down"), x);
@@ -640,6 +644,8 @@ impl QuantModel {
     ) -> (TensorF, QTensor) {
         let img_q = self.quantize_image(img);
         let feats = self.seg_fe_fs(&img_q);
+        // handle clone: the caller's keyframe buffer will share this
+        // payload with the frame's own CVF read — no copy either way
         let f_half = feats[0].clone();
 
         // CVF in float (software op)

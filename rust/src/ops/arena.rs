@@ -15,6 +15,12 @@
 //!   the `recycle_*` twins. Recycling is optional — an un-recycled
 //!   tensor is simply freed by `Vec`'s destructor — so ownership stays
 //!   ordinary Rust, the arena is only a capacity cache.
+//! * Tensor payloads are Arc-backed CoW handles (PR 5): `recycle_q` /
+//!   `recycle_tf` park a payload **only when the recycled handle is its
+//!   unique owner** (`Tensor::try_unique_data`), so a buffer still
+//!   aliased by a live handle — a tap, a KB entry, a queued submission —
+//!   can never be checked out again underneath it. It is parked later,
+//!   when its last handle is recycled.
 //! * **Checkout contract:** contents of a taken payload are unspecified
 //!   beyond the zero-filled growth region; every `_into`/arena op writes
 //!   all elements, and skipping the memset is part of the point.
@@ -121,9 +127,15 @@ impl Arena {
         }
     }
 
-    /// Recycle a whole quantized tensor's payload.
+    /// Recycle a quantized tensor's payload — only when this handle is
+    /// its unique owner. A payload still aliased by another CoW handle
+    /// (a chain tap, a keyframe-buffer entry, a queued submission) is
+    /// merely released, never parked: the freelist can therefore never
+    /// hand a buffer back out while someone still reads it.
     pub fn recycle_q(&mut self, q: crate::quant::QTensor) {
-        self.recycle_i16(q.t.into_data());
+        if let Some(v) = q.t.try_unique_data() {
+            self.recycle_i16(v);
+        }
     }
 
     /// An f32 payload of exactly `len` elements — same contract as
@@ -143,9 +155,12 @@ impl Arena {
         }
     }
 
-    /// Recycle a whole float tensor's payload.
+    /// Recycle a float tensor's payload (same uniqueness gate as
+    /// [`Arena::recycle_q`]: aliased payloads are dropped, not parked).
     pub fn recycle_tf(&mut self, t: TensorF) {
-        self.recycle_f32(t.into_data());
+        if let Some(v) = t.try_unique_data() {
+            self.recycle_f32(v);
+        }
     }
 
     /// Shaped i16 checkout: a quantized tensor of `shape` at `exp` whose
@@ -160,15 +175,6 @@ impl Arena {
     pub fn take_tf(&mut self, shape: &[usize]) -> TensorF {
         let n: usize = shape.iter().product();
         Tensor::from_vec(shape, self.take_f32(n))
-    }
-
-    /// Copy of `x` whose payload comes from the freelist — the
-    /// allocation-free form of `x.clone()` for chain taps that must
-    /// outlive their producer.
-    pub fn duplicate_q(&mut self, x: &QTensor) -> QTensor {
-        let mut d = self.take_i16(x.t.len());
-        d.copy_from_slice(x.t.data());
-        QTensor { t: Tensor::from_vec(x.shape(), d), exp: x.exp }
     }
 
     /// Parked i16 payload count (observability for tests).
@@ -257,8 +263,36 @@ mod tests {
             t: Tensor::from_vec(&[1, 1, 1, 4], vec![1i16, 2, 3, 4]),
             exp: 7,
         };
-        let dup = a.duplicate_q(&src);
+        let dup = src.clone();
         assert_eq!(dup.t.data(), src.t.data());
+        assert!(dup.t.shares_payload_with(&src.t), "dup is a handle clone");
         assert_eq!(dup.exp, 7);
+    }
+
+    #[test]
+    fn recycle_never_parks_an_aliased_payload() {
+        let mut a = Arena::new();
+        let q = QTensor {
+            t: Tensor::from_vec(&[1, 1, 1, 4], vec![1i16, 2, 3, 4]),
+            exp: 3,
+        };
+        let alias = q.clone();
+        // recycling one of two handles must not park the shared buffer…
+        a.recycle_q(q);
+        assert_eq!(a.free_buffers(), 0, "aliased payload was parked");
+        // …and a checkout now cannot resurrect it under the alias
+        let mut taken = a.take_i16(4);
+        taken.iter_mut().for_each(|x| *x = -9);
+        assert_eq!(alias.t.data(), &[1, 2, 3, 4]);
+        // the last handle is the one that parks it
+        a.recycle_q(alias);
+        assert_eq!(a.free_buffers(), 1);
+        // float twin of the same gate
+        let t = TensorF::from_vec(&[1, 1, 1, 2], vec![1.0, 2.0]);
+        let t2 = t.clone();
+        a.recycle_tf(t);
+        assert_eq!(a.free_f32_buffers(), 0);
+        a.recycle_tf(t2);
+        assert_eq!(a.free_f32_buffers(), 1);
     }
 }

@@ -14,6 +14,10 @@ use crate::ops::Arena;
 use crate::tensor::{Tensor, TensorI16};
 
 /// Quantized tensor: int16 payload + power-of-two exponent.
+///
+/// The payload is Arc-backed copy-on-write (see `tensor`), so `clone()`
+/// is an O(1) handle clone — keyframe-buffer entries, submit-queue
+/// inputs and chain taps all share one payload until someone mutates.
 #[derive(Clone, Debug)]
 pub struct QTensor {
     pub t: TensorI16,
@@ -115,7 +119,8 @@ fn requant_slice(src: &[i16], r: i32, out: &mut [i16]) {
 /// Requantize int16 -> int16 at a new exponent (the HW 'shift' stage).
 /// Allocating by-ref form; prefer [`requant_owned`] (which forwards the
 /// payload untouched when `x.exp == out_exp`) or [`requant_arena`] on
-/// per-frame paths.
+/// per-frame paths. The no-op case returns an O(1) handle clone (CoW
+/// payload — no bytes move).
 pub fn requant(x: &QTensor, out_exp: i32) -> QTensor {
     if x.exp == out_exp {
         return x.clone();
@@ -562,7 +567,8 @@ mod tests {
             );
             let rq = requant(&a, eo);
             assert_eq!(rq.t.data(), requant_arena(&a, eo, &mut arena).t.data());
-            let owned = requant_owned(a.clone(), eo, &mut arena);
+            // `a` is spent here: hand the value through instead of cloning
+            let owned = requant_owned(a, eo, &mut arena);
             assert_eq!(owned.t.data(), rq.t.data());
             assert_eq!(owned.exp, eo);
         }

@@ -24,6 +24,18 @@
 //! [`SubmitHandle::wait_batch`] (or the trait-level [`HwBackend::wait`])
 //! blocks until the segment completes. The contract:
 //!
+//! * **Ownership transfer (the zero-copy data plane)** — `submit*` take
+//!   their input batch **by value**: the caller moves its `QTensor`
+//!   handles into the submission and the backend owns them until the
+//!   segment retires. Tensor payloads are Arc-backed CoW handles
+//!   (`tensor` module docs), so a caller that still needs an input after
+//!   submitting clones the handle in O(1) — either way *no payload bytes
+//!   are copied or allocated on the submit path*. An async backend
+//!   enqueues the received handles as-is (the DMA-descriptor analog:
+//!   the queue carries pointers, not pixels) and drops them once the
+//!   segment has executed; it must not mutate them (inputs are read-only
+//!   — CoW would make a mutation correct but it would also deep-copy,
+//!   which this path exists to avoid).
 //! * **Default-eager semantics** — the provided implementations execute
 //!   the segment *inside* `submit*` via [`HwBackend::run_batch`] and
 //!   return an already-complete handle. Any backend that only implements
@@ -185,7 +197,11 @@ pub trait HwBackend: Send + Sync {
     }
 
     /// Submit one segment over a batch without waiting for the result
-    /// (see the module docs for the full submit/await contract).
+    /// (see the module docs for the full submit/await contract). The
+    /// batch is taken **by value**: the submission owns its input
+    /// handles, so an async backend enqueues them without copying a
+    /// single payload byte — callers that still need an input clone its
+    /// handle (O(1), CoW) before submitting.
     ///
     /// Default: execute eagerly via [`HwBackend::run_batch`] and return
     /// an already-complete handle, so every backend is submit-callable
@@ -195,17 +211,19 @@ pub trait HwBackend: Send + Sync {
     fn submit_batch(
         &self,
         id: SegmentId,
-        batch: &[Vec<&QTensor>],
+        batch: Vec<Vec<QTensor>>,
     ) -> Result<SubmitHandle> {
         let start = Instant::now();
-        let outs = self.run_batch(id, batch);
+        let refs: Vec<Vec<&QTensor>> =
+            batch.iter().map(|inputs| inputs.iter().collect()).collect();
+        let outs = self.run_batch(id, &refs);
         Ok(SubmitHandle::ready(outs, start, Instant::now()))
     }
 
     /// Width-1 [`HwBackend::submit_batch`]: submit one stream's segment
-    /// inputs; await with [`SubmitHandle::wait`].
-    fn submit(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<SubmitHandle> {
-        self.submit_batch(id, &[inputs.to_vec()])
+    /// inputs (moving the handles in); await with [`SubmitHandle::wait`].
+    fn submit(&self, id: SegmentId, inputs: Vec<QTensor>) -> Result<SubmitHandle> {
+        self.submit_batch(id, vec![inputs])
     }
 
     /// Blocking await of a submission — a convenience equivalent to

@@ -19,16 +19,24 @@
 //! `RefBackend` implements the real (non-eager) side of the submit/await
 //! contract (`runtime` module docs): a dedicated **backend worker**
 //! thread — the analog of the PL command processor — drains a FIFO job
-//! queue. [`HwBackend::submit_batch`] validates the inputs, copies them
-//! into the job (the submitter's borrows don't outlive the call) and
-//! enqueues it; the worker executes jobs strictly in submission order
-//! through the very same segment mirrors as the blocking path, so
-//! submitted results are bit-identical to `run_batch` by construction.
-//! The worker shares the model (and its conv-thread arena) through an
-//! `Arc`, so the packed tap lists and scratch freelists are the same
-//! ones the blocking path uses.
+//! queue. [`HwBackend::submit_batch`] validates the inputs and moves the
+//! caller's owned handles straight into the job — tensor payloads are
+//! Arc-backed, so enqueueing copies **zero payload bytes** (the queue
+//! carries descriptors, not pixels; the PR-4 implementation deep-copied
+//! every batch here). The worker executes jobs strictly in submission
+//! order through the very same segment mirrors as the blocking path, so
+//! submitted results are bit-identical to `run_batch` by construction,
+//! and it drops a job's input handles *before* delivering its
+//! completion — after `wait` returns, the inputs of that submission (and
+//! of every earlier one) have provably retired. The worker shares the
+//! model (and its conv-thread arena) through an `Arc`, so the packed tap
+//! lists and scratch freelists are the same ones the blocking path uses.
+//! [`RefBackend::submit_payload_bytes`] counts the input bytes that
+//! crossed the queue (what the old copying path would have cloned) for
+//! the serve bench's copy accounting.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -100,8 +108,9 @@ struct RefInner {
     index: HashMap<String, usize>,
 }
 
-/// One queued submission: the segment, owned copies of the batch inputs,
-/// and the channel its [`HwCompletion`] is delivered on.
+/// One queued submission: the segment, the batch's *owned input handles*
+/// (moved from the submitter — no payload copies), and the channel its
+/// [`HwCompletion`] is delivered on.
 struct HwJob {
     id: SegmentId,
     batch: Vec<Vec<QTensor>>,
@@ -115,6 +124,11 @@ pub struct RefBackend {
     /// jobs execute strictly in submission order. `None` after shutdown.
     queue: Mutex<Option<Sender<HwJob>>>,
     worker: Mutex<Option<JoinHandle<()>>>,
+    /// Input payload bytes handed to `submit_batch` since construction —
+    /// exactly the bytes the PR-4 copying submit path deep-copied per
+    /// job, now moved as handles. The serve bench reports this as the
+    /// before/after copy accounting.
+    submit_payload_bytes: AtomicU64,
 }
 
 impl RefBackend {
@@ -140,15 +154,22 @@ impl RefBackend {
             .name("fadec-hw-queue".into())
             .spawn(move || {
                 while let Ok(job) = rx.recv() {
+                    let HwJob { id, batch, resp } = job;
                     let t0 = Instant::now();
-                    let refs: Vec<Vec<&QTensor>> = job
-                        .batch
-                        .iter()
-                        .map(|inputs| inputs.iter().collect())
-                        .collect();
-                    let outs = exec.exec_batch(job.id, &refs);
+                    let outs = {
+                        let refs: Vec<Vec<&QTensor>> = batch
+                            .iter()
+                            .map(|inputs| inputs.iter().collect())
+                            .collect();
+                        exec.exec_batch(id, &refs)
+                    };
+                    // retire the input handles *before* delivering the
+                    // completion: once a submitter's wait returns, its
+                    // inputs are guaranteed dropped (so e.g. a payload
+                    // the caller kept a handle to is unique again)
+                    drop(batch);
                     // a dropped handle abandons its result; that's fine
-                    let _ = job.resp.send(HwCompletion {
+                    let _ = resp.send(HwCompletion {
                         outs,
                         start: t0,
                         end: Instant::now(),
@@ -160,6 +181,7 @@ impl RefBackend {
             inner,
             queue: Mutex::new(Some(tx)),
             worker: Mutex::new(Some(worker)),
+            submit_payload_bytes: AtomicU64::new(0),
         })
     }
 
@@ -187,6 +209,15 @@ impl RefBackend {
 
     pub fn conv_threads(&self) -> usize {
         self.inner.model.conv_threads()
+    }
+
+    /// Input payload bytes that crossed the submit queue since
+    /// construction. This is exactly what the old copying submit path
+    /// deep-copied per job; the ownership-transferring path moves the
+    /// same bytes as Arc handles, copying none of them (pinned by
+    /// `rust/tests/alloc_free.rs` under `--features count-allocs`).
+    pub fn submit_payload_bytes(&self) -> u64 {
+        self.submit_payload_bytes.load(Ordering::Relaxed)
     }
 }
 
@@ -351,16 +382,18 @@ impl HwBackend for RefBackend {
     }
 
     /// Real async submission: validate the inputs (the DMA-descriptor
-    /// check happens at enqueue time), copy them into the job and hand
-    /// it to the backend worker. The worker executes jobs strictly in
-    /// submission order through `exec_batch`, so a submitted segment is
+    /// check happens at enqueue time) and move the caller's handles into
+    /// the job — **zero payload bytes copied or allocated**; the queue
+    /// carries Arc handles the way a command queue carries DMA
+    /// descriptors. The worker executes jobs strictly in submission
+    /// order through `exec_batch`, so a submitted segment is
     /// bit-identical to the blocking `run_batch` path by construction —
     /// and it executes while the caller runs software stages, which is
     /// the overlap `StreamServer::run_pipelined` schedules around.
     fn submit_batch(
         &self,
         id: SegmentId,
-        batch: &[Vec<&QTensor>],
+        batch: Vec<Vec<QTensor>>,
     ) -> Result<SubmitHandle> {
         let desc = self
             .inner
@@ -368,21 +401,26 @@ impl HwBackend for RefBackend {
             .segments
             .get(id.0)
             .with_context(|| format!("segment id {} out of range", id.0))?;
-        for inputs in batch {
-            check_inputs(desc, inputs)?;
+        let mut bytes = 0u64;
+        for inputs in &batch {
+            let refs: Vec<&QTensor> = inputs.iter().collect();
+            check_inputs(desc, &refs)?;
+            bytes += inputs
+                .iter()
+                .map(|q| (q.t.len() * std::mem::size_of::<i16>()) as u64)
+                .sum::<u64>();
         }
-        let owned: Vec<Vec<QTensor>> = batch
-            .iter()
-            .map(|inputs| inputs.iter().copied().cloned().collect())
-            .collect();
         let (resp_tx, resp_rx) = channel();
         self.queue
             .lock()
             .unwrap()
             .as_ref()
             .context("backend worker shut down")?
-            .send(HwJob { id, batch: owned, resp: resp_tx })
+            .send(HwJob { id, batch, resp: resp_tx })
             .map_err(|_| anyhow!("backend worker gone"))?;
+        // counted only once the job actually crossed the queue (a failed
+        // enqueue must not inflate the copy accounting)
+        self.submit_payload_bytes.fetch_add(bytes, Ordering::Relaxed);
         Ok(SubmitHandle::queued(resp_rx))
     }
 }
@@ -502,7 +540,10 @@ mod tests {
             .collect();
         let batch: Vec<Vec<&QTensor>> = imgs.iter().map(|q| vec![q]).collect();
         let blocking = be.run_batch(id, &batch).unwrap();
-        let handle = be.submit_batch(id, &batch).unwrap();
+        // submission takes owned handles: O(1) clones of the same payloads
+        let owned: Vec<Vec<QTensor>> =
+            imgs.iter().map(|q| vec![q.clone()]).collect();
+        let handle = be.submit_batch(id, owned).unwrap();
         let (outs, start, end) = handle.wait_batch_timed().unwrap();
         assert!(end >= start, "worker interval is ordered");
         assert_eq!(outs.len(), blocking.len());
@@ -524,8 +565,8 @@ mod tests {
         let img_b = quantize_tensor(&random_image(61), be.qp().aexp("image"));
         let want_a = be.run(id, &[&img_a]).unwrap();
         let want_b = be.run(id, &[&img_b]).unwrap();
-        let ha = be.submit(id, &[&img_a]).unwrap();
-        let hb = be.submit(id, &[&img_b]).unwrap();
+        let ha = be.submit(id, vec![img_a]).unwrap();
+        let hb = be.submit(id, vec![img_b]).unwrap();
         let got_b = hb.wait().unwrap();
         let got_a = ha.wait().unwrap();
         for (x, y) in got_a.iter().zip(&want_a) {
@@ -541,7 +582,34 @@ mod tests {
         let be = RefBackend::synthetic(7);
         let id = be.resolve("fe_fs").unwrap();
         let bad = QTensor::zeros(&[1, 3, 8, 8], be.qp().aexp("image"));
-        assert!(be.submit(id, &[&bad]).is_err());
+        assert!(be.submit(id, vec![bad]).is_err());
+    }
+
+    #[test]
+    fn submit_moves_handles_and_retires_them_after_wait() {
+        // ownership-transferring submit: the job holds the very same
+        // payload the caller quantized (no deep copy), and the worker
+        // drops it before delivering the completion — so a handle the
+        // caller kept becomes the unique owner again once wait returns
+        let be = RefBackend::synthetic(7);
+        let id = be.resolve("fe_fs").unwrap();
+        let img = quantize_tensor(&random_image(90), be.qp().aexp("image"));
+        let probe = img.clone();
+        assert!(!probe.t.is_unique(), "probe aliases the submitted input");
+        let bytes_before = be.submit_payload_bytes();
+        let handle = be.submit(id, vec![img]).unwrap();
+        let outs = handle.wait().unwrap();
+        assert!(!outs.is_empty());
+        assert!(
+            probe.t.is_unique(),
+            "after wait the submission's input handles have retired"
+        );
+        let moved = be.submit_payload_bytes() - bytes_before;
+        assert_eq!(
+            moved,
+            (probe.t.len() * std::mem::size_of::<i16>()) as u64,
+            "submit accounting covers exactly the input payload bytes"
+        );
     }
 
     /// Delegates `run`/`run_batch` but keeps the trait's default
@@ -573,7 +641,7 @@ mod tests {
         let id = be.resolve("fe_fs").unwrap();
         let img = quantize_tensor(&random_image(70), be.0.qp().aexp("image"));
         let want = be.run(id, &[&img]).unwrap();
-        let got = be.submit(id, &[&img]).unwrap().wait().unwrap();
+        let got = be.submit(id, vec![img]).unwrap().wait().unwrap();
         assert_eq!(want.len(), got.len());
         for (x, y) in got.iter().zip(&want) {
             assert_eq!(x.t.data(), y.t.data());

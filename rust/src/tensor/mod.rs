@@ -1,18 +1,38 @@
-//! Minimal dense tensor (row-major, owned) used by the software operators
-//! and the CPU-only baselines.
+//! Minimal dense tensor (row-major, Arc-backed copy-on-write) used by the
+//! software operators and the CPU-only baselines.
 //!
 //! The request path manipulates small NCHW maps (at most 64x32x48), so a
-//! simple `Vec`-backed container with contiguous row-major layout is both
-//! sufficient and cache-friendly. No views/strides: the paper's software
-//! side also works on packed buffers in CMA memory.
+//! contiguous row-major container is both sufficient and cache-friendly.
+//! No views/strides: the paper's software side also works on packed
+//! buffers in CMA memory.
+//!
+//! # The zero-copy data plane (PR 5)
+//!
+//! The payload is an `Arc<Vec<T>>`, so a tensor value is a cheap *handle*:
+//!
+//! * `clone()` is O(1) — it bumps the refcount and copies only the small
+//!   shape vector. Every place a tensor is merely read (keyframe buffer
+//!   entries, submit-queue inputs, chain taps, the session's previous
+//!   depth) shares one payload instead of deep-copying it.
+//! * Mutation goes through [`Tensor::data_mut`], which is
+//!   `Arc::make_mut`: a no-op on a uniquely-owned payload, a one-time
+//!   copy-on-write when the payload is shared. All `_into`/arena ops
+//!   write into freshly checked-out (unique) buffers, so the hot loops
+//!   never pay the CoW copy; correctness never depends on uniqueness —
+//!   a mutation can only ever diverge the mutated handle.
+//! * Ownership can be recovered: [`Tensor::try_unique_data`] returns the
+//!   backing `Vec` (capacity intact) only when no other handle aliases
+//!   it — the gate `ops::Arena` recycling stands behind, so a parked
+//!   buffer is never resurrected under a live handle.
 
 use std::fmt;
+use std::sync::Arc;
 
-/// Dense row-major tensor.
+/// Dense row-major tensor over a shared copy-on-write payload.
 #[derive(Clone, PartialEq)]
 pub struct Tensor<T> {
     shape: Vec<usize>,
-    data: Vec<T>,
+    data: Arc<Vec<T>>,
 }
 
 pub type TensorF = Tensor<f32>;
@@ -23,7 +43,7 @@ pub type TensorI8 = Tensor<i8>;
 impl<T: Copy + Default> Tensor<T> {
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+        Tensor { shape: shape.to_vec(), data: Arc::new(vec![T::default(); n]) }
     }
 
     pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
@@ -34,12 +54,12 @@ impl<T: Copy + Default> Tensor<T> {
             shape,
             data.len()
         );
-        Tensor { shape: shape.to_vec(), data }
+        Tensor { shape: shape.to_vec(), data: Arc::new(data) }
     }
 
     pub fn full(shape: &[usize], v: T) -> Self {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+        Tensor { shape: shape.to_vec(), data: Arc::new(vec![v; n]) }
     }
 
     #[inline]
@@ -62,13 +82,38 @@ impl<T: Copy + Default> Tensor<T> {
         &self.data
     }
 
+    /// Mutable payload access — copy-on-write: free when this handle is
+    /// the unique owner, a one-time payload copy when it is shared (the
+    /// other handles keep the old bytes).
     #[inline]
     pub fn data_mut(&mut self) -> &mut [T] {
-        &mut self.data
+        Arc::make_mut(&mut self.data)
     }
 
+    /// The backing `Vec`, cloning it only if other handles still share
+    /// the payload. Prefer [`Tensor::try_unique_data`] on recycling
+    /// paths, where a hidden clone would defeat the point.
     pub fn into_data(self) -> Vec<T> {
-        self.data
+        Arc::try_unwrap(self.data).unwrap_or_else(|shared| (*shared).clone())
+    }
+
+    /// The backing `Vec` (capacity intact) iff this handle uniquely owns
+    /// the payload; `None` when another handle still aliases it. This is
+    /// the gate behind `Arena::recycle_*`: an aliased payload is dropped
+    /// from the handle, never parked for reuse.
+    pub fn try_unique_data(self) -> Option<Vec<T>> {
+        Arc::try_unwrap(self.data).ok()
+    }
+
+    /// Whether this handle is the payload's only owner (observability
+    /// for the CoW property tests).
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.data) == 1
+    }
+
+    /// Whether two handles alias the same payload allocation.
+    pub fn shares_payload_with(&self, other: &Tensor<T>) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     /// Reinterpret with a new shape of identical element count.
@@ -96,7 +141,8 @@ impl<T: Copy + Default> Tensor<T> {
     #[inline]
     pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: T) {
         let (_, cc, hh, ww) = self.nchw();
-        self.data[((n * cc + c) * hh + h) * ww + w] = v;
+        let idx = ((n * cc + c) * hh + h) * ww + w;
+        self.data_mut()[idx] = v;
     }
 
     /// Contiguous channel plane (h*w slice) of batch 0.
@@ -111,7 +157,7 @@ impl<T: Copy + Default> Tensor<T> {
     pub fn plane_mut(&mut self, c: usize) -> &mut [T] {
         let (_, cc, hh, ww) = self.nchw();
         assert!(c < cc);
-        &mut self.data[c * hh * ww..(c + 1) * hh * ww]
+        &mut self.data_mut()[c * hh * ww..(c + 1) * hh * ww]
     }
 
     /// Concatenate along the channel axis (dim 1), batch 1 assumed.
@@ -141,7 +187,7 @@ impl TensorF {
     pub fn map(&self, f: impl Fn(f32) -> f32) -> TensorF {
         Tensor {
             shape: self.shape.clone(),
-            data: self.data.iter().map(|&x| f(x)).collect(),
+            data: Arc::new(self.data.iter().map(|&x| f(x)).collect()),
         }
     }
 
@@ -149,21 +195,24 @@ impl TensorF {
         assert_eq!(self.shape, other.shape);
         Tensor {
             shape: self.shape.clone(),
-            data: self
-                .data
-                .iter()
-                .zip(&other.data)
-                .map(|(a, b)| a + b)
-                .collect(),
+            data: Arc::new(
+                self.data
+                    .iter()
+                    .zip(other.data.iter())
+                    .map(|(a, b)| a + b)
+                    .collect(),
+            ),
         }
     }
 
     /// In-place elementwise add — the allocation-free twin of
     /// [`TensorF::add`] (IEEE addition is commutative, so `a.add_assign(b)`
-    /// is bit-identical to `b.add(a)` too).
+    /// is bit-identical to `b.add(a)` too). On a shared handle this pays
+    /// one CoW copy first; hot paths operate on unique buffers.
     pub fn add_assign(&mut self, other: &TensorF) {
         assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        let od = other.data();
+        for (a, b) in self.data_mut().iter_mut().zip(od) {
             *a += *b;
         }
     }
@@ -172,12 +221,13 @@ impl TensorF {
         assert_eq!(self.shape, other.shape);
         Tensor {
             shape: self.shape.clone(),
-            data: self
-                .data
-                .iter()
-                .zip(&other.data)
-                .map(|(a, b)| a * b)
-                .collect(),
+            data: Arc::new(
+                self.data
+                    .iter()
+                    .zip(other.data.iter())
+                    .map(|(a, b)| a * b)
+                    .collect(),
+            ),
         }
     }
 
@@ -185,7 +235,8 @@ impl TensorF {
     /// [`TensorF::mul`]; bit-identical by IEEE commutativity).
     pub fn mul_assign(&mut self, other: &TensorF) {
         assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        let od = other.data();
+        for (a, b) in self.data_mut().iter_mut().zip(od) {
             *a *= *b;
         }
     }
@@ -234,5 +285,35 @@ mod tests {
     fn plane_is_contiguous() {
         let t = TensorF::from_vec(&[1, 2, 1, 2], vec![1., 2., 3., 4.]);
         assert_eq!(t.plane(1), &[3., 4.]);
+    }
+
+    #[test]
+    fn clone_shares_payload_until_mutation() {
+        let a = TensorF::from_vec(&[1, 1, 1, 4], vec![1., 2., 3., 4.]);
+        let mut b = a.clone();
+        assert!(a.shares_payload_with(&b), "clone is a handle, not a copy");
+        assert!(!a.is_unique() && !b.is_unique());
+        // first mutation of the clone triggers exactly one CoW copy
+        b.data_mut()[0] = 9.0;
+        assert!(!a.shares_payload_with(&b));
+        assert!(a.is_unique() && b.is_unique());
+        assert_eq!(a.data(), &[1., 2., 3., 4.], "original untouched by CoW");
+        assert_eq!(b.data(), &[9., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn unique_data_recovery_respects_aliasing() {
+        let a = TensorI16::from_vec(&[1, 1, 1, 3], vec![1, 2, 3]);
+        let b = a.clone();
+        // aliased: neither handle can take the payload out
+        assert!(b.try_unique_data().is_none());
+        // ...but the alias drop above made `a` unique again
+        let v = a.try_unique_data().expect("last handle owns the payload");
+        assert_eq!(v, vec![1, 2, 3]);
+        // into_data on a shared handle falls back to a copy
+        let c = TensorI16::from_vec(&[1, 1, 1, 2], vec![7, 8]);
+        let d = c.clone();
+        assert_eq!(c.into_data(), vec![7, 8]);
+        assert_eq!(d.data(), &[7, 8]);
     }
 }

@@ -1,0 +1,113 @@
+//! Test-only counting allocator (`--features count-allocs`): wraps the
+//! system allocator and counts, **per thread**, every allocation at or
+//! above [`PAYLOAD_BYTES`]. This is the instrument behind
+//! `rust/tests/alloc_free.rs`, which pins that the ownership-transferring
+//! submit path performs zero payload-sized allocations in steady state.
+//!
+//! Per-thread counting is deliberate: the backend worker and the extern
+//! pool legitimately allocate segment *outputs* concurrently with a
+//! submit, so a process-global counter could not isolate the submitting
+//! thread's behaviour. The thread-locals are `const`-initialised `Cell`s
+//! (no destructor, no lazy allocation), so counting from inside the
+//! allocator cannot recurse; `try_with` makes TLS teardown benign.
+//!
+//! The feature only swaps the accounting wrapper in front of the system
+//! allocator — allocation behaviour under test is identical to a normal
+//! build.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+/// Allocations at or above this size count as "payload-sized". Tensor
+/// payloads on the request path start at a few KiB (the quantized input
+/// image is ~36 KiB); handles, shape vectors, queue nodes and channel
+/// plumbing are all far below it.
+pub const PAYLOAD_BYTES: usize = 4096;
+
+thread_local! {
+    static LARGE_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static LARGE_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn note(size: usize) {
+    if size >= PAYLOAD_BYTES {
+        let _ = LARGE_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        let _ = LARGE_BYTES.try_with(|c| c.set(c.get() + size as u64));
+    }
+}
+
+/// The `#[global_allocator]` installed when `count-allocs` is enabled.
+pub struct CountingAlloc;
+
+// SAFETY: defers entirely to `System`; the bookkeeping touches only
+// const-initialised thread-local `Cell`s and never allocates.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // count growth into the payload range (a shrinking or
+        // still-small realloc moves no payload-sized memory)
+        if new_size >= PAYLOAD_BYTES && new_size > layout.size() {
+            note(new_size);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(feature = "count-allocs")]
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Zero this thread's counters (call at the start of a measured window).
+pub fn reset_thread_counters() {
+    let _ = LARGE_ALLOCS.try_with(|c| c.set(0));
+    let _ = LARGE_BYTES.try_with(|c| c.set(0));
+}
+
+/// Payload-sized allocations on this thread since the last reset.
+pub fn thread_large_allocs() -> u64 {
+    LARGE_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Bytes of payload-sized allocations on this thread since the last
+/// reset.
+pub fn thread_large_bytes() -> u64 {
+    LARGE_BYTES.try_with(|c| c.get()).unwrap_or(0)
+}
+
+#[cfg(all(test, feature = "count-allocs"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_only_payload_sized_allocations_on_this_thread() {
+        reset_thread_counters();
+        let small = vec![0u8; 64];
+        assert_eq!(thread_large_allocs(), 0, "small allocs don't count");
+        let big = vec![0u8; 2 * PAYLOAD_BYTES];
+        assert!(thread_large_allocs() >= 1);
+        assert!(thread_large_bytes() >= 2 * PAYLOAD_BYTES as u64);
+        drop((small, big));
+        // another thread's allocations are invisible here
+        reset_thread_counters();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _v = vec![0u8; 4 * PAYLOAD_BYTES];
+            });
+        });
+        assert_eq!(thread_large_allocs(), 0);
+    }
+}

@@ -34,12 +34,39 @@ pub struct BenchRecord {
     pub gops: f64,
     /// Conv worker threads the measurement used.
     pub threads: usize,
+    /// Submit-path copy accounting (PR 5, `benches/serve.rs` only):
+    /// payload bytes the *copying* submit scheme would have deep-copied
+    /// for this run — i.e. the input bytes that crossed the submit
+    /// queue. `None` for records without a submit path.
+    pub copy_bytes_before: Option<f64>,
+    /// Payload bytes actually deep-copied on the submit path (zero
+    /// under ownership transfer; pinned by `rust/tests/alloc_free.rs`).
+    pub copy_bytes_after: Option<f64>,
 }
 
 impl BenchRecord {
     /// Records with the same key overwrite each other on merge.
     pub fn key(&self) -> (String, usize) {
         (self.op.clone(), self.threads)
+    }
+
+    /// A record with no copy accounting (every bench except `serve`).
+    pub fn timing(
+        op: impl Into<String>,
+        shape: impl Into<String>,
+        ns_per_iter: f64,
+        gops: f64,
+        threads: usize,
+    ) -> Self {
+        BenchRecord {
+            op: op.into(),
+            shape: shape.into(),
+            ns_per_iter,
+            gops,
+            threads,
+            copy_bytes_before: None,
+            copy_bytes_after: None,
+        }
     }
 }
 
@@ -67,12 +94,22 @@ pub fn to_json(records: &[BenchRecord]) -> String {
         let _ = write!(
             out,
             "  {{\"op\": \"{}\", \"shape\": \"{}\", \"ns_per_iter\": {:.1}, \
-             \"gops\": {:.3}, \"threads\": {}}}{}",
+             \"gops\": {:.3}, \"threads\": {}",
             esc(&r.op),
             esc(&r.shape),
             r.ns_per_iter,
             r.gops,
             r.threads,
+        );
+        if let Some(b) = r.copy_bytes_before {
+            let _ = write!(out, ", \"copy_bytes_before\": {b:.1}");
+        }
+        if let Some(a) = r.copy_bytes_after {
+            let _ = write!(out, ", \"copy_bytes_after\": {a:.1}");
+        }
+        let _ = write!(
+            out,
+            "}}{}",
             if i + 1 < records.len() { ",\n" } else { "\n" },
         );
     }
@@ -187,6 +224,7 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
         p.eat(b'{')?;
         let (mut op, mut shape) = (None, None);
         let (mut ns, mut gops, mut threads) = (None, None, None);
+        let (mut cb_before, mut cb_after) = (None, None);
         loop {
             let key = p.string()?;
             p.eat(b':')?;
@@ -196,6 +234,8 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
                 "ns_per_iter" => ns = Some(p.number()?),
                 "gops" => gops = Some(p.number()?),
                 "threads" => threads = Some(p.number()? as usize),
+                "copy_bytes_before" => cb_before = Some(p.number()?),
+                "copy_bytes_after" => cb_after = Some(p.number()?),
                 other => bail!("unknown bench-record key '{other}'"),
             }
             match p.peek() {
@@ -210,6 +250,8 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
             ns_per_iter: ns.context("record missing 'ns_per_iter'")?,
             gops: gops.context("record missing 'gops'")?,
             threads: threads.context("record missing 'threads'")?,
+            copy_bytes_before: cb_before,
+            copy_bytes_after: cb_after,
         });
         match p.peek() {
             Some(b',') => p.eat(b',')?,
@@ -310,6 +352,28 @@ pub fn validate(path: &Path) -> Result<usize> {
             r.gops
         );
         anyhow::ensure!(r.threads >= 1, "op '{}': bad thread count", r.op);
+        // copy accounting (serve records): finite, non-negative, and the
+        // ownership-transferring path can never copy more than the
+        // copying scheme it replaced
+        for (k, v) in [
+            ("copy_bytes_before", r.copy_bytes_before),
+            ("copy_bytes_after", r.copy_bytes_after),
+        ] {
+            if let Some(v) = v {
+                anyhow::ensure!(
+                    v.is_finite() && v >= 0.0,
+                    "op '{}': bad {k} {v}",
+                    r.op
+                );
+            }
+        }
+        if let (Some(b), Some(a)) = (r.copy_bytes_before, r.copy_bytes_after) {
+            anyhow::ensure!(
+                a <= b,
+                "op '{}': copy_bytes_after {a} exceeds copy_bytes_before {b}",
+                r.op
+            );
+        }
     }
     Ok(records.len())
 }
@@ -319,13 +383,7 @@ mod tests {
     use super::*;
 
     fn rec(op: &str, threads: usize, ns: f64) -> BenchRecord {
-        BenchRecord {
-            op: op.into(),
-            shape: "x=1x2x3x4 w=2x2x3x3 s=1".into(),
-            ns_per_iter: ns,
-            gops: 1.5,
-            threads,
-        }
+        BenchRecord::timing(op, "x=1x2x3x4 w=2x2x3x3 s=1", ns, 1.5, threads)
     }
 
     #[test]
@@ -348,6 +406,32 @@ mod tests {
         r.shape = "line\nbreak".into();
         let parsed = from_json(&to_json(&[r.clone()])).unwrap();
         assert_eq!(parsed, vec![r]);
+    }
+
+    #[test]
+    fn copy_bytes_fields_roundtrip_and_validate() {
+        let mut r = rec("serve_pipelined_k2", 2, 100.0);
+        r.copy_bytes_before = Some(1_234_567.0);
+        r.copy_bytes_after = Some(0.0);
+        let parsed = from_json(&to_json(&[r.clone()])).unwrap();
+        assert_eq!(parsed, vec![r.clone()]);
+        // records without the fields keep emitting the old schema
+        let bare = to_json(&[rec("a", 1, 1.0)]);
+        assert!(!bare.contains("copy_bytes"));
+        // validation: after > before is schema drift
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_benchjson_copy_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        let _ = std::fs::remove_file(&path);
+        merge_into(&path, &[r]).unwrap();
+        assert_eq!(validate(&path).unwrap(), 1);
+        let mut bad = rec("x", 1, 1.0);
+        bad.copy_bytes_before = Some(10.0);
+        bad.copy_bytes_after = Some(20.0);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Small self-contained utilities: a seeded PRNG for the property tests
 //! (no external crates are vendored beyond `xla`/`anyhow`), timing
-//! aggregation helpers, a tiny CLI argument reader, and the
-//! machine-readable bench-record writer (`benchjson`).
+//! aggregation helpers, a tiny CLI argument reader, the
+//! machine-readable bench-record writer (`benchjson`), and the
+//! test-only counting allocator behind the `count-allocs` feature
+//! (`alloc_counter`).
 
+pub mod alloc_counter;
 pub mod benchjson;
 
 /// SplitMix64 — tiny, high-quality seeded PRNG for tests and workload

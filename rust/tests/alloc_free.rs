@@ -1,0 +1,172 @@
+//! Allocation accounting for the zero-copy submit path (PR 5). Runs
+//! only with `--features count-allocs`, which installs the per-thread
+//! counting allocator (`util::alloc_counter`).
+//!
+//! The pins:
+//!
+//! 1. A steady-state `RefBackend::submit_batch` performs **zero**
+//!    payload-sized allocations on the submitting thread — the job is
+//!    enqueued by moving Arc handles, never by copying payloads (the
+//!    PR-4 implementation deep-copied every input batch here).
+//! 2. A steady-state `PipelineEngine::begin_round` allocates exactly
+//!    one payload per stream — the image quantization — and nothing
+//!    more: its FeFs submission adds zero payload-sized allocations.
+//! 3. A full `run_pipelined` window moves megabytes through the submit
+//!    queue while the backend's copy accounting stays at the handle
+//!    level (payload bytes submitted, none cloned on the serving
+//!    thread beyond the per-round quantizations).
+//!
+//! Worker-side allocations (segment outputs, extern-pool scratch) are
+//! invisible to the per-thread counters by design — they are real work,
+//! not submit-path overhead.
+
+use std::sync::Arc;
+
+use fadec::coordinator::{PipelineEngine, PipelineOptions, StreamServer};
+use fadec::data::dataset::Scene;
+use fadec::poses::Mat4;
+use fadec::quant::{quantize_tensor, QTensor};
+use fadec::runtime::{HwBackend, RefBackend};
+use fadec::tensor::TensorF;
+use fadec::util::alloc_counter::{
+    reset_thread_counters, thread_large_allocs, PAYLOAD_BYTES,
+};
+use fadec::util::Rng;
+
+fn random_image(seed: u64) -> TensorF {
+    let mut rng = Rng::new(seed);
+    let n = 3 * fadec::config::IMG_H * fadec::config::IMG_W;
+    TensorF::from_vec(
+        &[1, 3, fadec::config::IMG_H, fadec::config::IMG_W],
+        (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect(),
+    )
+}
+
+#[test]
+fn steady_state_submit_batch_is_payload_allocation_free() {
+    let be = RefBackend::synthetic(7);
+    let id = be.resolve("fe_fs").unwrap();
+    let imgs: Vec<QTensor> = (0..3u64)
+        .map(|i| quantize_tensor(&random_image(i), be.qp().aexp("image")))
+        .collect();
+    // a quantized image really is payload-sized, so the counter would
+    // see a deep copy if one happened
+    assert!(imgs[0].t.len() * 2 >= PAYLOAD_BYTES);
+    // warm-up: channel plumbing, queue node pools, worker start
+    let owned: Vec<Vec<QTensor>> = imgs.iter().map(|q| vec![q.clone()]).collect();
+    be.submit_batch(id, owned).unwrap().wait_batch().unwrap();
+    // steady state: building the handle batch + submitting allocates
+    // nothing payload-sized on this thread
+    reset_thread_counters();
+    let owned: Vec<Vec<QTensor>> = imgs.iter().map(|q| vec![q.clone()]).collect();
+    let handle = be.submit_batch(id, owned).unwrap();
+    assert_eq!(
+        thread_large_allocs(),
+        0,
+        "submit path performed a payload-sized allocation"
+    );
+    // the submission still computes the right thing
+    let outs = handle.wait_batch().unwrap();
+    assert_eq!(outs.len(), imgs.len());
+    let want = be.run(id, &[&imgs[0]]).unwrap();
+    for (a, b) in outs[0].iter().zip(&want) {
+        assert_eq!(a.t.data(), b.t.data());
+    }
+}
+
+#[test]
+fn begin_round_allocates_only_the_image_quantizations() {
+    // begin_round = quantize N images (one payload alloc each — the
+    // input DMA analog) + submit the batched FeFs. The submission must
+    // contribute zero payload-sized allocations on top.
+    let backend = Arc::new(RefBackend::synthetic(29));
+    let qp = Arc::clone(backend.qp());
+    let engine = PipelineEngine::new(
+        backend as Arc<dyn HwBackend>,
+        qp,
+        PipelineOptions::default(),
+    )
+    .unwrap();
+    let n_streams = 3usize;
+    let scenes: Vec<Scene> = (0..n_streams)
+        .map(|s| Scene::synthetic(&format!("af{s}"), 2, 200 + s as u64))
+        .collect();
+    let mut sessions: Vec<_> =
+        (0..n_streams).map(|i| engine.new_session(i)).collect();
+    let imgs: Vec<TensorF> =
+        scenes.iter().map(|sc| sc.normalized_image(0)).collect();
+    let frames: Vec<(&TensorF, Mat4)> = imgs
+        .iter()
+        .zip(&scenes)
+        .map(|(img, sc)| (img, sc.poses[0]))
+        .collect();
+    // warm-up round end to end (queue, extern pool, arena freelists)
+    {
+        let round = engine.begin_round(&frames).unwrap();
+        let mut sess: Vec<&mut _> = sessions.iter_mut().collect();
+        engine.finish_round(round, &mut sess).unwrap();
+    }
+    let imgs1: Vec<TensorF> =
+        scenes.iter().map(|sc| sc.normalized_image(1)).collect();
+    let frames1: Vec<(&TensorF, Mat4)> = imgs1
+        .iter()
+        .zip(&scenes)
+        .map(|(img, sc)| (img, sc.poses[1]))
+        .collect();
+    reset_thread_counters();
+    let round = engine.begin_round(&frames1).unwrap();
+    assert_eq!(
+        thread_large_allocs(),
+        n_streams as u64,
+        "begin_round must allocate exactly one quantized payload per \
+         stream; anything more is a submit-path copy"
+    );
+    let mut sess: Vec<&mut _> = sessions.iter_mut().collect();
+    engine.finish_round(round, &mut sess).unwrap();
+}
+
+#[test]
+fn run_pipelined_submits_payloads_without_copying() {
+    // whole-stack accounting: a pipelined window pushes every HW
+    // segment's inputs through the ownership-transferring queue. The
+    // per-round serving-thread behaviour is pinned by the begin_round
+    // test above; here we pin that the queue saw real payload traffic —
+    // bytes that under the PR-4 scheme were all deep-copied at submit
+    // (bit-exactness of the same window is pinned in tests/server.rs)
+    let n_frames = 3usize;
+    let n_streams = 2usize;
+    let scenes: Vec<Scene> = (0..n_streams)
+        .map(|s| Scene::synthetic(&format!("afp{s}"), n_frames, 90 + s as u64))
+        .collect();
+    let backend = Arc::new(RefBackend::synthetic(11));
+    let qp = Arc::clone(backend.qp());
+    let mut server = StreamServer::new(
+        Arc::clone(&backend) as Arc<dyn HwBackend>,
+        qp,
+        PipelineOptions::default(),
+    )
+    .unwrap();
+    let streams: Vec<usize> =
+        (0..n_streams).map(|_| server.open_stream()).collect();
+    let imgs: Vec<Vec<TensorF>> = (0..n_frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..n_frames)
+        .map(|i| {
+            streams
+                .iter()
+                .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                .collect()
+        })
+        .collect();
+    let before = backend.submit_payload_bytes();
+    server.run_pipelined(&rounds, 2).unwrap();
+    let moved = backend.submit_payload_bytes() - before;
+    // every queued HW call of every round moved its inputs as handles;
+    // at minimum the N quantized images per round crossed the queue
+    let img_bytes = (3 * fadec::config::IMG_H * fadec::config::IMG_W * 2) as u64;
+    assert!(
+        moved >= (n_frames * n_streams) as u64 * img_bytes,
+        "submit queue saw too little traffic: {moved} bytes"
+    );
+}
