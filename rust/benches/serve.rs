@@ -6,7 +6,14 @@
 //! 2. **batched**    — lockstep rounds (`run_round`), one batched HW
 //!    call per segment;
 //! 3. **pipelined**  — depth-K rounds in flight (`run_pipelined`), HW
-//!    segments overlapping other rounds' software stages.
+//!    segments overlapping other rounds' software stages;
+//! 4. **sharded**    — the same workload placed across K independent
+//!    backends by the `ShardRouter` (PR 6). Driven via `run_rounds_seq`
+//!    so the records are honest on any host: the slowest shard's busy
+//!    seconds are the critical path, i.e. the wall clock a K-core
+//!    deployment would see. These records carry `shards`/`migrations`
+//!    fields; the `_rebalance` variant pins every stream onto shard 0
+//!    and lets live migration drain the skew.
 //!
 //! Records merge into `BENCH_serve.json` (`util::benchjson` schema).
 //! One frame is the unit of work: `ns_per_iter` is nanoseconds per
@@ -30,7 +37,9 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use fadec::coordinator::{PipelineOptions, StreamServer};
+use fadec::coordinator::{
+    Placement, PipelineOptions, ShardRouter, ShardRouterOptions, StreamServer,
+};
 use fadec::data::dataset::Scene;
 use fadec::poses::Mat4;
 use fadec::runtime::{HwBackend, RefBackend};
@@ -56,7 +65,13 @@ fn make_server() -> (StreamServer, Arc<RefBackend>) {
     (server, backend)
 }
 
-fn rec(op: &str, shape: &str, wall_s: f64, frames: usize) -> BenchRecord {
+fn rec_t(
+    op: &str,
+    shape: &str,
+    wall_s: f64,
+    frames: usize,
+    threads: usize,
+) -> BenchRecord {
     let ns = wall_s * 1e9 / frames as f64;
     BenchRecord::timing(
         op,
@@ -65,8 +80,12 @@ fn rec(op: &str, shape: &str, wall_s: f64, frames: usize) -> BenchRecord {
         // aggregate fps (see module docs: frames/ns would round to 0.000
         // in the serialized schema)
         if wall_s > 0.0 { frames as f64 / wall_s } else { 0.0 },
-        CONV_THREADS,
+        threads,
     )
+}
+
+fn rec(op: &str, shape: &str, wall_s: f64, frames: usize) -> BenchRecord {
+    rec_t(op, shape, wall_s, frames, CONV_THREADS)
 }
 
 fn main() {
@@ -159,6 +178,93 @@ fn main() {
         batch_wall,
         total as f64 / batch_wall.max(1e-9),
     );
+
+    // --- sharded: K independent backends, critical-path projection ------
+    // `run_rounds_seq` drives the shards one at a time on this thread so
+    // the per-shard busy seconds are clean; the slowest shard's busy time
+    // is what a K-core deployment's wall clock would be. conv_threads=1
+    // per shard: in a K-shard deployment each backend owns one core.
+    let sh_shape = format!("{shape} crit-path");
+    for k in [1usize, 2, 4] {
+        let mut router = ShardRouter::on_ref_backends(
+            k,
+            5,
+            PipelineOptions { conv_threads: 1, ..Default::default() },
+            ShardRouterOptions { auto_rebalance: false, ..Default::default() },
+        )
+        .expect("synthetic shard fleet");
+        let streams: Vec<usize> =
+            (0..n_streams).map(|_| router.open_stream()).collect();
+        let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..n_frames)
+            .map(|i| {
+                streams
+                    .iter()
+                    .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                    .collect()
+            })
+            .collect();
+        router.run_rounds_seq(&rounds, 2).expect("sharded rounds");
+        let crit = router
+            .shard_stats()
+            .iter()
+            .map(|s| s.busy_seconds)
+            .fold(0.0_f64, f64::max);
+        let mut r = rec_t(&format!("serve_sharded_k{k}"), &sh_shape, crit, total, 1);
+        r.shards = Some(k);
+        r.migrations = Some(router.migrations());
+        records.push(r);
+        println!(
+            "sharded k={k}: crit-path {:7.3} s ({:6.2} fps projected), \
+             imbalance {:.2}",
+            crit,
+            total as f64 / crit.max(1e-9),
+            router.imbalance_ratio(),
+        );
+    }
+
+    // --- sharded + live rebalance: all streams pinned onto shard 0, the
+    // router migrates them off between windows --------------------------
+    {
+        let mut router = ShardRouter::on_ref_backends(
+            4,
+            5,
+            PipelineOptions { conv_threads: 1, ..Default::default() },
+            ShardRouterOptions {
+                placement: Placement::Pinned(0),
+                ..Default::default()
+            },
+        )
+        .expect("synthetic shard fleet");
+        let streams: Vec<usize> =
+            (0..n_streams).map(|_| router.open_stream()).collect();
+        // window of 1 round at a time: auto_rebalance runs at each
+        // window boundary, draining the deliberately skewed placement
+        for i in 0..n_frames {
+            let round: Vec<(usize, &TensorF, &Mat4)> = streams
+                .iter()
+                .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                .collect();
+            router.run_rounds_seq(&[round], 2).expect("sharded rounds");
+        }
+        let crit = router
+            .shard_stats()
+            .iter()
+            .map(|s| s.busy_seconds)
+            .fold(0.0_f64, f64::max);
+        let mut r =
+            rec_t("serve_sharded_k4_rebalance", &sh_shape, crit, total, 1);
+        r.shards = Some(4);
+        r.migrations = Some(router.migrations());
+        records.push(r);
+        println!(
+            "sharded k=4 rebalance: crit-path {:7.3} s ({:6.2} fps \
+             projected), {} migrations, imbalance {:.2}",
+            crit,
+            total as f64 / crit.max(1e-9),
+            router.migrations(),
+            router.imbalance_ratio(),
+        );
+    }
 
     benchjson::write_and_validate_named("BENCH_serve", smoke, &records);
 }

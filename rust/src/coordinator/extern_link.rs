@@ -118,8 +118,14 @@ impl<T: 'static> Pending<T> {
 }
 
 /// The shared-memory + opcode-queue link with a CPU worker pool.
+///
+/// The job sender sits behind a `Mutex` so `ExternLink` (and everything
+/// holding one, notably `PipelineEngine`) is `Sync` on every supported
+/// toolchain — the shard router shares `&PipelineEngine` across scoped
+/// driver threads. Each link has exactly one posting thread, so the lock
+/// is uncontended.
 pub struct ExternLink {
-    tx: Option<Sender<Job>>,
+    tx: Mutex<Option<Sender<Job>>>,
     workers: Vec<JoinHandle<()>>,
     pub stats: Mutex<ExternStats>,
 }
@@ -148,7 +154,11 @@ impl ExternLink {
                     .expect("spawn sw worker")
             })
             .collect();
-        ExternLink { tx: Some(tx), workers, stats: Mutex::new(ExternStats::default()) }
+        ExternLink {
+            tx: Mutex::new(Some(tx)),
+            workers,
+            stats: Mutex::new(ExternStats::default()),
+        }
     }
 
     /// Write the opcode: enqueue a software op for the CPU side.
@@ -166,6 +176,8 @@ impl ExternLink {
         // job up before this function returns
         let posted_at = Instant::now();
         self.tx
+            .lock()
+            .unwrap()
             .as_ref()
             .expect("link closed")
             .send(job)
@@ -194,7 +206,7 @@ impl ExternLink {
 
 impl Drop for ExternLink {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        drop(self.tx.lock().unwrap().take());
         for w in self.workers.drain(..) {
             let _ = w.join();
         }

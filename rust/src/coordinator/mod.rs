@@ -10,12 +10,17 @@
 //!   `Coordinator` facade; `profiler` records its schedule.
 //! * `server` — the **Server layer**: `StreamServer` multiplexes many
 //!   sessions over one shared `HwBackend`.
+//! * `shard` — the **Shard layer**: `ShardRouter` places sessions across
+//!   K independent backends, drives one pipelined round window per shard
+//!   concurrently, and live-migrates streams between shards on load
+//!   imbalance.
 
 pub mod extern_link;
 pub mod pipeline;
 pub mod profiler;
 pub mod server;
 pub mod session;
+pub mod shard;
 
 pub use extern_link::{ExternLink, ExternRecord, ExternStats, Pending};
 pub use pipeline::{
@@ -25,3 +30,4 @@ pub use pipeline::{
 pub use profiler::{overlap_seconds, FrameProfile, Lane, Profiler, StageRecord};
 pub use server::StreamServer;
 pub use session::StreamSession;
+pub use shard::{Placement, ShardRouter, ShardRouterOptions};

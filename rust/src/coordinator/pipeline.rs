@@ -352,8 +352,9 @@ impl<'f> FrameTask<'f> {
 /// Only the FeFs prologue is session-free, which is what makes this
 /// split bit-exact: `SpawnSwTasks` reads `h`/`depth`/`pose`/KB state,
 /// every later stage consumes it, and FeFs consumes nothing but the
-/// quantized image. A round is also a self-contained unit a future shard
-/// router can hold while other rounds interleave on other backends.
+/// quantized image. A round is also a self-contained unit the shard
+/// router's per-shard drivers hold while other rounds interleave on
+/// other backends (see `coordinator::shard`).
 pub struct RoundInFlight<'f> {
     tasks: Vec<FrameTask<'f>>,
     fe_fs: Option<SubmitHandle>,

@@ -206,6 +206,7 @@ impl StreamServer {
         let mut order: Vec<usize> = (0..inputs.len()).collect();
         let rot = self.rotation(inputs.len());
         order.rotate_left(rot);
+        let bytes0 = self.engine.backend().submit_payload_bytes();
         let (outs, elapsed) = {
             let mut sessions =
                 Self::checkout_sessions(&mut self.sessions, &order, inputs)?;
@@ -217,6 +218,11 @@ impl StreamServer {
             let outs = self.engine.step_round(&mut sessions, &frames)?;
             (outs, t0.elapsed().as_secs_f64())
         };
+        self.batches.submit_payload_bytes += self
+            .engine
+            .backend()
+            .submit_payload_bytes()
+            .saturating_sub(bytes0);
         let width = inputs.len();
         self.batches.record_round(width);
         // serving-thread time is shared by the whole batch: attribute it
@@ -262,6 +268,7 @@ impl StreamServer {
         depth: usize,
     ) -> Result<Vec<Vec<(usize, FrameOutput)>>> {
         let k = depth.max(1);
+        let bytes0 = self.engine.backend().submit_payload_bytes();
         let epoch = Instant::now();
         let mut results: Vec<Vec<(usize, FrameOutput)>> =
             rounds.iter().map(|_| Vec::new()).collect();
@@ -331,6 +338,13 @@ impl StreamServer {
             hw_total,
             sw_total,
         );
+        // queue traffic of the whole window (every submit_* the rounds
+        // issued), so the report shows payload movement next to fps
+        self.batches.submit_payload_bytes += self
+            .engine
+            .backend()
+            .submit_payload_bytes()
+            .saturating_sub(bytes0);
         Ok(results)
     }
 
@@ -445,10 +459,12 @@ impl StreamServer {
         ));
         if self.batches.rounds > 0 {
             out.push_str(&format!(
-                "batched rounds: {} (mean width {:.1}, max {})\n",
+                "batched rounds: {} (mean width {:.1}, max {}, queue \
+                 traffic {:.2} MiB)\n",
                 self.batches.rounds,
                 self.batches.mean_width(),
                 self.batches.max_width,
+                self.batches.submit_payload_bytes as f64 / (1024.0 * 1024.0),
             ));
         }
         if self.batches.pipelined_rounds > 0 {

@@ -23,6 +23,14 @@ use crate::tensor::TensorF;
 /// state onto the data plane. (`depth_full` was an `Arc<TensorF>`
 /// before PR 5; the payload itself being Arc-backed made the extra
 /// wrapper redundant.)
+///
+/// Because *every* cross-frame byte of a stream lives here — and the
+/// engines that step it are stateless — a session is also the unit of
+/// **live migration**: the shard router hands one between backends as a
+/// plain value move (between rounds only; see the ordering rules in the
+/// `runtime` module docs). Nothing in the session references the shard
+/// that created it, so the receiving shard's next round is bit-identical
+/// to the round the donor would have run.
 pub struct StreamSession {
     /// Server-assigned stream id (0 for a standalone coordinator).
     pub id: usize,
@@ -33,6 +41,10 @@ pub struct StreamSession {
     pub(crate) depth_full: TensorF,
     pub(crate) pose_prev: Option<Mat4>,
     pub(crate) frames_done: usize,
+    /// Times this session was handed between shards. Placement
+    /// metadata, not video state: it survives `reset` (a new video on
+    /// the same slot does not forget where the slot has lived).
+    pub(crate) migrations: usize,
 }
 
 impl StreamSession {
@@ -49,6 +61,7 @@ impl StreamSession {
             ),
             pose_prev: None,
             frames_done: 0,
+            migrations: 0,
         }
     }
 
@@ -88,6 +101,17 @@ impl StreamSession {
     pub fn last_pose(&self) -> Option<Mat4> {
         self.pose_prev
     }
+
+    /// Times this session was handed between shards (survives `reset`).
+    pub fn migrations(&self) -> usize {
+        self.migrations
+    }
+
+    /// Record one shard-to-shard handoff (called by the router's
+    /// `migrate_stream`).
+    pub fn note_migration(&mut self) {
+        self.migrations += 1;
+    }
 }
 
 #[cfg(test)]
@@ -112,10 +136,12 @@ mod tests {
         s.frames_done = 5;
         s.pose_prev = Some(Mat4::identity());
         s.kb.maybe_insert(Mat4::identity(), s.h.clone());
+        s.note_migration();
         s.reset(&qp);
         assert!(s.is_cold());
         assert!(s.kb.is_empty());
         assert_eq!(s.id, 3, "reset keeps the stream id");
         assert_eq!(s.last_pose(), None);
+        assert_eq!(s.migrations(), 1, "migrations survive reset");
     }
 }

@@ -1,0 +1,917 @@
+//! Shard layer — horizontal scale-out of the serving stack across K
+//! independent backends ("many bitstreams, many streams").
+//!
+//! PRs 1–5 made a *single* backend batched, threaded, SIMD, pipelined
+//! and copy-free; the next order of magnitude in aggregate fps comes
+//! from running K such backends side by side — the paper's PL/CPU
+//! overlap replayed at fleet scale (and the scalability-across-units
+//! property Boikos & Bouganis make the headline of their FPGA depth
+//! pipeline). A [`ShardRouter`] owns K *shards* — each a
+//! `PipelineEngine` over its own `HwBackend` instance, with its own
+//! resolved segment handles, extern-link worker pool and (for
+//! `RefBackend`) FIFO submission worker — and places `StreamSession`s
+//! across them:
+//!
+//! * **Placement** is policy-driven ([`Placement`]): least-loaded by
+//!   default (fewest streams, then shallowest submit queue), with
+//!   round-robin and pinned fallbacks.
+//! * **Driving** — [`ShardRouter::run_rounds`] partitions a window of
+//!   serving rounds by each stream's shard and drives every shard's
+//!   partition *concurrently* (one scoped driver thread per shard, each
+//!   running the cross-round pipelined schedule of
+//!   `StreamServer::run_pipelined`), so K shards execute K rounds of HW
+//!   segments in parallel while their CPU pools run the SW stages.
+//!   [`ShardRouter::run_rounds_seq`] is the same schedule driven one
+//!   shard at a time — on a single-core host the per-shard busy times it
+//!   measures are exactly the critical path a K-core deployment would
+//!   see.
+//! * **Live migration** — a session is a self-contained value
+//!   (`session` module), so moving a stream between shards *between
+//!   rounds* is a plain value move: [`ShardRouter::migrate_stream`]
+//!   re-tags the slot, and [`ShardRouter::rebalance`] does it
+//!   automatically when per-shard load skews (signal: measured
+//!   per-stream seconds/frame from `StreamThroughput` plus
+//!   `HwBackend::queue_depth`). Migration is bit-exact by contract —
+//!   every shard serves the same segment catalogue (checked at
+//!   construction via `Manifest::same_catalogue`) with value-identical
+//!   parameters, so *where* a round runs never changes *what* it
+//!   computes; the migrate-vs-stay test pins this.
+//!
+//! Error isolation: a shard whose segment errors fails only its own
+//! partition — the other shards' rounds complete normally, every
+//! session (including the failed shard's) is checked back in, and the
+//! error surfaces tagged with the shard index.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Error, Result};
+
+use crate::metrics::{
+    shard_imbalance, AggregateThroughput, ShardStats, StreamThroughput,
+};
+use crate::model::weights::QuantParams;
+use crate::poses::Mat4;
+use crate::runtime::{HwBackend, RefBackend};
+use crate::tensor::TensorF;
+
+use super::pipeline::{
+    FrameOutput, PipelineEngine, PipelineOptions, RoundInFlight,
+};
+use super::session::StreamSession;
+
+/// Stream-to-shard placement policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Place on the shard with the fewest open streams (ties: shallower
+    /// submit queue, then lower index). The default.
+    LeastLoaded,
+    /// Cycle through the shards in index order.
+    RoundRobin,
+    /// Place every new stream on one shard (clamped to the fleet size)
+    /// — the knob tests and benches use to construct skew on purpose.
+    Pinned(usize),
+}
+
+/// Router configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardRouterOptions {
+    pub placement: Placement,
+    /// Run [`ShardRouter::rebalance`] at the start of every
+    /// `run_rounds*` window.
+    pub auto_rebalance: bool,
+    /// Rebalance only when max per-shard load exceeds this multiple of
+    /// the min per-shard load (1.5 = the hot shard carries 50% more
+    /// than the cold one).
+    pub imbalance_threshold: f64,
+}
+
+impl Default for ShardRouterOptions {
+    fn default() -> Self {
+        ShardRouterOptions {
+            placement: Placement::LeastLoaded,
+            auto_rebalance: true,
+            imbalance_threshold: 1.5,
+        }
+    }
+}
+
+/// One backend shard: its engine (own handle map, own extern pool) plus
+/// running statistics.
+struct Shard {
+    engine: PipelineEngine,
+    stats: ShardStats,
+}
+
+/// One stream's placement: the session value (absent only while checked
+/// out to a shard driver mid-window) and its current shard.
+struct SessionSlot {
+    session: Option<StreamSession>,
+    shard: usize,
+}
+
+/// One round's inputs for one shard: `(stream id, image, pose)`.
+type ShardRoundInputs<'f> = Vec<(usize, &'f TensorF, Mat4)>;
+/// Finished frames of one round: `(stream id, output, attributed
+/// serving seconds)`.
+type RoundFrames = Vec<(usize, FrameOutput, f64)>;
+
+/// Everything one shard driver hands back: its sessions (always, even
+/// after an error), finished rounds, and accounting.
+struct ShardOutcome {
+    sessions: Vec<(usize, StreamSession)>,
+    /// `(round index in the window, finished frames)`.
+    outs: Vec<(usize, RoundFrames)>,
+    busy_seconds: f64,
+    rounds: usize,
+    frames: usize,
+    queue_peak: usize,
+    err: Option<Error>,
+}
+
+/// Routes N streams across K backend shards and drives their rounds.
+pub struct ShardRouter {
+    shards: Vec<Shard>,
+    slots: Vec<SessionSlot>,
+    throughput: Vec<StreamThroughput>,
+    opts: ShardRouterOptions,
+    rr_next: usize,
+    migrations_total: usize,
+    started: Instant,
+}
+
+impl ShardRouter {
+    /// Build a router over an explicit fleet of `(backend, parameters)`
+    /// pairs. Every shard must serve the same segment catalogue as
+    /// shard 0 (`Manifest::same_catalogue`) — otherwise sessions could
+    /// not move between them — and for bit-exact serving the parameter
+    /// values must match too (same calibration / same synthetic seed).
+    pub fn new(
+        backends: Vec<(Arc<dyn HwBackend>, Arc<QuantParams>)>,
+        opts: PipelineOptions,
+        ropts: ShardRouterOptions,
+    ) -> Result<Self> {
+        ensure!(!backends.is_empty(), "shard router needs >= 1 backend");
+        ensure!(
+            ropts.imbalance_threshold >= 1.0,
+            "imbalance threshold must be >= 1.0 (got {})",
+            ropts.imbalance_threshold
+        );
+        let m0 = backends[0].0.manifest();
+        for (s, (be, _)) in backends.iter().enumerate().skip(1) {
+            ensure!(
+                m0.same_catalogue(be.manifest()),
+                "shard {s} serves a different segment catalogue than \
+                 shard 0 — streams could not migrate between them"
+            );
+        }
+        let shards = backends
+            .into_iter()
+            .enumerate()
+            .map(|(s, (be, qp))| {
+                Ok(Shard {
+                    engine: PipelineEngine::new(be, qp, opts)
+                        .with_context(|| format!("building shard {s}"))?,
+                    stats: ShardStats { shard: s, ..Default::default() },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardRouter {
+            shards,
+            slots: Vec::new(),
+            throughput: Vec::new(),
+            opts: ropts,
+            rr_next: 0,
+            migrations_total: 0,
+            started: Instant::now(),
+        })
+    }
+
+    /// Artifact-free fleet: K synthetic `RefBackend`s sharing one seed,
+    /// so every shard computes the bit-identical function (the
+    /// `same_seed_is_bit_deterministic` contract).
+    pub fn on_ref_backends(
+        k: usize,
+        seed: u64,
+        opts: PipelineOptions,
+        ropts: ShardRouterOptions,
+    ) -> Result<Self> {
+        ensure!(k >= 1, "shard fleet size must be >= 1");
+        let backends = (0..k)
+            .map(|_| {
+                let be = RefBackend::synthetic(seed);
+                let qp = Arc::clone(be.qp());
+                (Arc::new(be) as Arc<dyn HwBackend>, qp)
+            })
+            .collect();
+        Self::new(backends, opts, ropts)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Change the placement policy for streams opened from now on.
+    pub fn set_placement(&mut self, placement: Placement) {
+        self.opts.placement = placement;
+    }
+
+    /// One shard's engine (tests and ablations).
+    pub fn engine(&self, shard: usize) -> &PipelineEngine {
+        &self.shards[shard].engine
+    }
+
+    /// Open a new stream; returns its id (dense, starting at 0). The
+    /// session is created from the placed shard's parameters — value-
+    /// identical across the fleet by the construction contract.
+    pub fn open_stream(&mut self) -> usize {
+        let sid = self.slots.len();
+        let shard = self.place();
+        let session = self.shards[shard].engine.new_session(sid);
+        self.slots.push(SessionSlot { session: Some(session), shard });
+        self.throughput.push(StreamThroughput::default());
+        sid
+    }
+
+    fn place(&mut self) -> usize {
+        let k = self.shards.len();
+        match self.opts.placement {
+            Placement::Pinned(s) => s.min(k - 1),
+            Placement::RoundRobin => {
+                let s = self.rr_next % k;
+                self.rr_next += 1;
+                s
+            }
+            Placement::LeastLoaded => (0..k)
+                .min_by_key(|&s| {
+                    let streams = self
+                        .slots
+                        .iter()
+                        .filter(|slot| slot.shard == s)
+                        .count();
+                    let qd = self.shards[s].engine.backend().queue_depth();
+                    (streams, qd, s)
+                })
+                .expect("fleet is non-empty"),
+        }
+    }
+
+    /// Shard a stream is currently placed on.
+    pub fn shard_of(&self, sid: usize) -> Option<usize> {
+        self.slots.get(sid).map(|s| s.shard)
+    }
+
+    /// A stream's session (between rounds it is always present).
+    pub fn session(&self, sid: usize) -> Option<&StreamSession> {
+        self.slots.get(sid).and_then(|s| s.session.as_ref())
+    }
+
+    pub fn stream_throughput(&self, sid: usize) -> &StreamThroughput {
+        &self.throughput[sid]
+    }
+
+    /// Total sessions handed between shards since construction.
+    pub fn migrations(&self) -> usize {
+        self.migrations_total
+    }
+
+    /// Per-shard statistics, with live fields (streams placed, current
+    /// queue depth sample folded into the peak) refreshed.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(s, shard)| {
+                let mut st = shard.stats.clone();
+                st.streams =
+                    self.slots.iter().filter(|slot| slot.shard == s).count();
+                st.submit_payload_bytes =
+                    shard.engine.backend().submit_payload_bytes();
+                st
+            })
+            .collect()
+    }
+
+    /// Fleet load-imbalance ratio (`metrics::shard_imbalance`): max
+    /// per-shard busy time over the fleet mean; 1.0 is balanced.
+    pub fn imbalance_ratio(&self) -> f64 {
+        shard_imbalance(&self.shard_stats())
+    }
+
+    /// Aggregate throughput across every stream of the fleet.
+    pub fn aggregate(&self) -> AggregateThroughput {
+        AggregateThroughput::over(
+            &self.throughput,
+            self.started.elapsed().as_secs_f64(),
+        )
+    }
+
+    /// Hand a stream's session to another shard. Legal only between
+    /// rounds (the session must be checked in); a same-shard move is a
+    /// no-op. The session value itself is untouched apart from its
+    /// migration counter — the handoff ordering rules are in the
+    /// `runtime` module docs.
+    pub fn migrate_stream(&mut self, sid: usize, to: usize) -> Result<()> {
+        ensure!(
+            to < self.shards.len(),
+            "shard {to} out of range ({} shards)",
+            self.shards.len()
+        );
+        let slot = self
+            .slots
+            .get_mut(sid)
+            .with_context(|| format!("stream {sid} not open"))?;
+        let from = slot.shard;
+        if from == to {
+            return Ok(());
+        }
+        let session = slot.session.as_mut().with_context(|| {
+            format!(
+                "stream {sid} is checked out to a shard driver — \
+                 migration is only legal between rounds"
+            )
+        })?;
+        session.note_migration();
+        slot.shard = to;
+        self.shards[from].stats.migrations_out += 1;
+        self.shards[to].stats.migrations_in += 1;
+        self.migrations_total += 1;
+        Ok(())
+    }
+
+    /// One rebalancing step: if the most-loaded shard carries more than
+    /// `imbalance_threshold` times the least-loaded one, migrate the
+    /// donor stream whose move best evens the pair (guaranteed a strict
+    /// improvement, so repeated calls converge and a balanced fleet is
+    /// a no-op). Load is estimated as the sum of measured per-stream
+    /// seconds/frame (cold streams assume the fleet mean). Returns
+    /// `(stream, from, to)` when a migration happened.
+    pub fn rebalance(&mut self) -> Option<(usize, usize, usize)> {
+        let k = self.shards.len();
+        if k < 2 || self.slots.is_empty() {
+            return None;
+        }
+        let measured: Vec<Option<f64>> = self
+            .throughput
+            .iter()
+            .map(|t| {
+                if t.frames > 0 && t.busy_seconds > 0.0 {
+                    Some(t.busy_seconds / t.frames as f64)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let known: Vec<f64> = measured.iter().flatten().copied().collect();
+        let mean = if known.is_empty() {
+            1.0
+        } else {
+            known.iter().sum::<f64>() / known.len() as f64
+        };
+        let cost: Vec<f64> =
+            measured.iter().map(|m| m.unwrap_or(mean)).collect();
+        let mut load = vec![0.0f64; k];
+        for (sid, slot) in self.slots.iter().enumerate() {
+            load[slot.shard] += cost[sid];
+        }
+        let donor = (0..k).max_by(|&a, &b| load[a].total_cmp(&load[b]))?;
+        let recv = (0..k).min_by(|&a, &b| {
+            load[a].total_cmp(&load[b]).then_with(|| {
+                self.shards[a]
+                    .engine
+                    .backend()
+                    .queue_depth()
+                    .cmp(&self.shards[b].engine.backend().queue_depth())
+            })
+        })?;
+        if donor == recv {
+            return None;
+        }
+        let (d, r) = (load[donor], load[recv]);
+        let skewed = if r <= 0.0 {
+            d > 0.0
+        } else {
+            d > self.opts.imbalance_threshold * r
+        };
+        if !skewed {
+            return None;
+        }
+        // the move changes the pair's loads by ±c: any c < d - r is a
+        // strict improvement; c closest to the midpoint gap/2 is best
+        let gap = d - r;
+        let target = gap / 2.0;
+        let mut best: Option<(usize, f64)> = None;
+        for (sid, slot) in self.slots.iter().enumerate() {
+            if slot.shard != donor {
+                continue;
+            }
+            let c = cost[sid];
+            if c >= gap {
+                continue;
+            }
+            let dist = (c - target).abs();
+            let better = match best {
+                None => true,
+                Some((_, bd)) => dist < bd,
+            };
+            if better {
+                best = Some((sid, dist));
+            }
+        }
+        let (sid, _) = best?;
+        self.migrate_stream(sid, recv).ok()?;
+        Some((sid, donor, recv))
+    }
+
+    /// Serve one round across the fleet (depth-1 window).
+    pub fn run_round(
+        &mut self,
+        inputs: &[(usize, &TensorF, &Mat4)],
+    ) -> Result<Vec<(usize, FrameOutput)>> {
+        let round: Vec<_> = inputs.to_vec();
+        let mut out = self.run_rounds(&[round], 1)?;
+        Ok(out.pop().expect("one round in, one round out"))
+    }
+
+    /// Serve a window of rounds with every shard driven concurrently
+    /// (one scoped driver thread per shard) and up to `depth` rounds in
+    /// flight per shard. Each round lists `(stream, image, pose)`
+    /// triples; streams of one round may live on different shards — the
+    /// window is partitioned by placement and each shard runs only its
+    /// own streams' sub-rounds, in window order. Results come back per
+    /// input round, in that round's input order, bit-identical to
+    /// serving every stream alone on one backend.
+    pub fn run_rounds(
+        &mut self,
+        rounds: &[Vec<(usize, &TensorF, &Mat4)>],
+        depth: usize,
+    ) -> Result<Vec<Vec<(usize, FrameOutput)>>> {
+        self.run_rounds_mode(rounds, depth, true)
+    }
+
+    /// As [`ShardRouter::run_rounds`] but driving the shards one at a
+    /// time on the calling thread. Same results, same per-shard busy
+    /// accounting — on a host with fewer cores than shards this is the
+    /// honest way to *measure* per-shard critical paths (the max shard
+    /// busy time is what a K-core deployment's wall clock would be)
+    /// without pretending the cores exist.
+    pub fn run_rounds_seq(
+        &mut self,
+        rounds: &[Vec<(usize, &TensorF, &Mat4)>],
+        depth: usize,
+    ) -> Result<Vec<Vec<(usize, FrameOutput)>>> {
+        self.run_rounds_mode(rounds, depth, false)
+    }
+
+    fn run_rounds_mode(
+        &mut self,
+        rounds: &[Vec<(usize, &TensorF, &Mat4)>],
+        depth: usize,
+        concurrent: bool,
+    ) -> Result<Vec<Vec<(usize, FrameOutput)>>> {
+        let k = self.shards.len();
+        if self.opts.auto_rebalance {
+            self.rebalance();
+        }
+        // partition the window by shard, validating as we go
+        let mut work: Vec<Vec<(usize, ShardRoundInputs<'_>)>> =
+            (0..k).map(|_| Vec::new()).collect();
+        for (r, round) in rounds.iter().enumerate() {
+            let mut seen: Vec<usize> = Vec::with_capacity(round.len());
+            for &(sid, img, pose) in round {
+                ensure!(
+                    sid < self.slots.len(),
+                    "round {r}: stream {sid} not open"
+                );
+                ensure!(
+                    !seen.contains(&sid),
+                    "round {r}: stream {sid} repeated"
+                );
+                seen.push(sid);
+                let shard = self.slots[sid].shard;
+                match work[shard].last_mut() {
+                    Some(e) if e.0 == r => e.1.push((sid, img, *pose)),
+                    _ => work[shard].push((r, vec![(sid, img, *pose)])),
+                }
+            }
+        }
+        // check each shard's sessions out as owned values (plain moves —
+        // the same handoff a migration does, pointed the other way)
+        let mut sessions_out: Vec<Vec<(usize, StreamSession)>> =
+            (0..k).map(|_| Vec::new()).collect();
+        for (s, shard_work) in work.iter().enumerate() {
+            for (_, entries) in shard_work {
+                for &(sid, _, _) in entries {
+                    if sessions_out[s].iter().any(|(t, _)| *t == sid) {
+                        continue;
+                    }
+                    let session =
+                        self.slots[sid].session.take().with_context(|| {
+                            format!("stream {sid} already checked out")
+                        })?;
+                    sessions_out[s].push((sid, session));
+                }
+            }
+        }
+        // drive the shards: one scoped thread each (concurrent), or one
+        // after another on this thread (sequential measurement mode)
+        let shards = &self.shards;
+        let outcomes: Vec<ShardOutcome> = if concurrent && k > 1 {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = work
+                    .into_iter()
+                    .zip(sessions_out)
+                    .enumerate()
+                    .map(|(s, (w, sess))| {
+                        let engine = &shards[s].engine;
+                        scope.spawn(move || drive_shard(engine, w, sess, depth))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard driver panicked"))
+                    .collect()
+            })
+        } else {
+            work.into_iter()
+                .zip(sessions_out)
+                .enumerate()
+                .map(|(s, (w, sess))| {
+                    drive_shard(&shards[s].engine, w, sess, depth)
+                })
+                .collect()
+        };
+        // merge: sessions back in first (unconditionally), then stats,
+        // throughput and results; the first shard error wins
+        let mut results: Vec<Vec<(usize, FrameOutput)>> =
+            rounds.iter().map(|_| Vec::new()).collect();
+        let mut first_err: Option<Error> = None;
+        for (s, outcome) in outcomes.into_iter().enumerate() {
+            for (sid, session) in outcome.sessions {
+                debug_assert!(self.slots[sid].session.is_none());
+                self.slots[sid].session = Some(session);
+            }
+            let bytes = self.shards[s].engine.backend().submit_payload_bytes();
+            let stats = &mut self.shards[s].stats;
+            stats.busy_seconds += outcome.busy_seconds;
+            stats.rounds += outcome.rounds;
+            stats.frames += outcome.frames;
+            stats.queue_depth_peak =
+                stats.queue_depth_peak.max(outcome.queue_peak);
+            stats.submit_payload_bytes = bytes;
+            for (r, framed) in outcome.outs {
+                for (sid, out, share) in framed {
+                    self.throughput[sid].record_frame(
+                        share,
+                        out.profile.hw_busy(),
+                        out.profile.sw_busy(),
+                        out.profile.overlapped_sw(),
+                        out.profile.overlapped_hw(),
+                    );
+                    results[r].push((sid, out));
+                }
+            }
+            if let Some(e) = outcome.err {
+                if first_err.is_none() {
+                    first_err = Some(e.context(format!(
+                        "shard {s}: round driver failed (other shards' \
+                         rounds completed; every session is checked back in)"
+                    )));
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        // shards merged in shard order: restore each round's input order
+        for (r, round) in rounds.iter().enumerate() {
+            results[r].sort_by_key(|&(sid, _)| {
+                round
+                    .iter()
+                    .position(|e| e.0 == sid)
+                    .expect("output stream came from this round")
+            });
+        }
+        Ok(results)
+    }
+
+    /// Human-readable per-stream, per-shard and fleet-level report.
+    pub fn report(&self) -> String {
+        let mut out = String::from(
+            "stream   shard   frames   fps(busy)   migrations\n",
+        );
+        for (sid, t) in self.throughput.iter().enumerate() {
+            let migrations = self
+                .session(sid)
+                .map(|s| s.migrations())
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "{sid:<8} {:<7} {:<8} {:<11.2} {}\n",
+                self.slots[sid].shard,
+                t.frames,
+                t.fps(),
+                migrations,
+            ));
+        }
+        out.push_str(
+            "shard   streams   rounds   frames   busy[s]   fps     \
+             qpeak   traffic[MiB]   mig in/out\n",
+        );
+        for st in self.shard_stats() {
+            out.push_str(&format!(
+                "{:<7} {:<9} {:<8} {:<8} {:<9.3} {:<7.2} {:<7} {:<14.2} \
+                 {}/{}\n",
+                st.shard,
+                st.streams,
+                st.rounds,
+                st.frames,
+                st.busy_seconds,
+                st.fps(),
+                st.queue_depth_peak,
+                st.submit_payload_bytes as f64 / (1024.0 * 1024.0),
+                st.migrations_in,
+                st.migrations_out,
+            ));
+        }
+        let a = self.aggregate();
+        out.push_str(&format!(
+            "fleet: {} shards, {} streams, {} frames, {:.2} fps over \
+             serving time, imbalance {:.2}, migrations {}\n",
+            self.shards.len(),
+            a.streams,
+            a.frames,
+            a.busy_fps(),
+            self.imbalance_ratio(),
+            self.migrations_total,
+        ));
+        out
+    }
+}
+
+/// One begun-but-unfinished round on a shard driver.
+struct Staged<'f> {
+    /// Round index in the window.
+    r: usize,
+    round: RoundInFlight<'f>,
+    /// Stream ids in the round's served order.
+    sids: Vec<usize>,
+    /// Driver time spent in `begin_round` (added to the finish time for
+    /// throughput attribution, as in `StreamServer`).
+    begin_s: f64,
+}
+
+/// Finish one staged round against the driver's owned sessions.
+fn finish_one(
+    engine: &PipelineEngine,
+    staged: Staged<'_>,
+    sessions: &mut [(usize, StreamSession)],
+) -> Result<(usize, RoundFrames, f64)> {
+    let width = staged.sids.len();
+    let t0 = Instant::now();
+    let outs = {
+        let mut avail: Vec<(usize, Option<&mut StreamSession>)> = sessions
+            .iter_mut()
+            .map(|(sid, s)| (*sid, Some(s)))
+            .collect();
+        let mut refs: Vec<&mut StreamSession> = Vec::with_capacity(width);
+        for &sid in &staged.sids {
+            let slot = avail
+                .iter_mut()
+                .find(|e| e.0 == sid && e.1.is_some())
+                .with_context(|| {
+                    format!("stream {sid} not checked out to this shard")
+                })?;
+            refs.push(slot.1.take().expect("found Some"));
+        }
+        engine.finish_round(staged.round, &mut refs)?
+    };
+    let spent = staged.begin_s + t0.elapsed().as_secs_f64();
+    let share = spent / width as f64;
+    let framed = staged
+        .sids
+        .iter()
+        .zip(outs)
+        .map(|(&sid, out)| (sid, out, share))
+        .collect();
+    Ok((staged.r, framed, spent))
+}
+
+/// Drive one shard's partition of a window: the cross-round pipelined
+/// schedule (up to `depth` rounds begun-but-unfinished, FIFO finish
+/// order) against the shard's own engine. Never panics out of an error
+/// — the outcome always carries the sessions back to the router.
+fn drive_shard<'f>(
+    engine: &PipelineEngine,
+    work: Vec<(usize, ShardRoundInputs<'f>)>,
+    mut sessions: Vec<(usize, StreamSession)>,
+    depth: usize,
+) -> ShardOutcome {
+    let k = depth.max(1);
+    let mut outcome = ShardOutcome {
+        sessions: Vec::new(),
+        outs: Vec::new(),
+        busy_seconds: 0.0,
+        rounds: 0,
+        frames: 0,
+        queue_peak: 0,
+        err: None,
+    };
+    let mut inflight: VecDeque<Staged<'f>> = VecDeque::new();
+    'drive: for (r, round) in work {
+        if round.is_empty() {
+            continue;
+        }
+        let frames: Vec<(&TensorF, Mat4)> =
+            round.iter().map(|&(_, img, pose)| (img, pose)).collect();
+        let sids: Vec<usize> = round.iter().map(|e| e.0).collect();
+        let t0 = Instant::now();
+        match engine.begin_round(&frames) {
+            Ok(rf) => inflight.push_back(Staged {
+                r,
+                round: rf,
+                sids,
+                begin_s: t0.elapsed().as_secs_f64(),
+            }),
+            Err(e) => {
+                outcome.err = Some(e.context(format!("beginning round {r}")));
+                break 'drive;
+            }
+        }
+        outcome.queue_peak =
+            outcome.queue_peak.max(engine.backend().queue_depth());
+        while inflight.len() >= k {
+            let staged = inflight.pop_front().expect("len checked");
+            let r = staged.r;
+            match finish_one(engine, staged, &mut sessions) {
+                Ok((r, framed, spent)) => {
+                    outcome.busy_seconds += spent;
+                    outcome.rounds += 1;
+                    outcome.frames += framed.len();
+                    outcome.outs.push((r, framed));
+                }
+                Err(e) => {
+                    outcome.err =
+                        Some(e.context(format!("finishing round {r}")));
+                    break 'drive;
+                }
+            }
+        }
+    }
+    if outcome.err.is_none() {
+        while let Some(staged) = inflight.pop_front() {
+            let r = staged.r;
+            match finish_one(engine, staged, &mut sessions) {
+                Ok((r, framed, spent)) => {
+                    outcome.busy_seconds += spent;
+                    outcome.rounds += 1;
+                    outcome.frames += framed.len();
+                    outcome.outs.push((r, framed));
+                }
+                Err(e) => {
+                    outcome.err =
+                        Some(e.context(format!("finishing round {r}")));
+                    break;
+                }
+            }
+        }
+    }
+    // any rounds still staged are abandoned: their submitted segments
+    // complete on the backend worker, the results are dropped, and no
+    // session was mutated (mutation happens only at Commit)
+    drop(inflight);
+    outcome.sessions = sessions;
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::manifest::Manifest;
+
+    fn tiny_router(k: usize, ropts: ShardRouterOptions) -> ShardRouter {
+        ShardRouter::on_ref_backends(
+            k,
+            0,
+            PipelineOptions::default(),
+            ropts,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn least_loaded_placement_spreads_streams() {
+        let mut router = tiny_router(3, ShardRouterOptions::default());
+        for _ in 0..5 {
+            router.open_stream();
+        }
+        let mut per_shard = [0usize; 3];
+        for sid in 0..5 {
+            per_shard[router.shard_of(sid).unwrap()] += 1;
+        }
+        per_shard.sort_unstable();
+        assert_eq!(per_shard, [1, 2, 2], "5 streams over 3 shards");
+    }
+
+    #[test]
+    fn round_robin_and_pinned_placement() {
+        let mut router = tiny_router(
+            3,
+            ShardRouterOptions {
+                placement: Placement::RoundRobin,
+                ..Default::default()
+            },
+        );
+        for _ in 0..4 {
+            router.open_stream();
+        }
+        let shards: Vec<usize> =
+            (0..4).map(|sid| router.shard_of(sid).unwrap()).collect();
+        assert_eq!(shards, vec![0, 1, 2, 0], "cycles over the fleet");
+
+        router.set_placement(Placement::Pinned(1));
+        let sid = router.open_stream();
+        assert_eq!(router.shard_of(sid), Some(1));
+        // out-of-range pins clamp to the last shard
+        router.set_placement(Placement::Pinned(99));
+        let sid = router.open_stream();
+        assert_eq!(router.shard_of(sid), Some(2));
+    }
+
+    #[test]
+    fn migrate_validates_and_counts() {
+        let mut router = tiny_router(2, ShardRouterOptions::default());
+        let sid = router.open_stream();
+        let from = router.shard_of(sid).unwrap();
+        let to = 1 - from;
+        assert!(router.migrate_stream(sid, 9).is_err(), "bad shard");
+        assert!(router.migrate_stream(7, to).is_err(), "unknown stream");
+        // same-shard move is a no-op
+        router.migrate_stream(sid, from).unwrap();
+        assert_eq!(router.migrations(), 0);
+        router.migrate_stream(sid, to).unwrap();
+        assert_eq!(router.shard_of(sid), Some(to));
+        assert_eq!(router.migrations(), 1);
+        assert_eq!(router.session(sid).unwrap().migrations(), 1);
+        let stats = router.shard_stats();
+        assert_eq!(stats[from].migrations_out, 1);
+        assert_eq!(stats[to].migrations_in, 1);
+    }
+
+    #[test]
+    fn mismatched_catalogues_are_rejected() {
+        let full = RefBackend::synthetic(0);
+        let qp_full = Arc::clone(full.qp());
+        let mut short = Manifest::synthetic();
+        short.segments.pop();
+        let qp_short = Arc::new(
+            crate::model::weights::QuantParams::synthetic(&short, 0),
+        );
+        let be_short = RefBackend::new(qp_short.clone(), short).unwrap();
+        let err = ShardRouter::new(
+            vec![
+                (Arc::new(full) as Arc<dyn HwBackend>, qp_full),
+                (Arc::new(be_short) as Arc<dyn HwBackend>, qp_short),
+            ],
+            PipelineOptions::default(),
+            ShardRouterOptions::default(),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("shard 1"), "{err}");
+    }
+
+    #[test]
+    fn rebalance_moves_a_stream_off_the_hot_shard() {
+        let mut router = tiny_router(
+            2,
+            ShardRouterOptions {
+                placement: Placement::Pinned(0),
+                auto_rebalance: false,
+                imbalance_threshold: 1.5,
+            },
+        );
+        for _ in 0..4 {
+            router.open_stream();
+        }
+        // all four on shard 0: cold costs are uniform, so the rebalancer
+        // should hand one (here: any) stream to shard 1
+        let moved = router.rebalance().expect("skewed fleet rebalances");
+        assert_eq!(moved.1, 0, "donor is the hot shard");
+        assert_eq!(moved.2, 1, "receiver is the idle shard");
+        assert_eq!(router.shard_of(moved.0), Some(1));
+        assert_eq!(router.migrations(), 1);
+        // repeated calls keep improving until balanced, then stop
+        router.rebalance();
+        let counts = [0usize, 1].map(|s| {
+            (0..router.n_streams())
+                .filter(|&sid| router.shard_of(sid) == Some(s))
+                .count()
+        });
+        assert_eq!(counts, [2, 2]);
+        assert!(router.rebalance().is_none(), "balanced fleet is a no-op");
+    }
+}

@@ -299,6 +299,21 @@ impl Manifest {
             .copied()
             .with_context(|| format!("activation exponent '{name}' missing"))
     }
+
+    /// Whether two manifests serve the *same segment catalogue*: same
+    /// segments in the same order with identical typed I/O (names,
+    /// shapes, exponents). The artifact location (`hlo`) is ignored —
+    /// two shards may serve one catalogue from different files or
+    /// backends. This is the fleet-compatibility check the shard router
+    /// runs before it will move sessions between backends.
+    pub fn same_catalogue(&self, other: &Manifest) -> bool {
+        self.segments.len() == other.segments.len()
+            && self.segments.iter().zip(&other.segments).all(|(a, b)| {
+                a.name == b.name
+                    && a.inputs == b.inputs
+                    && a.outputs == b.outputs
+            })
+    }
 }
 
 #[cfg(test)]
@@ -362,6 +377,23 @@ out e0_q 1,32,32,48 6
         }
         assert!(m.segment("cvd_b4_head").is_ok());
         assert!(m.segment("cvd_b4_mid1").is_err(), "b4 has a single body conv");
+    }
+
+    #[test]
+    fn same_catalogue_ignores_hlo_but_not_io() {
+        let a = Manifest::synthetic();
+        let mut b = Manifest::synthetic();
+        assert!(a.same_catalogue(&b));
+        // artifact location differs -> still the same catalogue
+        b.segments[0].hlo = "elsewhere.hlo.txt".into();
+        assert!(a.same_catalogue(&b));
+        // a typed-I/O difference breaks compatibility
+        b.segments[0].inputs[0].exp += 1;
+        assert!(!a.same_catalogue(&b));
+        // as does a missing segment
+        let mut c = Manifest::synthetic();
+        c.segments.pop();
+        assert!(!a.same_catalogue(&c));
     }
 
     #[test]

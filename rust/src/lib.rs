@@ -7,7 +7,7 @@
 //!
 //! # Layer map
 //!
-//! The L3 serving stack is split Backend / Session / Server:
+//! The L3 serving stack is split Backend / Session / Server / Shard:
 //!
 //! * **Backend** (`runtime`) — the [`runtime::HwBackend`] trait: a
 //!   catalogue of FSM-sequenced segments resolved once into
@@ -42,6 +42,21 @@
 //!   round's submitted HW segments with other rounds' software stages
 //!   (cross-round pipelining; `overlapped_hw` in `metrics::BatchStats`
 //!   measures the hidden HW time).
+//! * **Shard** (`coordinator::shard`, PR 6) — "many bitstreams":
+//!   [`coordinator::ShardRouter`] places N sessions across K independent
+//!   backends (each its own [`coordinator::PipelineEngine`]; per-shard
+//!   `SegmentId` handle maps — the validity and migration-ordering rules
+//!   live in the `runtime` module docs) and drives one pipelined round
+//!   window per shard concurrently, for near-linear aggregate-fps
+//!   scaling. Placement is policy-driven
+//!   ([`coordinator::Placement`]: least-loaded default, round-robin,
+//!   pinned) and **live migration** rides the Session-layer design: a
+//!   session is the complete stream state, so the router hands it
+//!   between shards as a plain value move between rounds — bit-exact by
+//!   construction, pinned by `rust/tests/shard.rs` (migrate-vs-stay,
+//!   K ∈ {1,2,4} vs solo, shard-failure isolation). Load signals
+//!   (`HwBackend::queue_depth`, per-stream fps, per-shard busy seconds)
+//!   feed `metrics::ShardStats` and the imbalance-triggered rebalancer.
 //!
 //! # Data plane (PR 5)
 //!
@@ -127,13 +142,12 @@
 //! binary is self-contained, and without artifacts the RefBackend serves
 //! the identical pipeline in pure Rust.
 //!
-//! Later scaling PRs plug into these seams: new backends (sharded,
-//! remote) implement `HwBackend` — sync-only impls get submit/await for
-//! free via the default-eager path; admission/batching policies sit in
-//! `StreamServer`; per-stream state stays session-local and rounds are
-//! self-contained `RoundInFlight` values, so a shard router can
-//! interleave rounds across backends and streams can migrate between
-//! them.
+//! The seams the shard layer rides — `HwBackend` impls (sync-only ones
+//! get submit/await free via the default-eager path), session-local
+//! stream state, self-contained `RoundInFlight` values — remain open
+//! for what's next: remote backends behind the same trait, admission
+//! policies in `StreamServer`, and placement policies beyond
+//! least-loaded in `ShardRouter`.
 
 pub mod codesign;
 pub mod config;

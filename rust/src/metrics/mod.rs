@@ -102,6 +102,10 @@ pub struct BatchStats {
     pub pipelined_hw_seconds: f64,
     /// Total SW execution time inside pipelined windows.
     pub pipelined_sw_seconds: f64,
+    /// Input payload bytes that crossed the backend's submit queue for
+    /// the rounds in this accounting (`HwBackend::submit_payload_bytes`
+    /// delta) — the DMA-traffic figure reported next to fps.
+    pub submit_payload_bytes: u64,
 }
 
 impl BatchStats {
@@ -197,6 +201,63 @@ impl AggregateThroughput {
             0.0
         }
     }
+}
+
+/// Per-shard serving statistics kept by `coordinator::ShardRouter`: one
+/// record per backend instance in the fleet, refreshed as rounds retire.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Shard index in the router's fleet.
+    pub shard: usize,
+    /// Streams currently placed on this shard.
+    pub streams: usize,
+    /// Rounds this shard has executed.
+    pub rounds: usize,
+    /// Frames served inside those rounds.
+    pub frames: usize,
+    /// Driver-thread time spent on this shard's rounds.
+    pub busy_seconds: f64,
+    /// Deepest submit-queue occupancy sampled while driving rounds
+    /// (`HwBackend::queue_depth`).
+    pub queue_depth_peak: usize,
+    /// Payload bytes through this shard's submit queue since
+    /// construction (`HwBackend::submit_payload_bytes`).
+    pub submit_payload_bytes: u64,
+    /// Sessions migrated *onto* this shard.
+    pub migrations_in: usize,
+    /// Sessions migrated *off* this shard.
+    pub migrations_out: usize,
+}
+
+impl ShardStats {
+    /// Frames per second of this shard's driver busy time.
+    pub fn fps(&self) -> f64 {
+        if self.busy_seconds > 0.0 {
+            self.frames as f64 / self.busy_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Load-imbalance ratio of a shard fleet: max per-shard busy time over
+/// the fleet mean. 1.0 is perfectly balanced; the router's rebalancer
+/// fires when this exceeds its threshold. 0.0 for an idle fleet (no
+/// busy time anywhere) so cold starts never look imbalanced.
+pub fn shard_imbalance(shards: &[ShardStats]) -> f64 {
+    if shards.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = shards.iter().map(|s| s.busy_seconds).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mean = total / shards.len() as f64;
+    let max = shards
+        .iter()
+        .map(|s| s.busy_seconds)
+        .fold(0.0f64, f64::max);
+    max / mean
 }
 
 /// Mean squared error between two depth maps (metres^2).
@@ -317,6 +378,26 @@ mod tests {
         assert!((b.pipelined_hw_seconds - 4.0).abs() < 1e-12);
         assert!((b.pipelined_sw_seconds - 2.5).abs() < 1e-12);
         assert!((b.overlapped_hw_ratio() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_stats_fps_and_imbalance() {
+        let mut a = ShardStats { shard: 0, ..Default::default() };
+        assert_eq!(a.fps(), 0.0);
+        a.frames = 8;
+        a.busy_seconds = 2.0;
+        assert!((a.fps() - 4.0).abs() < 1e-12);
+
+        // idle fleet: no imbalance signal
+        assert_eq!(shard_imbalance(&[]), 0.0);
+        assert_eq!(shard_imbalance(&[ShardStats::default()]), 0.0);
+
+        // balanced fleet -> 1.0; skewed fleet -> max/mean
+        let b = ShardStats { shard: 1, busy_seconds: 2.0, ..Default::default() };
+        assert!((shard_imbalance(&[a.clone(), b.clone()]) - 1.0).abs() < 1e-12);
+        let hot = ShardStats { shard: 1, busy_seconds: 6.0, ..Default::default() };
+        // mean = 4.0, max = 6.0 -> 1.5
+        assert!((shard_imbalance(&[a, hot]) - 1.5).abs() < 1e-12);
     }
 
     #[test]

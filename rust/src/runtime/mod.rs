@@ -58,6 +58,31 @@
 //! implementation: a dedicated backend worker thread drains a FIFO job
 //! queue, so submitted segments execute while the caller runs software
 //! stages — the overlap `StreamServer::run_pipelined` is built on.
+//!
+//! # Sharding contract (multi-backend deployments)
+//!
+//! A fleet of backend instances ("shards", see `coordinator::ShardRouter`)
+//! adds two rules on top of the submit/await contract:
+//!
+//! * **Per-shard handle validity** — a [`SegmentId`] is an index into the
+//!   manifest order *of the backend that resolved it* and is meaningless
+//!   on any other instance, even one serving a value-identical catalogue.
+//!   Anything that moves between shards must carry segment *names* and
+//!   re-resolve on arrival; the router does this by giving every shard
+//!   its own `PipelineEngine` (hence its own resolved handle map) and
+//!   never sharing ids across engines.
+//! * **Migration ordering** — a `StreamSession` may be handed from shard
+//!   A to shard B only *between rounds*: every submission the session
+//!   contributed to on A must have been waited (or its round abandoned
+//!   wholesale before the Commit stage) before the session value moves.
+//!   Sessions are mutated only at Commit, so a between-rounds handoff is
+//!   a plain value move and the receiving shard's first round on the
+//!   stream is bit-identical to the round the donor would have run.
+//!
+//! Shard-level accounting ([`HwBackend::queue_depth`],
+//! [`HwBackend::submit_payload_bytes`]) is intentionally approximate
+//! (Relaxed counters): it feeds placement heuristics and reports, never
+//! correctness decisions.
 
 pub mod ref_backend;
 
@@ -239,6 +264,21 @@ pub trait HwBackend: Send + Sync {
     /// Resolve + run in one call (cold paths and tests).
     fn run_named(&self, name: &str, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
         self.run(self.resolve(name)?, inputs)
+    }
+
+    /// Number of submitted-but-not-yet-completed jobs on this backend's
+    /// queue — the occupancy signal shard placement reads. Approximate by
+    /// design (sampled from Relaxed counters). Default: 0, correct for
+    /// the default-eager `submit_batch` (nothing is ever left queued).
+    fn queue_depth(&self) -> usize {
+        0
+    }
+
+    /// Total payload bytes moved through `submit*` since construction
+    /// (the DMA-traffic analog), for per-shard traffic reporting next to
+    /// fps. Default: 0 for backends that don't account for it.
+    fn submit_payload_bytes(&self) -> u64 {
+        0
     }
 
     /// Hint: stripe software conv output channels over `threads` workers.

@@ -36,7 +36,7 @@
 //! the serve bench's copy accounting.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -106,6 +106,12 @@ struct RefInner {
     manifest: Manifest,
     kinds: Vec<SegKind>,
     index: HashMap<String, usize>,
+    /// Submitted-but-not-yet-completed jobs on the worker queue — the
+    /// occupancy signal behind `HwBackend::queue_depth`. Incremented
+    /// *before* a job crosses the queue and decremented by the worker
+    /// just before delivering its completion, so a sampled value never
+    /// underflows and a returned `wait` implies the job is uncounted.
+    inflight: AtomicUsize,
 }
 
 /// One queued submission: the segment, the batch's *owned input handles*
@@ -147,7 +153,14 @@ impl RefBackend {
             .map(|(i, d)| (d.name.clone(), i))
             .collect();
         let model = QuantModel::new(Arc::clone(&qp));
-        let inner = Arc::new(RefInner { qp, model, manifest, kinds, index });
+        let inner = Arc::new(RefInner {
+            qp,
+            model,
+            manifest,
+            kinds,
+            index,
+            inflight: AtomicUsize::new(0),
+        });
         let (tx, rx) = channel::<HwJob>();
         let exec = Arc::clone(&inner);
         let worker = std::thread::Builder::new()
@@ -168,6 +181,12 @@ impl RefBackend {
                     // inputs are guaranteed dropped (so e.g. a payload
                     // the caller kept a handle to is unique again)
                     drop(batch);
+                    // retire the job from the occupancy count *before*
+                    // its completion goes out: once a wait returns, the
+                    // job is guaranteed no longer counted (and the count
+                    // cannot underflow — every received job was counted
+                    // before it crossed the queue)
+                    exec.inflight.fetch_sub(1, Ordering::Relaxed);
                     // a dropped handle abandons its result; that's fine
                     let _ = resp.send(HwCompletion {
                         outs,
@@ -411,17 +430,41 @@ impl HwBackend for RefBackend {
                 .sum::<u64>();
         }
         let (resp_tx, resp_rx) = channel();
-        self.queue
+        // count the job in-flight *before* it crosses the queue — the
+        // worker decrements after delivering the completion, so a sampled
+        // queue_depth never underflows; a failed enqueue undoes the add
+        self.inner.inflight.fetch_add(1, Ordering::Relaxed);
+        let sent = self
+            .queue
             .lock()
             .unwrap()
             .as_ref()
-            .context("backend worker shut down")?
-            .send(HwJob { id, batch, resp: resp_tx })
-            .map_err(|_| anyhow!("backend worker gone"))?;
+            .context("backend worker shut down")
+            .and_then(|q| {
+                q.send(HwJob { id, batch, resp: resp_tx })
+                    .map_err(|_| anyhow!("backend worker gone"))
+            });
+        if let Err(e) = sent {
+            self.inner.inflight.fetch_sub(1, Ordering::Relaxed);
+            return Err(e);
+        }
         // counted only once the job actually crossed the queue (a failed
         // enqueue must not inflate the copy accounting)
         self.submit_payload_bytes.fetch_add(bytes, Ordering::Relaxed);
         Ok(SubmitHandle::queued(resp_rx))
+    }
+
+    /// Jobs submitted to the worker whose completions have not yet been
+    /// delivered — the occupancy signal the shard router's placement and
+    /// rebalancing read through `&dyn HwBackend`.
+    fn queue_depth(&self) -> usize {
+        self.inner.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Trait-level view of [`RefBackend::submit_payload_bytes`] so
+    /// per-shard queue traffic is reportable through `&dyn HwBackend`.
+    fn submit_payload_bytes(&self) -> u64 {
+        self.submit_payload_bytes.load(Ordering::Relaxed)
     }
 }
 
@@ -610,6 +653,28 @@ mod tests {
             (probe.t.len() * std::mem::size_of::<i16>()) as u64,
             "submit accounting covers exactly the input payload bytes"
         );
+    }
+
+    #[test]
+    fn queue_depth_tracks_inflight_submissions() {
+        let be = RefBackend::synthetic(7);
+        assert_eq!(be.queue_depth(), 0);
+        let id = be.resolve("fe_fs").unwrap();
+        let img = quantize_tensor(&random_image(80), be.qp().aexp("image"));
+        let handles: Vec<_> = (0..3)
+            .map(|_| be.submit(id, vec![img.clone()]).unwrap())
+            .collect();
+        // sampled while the worker drains: never more than submitted,
+        // never negative (usize), and back to 0 once all are waited
+        assert!(be.queue_depth() <= 3);
+        for h in handles {
+            h.wait().unwrap();
+        }
+        assert_eq!(be.queue_depth(), 0);
+        // the trait-level bytes accessor mirrors the inherent one
+        let dyn_be: &dyn HwBackend = &be;
+        assert_eq!(dyn_be.submit_payload_bytes(), be.submit_payload_bytes());
+        assert!(be.submit_payload_bytes() > 0);
     }
 
     /// Delegates `run`/`run_batch` but keeps the trait's default

@@ -42,6 +42,12 @@ pub struct BenchRecord {
     /// Payload bytes actually deep-copied on the submit path (zero
     /// under ownership transfer; pinned by `rust/tests/alloc_free.rs`).
     pub copy_bytes_after: Option<f64>,
+    /// Backend shards the measurement ran over (PR 6 shard-scaling
+    /// records in `benches/serve.rs`). `None` for single-backend runs.
+    pub shards: Option<usize>,
+    /// Sessions migrated between shards during the measurement. Only
+    /// meaningful alongside `shards`.
+    pub migrations: Option<usize>,
 }
 
 impl BenchRecord {
@@ -66,6 +72,8 @@ impl BenchRecord {
             threads,
             copy_bytes_before: None,
             copy_bytes_after: None,
+            shards: None,
+            migrations: None,
         }
     }
 }
@@ -106,6 +114,12 @@ pub fn to_json(records: &[BenchRecord]) -> String {
         }
         if let Some(a) = r.copy_bytes_after {
             let _ = write!(out, ", \"copy_bytes_after\": {a:.1}");
+        }
+        if let Some(s) = r.shards {
+            let _ = write!(out, ", \"shards\": {s}");
+        }
+        if let Some(m) = r.migrations {
+            let _ = write!(out, ", \"migrations\": {m}");
         }
         let _ = write!(
             out,
@@ -225,6 +239,7 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
         let (mut op, mut shape) = (None, None);
         let (mut ns, mut gops, mut threads) = (None, None, None);
         let (mut cb_before, mut cb_after) = (None, None);
+        let (mut shards, mut migrations) = (None, None);
         loop {
             let key = p.string()?;
             p.eat(b':')?;
@@ -236,6 +251,8 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
                 "threads" => threads = Some(p.number()? as usize),
                 "copy_bytes_before" => cb_before = Some(p.number()?),
                 "copy_bytes_after" => cb_after = Some(p.number()?),
+                "shards" => shards = Some(p.number()? as usize),
+                "migrations" => migrations = Some(p.number()? as usize),
                 other => bail!("unknown bench-record key '{other}'"),
             }
             match p.peek() {
@@ -252,6 +269,8 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
             threads: threads.context("record missing 'threads'")?,
             copy_bytes_before: cb_before,
             copy_bytes_after: cb_after,
+            shards,
+            migrations,
         });
         match p.peek() {
             Some(b',') => p.eat(b',')?,
@@ -374,6 +393,16 @@ pub fn validate(path: &Path) -> Result<usize> {
                 r.op
             );
         }
+        // shard-scaling records: a fleet has >= 1 shards, and a
+        // migration count only means something with a fleet size
+        if let Some(s) = r.shards {
+            anyhow::ensure!(s >= 1, "op '{}': bad shard count {s}", r.op);
+        }
+        anyhow::ensure!(
+            r.migrations.is_none() || r.shards.is_some(),
+            "op '{}': migrations without a shards field",
+            r.op
+        );
     }
     Ok(records.len())
 }
@@ -429,6 +458,37 @@ mod tests {
         let mut bad = rec("x", 1, 1.0);
         bad.copy_bytes_before = Some(10.0);
         bad.copy_bytes_after = Some(20.0);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn shard_fields_roundtrip_and_validate() {
+        let mut r = rec("serve_sharded_k4", 1, 100.0);
+        r.shards = Some(4);
+        r.migrations = Some(2);
+        let parsed = from_json(&to_json(&[r.clone()])).unwrap();
+        assert_eq!(parsed, vec![r.clone()]);
+        // single-backend records keep emitting the old schema
+        let bare = to_json(&[rec("a", 1, 1.0)]);
+        assert!(!bare.contains("shards"));
+        assert!(!bare.contains("migrations"));
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_benchjson_shard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        let _ = std::fs::remove_file(&path);
+        merge_into(&path, &[r]).unwrap();
+        assert_eq!(validate(&path).unwrap(), 1);
+        // a zero-shard fleet is schema drift
+        let mut bad = rec("x", 1, 1.0);
+        bad.shards = Some(0);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        // so is a migration count with no fleet size
+        let mut bad = rec("x", 1, 1.0);
+        bad.migrations = Some(1);
         std::fs::write(&path, to_json(&[bad])).unwrap();
         assert!(validate(&path).is_err());
         std::fs::remove_file(&path).unwrap();

@@ -1,0 +1,345 @@
+//! Shard-layer tests on the artifact-free RefBackend: K-shard serving
+//! is bit-exact vs a solo coordinator for K ∈ {1, 2, 4}, live migration
+//! mid-run changes nothing but placement, a failing shard surfaces its
+//! error without wedging the healthy shards, and the rebalancer drains
+//! deliberate skew while staying bit-exact. These pin the tentpole
+//! guarantee: sharding is a latency optimisation, never a semantic one.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+use fadec::coordinator::{
+    Coordinator, Placement, PipelineOptions, ShardRouter, ShardRouterOptions,
+};
+use fadec::data::dataset::Scene;
+use fadec::data::{Manifest, SegmentDesc};
+use fadec::poses::Mat4;
+use fadec::quant::QTensor;
+use fadec::runtime::{HwBackend, RefBackend, SegmentId};
+use fadec::tensor::TensorF;
+
+/// One scene served start-to-finish on a fresh single-backend
+/// coordinator with the given seed — the bit-exactness reference for
+/// every sharded run below (same-seed synthetic backends compute the
+/// same function).
+fn solo_run(seed: u64, scene: &Scene, n: usize) -> Vec<TensorF> {
+    let mut coord =
+        Coordinator::on_ref_backend(seed, PipelineOptions::default()).unwrap();
+    (0..n)
+        .map(|i| {
+            let img = scene.normalized_image(i);
+            coord.step(&img, &scene.poses[i]).unwrap().depth
+        })
+        .collect()
+}
+
+fn make_scenes(n_streams: usize, frames: usize, base_seed: u64) -> Vec<Scene> {
+    (0..n_streams)
+        .map(|s| {
+            Scene::synthetic(&format!("sh-{s}"), frames, base_seed + s as u64)
+        })
+        .collect()
+}
+
+fn no_rebalance() -> ShardRouterOptions {
+    ShardRouterOptions { auto_rebalance: false, ..Default::default() }
+}
+
+#[test]
+fn sharded_fleets_are_bit_exact_for_k_1_2_4() {
+    const SEED: u64 = 7;
+    let (n_streams, frames) = (4, 3);
+    let scenes = make_scenes(n_streams, frames, 40);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(SEED, sc, frames)).collect();
+    let imgs: Vec<Vec<TensorF>> = (0..frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    for k in [1usize, 2, 4] {
+        let mut router = ShardRouter::on_ref_backends(
+            k,
+            SEED,
+            PipelineOptions::default(),
+            no_rebalance(),
+        )
+        .unwrap();
+        let streams: Vec<usize> =
+            (0..n_streams).map(|_| router.open_stream()).collect();
+        // least-loaded default placement interleaves the streams over
+        // every shard — no shard left idle
+        let used: Vec<usize> = (0..k)
+            .filter(|&sh| streams.iter().any(|&s| router.shard_of(s) == Some(sh)))
+            .collect();
+        assert_eq!(used.len(), k.min(n_streams), "k={k}: idle shard");
+        let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..frames)
+            .map(|i| {
+                streams
+                    .iter()
+                    .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                    .collect()
+            })
+            .collect();
+        let results = router.run_rounds(&rounds, 2).unwrap();
+        assert_eq!(results.len(), frames);
+        for (r, round) in results.iter().enumerate() {
+            assert_eq!(round.len(), n_streams, "k={k} round {r}");
+            for (sid, out) in round {
+                assert_eq!(
+                    out.depth.data(),
+                    solo[*sid][r].data(),
+                    "k={k} stream {sid} frame {r}: sharded != solo"
+                );
+            }
+        }
+        assert_eq!(router.migrations(), 0);
+    }
+}
+
+#[test]
+fn mid_run_migration_is_bit_exact_and_counted() {
+    const SEED: u64 = 11;
+    let (n_streams, frames) = (3, 4);
+    let scenes = make_scenes(n_streams, frames, 60);
+    let imgs: Vec<Vec<TensorF>> = (0..frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let run = |migrate_at: Option<usize>| -> (Vec<Vec<TensorF>>, usize) {
+        let mut router = ShardRouter::on_ref_backends(
+            2,
+            SEED,
+            PipelineOptions::default(),
+            no_rebalance(),
+        )
+        .unwrap();
+        let streams: Vec<usize> =
+            (0..n_streams).map(|_| router.open_stream()).collect();
+        let mut outs: Vec<Vec<TensorF>> = vec![Vec::new(); n_streams];
+        for i in 0..frames {
+            if migrate_at == Some(i) {
+                let from = router.shard_of(streams[0]).unwrap();
+                router.migrate_stream(streams[0], 1 - from).unwrap();
+                assert_eq!(router.shard_of(streams[0]), Some(1 - from));
+                assert_eq!(router.session(streams[0]).unwrap().migrations(), 1);
+            }
+            let round: Vec<(usize, &TensorF, &Mat4)> = streams
+                .iter()
+                .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                .collect();
+            for (sid, out) in router.run_round(&round).unwrap() {
+                outs[sid].push(out.depth);
+            }
+        }
+        (outs, router.migrations())
+    };
+    let (stay, m_stay) = run(None);
+    let (moved, m_moved) = run(Some(frames / 2));
+    assert_eq!(m_stay, 0);
+    assert_eq!(m_moved, 1);
+    for (s, (a, b)) in stay.iter().zip(&moved).enumerate() {
+        assert_eq!(a.len(), frames);
+        for (f, (da, db)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(
+                da.data(),
+                db.data(),
+                "stream {s} frame {f}: migration changed a depth bit"
+            );
+        }
+    }
+}
+
+/// A backend that delegates everything to an inner `RefBackend` but
+/// errors out of the execution paths while `fail` is raised — the
+/// injected-fault stand-in for a wedged bitstream.
+struct FailingBackend {
+    inner: Arc<RefBackend>,
+    fail: AtomicBool,
+}
+
+impl FailingBackend {
+    fn check(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.fail.load(Ordering::SeqCst),
+            "injected fault: shard hardware unresponsive"
+        );
+        Ok(())
+    }
+}
+
+impl HwBackend for FailingBackend {
+    fn kind(&self) -> &'static str {
+        "failing-ref"
+    }
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+    fn resolve(&self, name: &str) -> Result<SegmentId> {
+        self.inner.resolve(name)
+    }
+    fn segment_desc(&self, id: SegmentId) -> &SegmentDesc {
+        self.inner.segment_desc(id)
+    }
+    fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+        self.check()?;
+        self.inner.run(id, inputs)
+    }
+    fn run_batch(
+        &self,
+        id: SegmentId,
+        batch: &[Vec<&QTensor>],
+    ) -> Result<Vec<Vec<QTensor>>> {
+        self.check()?;
+        self.inner.run_batch(id, batch)
+    }
+    fn set_conv_threads(&self, threads: usize) {
+        self.inner.set_conv_threads(threads)
+    }
+}
+
+#[test]
+fn failing_shard_surfaces_error_without_wedging_the_fleet() {
+    const SEED: u64 = 13;
+    let frames = 3;
+    let scenes = make_scenes(2, frames, 80);
+    let healthy = Arc::new(RefBackend::synthetic(SEED));
+    let qp = Arc::clone(healthy.qp());
+    let flaky_inner = Arc::new(RefBackend::synthetic(SEED));
+    let flaky_qp = Arc::clone(flaky_inner.qp());
+    let flaky = Arc::new(FailingBackend {
+        inner: flaky_inner,
+        fail: AtomicBool::new(false),
+    });
+    let mut router = ShardRouter::new(
+        vec![
+            (healthy as Arc<dyn HwBackend>, qp),
+            (Arc::clone(&flaky) as Arc<dyn HwBackend>, flaky_qp),
+        ],
+        PipelineOptions::default(),
+        ShardRouterOptions {
+            placement: Placement::Pinned(0),
+            ..no_rebalance()
+        },
+    )
+    .unwrap();
+    let s0 = router.open_stream();
+    router.set_placement(Placement::Pinned(1));
+    let s1 = router.open_stream();
+    assert_eq!(router.shard_of(s0), Some(0));
+    assert_eq!(router.shard_of(s1), Some(1));
+
+    let imgs: Vec<Vec<TensorF>> = (0..frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let round = |i: usize, only: Option<usize>| {
+        [s0, s1]
+            .into_iter()
+            .filter(|&s| only.is_none() || only == Some(s))
+            .map(|s| (s, &imgs[i][s], &scenes[s].poses[i]))
+            .collect::<Vec<_>>()
+    };
+
+    // frame 0: both shards healthy
+    router.run_round(&round(0, None)).unwrap();
+
+    // frame 1: shard 1's hardware dies mid-service
+    flaky.fail.store(true, Ordering::SeqCst);
+    let err = router.run_round(&round(1, None)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 1"), "error does not name the shard: {msg}");
+    assert!(msg.contains("injected fault"), "root cause lost: {msg}");
+
+    // the failure must not wedge the fleet: every session is checked
+    // back in, and the healthy shard kept serving its round
+    assert!(router.session(s0).is_some());
+    assert!(router.session(s1).is_some());
+    assert_eq!(router.session(s0).unwrap().frames_done(), 2);
+    assert_eq!(router.session(s1).unwrap().frames_done(), 1);
+    router.run_round(&round(2, Some(s0))).unwrap();
+    assert_eq!(router.session(s0).unwrap().frames_done(), 3);
+
+    // recovery: migrate the stranded stream off the dead shard and
+    // replay its remaining frames bit-exactly (vs an uninterrupted solo
+    // run on a same-seed backend)
+    router.migrate_stream(s1, 0).unwrap();
+    let solo = solo_run(SEED, &scenes[s1], frames);
+    for i in 1..frames {
+        let outs = router.run_round(&round(i, Some(s1))).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(
+            outs[0].1.depth.data(),
+            solo[i].data(),
+            "frame {i}: recovery after shard failure diverged"
+        );
+    }
+    assert_eq!(router.session(s1).unwrap().migrations(), 1);
+}
+
+#[test]
+fn auto_rebalance_drains_skew_and_stays_bit_exact() {
+    const SEED: u64 = 17;
+    let (n_streams, frames) = (4, 4);
+    let scenes = make_scenes(n_streams, frames, 90);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(SEED, sc, frames)).collect();
+    let imgs: Vec<Vec<TensorF>> = (0..frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    // worst-case placement: every stream pinned onto shard 0, with the
+    // default auto-rebalance left on (it runs at each window boundary)
+    let mut router = ShardRouter::on_ref_backends(
+        2,
+        SEED,
+        PipelineOptions::default(),
+        ShardRouterOptions {
+            placement: Placement::Pinned(0),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let streams: Vec<usize> =
+        (0..n_streams).map(|_| router.open_stream()).collect();
+    assert!(streams.iter().all(|&s| router.shard_of(s) == Some(0)));
+    for i in 0..frames {
+        let round: Vec<(usize, &TensorF, &Mat4)> = streams
+            .iter()
+            .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+            .collect();
+        for (sid, out) in router.run_round(&round).unwrap() {
+            assert_eq!(
+                out.depth.data(),
+                solo[sid][i].data(),
+                "stream {sid} frame {i}: rebalanced serving diverged"
+            );
+        }
+    }
+    assert!(router.migrations() >= 1, "skew never drained");
+    let on_1 = streams
+        .iter()
+        .filter(|&&s| router.shard_of(s) == Some(1))
+        .count();
+    assert!(on_1 >= 1, "no stream ever moved off the hot shard");
+}
+
+#[test]
+fn placement_policies_spread_as_documented() {
+    const SEED: u64 = 19;
+    let mut router = ShardRouter::on_ref_backends(
+        2,
+        SEED,
+        PipelineOptions::default(),
+        ShardRouterOptions {
+            placement: Placement::RoundRobin,
+            ..no_rebalance()
+        },
+    )
+    .unwrap();
+    let placed: Vec<usize> = (0..4)
+        .map(|_| {
+            let s = router.open_stream();
+            router.shard_of(s).unwrap()
+        })
+        .collect();
+    assert_eq!(placed, vec![0, 1, 0, 1]);
+    assert_eq!(router.n_streams(), 4);
+    assert_eq!(router.n_shards(), 2);
+}
