@@ -16,29 +16,40 @@
 //! 4. **sharded fleet** — `ShardRouter` places the streams across
 //!    `--shards` independent backends ("many bitstreams"), drives one
 //!    pipelined round window per shard concurrently, and prints the
-//!    per-shard load report.
+//!    per-shard load report;
+//! 5. **chaos** (`--chaos`, PR 7) — the pipelined workload again, but
+//!    through a `ChaosBackend` injecting a deterministic schedule of
+//!    transient submit faults; the engine's `RetryPolicy` absorbs every
+//!    one and the depth maps stay bit-identical to the fault-free runs;
+//! 6. **kill-and-restart** (`--checkpoint-dir DIR`, PR 7) — half the
+//!    frames are served, every session is checkpointed to `DIR` via
+//!    `SessionStore`, the server is dropped ("crash"), and a fresh
+//!    server rebuilt purely from the on-disk TLV checkpoints serves the
+//!    rest — bit-identical to the uninterrupted run.
 //!
 //! All runs must produce bit-identical depth maps (asserted below);
-//! batching, pipelining and sharding are latency optimisations only.
-//! Runs from a clean checkout — no `artifacts/` needed: the segments
-//! are served by the pure-software RefBackend with synthetic
-//! calibration, and each stream gets its own procedurally generated
-//! video.
+//! batching, pipelining, sharding, retries and checkpoint/restore are
+//! latency/durability mechanisms only. Runs from a clean checkout — no
+//! `artifacts/` needed: the segments are served by the pure-software
+//! RefBackend with synthetic calibration, and each stream gets its own
+//! procedurally generated video.
 //!
 //!     cargo run --release --example multi_stream \
 //!         [-- --streams N --frames M --conv-threads T \
-//!             --pipeline-depth K --shards S]
+//!             --pipeline-depth K --shards S --chaos \
+//!             --checkpoint-dir DIR]
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use fadec::config;
 use fadec::coordinator::{
-    PipelineOptions, ShardRouter, ShardRouterOptions, StreamServer,
+    PipelineOptions, RetryPolicy, SessionStore, ShardRouter,
+    ShardRouterOptions, StreamServer,
 };
 use fadec::data::dataset::Scene;
 use fadec::poses::Mat4;
-use fadec::runtime::{HwBackend, RefBackend};
+use fadec::runtime::{ChaosBackend, ChaosOptions, HwBackend, RefBackend};
 use fadec::tensor::TensorF;
 use fadec::util::Args;
 
@@ -49,6 +60,8 @@ fn main() -> anyhow::Result<()> {
     let conv_threads = args.get_usize("conv-threads", 2);
     let pipeline_depth = args.get_usize("pipeline-depth", 2);
     let shards = args.get_usize("shards", 2);
+    let chaos_mode = args.has("chaos");
+    let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
 
     // one backend instance, shared by every stream; the server's engine
     // applies --conv-threads to it (output channels — and, in batched
@@ -272,5 +285,135 @@ fn main() -> anyhow::Result<()> {
     }
     println!("bit-exact: sharded fleet == per-stream stepping\n");
     println!("{}", router.report());
+
+    // --- mode 5 (--chaos): pipelined serving under injected faults --------
+    // A deterministic transient-fault schedule: with rate 1.0 and
+    // heal_after 4, exactly the first four submissions fault, then the
+    // backend heals — the retry budget (6 attempts) absorbs all of them.
+    if chaos_mode {
+        let inner = Arc::new(RefBackend::synthetic(0));
+        let qp = Arc::clone(inner.qp());
+        let chaos_backend = Arc::new(ChaosBackend::new(
+            inner,
+            ChaosOptions {
+                seed: 13,
+                submit_fault_rate: 1.0,
+                heal_after: Some(4),
+                ..Default::default()
+            },
+        ));
+        let mut chaos_server = StreamServer::new(
+            Arc::clone(&chaos_backend) as Arc<dyn HwBackend>,
+            qp,
+            PipelineOptions {
+                conv_threads,
+                retry: RetryPolicy {
+                    backoff: Duration::from_micros(50),
+                    ..RetryPolicy::with_attempts(6)
+                },
+                ..Default::default()
+            },
+        )?;
+        let chaos_streams: Vec<usize> =
+            (0..n_streams).map(|_| chaos_server.open_stream()).collect();
+        let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..frames)
+            .map(|i| {
+                chaos_streams
+                    .iter()
+                    .map(|&s| (s, &all_imgs[i][s], &scenes[s].poses[i]))
+                    .collect()
+            })
+            .collect();
+        let mut results =
+            chaos_server.run_pipelined(&rounds, pipeline_depth)?;
+        let rec = chaos_server.recovery_stats();
+        println!(
+            "chaos mode: {} faults injected, absorbed by {} retries \
+             ({} giveups)",
+            chaos_backend.faults_injected(),
+            rec.retries,
+            rec.giveups,
+        );
+        let mut last = results.pop().expect("at least one round");
+        last.sort_by_key(|(sid, _)| *sid);
+        assert_eq!(seq_last.len(), last.len());
+        for (s, (a, (_, o))) in seq_last.iter().zip(&last).enumerate() {
+            assert_eq!(
+                a.data(),
+                o.depth.data(),
+                "stream {s}: chaotic serving diverged from per-stream \
+                 stepping"
+            );
+        }
+        println!("bit-exact: chaotic serving == fault-free serving\n");
+        println!("{}", chaos_server.report());
+    }
+
+    // --- mode 6 (--checkpoint-dir DIR): kill-and-restart durability -------
+    // Serve half the frames, checkpoint every session, drop the server
+    // (the "crash"), rebuild a fresh one purely from the on-disk TLV
+    // checkpoints, and finish the workload bit-exactly.
+    if let Some(dir) = ckpt_dir {
+        let make = || -> anyhow::Result<(StreamServer, Arc<RefBackend>)> {
+            let backend = Arc::new(RefBackend::synthetic(0));
+            let qp = Arc::clone(backend.qp());
+            let server = StreamServer::new(
+                Arc::clone(&backend) as Arc<dyn HwBackend>,
+                qp,
+                PipelineOptions { conv_threads, ..Default::default() },
+            )?;
+            Ok((server, backend))
+        };
+        let (mut server, backend) = make()?;
+        let mut store = SessionStore::open(
+            &dir,
+            n_streams.max(1),
+            backend.manifest(),
+            backend.qp().as_ref(),
+        )?;
+        let ids: Vec<usize> =
+            (0..n_streams).map(|_| server.open_stream()).collect();
+        let cut = frames / 2;
+        for i in 0..cut {
+            for &s in &ids {
+                server.step_stream(s, &all_imgs[i][s], &scenes[s].poses[i])?;
+            }
+        }
+        let mut bytes = 0u64;
+        for &s in &ids {
+            bytes += store.save(server.session(s))?;
+        }
+        drop(server); // the "crash": every in-memory session is gone
+        let (mut server, _) = make()?;
+        for id in store.list_checkpoints()? {
+            let session = store.load(id, server.engine().qp().as_ref())?;
+            server.open_stream_restored(session)?;
+        }
+        let mut ckpt_last: Vec<TensorF> = Vec::new();
+        for i in cut..frames {
+            ckpt_last.clear();
+            for &s in &ids {
+                let out = server
+                    .step_stream(s, &all_imgs[i][s], &scenes[s].poses[i])?;
+                ckpt_last.push(out.depth);
+            }
+        }
+        assert_eq!(seq_last.len(), ckpt_last.len());
+        for (s, (a, b)) in seq_last.iter().zip(&ckpt_last).enumerate() {
+            assert_eq!(
+                a.data(),
+                b.data(),
+                "stream {s}: restart from checkpoint diverged from the \
+                 uninterrupted run"
+            );
+        }
+        println!(
+            "kill-and-restart: {n_streams} sessions checkpointed \
+             ({:.1} KiB) to {}, server rebuilt from disk, frames \
+             {cut}..{frames} served bit-exactly",
+            bytes as f64 / 1024.0,
+            dir.display(),
+        );
+    }
     Ok(())
 }

@@ -14,6 +14,12 @@
 //!    deployment would see. These records carry `shards`/`migrations`
 //!    fields; the `_rebalance` variant pins every stream onto shard 0
 //!    and lets live migration drain the skew.
+//! 5. **durable / chaotic** (PR 7) — the `_checkpoint_restart` record
+//!    serves half the frames, checkpoints every session, rebuilds the
+//!    server purely from disk and finishes (fields `checkpoint_bytes`,
+//!    `restore_seconds`); the `_chaos_retry` record serves the whole
+//!    workload under a seeded transient-fault schedule absorbed by the
+//!    retry policy (field `retries`).
 //!
 //! Records merge into `BENCH_serve.json` (`util::benchjson` schema).
 //! One frame is the unit of work: `ns_per_iter` is nanoseconds per
@@ -35,14 +41,15 @@
 //! cold timings never overwrite the real perf record.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use fadec::coordinator::{
-    Placement, PipelineOptions, ShardRouter, ShardRouterOptions, StreamServer,
+    Placement, PipelineOptions, RetryPolicy, SessionStore, ShardRouter,
+    ShardRouterOptions, StreamServer,
 };
 use fadec::data::dataset::Scene;
 use fadec::poses::Mat4;
-use fadec::runtime::{HwBackend, RefBackend};
+use fadec::runtime::{ChaosBackend, ChaosOptions, HwBackend, RefBackend};
 use fadec::tensor::TensorF;
 use fadec::util::benchjson::{self, BenchRecord};
 use fadec::util::Args;
@@ -263,6 +270,126 @@ fn main() {
             total as f64 / crit.max(1e-9),
             router.migrations(),
             router.imbalance_ratio(),
+        );
+    }
+
+    // --- durable restart: checkpoint every stream mid-workload, rebuild
+    // the server purely from disk, finish serving (PR 7) -----------------
+    {
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_bench_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (mut server, backend) = make_server();
+        let mut store = SessionStore::open(
+            &dir,
+            n_streams.max(1),
+            backend.manifest(),
+            backend.qp().as_ref(),
+        )
+        .expect("session store");
+        let streams: Vec<usize> =
+            (0..n_streams).map(|_| server.open_stream()).collect();
+        let cut = n_frames / 2;
+        let t0 = Instant::now();
+        for i in 0..cut {
+            for &s in &streams {
+                server
+                    .step_stream(s, &imgs[i][s], &scenes[s].poses[i])
+                    .expect("step");
+            }
+        }
+        for &s in &streams {
+            store.save(server.session(s)).expect("checkpoint");
+        }
+        drop(server);
+        // the "restart": a fresh server adopts every on-disk session
+        let (mut server, _) = make_server();
+        let r0 = Instant::now();
+        for id in store.list_checkpoints().expect("list checkpoints") {
+            let session = store
+                .load(id, server.engine().qp().as_ref())
+                .expect("restore");
+            server.open_stream_restored(session).expect("adopt");
+        }
+        let restore_s = r0.elapsed().as_secs_f64();
+        for i in cut..n_frames {
+            for &s in &streams {
+                server
+                    .step_stream(s, &imgs[i][s], &scenes[s].poses[i])
+                    .expect("step");
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let ckpt_bytes = store.stats().checkpoint_bytes as f64;
+        let mut r = rec("serve_checkpoint_restart", &shape, wall, total);
+        r.checkpoint_bytes = Some(ckpt_bytes);
+        r.restore_seconds = Some(restore_s);
+        records.push(r);
+        println!(
+            "checkpoint restart: {:7.3} s wall incl. {:.1} ms restore, \
+             {:.2} MiB checkpointed",
+            wall,
+            restore_s * 1e3,
+            ckpt_bytes / (1024.0 * 1024.0),
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // --- chaos + retry: the whole workload under a seeded transient-
+    // fault schedule, absorbed by the recovery policy (bit-exactness is
+    // pinned by rust/tests/recovery.rs) ----------------------------------
+    {
+        let inner = Arc::new(
+            RefBackend::synthetic(5).with_conv_threads(CONV_THREADS),
+        );
+        let qp = Arc::clone(inner.qp());
+        let chaos = Arc::new(ChaosBackend::new(
+            inner,
+            ChaosOptions {
+                seed: 11,
+                submit_fault_rate: 0.25,
+                wait_fault_rate: 0.25,
+                heal_after: Some(8),
+                ..Default::default()
+            },
+        ));
+        let mut server = StreamServer::new(
+            Arc::clone(&chaos) as Arc<dyn HwBackend>,
+            qp,
+            PipelineOptions {
+                conv_threads: CONV_THREADS,
+                retry: RetryPolicy {
+                    backoff: Duration::from_micros(100),
+                    ..RetryPolicy::with_attempts(10)
+                },
+                ..Default::default()
+            },
+        )
+        .expect("chaotic server");
+        let streams: Vec<usize> =
+            (0..n_streams).map(|_| server.open_stream()).collect();
+        let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..n_frames)
+            .map(|i| {
+                streams
+                    .iter()
+                    .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                    .collect()
+            })
+            .collect();
+        let t0 = Instant::now();
+        server.run_pipelined(&rounds, 2).expect("chaotic pipelined");
+        let wall = t0.elapsed().as_secs_f64();
+        let recov = server.recovery_stats();
+        let mut r = rec("serve_chaos_retry", &shape, wall, total);
+        r.retries = Some(recov.retries);
+        records.push(r);
+        println!(
+            "chaos retry: {:7.3} s wall, {} faults absorbed by {} retries \
+             ({} giveups)",
+            wall,
+            chaos.faults_injected(),
+            recov.retries,
+            recov.giveups,
         );
     }
 

@@ -1,0 +1,448 @@
+//! Checkpoint layer — durable session state with LRU paging (PR 7).
+//!
+//! A [`StreamSession`] is a self-contained value (the property live
+//! migration is built on); [`SessionStore`] makes it a *durable* one.
+//! Every checkpoint is a TLV container ([`StreamSession::to_tlv`])
+//! stamped with the fingerprints of the serving configuration —
+//! [`Manifest::fingerprint`] and [`QuantParams::fingerprint`] — and a
+//! restore refuses a file written against different served bits instead
+//! of silently producing garbage depths.
+//!
+//! The store also pages: it holds up to `capacity` sessions resident
+//! and evicts the least-recently-used one to disk when a check-in
+//! overflows the budget, restoring on the next check-out. Because a
+//! checkpoint captures *every* cross-frame byte of a stream, a session
+//! that went to disk and came back is bit-identical to one that stayed
+//! resident — `rust/tests/recovery.rs` pins suspend/evict/restore
+//! against continuous serving, and the router's
+//! `migrate_stream_via_checkpoint` ships sessions between shards
+//! through the same serializer.
+//!
+//! All paging traffic is accounted in a [`RecoveryStats`] (evictions,
+//! restores, checkpoint bytes) that servers fold into their reports.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::manifest::Manifest;
+use crate::data::tlv::{TlvEntry, TlvFile, TlvPayload};
+use crate::metrics::RecoveryStats;
+use crate::model::weights::QuantParams;
+use crate::tensor::Tensor;
+
+use super::session::StreamSession;
+
+/// TLV entry holding the serving-configuration fingerprints
+/// (`[manifest_hi, manifest_lo, qp_hi, qp_lo]` as i32 halves).
+const FP_ENTRY: &str = "store.fingerprints";
+
+fn split_u64(v: u64) -> [i32; 2] {
+    [(v >> 32) as u32 as i32, v as u32 as i32]
+}
+
+fn join_u64(hi: i32, lo: i32) -> u64 {
+    ((hi as u32 as u64) << 32) | (lo as u32 as u64)
+}
+
+/// Durable, paged home for stream sessions. See the module docs.
+pub struct SessionStore {
+    dir: PathBuf,
+    /// Max sessions held resident; the LRU overflow goes to disk.
+    capacity: usize,
+    manifest_fp: u64,
+    qp_fp: u64,
+    /// Resident sessions with their last-touch tick (higher = warmer).
+    resident: Vec<(u64, StreamSession)>,
+    tick: u64,
+    stats: RecoveryStats,
+}
+
+impl SessionStore {
+    /// Open (creating the directory if needed) a store bound to one
+    /// serving configuration. `capacity` is the residency budget
+    /// (>= 1); checkpoints written by a store over a *different*
+    /// manifest or parameter set will be refused at restore.
+    pub fn open(
+        dir: impl Into<PathBuf>,
+        capacity: usize,
+        manifest: &Manifest,
+        qp: &QuantParams,
+    ) -> Result<Self> {
+        ensure!(capacity >= 1, "session store capacity must be >= 1");
+        let dir = dir.into();
+        fs::create_dir_all(&dir).with_context(|| {
+            format!("creating checkpoint directory {}", dir.display())
+        })?;
+        Ok(SessionStore {
+            dir,
+            capacity,
+            manifest_fp: manifest.fingerprint(),
+            qp_fp: qp.fingerprint(),
+            resident: Vec::new(),
+            tick: 0,
+            stats: RecoveryStats::default(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_resident(&self, id: usize) -> bool {
+        self.resident.iter().any(|(_, s)| s.id == id)
+    }
+
+    /// Where stream `id`'s checkpoint lives (whether or not it exists).
+    pub fn checkpoint_path(&self, id: usize) -> PathBuf {
+        self.dir.join(format!("session_{id:06}.tlv"))
+    }
+
+    pub fn has_checkpoint(&self, id: usize) -> bool {
+        self.checkpoint_path(id).is_file()
+    }
+
+    /// Stream ids with a checkpoint on disk, ascending — what a
+    /// kill-and-restart rebuild enumerates.
+    pub fn list_checkpoints(&self) -> Result<Vec<usize>> {
+        let mut ids = Vec::new();
+        let entries = fs::read_dir(&self.dir).with_context(|| {
+            format!("listing checkpoint directory {}", self.dir.display())
+        })?;
+        for entry in entries {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(id) = name
+                .strip_prefix("session_")
+                .and_then(|r| r.strip_suffix(".tlv"))
+                .and_then(|d| d.parse::<usize>().ok())
+            {
+                ids.push(id);
+            }
+        }
+        ids.sort_unstable();
+        Ok(ids)
+    }
+
+    /// Paging + fault accounting accumulated by this store.
+    pub fn stats(&self) -> &RecoveryStats {
+        &self.stats
+    }
+
+    pub fn take_stats(&mut self) -> RecoveryStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Checkpoint one session to disk (fingerprint-stamped); returns the
+    /// bytes written. The session itself is untouched — this is the
+    /// primitive `check_in` eviction, `flush` and ship-restore migration
+    /// are built from.
+    pub fn save(&mut self, session: &StreamSession) -> Result<u64> {
+        let mut tlv = session
+            .to_tlv()
+            .with_context(|| format!("serializing stream {}", session.id))?;
+        let [m_hi, m_lo] = split_u64(self.manifest_fp);
+        let [q_hi, q_lo] = split_u64(self.qp_fp);
+        tlv.insert(
+            FP_ENTRY,
+            TlvEntry {
+                exp: 0,
+                payload: TlvPayload::I32(Tensor::from_vec(
+                    &[4],
+                    vec![m_hi, m_lo, q_hi, q_lo],
+                )),
+            },
+        )?;
+        let bytes = tlv.to_bytes()?;
+        let path = self.checkpoint_path(session.id);
+        fs::write(&path, &bytes)
+            .with_context(|| format!("writing checkpoint {}", path.display()))?;
+        self.stats.checkpoint_bytes += bytes.len() as u64;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Restore stream `id` from its on-disk checkpoint, refusing files
+    /// written against a different manifest or parameter set.
+    pub fn load(
+        &mut self,
+        id: usize,
+        qp: &QuantParams,
+    ) -> Result<StreamSession> {
+        let path = self.checkpoint_path(id);
+        let tlv = TlvFile::load(&path)
+            .with_context(|| format!("restoring stream {id}"))?;
+        let fp = tlv
+            .get(FP_ENTRY)
+            .context("checkpoint has no serving-configuration fingerprint")?
+            .as_i32()?;
+        ensure!(
+            fp.len() == 4,
+            "fingerprint entry has {} halves, 4 expected",
+            fp.len()
+        );
+        let d = fp.data();
+        let (m, q) = (join_u64(d[0], d[1]), join_u64(d[2], d[3]));
+        ensure!(
+            m == self.manifest_fp,
+            "checkpoint for stream {id} was written against a different \
+             segment manifest (fingerprint {m:016x}, serving {:016x})",
+            self.manifest_fp
+        );
+        ensure!(
+            q == self.qp_fp,
+            "checkpoint for stream {id} was written against different \
+             quantized parameters (fingerprint {q:016x}, serving {:016x})",
+            self.qp_fp
+        );
+        let session = StreamSession::from_tlv(&tlv, qp)
+            .with_context(|| format!("restoring stream {id}"))?;
+        ensure!(
+            session.id == id,
+            "checkpoint {} holds stream {}, expected {id}",
+            path.display(),
+            session.id
+        );
+        self.stats.restores += 1;
+        Ok(session)
+    }
+
+    /// Hand a session to the store. It becomes the warmest resident;
+    /// if the residency budget overflows, the least-recently-used
+    /// session is checkpointed to disk and dropped (an *eviction* —
+    /// restored transparently by the next `check_out`).
+    pub fn check_in(&mut self, session: StreamSession) -> Result<()> {
+        // a re-check-in of a resident id replaces the stale value
+        self.resident.retain(|(_, s)| s.id != session.id);
+        self.tick += 1;
+        self.resident.push((self.tick, session));
+        while self.resident.len() > self.capacity {
+            let i = self
+                .resident
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(i, _)| i)
+                .expect("resident set is non-empty");
+            let (tick, cold) = self.resident.remove(i);
+            match self.save(&cold) {
+                Ok(_) => self.stats.evictions += 1,
+                Err(e) => {
+                    // failed eviction keeps the session resident (and
+                    // over budget) rather than losing state
+                    self.resident.push((tick, cold));
+                    return Err(e.context("evicting LRU session to disk"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Take stream `id` out of the store for serving: a resident hit is
+    /// a plain move, an evicted session is restored from disk. Either
+    /// way the caller owns the session until the next `check_in` —
+    /// checked-out sessions can never be evicted under it.
+    pub fn check_out(
+        &mut self,
+        id: usize,
+        qp: &QuantParams,
+    ) -> Result<StreamSession> {
+        if let Some(i) = self.resident.iter().position(|(_, s)| s.id == id) {
+            return Ok(self.resident.remove(i).1);
+        }
+        self.load(id, qp)
+    }
+
+    /// Checkpoint every resident session (without evicting any);
+    /// returns total bytes written. After a flush, a brand-new store
+    /// over the same directory can rebuild every stream from disk —
+    /// the kill-and-restart path.
+    pub fn flush(&mut self) -> Result<u64> {
+        let mut total = 0;
+        let ids: Vec<usize> =
+            self.resident.iter().map(|(_, s)| s.id).collect();
+        for id in ids {
+            let i = self
+                .resident
+                .iter()
+                .position(|(_, s)| s.id == id)
+                .expect("id collected from resident set");
+            let (tick, session) = self.resident.remove(i);
+            let r = self.save(&session);
+            self.resident.push((tick, session));
+            total += r?;
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::coordinator::pipeline::{PipelineEngine, PipelineOptions};
+    use crate::data::dataset::Scene;
+    use crate::runtime::{HwBackend, RefBackend};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fadec_ckpt_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn engine(seed: u64) -> PipelineEngine {
+        let backend = Arc::new(RefBackend::synthetic(seed));
+        let qp = Arc::clone(backend.qp());
+        PipelineEngine::new(
+            backend as Arc<dyn HwBackend>,
+            qp,
+            PipelineOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn paged_serving_is_bit_exact_vs_continuous() {
+        let dir = tmp_dir("paged");
+        let eng = engine(17);
+        let manifest = eng.backend().manifest().clone();
+        let qp = Arc::clone(eng.qp());
+        // capacity 1 with two streams: every alternation pages the
+        // other stream through disk
+        let mut store = SessionStore::open(&dir, 1, &manifest, &qp).unwrap();
+        store.check_in(eng.new_session(0)).unwrap();
+        store.check_in(eng.new_session(1)).unwrap();
+        let mut cont = [eng.new_session(0), eng.new_session(1)];
+        let scenes =
+            [Scene::synthetic("pg0", 3, 40), Scene::synthetic("pg1", 3, 41)];
+        for f in 0..3 {
+            for sid in 0..2 {
+                let img = scenes[sid].normalized_image(f);
+                let pose = scenes[sid].poses[f];
+                let want =
+                    eng.step_session(&mut cont[sid], &img, &pose).unwrap();
+                let mut s = store.check_out(sid, &qp).unwrap();
+                let got = eng.step_session(&mut s, &img, &pose).unwrap();
+                store.check_in(s).unwrap();
+                assert_eq!(
+                    want.depth.data(),
+                    got.depth.data(),
+                    "stream {sid} frame {f}: paged serving diverged"
+                );
+            }
+        }
+        let st = store.stats();
+        assert!(st.evictions >= 5, "capacity 1 pages constantly");
+        assert!(st.restores >= 5);
+        assert!(st.checkpoint_bytes > 0);
+        assert!(st.any());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_session() {
+        let dir = tmp_dir("lru");
+        let eng = engine(5);
+        let manifest = eng.backend().manifest().clone();
+        let qp = Arc::clone(eng.qp());
+        let mut store = SessionStore::open(&dir, 2, &manifest, &qp).unwrap();
+        store.check_in(eng.new_session(0)).unwrap();
+        store.check_in(eng.new_session(1)).unwrap();
+        // touch 0 so 1 becomes the LRU, then overflow with 2
+        let s0 = store.check_out(0, &qp).unwrap();
+        store.check_in(s0).unwrap();
+        store.check_in(eng.new_session(2)).unwrap();
+        assert!(store.is_resident(0));
+        assert!(!store.is_resident(1), "coldest session went to disk");
+        assert!(store.is_resident(2));
+        assert!(store.has_checkpoint(1));
+        assert_eq!(store.stats().evictions, 1);
+        assert_eq!(store.list_checkpoints().unwrap(), vec![1]);
+        // and it comes back
+        let s1 = store.check_out(1, &qp).unwrap();
+        assert_eq!(s1.id, 1);
+        assert_eq!(store.stats().restores, 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn restore_refuses_foreign_fingerprints() {
+        let dir = tmp_dir("fp");
+        let eng = engine(0);
+        let manifest = eng.backend().manifest().clone();
+        let qp = Arc::clone(eng.qp());
+        let mut store = SessionStore::open(&dir, 1, &manifest, &qp).unwrap();
+        store.save(&eng.new_session(0)).unwrap();
+        // same manifest, different parameter values
+        let other_qp = QuantParams::synthetic(&manifest, 99);
+        let mut foreign =
+            SessionStore::open(&dir, 1, &manifest, &other_qp).unwrap();
+        let err = foreign.load(0, &other_qp).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("quantized parameters"),
+            "{err:#}"
+        );
+        // different segment catalogue
+        let mut short = Manifest::synthetic();
+        short.segments.pop();
+        let short_qp = QuantParams::synthetic(&short, 0);
+        let mut foreign =
+            SessionStore::open(&dir, 1, &short, &short_qp).unwrap();
+        let err = foreign.load(0, &short_qp).unwrap_err();
+        assert!(format!("{err:#}").contains("segment manifest"), "{err:#}");
+        // an unstamped TLV (not written by a store) is refused too
+        let bare = eng.new_session(3).to_tlv().unwrap();
+        bare.save(&store.checkpoint_path(3)).unwrap();
+        let err = store.load(3, &qp).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_checkpoint_errors_with_context() {
+        let dir = tmp_dir("missing");
+        let eng = engine(2);
+        let manifest = eng.backend().manifest().clone();
+        let qp = Arc::clone(eng.qp());
+        let mut store = SessionStore::open(&dir, 1, &manifest, &qp).unwrap();
+        let err = store.check_out(42, &qp).unwrap_err();
+        assert!(format!("{err:#}").contains("restoring stream 42"), "{err:#}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flush_makes_a_cold_rebuild_possible() {
+        let dir = tmp_dir("flush");
+        let eng = engine(9);
+        let manifest = eng.backend().manifest().clone();
+        let qp = Arc::clone(eng.qp());
+        let scene = Scene::synthetic("fl", 2, 8);
+        let mut store = SessionStore::open(&dir, 4, &manifest, &qp).unwrap();
+        let mut s = eng.new_session(0);
+        for f in 0..2 {
+            eng.step_session(&mut s, &scene.normalized_image(f), &scene.poses[f])
+                .unwrap();
+        }
+        let frames = s.frames_done();
+        store.check_in(s).unwrap();
+        let bytes = store.flush().unwrap();
+        assert!(bytes > 0);
+        assert!(store.is_resident(0), "flush does not evict");
+        // a brand-new store over the same directory sees the stream
+        let mut rebuilt = SessionStore::open(&dir, 4, &manifest, &qp).unwrap();
+        assert_eq!(rebuilt.list_checkpoints().unwrap(), vec![0]);
+        let s = rebuilt.check_out(0, &qp).unwrap();
+        assert_eq!(s.frames_done(), frames);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

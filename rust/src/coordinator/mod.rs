@@ -13,8 +13,13 @@
 //! * `shard` — the **Shard layer**: `ShardRouter` places sessions across
 //!   K independent backends, drives one pipelined round window per shard
 //!   concurrently, and live-migrates streams between shards on load
-//!   imbalance.
+//!   imbalance (or on shard death, via checkpoint failover).
+//! * `checkpoint` — the **Durability layer**: `SessionStore` pages
+//!   fingerprint-stamped session checkpoints to disk (LRU residency),
+//!   backing suspend/resume, serialize-ship-restore migration and
+//!   kill-and-restart recovery.
 
+pub mod checkpoint;
 pub mod extern_link;
 pub mod pipeline;
 pub mod profiler;
@@ -22,10 +27,11 @@ pub mod server;
 pub mod session;
 pub mod shard;
 
+pub use checkpoint::SessionStore;
 pub use extern_link::{ExternLink, ExternRecord, ExternStats, Pending};
 pub use pipeline::{
     Coordinator, FrameOutput, FrameStage, PipelineEngine, PipelineOptions,
-    RoundInFlight, SegmentHandles,
+    RetryPolicy, RoundInFlight, SegmentHandles,
 };
 pub use profiler::{overlap_seconds, FrameProfile, Lane, Profiler, StageRecord};
 pub use server::StreamServer;

@@ -57,13 +57,15 @@
 use std::collections::HashMap;
 use std::mem;
 use std::path::Path;
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::{self, CVD_BODY_K3, N_HYPOTHESES, SW_THREADS};
 use crate::data::manifest::Manifest;
+use crate::metrics::RecoveryStats;
 use crate::model::specs::cvd_carry_name;
 use crate::model::sw;
 use crate::model::weights::QuantParams;
@@ -72,6 +74,7 @@ use crate::poses::Mat4;
 use crate::quant::{dequantize_tensor, quantize_tensor, QTensor};
 use crate::runtime::{HwBackend, HwRuntime, RefBackend, SegmentId, SubmitHandle};
 use crate::tensor::TensorF;
+use crate::util::Rng;
 
 use super::extern_link::{ExternStats, ExternLink, Pending};
 use super::profiler::{FrameProfile, Lane, Profiler};
@@ -87,6 +90,66 @@ pub struct FrameOutput {
     pub started: Instant,
     /// Boundary tensors (only when tracing for the golden tests).
     pub trace: Option<HashMap<String, QTensor>>,
+}
+
+/// Recovery policy for transient backend faults (see the fault/retry
+/// contract in the `runtime` module docs). Every HW call the engine
+/// issues — blocking `run_batch`, queued `submit_batch`/wait, and the
+/// pipelined FeFs submit/complete pair — is wrapped in an attempt loop:
+/// a failed attempt never mutates a session (sessions change only at
+/// `Commit`) and never consumes the call's inputs (each attempt gets
+/// O(1) CoW handle clones), so a retry is a *fresh submission* of
+/// bit-identical inputs and a recovered round is bit-identical to a
+/// fault-free one.
+///
+/// The default (`max_attempts: 1`) disables retry entirely and keeps
+/// the queued hot path allocation-free — the engine then moves inputs
+/// into the backend exactly as before instead of keeping replay
+/// handles. Servers opt in via `PipelineOptions::retry`.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts per HW call (1 = no retry).
+    pub max_attempts: usize,
+    /// Backoff before the first retry; doubles on each further retry.
+    pub backoff: Duration,
+    /// Seed for the deterministic jitter (0..25% of the backoff) added
+    /// to each delay so lockstep retries across shards de-correlate.
+    pub jitter_seed: u64,
+    /// Budget for the *extra* time one HW call may spend retrying; once
+    /// exhausted the call gives up even if attempts remain.
+    pub round_timeout: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            backoff: Duration::from_micros(200),
+            jitter_seed: 0x7_1e57,
+            round_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Retry up to `n` total attempts with the default backoff curve.
+    pub fn with_attempts(n: usize) -> Self {
+        RetryPolicy { max_attempts: n.max(1), ..Default::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 1
+    }
+
+    /// Delay before retry `retry_idx` (0-based): exponential in the
+    /// retry index, plus a deterministic seed-derived jitter.
+    fn delay(&self, retry_idx: usize) -> Duration {
+        let base = self
+            .backoff
+            .saturating_mul(1u32 << retry_idx.min(10) as u32);
+        let mut rng = Rng::new(self.jitter_seed.wrapping_add(retry_idx as u64));
+        base + base.mul_f64(0.25 * rng.unit_f32() as f64)
+    }
 }
 
 /// Coordinator options.
@@ -108,11 +171,20 @@ pub struct PipelineOptions {
     /// lives on the (possibly shared) backend: the last engine built over
     /// it with a non-zero value wins.
     pub conv_threads: usize,
+    /// Fault-recovery policy for HW calls. The default disables retry
+    /// (and keeps the queued hot path allocation-free); fault-tolerant
+    /// serving opts in with e.g. `RetryPolicy::with_attempts(5)`.
+    pub retry: RetryPolicy,
 }
 
 impl Default for PipelineOptions {
     fn default() -> Self {
-        PipelineOptions { overlap: true, sw_threads: SW_THREADS, conv_threads: 0 }
+        PipelineOptions {
+            overlap: true,
+            sw_threads: SW_THREADS,
+            conv_threads: 0,
+            retry: RetryPolicy::default(),
+        }
     }
 }
 
@@ -358,6 +430,11 @@ impl<'f> FrameTask<'f> {
 pub struct RoundInFlight<'f> {
     tasks: Vec<FrameTask<'f>>,
     fe_fs: Option<SubmitHandle>,
+    /// O(1) CoW copies of the submitted FeFs inputs, kept only when the
+    /// retry policy is enabled so a failed submission/wait can be
+    /// replayed as a fresh submission of bit-identical handles. Empty
+    /// (and allocation-free) with retry off.
+    fe_fs_batch: Vec<Vec<QTensor>>,
 }
 
 impl RoundInFlight<'_> {
@@ -376,6 +453,9 @@ pub struct PipelineEngine {
     link: ExternLink,
     handles: SegmentHandles,
     opts: PipelineOptions,
+    /// Fault/retry accounting (see [`RetryPolicy`]); drained by
+    /// [`PipelineEngine::take_recovery_stats`].
+    recovery: Mutex<RecoveryStats>,
 }
 
 impl PipelineEngine {
@@ -394,6 +474,7 @@ impl PipelineEngine {
             link: ExternLink::new(opts.sw_threads),
             handles,
             opts,
+            recovery: Mutex::new(RecoveryStats::default()),
         })
     }
 
@@ -425,6 +506,21 @@ impl PipelineEngine {
 
     pub fn take_extern_stats(&self) -> ExternStats {
         self.link.take_stats()
+    }
+
+    /// Snapshot of the engine's fault/retry accounting.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.recovery.lock().expect("recovery stats poisoned").clone()
+    }
+
+    /// Drain the fault/retry accounting (servers fold it into their own
+    /// running totals).
+    pub fn take_recovery_stats(&self) -> RecoveryStats {
+        mem::take(&mut *self.recovery.lock().expect("recovery stats poisoned"))
+    }
+
+    fn note_recovery(&self, f: impl FnOnce(&mut RecoveryStats)) {
+        f(&mut self.recovery.lock().expect("recovery stats poisoned"));
     }
 
     /// Run one frame of one stream through the whole FSM.
@@ -497,9 +593,9 @@ impl PipelineEngine {
             .map(|&(img, pose)| FrameTask::new(img, pose, false))
             .collect();
         self.stage_quantize_image(&mut tasks);
-        let handle =
+        let (handle, fe_fs_batch) =
             self.stage_fe_fs_submit(self.backend.as_ref(), &mut tasks)?;
-        Ok(RoundInFlight { tasks, fe_fs: Some(handle) })
+        Ok(RoundInFlight { tasks, fe_fs: Some(handle), fe_fs_batch })
     }
 
     /// Resume a begun round and walk it to completion. `sessions` must
@@ -526,7 +622,7 @@ impl PipelineEngine {
         // them before the FeFs wait keeps the Fig-5 intra-frame overlap.
         self.stage_spawn_sw_tasks(ts, sessions);
         let handle = round.fe_fs.take().expect("begun round has FeFs in flight");
-        self.stage_fe_fs_complete(handle, ts)?;
+        self.stage_fe_fs_complete(handle, &round.fe_fs_batch, ts)?;
         self.stage_cvf_finish(ts);
         self.stage_cve(hw, ts, true)?;
         self.stage_join_hidden_correction(ts);
@@ -613,14 +709,94 @@ impl PipelineEngine {
         batch: Vec<Vec<QTensor>>,
         queued: bool,
     ) -> Result<(Vec<Vec<QTensor>>, Instant, Instant)> {
+        if !self.opts.retry.enabled() {
+            // retry off: the original move-through path, allocation-free
+            // when queued (inputs transfer outright, no replay handles)
+            return if queued {
+                hw.submit_batch(id, batch)?.wait_batch_timed()
+            } else {
+                let refs: Vec<Vec<&QTensor>> =
+                    batch.iter().map(|ins| ins.iter().collect()).collect();
+                let a = Instant::now();
+                let outs = hw.run_batch(id, &refs)?;
+                Ok((outs, a, Instant::now()))
+            };
+        }
+        let name = hw.segment_desc(id).name.clone();
+        self.with_retry(&name, || self.try_hw_batch(hw, id, &batch, queued))
+    }
+
+    /// One attempt of a HW call against a borrowed batch: the inputs
+    /// stay with the caller (the queued path submits O(1) handle
+    /// clones), so a failed attempt leaves them intact for replay.
+    fn try_hw_batch(
+        &self,
+        hw: &dyn HwBackend,
+        id: SegmentId,
+        batch: &[Vec<QTensor>],
+        queued: bool,
+    ) -> Result<(Vec<Vec<QTensor>>, Instant, Instant)> {
         if queued {
-            hw.submit_batch(id, batch)?.wait_batch_timed()
+            let handle = match hw.submit_batch(id, batch.to_vec()) {
+                Ok(h) => h,
+                Err(e) => {
+                    self.note_recovery(|r| r.submit_faults += 1);
+                    return Err(e);
+                }
+            };
+            handle.wait_batch_timed().map_err(|e| {
+                self.note_recovery(|r| r.wait_faults += 1);
+                e
+            })
         } else {
             let refs: Vec<Vec<&QTensor>> =
                 batch.iter().map(|ins| ins.iter().collect()).collect();
             let a = Instant::now();
-            let outs = hw.run_batch(id, &refs)?;
+            let outs = hw.run_batch(id, &refs).map_err(|e| {
+                self.note_recovery(|r| r.wait_faults += 1);
+                e
+            })?;
             Ok((outs, a, Instant::now()))
+        }
+    }
+
+    /// The attempt loop behind every retried HW call: run `attempt`
+    /// until it succeeds, the policy's attempts are exhausted, or the
+    /// retry time budget runs out; back off (exponential + deterministic
+    /// jitter) between attempts. The caller's closure does the per-fault
+    /// classification; this loop counts retries and giveups.
+    fn with_retry<T>(
+        &self,
+        what: &str,
+        mut attempt: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let policy = self.opts.retry;
+        let max = policy.max_attempts.max(1);
+        let deadline = Instant::now() + policy.round_timeout;
+        let mut tries = 0usize;
+        loop {
+            match attempt() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    tries += 1;
+                    let timed_out = Instant::now() >= deadline;
+                    if tries >= max || timed_out {
+                        self.note_recovery(|r| r.giveups += 1);
+                        return Err(e).with_context(|| {
+                            format!(
+                                "{what}: giving up after {tries} attempt(s){}",
+                                if timed_out {
+                                    " (retry budget exhausted)"
+                                } else {
+                                    ""
+                                }
+                            )
+                        });
+                    }
+                    self.note_recovery(|r| r.retries += 1);
+                    thread::sleep(policy.delay(tries - 1));
+                }
+            }
         }
     }
 
@@ -786,29 +962,67 @@ impl PipelineEngine {
     /// Submit the round's batched FeFs segment without waiting — the
     /// front half of `stage_fe_fs`, used by `begin_round` so the HW lane
     /// starts on this round while the caller keeps running other rounds'
-    /// software stages. Ownership of the quantized images transfers to
-    /// the submission: nothing is copied, and the round no longer holds
-    /// them.
+    /// software stages. With retry off, ownership of the quantized
+    /// images transfers to the submission: nothing is copied, and the
+    /// round no longer holds them. With retry on, the round keeps O(1)
+    /// CoW replay handles (second return value) and a failed submission
+    /// is retried as a fresh one.
     fn stage_fe_fs_submit(
         &self,
         hw: &dyn HwBackend,
         ts: &mut [FrameTask],
-    ) -> Result<SubmitHandle> {
+    ) -> Result<(SubmitHandle, Vec<Vec<QTensor>>)> {
         let batch: Vec<Vec<QTensor>> = ts
             .iter_mut()
             .map(|t| vec![t.img_q.take().expect("QuantizeImage ran")])
             .collect();
-        hw.submit_batch(self.handles.fe_fs, batch)
+        if !self.opts.retry.enabled() {
+            let handle = hw.submit_batch(self.handles.fe_fs, batch)?;
+            return Ok((handle, Vec::new()));
+        }
+        let handle = self.with_retry("fe_fs submit", || {
+            hw.submit_batch(self.handles.fe_fs, batch.to_vec())
+                .map_err(|e| {
+                    self.note_recovery(|r| r.submit_faults += 1);
+                    e
+                })
+        })?;
+        Ok((handle, batch))
     }
 
     /// Await a `stage_fe_fs_submit` handle and scatter the features —
-    /// the back half of `stage_fe_fs`.
+    /// the back half of `stage_fe_fs`. A wait-side fault (with retry
+    /// enabled) resubmits the round's replay handles as a fresh
+    /// submission at the queue tail; the recovered outputs are
+    /// bit-identical because FeFs consumes only the quantized images,
+    /// which no failed attempt ever mutates.
     fn stage_fe_fs_complete(
         &self,
         handle: SubmitHandle,
+        batch: &[Vec<QTensor>],
         ts: &mut [FrameTask],
     ) -> Result<()> {
-        let (outs, a, b) = handle.wait_batch_timed()?;
+        let mut first = Some(handle);
+        let (outs, a, b) = if !self.opts.retry.enabled() {
+            first.take().expect("handle present").wait_batch_timed()?
+        } else {
+            self.with_retry("fe_fs", || {
+                let h = match first.take() {
+                    Some(h) => h,
+                    None => self
+                        .backend
+                        .submit_batch(self.handles.fe_fs, batch.to_vec())
+                        .map_err(|e| {
+                            self.note_recovery(|r| r.submit_faults += 1);
+                            e
+                        })?,
+                };
+                h.wait_batch_timed().map_err(|e| {
+                    self.note_recovery(|r| r.wait_faults += 1);
+                    e
+                })
+            })?
+        };
         anyhow::ensure!(
             outs.len() == ts.len(),
             "fe_fs completion width {} != round width {}",
@@ -1329,6 +1543,109 @@ mod tests {
                 "frame {i}: begun/finished round diverged from solo stepping"
             );
         }
+    }
+
+    #[test]
+    fn retry_policy_delay_is_deterministic_and_bounded() {
+        assert!(!RetryPolicy::default().enabled(), "retry is opt-in");
+        let p = RetryPolicy::with_attempts(4);
+        assert!(p.enabled());
+        let d0 = p.delay(0);
+        assert_eq!(d0, p.delay(0), "jitter is seed-deterministic");
+        // exponential base, jitter bounded by 25%
+        assert!(d0 >= p.backoff && d0 <= p.backoff.mul_f64(1.25));
+        assert!(p.delay(3) >= p.backoff.saturating_mul(8));
+        assert!(p.delay(3) <= p.backoff.saturating_mul(8).mul_f64(1.25));
+    }
+
+    #[test]
+    fn transient_faults_recover_bit_exactly_with_retry() {
+        use crate::data::dataset::Scene;
+        use crate::runtime::{ChaosBackend, ChaosOptions};
+        let inner = Arc::new(RefBackend::synthetic(31));
+        let qp = Arc::clone(inner.qp());
+        let clean = PipelineEngine::new(
+            Arc::clone(&inner) as Arc<dyn HwBackend>,
+            Arc::clone(&qp),
+            PipelineOptions::default(),
+        )
+        .unwrap();
+        // every armed submission faults at submit; the schedule heals
+        // after 4 faults, so a 6-attempt policy provably drains it
+        let chaos = Arc::new(ChaosBackend::new(
+            Arc::clone(&inner) as Arc<dyn HwBackend>,
+            ChaosOptions {
+                seed: 3,
+                submit_fault_rate: 1.0,
+                heal_after: Some(4),
+                ..Default::default()
+            },
+        ));
+        let opts = PipelineOptions {
+            retry: RetryPolicy {
+                max_attempts: 6,
+                backoff: Duration::from_micros(50),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let engine =
+            PipelineEngine::new(chaos.clone() as Arc<dyn HwBackend>, qp, opts)
+                .unwrap();
+        let scene = Scene::synthetic("retry", 3, 13);
+        let mut s_clean = clean.new_session(0);
+        let mut s_chaos = engine.new_session(0);
+        for i in 0..3 {
+            let img = scene.normalized_image(i);
+            let want = clean
+                .step_session(&mut s_clean, &img, &scene.poses[i])
+                .unwrap();
+            // the queued path is where chaos injects: begin + finish
+            let round = engine.begin_round(&[(&img, scene.poses[i])]).unwrap();
+            let mut sess = [&mut s_chaos];
+            let outs = engine.finish_round(round, &mut sess).unwrap();
+            assert_eq!(
+                want.depth.data(),
+                outs[0].depth.data(),
+                "frame {i}: recovered round diverged from fault-free"
+            );
+        }
+        let rec = engine.take_recovery_stats();
+        assert_eq!(chaos.faults_injected(), 4, "schedule healed after 4");
+        assert_eq!(rec.submit_faults, 4);
+        assert_eq!(rec.retries, 4, "every fault was retried");
+        assert_eq!(rec.giveups, 0);
+        assert_eq!(engine.take_recovery_stats().retries, 0, "take() drains");
+    }
+
+    #[test]
+    fn exhausted_retries_surface_the_fault() {
+        use crate::runtime::{ChaosBackend, ChaosOptions};
+        let inner = Arc::new(RefBackend::synthetic(31));
+        let qp = Arc::clone(inner.qp());
+        let chaos = Arc::new(ChaosBackend::new(
+            inner as Arc<dyn HwBackend>,
+            ChaosOptions { seed: 3, submit_fault_rate: 1.0, ..Default::default() },
+        ));
+        let opts = PipelineOptions {
+            retry: RetryPolicy {
+                max_attempts: 3,
+                backoff: Duration::from_micros(50),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let engine =
+            PipelineEngine::new(chaos as Arc<dyn HwBackend>, qp, opts).unwrap();
+        let img = TensorF::zeros(&[1, 3, config::IMG_H, config::IMG_W]);
+        let err = engine.begin_round(&[(&img, Mat4::identity())]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("giving up after 3 attempt(s)"), "{msg}");
+        assert!(msg.contains("injected submit fault"), "{msg}");
+        let rec = engine.take_recovery_stats();
+        assert_eq!(rec.retries, 2);
+        assert_eq!(rec.giveups, 1);
+        assert_eq!(rec.submit_faults, 3);
     }
 
     #[test]

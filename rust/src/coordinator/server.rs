@@ -101,6 +101,27 @@ impl StreamServer {
         id
     }
 
+    /// Adopt a restored session (e.g. out of a `SessionStore` after a
+    /// kill-and-restart) into the next stream slot. The session's id
+    /// must equal that slot — ids are dense, so a rebuild re-opens
+    /// streams in ascending checkpoint order. Serving continues
+    /// bit-exactly from the checkpointed frame.
+    pub fn open_stream_restored(
+        &mut self,
+        session: StreamSession,
+    ) -> Result<usize> {
+        let id = self.sessions.len();
+        anyhow::ensure!(
+            session.id == id,
+            "restored session holds stream {} but the next slot is {id} \
+             — rebuild streams in ascending id order",
+            session.id
+        );
+        self.sessions.push(session);
+        self.throughput.push(StreamThroughput::default());
+        Ok(id)
+    }
+
     pub fn n_streams(&self) -> usize {
         self.sessions.len()
     }
@@ -432,6 +453,13 @@ impl StreamServer {
         self.engine.take_extern_stats()
     }
 
+    /// Fault-recovery accounting of the serving engine (retries, faults,
+    /// giveups — nonzero only when `PipelineOptions::retry` is enabled
+    /// and faults actually happened).
+    pub fn recovery_stats(&self) -> crate::metrics::RecoveryStats {
+        self.engine.recovery_stats()
+    }
+
     /// Human-readable per-stream + aggregate throughput table.
     pub fn report(&self) -> String {
         let mut out = String::from(
@@ -476,6 +504,14 @@ impl StreamServer {
                 self.batches.fill_seconds * 1e3,
                 self.batches.drain_seconds * 1e3,
                 100.0 * self.batches.overlapped_hw_ratio(),
+            ));
+        }
+        let rec = self.recovery_stats();
+        if rec.any() {
+            out.push_str(&format!(
+                "recovery: {} retries ({} submit / {} wait faults), {} \
+                 giveups\n",
+                rec.retries, rec.submit_faults, rec.wait_faults, rec.giveups,
             ));
         }
         out

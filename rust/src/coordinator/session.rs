@@ -7,12 +7,15 @@
 //! StreamSession` per step, so any number of sessions can share one
 //! backend ("one bitstream, many streams" — see `StreamServer`).
 
+use anyhow::{ensure, Context, Result};
+
 use crate::config;
+use crate::data::tlv::{TlvEntry, TlvFile, TlvPayload};
 use crate::kb::KeyframeBuffer;
 use crate::model::weights::QuantParams;
 use crate::poses::Mat4;
 use crate::quant::QTensor;
-use crate::tensor::TensorF;
+use crate::tensor::{Tensor, TensorF};
 
 /// Per-stream cross-frame state: ConvLSTM hidden/cell, previous depth
 /// (for hidden-state correction), previous pose, keyframe buffer.
@@ -112,6 +115,175 @@ impl StreamSession {
     pub fn note_migration(&mut self) {
         self.migrations += 1;
     }
+
+    /// Serialize every cross-frame byte of this stream into a TLV
+    /// container (hidden/cell state, last depth, previous pose, keyframe
+    /// buffer contents + counters, frame/migration counters). Restoring
+    /// the result with [`StreamSession::from_tlv`] yields a session whose
+    /// next frame is bit-identical to this one's — the contract the
+    /// checkpoint/restore and serialize-ship-restore migration tests pin.
+    pub fn to_tlv(&self) -> Result<TlvFile> {
+        let mut tlv = TlvFile::default();
+        let kb_entries = self.kb.contents();
+        let (kb_ins, kb_rej) = self.kb.stats();
+        let as_i32 = |v: usize, what: &str| {
+            i32::try_from(v).with_context(|| format!("{what} {v} exceeds i32"))
+        };
+        let meta = vec![
+            as_i32(self.id, "stream id")?,
+            as_i32(self.frames_done, "frames_done")?,
+            as_i32(self.migrations, "migrations")?,
+            as_i32(kb_entries.len(), "keyframe count")?,
+            i32::from(self.pose_prev.is_some()),
+            as_i32(kb_ins, "kb inserted_total")?,
+            as_i32(kb_rej, "kb rejected_total")?,
+        ];
+        tlv.insert(
+            "session.meta",
+            TlvEntry {
+                exp: 0,
+                payload: TlvPayload::I32(Tensor::from_vec(&[meta.len()], meta)),
+            },
+        )?;
+        tlv.insert(
+            "state.h",
+            TlvEntry {
+                exp: self.h.exp,
+                payload: TlvPayload::I16(self.h.t.clone()),
+            },
+        )?;
+        tlv.insert(
+            "state.c",
+            TlvEntry {
+                exp: self.c.exp,
+                payload: TlvPayload::I16(self.c.t.clone()),
+            },
+        )?;
+        tlv.insert(
+            "depth.full",
+            TlvEntry {
+                exp: 0,
+                payload: TlvPayload::F32(self.depth_full.clone()),
+            },
+        )?;
+        if let Some(p) = self.pose_prev {
+            tlv.insert(
+                "pose.prev",
+                TlvEntry {
+                    exp: 0,
+                    payload: TlvPayload::F64(Tensor::from_vec(&[4, 4], p.0.to_vec())),
+                },
+            )?;
+        }
+        for (i, (pose, feat)) in kb_entries.iter().enumerate() {
+            tlv.insert(
+                &format!("kb.{i}.pose"),
+                TlvEntry {
+                    exp: 0,
+                    payload: TlvPayload::F64(Tensor::from_vec(
+                        &[4, 4],
+                        pose.0.to_vec(),
+                    )),
+                },
+            )?;
+            tlv.insert(
+                &format!("kb.{i}.feat"),
+                TlvEntry {
+                    exp: feat.exp,
+                    payload: TlvPayload::I16(feat.t.clone()),
+                },
+            )?;
+        }
+        Ok(tlv)
+    }
+
+    /// Rebuild a session from a [`StreamSession::to_tlv`] container.
+    ///
+    /// Structural facts (shapes, state exponents, buffer size vs policy)
+    /// are validated against `qp` — a checkpoint written against
+    /// different quantized parameters fails here with a contextual error
+    /// instead of silently producing garbage depths. (The checkpoint
+    /// store additionally fingerprints the whole `Manifest`/`QuantParams`
+    /// pair; this is the per-session line of defence.)
+    pub fn from_tlv(tlv: &TlvFile, qp: &QuantParams) -> Result<Self> {
+        let meta = tlv.get("session.meta")?.as_i32()?;
+        ensure!(
+            meta.len() == 7,
+            "session meta has {} fields, 7 expected",
+            meta.len()
+        );
+        let m = meta.data();
+        let to_usize = |v: i32, what: &str| {
+            usize::try_from(v).with_context(|| format!("negative {what} {v}"))
+        };
+        let id = to_usize(m[0], "stream id")?;
+        let frames_done = to_usize(m[1], "frames_done")?;
+        let migrations = to_usize(m[2], "migrations")?;
+        let kb_len = to_usize(m[3], "keyframe count")?;
+        let has_pose = m[4] != 0;
+        let kb_ins = to_usize(m[5], "kb inserted_total")?;
+        let kb_rej = to_usize(m[6], "kb rejected_total")?;
+
+        let mut s = StreamSession::new(id, qp);
+        let read_state = |name: &str, expect: &QTensor| -> Result<QTensor> {
+            let e = tlv.get(name)?;
+            let t = e.as_i16()?.clone();
+            ensure!(
+                t.shape() == expect.t.shape(),
+                "checkpoint '{name}' shape {:?} != expected {:?}",
+                t.shape(),
+                expect.t.shape()
+            );
+            ensure!(
+                e.exp == expect.exp,
+                "checkpoint '{name}' exponent {} != expected {} \
+                 (was it written against different quant params?)",
+                e.exp,
+                expect.exp
+            );
+            Ok(QTensor { t, exp: e.exp })
+        };
+        s.h = read_state("state.h", &s.h)?;
+        s.c = read_state("state.c", &s.c)?;
+        let depth = tlv.f32("depth.full")?.clone();
+        ensure!(
+            depth.shape() == s.depth_full.shape(),
+            "checkpoint depth shape {:?} != expected {:?}",
+            depth.shape(),
+            s.depth_full.shape()
+        );
+        s.depth_full = depth;
+        let read_pose = |name: &str| -> Result<Mat4> {
+            let t = tlv.f64(name)?;
+            let m: [f64; 16] = t
+                .data()
+                .try_into()
+                .map_err(|_| {
+                    anyhow::anyhow!("checkpoint '{name}' is not a 4x4 matrix")
+                })?;
+            Ok(Mat4(m))
+        };
+        s.pose_prev = if has_pose {
+            Some(read_pose("pose.prev")?)
+        } else {
+            None
+        };
+        ensure!(
+            kb_len <= s.kb.capacity(),
+            "checkpoint holds {kb_len} keyframes, buffer capacity is {}",
+            s.kb.capacity()
+        );
+        let mut entries = Vec::with_capacity(kb_len);
+        for i in 0..kb_len {
+            let pose = read_pose(&format!("kb.{i}.pose"))?;
+            let fe = tlv.get(&format!("kb.{i}.feat"))?;
+            entries.push((pose, QTensor { t: fe.as_i16()?.clone(), exp: fe.exp }));
+        }
+        s.kb.restore(entries, kb_ins, kb_rej);
+        s.frames_done = frames_done;
+        s.migrations = migrations;
+        Ok(s)
+    }
 }
 
 #[cfg(test)]
@@ -143,5 +315,60 @@ mod tests {
         assert_eq!(s.id, 3, "reset keeps the stream id");
         assert_eq!(s.last_pose(), None);
         assert_eq!(s.migrations(), 1, "migrations survive reset");
+    }
+
+    #[test]
+    fn tlv_roundtrip_is_bit_exact() {
+        let manifest = Manifest::synthetic();
+        let qp = QuantParams::synthetic(&manifest, 1);
+        let mut s = StreamSession::new(4, &qp);
+        // dirty every field a served stream would dirty
+        s.frames_done = 3;
+        s.migrations = 2;
+        let mut pose = Mat4::identity();
+        pose.0[3] = 0.75;
+        s.pose_prev = Some(pose);
+        s.h.t.data_mut()[0] = 123;
+        s.c.t.data_mut()[1] = -45;
+        s.depth_full.data_mut()[7] = 2.5;
+        assert!(s.kb.maybe_insert(Mat4::identity(), s.h.clone()));
+        assert!(s.kb.maybe_insert(pose, s.c.clone()));
+
+        let tlv = s.to_tlv().unwrap();
+        let back = StreamSession::from_tlv(&tlv, &qp).unwrap();
+        assert_eq!(back.id, s.id);
+        assert_eq!(back.frames_done, s.frames_done);
+        assert_eq!(back.migrations, s.migrations);
+        assert_eq!(back.pose_prev, s.pose_prev);
+        assert_eq!(back.h.t.data(), s.h.t.data());
+        assert_eq!(back.h.exp, s.h.exp);
+        assert_eq!(back.c.t.data(), s.c.t.data());
+        assert_eq!(back.depth_full.data(), s.depth_full.data());
+        assert_eq!(back.kb.len(), s.kb.len());
+        assert_eq!(back.kb.stats(), s.kb.stats());
+        for (a, b) in back.kb.contents().iter().zip(s.kb.contents()) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.t.data(), b.1.t.data());
+            assert_eq!(a.1.exp, b.1.exp);
+        }
+        // the wire bytes are deterministic as well (fingerprint basis)
+        assert_eq!(
+            s.to_tlv().unwrap().to_bytes().unwrap(),
+            back.to_tlv().unwrap().to_bytes().unwrap()
+        );
+    }
+
+    #[test]
+    fn restore_refuses_mismatched_quant_params() {
+        // a checkpoint written against one set of quant params must not
+        // silently restore under another with different state exponents
+        let manifest = Manifest::synthetic();
+        let qp = QuantParams::synthetic(&manifest, 1);
+        let s = StreamSession::new(0, &qp);
+        let mut tlv = s.to_tlv().unwrap();
+        let h = tlv.entries.get_mut("state.h").unwrap();
+        h.exp += 1;
+        let err = StreamSession::from_tlv(&tlv, &qp).unwrap_err();
+        assert!(format!("{err:#}").contains("exponent"), "{err:#}");
     }
 }

@@ -41,6 +41,18 @@
 //! partition — the other shards' rounds complete normally, every
 //! session (including the failed shard's) is checked back in, and the
 //! error surfaces tagged with the shard index.
+//!
+//! **Failover** (PR 7): when the retry policy is enabled
+//! (`PipelineOptions::retry`), a shard whose driver fails *after its
+//! own retries are exhausted* is treated as dead for the window: its
+//! streams are migrated to the least-loaded surviving shard — through
+//! the attached [`SessionStore`] (serialize-ship-restore) when one is
+//! present, as plain value moves otherwise — and the unfinished rounds
+//! are re-driven there. Sessions only mutate at Commit, so the replay
+//! is bit-identical to a fault-free run; the error surfaces only when
+//! failover is disabled, no shard survives, or the replay itself
+//! fails. Every hop is counted in [`RecoveryStats`]
+//! ([`ShardRouter::recovery_stats`]).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -49,13 +61,15 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Error, Result};
 
 use crate::metrics::{
-    shard_imbalance, AggregateThroughput, ShardStats, StreamThroughput,
+    shard_imbalance, AggregateThroughput, RecoveryStats, ShardStats,
+    StreamThroughput,
 };
 use crate::model::weights::QuantParams;
 use crate::poses::Mat4;
 use crate::runtime::{HwBackend, RefBackend};
 use crate::tensor::TensorF;
 
+use super::checkpoint::SessionStore;
 use super::pipeline::{
     FrameOutput, PipelineEngine, PipelineOptions, RoundInFlight,
 };
@@ -138,6 +152,13 @@ pub struct ShardRouter {
     opts: ShardRouterOptions,
     rr_next: usize,
     migrations_total: usize,
+    /// Durable home for sessions; backs ship-restore migration and
+    /// checkpoint failover when attached.
+    store: Option<SessionStore>,
+    /// Router-level recovery accounting (failovers, checkpoint
+    /// migrations) — engine- and store-level counters are merged in
+    /// by [`ShardRouter::recovery_stats`].
+    recovery: RecoveryStats,
     started: Instant,
 }
 
@@ -184,6 +205,8 @@ impl ShardRouter {
             opts: ropts,
             rr_next: 0,
             migrations_total: 0,
+            store: None,
+            recovery: RecoveryStats::default(),
             started: Instant::now(),
         })
     }
@@ -280,6 +303,35 @@ impl ShardRouter {
         self.migrations_total
     }
 
+    /// Attach a durable session store. Ship-restore migration
+    /// ([`ShardRouter::migrate_stream_via_checkpoint`]) requires one,
+    /// and checkpoint failover prefers it over plain value moves.
+    pub fn attach_session_store(&mut self, store: SessionStore) {
+        self.store = Some(store);
+    }
+
+    pub fn session_store(&self) -> Option<&SessionStore> {
+        self.store.as_ref()
+    }
+
+    pub fn session_store_mut(&mut self) -> Option<&mut SessionStore> {
+        self.store.as_mut()
+    }
+
+    /// Fleet-wide recovery accounting: router-level failover counters
+    /// merged with every shard engine's retry counters and the attached
+    /// store's paging counters.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        let mut total = self.recovery.clone();
+        for shard in &self.shards {
+            total.merge(&shard.engine.recovery_stats());
+        }
+        if let Some(store) = &self.store {
+            total.merge(store.stats());
+        }
+        total
+    }
+
     /// Per-shard statistics, with live fields (streams placed, current
     /// queue depth sample folded into the peak) refreshed.
     pub fn shard_stats(&self) -> Vec<ShardStats> {
@@ -292,6 +344,7 @@ impl ShardRouter {
                     self.slots.iter().filter(|slot| slot.shard == s).count();
                 st.submit_payload_bytes =
                     shard.engine.backend().submit_payload_bytes();
+                st.recovery = shard.engine.recovery_stats();
                 st
             })
             .collect()
@@ -342,6 +395,70 @@ impl ShardRouter {
         self.shards[to].stats.migrations_in += 1;
         self.migrations_total += 1;
         Ok(())
+    }
+
+    /// Hand a stream to another shard *through its checkpoint*: the
+    /// session is serialized to the attached [`SessionStore`], dropped,
+    /// and restored from the wire image on the destination — the path a
+    /// cross-host migration would take. Bit-identical to the in-process
+    /// [`ShardRouter::migrate_stream`] value move (the checkpoint
+    /// captures every cross-frame byte; `rust/tests/recovery.rs` pins
+    /// the equality). Returns the checkpoint size in bytes; a same-
+    /// shard move is a no-op writing nothing.
+    pub fn migrate_stream_via_checkpoint(
+        &mut self,
+        sid: usize,
+        to: usize,
+    ) -> Result<u64> {
+        ensure!(
+            to < self.shards.len(),
+            "shard {to} out of range ({} shards)",
+            self.shards.len()
+        );
+        ensure!(
+            self.store.is_some(),
+            "no session store attached — use migrate_stream for the \
+             in-process value move"
+        );
+        let from = self
+            .slots
+            .get(sid)
+            .with_context(|| format!("stream {sid} not open"))?
+            .shard;
+        if from == to {
+            return Ok(0);
+        }
+        let session = self.slots[sid].session.take().with_context(|| {
+            format!(
+                "stream {sid} is checked out to a shard driver — \
+                 migration is only legal between rounds"
+            )
+        })?;
+        let qp = Arc::clone(self.shards[to].engine.qp());
+        let store = self.store.as_mut().expect("ensured above");
+        let shipped = store
+            .save(&session)
+            .and_then(|bytes| store.load(sid, &qp).map(|s| (bytes, s)));
+        let (bytes, mut restored) = match shipped {
+            Ok(ok) => ok,
+            Err(e) => {
+                // a failed ship leaves the stream where it was
+                self.slots[sid].session = Some(session);
+                return Err(e.context(format!(
+                    "checkpoint-migrating stream {sid} from shard {from} \
+                     to shard {to}"
+                )));
+            }
+        };
+        drop(session); // only the wire image crossed the shard boundary
+        restored.note_migration();
+        self.slots[sid].session = Some(restored);
+        self.slots[sid].shard = to;
+        self.shards[from].stats.migrations_out += 1;
+        self.shards[to].stats.migrations_in += 1;
+        self.migrations_total += 1;
+        self.recovery.checkpoint_migrations += 1;
+        Ok(bytes)
     }
 
     /// One rebalancing step: if the most-loaded shard carries more than
@@ -518,6 +635,12 @@ impl ShardRouter {
                 }
             }
         }
+        // retry-enabled fleets keep a cheap copy of the partition (ids
+        // and borrows, no pixels) so a dead shard's unfinished rounds
+        // can be replayed on a survivor
+        let failover =
+            k > 1 && self.shards[0].engine.options().retry.enabled();
+        let work_replay = if failover { work.clone() } else { Vec::new() };
         // drive the shards: one scoped thread each (concurrent), or one
         // after another on this thread (sequential measurement mode)
         let shards = &self.shards;
@@ -547,10 +670,13 @@ impl ShardRouter {
                 .collect()
         };
         // merge: sessions back in first (unconditionally), then stats,
-        // throughput and results; the first shard error wins
+        // throughput and results; failures are collected per shard for
+        // the failover pass below
         let mut results: Vec<Vec<(usize, FrameOutput)>> =
             rounds.iter().map(|_| Vec::new()).collect();
-        let mut first_err: Option<Error> = None;
+        let mut failed: Vec<(usize, Error)> = Vec::new();
+        let mut completed: Vec<Vec<usize>> =
+            (0..k).map(|_| Vec::new()).collect();
         for (s, outcome) in outcomes.into_iter().enumerate() {
             for (sid, session) in outcome.sessions {
                 debug_assert!(self.slots[sid].session.is_none());
@@ -565,6 +691,7 @@ impl ShardRouter {
                 stats.queue_depth_peak.max(outcome.queue_peak);
             stats.submit_payload_bytes = bytes;
             for (r, framed) in outcome.outs {
+                completed[s].push(r);
                 for (sid, out, share) in framed {
                     self.throughput[sid].record_frame(
                         share,
@@ -577,16 +704,47 @@ impl ShardRouter {
                 }
             }
             if let Some(e) = outcome.err {
-                if first_err.is_none() {
-                    first_err = Some(e.context(format!(
+                failed.push((s, e));
+            }
+        }
+        // failover pass: with retry enabled and a survivor available,
+        // a failed shard's streams move off it and its unfinished
+        // rounds are re-driven; otherwise the first error surfaces
+        if !failed.is_empty() {
+            let dead: Vec<usize> = failed.iter().map(|&(s, _)| s).collect();
+            let survivor =
+                (0..k).filter(|s| !dead.contains(s)).min_by_key(|&s| {
+                    (
+                        self.slots.iter().filter(|sl| sl.shard == s).count(),
+                        self.shards[s].engine.backend().queue_depth(),
+                        s,
+                    )
+                });
+            match survivor {
+                Some(t) if failover => {
+                    for (s, e) in failed {
+                        self.failover_shard(
+                            s,
+                            t,
+                            e,
+                            &work_replay[s],
+                            &completed[s],
+                            depth,
+                            &mut results,
+                        )?;
+                    }
+                }
+                _ => {
+                    let (s, e) = failed
+                        .into_iter()
+                        .next()
+                        .expect("at least one failure");
+                    return Err(e.context(format!(
                         "shard {s}: round driver failed (other shards' \
                          rounds completed; every session is checked back in)"
                     )));
                 }
             }
-        }
-        if let Some(e) = first_err {
-            return Err(e);
         }
         // shards merged in shard order: restore each round's input order
         for (r, round) in rounds.iter().enumerate() {
@@ -598,6 +756,91 @@ impl ShardRouter {
             });
         }
         Ok(results)
+    }
+
+    /// Treat shard `s` as dead for the current window: migrate every
+    /// stream placed on it to survivor `t` — through the attached
+    /// [`SessionStore`] when present, as value moves otherwise — then
+    /// re-drive the rounds `s` never finished on `t` and merge the
+    /// replay. `cause` (the original driver error) is surfaced only if
+    /// the replay itself fails; the replay is bit-exact because no
+    /// session mutates before a round's Commit stage.
+    #[allow(clippy::too_many_arguments)]
+    fn failover_shard(
+        &mut self,
+        s: usize,
+        t: usize,
+        cause: Error,
+        work: &[(usize, ShardRoundInputs<'_>)],
+        completed: &[usize],
+        depth: usize,
+        results: &mut [Vec<(usize, FrameOutput)>],
+    ) -> Result<()> {
+        let victims: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, slot)| slot.shard == s)
+            .map(|(sid, _)| sid)
+            .collect();
+        for &sid in &victims {
+            if self.store.is_some() {
+                self.migrate_stream_via_checkpoint(sid, t)?;
+            } else {
+                self.migrate_stream(sid, t)?;
+            }
+        }
+        self.recovery.shard_failovers += 1;
+        let unfinished: Vec<(usize, ShardRoundInputs<'_>)> = work
+            .iter()
+            .filter(|(r, _)| !completed.contains(r))
+            .cloned()
+            .collect();
+        let mut sessions: Vec<(usize, StreamSession)> = Vec::new();
+        for (_, entries) in &unfinished {
+            for &(sid, _, _) in entries {
+                if sessions.iter().any(|(x, _)| *x == sid) {
+                    continue;
+                }
+                let session =
+                    self.slots[sid].session.take().with_context(|| {
+                        format!("stream {sid} unavailable for failover replay")
+                    })?;
+                sessions.push((sid, session));
+            }
+        }
+        let outcome =
+            drive_shard(&self.shards[t].engine, unfinished, sessions, depth);
+        for (sid, session) in outcome.sessions {
+            self.slots[sid].session = Some(session);
+        }
+        if let Some(re) = outcome.err {
+            return Err(re.context(format!(
+                "shard {s} died ({cause:#}); failover replay on shard {t} \
+                 also failed"
+            )));
+        }
+        let bytes = self.shards[t].engine.backend().submit_payload_bytes();
+        let stats = &mut self.shards[t].stats;
+        stats.busy_seconds += outcome.busy_seconds;
+        stats.rounds += outcome.rounds;
+        stats.frames += outcome.frames;
+        stats.queue_depth_peak =
+            stats.queue_depth_peak.max(outcome.queue_peak);
+        stats.submit_payload_bytes = bytes;
+        for (r, framed) in outcome.outs {
+            for (sid, out, share) in framed {
+                self.throughput[sid].record_frame(
+                    share,
+                    out.profile.hw_busy(),
+                    out.profile.sw_busy(),
+                    out.profile.overlapped_sw(),
+                    out.profile.overlapped_hw(),
+                );
+                results[r].push((sid, out));
+            }
+        }
+        Ok(())
     }
 
     /// Human-readable per-stream, per-shard and fleet-level report.
@@ -649,6 +892,23 @@ impl ShardRouter {
             self.imbalance_ratio(),
             self.migrations_total,
         ));
+        let rec = self.recovery_stats();
+        if rec.any() {
+            out.push_str(&format!(
+                "recovery: {} retries ({} submit / {} wait faults, {} \
+                 giveups), {} failovers, {} evictions, {} restores, {} \
+                 ckpt migrations, {:.2} MiB checkpointed\n",
+                rec.retries,
+                rec.submit_faults,
+                rec.wait_faults,
+                rec.giveups,
+                rec.shard_failovers,
+                rec.evictions,
+                rec.restores,
+                rec.checkpoint_migrations,
+                rec.checkpoint_bytes as f64 / (1024.0 * 1024.0),
+            ));
+        }
         out
     }
 }
@@ -913,5 +1173,79 @@ mod tests {
         });
         assert_eq!(counts, [2, 2]);
         assert!(router.rebalance().is_none(), "balanced fleet is a no-op");
+    }
+
+    #[test]
+    fn checkpoint_migration_matches_value_move() {
+        use crate::coordinator::checkpoint::SessionStore;
+        use crate::data::dataset::Scene;
+
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_shipmig_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let scene = Scene::synthetic("ship", 4, 21);
+        let serve = |ship: bool| -> Vec<TensorF> {
+            let mut router = tiny_router(
+                2,
+                ShardRouterOptions {
+                    placement: Placement::Pinned(0),
+                    auto_rebalance: false,
+                    imbalance_threshold: 1.5,
+                },
+            );
+            if ship {
+                let store = {
+                    let eng = router.engine(0);
+                    SessionStore::open(
+                        &dir,
+                        4,
+                        eng.backend().manifest(),
+                        eng.qp().as_ref(),
+                    )
+                    .unwrap()
+                };
+                router.attach_session_store(store);
+            }
+            let sid = router.open_stream();
+            let mut outs = Vec::new();
+            for i in 0..4 {
+                if i == 2 {
+                    // mid-stream handoff: shard 0 -> shard 1, either as
+                    // a value move or through the checkpoint wire image
+                    if ship {
+                        let bytes = router
+                            .migrate_stream_via_checkpoint(sid, 1)
+                            .unwrap();
+                        assert!(bytes > 0, "ship wrote a checkpoint");
+                    } else {
+                        router.migrate_stream(sid, 1).unwrap();
+                    }
+                    assert_eq!(router.shard_of(sid), Some(1));
+                }
+                let img = scene.normalized_image(i);
+                let mut out = router
+                    .run_round(&[(sid, &img, &scene.poses[i])])
+                    .unwrap();
+                outs.push(out.pop().unwrap().1.depth);
+            }
+            assert_eq!(router.session(sid).unwrap().migrations(), 1);
+            let rec = router.recovery_stats();
+            assert_eq!(
+                rec.checkpoint_migrations,
+                usize::from(ship),
+                "ship path is accounted"
+            );
+            outs
+        };
+        let moved = serve(false);
+        let shipped = serve(true);
+        for (i, (a, b)) in moved.iter().zip(&shipped).enumerate() {
+            assert_eq!(
+                a.data(),
+                b.data(),
+                "frame {i}: ship-restore == value move"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

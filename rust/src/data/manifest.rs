@@ -314,6 +314,44 @@ impl Manifest {
                     && a.outputs == b.outputs
             })
     }
+
+    /// Deterministic content fingerprint of the catalogue + exponent
+    /// tables — what [`Manifest::same_catalogue`] compares plus the
+    /// quantization exponents, digested to one `u64` a checkpoint can
+    /// carry. Two manifests with equal fingerprints serve interchangeable
+    /// sessions; `hlo` paths and training metadata are excluded (they
+    /// never affect the served bits).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.write_u64(self.segments.len() as u64);
+        for seg in &self.segments {
+            h.write_str(&seg.name);
+            for (tag, descs) in [(0u64, &seg.inputs), (1u64, &seg.outputs)] {
+                h.write_u64(tag);
+                h.write_u64(descs.len() as u64);
+                for d in descs {
+                    h.write_str(&d.name);
+                    h.write_u64(d.shape.len() as u64);
+                    for &dim in &d.shape {
+                        h.write_u64(dim as u64);
+                    }
+                    h.write_i64(d.exp as i64);
+                }
+            }
+        }
+        for (tag, table) in [(2u64, &self.aexp), (3u64, &self.conv_in_exp)] {
+            h.write_u64(tag);
+            let mut keys: Vec<&String> = table.keys().collect();
+            keys.sort();
+            for k in keys {
+                h.write_str(k);
+                h.write_i64(table[k] as i64);
+            }
+        }
+        h.write_i64(self.sigmoid_exp as i64);
+        h.write_i64(self.elu_exp as i64);
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -394,6 +432,23 @@ out e0_q 1,32,32,48 6
         let mut c = Manifest::synthetic();
         c.segments.pop();
         assert!(!a.same_catalogue(&c));
+    }
+
+    #[test]
+    fn fingerprint_tracks_served_bits_only() {
+        let a = Manifest::synthetic();
+        let mut b = Manifest::synthetic();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // artifact location / training metadata never affect the bits
+        b.segments[0].hlo = "elsewhere.hlo.txt".into();
+        b.train_steps = 999;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // but any typed-I/O or exponent change does
+        b.segments[0].inputs[0].exp += 1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = Manifest::synthetic();
+        c.aexp.insert("image".into(), 99);
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 
     #[test]

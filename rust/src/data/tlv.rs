@@ -6,7 +6,18 @@
 //! [u16 name_len][name][u8 dtype][i8 exp][u8 ndim][u32 dims...][payload]
 //! ```
 //!
-//! dtypes: 0 = f32, 1 = i8, 2 = i16, 3 = i32. Little-endian throughout.
+//! dtypes: 0 = f32, 1 = i8, 2 = i16, 3 = i32, 4 = f64. Little-endian
+//! throughout. dtype 4 is a Rust-side extension (the python writer never
+//! emits it): session checkpoints (`coordinator::checkpoint`) store
+//! camera poses as f64 so restore is bit-exact, and the same reader
+//! handles both producers.
+//!
+//! The loader treats every input as potentially hostile (checkpoint
+//! files live on disk and can be truncated or corrupted by a crashed
+//! writer): all length fields are validated against the remaining bytes
+//! *before* any allocation sized by them, size arithmetic is
+//! overflow-checked, and duplicate entry names are an error — a corrupt
+//! file yields a contextual `Err`, never a panic or an OOM.
 
 use std::collections::HashMap;
 use std::fs;
@@ -22,6 +33,61 @@ pub enum TlvPayload {
     I8(Tensor<i8>),
     I16(Tensor<i16>),
     I32(Tensor<i32>),
+    F64(Tensor<f64>),
+}
+
+impl TlvPayload {
+    /// Wire dtype tag (the `u8` after the name).
+    fn dtype(&self) -> u8 {
+        match self {
+            TlvPayload::F32(_) => 0,
+            TlvPayload::I8(_) => 1,
+            TlvPayload::I16(_) => 2,
+            TlvPayload::I32(_) => 3,
+            TlvPayload::F64(_) => 4,
+        }
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            TlvPayload::F32(t) => t.shape(),
+            TlvPayload::I8(t) => t.shape(),
+            TlvPayload::I16(t) => t.shape(),
+            TlvPayload::I32(t) => t.shape(),
+            TlvPayload::F64(t) => t.shape(),
+        }
+    }
+
+    /// Payload bytes in wire encoding (little-endian, densely packed).
+    fn wire_bytes(&self, out: &mut Vec<u8>) {
+        match self {
+            TlvPayload::F32(t) => {
+                for v in t.data() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            TlvPayload::I8(t) => {
+                for v in t.data() {
+                    out.push(*v as u8);
+                }
+            }
+            TlvPayload::I16(t) => {
+                for v in t.data() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            TlvPayload::I32(t) => {
+                for v in t.data() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            TlvPayload::F64(t) => {
+                for v in t.data() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -58,6 +124,13 @@ impl TlvEntry {
             other => bail!("expected i32 tensor, got {other:?}"),
         }
     }
+
+    pub fn as_f64(&self) -> Result<&Tensor<f64>> {
+        match &self.payload {
+            TlvPayload::F64(t) => Ok(t),
+            other => bail!("expected f64 tensor, got {other:?}"),
+        }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -72,12 +145,23 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            bail!("TLV truncated at offset {}", self.pos);
+        // `remaining` can never underflow (pos <= len by construction),
+        // and comparing against it instead of `pos + n` keeps a hostile
+        // length field from overflowing the bound check itself
+        let remaining = self.buf.len() - self.pos;
+        if n > remaining {
+            bail!(
+                "TLV truncated at offset {}: need {n} bytes, {remaining} left",
+                self.pos
+            );
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 
     fn u8(&mut self) -> Result<u8> {
@@ -109,16 +193,38 @@ fn payload<T: Copy + Default>(
     Tensor::from_vec(shape, data)
 }
 
+/// Smallest possible wire size of one entry (empty name, zero dims,
+/// zero-element payload) — bounds how many entries a file of a given
+/// size can possibly declare.
+const MIN_ENTRY_BYTES: usize = 2 + 1 + 1 + 1;
+
 impl TlvFile {
     pub fn load(path: &Path) -> Result<Self> {
         let buf = fs::read(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let mut r = Reader { buf: &buf, pos: 0 };
+        Self::parse(&buf)
+            .with_context(|| format!("parsing TLV {}", path.display()))
+    }
+
+    /// Decode a TLV byte stream (the body of [`TlvFile::load`]; also the
+    /// restore path for in-memory checkpoints).
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader { buf, pos: 0 };
         let count = r.u32()? as usize;
+        // a hostile count must not drive the preallocation: no file can
+        // hold more entries than remaining_bytes / MIN_ENTRY_BYTES
+        let max_entries = r.remaining() / MIN_ENTRY_BYTES;
+        if count > max_entries {
+            bail!(
+                "TLV declares {count} entries but only {} bytes follow",
+                r.remaining()
+            );
+        }
         let mut entries = HashMap::with_capacity(count);
-        for _ in 0..count {
+        for i in 0..count {
             let name_len = r.u16()? as usize;
-            let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .with_context(|| format!("entry {i}: non-utf8 name"))?;
             let dtype = r.u8()?;
             let exp = r.u8()? as i8 as i32;
             let ndim = r.u8()? as usize;
@@ -126,37 +232,118 @@ impl TlvFile {
             for _ in 0..ndim {
                 shape.push(r.u32()? as usize);
             }
-            let n: usize = shape.iter().product();
+            let n = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .with_context(|| {
+                    format!("entry '{name}': element count overflows ({shape:?})")
+                })?;
+            let width = match dtype {
+                0 => 4,
+                1 => 1,
+                2 => 2,
+                3 => 4,
+                4 => 8,
+                d => bail!("unknown TLV dtype {d} for entry '{name}'"),
+            };
+            let bytes = n.checked_mul(width).with_context(|| {
+                format!("entry '{name}': payload size overflows ({n} x {width})")
+            })?;
+            let raw = r
+                .take(bytes)
+                .with_context(|| format!("entry '{name}': payload"))?;
             let payload = match dtype {
                 0 => TlvPayload::F32(payload(
-                    r.take(n * 4)?,
+                    raw,
                     &shape,
                     |b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]),
                     4,
                 )),
-                1 => TlvPayload::I8(payload(
-                    r.take(n)?,
-                    &shape,
-                    |b| b[0] as i8,
-                    1,
-                )),
+                1 => TlvPayload::I8(payload(raw, &shape, |b| b[0] as i8, 1)),
                 2 => TlvPayload::I16(payload(
-                    r.take(n * 2)?,
+                    raw,
                     &shape,
                     |b| i16::from_le_bytes([b[0], b[1]]),
                     2,
                 )),
                 3 => TlvPayload::I32(payload(
-                    r.take(n * 4)?,
+                    raw,
                     &shape,
                     |b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]),
                     4,
                 )),
-                d => bail!("unknown TLV dtype {d} for entry {name}"),
+                4 => TlvPayload::F64(payload(
+                    raw,
+                    &shape,
+                    |b| {
+                        f64::from_le_bytes([
+                            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                        ])
+                    },
+                    8,
+                )),
+                _ => unreachable!("dtype validated above"),
             };
-            entries.insert(name, TlvEntry { exp, payload });
+            if entries.insert(name.clone(), TlvEntry { exp, payload }).is_some() {
+                bail!("duplicate TLV entry '{name}'");
+            }
         }
         Ok(TlvFile { entries })
+    }
+
+    /// Encode every entry in wire format (names sorted, so the same
+    /// entries always produce the same bytes — checkpoint fingerprints
+    /// and tests rely on this determinism).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let count = u32::try_from(self.entries.len())
+            .context("TLV entry count exceeds u32")?;
+        let mut names: Vec<&String> = self.entries.keys().collect();
+        names.sort();
+        let mut out = Vec::new();
+        out.extend_from_slice(&count.to_le_bytes());
+        for name in names {
+            let entry = &self.entries[name];
+            let name_len = u16::try_from(name.len())
+                .with_context(|| format!("entry name '{name}' exceeds u16 length"))?;
+            let exp = i8::try_from(entry.exp).with_context(|| {
+                format!("entry '{name}': exponent {} does not fit i8", entry.exp)
+            })?;
+            let shape = entry.payload.shape();
+            let ndim = u8::try_from(shape.len())
+                .with_context(|| format!("entry '{name}': too many dims"))?;
+            out.extend_from_slice(&name_len.to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(entry.payload.dtype());
+            out.push(exp as u8);
+            out.push(ndim);
+            for &d in shape {
+                let d = u32::try_from(d).with_context(|| {
+                    format!("entry '{name}': dim {d} exceeds u32")
+                })?;
+                out.extend_from_slice(&d.to_le_bytes());
+            }
+            entry.payload.wire_bytes(&mut out);
+        }
+        Ok(out)
+    }
+
+    /// Write every entry to `path` in the wire format [`TlvFile::load`]
+    /// reads — `save` then `load` round-trips every payload type
+    /// bit-exactly (the checkpoint layer's durability contract).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        fs::write(path, bytes)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Insert an entry, erroring on duplicates (mirrors the loader's
+    /// duplicate-name rejection so writers can't produce a file the
+    /// loader would refuse).
+    pub fn insert(&mut self, name: &str, entry: TlvEntry) -> Result<()> {
+        if self.entries.insert(name.to_string(), entry).is_some() {
+            bail!("duplicate TLV entry '{name}'");
+        }
+        Ok(())
     }
 
     pub fn get(&self, name: &str) -> Result<&TlvEntry> {
@@ -171,6 +358,10 @@ impl TlvFile {
 
     pub fn i16(&self, name: &str) -> Result<&Tensor<i16>> {
         self.get(name)?.as_i16()
+    }
+
+    pub fn f64(&self, name: &str) -> Result<&Tensor<f64>> {
+        self.get(name)?.as_f64()
     }
 }
 
@@ -200,11 +391,16 @@ mod tests {
         }
     }
 
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_tlv_test_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join("fadec_tlv_test");
-        fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("t.bin");
+        let p = tmp("t.bin");
         write_test_tlv(&p);
         let tlv = TlvFile::load(&p).unwrap();
         let a = tlv.f32("a").unwrap();
@@ -218,9 +414,7 @@ mod tests {
 
     #[test]
     fn negative_exponent_sign_extends() {
-        let dir = std::env::temp_dir().join("fadec_tlv_test2");
-        fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("t.bin");
+        let p = tmp("neg.bin");
         let mut f = fs::File::create(&p).unwrap();
         f.write_all(&1u32.to_le_bytes()).unwrap();
         f.write_all(&1u16.to_le_bytes()).unwrap();
@@ -231,5 +425,185 @@ mod tests {
         drop(f);
         let tlv = TlvFile::load(&p).unwrap();
         assert_eq!(tlv.get("x").unwrap().exp, -3);
+    }
+
+    #[test]
+    fn save_roundtrips_every_payload_type() {
+        let mut tlv = TlvFile::default();
+        tlv.insert(
+            "f32",
+            TlvEntry {
+                exp: 0,
+                payload: TlvPayload::F32(Tensor::from_vec(
+                    &[2, 2],
+                    vec![1.0f32, -2.5, 3.25, 0.0],
+                )),
+            },
+        )
+        .unwrap();
+        tlv.insert(
+            "i8",
+            TlvEntry {
+                exp: -4,
+                payload: TlvPayload::I8(Tensor::from_vec(&[3], vec![-128i8, 0, 127])),
+            },
+        )
+        .unwrap();
+        tlv.insert(
+            "i16",
+            TlvEntry {
+                exp: 7,
+                payload: TlvPayload::I16(Tensor::from_vec(
+                    &[2, 1],
+                    vec![i16::MIN, i16::MAX],
+                )),
+            },
+        )
+        .unwrap();
+        tlv.insert(
+            "i32",
+            TlvEntry {
+                exp: 12,
+                payload: TlvPayload::I32(Tensor::from_vec(
+                    &[1],
+                    vec![-123456789i32],
+                )),
+            },
+        )
+        .unwrap();
+        tlv.insert(
+            "f64",
+            TlvEntry {
+                exp: 0,
+                payload: TlvPayload::F64(Tensor::from_vec(
+                    &[4],
+                    vec![1.0f64, -0.125, std::f64::consts::PI, 1e300],
+                )),
+            },
+        )
+        .unwrap();
+        let p = tmp("rt_all.bin");
+        tlv.save(&p).unwrap();
+        let back = TlvFile::load(&p).unwrap();
+        assert_eq!(back.entries.len(), 5);
+        assert_eq!(back.f32("f32").unwrap().data(), tlv.f32("f32").unwrap().data());
+        assert_eq!(back.f32("f32").unwrap().shape(), &[2, 2]);
+        assert_eq!(back.get("i8").unwrap().exp, -4);
+        assert_eq!(
+            back.get("i8").unwrap().as_i8().unwrap().data(),
+            &[-128, 0, 127]
+        );
+        assert_eq!(
+            back.i16("i16").unwrap().data(),
+            &[i16::MIN, i16::MAX]
+        );
+        assert_eq!(
+            back.get("i32").unwrap().as_i32().unwrap().data(),
+            &[-123456789]
+        );
+        assert_eq!(
+            back.f64("f64").unwrap().data(),
+            tlv.f64("f64").unwrap().data()
+        );
+        // byte-level determinism: same entries, same bytes
+        assert_eq!(tlv.to_bytes().unwrap(), back.to_bytes().unwrap());
+    }
+
+    #[test]
+    fn truncated_file_errors_without_panicking() {
+        let p = tmp("trunc.bin");
+        write_test_tlv(&p);
+        let full = fs::read(&p).unwrap();
+        // every strict prefix must parse to a contextual error
+        for cut in [0, 3, 4, 6, 9, full.len() - 1] {
+            let err = TlvFile::parse(&full[..cut]);
+            assert!(err.is_err(), "prefix of {cut} bytes must not parse");
+        }
+    }
+
+    #[test]
+    fn hostile_count_is_rejected_before_allocation() {
+        // declares u32::MAX entries with no bytes behind them: must be
+        // rejected by the entry-count bound, not by allocating a
+        // u32::MAX-capacity map
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = TlvFile::parse(&buf).unwrap_err();
+        assert!(format!("{err:#}").contains("entries"), "{err:#}");
+    }
+
+    #[test]
+    fn overflowing_shape_is_rejected() {
+        // 1 entry, dims (u32::MAX, u32::MAX, u32::MAX): element count
+        // overflows usize — must error, not wrap into a small allocation
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'z');
+        buf.extend_from_slice(&[2u8, 0u8, 3u8]); // i16, exp 0, ndim 3
+        for _ in 0..3 {
+            buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        let err = TlvFile::parse(&buf).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("overflow") || msg.contains("truncated"),
+            "{msg}"
+        );
+    }
+
+    #[test]
+    fn oversized_payload_length_is_truncation_not_oom() {
+        // a plausible shape whose payload extends past EOF
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'y');
+        buf.extend_from_slice(&[0u8, 0u8, 1u8]); // f32, exp 0, ndim 1
+        buf.extend_from_slice(&1_000_000u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]); // far fewer than 4 MB
+        let err = TlvFile::parse(&buf).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn duplicate_entry_names_are_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        for _ in 0..2 {
+            buf.extend_from_slice(&1u16.to_le_bytes());
+            buf.push(b'd');
+            buf.extend_from_slice(&[2u8, 0u8, 1u8]); // i16, exp 0, ndim 1
+            buf.extend_from_slice(&1u32.to_le_bytes());
+            buf.extend_from_slice(&9i16.to_le_bytes());
+        }
+        let err = TlvFile::parse(&buf).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_dtype_is_contextual() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'q');
+        buf.extend_from_slice(&[9u8, 0u8, 0u8]); // dtype 9: unknown
+        let err = TlvFile::parse(&buf).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("dtype 9") && msg.contains('q'), "{msg}");
+    }
+
+    #[test]
+    fn writer_refuses_out_of_range_exponent() {
+        let mut tlv = TlvFile::default();
+        tlv.insert(
+            "big",
+            TlvEntry {
+                exp: 1000,
+                payload: TlvPayload::I16(Tensor::from_vec(&[1], vec![1i16])),
+            },
+        )
+        .unwrap();
+        assert!(tlv.to_bytes().is_err());
     }
 }

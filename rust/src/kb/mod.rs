@@ -81,6 +81,37 @@ impl<F> KeyframeBuffer<F> {
         self.capacity
     }
 
+    /// Minimum pose distance for a new keyframe (the other half of the
+    /// policy next to [`KeyframeBuffer::capacity`]).
+    pub fn min_dist(&self) -> f64 {
+        self.min_dist
+    }
+
+    /// Reinstate a previously captured buffer state: the stored entries
+    /// (oldest first) plus both policy counters. The checkpoint restore
+    /// path uses this to rebuild a session's buffer bit-exactly — the
+    /// policy (capacity / min distance) stays as constructed.
+    ///
+    /// Panics if `entries` exceeds the capacity (a checkpoint written by
+    /// this buffer can never hold more; the caller validates foreign
+    /// input first).
+    pub fn restore(
+        &mut self,
+        entries: Vec<(Mat4, F)>,
+        inserted_total: usize,
+        rejected_total: usize,
+    ) {
+        assert!(
+            entries.len() <= self.capacity,
+            "restoring {} keyframes into capacity {}",
+            entries.len(),
+            self.capacity
+        );
+        self.entries = entries;
+        self.inserted_total = inserted_total;
+        self.rejected_total = rejected_total;
+    }
+
     /// Buffered (pose, feature) pairs, oldest first.
     pub fn contents(&self) -> &[(Mat4, F)] {
         &self.entries
@@ -185,6 +216,26 @@ mod tests {
         assert_eq!(snap.len(), 1);
         assert!(snap[0].1.shares_payload_with(&kb.contents()[0].1));
         assert_eq!(snap[0].1.data(), &[3, 4]);
+    }
+
+    #[test]
+    fn restore_reinstates_entries_and_counters() {
+        let mut kb = KeyframeBuffer::with_policy(2, 0.1);
+        assert!(kb.maybe_insert(pose_at(0.0), 1u32));
+        assert!(!kb.maybe_insert(pose_at(0.0), 2u32));
+        assert!(kb.maybe_insert(pose_at(0.3), 3u32));
+        let snap = kb.snapshot();
+        let (ins, rej) = kb.stats();
+        // a fresh buffer restored from the snapshot behaves identically
+        let mut fresh = KeyframeBuffer::with_policy(2, 0.1);
+        fresh.restore(snap, ins, rej);
+        assert_eq!(fresh.contents(), kb.contents());
+        assert_eq!(fresh.stats(), kb.stats());
+        assert_eq!(fresh.min_dist(), 0.1);
+        // gating continues from the restored last keyframe
+        assert!(!fresh.maybe_insert(pose_at(0.3), 4u32));
+        assert!(!kb.maybe_insert(pose_at(0.3), 4u32));
+        assert_eq!(fresh.stats(), kb.stats());
     }
 
     #[test]

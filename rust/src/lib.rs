@@ -57,6 +57,25 @@
 //!   K ∈ {1,2,4} vs solo, shard-failure isolation). Load signals
 //!   (`HwBackend::queue_depth`, per-stream fps, per-shard busy seconds)
 //!   feed `metrics::ShardStats` and the imbalance-triggered rebalancer.
+//! * **Durability** (`coordinator::checkpoint` + `runtime::chaos`, PR 7)
+//!   — because a [`coordinator::StreamSession`] is the *complete* stream
+//!   state and mutates only at Commit, it round-trips through the TLV
+//!   codec (`data::tlv`) byte-for-byte: [`coordinator::SessionStore`]
+//!   checkpoints sessions to disk (fingerprint-stamped against the
+//!   backend's `Manifest`/`QuantParams`, refused on mismatch), LRU-pages
+//!   more streams than RAM, and turns shard migration into
+//!   serialize-ship-restore (`ShardRouter::migrate_stream_via_checkpoint`,
+//!   bit-identical to the in-process value move). Transient backend
+//!   faults are absorbed by [`coordinator::RetryPolicy`] (exponential
+//!   backoff + deterministic jitter, off by default so the hot path is
+//!   untouched); persistent shard death triggers checkpoint-restore
+//!   failover of the victim's sessions onto survivors with unfinished
+//!   rounds replayed bit-exactly. [`runtime::ChaosBackend`] injects
+//!   seeded, reproducible fault schedules to prove all of it —
+//!   `rust/tests/recovery.rs` pins chaos sweeps, mid-window shard death
+//!   and kill-and-restart as bit-identical to fault-free serving, and
+//!   `metrics::RecoveryStats` counts every retry/evict/restore/failover
+//!   in the server and router reports.
 //!
 //! # Data plane (PR 5)
 //!

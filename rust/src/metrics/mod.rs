@@ -227,6 +227,9 @@ pub struct ShardStats {
     pub migrations_in: usize,
     /// Sessions migrated *off* this shard.
     pub migrations_out: usize,
+    /// Fault-recovery accounting of this shard's engine (retries,
+    /// faults, giveups — see [`RecoveryStats`]).
+    pub recovery: RecoveryStats,
 }
 
 impl ShardStats {
@@ -237,6 +240,58 @@ impl ShardStats {
         } else {
             0.0
         }
+    }
+}
+
+/// Fault-recovery accounting (PR 7): every retry, checkpoint event and
+/// failover the serving stack performs is counted here. Kept by
+/// `PipelineEngine` (retries), `coordinator::SessionStore` (paging) and
+/// `ShardRouter` (failover), merged upward and surfaced through
+/// `StreamServer::report` — a fleet that silently retries its way
+/// through a flaky backend still shows the flakiness in its report.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// HW submissions retried after a transient fault (counts re-issues,
+    /// not original attempts: a round that succeeds second try adds 1).
+    pub retries: usize,
+    /// Faults surfaced at `submit*` (enqueue-time errors).
+    pub submit_faults: usize,
+    /// Faults surfaced at `wait` (execution-time errors).
+    pub wait_faults: usize,
+    /// Rounds abandoned after exhausting the retry budget.
+    pub giveups: usize,
+    /// Sessions evicted (paged) to disk by the checkpoint store.
+    pub evictions: usize,
+    /// Sessions restored from a checkpoint (paging and failover alike).
+    pub restores: usize,
+    /// Shard-to-shard migrations that went serialize-ship-restore
+    /// through a checkpoint rather than a same-process value move.
+    pub checkpoint_migrations: usize,
+    /// Dead shards whose sessions were recovered onto survivors.
+    pub shard_failovers: usize,
+    /// Total checkpoint bytes written (evictions + ship-restore).
+    pub checkpoint_bytes: u64,
+}
+
+impl RecoveryStats {
+    /// Fold another accounting into this one (shard outcomes merge into
+    /// the router's fleet total; the server merges the store's).
+    pub fn merge(&mut self, other: &RecoveryStats) {
+        self.retries += other.retries;
+        self.submit_faults += other.submit_faults;
+        self.wait_faults += other.wait_faults;
+        self.giveups += other.giveups;
+        self.evictions += other.evictions;
+        self.restores += other.restores;
+        self.checkpoint_migrations += other.checkpoint_migrations;
+        self.shard_failovers += other.shard_failovers;
+        self.checkpoint_bytes += other.checkpoint_bytes;
+    }
+
+    /// Whether any recovery activity happened at all (gates the report
+    /// line so fault-free serving reports stay unchanged).
+    pub fn any(&self) -> bool {
+        *self != RecoveryStats::default()
     }
 }
 
@@ -398,6 +453,30 @@ mod tests {
         let hot = ShardStats { shard: 1, busy_seconds: 6.0, ..Default::default() };
         // mean = 4.0, max = 6.0 -> 1.5
         assert!((shard_imbalance(&[a, hot]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovery_stats_merge_and_gate() {
+        let mut a = RecoveryStats::default();
+        assert!(!a.any(), "fresh stats report no activity");
+        let b = RecoveryStats {
+            retries: 2,
+            wait_faults: 2,
+            evictions: 1,
+            restores: 1,
+            checkpoint_bytes: 4096,
+            ..Default::default()
+        };
+        assert!(b.any());
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.retries, 4);
+        assert_eq!(a.wait_faults, 4);
+        assert_eq!(a.evictions, 2);
+        assert_eq!(a.restores, 2);
+        assert_eq!(a.checkpoint_bytes, 8192);
+        assert_eq!(a.submit_faults, 0);
+        assert!(a.any());
     }
 
     #[test]

@@ -267,6 +267,53 @@ impl QuantParams {
             .unwrap_or_else(|| panic!("missing activation exponent '{name}'"))
     }
 
+    /// Deterministic content fingerprint over every parameter that
+    /// affects served bits: conv weights/biases + all exponents (sorted
+    /// by name), LN gamma/beta, activation exponents, and both LUT
+    /// tables. A `StreamSession` checkpoint carries this next to
+    /// `Manifest::fingerprint`; restore refuses a mismatch instead of
+    /// silently decoding garbage depths with the wrong parameters.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        let mut names: Vec<&String> = self.convs.keys().collect();
+        names.sort();
+        for n in names {
+            let c = &self.convs[n];
+            h.write_str(n);
+            for &v in c.w.data() {
+                h.write(&[v as u8]);
+            }
+            for &v in c.b.data() {
+                h.write_i64(v as i64);
+            }
+            for v in [c.e_w, c.e_b, c.s_q, c.e_s, c.e_in] {
+                h.write_i64(v as i64);
+            }
+        }
+        let mut names: Vec<&String> = self.lns.keys().collect();
+        names.sort();
+        for n in names {
+            let ln = &self.lns[n];
+            h.write_str(n);
+            for v in ln.gamma.iter().chain(&ln.beta) {
+                h.write_u64(v.to_bits() as u64);
+            }
+        }
+        let mut names: Vec<&String> = self.aexp.keys().collect();
+        names.sort();
+        for n in names {
+            h.write_str(n);
+            h.write_i64(self.aexp[n] as i64);
+        }
+        for lut in [&self.lut_sigmoid, &self.lut_elu] {
+            h.write_i64(lut.out_exp as i64);
+            for &v in &lut.table {
+                h.write(&v.to_le_bytes());
+            }
+        }
+        h.finish()
+    }
+
     /// Bias-exponent consistency: e_b == e_in + e_w for every conv (the
     /// contract between calibration and the traced artifacts).
     pub fn validate(&self) -> Result<()> {
@@ -318,6 +365,16 @@ mod tests {
             qp.conv("fe.stem").w.data(),
             qp3.conv("fe.stem").w.data()
         );
+    }
+
+    #[test]
+    fn fingerprint_separates_parameter_sets() {
+        let manifest = Manifest::synthetic();
+        let a = QuantParams::synthetic(&manifest, 11);
+        let b = QuantParams::synthetic(&manifest, 11);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same seed, same bits");
+        let c = QuantParams::synthetic(&manifest, 12);
+        assert_ne!(a.fingerprint(), c.fingerprint(), "different weights");
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! Fault-injecting backend wrapper — the chaos half of the PR-7
+//! fault-tolerance layer.
+//!
+//! [`ChaosBackend`] implements [`HwBackend`] over any inner backend and
+//! injects **seeded, deterministic** failures on the submit/await path:
+//!
+//! * **submit errors** — `submit_batch` returns `Err` before the job
+//!   reaches the inner backend (the DMA-descriptor-rejected case);
+//! * **wait errors** — the submission "executes" but its handle
+//!   surfaces `Err` at wait (the mid-segment execution fault);
+//! * **latency spikes** — the submission is delayed before delegating
+//!   (a stalled command queue, no error);
+//! * **transient-then-heal** — after `heal_after` injected faults the
+//!   backend behaves perfectly, so a bounded retry policy provably
+//!   drains the schedule;
+//! * **death** — [`ChaosBackend::set_dead`] makes every subsequent
+//!   submission fail until revived, modelling a persistent shard loss
+//!   (what the router's failover path recovers from).
+//!
+//! Determinism: each submission draws its fate from a PRNG seeded by
+//! `options.seed` mixed with a per-backend submission counter, so a
+//! given seed produces the same fault schedule on every run — and a
+//! *retry* is a new submission (new counter value, new draw), so
+//! transient schedules are survivable by construction. Faults never
+//! mutate inputs: an injected failure drops the submitted handles
+//! exactly like an abandoned round, which is why a retried submission
+//! (the caller re-submits cloned handles) is bit-identical to a
+//! fault-free run — pinned by `rust/tests/recovery.rs`.
+//!
+//! The blocking `run`/`run_batch` paths delegate untouched: chaos
+//! targets the serving path (submit/await), and keeping the blocking
+//! path clean lets tests compute fault-free references through the very
+//! same wrapper instance.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::manifest::{Manifest, SegmentDesc};
+use crate::quant::QTensor;
+use crate::util::Rng;
+
+use super::{HwBackend, SegmentId, SubmitHandle};
+
+/// Knobs of one chaos schedule. All rates are probabilities in [0, 1]
+/// drawn independently per submission, in the order submit → wait →
+/// latency (at most one fault per submission; a latency spike may
+/// accompany neither error).
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosOptions {
+    /// Seed of the deterministic fault schedule.
+    pub seed: u64,
+    /// Probability a submission errors at `submit_batch`.
+    pub submit_fault_rate: f64,
+    /// Probability a submission errors at `wait`.
+    pub wait_fault_rate: f64,
+    /// Probability a submission is delayed by `latency` first.
+    pub latency_rate: f64,
+    /// Duration of an injected latency spike.
+    pub latency: Duration,
+    /// Stop injecting after this many faults (transient-then-heal);
+    /// `None` never heals.
+    pub heal_after: Option<usize>,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> Self {
+        ChaosOptions {
+            seed: 0,
+            submit_fault_rate: 0.0,
+            wait_fault_rate: 0.0,
+            latency_rate: 0.0,
+            latency: Duration::from_millis(1),
+            heal_after: None,
+        }
+    }
+}
+
+/// Fault-injecting [`HwBackend`] wrapper. See the module docs.
+pub struct ChaosBackend {
+    inner: Arc<dyn HwBackend>,
+    opts: ChaosOptions,
+    /// Submissions seen (the schedule index: each draw is seeded by
+    /// `opts.seed` + this counter, so retries get fresh draws).
+    submissions: AtomicUsize,
+    /// Faults injected so far (gates `heal_after`).
+    faults: AtomicUsize,
+    submit_faults: AtomicUsize,
+    wait_faults: AtomicUsize,
+    latency_spikes: AtomicUsize,
+    /// Persistent-failure mode: every submission errors until revived.
+    dead: AtomicBool,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Arc<dyn HwBackend>, opts: ChaosOptions) -> Self {
+        ChaosBackend {
+            inner,
+            opts,
+            submissions: AtomicUsize::new(0),
+            faults: AtomicUsize::new(0),
+            submit_faults: AtomicUsize::new(0),
+            wait_faults: AtomicUsize::new(0),
+            latency_spikes: AtomicUsize::new(0),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    /// The wrapped backend (tests compute fault-free references on it).
+    pub fn inner(&self) -> &Arc<dyn HwBackend> {
+        &self.inner
+    }
+
+    /// Kill (or revive) the backend: while dead, every submission
+    /// errors regardless of the schedule — the persistent-shard-failure
+    /// mode the router's failover recovers from.
+    pub fn set_dead(&self, dead: bool) {
+        self.dead.store(dead, Ordering::Relaxed);
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    /// Submissions that errored at submit time.
+    pub fn submit_faults_injected(&self) -> usize {
+        self.submit_faults.load(Ordering::Relaxed)
+    }
+
+    /// Submissions that errored at wait time.
+    pub fn wait_faults_injected(&self) -> usize {
+        self.wait_faults.load(Ordering::Relaxed)
+    }
+
+    /// Submissions delayed by a latency spike.
+    pub fn latency_spikes_injected(&self) -> usize {
+        self.latency_spikes.load(Ordering::Relaxed)
+    }
+
+    /// Total injected faults (submit + wait; latency is not a fault).
+    pub fn faults_injected(&self) -> usize {
+        self.faults.load(Ordering::Relaxed)
+    }
+
+    /// Whether the schedule still injects (false once healed).
+    fn armed(&self) -> bool {
+        match self.opts.heal_after {
+            Some(n) => self.faults.load(Ordering::Relaxed) < n,
+            None => true,
+        }
+    }
+
+    /// One submission's fate: (submit_fault, wait_fault, latency).
+    fn draw(&self) -> (bool, bool, bool) {
+        let idx = self.submissions.fetch_add(1, Ordering::Relaxed) as u64;
+        let mut rng = Rng::new(self.opts.seed.wrapping_add(idx.wrapping_mul(0x9E37)));
+        let submit = (rng.unit_f32() as f64) < self.opts.submit_fault_rate;
+        let wait = (rng.unit_f32() as f64) < self.opts.wait_fault_rate;
+        let latency = (rng.unit_f32() as f64) < self.opts.latency_rate;
+        (submit, wait, latency)
+    }
+}
+
+impl HwBackend for ChaosBackend {
+    fn kind(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn resolve(&self, name: &str) -> Result<SegmentId> {
+        self.inner.resolve(name)
+    }
+
+    fn segment_desc(&self, id: SegmentId) -> &SegmentDesc {
+        self.inner.segment_desc(id)
+    }
+
+    fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+        self.inner.run(id, inputs)
+    }
+
+    fn run_batch(
+        &self,
+        id: SegmentId,
+        batch: &[Vec<&QTensor>],
+    ) -> Result<Vec<Vec<QTensor>>> {
+        self.inner.run_batch(id, batch)
+    }
+
+    fn submit_batch(
+        &self,
+        id: SegmentId,
+        batch: Vec<Vec<QTensor>>,
+    ) -> Result<SubmitHandle> {
+        if self.dead.load(Ordering::Relaxed) {
+            bail!("chaos: backend is dead (injected persistent failure)");
+        }
+        let (submit_fault, wait_fault, latency) = self.draw();
+        if latency {
+            self.latency_spikes.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.opts.latency);
+        }
+        if submit_fault && self.armed() {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            self.submit_faults.fetch_add(1, Ordering::Relaxed);
+            // the batch drops here untouched — like an abandoned round,
+            // no input was mutated, so a resubmission is bit-identical
+            bail!(
+                "chaos: injected submit fault on segment {} \
+                 (transient; retry with fresh handles)",
+                self.inner.segment_desc(id).name
+            );
+        }
+        if wait_fault && self.armed() {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            self.wait_faults.fetch_add(1, Ordering::Relaxed);
+            let name = self.inner.segment_desc(id).name.clone();
+            let now = Instant::now();
+            // surfaced at wait, per the error-surfacing contract: the
+            // handle is valid, its completion is the injected error
+            return Ok(SubmitHandle::ready(
+                Err(anyhow!(
+                    "chaos: injected wait fault on segment {name} \
+                     (transient; retry with fresh handles)"
+                )),
+                now,
+                now,
+            ));
+        }
+        self.inner.submit_batch(id, batch)
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.inner.queue_depth()
+    }
+
+    fn submit_payload_bytes(&self) -> u64 {
+        self.inner.submit_payload_bytes()
+    }
+
+    fn set_conv_threads(&self, threads: usize) {
+        self.inner.set_conv_threads(threads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::quant::quantize_tensor;
+    use crate::runtime::RefBackend;
+    use crate::tensor::TensorF;
+
+    fn image(seed: u64) -> TensorF {
+        let mut rng = Rng::new(seed);
+        let n = 3 * config::IMG_H * config::IMG_W;
+        TensorF::from_vec(
+            &[1, 3, config::IMG_H, config::IMG_W],
+            (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect(),
+        )
+    }
+
+    fn chaotic(opts: ChaosOptions) -> (ChaosBackend, QTensor, SegmentId) {
+        let inner = Arc::new(RefBackend::synthetic(7));
+        let img = quantize_tensor(&image(1), inner.qp().aexp("image"));
+        let be = ChaosBackend::new(inner, opts);
+        let id = be.resolve("fe_fs").unwrap();
+        (be, img, id)
+    }
+
+    #[test]
+    fn clean_schedule_is_transparent_and_bit_exact() {
+        let (be, img, id) = chaotic(ChaosOptions::default());
+        let want = be.run(id, &[&img]).unwrap();
+        let got = be.submit(id, vec![img]).unwrap().wait().unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.t.data(), b.t.data());
+            assert_eq!(a.exp, b.exp);
+        }
+        assert_eq!(be.faults_injected(), 0);
+        assert_eq!(be.kind(), "chaos");
+        assert_eq!(be.manifest().segments.len(), 19);
+    }
+
+    #[test]
+    fn same_seed_same_fault_schedule() {
+        let opts = ChaosOptions {
+            seed: 42,
+            submit_fault_rate: 0.3,
+            wait_fault_rate: 0.3,
+            ..Default::default()
+        };
+        let run = |opts: ChaosOptions| -> Vec<bool> {
+            let (be, img, id) = chaotic(opts);
+            (0..20)
+                .map(|_| {
+                    match be.submit(id, vec![img.clone()]) {
+                        Err(_) => false,
+                        Ok(h) => h.wait().is_ok(),
+                    }
+                })
+                .collect()
+        };
+        assert_eq!(run(opts), run(opts), "seeded schedule is deterministic");
+        let other = ChaosOptions { seed: 43, ..opts };
+        assert_ne!(run(opts), run(other), "different seeds differ");
+    }
+
+    #[test]
+    fn wait_faults_surface_at_wait_not_submit() {
+        let (be, img, id) = chaotic(ChaosOptions {
+            seed: 1,
+            wait_fault_rate: 1.0,
+            ..Default::default()
+        });
+        let h = be.submit(id, vec![img]).unwrap();
+        let err = h.wait().unwrap_err();
+        assert!(format!("{err:#}").contains("injected wait fault"));
+        assert_eq!(be.wait_faults_injected(), 1);
+        assert_eq!(be.submit_faults_injected(), 0);
+    }
+
+    #[test]
+    fn heal_after_bounds_the_schedule() {
+        let (be, img, id) = chaotic(ChaosOptions {
+            seed: 5,
+            submit_fault_rate: 1.0,
+            heal_after: Some(3),
+            ..Default::default()
+        });
+        let mut failures = 0;
+        for _ in 0..10 {
+            if be.submit(id, vec![img.clone()]).is_err() {
+                failures += 1;
+            }
+        }
+        assert_eq!(failures, 3, "exactly heal_after faults fire");
+        assert_eq!(be.faults_injected(), 3);
+        // healed: submissions now execute and match the blocking path
+        let want = be.run(id, &[&img]).unwrap();
+        let got = be.submit(id, vec![img]).unwrap().wait().unwrap();
+        assert_eq!(got[0].t.data(), want[0].t.data());
+    }
+
+    #[test]
+    fn dead_backend_fails_until_revived() {
+        let (be, img, id) = chaotic(ChaosOptions::default());
+        be.set_dead(true);
+        assert!(be.is_dead());
+        let err = be.submit(id, vec![img.clone()]).unwrap_err();
+        assert!(format!("{err:#}").contains("dead"));
+        be.set_dead(false);
+        assert!(be.submit(id, vec![img]).unwrap().wait().is_ok());
+    }
+
+    #[test]
+    fn latency_spikes_delay_but_do_not_corrupt() {
+        let (be, img, id) = chaotic(ChaosOptions {
+            seed: 9,
+            latency_rate: 1.0,
+            latency: Duration::from_millis(2),
+            ..Default::default()
+        });
+        let want = be.run(id, &[&img]).unwrap();
+        let t0 = Instant::now();
+        let got = be.submit(id, vec![img]).unwrap().wait().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+        assert_eq!(be.latency_spikes_injected(), 1);
+        assert_eq!(got[0].t.data(), want[0].t.data());
+    }
+}

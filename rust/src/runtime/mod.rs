@@ -83,9 +83,50 @@
 //! [`HwBackend::submit_payload_bytes`]) is intentionally approximate
 //! (Relaxed counters): it feeds placement heuristics and reports, never
 //! correctness decisions.
+//!
+//! # The fault/retry contract (PR 7)
+//!
+//! Real devices fault; the serving stack retries. The rules that make a
+//! retry safe:
+//!
+//! * **Which errors are retryable** — any error surfaced at `submit*`
+//!   or at `wait` *before the session's Commit stage* is retryable:
+//!   sessions are mutated only at Commit (see the migration-ordering
+//!   rule above), so a failed submission has, by construction, not
+//!   changed any cross-frame state. Input-validation errors (shape /
+//!   exponent mismatches from [`check_inputs`]) are deterministic and
+//!   therefore *not worth* retrying, but retrying them is still safe —
+//!   the retry policy bounds attempts rather than classifying errors.
+//! * **Idempotence requirement on `submit*`** — a backend must treat a
+//!   failed submission as if it never happened: inputs are read-only
+//!   (never mutated, per the ownership-transfer rule), no partial
+//!   outputs escape, and internal accounting (queue depth, payload
+//!   bytes) must not leak. The caller re-submits *cloned handles* of
+//!   the same CoW payloads (O(1)), so attempt N+1 computes exactly what
+//!   attempt N would have — bit-exactness under retry is inherited from
+//!   bit-exactness of `run_batch`.
+//! * **FIFO ordering under retry** — a retried submission is a *new*
+//!   submission at the tail of the queue. The failed attempt either
+//!   never enqueued (submit error) or completed-with-error in order
+//!   (wait error); either way the queue position is consumed and FIFO
+//!   order over *successful* completions is preserved. Callers must
+//!   not hold handles from the failed attempt across the retry.
+//! * **Worker survival** — a queue worker must outlive job failures
+//!   *and* job panics: `RefBackend`'s worker catches unwinds and
+//!   delivers them as `Err` completions, so one poisoned job can never
+//!   wedge the FIFO or leak `queue_depth` (pinned by its
+//!   `worker_survives_*` tests).
+//!
+//! [`chaos::ChaosBackend`] wraps any backend with seeded deterministic
+//! faults (submit error, wait error, latency spike, transient-then-heal,
+//! death) so every recovery path above is testable from a clean
+//! checkout; `coordinator::RetryPolicy` is the consumer of this
+//! contract.
 
+pub mod chaos;
 pub mod ref_backend;
 
+pub use chaos::{ChaosBackend, ChaosOptions};
 pub use ref_backend::RefBackend;
 
 use std::collections::HashMap;

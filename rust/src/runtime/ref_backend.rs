@@ -169,13 +169,31 @@ impl RefBackend {
                 while let Ok(job) = rx.recv() {
                     let HwJob { id, batch, resp } = job;
                     let t0 = Instant::now();
-                    let outs = {
-                        let refs: Vec<Vec<&QTensor>> = batch
-                            .iter()
-                            .map(|inputs| inputs.iter().collect())
-                            .collect();
-                        exec.exec_batch(id, &refs)
-                    };
+                    // catch panics as well as Errs: one poisoned job must
+                    // not kill the worker (which would wedge the FIFO for
+                    // every later submission and leak `inflight` forever)
+                    // — the fault/retry contract's worker-survival rule
+                    let outs = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            let refs: Vec<Vec<&QTensor>> = batch
+                                .iter()
+                                .map(|inputs| inputs.iter().collect())
+                                .collect();
+                            exec.exec_batch(id, &refs)
+                        }),
+                    )
+                    .unwrap_or_else(|payload| {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| (*s).to_string())
+                            .or_else(|| {
+                                payload.downcast_ref::<String>().cloned()
+                            })
+                            .unwrap_or_else(|| {
+                                "non-string panic payload".to_string()
+                            });
+                        Err(anyhow!("backend job panicked: {msg}"))
+                    });
                     // retire the input handles *before* delivering the
                     // completion: once a submitter's wait returns, its
                     // inputs are guaranteed dropped (so e.g. a payload
@@ -675,6 +693,79 @@ mod tests {
         let dyn_be: &dyn HwBackend = &be;
         assert_eq!(dyn_be.submit_payload_bytes(), be.submit_payload_bytes());
         assert!(be.submit_payload_bytes() > 0);
+    }
+
+    #[test]
+    fn worker_survives_job_error_without_wedging_the_queue() {
+        // a manifest whose cvd_b0_mid1 output exponent disagrees with
+        // what the model computes: the submit-side input check passes,
+        // the worker-side output check fails -> an Err completion that
+        // must not poison the FIFO or leak the inflight counter
+        let mut manifest = Manifest::synthetic();
+        let qp = Arc::new(QuantParams::synthetic(&manifest, 7));
+        let bad = manifest
+            .segments
+            .iter_mut()
+            .find(|s| s.name == "cvd_b0_mid1")
+            .unwrap();
+        bad.outputs[0].exp += 1;
+        let in_desc = bad.inputs[0].clone();
+        let be = RefBackend::new(qp, manifest).unwrap();
+
+        let bad_id = be.resolve("cvd_b0_mid1").unwrap();
+        let x = QTensor::zeros(&in_desc.shape, in_desc.exp);
+        let err = be
+            .submit(bad_id, vec![x])
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("exponent"), "{err:#}");
+        // the queue keeps serving: an untouched segment still executes
+        // bit-exactly and the occupancy counter returns to zero
+        let fe = be.resolve("fe_fs").unwrap();
+        let img = quantize_tensor(&random_image(3), be.qp().aexp("image"));
+        let want = be.run(fe, &[&img]).unwrap();
+        let got = be.submit(fe, vec![img]).unwrap().wait().unwrap();
+        assert_eq!(got[0].t.data(), want[0].t.data());
+        assert_eq!(be.queue_depth(), 0, "failed job retired from the count");
+    }
+
+    #[test]
+    fn worker_survives_job_panic() {
+        // a manifest that declares fe_fs's input as 1-D: the submit-side
+        // check passes a matching 1-D tensor, but the model's first conv
+        // asserts 4-D and panics *on the worker thread*. The worker must
+        // convert the panic to an Err completion and keep draining jobs
+        // (before PR 7 the panic killed the worker: every later wait
+        // hung on "backend worker dropped" and queue_depth leaked)
+        let mut manifest = Manifest::synthetic();
+        let qp = Arc::new(QuantParams::synthetic(&manifest, 7));
+        let seg = manifest
+            .segments
+            .iter_mut()
+            .find(|s| s.name == "fe_fs")
+            .unwrap();
+        seg.inputs[0].shape = vec![48];
+        let in_exp = seg.inputs[0].exp;
+        let be = RefBackend::new(qp, manifest).unwrap();
+
+        let fe = be.resolve("fe_fs").unwrap();
+        let bad = QTensor::zeros(&[48], in_exp);
+        let err = be.submit(fe, vec![bad]).unwrap().wait().unwrap_err();
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+        // the worker is alive: a conv-free segment still serves, and the
+        // panicked job neither wedged the FIFO nor leaked queue_depth
+        let id = be.resolve("cl_state").unwrap();
+        let d = be.segment_desc(id).clone();
+        let gates = QTensor::zeros(&d.inputs[0].shape, d.inputs[0].exp);
+        let c = QTensor::zeros(&d.inputs[1].shape, d.inputs[1].exp);
+        let outs = be
+            .submit(id, vec![gates, c])
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(be.queue_depth(), 0);
     }
 
     /// Delegates `run`/`run_batch` but keeps the trait's default

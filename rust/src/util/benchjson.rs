@@ -48,6 +48,16 @@ pub struct BenchRecord {
     /// Sessions migrated between shards during the measurement. Only
     /// meaningful alongside `shards`.
     pub migrations: Option<usize>,
+    /// Checkpoint traffic the measurement wrote (PR 7 durability
+    /// records in `benches/serve.rs`): total bytes of session
+    /// checkpoints. `None` for records without a durability path.
+    pub checkpoint_bytes: Option<f64>,
+    /// Wall seconds spent restoring sessions from checkpoints. Only
+    /// meaningful alongside `checkpoint_bytes`.
+    pub restore_seconds: Option<f64>,
+    /// HW-call retries the recovery policy issued during the
+    /// measurement (PR 7 chaos records). `None` when retry is off.
+    pub retries: Option<usize>,
 }
 
 impl BenchRecord {
@@ -74,6 +84,9 @@ impl BenchRecord {
             copy_bytes_after: None,
             shards: None,
             migrations: None,
+            checkpoint_bytes: None,
+            restore_seconds: None,
+            retries: None,
         }
     }
 }
@@ -120,6 +133,15 @@ pub fn to_json(records: &[BenchRecord]) -> String {
         }
         if let Some(m) = r.migrations {
             let _ = write!(out, ", \"migrations\": {m}");
+        }
+        if let Some(c) = r.checkpoint_bytes {
+            let _ = write!(out, ", \"checkpoint_bytes\": {c:.1}");
+        }
+        if let Some(rs) = r.restore_seconds {
+            let _ = write!(out, ", \"restore_seconds\": {rs:.6}");
+        }
+        if let Some(n) = r.retries {
+            let _ = write!(out, ", \"retries\": {n}");
         }
         let _ = write!(
             out,
@@ -240,6 +262,7 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
         let (mut ns, mut gops, mut threads) = (None, None, None);
         let (mut cb_before, mut cb_after) = (None, None);
         let (mut shards, mut migrations) = (None, None);
+        let (mut ckpt_bytes, mut restore_s, mut retries) = (None, None, None);
         loop {
             let key = p.string()?;
             p.eat(b':')?;
@@ -253,6 +276,9 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
                 "copy_bytes_after" => cb_after = Some(p.number()?),
                 "shards" => shards = Some(p.number()? as usize),
                 "migrations" => migrations = Some(p.number()? as usize),
+                "checkpoint_bytes" => ckpt_bytes = Some(p.number()?),
+                "restore_seconds" => restore_s = Some(p.number()?),
+                "retries" => retries = Some(p.number()? as usize),
                 other => bail!("unknown bench-record key '{other}'"),
             }
             match p.peek() {
@@ -271,6 +297,9 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
             copy_bytes_after: cb_after,
             shards,
             migrations,
+            checkpoint_bytes: ckpt_bytes,
+            restore_seconds: restore_s,
+            retries,
         });
         match p.peek() {
             Some(b',') => p.eat(b',')?,
@@ -403,6 +432,25 @@ pub fn validate(path: &Path) -> Result<usize> {
             "op '{}': migrations without a shards field",
             r.op
         );
+        // durability records (PR 7): finite and non-negative, and a
+        // restore time only means something next to checkpoint traffic
+        for (k, v) in [
+            ("checkpoint_bytes", r.checkpoint_bytes),
+            ("restore_seconds", r.restore_seconds),
+        ] {
+            if let Some(v) = v {
+                anyhow::ensure!(
+                    v.is_finite() && v >= 0.0,
+                    "op '{}': bad {k} {v}",
+                    r.op
+                );
+            }
+        }
+        anyhow::ensure!(
+            r.restore_seconds.is_none() || r.checkpoint_bytes.is_some(),
+            "op '{}': restore_seconds without a checkpoint_bytes field",
+            r.op
+        );
     }
     Ok(records.len())
 }
@@ -489,6 +537,40 @@ mod tests {
         // so is a migration count with no fleet size
         let mut bad = rec("x", 1, 1.0);
         bad.migrations = Some(1);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn durability_fields_roundtrip_and_validate() {
+        let mut r = rec("serve_checkpoint_restart", 1, 100.0);
+        r.checkpoint_bytes = Some(2_048_000.0);
+        r.restore_seconds = Some(0.0125);
+        r.retries = Some(4);
+        let parsed = from_json(&to_json(&[r.clone()])).unwrap();
+        assert_eq!(parsed, vec![r.clone()]);
+        // fault-free records keep emitting the old schema
+        let bare = to_json(&[rec("a", 1, 1.0)]);
+        assert!(!bare.contains("checkpoint_bytes"));
+        assert!(!bare.contains("restore_seconds"));
+        assert!(!bare.contains("retries"));
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_benchjson_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        let _ = std::fs::remove_file(&path);
+        merge_into(&path, &[r]).unwrap();
+        assert_eq!(validate(&path).unwrap(), 1);
+        // a negative restore time is schema drift
+        let mut bad = rec("x", 1, 1.0);
+        bad.checkpoint_bytes = Some(10.0);
+        bad.restore_seconds = Some(-0.5);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        // so is a restore time with no checkpoint traffic
+        let mut bad = rec("x", 1, 1.0);
+        bad.restore_seconds = Some(0.5);
         std::fs::write(&path, to_json(&[bad])).unwrap();
         assert!(validate(&path).is_err());
         std::fs::remove_file(&path).unwrap();

@@ -60,6 +60,56 @@ impl Rng {
     }
 }
 
+/// Streaming FNV-1a (64-bit) — a tiny, deterministic, platform-stable
+/// content hash for fingerprinting (checkpoint compatibility checks),
+/// *not* for adversarial collision resistance. `std`'s `DefaultHasher`
+/// is explicitly unstable across releases, which a fingerprint persisted
+/// next to checkpoints can't tolerate.
+#[derive(Clone, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    /// Hash a length-prefixed byte string (so `("ab","c")` and
+    /// `("a","bc")` digest differently).
+    #[inline]
+    pub fn write_str(&mut self, s: &str) {
+        self.write(&(s.len() as u64).to_le_bytes());
+        self.write(s.as_bytes());
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_i64(&mut self, v: i64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Median / std aggregation as reported in Table II of the paper.
 #[derive(Clone, Debug, Default)]
 pub struct TimingStats {
@@ -206,6 +256,25 @@ mod tests {
         assert!((t.std() - 1.0).abs() < 1e-12);
         t.push(4.0);
         assert_eq!(t.median(), 2.5);
+    }
+
+    #[test]
+    fn fnv_is_deterministic_and_prefix_sensitive() {
+        let mut a = Fnv64::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Fnv64::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish(), "length prefix separates fields");
+        let mut c = Fnv64::new();
+        c.write_str("ab");
+        c.write_str("c");
+        assert_eq!(a.finish(), c.finish());
+        // known-stable digest: the fingerprint format must not drift
+        let mut d = Fnv64::new();
+        d.write(b"fadec");
+        assert_eq!(d.finish(), 0xfa2238c1687ff5b0);
     }
 
     #[test]

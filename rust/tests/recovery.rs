@@ -1,0 +1,447 @@
+//! Fault-tolerance tests (PR 7): seeded chaos schedules — submit
+//! faults, wait faults, latency spikes, and a shard dying mid-serving —
+//! must leave every depth map bit-identical to a fault-free run, with
+//! the recovery machinery's work visible in `RecoveryStats`; and a
+//! server killed and rebuilt purely from its session checkpoints must
+//! continue each stream exactly where it left off. Together these pin
+//! the PR-7 tentpole: durability and recovery are latency features,
+//! never semantic ones.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fadec::coordinator::{
+    Coordinator, PipelineOptions, Placement, RetryPolicy, SessionStore,
+    ShardRouter, ShardRouterOptions, StreamServer,
+};
+use fadec::data::dataset::Scene;
+use fadec::poses::Mat4;
+use fadec::runtime::{ChaosBackend, ChaosOptions, HwBackend, RefBackend};
+use fadec::tensor::TensorF;
+
+const SEED: u64 = 7;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fadec_recovery_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn make_scenes(n_streams: usize, frames: usize, base_seed: u64) -> Vec<Scene> {
+    (0..n_streams)
+        .map(|s| {
+            Scene::synthetic(&format!("rc-{s}"), frames, base_seed + s as u64)
+        })
+        .collect()
+}
+
+/// Fault-free single-stream reference on a clean backend.
+fn solo_run(scene: &Scene, n: usize) -> Vec<TensorF> {
+    let mut coord =
+        Coordinator::on_ref_backend(SEED, PipelineOptions::default()).unwrap();
+    (0..n)
+        .map(|i| {
+            let img = scene.normalized_image(i);
+            coord.step(&img, &scene.poses[i]).unwrap().depth
+        })
+        .collect()
+}
+
+/// A fast-backoff retry policy (tests should not sleep for real).
+fn fast_retry(attempts: usize) -> RetryPolicy {
+    RetryPolicy {
+        backoff: Duration::from_micros(50),
+        ..RetryPolicy::with_attempts(attempts)
+    }
+}
+
+/// Serve `frames` lockstep pipelined rounds of every stream on a
+/// `StreamServer` over the given backend, returning depths per stream.
+fn serve_pipelined(
+    backend: Arc<dyn HwBackend>,
+    qp: Arc<fadec::model::weights::QuantParams>,
+    opts: PipelineOptions,
+    scenes: &[Scene],
+    frames: usize,
+) -> (Vec<Vec<TensorF>>, fadec::metrics::RecoveryStats) {
+    let mut server = StreamServer::new(backend, qp, opts).unwrap();
+    let streams: Vec<usize> =
+        scenes.iter().map(|_| server.open_stream()).collect();
+    let imgs: Vec<Vec<TensorF>> = (0..frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..frames)
+        .map(|i| {
+            streams
+                .iter()
+                .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                .collect()
+        })
+        .collect();
+    let results = server.run_pipelined(&rounds, 2).unwrap();
+    let mut depths: Vec<Vec<TensorF>> =
+        scenes.iter().map(|_| Vec::new()).collect();
+    for mut round in results {
+        round.sort_by_key(|&(sid, _)| sid);
+        for (sid, out) in round {
+            depths[sid].push(out.depth);
+        }
+    }
+    let report = server.report();
+    let rec = server.recovery_stats();
+    if rec.any() {
+        assert!(report.contains("recovery:"), "report surfaces recovery");
+    }
+    (depths, rec)
+}
+
+fn assert_depths_eq(got: &[Vec<TensorF>], want: &[Vec<TensorF>], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: stream count");
+    for (s, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.len(), w.len(), "{tag}: stream {s} frame count");
+        for (i, (a, b)) in g.iter().zip(w).enumerate() {
+            assert_eq!(
+                a.data(),
+                b.data(),
+                "{tag}: stream {s} frame {i} diverged"
+            );
+        }
+    }
+}
+
+/// One chaos sweep: serve under the given schedule with retry enabled
+/// and demand bit-exact outputs vs the same serving on a clean backend.
+fn chaos_sweep(
+    tag: &str,
+    chaos_opts: ChaosOptions,
+    retry: RetryPolicy,
+) -> (Arc<ChaosBackend>, fadec::metrics::RecoveryStats) {
+    let (n_streams, frames) = (2, 3);
+    let scenes = make_scenes(n_streams, frames, 80);
+    // reference: identical schedule, clean backend, default options
+    let clean = RefBackend::synthetic(SEED);
+    let clean_qp = Arc::clone(clean.qp());
+    let (want, clean_rec) = serve_pipelined(
+        Arc::new(clean),
+        clean_qp,
+        PipelineOptions::default(),
+        &scenes,
+        frames,
+    );
+    assert!(!clean_rec.any(), "{tag}: clean run needs no recovery");
+    // chaotic run
+    let inner = RefBackend::synthetic(SEED);
+    let qp = Arc::clone(inner.qp());
+    let chaos = Arc::new(ChaosBackend::new(Arc::new(inner), chaos_opts));
+    let opts = PipelineOptions { retry, ..Default::default() };
+    let (got, rec) = serve_pipelined(
+        Arc::clone(&chaos) as Arc<dyn HwBackend>,
+        qp,
+        opts,
+        &scenes,
+        frames,
+    );
+    assert_depths_eq(&got, &want, tag);
+    (chaos, rec)
+}
+
+#[test]
+fn submit_faults_recover_bit_exactly() {
+    let (chaos, rec) = chaos_sweep(
+        "submit",
+        ChaosOptions {
+            seed: 3,
+            submit_fault_rate: 1.0,
+            heal_after: Some(4),
+            ..Default::default()
+        },
+        fast_retry(6),
+    );
+    assert_eq!(chaos.faults_injected(), 4, "schedule heals after 4");
+    assert_eq!(rec.submit_faults, 4);
+    assert_eq!(rec.retries, 4, "every fault cost exactly one retry");
+    assert_eq!(rec.giveups, 0);
+}
+
+#[test]
+fn wait_faults_recover_bit_exactly() {
+    let (chaos, rec) = chaos_sweep(
+        "wait",
+        ChaosOptions {
+            seed: 5,
+            wait_fault_rate: 1.0,
+            heal_after: Some(3),
+            ..Default::default()
+        },
+        fast_retry(5),
+    );
+    assert_eq!(chaos.faults_injected(), 3);
+    assert_eq!(rec.wait_faults, 3);
+    assert_eq!(rec.retries, 3);
+    assert_eq!(rec.giveups, 0);
+}
+
+#[test]
+fn latency_spikes_delay_but_never_diverge() {
+    let (chaos, rec) = chaos_sweep(
+        "latency",
+        ChaosOptions {
+            seed: 9,
+            latency_rate: 1.0,
+            latency: Duration::from_micros(200),
+            ..Default::default()
+        },
+        fast_retry(2),
+    );
+    assert!(chaos.latency_spikes_injected() > 0, "spikes fired");
+    assert_eq!(chaos.faults_injected(), 0, "latency is not a fault");
+    assert_eq!(rec.retries, 0, "nothing to retry");
+}
+
+#[test]
+fn mixed_chaos_sweep_is_bit_exact() {
+    let (chaos, rec) = chaos_sweep(
+        "mixed",
+        ChaosOptions {
+            seed: 17,
+            submit_fault_rate: 0.5,
+            wait_fault_rate: 0.5,
+            latency_rate: 0.25,
+            latency: Duration::from_micros(100),
+            heal_after: Some(6),
+            ..Default::default()
+        },
+        fast_retry(8),
+    );
+    // the seeded schedule injects up to 6 faults over dozens of
+    // submissions; every one must have been absorbed by a retry
+    assert!(chaos.faults_injected() >= 1, "schedule injected something");
+    assert_eq!(
+        rec.retries,
+        chaos.faults_injected(),
+        "one retry per injected fault"
+    );
+    assert_eq!(rec.submit_faults + rec.wait_faults, chaos.faults_injected());
+    assert_eq!(rec.giveups, 0);
+}
+
+#[test]
+fn shard_death_mid_window_fails_over_bit_exactly() {
+    let dir = tmp_dir("failover");
+    let (n_streams, frames) = (4, 6);
+    let scenes = make_scenes(n_streams, frames, 60);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+
+    // shard 0 is killable (chaos-wrapped), shard 1 is clean
+    let inner0 = RefBackend::synthetic(SEED);
+    let qp0 = Arc::clone(inner0.qp());
+    let chaos =
+        Arc::new(ChaosBackend::new(Arc::new(inner0), ChaosOptions::default()));
+    let be1 = RefBackend::synthetic(SEED);
+    let qp1 = Arc::clone(be1.qp());
+    let opts =
+        PipelineOptions { retry: fast_retry(3), ..Default::default() };
+    let mut router = ShardRouter::new(
+        vec![
+            (Arc::clone(&chaos) as Arc<dyn HwBackend>, qp0),
+            (Arc::new(be1) as Arc<dyn HwBackend>, qp1),
+        ],
+        opts,
+        ShardRouterOptions {
+            placement: Placement::RoundRobin,
+            auto_rebalance: false,
+            imbalance_threshold: 1.5,
+        },
+    )
+    .unwrap();
+    let store = SessionStore::open(
+        &dir,
+        8,
+        chaos.manifest(),
+        router.engine(0).qp().as_ref(),
+    )
+    .unwrap();
+    router.attach_session_store(store);
+
+    let streams: Vec<usize> =
+        (0..n_streams).map(|_| router.open_stream()).collect();
+    let on_dead: Vec<usize> = streams
+        .iter()
+        .copied()
+        .filter(|&s| router.shard_of(s) == Some(0))
+        .collect();
+    assert!(!on_dead.is_empty(), "round-robin placed streams on shard 0");
+
+    let imgs: Vec<Vec<TensorF>> = (0..frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let rounds = |lo: usize, hi: usize| -> Vec<Vec<(usize, &TensorF, &Mat4)>> {
+        (lo..hi)
+            .map(|i| {
+                streams
+                    .iter()
+                    .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                    .collect()
+            })
+            .collect()
+    };
+    let mut got: Vec<Vec<TensorF>> = (0..n_streams).map(|_| Vec::new()).collect();
+    let take = |results: Vec<Vec<(usize, fadec::coordinator::FrameOutput)>>,
+                    got: &mut Vec<Vec<TensorF>>| {
+        for round in results {
+            for (sid, out) in round {
+                got[sid].push(out.depth);
+            }
+        }
+    };
+
+    // window 1 (frames 0..2): both shards healthy
+    take(router.run_rounds(&rounds(0, 2), 2).unwrap(), &mut got);
+    // shard 0 dies; window 2 (frames 2..4) begins unaware — its retries
+    // exhaust, failover ships the victims through checkpoints to shard
+    // 1 and replays the unfinished rounds there
+    chaos.set_dead(true);
+    take(router.run_rounds(&rounds(2, 4), 2).unwrap(), &mut got);
+    for &s in &on_dead {
+        assert_eq!(router.shard_of(s), Some(1), "victim {s} failed over");
+        assert_eq!(router.session(s).unwrap().migrations(), 1);
+    }
+    // window 3 (frames 4..6): serving continues on the survivor alone
+    take(router.run_rounds(&rounds(4, 6), 2).unwrap(), &mut got);
+
+    assert_depths_eq(&got, &solo, "failover");
+    let rec = router.recovery_stats();
+    assert_eq!(rec.shard_failovers, 1, "one shard died once");
+    assert_eq!(
+        rec.checkpoint_migrations,
+        on_dead.len(),
+        "every victim shipped through its checkpoint"
+    );
+    assert!(rec.retries >= 1, "the dead shard was retried before failover");
+    assert!(rec.giveups >= 1, "persistent death exhausted a retry budget");
+    assert!(rec.checkpoint_bytes > 0);
+    assert!(router.report().contains("recovery:"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_and_restart_rebuilds_purely_from_checkpoints() {
+    let dir = tmp_dir("restart");
+    let (n_streams, frames, cut) = (2, 6, 3);
+    let scenes = make_scenes(n_streams, frames, 90);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let opts = PipelineOptions::default();
+
+    // serve the first half, checkpoint every stream, then "crash"
+    // (drop the server — nothing survives but the checkpoint files)
+    {
+        let mut server = StreamServer::on_ref_backend(SEED, opts).unwrap();
+        let mut store = SessionStore::open(
+            &dir,
+            n_streams,
+            server.engine().backend().manifest(),
+            server.engine().qp().as_ref(),
+        )
+        .unwrap();
+        for _ in 0..n_streams {
+            server.open_stream();
+        }
+        for i in 0..cut {
+            for s in 0..n_streams {
+                let img = scenes[s].normalized_image(i);
+                let out =
+                    server.step_stream(s, &img, &scenes[s].poses[i]).unwrap();
+                assert_eq!(out.depth.data(), solo[s][i].data());
+            }
+        }
+        for s in 0..n_streams {
+            store.save(server.session(s)).unwrap();
+        }
+        assert!(store.stats().checkpoint_bytes > 0);
+    }
+
+    // restart: a brand-new server adopts every on-disk session and
+    // continues each stream bit-exactly from the checkpointed frame
+    let mut server = StreamServer::on_ref_backend(SEED, opts).unwrap();
+    let mut store = SessionStore::open(
+        &dir,
+        n_streams,
+        server.engine().backend().manifest(),
+        server.engine().qp().as_ref(),
+    )
+    .unwrap();
+    let ids = store.list_checkpoints().unwrap();
+    assert_eq!(ids, (0..n_streams).collect::<Vec<_>>());
+    for id in ids {
+        let session = store.load(id, server.engine().qp().as_ref()).unwrap();
+        assert_eq!(server.open_stream_restored(session).unwrap(), id);
+    }
+    assert_eq!(store.stats().restores, n_streams);
+    for i in cut..frames {
+        for s in 0..n_streams {
+            let img = scenes[s].normalized_image(i);
+            let out =
+                server.step_stream(s, &img, &scenes[s].poses[i]).unwrap();
+            assert_eq!(
+                out.depth.data(),
+                solo[s][i].data(),
+                "stream {s} frame {i} after restart"
+            );
+        }
+    }
+    // adopting out of order is refused (ids are dense slots)
+    let mut other = StreamServer::on_ref_backend(SEED, opts).unwrap();
+    let session = store.load(1, other.engine().qp().as_ref()).unwrap();
+    let err = other.open_stream_restored(session).unwrap_err();
+    assert!(format!("{err:#}").contains("ascending id order"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lru_paged_serving_matches_continuous() {
+    // two streams served through a capacity-1 store: every round trip
+    // suspends one stream to disk and restores the other, and the
+    // depths must match streams that never left memory
+    let dir = tmp_dir("paged");
+    let (n_streams, frames) = (2, 3);
+    let scenes = make_scenes(n_streams, frames, 70);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let coord =
+        Coordinator::on_ref_backend(SEED, PipelineOptions::default()).unwrap();
+    let mut store = SessionStore::open(
+        &dir,
+        1,
+        coord.engine().backend().manifest(),
+        coord.engine().qp().as_ref(),
+    )
+    .unwrap();
+    for (s, _) in scenes.iter().enumerate() {
+        store.check_in(coord.engine().new_session(s)).unwrap();
+    }
+    let qp = Arc::clone(coord.engine().qp());
+    for i in 0..frames {
+        for (s, scene) in scenes.iter().enumerate() {
+            let mut session = store.check_out(s, &qp).unwrap();
+            let img = scene.normalized_image(i);
+            let out = coord
+                .engine()
+                .step_session(&mut session, &img, &scene.poses[i])
+                .unwrap();
+            assert_eq!(
+                out.depth.data(),
+                solo[s][i].data(),
+                "stream {s} frame {i} under paging"
+            );
+            store.check_in(session).unwrap();
+        }
+    }
+    let st = store.stats();
+    assert!(st.evictions >= 5, "capacity 1 pages constantly");
+    assert_eq!(st.evictions, st.restores + 1, "all but the last came back");
+    let _ = std::fs::remove_dir_all(&dir);
+}
