@@ -25,27 +25,34 @@
 //!    frames are served, every session is checkpointed to `DIR` via
 //!    `SessionStore`, the server is dropped ("crash"), and a fresh
 //!    server rebuilt purely from the on-disk TLV checkpoints serves the
-//!    rest — bit-identical to the uninterrupted run.
+//!    rest — bit-identical to the uninterrupted run;
+//! 7. **continuous** (`--continuous`, PR 8) — the same workload through
+//!    the `RoundScheduler` (`run_continuous`): admission control,
+//!    rounds formed from the ready set under a bounded in-flight
+//!    budget. With `--overload` the streams are admitted at 2x the
+//!    scheduler's capacity and the excess waits in the admission queue
+//!    — everyone still completes, bit-identical to per-stream stepping.
 //!
 //! All runs must produce bit-identical depth maps (asserted below);
-//! batching, pipelining, sharding, retries and checkpoint/restore are
-//! latency/durability mechanisms only. Runs from a clean checkout — no
-//! `artifacts/` needed: the segments are served by the pure-software
-//! RefBackend with synthetic calibration, and each stream gets its own
-//! procedurally generated video.
+//! batching, pipelining, sharding, retries, checkpoint/restore and
+//! continuous scheduling are latency/durability mechanisms only. Runs
+//! from a clean checkout — no `artifacts/` needed: the segments are
+//! served by the pure-software RefBackend with synthetic calibration,
+//! and each stream gets its own procedurally generated video.
 //!
 //!     cargo run --release --example multi_stream \
 //!         [-- --streams N --frames M --conv-threads T \
 //!             --pipeline-depth K --shards S --chaos \
-//!             --checkpoint-dir DIR]
+//!             --checkpoint-dir DIR --continuous --overload]
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fadec::config;
 use fadec::coordinator::{
-    PipelineOptions, RetryPolicy, SessionStore, ShardRouter,
-    ShardRouterOptions, StreamServer,
+    AdmissionPolicy, ContinuousStream, PipelineOptions, RetryPolicy,
+    SchedulerOptions, SessionStore, ShardRouter, ShardRouterOptions,
+    StreamDisposition, StreamServer,
 };
 use fadec::data::dataset::Scene;
 use fadec::poses::Mat4;
@@ -62,6 +69,8 @@ fn main() -> anyhow::Result<()> {
     let shards = args.get_usize("shards", 2);
     let chaos_mode = args.has("chaos");
     let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
+    let continuous = args.has("continuous");
+    let overload = args.has("overload");
 
     // one backend instance, shared by every stream; the server's engine
     // applies --conv-threads to it (output channels — and, in batched
@@ -414,6 +423,86 @@ fn main() -> anyhow::Result<()> {
             bytes as f64 / 1024.0,
             dir.display(),
         );
+    }
+
+    // --- mode 7 (--continuous): scheduler-formed rounds -------------------
+    // The workload again through `run_continuous`. Under --overload the
+    // scheduler's capacity is half the stream count: the excess arrivals
+    // park in the admission queue and backfill freed slots — nobody is
+    // lost, nothing diverges.
+    if continuous {
+        let mut cont_server = make_server()?;
+        for _ in 0..n_streams {
+            cont_server.open_stream();
+        }
+        let cont_streams: Vec<ContinuousStream> = (0..n_streams)
+            .map(|s| {
+                ContinuousStream::new(
+                    s,
+                    (0..frames)
+                        .map(|i| (&all_imgs[i][s], scenes[s].poses[i]))
+                        .collect(),
+                )
+            })
+            .collect();
+        let capacity =
+            if overload { (n_streams / 2).max(1) } else { n_streams };
+        let budget = 2;
+        let opts = SchedulerOptions {
+            capacity,
+            round_width: (capacity / 2).max(1),
+            admission: AdmissionPolicy::Queue { deadline_ticks: 0 },
+            inflight_budget: budget,
+            ..SchedulerOptions::default()
+        };
+        let t0 = Instant::now();
+        let out = cont_server.run_continuous(&cont_streams, &opts)?;
+        let cont_wall = t0.elapsed().as_secs_f64();
+        let st = &out.stats;
+        println!(
+            "continuous{}:  {:7.3} s wall, {:6.2} fps aggregate — \
+             capacity {capacity}, {} queued, fill {:.0}%, peak in-flight \
+             {}, {} backpressure stalls",
+            if overload { " (2x overload)" } else { "" },
+            cont_wall,
+            (n_streams * frames) as f64 / cont_wall.max(1e-9),
+            st.queued,
+            100.0 * st.fill_ratio(),
+            st.max_inflight,
+            st.backpressure_stalls,
+        );
+        // overload-safety invariants: everyone admitted (the excess via
+        // the queue), the in-flight budget never exceeded, and every
+        // stream completed bit-identically to per-stream stepping
+        assert_eq!(st.admitted, n_streams, "queue policy admits everyone");
+        assert_eq!(
+            st.queued,
+            n_streams - capacity,
+            "exactly the over-capacity arrivals waited in the queue"
+        );
+        assert!(
+            st.max_inflight <= budget,
+            "in-flight rounds stayed within the budget"
+        );
+        for (s, d) in out.dispositions.iter().enumerate() {
+            assert_eq!(
+                *d,
+                StreamDisposition::Completed,
+                "stream {s} must complete"
+            );
+            assert_eq!(out.outputs[s].len(), frames);
+            let depth = &out.outputs[s].last().expect("served frames").depth;
+            assert_eq!(
+                depth.data(),
+                seq_last[s].data(),
+                "stream {s}: continuous scheduling diverged from \
+                 per-stream stepping"
+            );
+        }
+        println!(
+            "bit-exact: continuous scheduling == per-stream stepping\n"
+        );
+        println!("{}", cont_server.report());
     }
     Ok(())
 }

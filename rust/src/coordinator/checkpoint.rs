@@ -20,9 +20,25 @@
 //!
 //! All paging traffic is accounted in a [`RecoveryStats`] (evictions,
 //! restores, checkpoint bytes) that servers fold into their reports.
+//!
+//! **Background writer (PR 8):** [`SessionStore::set_background`] moves
+//! eviction writes off the serving thread. The evicted session (an
+//! owned value that was about to be dropped anyway) is handed to a
+//! dedicated writer thread that serializes and writes it while serving
+//! continues; the store tracks the write as *pending* and settles it —
+//! folding bytes and measured write latency into `RecoveryStats`
+//! (`background_flushes` / `background_flush_seconds`), or surfacing
+//! the error — at the next synchronization point: a `check_out` of that
+//! stream, a `flush`, an explicit [`SessionStore::barrier`], or
+//! `set_background(false)`. Jobs are queued FIFO and the thread drains
+//! its queue before exiting (drop included), so an enqueued eviction is
+//! always durable by the time the store is gone.
 
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
@@ -46,6 +62,119 @@ fn join_u64(hi: i32, lo: i32) -> u64 {
     ((hi as u32 as u64) << 32) | (lo as u32 as u64)
 }
 
+/// Serialize one session into fingerprint-stamped checkpoint bytes —
+/// the pure (no I/O bookkeeping) core shared by the synchronous `save`
+/// path and the background writer thread.
+fn encode(
+    session: &StreamSession,
+    manifest_fp: u64,
+    qp_fp: u64,
+) -> Result<Vec<u8>> {
+    let mut tlv = session
+        .to_tlv()
+        .with_context(|| format!("serializing stream {}", session.id))?;
+    let [m_hi, m_lo] = split_u64(manifest_fp);
+    let [q_hi, q_lo] = split_u64(qp_fp);
+    tlv.insert(
+        FP_ENTRY,
+        TlvEntry {
+            exp: 0,
+            payload: TlvPayload::I32(Tensor::from_vec(
+                &[4],
+                vec![m_hi, m_lo, q_hi, q_lo],
+            )),
+        },
+    )?;
+    tlv.to_bytes()
+}
+
+/// One unit of work for the background writer thread.
+enum WriterJob {
+    /// Serialize + write this (owned, already-evicted) session.
+    Write {
+        session: StreamSession,
+        path: PathBuf,
+        manifest_fp: u64,
+        qp_fp: u64,
+    },
+    Stop,
+}
+
+/// `(stream id, Ok((bytes written, write seconds)) | Err)` per job.
+type WriterResult = (usize, Result<(u64, f64)>);
+
+fn writer_loop(
+    jobs: mpsc::Receiver<WriterJob>,
+    results: mpsc::Sender<WriterResult>,
+) {
+    while let Ok(job) = jobs.recv() {
+        match job {
+            WriterJob::Stop => break,
+            WriterJob::Write { session, path, manifest_fp, qp_fp } => {
+                let t0 = Instant::now();
+                let r = encode(&session, manifest_fp, qp_fp).and_then(
+                    |bytes| {
+                        fs::write(&path, &bytes).with_context(|| {
+                            format!(
+                                "writing checkpoint {}",
+                                path.display()
+                            )
+                        })?;
+                        Ok(bytes.len() as u64)
+                    },
+                );
+                let seconds = t0.elapsed().as_secs_f64();
+                let done =
+                    results.send((session.id, r.map(|b| (b, seconds))));
+                if done.is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Handle to the dedicated eviction-writer thread plus the ids whose
+/// writes are still in flight.
+struct BackgroundWriter {
+    jobs: mpsc::Sender<WriterJob>,
+    results: mpsc::Receiver<WriterResult>,
+    handle: Option<thread::JoinHandle<()>>,
+    pending: Vec<usize>,
+}
+
+impl Drop for BackgroundWriter {
+    /// The job channel is FIFO, so every eviction enqueued before the
+    /// `Stop` completes before the join returns: dropping the store
+    /// never loses an accepted write (only its stats, if un-drained).
+    fn drop(&mut self) {
+        let _ = self.jobs.send(WriterJob::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Settle one finished background write into the paging accounting.
+fn absorb(
+    stats: &mut RecoveryStats,
+    pending: &mut Vec<usize>,
+    (done, r): WriterResult,
+) -> Result<()> {
+    pending.retain(|&p| p != done);
+    match r {
+        Ok((bytes, seconds)) => {
+            stats.checkpoint_bytes += bytes;
+            stats.background_flushes += 1;
+            stats.background_flush_seconds += seconds;
+            Ok(())
+        }
+        Err(e) => Err(e.context(format!(
+            "background eviction of stream {done} failed (state lost)"
+        ))),
+    }
+}
+
 /// Durable, paged home for stream sessions. See the module docs.
 pub struct SessionStore {
     dir: PathBuf,
@@ -57,6 +186,8 @@ pub struct SessionStore {
     resident: Vec<(u64, StreamSession)>,
     tick: u64,
     stats: RecoveryStats,
+    /// Present while background eviction writing is enabled.
+    writer: Option<BackgroundWriter>,
 }
 
 impl SessionStore {
@@ -83,7 +214,99 @@ impl SessionStore {
             resident: Vec::new(),
             tick: 0,
             stats: RecoveryStats::default(),
+            writer: None,
         })
+    }
+
+    /// Enable (`true`) or disable (`false`) the background eviction
+    /// writer. Disabling is a barrier: it settles every pending write
+    /// (surfacing the first error) before the thread is joined.
+    /// Idempotent in both directions; writes stay synchronous by
+    /// default.
+    pub fn set_background(&mut self, on: bool) -> Result<()> {
+        if on && self.writer.is_none() {
+            let (jobs, job_rx) = mpsc::channel();
+            let (result_tx, results) = mpsc::channel();
+            let handle = thread::Builder::new()
+                .name("ckpt-writer".into())
+                .spawn(move || writer_loop(job_rx, result_tx))
+                .context("spawning background checkpoint writer")?;
+            self.writer = Some(BackgroundWriter {
+                jobs,
+                results,
+                handle: Some(handle),
+                pending: Vec::new(),
+            });
+        } else if !on && self.writer.is_some() {
+            let settle = self.wait_for(None);
+            self.writer = None; // Drop sends Stop and joins
+            settle?;
+        }
+        Ok(())
+    }
+
+    /// Whether eviction writes currently go through the writer thread.
+    pub fn background(&self) -> bool {
+        self.writer.is_some()
+    }
+
+    /// Background writes accepted but not yet settled.
+    pub fn pending_writes(&self) -> usize {
+        self.writer.as_ref().map(|w| w.pending.len()).unwrap_or(0)
+    }
+
+    /// Wait until every pending background write has hit disk, folding
+    /// write latency/bytes into the stats and surfacing the first
+    /// failed write. A no-op when the writer is off or idle.
+    pub fn barrier(&mut self) -> Result<()> {
+        self.wait_for(None)
+    }
+
+    /// Block until `id`'s pending write settles (`Some`) or all pending
+    /// writes settle (`None`).
+    fn wait_for(&mut self, id: Option<usize>) -> Result<()> {
+        let Some(w) = self.writer.as_mut() else {
+            return Ok(());
+        };
+        let mut first_err = None;
+        while match id {
+            Some(id) => w.pending.contains(&id),
+            None => !w.pending.is_empty(),
+        } {
+            let res = w
+                .results
+                .recv()
+                .context("background checkpoint writer died")?;
+            if let Err(e) = absorb(&mut self.stats, &mut w.pending, res) {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Settle whatever background writes have already finished, without
+    /// blocking — keeps stats fresh and surfaces failures early.
+    fn drain_ready(&mut self) -> Result<()> {
+        let Some(w) = self.writer.as_mut() else {
+            return Ok(());
+        };
+        let mut first_err = None;
+        while let Ok(res) = w.results.try_recv() {
+            if let Err(e) = absorb(&mut self.stats, &mut w.pending, res) {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     pub fn dir(&self) -> &Path {
@@ -147,22 +370,7 @@ impl SessionStore {
     /// primitive `check_in` eviction, `flush` and ship-restore migration
     /// are built from.
     pub fn save(&mut self, session: &StreamSession) -> Result<u64> {
-        let mut tlv = session
-            .to_tlv()
-            .with_context(|| format!("serializing stream {}", session.id))?;
-        let [m_hi, m_lo] = split_u64(self.manifest_fp);
-        let [q_hi, q_lo] = split_u64(self.qp_fp);
-        tlv.insert(
-            FP_ENTRY,
-            TlvEntry {
-                exp: 0,
-                payload: TlvPayload::I32(Tensor::from_vec(
-                    &[4],
-                    vec![m_hi, m_lo, q_hi, q_lo],
-                )),
-            },
-        )?;
-        let bytes = tlv.to_bytes()?;
+        let bytes = encode(session, self.manifest_fp, self.qp_fp)?;
         let path = self.checkpoint_path(session.id);
         fs::write(&path, &bytes)
             .with_context(|| format!("writing checkpoint {}", path.display()))?;
@@ -220,6 +428,7 @@ impl SessionStore {
     /// session is checkpointed to disk and dropped (an *eviction* —
     /// restored transparently by the next `check_out`).
     pub fn check_in(&mut self, session: StreamSession) -> Result<()> {
+        self.drain_ready()?;
         // a re-check-in of a resident id replaces the stale value
         self.resident.retain(|(_, s)| s.id != session.id);
         self.tick += 1;
@@ -233,6 +442,33 @@ impl SessionStore {
                 .map(|(i, _)| i)
                 .expect("resident set is non-empty");
             let (tick, cold) = self.resident.remove(i);
+            if self.writer.is_some() {
+                // hand the owned (about-to-drop) session to the writer
+                // thread; the write settles at the next sync point
+                let id = cold.id;
+                let job = WriterJob::Write {
+                    session: cold,
+                    path: self.checkpoint_path(id),
+                    manifest_fp: self.manifest_fp,
+                    qp_fp: self.qp_fp,
+                };
+                let w = self.writer.as_mut().expect("checked above");
+                if let Err(e) = w.jobs.send(job) {
+                    let WriterJob::Write { session, .. } = e.0 else {
+                        unreachable!("we only ever return Write jobs")
+                    };
+                    // keep the session resident (over budget) rather
+                    // than losing state to a dead writer
+                    self.resident.push((tick, session));
+                    anyhow::bail!(
+                        "background checkpoint writer died; stream {id} \
+                         kept resident"
+                    );
+                }
+                w.pending.push(id);
+                self.stats.evictions += 1;
+                continue;
+            }
             match self.save(&cold) {
                 Ok(_) => self.stats.evictions += 1,
                 Err(e) => {
@@ -258,6 +494,9 @@ impl SessionStore {
         if let Some(i) = self.resident.iter().position(|(_, s)| s.id == id) {
             return Ok(self.resident.remove(i).1);
         }
+        // a resident miss may be a still-in-flight background eviction:
+        // settle it (or surface its failure) before reading the file
+        self.wait_for(Some(id))?;
         self.load(id, qp)
     }
 
@@ -266,6 +505,8 @@ impl SessionStore {
     /// over the same directory can rebuild every stream from disk —
     /// the kill-and-restart path.
     pub fn flush(&mut self) -> Result<u64> {
+        // barrier first so the on-disk set is complete when we return
+        self.wait_for(None)?;
         let mut total = 0;
         let ids: Vec<usize> =
             self.resident.iter().map(|(_, s)| s.id).collect();
@@ -418,6 +659,79 @@ mod tests {
         let err = store.check_out(42, &qp).unwrap_err();
         assert!(format!("{err:#}").contains("restoring stream 42"), "{err:#}");
         fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn background_eviction_is_bit_exact_and_accounted() {
+        let dir = tmp_dir("bg");
+        let eng = engine(23);
+        let manifest = eng.backend().manifest().clone();
+        let qp = Arc::clone(eng.qp());
+        // capacity 1 with two alternating streams: every round trip
+        // pages through the writer thread
+        let mut store = SessionStore::open(&dir, 1, &manifest, &qp).unwrap();
+        store.set_background(true).unwrap();
+        assert!(store.background());
+        store.check_in(eng.new_session(0)).unwrap();
+        store.check_in(eng.new_session(1)).unwrap();
+        let mut cont = [eng.new_session(0), eng.new_session(1)];
+        let scenes =
+            [Scene::synthetic("bg0", 3, 50), Scene::synthetic("bg1", 3, 51)];
+        for f in 0..3 {
+            for sid in 0..2 {
+                let img = scenes[sid].normalized_image(f);
+                let pose = scenes[sid].poses[f];
+                let want =
+                    eng.step_session(&mut cont[sid], &img, &pose).unwrap();
+                let mut s = store.check_out(sid, &qp).unwrap();
+                let got = eng.step_session(&mut s, &img, &pose).unwrap();
+                store.check_in(s).unwrap();
+                assert_eq!(
+                    want.depth.data(),
+                    got.depth.data(),
+                    "stream {sid} frame {f}: background paging diverged"
+                );
+            }
+        }
+        store.barrier().unwrap();
+        assert_eq!(store.pending_writes(), 0);
+        let st = store.stats();
+        assert!(st.evictions >= 5, "capacity 1 pages constantly");
+        assert_eq!(
+            st.background_flushes, st.evictions,
+            "every eviction went through the writer thread"
+        );
+        assert!(st.background_flush_seconds > 0.0);
+        assert!(st.checkpoint_bytes > 0);
+        // disabling is a barrier + join; the store keeps working
+        store.set_background(false).unwrap();
+        assert!(!store.background());
+        let s = store.check_out(0, &qp).unwrap();
+        assert_eq!(s.id, 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn background_write_failure_surfaces_at_sync_points() {
+        let dir = tmp_dir("bgerr");
+        let eng = engine(31);
+        let manifest = eng.backend().manifest().clone();
+        let qp = Arc::clone(eng.qp());
+        let mut store = SessionStore::open(&dir, 1, &manifest, &qp).unwrap();
+        store.set_background(true).unwrap();
+        // sabotage the directory so the in-flight eviction write fails
+        fs::remove_dir_all(&dir).unwrap();
+        store.check_in(eng.new_session(0)).unwrap();
+        store.check_in(eng.new_session(1)).unwrap(); // evicts 0 async
+        let err = store.barrier().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("background eviction of stream 0"),
+            "{err:#}"
+        );
+        // the failed write is settled: later barriers are clean
+        store.barrier().unwrap();
+        store.set_background(false).unwrap();
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

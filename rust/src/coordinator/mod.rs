@@ -15,14 +15,27 @@
 //!   concurrently, and live-migrates streams between shards on load
 //!   imbalance (or on shard death, via checkpoint failover).
 //! * `checkpoint` — the **Durability layer**: `SessionStore` pages
-//!   fingerprint-stamped session checkpoints to disk (LRU residency),
-//!   backing suspend/resume, serialize-ship-restore migration and
+//!   fingerprint-stamped session checkpoints to disk (LRU residency,
+//!   optionally through a background writer thread), backing
+//!   suspend/resume, serialize-ship-restore migration and
 //!   kill-and-restart recovery.
+//! * `scheduler` — the **Scheduler layer**: `RoundScheduler` replaces
+//!   lockstep round forming with continuous batching — admission
+//!   control with an explicit capacity bound (reject / queue with
+//!   deadline / evict to checkpoint), virtual-time fairness with a
+//!   guaranteed slot (starvation-free), deadline-aware priority with
+//!   downgrade-then-shed degradation, and explicit backpressure (a
+//!   bounded in-flight budget fed by the backend's load signals). All
+//!   decisions run on a virtual tick clock, so scheduling — and every
+//!   `SchedulerStats` counter — is deterministic under chaos faults;
+//!   per-stream outputs stay bit-exact under any admission order
+//!   because sessions mutate only at Commit.
 
 pub mod checkpoint;
 pub mod extern_link;
 pub mod pipeline;
 pub mod profiler;
+pub mod scheduler;
 pub mod server;
 pub mod session;
 pub mod shard;
@@ -34,6 +47,10 @@ pub use pipeline::{
     RetryPolicy, RoundInFlight, SegmentHandles,
 };
 pub use profiler::{overlap_seconds, FrameProfile, Lane, Profiler, StageRecord};
+pub use scheduler::{
+    AdmissionPolicy, ContinuousOutcome, ContinuousStream, RoundScheduler,
+    SchedEvent, SchedulerOptions, StreamDisposition, StreamSpec,
+};
 pub use server::StreamServer;
 pub use session::StreamSession;
 pub use shard::{Placement, ShardRouter, ShardRouterOptions};

@@ -578,6 +578,40 @@ impl PipelineEngine {
         Ok(tasks.into_iter().map(FrameTask::into_output).collect())
     }
 
+    /// `step_round` over a *non-uniform* batch: `sessions` is the full
+    /// stream set and `frames[i]` is `Some` only for streams with a
+    /// frame ready this round. The ready subset runs as one dense
+    /// lockstep round (identical batched backend calls to an
+    /// all-present `step_round`); skipped sessions are untouched, which
+    /// is what makes skipping sound — sessions only mutate at Commit,
+    /// so a stream that sits out a round resumes later bit-exactly.
+    /// This is the ready-set entry point the continuous scheduler
+    /// (`coordinator::scheduler`) drives at in-flight budget 1.
+    pub fn step_round_ready(
+        &self,
+        sessions: &mut [&mut StreamSession],
+        frames: &[Option<(&TensorF, Mat4)>],
+    ) -> Result<Vec<Option<FrameOutput>>> {
+        assert_eq!(sessions.len(), frames.len(), "one frame slot per session");
+        let dense: Vec<(&TensorF, Mat4)> =
+            frames.iter().filter_map(|f| *f).collect();
+        let mut ready: Vec<&mut StreamSession> = sessions
+            .iter_mut()
+            .zip(frames)
+            .filter(|(_, f)| f.is_some())
+            .map(|(s, _)| &mut **s)
+            .collect();
+        let outs = self.step_round(&mut ready, &dense)?;
+        let mut outs = outs.into_iter();
+        Ok(frames
+            .iter()
+            .map(|f| {
+                f.as_ref()
+                    .map(|_| outs.next().expect("one output per ready frame"))
+            })
+            .collect())
+    }
+
     /// Start a round without touching any session: quantize every
     /// frame's image and submit the batched FeFs segment to the backend.
     /// On an async backend (`RefBackend`) this returns immediately with

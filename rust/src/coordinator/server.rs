@@ -21,6 +21,15 @@
 //!   the PL executes one round's segments while the CPU runs another's
 //!   software stages (cross-round overlap, reported as `overlapped_hw`
 //!   in [`BatchStats`]).
+//!
+//! Plus the overload-safe schedule built on top of them (PR 8):
+//!
+//! * [`StreamServer::run_continuous`] — continuous batching through a
+//!   `coordinator::RoundScheduler`: streams arrive and depart
+//!   mid-flight under an admission policy, rounds are formed from the
+//!   *ready* set each tick, and overload queues / evicts / sheds
+//!   instead of stalling the batch. The lockstep schedules above remain
+//!   the bit-exact spec for the uniform case.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -28,17 +37,23 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::metrics::{AggregateThroughput, BatchStats, StreamThroughput};
+use crate::metrics::{
+    AggregateThroughput, BatchStats, SchedulerStats, StreamThroughput,
+};
 use crate::model::weights::QuantParams;
 use crate::poses::Mat4;
 use crate::runtime::{HwBackend, RefBackend};
 use crate::tensor::TensorF;
 
+use super::checkpoint::SessionStore;
 use super::extern_link::ExternStats;
 use super::pipeline::{
     FrameOutput, PipelineEngine, PipelineOptions, RoundInFlight,
 };
 use super::profiler::{overlap_seconds, Lane};
+use super::scheduler::{
+    drive_continuous, ContinuousOutcome, ContinuousStream, SchedulerOptions,
+};
 use super::session::StreamSession;
 
 /// Multi-stream depth server over one shared backend.
@@ -52,6 +67,12 @@ pub struct StreamServer {
     /// order fair even when the round width varies between calls (a
     /// global counter mod a varying width skips or repeats turns).
     rr_widths: Vec<(usize, usize)>,
+    /// Durable session home: backs evict-to-checkpoint admission and
+    /// shed-stream checkpoints in `run_continuous`.
+    store: Option<SessionStore>,
+    /// Continuous-scheduling accounting accumulated across
+    /// `run_continuous` calls.
+    sched: SchedulerStats,
     started: Instant,
 }
 
@@ -80,6 +101,8 @@ impl StreamServer {
             throughput: Vec::new(),
             batches: BatchStats::default(),
             rr_widths: Vec::new(),
+            store: None,
+            sched: SchedulerStats::default(),
             started: Instant::now(),
         })
     }
@@ -132,6 +155,22 @@ impl StreamServer {
 
     pub fn session(&self, id: usize) -> &StreamSession {
         &self.sessions[id]
+    }
+
+    /// Attach a durable session store: `run_continuous` can then evict
+    /// under `AdmissionPolicy::EvictToCheckpoint` and leaves resumable
+    /// checkpoints behind shed streams. Its paging counters are merged
+    /// into [`StreamServer::recovery_stats`].
+    pub fn attach_session_store(&mut self, store: SessionStore) {
+        self.store = Some(store);
+    }
+
+    pub fn session_store(&self) -> Option<&SessionStore> {
+        self.store.as_ref()
+    }
+
+    pub fn session_store_mut(&mut self) -> Option<&mut SessionStore> {
+        self.store.as_mut()
     }
 
     /// Reset one stream to cold start (new video on the same slot).
@@ -431,6 +470,72 @@ impl StreamServer {
         Ok(result)
     }
 
+    /// Continuous-batched serving with admission control (PR 8): drive
+    /// `streams` to terminal state under `opts`, forming each round
+    /// from whichever admitted streams are *ready* instead of marching
+    /// a fixed set in lockstep. Arrivals beyond `opts.capacity` are
+    /// rejected, queued, or evict an idle stream to the attached
+    /// checkpoint store; streams persistently missing their frame
+    /// deadline are downgraded then shed rather than stalling the
+    /// batch; and at most `opts.inflight_budget` rounds are ever
+    /// begun-but-unfinished (further gated on the backend's live load
+    /// signals) — backpressure drains instead of submitting.
+    ///
+    /// Every admitted stream's served frames are bit-identical to a
+    /// solo run regardless of admission order, other streams' fates, or
+    /// chaos faults: sessions mutate only at Commit and carry no
+    /// cross-stream state, so the scheduler is free to reorder and
+    /// delay whole rounds. `rust/tests/scheduler.rs` pins this against
+    /// `ChaosBackend` under 2x-capacity overload.
+    pub fn run_continuous<'f>(
+        &mut self,
+        streams: &[ContinuousStream<'f>],
+        opts: &SchedulerOptions,
+    ) -> Result<ContinuousOutcome> {
+        let mut outputs: Vec<Vec<FrameOutput>> =
+            streams.iter().map(|_| Vec::new()).collect();
+        let mut stats = SchedulerStats::default();
+        let r = {
+            let mut table: Vec<Option<&mut StreamSession>> =
+                self.sessions.iter_mut().map(Some).collect();
+            let mut slots: Vec<Option<&mut StreamSession>> =
+                Vec::with_capacity(streams.len());
+            for s in streams {
+                let session = table
+                    .get_mut(s.sid)
+                    .and_then(|t| t.take())
+                    .with_context(|| {
+                        format!(
+                            "stream {} not open (or repeated in the \
+                             continuous set)",
+                            s.sid
+                        )
+                    })?;
+                slots.push(Some(session));
+            }
+            drive_continuous(
+                &self.engine,
+                &mut slots,
+                streams,
+                opts,
+                self.store.as_mut(),
+                &mut self.batches,
+                &mut self.throughput,
+                &mut outputs,
+                &mut stats,
+            )
+        };
+        self.sched.merge(&stats);
+        let dispositions = r?;
+        Ok(ContinuousOutcome { outputs, dispositions, stats })
+    }
+
+    /// Continuous-scheduling accounting accumulated across
+    /// `run_continuous` calls.
+    pub fn scheduler_stats(&self) -> &SchedulerStats {
+        &self.sched
+    }
+
     /// Per-stream serving statistics.
     pub fn stream_throughput(&self, id: usize) -> &StreamThroughput {
         &self.throughput[id]
@@ -455,9 +560,14 @@ impl StreamServer {
 
     /// Fault-recovery accounting of the serving engine (retries, faults,
     /// giveups — nonzero only when `PipelineOptions::retry` is enabled
-    /// and faults actually happened).
+    /// and faults actually happened), merged with the attached session
+    /// store's paging counters when one is present.
     pub fn recovery_stats(&self) -> crate::metrics::RecoveryStats {
-        self.engine.recovery_stats()
+        let mut total = self.engine.recovery_stats();
+        if let Some(store) = &self.store {
+            total.merge(store.stats());
+        }
+        total
     }
 
     /// Human-readable per-stream + aggregate throughput table.
@@ -506,12 +616,54 @@ impl StreamServer {
                 100.0 * self.batches.overlapped_hw_ratio(),
             ));
         }
+        if self.sched.any() {
+            out.push_str(&format!(
+                "scheduler: {} rounds ({:.0}% fill), {} admitted / {} \
+                 queued / {} rejected, {} evicted / {} resumed, {} \
+                 downgraded, {} shed, {} deadline misses ({:.1}% of \
+                 frames), peak in-flight {}, {} backpressure stalls\n",
+                self.sched.rounds,
+                100.0 * self.sched.fill_ratio(),
+                self.sched.admitted,
+                self.sched.queued,
+                self.sched.rejected,
+                self.sched.evicted,
+                self.sched.resumed,
+                self.sched.downgraded,
+                self.sched.shed,
+                self.sched.deadline_misses,
+                100.0 * self.sched.miss_rate(),
+                self.sched.max_inflight,
+                self.sched.backpressure_stalls,
+            ));
+        }
+        // live backend load signals (PR 6) — previously only the shard
+        // router surfaced these, leaving unsharded overload invisible
+        let backend = self.engine.backend();
+        let (depth, payload) =
+            (backend.queue_depth(), backend.submit_payload_bytes());
+        if depth > 0 || payload > 0 {
+            out.push_str(&format!(
+                "backend load: queue depth {depth}, {:.2} MiB submitted \
+                 since start\n",
+                payload as f64 / (1024.0 * 1024.0),
+            ));
+        }
         let rec = self.recovery_stats();
         if rec.any() {
             out.push_str(&format!(
                 "recovery: {} retries ({} submit / {} wait faults), {} \
-                 giveups\n",
-                rec.retries, rec.submit_faults, rec.wait_faults, rec.giveups,
+                 giveups, {} evictions, {} restores, {:.2} KiB \
+                 checkpointed ({} background flushes, {:.1} ms)\n",
+                rec.retries,
+                rec.submit_faults,
+                rec.wait_faults,
+                rec.giveups,
+                rec.evictions,
+                rec.restores,
+                rec.checkpoint_bytes as f64 / 1024.0,
+                rec.background_flushes,
+                rec.background_flush_seconds * 1e3,
             ));
         }
         out

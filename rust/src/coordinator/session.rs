@@ -34,6 +34,13 @@ use crate::tensor::{Tensor, TensorF};
 /// `runtime` module docs). Nothing in the session references the shard
 /// that created it, so the receiving shard's next round is bit-identical
 /// to the round the donor would have run.
+///
+/// `Clone` is cheap for the same CoW reason: it copies Arc handles and
+/// a few scalars, never tensor payloads. The continuous scheduler leans
+/// on this for evict-to-checkpoint — snapshotting a session into the
+/// `SessionStore` is an O(fields) handle clone, with the byte encoding
+/// deferred to the store (or its background writer thread).
+#[derive(Clone)]
 pub struct StreamSession {
     /// Server-assigned stream id (0 for a standalone coordinator).
     pub id: usize,

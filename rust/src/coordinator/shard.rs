@@ -61,8 +61,8 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Error, Result};
 
 use crate::metrics::{
-    shard_imbalance, AggregateThroughput, RecoveryStats, ShardStats,
-    StreamThroughput,
+    shard_imbalance, AggregateThroughput, BatchStats, RecoveryStats,
+    SchedulerStats, ShardStats, StreamThroughput,
 };
 use crate::model::weights::QuantParams;
 use crate::poses::Mat4;
@@ -72,6 +72,10 @@ use crate::tensor::TensorF;
 use super::checkpoint::SessionStore;
 use super::pipeline::{
     FrameOutput, PipelineEngine, PipelineOptions, RoundInFlight,
+};
+use super::scheduler::{
+    drive_continuous, ContinuousOutcome, ContinuousStream, SchedulerOptions,
+    StreamDisposition,
 };
 use super::session::StreamSession;
 
@@ -159,6 +163,9 @@ pub struct ShardRouter {
     /// migrations) — engine- and store-level counters are merged in
     /// by [`ShardRouter::recovery_stats`].
     recovery: RecoveryStats,
+    /// Fleet-wide continuous-scheduling accounting accumulated across
+    /// `run_continuous` calls (per-shard drives merged in).
+    sched: SchedulerStats,
     started: Instant,
 }
 
@@ -207,6 +214,7 @@ impl ShardRouter {
             migrations_total: 0,
             store: None,
             recovery: RecoveryStats::default(),
+            sched: SchedulerStats::default(),
             started: Instant::now(),
         })
     }
@@ -758,6 +766,305 @@ impl ShardRouter {
         Ok(results)
     }
 
+    /// Continuous-batched serving across the fleet (PR 8): the
+    /// sharded counterpart of `StreamServer::run_continuous`. Streams
+    /// are first placed admission-aware (under `Placement::LeastLoaded`
+    /// the continuous set is spread evenly over the shards, migrating
+    /// between rounds where needed; pinned/round-robin fleets keep
+    /// their placement), then each shard runs its own
+    /// `RoundScheduler` over its subset — `opts.capacity`, the
+    /// in-flight budget and the admission policy all apply *per
+    /// shard*. Shards are driven sequentially on the calling thread
+    /// (scheduler decisions and checkpoint-store access stay
+    /// single-threaded and deterministic).
+    ///
+    /// Failover: when a shard dies mid-drive (retry budget exhausted)
+    /// and the fleet has retry enabled plus a survivor, its streams
+    /// migrate off — through the attached [`SessionStore`] when
+    /// present — and only their *unserved* frames are re-driven on the
+    /// survivor. Sessions commit per round, so the served prefix
+    /// stands and the continuation is bit-exact; admission decisions
+    /// for the continuation are remade on the survivor.
+    pub fn run_continuous<'f>(
+        &mut self,
+        streams: &[ContinuousStream<'f>],
+        opts: &SchedulerOptions,
+    ) -> Result<ContinuousOutcome> {
+        let k = self.shards.len();
+        let mut seen: Vec<usize> = Vec::with_capacity(streams.len());
+        for c in streams {
+            ensure!(c.sid < self.slots.len(), "stream {} not open", c.sid);
+            ensure!(
+                !seen.contains(&c.sid),
+                "stream {} repeated in the continuous set",
+                c.sid
+            );
+            seen.push(c.sid);
+        }
+        // admission-aware placement: spread this continuous set evenly
+        // across the shards (each shard's scheduler has its own
+        // capacity bound, so a skewed placement would reject or queue
+        // streams a balanced one admits)
+        if self.opts.placement == Placement::LeastLoaded && k > 1 {
+            let mut assigned = vec![0usize; k];
+            for c in streams {
+                let cur = self.slots[c.sid].shard;
+                let target = (0..k)
+                    .min_by_key(|&s| (assigned[s], s))
+                    .expect("fleet is non-empty");
+                let target =
+                    if assigned[cur] <= assigned[target] { cur } else { target };
+                if target != cur {
+                    self.migrate_stream(c.sid, target)?;
+                }
+                assigned[target] += 1;
+            }
+        }
+        let mut shard_specs: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (i, c) in streams.iter().enumerate() {
+            shard_specs[self.slots[c.sid].shard].push(i);
+        }
+        let failover =
+            k > 1 && self.shards[0].engine.options().retry.enabled();
+        let mut outputs: Vec<Vec<FrameOutput>> =
+            streams.iter().map(|_| Vec::new()).collect();
+        let mut dispositions: Vec<Option<StreamDisposition>> =
+            streams.iter().map(|_| None).collect();
+        let mut total = SchedulerStats::default();
+        let mut failed: Vec<(usize, Error)> = Vec::new();
+        for s in 0..k {
+            let idxs = &shard_specs[s];
+            if idxs.is_empty() {
+                continue;
+            }
+            let local: Vec<ContinuousStream<'f>> =
+                idxs.iter().map(|&i| streams[i].clone()).collect();
+            let mut louts: Vec<Vec<FrameOutput>> =
+                idxs.iter().map(|_| Vec::new()).collect();
+            let mut stats = SchedulerStats::default();
+            let r = self.drive_continuous_on(
+                s, &local, opts, &mut stats, &mut louts,
+            );
+            total.merge(&stats);
+            for (j, &i) in idxs.iter().enumerate() {
+                outputs[i].append(&mut louts[j]);
+            }
+            match r {
+                Ok(disps) => {
+                    for (&i, d) in idxs.iter().zip(disps) {
+                        dispositions[i] = Some(d);
+                    }
+                }
+                Err(e) => failed.push((s, e)),
+            }
+        }
+        if !failed.is_empty() {
+            let dead: Vec<usize> = failed.iter().map(|&(s, _)| s).collect();
+            let survivor =
+                (0..k).filter(|s| !dead.contains(s)).min_by_key(|&s| {
+                    (
+                        self.slots.iter().filter(|sl| sl.shard == s).count(),
+                        self.shards[s].engine.backend().queue_depth(),
+                        s,
+                    )
+                });
+            match survivor {
+                Some(t) if failover => {
+                    for (s, cause) in failed {
+                        self.failover_continuous(
+                            s,
+                            t,
+                            cause,
+                            &shard_specs[s],
+                            streams,
+                            opts,
+                            &mut total,
+                            &mut outputs,
+                            &mut dispositions,
+                        )?;
+                    }
+                }
+                _ => {
+                    let (s, e) = failed
+                        .into_iter()
+                        .next()
+                        .expect("at least one failure");
+                    self.sched.merge(&total);
+                    return Err(e.context(format!(
+                        "shard {s}: continuous driver failed (other shards' \
+                         streams completed; every session is checked back in)"
+                    )));
+                }
+            }
+        }
+        self.sched.merge(&total);
+        let dispositions = dispositions
+            .into_iter()
+            .enumerate()
+            .map(|(i, d)| {
+                d.with_context(|| {
+                    format!("stream {} has no terminal disposition", i)
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ContinuousOutcome { outputs, dispositions, stats: total })
+    }
+
+    /// Fleet-wide continuous-scheduling accounting accumulated across
+    /// `run_continuous` calls.
+    pub fn scheduler_stats(&self) -> &SchedulerStats {
+        &self.sched
+    }
+
+    /// Drive one shard's continuous subset: check its sessions out as
+    /// owned values, run the shared scheduler driver against the
+    /// shard's engine, and merge sessions (always) and accounting back.
+    /// `stats` must be fresh per call (it is also used to charge the
+    /// shard's round/frame counters); `outputs` is local, parallel to
+    /// `specs`, and receives partial progress even on error.
+    fn drive_continuous_on(
+        &mut self,
+        shard: usize,
+        specs: &[ContinuousStream<'_>],
+        opts: &SchedulerOptions,
+        stats: &mut SchedulerStats,
+        outputs: &mut [Vec<FrameOutput>],
+    ) -> Result<Vec<StreamDisposition>> {
+        let mut owned: Vec<StreamSession> = Vec::with_capacity(specs.len());
+        for c in specs {
+            match self.slots[c.sid].session.take() {
+                Some(session) => owned.push(session),
+                None => {
+                    for (c2, session) in specs.iter().zip(owned) {
+                        self.slots[c2.sid].session = Some(session);
+                    }
+                    anyhow::bail!("stream {} already checked out", c.sid);
+                }
+            }
+        }
+        // the shard layer accounts rounds/frames in ShardStats below;
+        // `scratch` only absorbs the driver's server-grade batch stats
+        let mut scratch = BatchStats::default();
+        let t0 = Instant::now();
+        let r = {
+            let mut lslots: Vec<Option<&mut StreamSession>> =
+                owned.iter_mut().map(Some).collect();
+            drive_continuous(
+                &self.shards[shard].engine,
+                &mut lslots,
+                specs,
+                opts,
+                self.store.as_mut(),
+                &mut scratch,
+                &mut self.throughput,
+                outputs,
+                stats,
+            )
+        };
+        let elapsed = t0.elapsed().as_secs_f64();
+        for (c, session) in specs.iter().zip(owned) {
+            self.slots[c.sid].session = Some(session);
+        }
+        let bytes = self.shards[shard].engine.backend().submit_payload_bytes();
+        let qd = self.shards[shard].engine.backend().queue_depth();
+        let st = &mut self.shards[shard].stats;
+        st.busy_seconds += elapsed;
+        st.rounds += stats.rounds;
+        st.frames += stats.frames;
+        st.queue_depth_peak = st.queue_depth_peak.max(qd);
+        st.submit_payload_bytes = bytes;
+        r
+    }
+
+    /// Continuous-mode failover: migrate dead shard `s`'s streams to
+    /// survivor `t` and re-drive only the unserved frame suffix of this
+    /// call's affected streams there. Bit-exact because sessions commit
+    /// per round — the served prefix stands.
+    #[allow(clippy::too_many_arguments)]
+    fn failover_continuous<'f>(
+        &mut self,
+        s: usize,
+        t: usize,
+        cause: Error,
+        idxs: &[usize],
+        streams: &[ContinuousStream<'f>],
+        opts: &SchedulerOptions,
+        total: &mut SchedulerStats,
+        outputs: &mut [Vec<FrameOutput>],
+        dispositions: &mut [Option<StreamDisposition>],
+    ) -> Result<()> {
+        let victims: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, slot)| slot.shard == s)
+            .map(|(sid, _)| sid)
+            .collect();
+        for &sid in &victims {
+            if self.store.is_some() {
+                self.migrate_stream_via_checkpoint(sid, t)?;
+            } else {
+                self.migrate_stream(sid, t)?;
+            }
+        }
+        self.recovery.shard_failovers += 1;
+        // already fully served streams just need their verdict; the
+        // rest re-enter admission on the survivor with their remaining
+        // frames
+        let mut cont_idx: Vec<usize> = Vec::new();
+        for &i in idxs {
+            if outputs[i].len() >= streams[i].frames.len() {
+                dispositions[i] = Some(StreamDisposition::Completed);
+            } else {
+                cont_idx.push(i);
+            }
+        }
+        if cont_idx.is_empty() {
+            return Ok(());
+        }
+        let local: Vec<ContinuousStream<'f>> = cont_idx
+            .iter()
+            .map(|&i| {
+                let mut c = streams[i].clone();
+                c.frames = c.frames[outputs[i].len()..].to_vec();
+                c.arrive_tick = 0;
+                c
+            })
+            .collect();
+        let mut louts: Vec<Vec<FrameOutput>> =
+            cont_idx.iter().map(|_| Vec::new()).collect();
+        let mut stats = SchedulerStats::default();
+        let r =
+            self.drive_continuous_on(t, &local, opts, &mut stats, &mut louts);
+        total.merge(&stats);
+        for (j, &i) in cont_idx.iter().enumerate() {
+            outputs[i].append(&mut louts[j]);
+        }
+        let disps = r.map_err(|re| {
+            re.context(format!(
+                "shard {s} died ({cause:#}); continuous failover replay on \
+                 shard {t} also failed"
+            ))
+        })?;
+        for (&i, d) in cont_idx.iter().zip(disps) {
+            dispositions[i] = Some(match d {
+                StreamDisposition::Completed => StreamDisposition::Completed,
+                StreamDisposition::Shed { .. } => StreamDisposition::Shed {
+                    served: outputs[i].len(),
+                },
+                StreamDisposition::Rejected if outputs[i].is_empty() => {
+                    StreamDisposition::Rejected
+                }
+                // partially served before the failover, then turned
+                // away on the survivor: report the served prefix
+                StreamDisposition::Rejected => StreamDisposition::Shed {
+                    served: outputs[i].len(),
+                },
+            });
+        }
+        Ok(())
+    }
+
     /// Treat shard `s` as dead for the current window: migrate every
     /// stream placed on it to survivor `t` — through the attached
     /// [`SessionStore`] when present, as value moves otherwise — then
@@ -892,6 +1199,27 @@ impl ShardRouter {
             self.imbalance_ratio(),
             self.migrations_total,
         ));
+        if self.sched.any() {
+            out.push_str(&format!(
+                "scheduler: {} rounds ({:.0}% fill), {} admitted / {} \
+                 queued / {} rejected, {} evicted / {} resumed, {} \
+                 downgraded, {} shed, {} deadline misses ({:.1}% of \
+                 frames), peak in-flight {}, {} backpressure stalls\n",
+                self.sched.rounds,
+                self.sched.fill_ratio() * 100.0,
+                self.sched.admitted,
+                self.sched.queued,
+                self.sched.rejected,
+                self.sched.evicted,
+                self.sched.resumed,
+                self.sched.downgraded,
+                self.sched.shed,
+                self.sched.deadline_misses,
+                self.sched.miss_rate() * 100.0,
+                self.sched.max_inflight,
+                self.sched.backpressure_stalls,
+            ));
+        }
         let rec = self.recovery_stats();
         if rec.any() {
             out.push_str(&format!(

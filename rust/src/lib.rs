@@ -7,7 +7,8 @@
 //!
 //! # Layer map
 //!
-//! The L3 serving stack is split Backend / Session / Server / Shard:
+//! The L3 serving stack is split Backend / Session / Server / Shard /
+//! Durability / Scheduler:
 //!
 //! * **Backend** (`runtime`) — the [`runtime::HwBackend`] trait: a
 //!   catalogue of FSM-sequenced segments resolved once into
@@ -76,6 +77,25 @@
 //!   and kill-and-restart as bit-identical to fault-free serving, and
 //!   `metrics::RecoveryStats` counts every retry/evict/restore/failover
 //!   in the server and router reports.
+//! * **Scheduler** (`coordinator::scheduler`, PR 8) — overload-safe
+//!   *continuous* serving on top of all of the above:
+//!   [`coordinator::RoundScheduler`] replaces lockstep round forming
+//!   with admission control under an explicit capacity bound
+//!   ([`coordinator::AdmissionPolicy`]: reject, queue-with-deadline, or
+//!   evict-to-checkpoint through the [`coordinator::SessionStore`]),
+//!   deadline-aware round forming from the *ready* streams
+//!   (virtual-time weighted fairness with a guaranteed slot — provably
+//!   starvation-free), graceful degradation (downgrade-then-shed for
+//!   streams persistently missing their frame deadline), and explicit
+//!   backpressure (a bounded in-flight round budget gated by the
+//!   backend's own load signals, `queue_depth` and
+//!   `submit_payload_bytes`). All decisions run on a deterministic
+//!   virtual tick clock; because sessions mutate only at Commit, every
+//!   admitted stream stays bit-identical to solo serving under any
+//!   admission order, shedding, overload or injected chaos —
+//!   `StreamServer::run_continuous` / `ShardRouter::run_continuous`
+//!   drive it, `metrics::SchedulerStats` accounts it, and
+//!   `rust/tests/scheduler.rs` pins it.
 //!
 //! # Data plane (PR 5)
 //!
@@ -164,8 +184,8 @@
 //! The seams the shard layer rides — `HwBackend` impls (sync-only ones
 //! get submit/await free via the default-eager path), session-local
 //! stream state, self-contained `RoundInFlight` values — remain open
-//! for what's next: remote backends behind the same trait, admission
-//! policies in `StreamServer`, and placement policies beyond
+//! for what's next: remote backends behind the same trait, richer SLO
+//! classes in the scheduler, and placement policies beyond
 //! least-loaded in `ShardRouter`.
 
 pub mod codesign;

@@ -271,6 +271,14 @@ pub struct RecoveryStats {
     pub shard_failovers: usize,
     /// Total checkpoint bytes written (evictions + ship-restore).
     pub checkpoint_bytes: u64,
+    /// Checkpoint writes completed by the background writer thread
+    /// (PR 8): evictions the serving thread handed off instead of
+    /// blocking on disk I/O.
+    pub background_flushes: usize,
+    /// Cumulative background write latency in seconds (encode + disk
+    /// write as measured on the writer thread) — the serving-thread
+    /// stall time background checkpointing hides.
+    pub background_flush_seconds: f64,
 }
 
 impl RecoveryStats {
@@ -286,12 +294,133 @@ impl RecoveryStats {
         self.checkpoint_migrations += other.checkpoint_migrations;
         self.shard_failovers += other.shard_failovers;
         self.checkpoint_bytes += other.checkpoint_bytes;
+        self.background_flushes += other.background_flushes;
+        self.background_flush_seconds += other.background_flush_seconds;
     }
 
     /// Whether any recovery activity happened at all (gates the report
     /// line so fault-free serving reports stay unchanged).
     pub fn any(&self) -> bool {
         *self != RecoveryStats::default()
+    }
+}
+
+/// Continuous-scheduler accounting (PR 8): every admission decision,
+/// deadline miss and degradation the `coordinator::RoundScheduler`
+/// makes while forming rounds from ready streams. Kept per
+/// `run_continuous` drive, merged upward into server/router totals and
+/// surfaced through their reports. All counters are driven by the
+/// scheduler's *virtual* tick clock, so identical workloads produce
+/// identical stats — the determinism `rust/tests/scheduler.rs` pins.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SchedulerStats {
+    /// Streams admitted to active service (arrivals + queue backfills;
+    /// eviction resumes count under `resumed`, not here).
+    pub admitted: usize,
+    /// Streams turned away: at-capacity rejects plus queue-deadline
+    /// expiries. A rejected stream is never served.
+    pub rejected: usize,
+    /// Streams that waited in the admission queue before being
+    /// admitted, rejected or resumed (unique entries, not ticks).
+    pub queued: usize,
+    /// Active streams checkpointed out of the active set to make room
+    /// for an arrival (`AdmissionPolicy::EvictToCheckpoint`).
+    pub evicted: usize,
+    /// Evicted streams re-admitted from their checkpoint.
+    pub resumed: usize,
+    /// Streams dropped from service for persistently missing their
+    /// frame deadline (served prefix stays bit-exact; resumable from
+    /// checkpoint when a store is attached).
+    pub shed: usize,
+    /// Streams downgraded to half service share (doubled virtual-time
+    /// cost) after a miss streak, before any shedding.
+    pub downgraded: usize,
+    /// Virtual scheduler ticks consumed (one per round begun or idle
+    /// wait — the clock deadlines and arrivals are measured on).
+    pub ticks: u64,
+    /// Rounds formed from ready sets.
+    pub rounds: usize,
+    /// Frames served inside those rounds.
+    pub frames: usize,
+    /// The round-width bound rounds were formed under (denominator of
+    /// [`SchedulerStats::fill_ratio`]).
+    pub round_capacity: usize,
+    /// Frames served later than `ready + frame_deadline` ticks.
+    pub deadline_misses: usize,
+    /// Deadline-miss histogram, bucketed by how many ticks past the
+    /// deadline the frame was served: 1, 2, 3–4, 5–8, >8.
+    pub miss_by_lateness: [usize; 5],
+    /// Deepest begun-but-unfinished round count reached (≤ the
+    /// configured in-flight budget — the bounded-backpressure pin).
+    pub max_inflight: usize,
+    /// Ticks on which a ready round existed but the in-flight budget or
+    /// a backend load signal (`queue_depth` / submitted payload) forced
+    /// draining before beginning it.
+    pub backpressure_stalls: usize,
+}
+
+impl SchedulerStats {
+    /// Mean round fill vs the width bound: 1.0 means every round was
+    /// full (the lockstep ideal); low values are the price of serving
+    /// ready sets instead of stalling for stragglers.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.rounds > 0 && self.round_capacity > 0 {
+            self.frames as f64 / (self.rounds * self.round_capacity) as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of served frames that missed their deadline.
+    pub fn miss_rate(&self) -> f64 {
+        if self.frames > 0 {
+            self.deadline_misses as f64 / self.frames as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Record one miss `late` ticks past the deadline (`late >= 1`).
+    pub fn record_miss(&mut self, late: u64) {
+        self.deadline_misses += 1;
+        let bucket = match late {
+            0 | 1 => 0,
+            2 => 1,
+            3..=4 => 2,
+            5..=8 => 3,
+            _ => 4,
+        };
+        self.miss_by_lateness[bucket] += 1;
+    }
+
+    /// Fold another drive's accounting into this running total (shard
+    /// drives merge into the router's; servers accumulate windows).
+    pub fn merge(&mut self, other: &SchedulerStats) {
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.queued += other.queued;
+        self.evicted += other.evicted;
+        self.resumed += other.resumed;
+        self.shed += other.shed;
+        self.downgraded += other.downgraded;
+        self.ticks += other.ticks;
+        self.rounds += other.rounds;
+        self.frames += other.frames;
+        self.round_capacity = self.round_capacity.max(other.round_capacity);
+        self.deadline_misses += other.deadline_misses;
+        for (a, b) in
+            self.miss_by_lateness.iter_mut().zip(&other.miss_by_lateness)
+        {
+            *a += *b;
+        }
+        self.max_inflight = self.max_inflight.max(other.max_inflight);
+        self.backpressure_stalls += other.backpressure_stalls;
+    }
+
+    /// Whether any continuous scheduling happened at all (gates the
+    /// report line so lockstep-only serving reports stay unchanged).
+    pub fn any(&self) -> bool {
+        *self != SchedulerStats::default()
     }
 }
 
@@ -465,6 +594,8 @@ mod tests {
             evictions: 1,
             restores: 1,
             checkpoint_bytes: 4096,
+            background_flushes: 3,
+            background_flush_seconds: 0.25,
             ..Default::default()
         };
         assert!(b.any());
@@ -476,6 +607,54 @@ mod tests {
         assert_eq!(a.restores, 2);
         assert_eq!(a.checkpoint_bytes, 8192);
         assert_eq!(a.submit_faults, 0);
+        assert_eq!(a.background_flushes, 6);
+        assert!((a.background_flush_seconds - 0.5).abs() < 1e-12);
+        assert!(a.any());
+    }
+
+    #[test]
+    fn scheduler_stats_ratios_merge_and_gate() {
+        let mut a = SchedulerStats::default();
+        assert!(!a.any(), "fresh stats report no activity");
+        assert_eq!(a.fill_ratio(), 0.0);
+        assert_eq!(a.miss_rate(), 0.0);
+
+        let mut b = SchedulerStats {
+            admitted: 4,
+            rejected: 1,
+            queued: 2,
+            shed: 1,
+            downgraded: 1,
+            ticks: 10,
+            rounds: 4,
+            frames: 12,
+            round_capacity: 4,
+            max_inflight: 2,
+            backpressure_stalls: 3,
+            ..Default::default()
+        };
+        b.record_miss(1);
+        b.record_miss(2);
+        b.record_miss(4);
+        b.record_miss(6);
+        b.record_miss(20);
+        assert_eq!(b.deadline_misses, 5);
+        assert_eq!(b.miss_by_lateness, [1, 1, 1, 1, 1]);
+        // 12 frames over 4 rounds of width bound 4 -> 75% fill
+        assert!((b.fill_ratio() - 0.75).abs() < 1e-12);
+        assert!((b.miss_rate() - 5.0 / 12.0).abs() < 1e-12);
+
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.admitted, 8);
+        assert_eq!(a.rejected, 2);
+        assert_eq!(a.frames, 24);
+        assert_eq!(a.deadline_misses, 10);
+        assert_eq!(a.miss_by_lateness, [2, 2, 2, 2, 2]);
+        // maxima, not sums
+        assert_eq!(a.round_capacity, 4);
+        assert_eq!(a.max_inflight, 2);
+        assert_eq!(a.backpressure_stalls, 6);
         assert!(a.any());
     }
 

@@ -58,6 +58,16 @@ pub struct BenchRecord {
     /// HW-call retries the recovery policy issued during the
     /// measurement (PR 7 chaos records). `None` when retry is off.
     pub retries: Option<usize>,
+    /// Continuous-scheduling records (PR 8, `benches/serve.rs`):
+    /// fraction of formed-round capacity actually filled with ready
+    /// frames, in `0..=1`. `None` for lockstep records.
+    pub fill_ratio: Option<f64>,
+    /// Fraction of served frames that missed their frame deadline, in
+    /// `0..=1`. Only meaningful alongside `fill_ratio`.
+    pub deadline_miss_rate: Option<f64>,
+    /// Streams shed (dropped after a served prefix) during the
+    /// measurement. Only meaningful alongside `fill_ratio`.
+    pub shed: Option<usize>,
 }
 
 impl BenchRecord {
@@ -87,6 +97,9 @@ impl BenchRecord {
             checkpoint_bytes: None,
             restore_seconds: None,
             retries: None,
+            fill_ratio: None,
+            deadline_miss_rate: None,
+            shed: None,
         }
     }
 }
@@ -142,6 +155,15 @@ pub fn to_json(records: &[BenchRecord]) -> String {
         }
         if let Some(n) = r.retries {
             let _ = write!(out, ", \"retries\": {n}");
+        }
+        if let Some(f) = r.fill_ratio {
+            let _ = write!(out, ", \"fill_ratio\": {f:.4}");
+        }
+        if let Some(m) = r.deadline_miss_rate {
+            let _ = write!(out, ", \"deadline_miss_rate\": {m:.4}");
+        }
+        if let Some(s) = r.shed {
+            let _ = write!(out, ", \"shed\": {s}");
         }
         let _ = write!(
             out,
@@ -263,6 +285,7 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
         let (mut cb_before, mut cb_after) = (None, None);
         let (mut shards, mut migrations) = (None, None);
         let (mut ckpt_bytes, mut restore_s, mut retries) = (None, None, None);
+        let (mut fill, mut miss_rate, mut shed) = (None, None, None);
         loop {
             let key = p.string()?;
             p.eat(b':')?;
@@ -279,6 +302,9 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
                 "checkpoint_bytes" => ckpt_bytes = Some(p.number()?),
                 "restore_seconds" => restore_s = Some(p.number()?),
                 "retries" => retries = Some(p.number()? as usize),
+                "fill_ratio" => fill = Some(p.number()?),
+                "deadline_miss_rate" => miss_rate = Some(p.number()?),
+                "shed" => shed = Some(p.number()? as usize),
                 other => bail!("unknown bench-record key '{other}'"),
             }
             match p.peek() {
@@ -300,6 +326,9 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
             checkpoint_bytes: ckpt_bytes,
             restore_seconds: restore_s,
             retries,
+            fill_ratio: fill,
+            deadline_miss_rate: miss_rate,
+            shed,
         });
         match p.peek() {
             Some(b',') => p.eat(b',')?,
@@ -451,6 +480,27 @@ pub fn validate(path: &Path) -> Result<usize> {
             "op '{}': restore_seconds without a checkpoint_bytes field",
             r.op
         );
+        // continuous-scheduling records (PR 8): both ratios are
+        // fractions, and the companion fields only mean something next
+        // to a fill ratio
+        for (k, v) in [
+            ("fill_ratio", r.fill_ratio),
+            ("deadline_miss_rate", r.deadline_miss_rate),
+        ] {
+            if let Some(v) = v {
+                anyhow::ensure!(
+                    v.is_finite() && (0.0..=1.0).contains(&v),
+                    "op '{}': {k} {v} is not a fraction in 0..=1",
+                    r.op
+                );
+            }
+        }
+        anyhow::ensure!(
+            (r.deadline_miss_rate.is_none() && r.shed.is_none())
+                || r.fill_ratio.is_some(),
+            "op '{}': scheduler fields without a fill_ratio field",
+            r.op
+        );
     }
     Ok(records.len())
 }
@@ -571,6 +621,39 @@ mod tests {
         // so is a restore time with no checkpoint traffic
         let mut bad = rec("x", 1, 1.0);
         bad.restore_seconds = Some(0.5);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn scheduler_fields_roundtrip_and_validate() {
+        let mut r = rec("serve_continuous", 1, 100.0);
+        r.fill_ratio = Some(0.8125);
+        r.deadline_miss_rate = Some(0.05);
+        r.shed = Some(1);
+        let parsed = from_json(&to_json(&[r.clone()])).unwrap();
+        assert_eq!(parsed, vec![r.clone()]);
+        // lockstep records keep emitting the old schema
+        let bare = to_json(&[rec("a", 1, 1.0)]);
+        assert!(!bare.contains("fill_ratio"));
+        assert!(!bare.contains("deadline_miss_rate"));
+        assert!(!bare.contains("shed"));
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_benchjson_sched_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        let _ = std::fs::remove_file(&path);
+        merge_into(&path, &[r]).unwrap();
+        assert_eq!(validate(&path).unwrap(), 1);
+        // a fill ratio outside 0..=1 is schema drift
+        let mut bad = rec("x", 1, 1.0);
+        bad.fill_ratio = Some(1.5);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        // so is a shed count with no fill ratio
+        let mut bad = rec("x", 1, 1.0);
+        bad.shed = Some(2);
         std::fs::write(&path, to_json(&[bad])).unwrap();
         assert!(validate(&path).is_err());
         std::fs::remove_file(&path).unwrap();

@@ -1,0 +1,581 @@
+//! Continuous-scheduling tests (PR 8): the overload-safe serving
+//! schedule must stay bit-exact per stream under every admission
+//! policy, late arrival, shed, backpressure gate and injected chaos —
+//! and its scheduling decisions (formed on the virtual tick clock) must
+//! be *exactly* deterministic: identical workloads produce identical
+//! `SchedulerStats`, fault or no fault. Together these pin the PR-8
+//! tentpole: overload handling is a latency/placement feature, never a
+//! semantic one.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fadec::coordinator::{
+    AdmissionPolicy, ContinuousStream, Coordinator, PipelineOptions,
+    Placement, RetryPolicy, SchedulerOptions, SessionStore, ShardRouter,
+    ShardRouterOptions, StreamDisposition, StreamServer,
+};
+use fadec::data::dataset::Scene;
+use fadec::metrics::SchedulerStats;
+use fadec::runtime::{ChaosBackend, ChaosOptions, HwBackend, RefBackend};
+use fadec::tensor::TensorF;
+
+const SEED: u64 = 7;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fadec_sched_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn make_scenes(n_streams: usize, frames: usize, base_seed: u64) -> Vec<Scene> {
+    (0..n_streams)
+        .map(|s| {
+            Scene::synthetic(&format!("sc-{s}"), frames, base_seed + s as u64)
+        })
+        .collect()
+}
+
+/// Fault-free single-stream reference on a clean backend.
+fn solo_run(scene: &Scene, n: usize) -> Vec<TensorF> {
+    let mut coord =
+        Coordinator::on_ref_backend(SEED, PipelineOptions::default()).unwrap();
+    (0..n)
+        .map(|i| {
+            let img = scene.normalized_image(i);
+            coord.step(&img, &scene.poses[i]).unwrap().depth
+        })
+        .collect()
+}
+
+/// Pre-render every frame of every scene (the continuous set borrows
+/// these).
+fn render(scenes: &[Scene], frames: usize) -> Vec<Vec<TensorF>> {
+    scenes
+        .iter()
+        .map(|sc| (0..frames).map(|i| sc.normalized_image(i)).collect())
+        .collect()
+}
+
+/// One weight-1, tick-0 continuous stream per scene over the rendered
+/// frames.
+fn continuous_set<'f>(
+    imgs: &'f [Vec<TensorF>],
+    scenes: &[Scene],
+) -> Vec<ContinuousStream<'f>> {
+    imgs.iter()
+        .zip(scenes)
+        .enumerate()
+        .map(|(sid, (fr, sc))| {
+            ContinuousStream::new(
+                sid,
+                fr.iter().zip(&sc.poses).map(|(im, p)| (im, *p)).collect(),
+            )
+        })
+        .collect()
+}
+
+fn assert_prefix_exact(
+    got: &[fadec::coordinator::FrameOutput],
+    solo: &[TensorF],
+    tag: &str,
+) {
+    for (i, out) in got.iter().enumerate() {
+        assert_eq!(
+            out.depth.data(),
+            solo[i].data(),
+            "{tag}: frame {i} diverged from solo"
+        );
+    }
+}
+
+fn fast_retry(attempts: usize) -> RetryPolicy {
+    RetryPolicy {
+        backoff: Duration::from_micros(50),
+        ..RetryPolicy::with_attempts(attempts)
+    }
+}
+
+#[test]
+fn late_joiner_is_bit_exact_vs_solo() {
+    let (n, frames) = (3, 4);
+    let scenes = make_scenes(n, frames, 110);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let mut server =
+        StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+            .unwrap();
+    for _ in 0..n {
+        server.open_stream();
+    }
+    let imgs = render(&scenes, frames);
+    let streams: Vec<ContinuousStream> = continuous_set(&imgs, &scenes)
+        .into_iter()
+        .map(|c| if c.sid == 2 { c.arriving(3) } else { c })
+        .collect();
+    let out = server
+        .run_continuous(&streams, &SchedulerOptions::default())
+        .unwrap();
+    for (s, d) in out.dispositions.iter().enumerate() {
+        assert_eq!(*d, StreamDisposition::Completed, "stream {s}");
+        assert_eq!(out.outputs[s].len(), frames);
+        assert_prefix_exact(&out.outputs[s], &solo[s], "late-joiner");
+    }
+    assert_eq!(out.stats.admitted, n);
+    assert_eq!(out.stats.frames, n * frames);
+    // the joiner's arrival gate forced narrow rounds early on
+    assert!(out.stats.fill_ratio() < 1.0);
+    assert!(server.report().contains("scheduler:"), "report surfaces it");
+}
+
+#[test]
+fn admission_rejects_deterministically_at_capacity() {
+    let (n, frames) = (4, 3);
+    let scenes = make_scenes(n, frames, 120);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let mut server =
+        StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+            .unwrap();
+    for _ in 0..n {
+        server.open_stream();
+    }
+    let imgs = render(&scenes, frames);
+    let streams = continuous_set(&imgs, &scenes);
+    let opts = SchedulerOptions {
+        capacity: 2,
+        admission: AdmissionPolicy::Reject,
+        ..SchedulerOptions::default()
+    };
+    let out = server.run_continuous(&streams, &opts).unwrap();
+    assert_eq!(
+        out.dispositions,
+        vec![
+            StreamDisposition::Completed,
+            StreamDisposition::Completed,
+            StreamDisposition::Rejected,
+            StreamDisposition::Rejected,
+        ],
+        "arrival order decides who gets the two slots"
+    );
+    for s in 0..2 {
+        assert_prefix_exact(&out.outputs[s], &solo[s], "admitted");
+    }
+    assert!(out.outputs[2].is_empty() && out.outputs[3].is_empty());
+    assert_eq!(out.stats.admitted, 2);
+    assert_eq!(out.stats.rejected, 2);
+}
+
+#[test]
+fn overload_queue_backfills_and_stays_bit_exact() {
+    // 2x-capacity overload under the queue policy: nobody is lost,
+    // everyone is served bit-exactly once a slot frees
+    let (n, frames) = (4, 3);
+    let scenes = make_scenes(n, frames, 130);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let mut server =
+        StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+            .unwrap();
+    for _ in 0..n {
+        server.open_stream();
+    }
+    let imgs = render(&scenes, frames);
+    let streams = continuous_set(&imgs, &scenes);
+    let opts = SchedulerOptions {
+        capacity: 2,
+        admission: AdmissionPolicy::Queue { deadline_ticks: 0 },
+        ..SchedulerOptions::default()
+    };
+    let out = server.run_continuous(&streams, &opts).unwrap();
+    for (s, d) in out.dispositions.iter().enumerate() {
+        assert_eq!(*d, StreamDisposition::Completed, "stream {s}");
+        assert_prefix_exact(&out.outputs[s], &solo[s], "queued");
+    }
+    assert_eq!(out.stats.queued, 2, "the overload half waited");
+    assert_eq!(out.stats.admitted, 4, "but everyone was admitted");
+    assert_eq!(out.stats.max_inflight, 1, "budget 1 is lockstep-degenerate");
+}
+
+#[test]
+fn shed_streams_checkpoint_and_resume_bit_exactly() {
+    // three equal always-ready streams fighting for a width-1 round
+    // with a 1-tick deadline and zero tolerance: the scheduler sheds
+    // them deterministically (traceable by hand), each leaves a
+    // resumable checkpoint, and both the served prefix and the resumed
+    // suffix are bit-identical to solo serving
+    let dir = tmp_dir("shed");
+    let (n, frames) = (3, 6);
+    let scenes = make_scenes(n, frames, 140);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let mut server =
+        StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+            .unwrap();
+    for _ in 0..n {
+        server.open_stream();
+    }
+    let store = SessionStore::open(
+        &dir,
+        n,
+        server.engine().backend().manifest(),
+        server.engine().qp().as_ref(),
+    )
+    .unwrap();
+    server.attach_session_store(store);
+    let imgs = render(&scenes, frames);
+    let streams = continuous_set(&imgs, &scenes);
+    let opts = SchedulerOptions {
+        capacity: n,
+        round_width: 1,
+        frame_deadline_ticks: 1,
+        miss_tolerance: 0,
+        degrade_first: false,
+        ..SchedulerOptions::default()
+    };
+    let out = server.run_continuous(&streams, &opts).unwrap();
+    // hand trace: 0 and 1 are served twice before their 2-tick lateness
+    // sheds them; 2 is served once at lateness 2 and sheds immediately
+    assert_eq!(
+        out.dispositions,
+        vec![
+            StreamDisposition::Shed { served: 2 },
+            StreamDisposition::Shed { served: 2 },
+            StreamDisposition::Shed { served: 1 },
+        ]
+    );
+    assert_eq!(out.stats.shed, 3);
+    assert_eq!(out.stats.deadline_misses, 3);
+    assert_eq!(out.stats.miss_by_lateness, [3, 0, 0, 0, 0]);
+    let qp = Arc::clone(server.engine().qp());
+    for s in 0..n {
+        let served = match out.dispositions[s] {
+            StreamDisposition::Shed { served } => served,
+            d => panic!("stream {s}: {d:?}"),
+        };
+        assert_prefix_exact(&out.outputs[s][..], &solo[s], "shed prefix");
+        assert_eq!(out.outputs[s].len(), served);
+        // the shed checkpoint resumes exactly where service stopped
+        let store = server.session_store_mut().unwrap();
+        assert!(store.has_checkpoint(s), "shed stream {s} checkpointed");
+        let mut resumed = store.load(s, &qp).unwrap();
+        for f in served..frames {
+            let got = server
+                .engine()
+                .step_session(
+                    &mut resumed,
+                    &imgs[s][f],
+                    &scenes[s].poses[f],
+                )
+                .unwrap();
+            assert_eq!(
+                got.depth.data(),
+                solo[s][f].data(),
+                "stream {s} frame {f} after resume"
+            );
+        }
+    }
+    assert!(server.report().contains("scheduler:"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn evict_to_checkpoint_pages_through_background_writer() {
+    // capacity-1 active set with three arrivals: admission evicts the
+    // running stream to the store (which itself pages through the
+    // PR-8 background writer thread), then resumes everyone FIFO —
+    // all served completely and bit-exactly
+    let dir = tmp_dir("evict");
+    let (n, frames) = (3, 3);
+    let scenes = make_scenes(n, frames, 150);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let mut server =
+        StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+            .unwrap();
+    for _ in 0..n {
+        server.open_stream();
+    }
+    let mut store = SessionStore::open(
+        &dir,
+        1, // store residency 1: scheduler evictions page via the writer
+        server.engine().backend().manifest(),
+        server.engine().qp().as_ref(),
+    )
+    .unwrap();
+    store.set_background(true).unwrap();
+    server.attach_session_store(store);
+    let imgs = render(&scenes, frames);
+    let streams = continuous_set(&imgs, &scenes);
+    let opts = SchedulerOptions {
+        capacity: 1,
+        admission: AdmissionPolicy::EvictToCheckpoint,
+        ..SchedulerOptions::default()
+    };
+    let out = server.run_continuous(&streams, &opts).unwrap();
+    for (s, d) in out.dispositions.iter().enumerate() {
+        assert_eq!(*d, StreamDisposition::Completed, "stream {s}");
+        assert_prefix_exact(&out.outputs[s], &solo[s], "evict/resume");
+    }
+    assert_eq!(out.stats.evicted, 2, "streams 0 and 1 made room for 2");
+    assert_eq!(out.stats.resumed, 2, "and both came back");
+    server.session_store_mut().unwrap().barrier().unwrap();
+    let rec = server.recovery_stats();
+    assert!(
+        rec.background_flushes >= 1,
+        "store paging went through the writer thread: {rec:?}"
+    );
+    assert!(rec.background_flush_seconds > 0.0);
+    assert!(server.report().contains("background"), "report surfaces it");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn inflight_budget_bounds_backpressure() {
+    let (n, frames) = (4, 4);
+    let scenes = make_scenes(n, frames, 160);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let run = |budget: usize, payload_cap: u64| {
+        let mut server =
+            StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+                .unwrap();
+        for _ in 0..n {
+            server.open_stream();
+        }
+        let imgs = render(&scenes, frames);
+        let streams = continuous_set(&imgs, &scenes);
+        let opts = SchedulerOptions {
+            capacity: n,
+            round_width: 1,
+            inflight_budget: budget,
+            max_inflight_payload_bytes: payload_cap,
+            ..SchedulerOptions::default()
+        };
+        let out = server.run_continuous(&streams, &opts).unwrap();
+        for (s, d) in out.dispositions.iter().enumerate() {
+            assert_eq!(*d, StreamDisposition::Completed, "stream {s}");
+            assert_prefix_exact(&out.outputs[s], &solo[s], "pipelined");
+        }
+        out.stats
+    };
+    // budget 2: exactly two rounds ever in flight, and the gate closed
+    // (with work ready) at least once
+    let st = run(2, 0);
+    assert_eq!(st.max_inflight, 2, "reaches but never exceeds the budget");
+    assert!(st.backpressure_stalls > 0, "the closed gate drained: {st:?}");
+    // a 1-byte payload bound turns budget 2 into serialized rounds:
+    // the deterministic payload gate closes after every begin
+    let st = run(2, 1);
+    assert_eq!(st.max_inflight, 1, "payload gate forbids a second round");
+    assert!(st.backpressure_stalls > 0);
+}
+
+/// Continuous overload (2x capacity, queue policy) on the given
+/// backend; returns per-stream depths plus the run's scheduler stats
+/// and the server's recovery accounting.
+fn overload_run(
+    backend: Arc<dyn HwBackend>,
+    qp: Arc<fadec::model::weights::QuantParams>,
+    opts: PipelineOptions,
+    scenes: &[Scene],
+    frames: usize,
+) -> (Vec<Vec<TensorF>>, SchedulerStats, fadec::metrics::RecoveryStats) {
+    let mut server = StreamServer::new(backend, qp, opts).unwrap();
+    for _ in scenes {
+        server.open_stream();
+    }
+    let imgs = render(scenes, frames);
+    let streams = continuous_set(&imgs, scenes);
+    let sopts = SchedulerOptions {
+        capacity: scenes.len() / 2,
+        admission: AdmissionPolicy::Queue { deadline_ticks: 0 },
+        ..SchedulerOptions::default()
+    };
+    let out = server.run_continuous(&streams, &sopts).unwrap();
+    let depths = out
+        .outputs
+        .iter()
+        .map(|outs| outs.iter().map(|o| o.depth.clone()).collect())
+        .collect();
+    (depths, out.stats, server.recovery_stats())
+}
+
+#[test]
+fn chaos_overload_sweep_is_bit_exact_and_deterministic() {
+    // the PR-8 acceptance pin: 2x-capacity overload on a faulting
+    // backend must (a) keep every admitted stream bit-identical to
+    // solo, and (b) make *identical* scheduling decisions to the same
+    // overload on a clean backend — virtual-tick scheduling cannot see
+    // wall-clock chaos
+    let (n, frames) = (4, 3);
+    let scenes = make_scenes(n, frames, 170);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+
+    let clean = RefBackend::synthetic(SEED);
+    let clean_qp = Arc::clone(clean.qp());
+    let (clean_depths, clean_stats, clean_rec) = overload_run(
+        Arc::new(clean),
+        clean_qp,
+        PipelineOptions::default(),
+        &scenes,
+        frames,
+    );
+    assert!(!clean_rec.any(), "clean run needs no recovery");
+
+    let inner = RefBackend::synthetic(SEED);
+    let qp = Arc::clone(inner.qp());
+    let chaos = Arc::new(ChaosBackend::new(
+        Arc::new(inner),
+        ChaosOptions {
+            seed: 3,
+            submit_fault_rate: 1.0,
+            heal_after: Some(4),
+            ..Default::default()
+        },
+    ));
+    let opts =
+        PipelineOptions { retry: fast_retry(6), ..Default::default() };
+    let (chaos_depths, chaos_stats, chaos_rec) = overload_run(
+        Arc::clone(&chaos) as Arc<dyn HwBackend>,
+        qp,
+        opts,
+        &scenes,
+        frames,
+    );
+
+    for s in 0..n {
+        assert_eq!(chaos_depths[s].len(), solo[s].len(), "stream {s}");
+        for (i, (a, b)) in
+            chaos_depths[s].iter().zip(&clean_depths[s]).enumerate()
+        {
+            assert_eq!(a.data(), b.data(), "stream {s} frame {i} vs clean");
+            assert_eq!(
+                a.data(),
+                solo[s][i].data(),
+                "stream {s} frame {i} vs solo"
+            );
+        }
+    }
+    // exact determinism: the chaotic run queued, admitted, formed and
+    // finished the very same rounds at the very same virtual ticks
+    assert_eq!(chaos_stats, clean_stats, "scheduling saw the chaos");
+    // and the faults themselves were absorbed at the retry layer, in
+    // exactly the scheduled amount
+    assert_eq!(chaos.faults_injected(), 4, "schedule heals after 4");
+    assert_eq!(chaos_rec.submit_faults, 4);
+    assert_eq!(chaos_rec.retries, 4, "one retry per injected fault");
+    assert_eq!(chaos_rec.giveups, 0);
+}
+
+#[test]
+fn sharded_continuous_spreads_and_stays_bit_exact() {
+    let (n, frames) = (4, 3);
+    let scenes = make_scenes(n, frames, 180);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let be0 = RefBackend::synthetic(SEED);
+    let qp0 = Arc::clone(be0.qp());
+    let be1 = RefBackend::synthetic(SEED);
+    let qp1 = Arc::clone(be1.qp());
+    let mut router = ShardRouter::new(
+        vec![
+            (Arc::new(be0) as Arc<dyn HwBackend>, qp0),
+            (Arc::new(be1) as Arc<dyn HwBackend>, qp1),
+        ],
+        PipelineOptions::default(),
+        ShardRouterOptions::default(),
+    )
+    .unwrap();
+    for _ in 0..n {
+        router.open_stream();
+    }
+    let imgs = render(&scenes, frames);
+    let streams = continuous_set(&imgs, &scenes);
+    // per-shard capacity 2: only an even spread admits all four
+    let opts = SchedulerOptions {
+        capacity: 2,
+        admission: AdmissionPolicy::Reject,
+        ..SchedulerOptions::default()
+    };
+    let out = router.run_continuous(&streams, &opts).unwrap();
+    for (s, d) in out.dispositions.iter().enumerate() {
+        assert_eq!(*d, StreamDisposition::Completed, "stream {s}");
+        assert_prefix_exact(&out.outputs[s], &solo[s], "sharded");
+    }
+    assert_eq!(out.stats.admitted, n, "placement spread the set evenly");
+    assert_eq!(out.stats.rejected, 0);
+    assert_eq!(router.scheduler_stats().admitted, n);
+    assert!(router.report().contains("scheduler:"));
+}
+
+#[test]
+fn shard_death_fails_continuous_set_over_bit_exactly() {
+    let dir = tmp_dir("failover");
+    let (n, frames) = (4, 3);
+    let scenes = make_scenes(n, frames, 190);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let inner0 = RefBackend::synthetic(SEED);
+    let qp0 = Arc::clone(inner0.qp());
+    let chaos =
+        Arc::new(ChaosBackend::new(Arc::new(inner0), ChaosOptions::default()));
+    let be1 = RefBackend::synthetic(SEED);
+    let qp1 = Arc::clone(be1.qp());
+    let opts =
+        PipelineOptions { retry: fast_retry(2), ..Default::default() };
+    let mut router = ShardRouter::new(
+        vec![
+            (Arc::clone(&chaos) as Arc<dyn HwBackend>, qp0),
+            (Arc::new(be1) as Arc<dyn HwBackend>, qp1),
+        ],
+        opts,
+        ShardRouterOptions {
+            placement: Placement::RoundRobin,
+            auto_rebalance: false,
+            imbalance_threshold: 1.5,
+        },
+    )
+    .unwrap();
+    let store = SessionStore::open(
+        &dir,
+        8,
+        chaos.manifest(),
+        router.engine(0).qp().as_ref(),
+    )
+    .unwrap();
+    router.attach_session_store(store);
+    for _ in 0..n {
+        router.open_stream();
+    }
+    // shard 0 is dead before the window: its half of the continuous
+    // set exhausts retries, fails over through checkpoints to shard 1,
+    // and is re-admitted there for its entire (unserved) frame list
+    chaos.set_dead(true);
+    let imgs = render(&scenes, frames);
+    let streams = continuous_set(&imgs, &scenes);
+    let sopts = SchedulerOptions {
+        capacity: n, // survivor must fit everyone after the failover
+        ..SchedulerOptions::default()
+    };
+    let out = router.run_continuous(&streams, &sopts).unwrap();
+    for (s, d) in out.dispositions.iter().enumerate() {
+        assert_eq!(*d, StreamDisposition::Completed, "stream {s}");
+        assert_eq!(out.outputs[s].len(), frames);
+        assert_prefix_exact(&out.outputs[s], &solo[s], "failover");
+    }
+    let rec = router.recovery_stats();
+    assert_eq!(rec.shard_failovers, 1, "one shard died once");
+    assert!(rec.giveups >= 1, "death exhausted a retry budget");
+    assert!(
+        rec.checkpoint_migrations >= 1,
+        "victims shipped through checkpoints: {rec:?}"
+    );
+    for s in 0..n {
+        assert_eq!(router.shard_of(s), Some(1), "stream {s} on the survivor");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
