@@ -32,31 +32,42 @@
 //!    budget. With `--overload` the streams are admitted at 2x the
 //!    scheduler's capacity and the excess waits in the admission queue
 //!    — everyone still completes, bit-identical to per-stream stepping.
+//! 8. **process isolation** (`--workers K`, PR 9) — the workload on a
+//!    fleet of K supervised worker *processes*
+//!    (`ShardRouter` over `IpcBackend`s). With K >= 2, worker 0 is
+//!    killed with SIGKILL mid-workload and no restart budget: its
+//!    shard dies for good, checkpoint failover ships its streams to a
+//!    survivor, and the depths still match per-stream stepping
+//!    bit-for-bit.
 //!
 //! All runs must produce bit-identical depth maps (asserted below);
-//! batching, pipelining, sharding, retries, checkpoint/restore and
-//! continuous scheduling are latency/durability mechanisms only. Runs
-//! from a clean checkout — no `artifacts/` needed: the segments are
-//! served by the pure-software RefBackend with synthetic calibration,
-//! and each stream gets its own procedurally generated video.
+//! batching, pipelining, sharding, retries, checkpoint/restore,
+//! continuous scheduling and process isolation are latency/durability
+//! mechanisms only. Runs from a clean checkout — no `artifacts/`
+//! needed: the segments are served by the pure-software RefBackend
+//! with synthetic calibration, and each stream gets its own
+//! procedurally generated video.
 //!
 //!     cargo run --release --example multi_stream \
 //!         [-- --streams N --frames M --conv-threads T \
 //!             --pipeline-depth K --shards S --chaos \
-//!             --checkpoint-dir DIR --continuous --overload]
+//!             --checkpoint-dir DIR --continuous --overload --workers K]
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fadec::config;
 use fadec::coordinator::{
-    AdmissionPolicy, ContinuousStream, PipelineOptions, RetryPolicy,
-    SchedulerOptions, SessionStore, ShardRouter, ShardRouterOptions,
-    StreamDisposition, StreamServer,
+    AdmissionPolicy, ContinuousStream, Placement, PipelineOptions,
+    RetryPolicy, SchedulerOptions, SessionStore, ShardRouter,
+    ShardRouterOptions, StreamDisposition, StreamServer,
 };
 use fadec::data::dataset::Scene;
 use fadec::poses::Mat4;
-use fadec::runtime::{ChaosBackend, ChaosOptions, HwBackend, RefBackend};
+use fadec::runtime::{
+    ChaosBackend, ChaosOptions, HwBackend, IpcBackend, RefBackend,
+    SupervisorOptions,
+};
 use fadec::tensor::TensorF;
 use fadec::util::Args;
 
@@ -71,6 +82,7 @@ fn main() -> anyhow::Result<()> {
     let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
     let continuous = args.has("continuous");
     let overload = args.has("overload");
+    let workers = args.get_usize("workers", 0);
 
     // one backend instance, shared by every stream; the server's engine
     // applies --conv-threads to it (output channels — and, in batched
@@ -503,6 +515,115 @@ fn main() -> anyhow::Result<()> {
             "bit-exact: continuous scheduling == per-stream stepping\n"
         );
         println!("{}", cont_server.report());
+    }
+
+    // --- mode 8 (--workers K): process-isolated fleet + supervised kill ---
+    // The workload once more, on K supervised worker *processes* (one
+    // per shard, each hosting the backend behind the IPC protocol).
+    // With K >= 2, worker 0 is killed with SIGKILL mid-workload and has
+    // no restart budget: its shard dies for good, checkpoint failover
+    // ships its streams to a survivor, and the final depth maps still
+    // match per-stream stepping bit-for-bit.
+    if workers > 0 {
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_ms_workers_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let backends: Vec<Arc<IpcBackend>> = (0..workers)
+            .map(|w| {
+                let opts = SupervisorOptions {
+                    // worker 0 is the designated victim: no restarts
+                    max_restarts: if w == 0 && workers >= 2 { 0 } else { 2 },
+                    ..SupervisorOptions::for_seed(0)
+                };
+                Ok(Arc::new(IpcBackend::connect(opts)?))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let mut router = ShardRouter::new(
+            backends
+                .iter()
+                .map(|be| {
+                    (Arc::clone(be) as Arc<dyn HwBackend>, Arc::clone(be.qp()))
+                })
+                .collect(),
+            PipelineOptions {
+                conv_threads,
+                retry: RetryPolicy {
+                    backoff: Duration::from_micros(50),
+                    ..RetryPolicy::with_attempts(3)
+                },
+                ..Default::default()
+            },
+            ShardRouterOptions {
+                placement: Placement::RoundRobin,
+                auto_rebalance: false,
+                ..Default::default()
+            },
+        )?;
+        let store = SessionStore::open(
+            &dir,
+            n_streams.max(1),
+            backends[0].manifest(),
+            router.engine(0).qp().as_ref(),
+        )?;
+        router.attach_session_store(store);
+        let iso_streams: Vec<usize> =
+            (0..n_streams).map(|_| router.open_stream()).collect();
+        let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..frames)
+            .map(|i| {
+                iso_streams
+                    .iter()
+                    .map(|&s| (s, &all_imgs[i][s], &scenes[s].poses[i]))
+                    .collect()
+            })
+            .collect();
+        let cut = (frames / 2).max(1).min(frames.saturating_sub(1));
+        // the kill needs rounds on both sides of it; with one frame
+        // (or one worker) the mode degrades to a plain isolated run
+        let kill = workers >= 2 && cut > 0;
+        let t0 = Instant::now();
+        let mut results = router.run_rounds(&rounds[..cut], pipeline_depth)?;
+        if kill {
+            backends[0].kill_worker(); // SIGKILL, mid-workload
+        }
+        results.extend(router.run_rounds(&rounds[cut..], pipeline_depth)?);
+        let iso_wall = t0.elapsed().as_secs_f64();
+        let mut last = results.pop().expect("at least one round");
+        last.sort_by_key(|(sid, _)| *sid);
+        assert_eq!(seq_last.len(), last.len());
+        for (s, (a, (_, o))) in seq_last.iter().zip(&last).enumerate() {
+            assert_eq!(
+                a.data(),
+                o.depth.data(),
+                "stream {s}: process-isolated serving diverged from \
+                 per-stream stepping"
+            );
+        }
+        let sup = router.supervisor_stats();
+        println!(
+            "isolated x{workers}:    {:7.3} s wall, {:6.2} fps aggregate — \
+             {} failover replays, {} supervised restarts",
+            iso_wall,
+            (n_streams * frames) as f64 / iso_wall.max(1e-9),
+            sup.failover_replays,
+            sup.restarts,
+        );
+        if kill {
+            assert_eq!(
+                router.recovery_stats().shard_failovers,
+                1,
+                "the killed worker's shard fails over exactly once"
+            );
+            println!(
+                "bit-exact: process-isolated fleet (worker 0 killed, \
+                 checkpoint failover) == per-stream stepping\n"
+            );
+        } else {
+            println!(
+                "bit-exact: process-isolated worker == per-stream stepping\n"
+            );
+        }
+        println!("{}", router.report());
+        let _ = std::fs::remove_dir_all(&dir);
     }
     Ok(())
 }

@@ -26,6 +26,12 @@
 //!    a bounded in-flight budget, and the record carries the
 //!    scheduler's quality signals (`fill_ratio`, `deadline_miss_rate`,
 //!    `shed`).
+//! 7. **isolated** (PR 9) — the `_isolated_kN` records serve the same
+//!    workload through K supervised worker *processes*
+//!    (`ShardRouter::on_worker_processes`) and through the bit-identical
+//!    in-process fleet, recording the wall-time ratio as
+//!    `ipc_overhead` (what the pipe + frame codec cost) plus the
+//!    supervised `restarts` the run needed (0 in a fault-free bench).
 //!
 //! Records merge into `BENCH_serve.json` (`util::benchjson` schema).
 //! One frame is the unit of work: `ns_per_iter` is nanoseconds per
@@ -56,7 +62,9 @@ use fadec::coordinator::{
 };
 use fadec::data::dataset::Scene;
 use fadec::poses::Mat4;
-use fadec::runtime::{ChaosBackend, ChaosOptions, HwBackend, RefBackend};
+use fadec::runtime::{
+    ChaosBackend, ChaosOptions, HwBackend, RefBackend, SupervisorOptions,
+};
 use fadec::tensor::TensorF;
 use fadec::util::benchjson::{self, BenchRecord};
 use fadec::util::Args;
@@ -451,6 +459,64 @@ fn main() {
             out.stats.queued,
             out.stats.shed,
             out.stats.backpressure_stalls,
+        );
+    }
+
+    // --- process-isolated serving (PR 9): the same fleet with every
+    // backend hosted in its own supervised worker process vs the bit-
+    // identical in-process fleet (equality is pinned by
+    // rust/tests/supervision.rs — this record measures what the pipe +
+    // frame codec cost) --------------------------------------------------
+    for k in [1usize, 2] {
+        let drive = |mut router: ShardRouter| -> (f64, ShardRouter) {
+            let streams: Vec<usize> =
+                (0..n_streams).map(|_| router.open_stream()).collect();
+            let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..n_frames)
+                .map(|i| {
+                    streams
+                        .iter()
+                        .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                        .collect()
+                })
+                .collect();
+            let t0 = Instant::now();
+            router.run_rounds_seq(&rounds, 2).expect("isolated rounds");
+            (t0.elapsed().as_secs_f64(), router)
+        };
+        let ropts =
+            ShardRouterOptions { auto_rebalance: false, ..Default::default() };
+        let inproc = ShardRouter::on_ref_backends(
+            k,
+            5,
+            PipelineOptions { conv_threads: 1, ..Default::default() },
+            ropts,
+        )
+        .expect("in-process fleet");
+        let (base_wall, _) = drive(inproc);
+        let iso = ShardRouter::on_worker_processes(
+            k,
+            5,
+            PipelineOptions { conv_threads: 1, ..Default::default() },
+            ropts,
+            SupervisorOptions::default(),
+        )
+        .expect("worker-process fleet");
+        let (wall, iso) = drive(iso);
+        let sup = iso.supervisor_stats();
+        let mut r =
+            rec_t(&format!("serve_isolated_k{k}"), &shape, wall, total, 1);
+        r.workers = Some(k);
+        r.ipc_overhead =
+            Some(if base_wall > 0.0 { wall / base_wall } else { 0.0 });
+        r.restarts = Some(sup.restarts);
+        records.push(r);
+        println!(
+            "isolated k={k}: {:7.3} s wall vs {:7.3} s in-process ({:.2}x \
+             IPC overhead), {} supervised restarts",
+            wall,
+            base_wall,
+            wall / base_wall.max(1e-9),
+            sup.restarts,
         );
     }
 

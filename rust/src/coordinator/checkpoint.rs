@@ -6,7 +6,12 @@
 //! stamped with the fingerprints of the serving configuration —
 //! [`Manifest::fingerprint`] and [`QuantParams::fingerprint`] — and a
 //! restore refuses a file written against different served bits instead
-//! of silently producing garbage depths.
+//! of silently producing garbage depths. The file itself ends in an
+//! 8-byte `util::Fnv64` content checksum (PR 9): a bit-rotted or
+//! truncated checkpoint fails its integrity check at restore with a
+//! clear error, *before* any of its tensors are decoded — the
+//! fingerprint guard catches the wrong configuration, the checksum
+//! catches the wrong bytes.
 //!
 //! The store also pages: it holds up to `capacity` sessions resident
 //! and evicts the least-recently-used one to disk when a check-in
@@ -47,6 +52,7 @@ use crate::data::tlv::{TlvEntry, TlvFile, TlvPayload};
 use crate::metrics::RecoveryStats;
 use crate::model::weights::QuantParams;
 use crate::tensor::Tensor;
+use crate::util::Fnv64;
 
 use super::session::StreamSession;
 
@@ -62,9 +68,10 @@ fn join_u64(hi: i32, lo: i32) -> u64 {
     ((hi as u32 as u64) << 32) | (lo as u32 as u64)
 }
 
-/// Serialize one session into fingerprint-stamped checkpoint bytes —
-/// the pure (no I/O bookkeeping) core shared by the synchronous `save`
-/// path and the background writer thread.
+/// Serialize one session into fingerprint-stamped, checksum-sealed
+/// checkpoint bytes — the pure (no I/O bookkeeping) core shared by the
+/// synchronous `save` path and the background writer thread. The last
+/// 8 bytes are the little-endian [`Fnv64`] of everything before them.
 fn encode(
     session: &StreamSession,
     manifest_fp: u64,
@@ -85,7 +92,11 @@ fn encode(
             )),
         },
     )?;
-    tlv.to_bytes()
+    let mut bytes = tlv.to_bytes()?;
+    let mut h = Fnv64::new();
+    h.write(&bytes);
+    bytes.extend_from_slice(&h.finish().to_le_bytes());
+    Ok(bytes)
 }
 
 /// One unit of work for the background writer thread.
@@ -379,14 +390,37 @@ impl SessionStore {
     }
 
     /// Restore stream `id` from its on-disk checkpoint, refusing files
-    /// written against a different manifest or parameter set.
+    /// that fail their content checksum (bit rot, truncation, foreign
+    /// writers) or were written against a different manifest or
+    /// parameter set.
     pub fn load(
         &mut self,
         id: usize,
         qp: &QuantParams,
     ) -> Result<StreamSession> {
         let path = self.checkpoint_path(id);
-        let tlv = TlvFile::load(&path)
+        let raw = fs::read(&path)
+            .with_context(|| format!("restoring stream {id}"))?;
+        ensure!(
+            raw.len() >= 8,
+            "checkpoint {} is {} bytes — too short to carry its integrity \
+             checksum (truncated or not written by a session store)",
+            path.display(),
+            raw.len()
+        );
+        let (body, foot) = raw.split_at(raw.len() - 8);
+        let want = u64::from_le_bytes(foot.try_into().expect("8 bytes"));
+        let mut h = Fnv64::new();
+        h.write(body);
+        let got = h.finish();
+        ensure!(
+            got == want,
+            "checkpoint {} failed its integrity check (stored checksum \
+             {want:016x}, computed {got:016x}) — the file is bit-rotted, \
+             truncated, or was not written by a session store",
+            path.display()
+        );
+        let tlv = TlvFile::parse(body)
             .with_context(|| format!("restoring stream {id}"))?;
         let fp = tlv
             .get(FP_ENTRY)
@@ -641,11 +675,40 @@ mod tests {
             SessionStore::open(&dir, 1, &short, &short_qp).unwrap();
         let err = foreign.load(0, &short_qp).unwrap_err();
         assert!(format!("{err:#}").contains("segment manifest"), "{err:#}");
-        // an unstamped TLV (not written by a store) is refused too
+        // an unstamped TLV (not written by a store) is refused too —
+        // it never had the checksum footer, so integrity fails first
         let bare = eng.new_session(3).to_tlv().unwrap();
         bare.save(&store.checkpoint_path(3)).unwrap();
         let err = store.load(3, &qp).unwrap_err();
-        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        assert!(format!("{err:#}").contains("integrity"), "{err:#}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_rotted_checkpoint_is_refused() {
+        let dir = tmp_dir("rot");
+        let eng = engine(12);
+        let manifest = eng.backend().manifest().clone();
+        let qp = Arc::clone(eng.qp());
+        let mut store = SessionStore::open(&dir, 1, &manifest, &qp).unwrap();
+        store.save(&eng.new_session(0)).unwrap();
+        let path = store.checkpoint_path(0);
+        let mut bytes = fs::read(&path).unwrap();
+        // flip one payload bit mid-file: the fingerprint entry still
+        // decodes, only the content checksum can catch this
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        let err = store.load(0, &qp).unwrap_err();
+        assert!(format!("{err:#}").contains("integrity check"), "{err:#}");
+        // a truncated file is refused with the short-file error
+        fs::write(&path, &bytes[..4]).unwrap();
+        let err = store.load(0, &qp).unwrap_err();
+        assert!(format!("{err:#}").contains("too short"), "{err:#}");
+        // flip the bit back and the checkpoint restores cleanly
+        bytes[mid] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        assert_eq!(store.load(0, &qp).unwrap().id, 0);
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -115,8 +115,14 @@ pub struct RetryPolicy {
     /// Seed for the deterministic jitter (0..25% of the backoff) added
     /// to each delay so lockstep retries across shards de-correlate.
     pub jitter_seed: u64,
-    /// Budget for the *extra* time one HW call may spend retrying; once
-    /// exhausted the call gives up even if attempts remain.
+    /// Per-wait deadline on one HW attempt: a queued submission whose
+    /// completion hasn't arrived within this budget is abandoned as a
+    /// retryable fault (`SubmitHandle::wait_batch_deadline`), so a
+    /// stalled backend becomes a retry instead of a deadlock. It also
+    /// bounds the total time the retry loop may spend — the loop gives
+    /// up once `round_timeout * max_attempts` has elapsed, even if
+    /// attempts remain. Only enforced when retry is enabled: the
+    /// default path keeps the allocation-free untimed wait.
     pub round_timeout: Duration,
 }
 
@@ -778,10 +784,15 @@ impl PipelineEngine {
                     return Err(e);
                 }
             };
-            handle.wait_batch_timed().map_err(|e| {
-                self.note_recovery(|r| r.wait_faults += 1);
-                e
-            })
+            // deadline-capped wait: a backend that never completes the
+            // submission (wedged serve loop, dead worker) surfaces here
+            // as a retryable wait fault instead of blocking forever
+            handle.wait_batch_deadline(self.opts.retry.round_timeout).map_err(
+                |e| {
+                    self.note_recovery(|r| r.wait_faults += 1);
+                    e
+                },
+            )
         } else {
             let refs: Vec<Vec<&QTensor>> =
                 batch.iter().map(|ins| ins.iter().collect()).collect();
@@ -806,7 +817,12 @@ impl PipelineEngine {
     ) -> Result<T> {
         let policy = self.opts.retry;
         let max = policy.max_attempts.max(1);
-        let deadline = Instant::now() + policy.round_timeout;
+        // every attempt may legitimately spend up to one per-wait
+        // deadline blocked on the backend, so the loop's overall budget
+        // scales with the attempt count — a single stalled wait must
+        // not consume the entire retry budget
+        let deadline = Instant::now()
+            + policy.round_timeout.saturating_mul(max as u32);
         let mut tries = 0usize;
         loop {
             match attempt() {
@@ -1051,10 +1067,11 @@ impl PipelineEngine {
                             e
                         })?,
                 };
-                h.wait_batch_timed().map_err(|e| {
-                    self.note_recovery(|r| r.wait_faults += 1);
-                    e
-                })
+                h.wait_batch_deadline(self.opts.retry.round_timeout)
+                    .map_err(|e| {
+                        self.note_recovery(|r| r.wait_faults += 1);
+                        e
+                    })
             })?
         };
         anyhow::ensure!(

@@ -42,7 +42,7 @@ use crate::metrics::{
 };
 use crate::model::weights::QuantParams;
 use crate::poses::Mat4;
-use crate::runtime::{HwBackend, RefBackend};
+use crate::runtime::{HwBackend, IpcBackend, RefBackend, SupervisorOptions};
 use crate::tensor::TensorF;
 
 use super::checkpoint::SessionStore;
@@ -112,6 +112,24 @@ impl StreamServer {
     /// backend's conv kernels through `HwBackend::set_conv_threads`.
     pub fn on_ref_backend(seed: u64, opts: PipelineOptions) -> Result<Self> {
         let backend = RefBackend::synthetic(seed);
+        let qp = Arc::clone(backend.qp());
+        Self::new(Arc::new(backend), qp, opts)
+    }
+
+    /// Artifact-free server whose backend lives in its own supervised
+    /// worker *process* ([`IpcBackend`]): same synthetic model, same
+    /// bits as [`StreamServer::on_ref_backend`] with the same seed, but
+    /// a backend crash or hang kills the child, not this process — the
+    /// supervisor restarts it under its backoff budget and serving
+    /// resumes (with the retry policy on, transparently).
+    pub fn on_worker_process(
+        seed: u64,
+        opts: PipelineOptions,
+        sup_opts: SupervisorOptions,
+    ) -> Result<Self> {
+        let backend =
+            IpcBackend::connect(SupervisorOptions { seed, ..sup_opts })
+                .context("spawning the backend worker process")?;
         let qp = Arc::clone(backend.qp());
         Self::new(Arc::new(backend), qp, opts)
     }
@@ -570,6 +588,13 @@ impl StreamServer {
         total
     }
 
+    /// Supervision accounting of a process-isolated backend (restarts,
+    /// heartbeat misses, deadline expiries, worker downtime); `None`
+    /// for in-process backends.
+    pub fn supervisor_stats(&self) -> Option<crate::metrics::SupervisorStats> {
+        self.engine.backend().supervisor_stats()
+    }
+
     /// Human-readable per-stream + aggregate throughput table.
     pub fn report(&self) -> String {
         let mut out = String::from(
@@ -664,6 +689,16 @@ impl StreamServer {
                 rec.checkpoint_bytes as f64 / 1024.0,
                 rec.background_flushes,
                 rec.background_flush_seconds * 1e3,
+            ));
+        }
+        if let Some(sup) = self.supervisor_stats().filter(|s| s.any()) {
+            out.push_str(&format!(
+                "supervision: {} restarts ({} heartbeat misses, {} \
+                 deadline expiries), {:.3}s worker downtime\n",
+                sup.restarts,
+                sup.heartbeat_misses,
+                sup.deadline_expiries,
+                sup.downtime_seconds,
             ));
         }
         out

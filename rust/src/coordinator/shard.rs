@@ -53,6 +53,15 @@
 //! failover is disabled, no shard survives, or the replay itself
 //! fails. Every hop is counted in [`RecoveryStats`]
 //! ([`ShardRouter::recovery_stats`]).
+//!
+//! **Process isolation** (PR 9): [`ShardRouter::on_worker_processes`]
+//! builds the same fleet with each shard's backend hosted in its own
+//! supervised worker *process* ([`IpcBackend`]) — a crashed or hung
+//! worker takes down only its shard, whose streams then ride the
+//! checkpoint-failover path above while the supervisor restarts the
+//! child. Fleet-wide supervision accounting (restarts, heartbeat
+//! misses, deadline expiries, failover replays) is merged by
+//! [`ShardRouter::supervisor_stats`].
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -62,11 +71,11 @@ use anyhow::{ensure, Context, Error, Result};
 
 use crate::metrics::{
     shard_imbalance, AggregateThroughput, BatchStats, RecoveryStats,
-    SchedulerStats, ShardStats, StreamThroughput,
+    SchedulerStats, ShardStats, StreamThroughput, SupervisorStats,
 };
 use crate::model::weights::QuantParams;
 use crate::poses::Mat4;
-use crate::runtime::{HwBackend, RefBackend};
+use crate::runtime::{HwBackend, IpcBackend, RefBackend, SupervisorOptions};
 use crate::tensor::TensorF;
 
 use super::checkpoint::SessionStore;
@@ -166,6 +175,10 @@ pub struct ShardRouter {
     /// Fleet-wide continuous-scheduling accounting accumulated across
     /// `run_continuous` calls (per-shard drives merged in).
     sched: SchedulerStats,
+    /// Router-level supervision accounting (failover replays onto a
+    /// survivor after a worker-process death) — per-backend supervisor
+    /// counters are merged in by [`ShardRouter::supervisor_stats`].
+    sup: SupervisorStats,
     started: Instant,
 }
 
@@ -215,6 +228,7 @@ impl ShardRouter {
             store: None,
             recovery: RecoveryStats::default(),
             sched: SchedulerStats::default(),
+            sup: SupervisorStats::default(),
             started: Instant::now(),
         })
     }
@@ -236,6 +250,38 @@ impl ShardRouter {
                 (Arc::new(be) as Arc<dyn HwBackend>, qp)
             })
             .collect();
+        Self::new(backends, opts, ropts)
+    }
+
+    /// Process-isolated fleet: K supervised worker processes, each
+    /// hosting a synthetic `RefBackend` seeded with `seed` behind the
+    /// IPC protocol ([`IpcBackend`]). Bit-identical to
+    /// [`ShardRouter::on_ref_backends`] with the same seed — only the
+    /// fault domain changes: a worker crash or hang kills one shard,
+    /// not the process, and the supervisor restarts it under its
+    /// backoff budget while the router's checkpoint failover replays
+    /// the shard's unfinished work on a survivor.
+    pub fn on_worker_processes(
+        k: usize,
+        seed: u64,
+        opts: PipelineOptions,
+        ropts: ShardRouterOptions,
+        sup_opts: SupervisorOptions,
+    ) -> Result<Self> {
+        ensure!(k >= 1, "shard fleet size must be >= 1");
+        let backends = (0..k)
+            .map(|s| {
+                let be = IpcBackend::connect(SupervisorOptions {
+                    seed,
+                    ..sup_opts.clone()
+                })
+                .with_context(|| {
+                    format!("spawning worker process for shard {s}")
+                })?;
+                let qp = Arc::clone(be.qp());
+                Ok((Arc::new(be) as Arc<dyn HwBackend>, qp))
+            })
+            .collect::<Result<Vec<_>>>()?;
         Self::new(backends, opts, ropts)
     }
 
@@ -336,6 +382,19 @@ impl ShardRouter {
         }
         if let Some(store) = &self.store {
             total.merge(store.stats());
+        }
+        total
+    }
+
+    /// Fleet-wide supervision accounting: router-level failover-replay
+    /// counts merged with every process-isolated backend's supervisor
+    /// counters (in-process backends contribute nothing).
+    pub fn supervisor_stats(&self) -> SupervisorStats {
+        let mut total = self.sup.clone();
+        for shard in &self.shards {
+            if let Some(s) = shard.engine.backend().supervisor_stats() {
+                total.merge(&s);
+            }
         }
         total
     }
@@ -1008,6 +1067,9 @@ impl ShardRouter {
             }
         }
         self.recovery.shard_failovers += 1;
+        if self.shards[s].engine.backend().supervisor_stats().is_some() {
+            self.sup.failover_replays += 1;
+        }
         // already fully served streams just need their verdict; the
         // rest re-enter admission on the survivor with their remaining
         // frames
@@ -1098,6 +1160,9 @@ impl ShardRouter {
             }
         }
         self.recovery.shard_failovers += 1;
+        if self.shards[s].engine.backend().supervisor_stats().is_some() {
+            self.sup.failover_replays += 1;
+        }
         let unfinished: Vec<(usize, ShardRoundInputs<'_>)> = work
             .iter()
             .filter(|(r, _)| !completed.contains(r))
@@ -1235,6 +1300,19 @@ impl ShardRouter {
                 rec.restores,
                 rec.checkpoint_migrations,
                 rec.checkpoint_bytes as f64 / (1024.0 * 1024.0),
+            ));
+        }
+        let sup = self.supervisor_stats();
+        if sup.any() {
+            out.push_str(&format!(
+                "supervision: {} restarts ({} heartbeat misses, {} \
+                 deadline expiries), {} failover replays, {:.3}s worker \
+                 downtime\n",
+                sup.restarts,
+                sup.heartbeat_misses,
+                sup.deadline_expiries,
+                sup.failover_replays,
+                sup.downtime_seconds,
             ));
         }
         out

@@ -96,6 +96,23 @@
 //!   `StreamServer::run_continuous` / `ShardRouter::run_continuous`
 //!   drive it, `metrics::SchedulerStats` accounts it, and
 //!   `rust/tests/scheduler.rs` pins it.
+//! * **Isolation** (`runtime::ipc` + `runtime::supervisor`, PR 9) —
+//!   crash containment: [`runtime::IpcBackend`] is a [`runtime::HwBackend`]
+//!   whose segments execute in a *separate worker process* (`fadec
+//!   worker`) over a length-prefixed TLV protocol on stdin/stdout, so a
+//!   segfault, OOM-kill or wedge in one shard's backend can never take
+//!   down the router or its sibling shards. A [`runtime::Supervisor`]
+//!   owns the child lifecycle — fingerprint-checked handshake, heartbeat
+//!   liveness (hang/freeze detection), per-wait deadlines, SIGKILL +
+//!   restart under a bounded exponential-backoff budget — and surfaces a
+//!   typed `BackendDown` once the budget is spent, which the Durability
+//!   layer's checkpoint failover then treats exactly like shard death.
+//!   Because sessions live in the *coordinator* process and mutate only
+//!   at Commit, a worker restart loses no stream state and serving stays
+//!   bit-identical to in-process backends
+//!   (`ShardRouter::on_worker_processes`, `StreamServer::on_worker_process`;
+//!   `metrics::SupervisorStats` accounts it, `rust/tests/supervision.rs`
+//!   pins it — including a fuzzed frame codec).
 //!
 //! # Data plane (PR 5)
 //!
@@ -184,9 +201,10 @@
 //! The seams the shard layer rides — `HwBackend` impls (sync-only ones
 //! get submit/await free via the default-eager path), session-local
 //! stream state, self-contained `RoundInFlight` values — remain open
-//! for what's next: remote backends behind the same trait, richer SLO
-//! classes in the scheduler, and placement policies beyond
-//! least-loaded in `ShardRouter`.
+//! for what's next: the process boundary behind `IpcBackend` already
+//! speaks a versioned wire protocol, so a *remote* (cross-host) worker
+//! is a transport swap away; richer SLO classes in the scheduler and
+//! placement policies beyond least-loaded in `ShardRouter` stay open.
 
 pub mod codesign;
 pub mod config;

@@ -305,6 +305,51 @@ impl RecoveryStats {
     }
 }
 
+/// Worker-process supervision accounting (PR 9): every lifecycle event
+/// a `runtime::Supervisor` performs on a process-isolated backend.
+/// Kept per supervisor, merged upward by `ShardRouter` /
+/// `StreamServer` (which also own `failover_replays` — the supervisor
+/// detects and restarts, the router replays) and surfaced through
+/// their reports. The supervision tests pin these counters against the
+/// injected fault schedule *exactly* — a double-counted heartbeat miss
+/// is a bug, not noise.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SupervisorStats {
+    /// Worker processes respawned after a crash or a hang kill (the
+    /// initial spawn is not a restart).
+    pub restarts: usize,
+    /// Hangs detected by heartbeat staleness (the frozen-process
+    /// flavor: not even the worker's heartbeat thread is running).
+    pub heartbeat_misses: usize,
+    /// Hangs detected by a request outliving the per-wait deadline
+    /// while heartbeats still flowed (the wedged-serve-loop flavor).
+    pub deadline_expiries: usize,
+    /// Rounds replayed through the checkpoint-failover path because a
+    /// supervised backend went down mid-round (filled by the router).
+    pub failover_replays: usize,
+    /// Cumulative seconds between detecting a worker down and serving
+    /// from its replacement.
+    pub downtime_seconds: f64,
+}
+
+impl SupervisorStats {
+    /// Fold another supervisor's accounting into this one (per-shard
+    /// supervisors merge into the router's fleet total).
+    pub fn merge(&mut self, other: &SupervisorStats) {
+        self.restarts += other.restarts;
+        self.heartbeat_misses += other.heartbeat_misses;
+        self.deadline_expiries += other.deadline_expiries;
+        self.failover_replays += other.failover_replays;
+        self.downtime_seconds += other.downtime_seconds;
+    }
+
+    /// Whether any supervision activity happened at all (gates the
+    /// report line so in-process serving reports stay unchanged).
+    pub fn any(&self) -> bool {
+        *self != SupervisorStats::default()
+    }
+}
+
 /// Continuous-scheduler accounting (PR 8): every admission decision,
 /// deadline miss and degradation the `coordinator::RoundScheduler`
 /// makes while forming rounds from ready streams. Kept per
@@ -609,6 +654,28 @@ mod tests {
         assert_eq!(a.submit_faults, 0);
         assert_eq!(a.background_flushes, 6);
         assert!((a.background_flush_seconds - 0.5).abs() < 1e-12);
+        assert!(a.any());
+    }
+
+    #[test]
+    fn supervisor_stats_merge_and_gate() {
+        let mut a = SupervisorStats::default();
+        assert!(!a.any(), "fresh stats report no activity");
+        let b = SupervisorStats {
+            restarts: 2,
+            heartbeat_misses: 1,
+            deadline_expiries: 1,
+            failover_replays: 1,
+            downtime_seconds: 0.25,
+        };
+        assert!(b.any());
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.restarts, 4);
+        assert_eq!(a.heartbeat_misses, 2);
+        assert_eq!(a.deadline_expiries, 2);
+        assert_eq!(a.failover_replays, 2);
+        assert!((a.downtime_seconds - 0.5).abs() < 1e-12);
         assert!(a.any());
     }
 

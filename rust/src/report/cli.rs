@@ -26,6 +26,8 @@ COMMANDS
                       --table2 [--frames N] | --fig8 [--frames N]
                       --qualitative [--out DIR] | --overhead [--frames N]
   pipeline-chart    Fig 5 chart + overlap accounting [--frames N]
+  worker            IPC backend worker (spawned by the supervisor; speaks
+                      the length-prefixed TLV protocol on stdin/stdout)
   help              this text
 ";
 
@@ -111,6 +113,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "worker" => crate::runtime::ipc::worker_main(args),
         "pipeline-chart" => {
             let ctx = EvalCtx::load(Paths::from_args(args))?;
             print!(

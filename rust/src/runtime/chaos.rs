@@ -10,6 +10,11 @@
 //!   surfaces `Err` at wait (the mid-segment execution fault);
 //! * **latency spikes** — the submission is delayed before delegating
 //!   (a stalled command queue, no error);
+//! * **stalls** — the submission *never completes*: the handle's
+//!   completion channel is parked alive forever, so an untimed wait
+//!   blocks indefinitely (the wedged-device case; only
+//!   `SubmitHandle::wait_batch_deadline` — i.e. an enforced
+//!   `RetryPolicy::round_timeout` — turns it into a retryable fault);
 //! * **transient-then-heal** — after `heal_after` injected faults the
 //!   backend behaves perfectly, so a bounded retry policy provably
 //!   drains the schedule;
@@ -33,7 +38,8 @@
 //! same wrapper instance.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -42,7 +48,7 @@ use crate::data::manifest::{Manifest, SegmentDesc};
 use crate::quant::QTensor;
 use crate::util::Rng;
 
-use super::{HwBackend, SegmentId, SubmitHandle};
+use super::{HwBackend, HwCompletion, SegmentId, SubmitHandle};
 
 /// Knobs of one chaos schedule. All rates are probabilities in [0, 1]
 /// drawn independently per submission, in the order submit → wait →
@@ -60,6 +66,9 @@ pub struct ChaosOptions {
     pub latency_rate: f64,
     /// Duration of an injected latency spike.
     pub latency: Duration,
+    /// Probability a submission stalls forever: the handle never
+    /// completes, and an untimed wait on it never returns.
+    pub stall_rate: f64,
     /// Stop injecting after this many faults (transient-then-heal);
     /// `None` never heals.
     pub heal_after: Option<usize>,
@@ -73,6 +82,7 @@ impl Default for ChaosOptions {
             wait_fault_rate: 0.0,
             latency_rate: 0.0,
             latency: Duration::from_millis(1),
+            stall_rate: 0.0,
             heal_after: None,
         }
     }
@@ -90,6 +100,12 @@ pub struct ChaosBackend {
     submit_faults: AtomicUsize,
     wait_faults: AtomicUsize,
     latency_spikes: AtomicUsize,
+    stalls: AtomicUsize,
+    /// Senders of stalled submissions, kept alive so the matching
+    /// receivers never disconnect — a stalled wait must *hang*, not
+    /// fail fast (a disconnect would be indistinguishable from a
+    /// crashed worker and would defeat the timeout test).
+    parked: Mutex<Vec<Sender<HwCompletion>>>,
     /// Persistent-failure mode: every submission errors until revived.
     dead: AtomicBool,
 }
@@ -104,6 +120,8 @@ impl ChaosBackend {
             submit_faults: AtomicUsize::new(0),
             wait_faults: AtomicUsize::new(0),
             latency_spikes: AtomicUsize::new(0),
+            stalls: AtomicUsize::new(0),
+            parked: Mutex::new(Vec::new()),
             dead: AtomicBool::new(false),
         }
     }
@@ -139,7 +157,13 @@ impl ChaosBackend {
         self.latency_spikes.load(Ordering::Relaxed)
     }
 
-    /// Total injected faults (submit + wait; latency is not a fault).
+    /// Submissions stalled forever (their handles never complete).
+    pub fn stalls_injected(&self) -> usize {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Total injected faults (submit + wait + stall; latency is not a
+    /// fault).
     pub fn faults_injected(&self) -> usize {
         self.faults.load(Ordering::Relaxed)
     }
@@ -152,14 +176,17 @@ impl ChaosBackend {
         }
     }
 
-    /// One submission's fate: (submit_fault, wait_fault, latency).
-    fn draw(&self) -> (bool, bool, bool) {
+    /// One submission's fate: (submit_fault, wait_fault, latency,
+    /// stall). The stall draw comes after the original three so adding
+    /// it left every pre-existing seeded schedule unchanged.
+    fn draw(&self) -> (bool, bool, bool, bool) {
         let idx = self.submissions.fetch_add(1, Ordering::Relaxed) as u64;
         let mut rng = Rng::new(self.opts.seed.wrapping_add(idx.wrapping_mul(0x9E37)));
         let submit = (rng.unit_f32() as f64) < self.opts.submit_fault_rate;
         let wait = (rng.unit_f32() as f64) < self.opts.wait_fault_rate;
         let latency = (rng.unit_f32() as f64) < self.opts.latency_rate;
-        (submit, wait, latency)
+        let stall = (rng.unit_f32() as f64) < self.opts.stall_rate;
+        (submit, wait, latency, stall)
     }
 }
 
@@ -200,7 +227,7 @@ impl HwBackend for ChaosBackend {
         if self.dead.load(Ordering::Relaxed) {
             bail!("chaos: backend is dead (injected persistent failure)");
         }
-        let (submit_fault, wait_fault, latency) = self.draw();
+        let (submit_fault, wait_fault, latency, stall) = self.draw();
         if latency {
             self.latency_spikes.fetch_add(1, Ordering::Relaxed);
             std::thread::sleep(self.opts.latency);
@@ -231,6 +258,17 @@ impl HwBackend for ChaosBackend {
                 now,
                 now,
             ));
+        }
+        if stall && self.armed() {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            self.stalls.fetch_add(1, Ordering::Relaxed);
+            // the handle is valid but never completes: the sender is
+            // parked (alive, never used), so the receiver blocks until
+            // a deadline-capped wait abandons it — the batch drops
+            // untouched, same replay guarantee as the other faults
+            let (tx, rx) = mpsc::channel();
+            self.parked.lock().expect("chaos parked poisoned").push(tx);
+            return Ok(SubmitHandle::queued(rx));
         }
         self.inner.submit_batch(id, batch)
     }
@@ -356,6 +394,43 @@ mod tests {
         assert!(format!("{err:#}").contains("dead"));
         be.set_dead(false);
         assert!(be.submit(id, vec![img]).unwrap().wait().is_ok());
+    }
+
+    #[test]
+    fn stalled_submission_hangs_until_deadline_wait_abandons_it() {
+        let (be, img, id) = chaotic(ChaosOptions {
+            seed: 3,
+            stall_rate: 1.0,
+            ..Default::default()
+        });
+        let h = be.submit(id, vec![img.clone()]).unwrap();
+        let t0 = Instant::now();
+        let err = h
+            .wait_batch_deadline(Duration::from_millis(20))
+            .unwrap_err();
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert!(
+            format!("{err:#}").contains("timed out"),
+            "stall must surface as a wait timeout, got: {err:#}"
+        );
+        assert_eq!(be.stalls_injected(), 1);
+        assert_eq!(be.faults_injected(), 1);
+        // heal_after bounds stalls like any other fault: a schedule
+        // healed at one stall serves the next submission normally
+        let (be, img, id) = chaotic(ChaosOptions {
+            seed: 3,
+            stall_rate: 1.0,
+            heal_after: Some(1),
+            ..Default::default()
+        });
+        let h = be.submit(id, vec![img.clone()]).unwrap();
+        assert!(h
+            .wait_batch_deadline(Duration::from_millis(20))
+            .is_err());
+        let want = be.run(id, &[&img]).unwrap();
+        let got = be.submit(id, vec![img]).unwrap().wait().unwrap();
+        assert_eq!(got[0].t.data(), want[0].t.data());
+        assert_eq!(be.stalls_injected(), 1);
     }
 
     #[test]

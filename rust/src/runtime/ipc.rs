@@ -1,0 +1,995 @@
+//! Process-isolated backend — [`IpcBackend`] serves the [`HwBackend`]
+//! contract over the stdin/stdout pipes of a `fadec worker` child
+//! process (see the "Process isolation & supervision" section of the
+//! module docs for the full contract).
+//!
+//! # Wire format
+//!
+//! Both directions carry *frames*: `[u32 LE length][TLV body]`, where
+//! the body is the hardened `data/tlv.rs` container (hostile-input
+//! validated, deterministic encoding). Scalars ride as tiny tensor
+//! entries — a `u64` as an i32 pair (hi, lo), strings as i8 byte
+//! tensors, quantized tensors natively as i16 entries carrying their
+//! exponent — so the protocol inherits the TLV loader's truncation /
+//! overflow / duplicate-name rejection wholesale. A frame longer than
+//! [`MAX_FRAME_BYTES`] is rejected *before* any allocation.
+//!
+//! Requests (parent → worker) carry an `op` entry: `hello` (handshake:
+//! seed, conv threads, heartbeat period; the reply carries the worker's
+//! manifest/parameter fingerprints for verification), `run_batch` (a
+//! segment *name* — ids are per-process and do not survive restarts —
+//! plus the input batch), `ping`, and the fault injectors `stall`
+//! (serve loop parks; heartbeats continue), `freeze` (heartbeats stop
+//! too — the SIGSTOP analog) and `shutdown`. Replies carry `ok`/`err`
+//! plus the outputs and the worker-side execution seconds; heartbeat
+//! frames (a lone `beat` counter) interleave with replies on stdout.
+//!
+//! The worker serves requests strictly in order on one thread, so
+//! replies are FIFO; the parent's dedicated reader thread matches them
+//! to a FIFO queue of pending completions — exactly the in-order
+//! completion the submit/await contract requires. A reply with no
+//! pending request, a corrupt frame, or EOF poisons the connection:
+//! the reader marks the worker down and fails every pending wait, which
+//! is what lets `coordinator::RetryPolicy` and the
+//! [`Supervisor`](super::supervisor::Supervisor) turn a crashed or
+//! wedged child into a retryable fault instead of UB or a deadlock.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::data::manifest::{Manifest, SegmentDesc};
+use crate::data::tlv::{TlvEntry, TlvFile, TlvPayload};
+use crate::metrics::SupervisorStats;
+use crate::model::weights::QuantParams;
+use crate::quant::QTensor;
+use crate::tensor::Tensor;
+use crate::util::Args;
+
+use super::supervisor::{Supervisor, SupervisorOptions};
+use super::{check_inputs, HwBackend, HwCompletion, SegmentId, SubmitHandle};
+
+/// Upper bound on one frame's TLV body. Checked on both sides before
+/// any length-driven allocation; generous next to the largest real
+/// round (a full-fleet image batch is a few MiB).
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// Protocol revision carried in the handshake; bumped on any wire
+/// change so a version-skewed parent/worker pair fails loudly.
+pub const PROTO_VERSION: u64 = 1;
+
+const OP_HELLO: &str = "hello";
+const OP_RUN_BATCH: &str = "run_batch";
+const OP_PING: &str = "ping";
+const OP_CONV: &str = "conv_threads";
+const OP_STALL: &str = "stall";
+const OP_FREEZE: &str = "freeze";
+const OP_SHUTDOWN: &str = "shutdown";
+
+const KEY_OP: &str = "op";
+const KEY_OK: &str = "ok";
+const KEY_ERR: &str = "err";
+const KEY_BEAT: &str = "beat";
+
+// --- frame codec -----------------------------------------------------------
+
+/// Write one length-prefixed frame (a single `write_all` + flush, so
+/// concurrent writers interleave only at frame granularity — callers
+/// serialize on a mutex anyway).
+pub fn write_frame(w: &mut impl Write, tlv: &TlvFile) -> Result<()> {
+    let body = tlv.to_bytes()?;
+    ensure!(
+        body.len() <= MAX_FRAME_BYTES,
+        "IPC frame of {} bytes exceeds the {} byte bound",
+        body.len(),
+        MAX_FRAME_BYTES
+    );
+    let mut buf = Vec::with_capacity(4 + body.len());
+    buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&body);
+    w.write_all(&buf).context("writing IPC frame")?;
+    w.flush().context("flushing IPC frame")?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF *at a frame boundary*
+/// (the peer closed the pipe); EOF mid-frame, a hostile length field
+/// or an undecodable body is an error — the stream has lost sync and
+/// the connection must be poisoned, never resynchronized by guessing.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<TlvFile>> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < len.len() {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("IPC frame header truncated ({got} of 4 bytes)"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading IPC frame header"),
+        }
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    ensure!(
+        len <= MAX_FRAME_BYTES,
+        "IPC frame declares {len} bytes (bound {MAX_FRAME_BYTES}) — \
+         corrupt or hostile stream"
+    );
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading IPC frame body")?;
+    Ok(Some(TlvFile::parse(&body).context("decoding IPC frame")?))
+}
+
+// --- scalar / tensor entry helpers -----------------------------------------
+
+fn split_u64(v: u64) -> [i32; 2] {
+    [(v >> 32) as u32 as i32, v as u32 as i32]
+}
+
+fn join_u64(hi: i32, lo: i32) -> u64 {
+    ((hi as u32 as u64) << 32) | (lo as u32 as u64)
+}
+
+fn put_u64(tlv: &mut TlvFile, name: &str, v: u64) -> Result<()> {
+    tlv.insert(
+        name,
+        TlvEntry {
+            exp: 0,
+            payload: TlvPayload::I32(Tensor::from_vec(
+                &[2],
+                split_u64(v).to_vec(),
+            )),
+        },
+    )
+}
+
+fn get_u64(tlv: &TlvFile, name: &str) -> Result<u64> {
+    let t = tlv.get(name)?.as_i32()?;
+    ensure!(t.data().len() == 2, "entry '{name}': malformed u64");
+    Ok(join_u64(t.data()[0], t.data()[1]))
+}
+
+fn put_usize(tlv: &mut TlvFile, name: &str, v: usize) -> Result<()> {
+    put_u64(tlv, name, v as u64)
+}
+
+fn get_usize(tlv: &TlvFile, name: &str) -> Result<usize> {
+    usize::try_from(get_u64(tlv, name)?)
+        .with_context(|| format!("entry '{name}': value exceeds usize"))
+}
+
+fn put_str(tlv: &mut TlvFile, name: &str, s: &str) -> Result<()> {
+    let bytes: Vec<i8> = s.bytes().map(|b| b as i8).collect();
+    tlv.insert(
+        name,
+        TlvEntry {
+            exp: 0,
+            payload: TlvPayload::I8(Tensor::from_vec(&[bytes.len()], bytes)),
+        },
+    )
+}
+
+fn get_str(tlv: &TlvFile, name: &str) -> Result<String> {
+    let t = tlv.get(name)?.as_i8()?;
+    String::from_utf8(t.data().iter().map(|&b| b as u8).collect())
+        .with_context(|| format!("entry '{name}': non-utf8 string"))
+}
+
+fn put_f64(tlv: &mut TlvFile, name: &str, v: f64) -> Result<()> {
+    tlv.insert(
+        name,
+        TlvEntry {
+            exp: 0,
+            payload: TlvPayload::F64(Tensor::from_vec(&[1], vec![v])),
+        },
+    )
+}
+
+fn get_f64(tlv: &TlvFile, name: &str) -> Result<f64> {
+    let t = tlv.get(name)?.as_f64()?;
+    ensure!(t.data().len() == 1, "entry '{name}': malformed f64");
+    Ok(t.data()[0])
+}
+
+fn put_qtensor(tlv: &mut TlvFile, name: &str, q: &QTensor) -> Result<()> {
+    // O(1): the entry shares the CoW payload handle; bytes are only
+    // touched when the frame is serialized
+    tlv.insert(
+        name,
+        TlvEntry { exp: q.exp, payload: TlvPayload::I16(q.t.clone()) },
+    )
+}
+
+fn get_qtensor(tlv: &TlvFile, name: &str) -> Result<QTensor> {
+    let e = tlv.get(name)?;
+    Ok(QTensor { t: e.as_i16()?.clone(), exp: e.exp })
+}
+
+fn ok_frame() -> TlvFile {
+    let mut f = TlvFile::default();
+    put_u64(&mut f, KEY_OK, 1).expect("fresh frame");
+    f
+}
+
+fn err_frame(e: &anyhow::Error) -> TlvFile {
+    let mut f = TlvFile::default();
+    put_u64(&mut f, KEY_OK, 0).expect("fresh frame");
+    put_str(&mut f, KEY_ERR, &format!("{e:#}")).expect("fresh frame");
+    f
+}
+
+// --- request / reply encoding ----------------------------------------------
+
+/// Encode a batched segment call. Carries the segment *name* (ids are
+/// per-process; a restarted worker re-resolves) and one `in.{i}.{j}`
+/// entry per input tensor — exact quantized values, so the worker
+/// computes bit-identically to an in-process backend.
+fn encode_run_batch(name: &str, batch: &[Vec<QTensor>]) -> Result<TlvFile> {
+    let mut f = TlvFile::default();
+    put_str(&mut f, KEY_OP, OP_RUN_BATCH)?;
+    put_str(&mut f, "segment", name)?;
+    put_usize(&mut f, "width", batch.len())?;
+    for (i, ins) in batch.iter().enumerate() {
+        put_usize(&mut f, &format!("in.{i}.n"), ins.len())?;
+        for (j, q) in ins.iter().enumerate() {
+            put_qtensor(&mut f, &format!("in.{i}.{j}"), q)?;
+        }
+    }
+    Ok(f)
+}
+
+fn decode_reply_outs(frame: &TlvFile) -> Result<(Vec<Vec<QTensor>>, f64)> {
+    if get_u64(frame, KEY_OK)? == 0 {
+        let msg = get_str(frame, KEY_ERR)
+            .unwrap_or_else(|_| "worker reported an unnamed error".into());
+        bail!("worker: {msg}");
+    }
+    if frame.entries.contains_key("width") {
+        let width = get_usize(frame, "width")?;
+        let mut outs = Vec::with_capacity(width.min(4096));
+        for i in 0..width {
+            let n = get_usize(frame, &format!("out.{i}.n"))?;
+            let mut slot = Vec::with_capacity(n.min(64));
+            for j in 0..n {
+                slot.push(get_qtensor(frame, &format!("out.{i}.{j}"))?);
+            }
+            outs.push(slot);
+        }
+        Ok((outs, get_f64(frame, "exec_s").unwrap_or(0.0)))
+    } else {
+        Ok((Vec::new(), 0.0)) // ping-style bare ok
+    }
+}
+
+/// Turn a reply frame into the completion the submit/await contract
+/// hands to waiters. The execution interval is reconstructed from the
+/// worker-side execution seconds (arrival minus exec), so the overlap
+/// profiler sees the window the work actually ran in.
+fn decode_completion(frame: &TlvFile) -> HwCompletion {
+    let end = Instant::now();
+    match decode_reply_outs(frame) {
+        Ok((outs, exec_s)) => {
+            let start = if exec_s.is_finite() && exec_s >= 0.0 {
+                end.checked_sub(Duration::from_secs_f64(exec_s)).unwrap_or(end)
+            } else {
+                end
+            };
+            HwCompletion { outs: Ok(outs), start, end }
+        }
+        Err(e) => HwCompletion { outs: Err(e), start: end, end },
+    }
+}
+
+// --- the worker process handle (parent side) -------------------------------
+
+struct PendingReply {
+    tx: Sender<HwCompletion>,
+    since: Instant,
+}
+
+/// Connection state shared between callers, the reader thread and the
+/// supervisor's monitor.
+struct WireShared {
+    pending: Mutex<VecDeque<PendingReply>>,
+    last_beat: Mutex<Instant>,
+    alive: AtomicBool,
+}
+
+/// One live `fadec worker` child: its pipes, the reader thread that
+/// demultiplexes heartbeats from FIFO replies, and the liveness signals
+/// the [`Supervisor`](super::supervisor::Supervisor) monitors. Owned by
+/// a supervisor; replaced wholesale on restart (a `SegmentId` resolved
+/// against the parent-side manifest stays valid — only names cross the
+/// wire).
+pub struct WorkerProcess {
+    child: Mutex<Child>,
+    writer: Mutex<Option<ChildStdin>>,
+    shared: Arc<WireShared>,
+    reader: Option<JoinHandle<()>>,
+    manifest_fp: u64,
+    qp_fp: u64,
+}
+
+impl WorkerProcess {
+    /// Spawn a worker and run the handshake: send `hello` (seed, conv
+    /// threads, heartbeat period), read back the worker's manifest and
+    /// parameter fingerprints. The child is killed and reaped on any
+    /// handshake failure — no zombie survives a bad start.
+    pub fn spawn(
+        exe: &Path,
+        seed: u64,
+        conv_threads: usize,
+        heartbeat: Duration,
+    ) -> Result<WorkerProcess> {
+        let mut child = Command::new(exe)
+            .arg("worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| {
+                format!("spawning worker process {}", exe.display())
+            })?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        match Self::handshake(stdin, stdout, seed, conv_threads, heartbeat) {
+            Ok((stdin, stdout, manifest_fp, qp_fp)) => {
+                let shared = Arc::new(WireShared {
+                    pending: Mutex::new(VecDeque::new()),
+                    last_beat: Mutex::new(Instant::now()),
+                    alive: AtomicBool::new(true),
+                });
+                let reader = {
+                    let shared = Arc::clone(&shared);
+                    thread::Builder::new()
+                        .name("fadec-ipc-reader".into())
+                        .spawn(move || reader_loop(stdout, shared))
+                        .context("spawning IPC reader thread")?
+                };
+                Ok(WorkerProcess {
+                    child: Mutex::new(child),
+                    writer: Mutex::new(Some(stdin)),
+                    shared,
+                    reader: Some(reader),
+                    manifest_fp,
+                    qp_fp,
+                })
+            }
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                Err(e.context("worker handshake"))
+            }
+        }
+    }
+
+    fn handshake(
+        mut stdin: ChildStdin,
+        mut stdout: ChildStdout,
+        seed: u64,
+        conv_threads: usize,
+        heartbeat: Duration,
+    ) -> Result<(ChildStdin, ChildStdout, u64, u64)> {
+        let mut hello = TlvFile::default();
+        put_str(&mut hello, KEY_OP, OP_HELLO)?;
+        put_u64(&mut hello, "proto", PROTO_VERSION)?;
+        put_u64(&mut hello, "seed", seed)?;
+        put_usize(&mut hello, "conv_threads", conv_threads)?;
+        put_u64(&mut hello, "heartbeat_ms", heartbeat.as_millis() as u64)?;
+        write_frame(&mut stdin, &hello)?;
+        let reply = loop {
+            match read_frame(&mut stdout)? {
+                None => bail!("worker closed the pipe before replying"),
+                Some(f) if f.entries.contains_key(KEY_BEAT) => continue,
+                Some(f) => break f,
+            }
+        };
+        if get_u64(&reply, KEY_OK)? == 0 {
+            bail!(
+                "worker rejected the handshake: {}",
+                get_str(&reply, KEY_ERR).unwrap_or_else(|_| "unknown".into())
+            );
+        }
+        let manifest_fp = get_u64(&reply, "manifest_fp")?;
+        let qp_fp = get_u64(&reply, "qp_fp")?;
+        Ok((stdin, stdout, manifest_fp, qp_fp))
+    }
+
+    /// Fingerprints the worker reported at handshake (checked against
+    /// the parent's local catalogue by the supervisor).
+    pub fn manifest_fp(&self) -> u64 {
+        self.manifest_fp
+    }
+
+    pub fn qp_fp(&self) -> u64 {
+        self.qp_fp
+    }
+
+    /// Whether the connection is live (false after EOF, a protocol
+    /// error, a failed write, or [`WorkerProcess::kill`]).
+    pub fn alive(&self) -> bool {
+        self.shared.alive.load(Ordering::Acquire)
+    }
+
+    /// Send a request that expects a reply; the returned receiver gets
+    /// the completion when the reader matches it in FIFO order. The
+    /// pending registration and the pipe write happen under the writer
+    /// lock, so registration order always equals wire order.
+    pub fn send_expecting_reply(
+        &self,
+        frame: &TlvFile,
+    ) -> Result<Receiver<HwCompletion>> {
+        let mut w = self.writer.lock().expect("ipc writer poisoned");
+        ensure!(self.alive(), "worker process is down");
+        let w = w.as_mut().context("worker stdin closed")?;
+        let (tx, rx) = mpsc::channel();
+        self.shared
+            .pending
+            .lock()
+            .expect("ipc pending poisoned")
+            .push_back(PendingReply { tx, since: Instant::now() });
+        if let Err(e) = write_frame(w, frame) {
+            // a torn request desyncs the stream: poison the connection
+            // (the reader will fail the pending entry when it notices)
+            self.shared.alive.store(false, Ordering::Release);
+            return Err(e.context("writing request to worker"));
+        }
+        Ok(rx)
+    }
+
+    /// Send a fire-and-forget request (injectors, conv-thread hints,
+    /// shutdown) — nothing is registered, so no reply is expected.
+    pub fn send_oneway(&self, frame: &TlvFile) -> Result<()> {
+        let mut w = self.writer.lock().expect("ipc writer poisoned");
+        ensure!(self.alive(), "worker process is down");
+        let w = w.as_mut().context("worker stdin closed")?;
+        if let Err(e) = write_frame(w, frame) {
+            self.shared.alive.store(false, Ordering::Release);
+            return Err(e.context("writing request to worker"));
+        }
+        Ok(())
+    }
+
+    /// SIGKILL the child (the crash injector, and the supervisor's
+    /// response to a hang). The connection is poisoned immediately; the
+    /// reader fails every pending wait when the EOF lands.
+    pub fn kill(&self) {
+        self.shared.alive.store(false, Ordering::Release);
+        if let Ok(mut child) = self.child.lock() {
+            let _ = child.kill();
+        }
+    }
+
+    /// Age of the newest heartbeat (staleness = a frozen worker).
+    pub fn last_beat_age(&self) -> Duration {
+        self.shared.last_beat.lock().expect("beat poisoned").elapsed()
+    }
+
+    /// Age of the oldest request still awaiting its reply (staleness =
+    /// a stalled serve loop, even while heartbeats keep arriving).
+    pub fn oldest_pending_age(&self) -> Option<Duration> {
+        self.shared
+            .pending
+            .lock()
+            .expect("ipc pending poisoned")
+            .front()
+            .map(|p| p.since.elapsed())
+    }
+
+    /// Requests in flight (the queue-depth signal for placement).
+    pub fn pending_len(&self) -> usize {
+        self.shared.pending.lock().expect("ipc pending poisoned").len()
+    }
+}
+
+impl Drop for WorkerProcess {
+    fn drop(&mut self) {
+        // best-effort polite shutdown, then unconditional reclaim: a
+        // wedged worker never honours the request, and teardown must
+        // not block behind one
+        let mut bye = TlvFile::default();
+        if put_str(&mut bye, KEY_OP, OP_SHUTDOWN).is_ok() {
+            if let Ok(mut w) = self.writer.lock() {
+                if let Some(w) = w.as_mut() {
+                    let _ = write_frame(w, &bye);
+                }
+                *w = None; // close stdin: EOF is the worker's exit signal
+            }
+        }
+        self.shared.alive.store(false, Ordering::Release);
+        if let Ok(mut child) = self.child.lock() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reader_loop(mut out: ChildStdout, shared: Arc<WireShared>) {
+    loop {
+        match read_frame(&mut out) {
+            Ok(Some(frame)) => {
+                if frame.entries.contains_key(KEY_BEAT) {
+                    *shared.last_beat.lock().expect("beat poisoned") =
+                        Instant::now();
+                    continue;
+                }
+                let completion = decode_completion(&frame);
+                let pending = shared
+                    .pending
+                    .lock()
+                    .expect("ipc pending poisoned")
+                    .pop_front();
+                match pending {
+                    Some(p) => {
+                        // the waiter may have timed out and dropped its
+                        // receiver — the queue entry is consumed either
+                        // way, so FIFO matching stays aligned
+                        let _ = p.tx.send(completion);
+                    }
+                    // a reply with no request: the stream is desynced
+                    None => break,
+                }
+            }
+            // EOF (exit, kill) or a corrupt frame: poison, never guess
+            Ok(None) | Err(_) => break,
+        }
+    }
+    shared.alive.store(false, Ordering::Release);
+    // dropping the senders disconnects every waiter immediately — a
+    // crashed worker surfaces as a retryable wait fault, not a hang
+    shared.pending.lock().expect("ipc pending poisoned").clear();
+}
+
+/// Locate the `fadec` binary to spawn workers from: the
+/// `FADEC_WORKER_EXE` override, else next to the current executable
+/// (hopping out of `deps/` / `examples/` for test and example
+/// binaries, which live one directory below the bin target).
+pub fn worker_exe() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("FADEC_WORKER_EXE") {
+        return Ok(PathBuf::from(p));
+    }
+    let mut dir = std::env::current_exe().context("locating current exe")?;
+    dir.pop();
+    if dir
+        .file_name()
+        .is_some_and(|d| d == "deps" || d == "examples")
+    {
+        dir.pop();
+    }
+    let exe = dir.join(if cfg!(windows) { "fadec.exe" } else { "fadec" });
+    ensure!(
+        exe.is_file(),
+        "worker executable {} not found — build the `fadec` bin or set \
+         FADEC_WORKER_EXE",
+        exe.display()
+    );
+    Ok(exe)
+}
+
+// --- IpcBackend ------------------------------------------------------------
+
+/// [`HwBackend`] over a supervised worker process. The segment
+/// catalogue and quantization parameters are materialized locally from
+/// the same `(synthetic, seed)` recipe the worker uses — verified
+/// fingerprint-for-fingerprint at every handshake — so `resolve` /
+/// `segment_desc` / `manifest` never cross the wire and a [`SegmentId`]
+/// survives worker restarts (only names are ever sent).
+pub struct IpcBackend {
+    manifest: Manifest,
+    qp: Arc<QuantParams>,
+    index: HashMap<String, usize>,
+    sup: Supervisor,
+    payload: AtomicU64,
+}
+
+impl IpcBackend {
+    /// Spawn (and supervise) a worker hosting `RefBackend::synthetic`
+    /// over `opts.seed`, and verify its fingerprints match the local
+    /// catalogue.
+    pub fn connect(opts: SupervisorOptions) -> Result<IpcBackend> {
+        let manifest = Manifest::synthetic();
+        let qp = Arc::new(QuantParams::synthetic(&manifest, opts.seed));
+        let sup =
+            Supervisor::start(manifest.fingerprint(), qp.fingerprint(), opts)?;
+        let index = manifest
+            .segments
+            .iter()
+            .enumerate()
+            .map(|(i, d)| (d.name.clone(), i))
+            .collect();
+        Ok(IpcBackend { manifest, qp, index, sup, payload: AtomicU64::new(0) })
+    }
+
+    /// The parameter set streams over this backend quantize against
+    /// (value-identical to the worker's, by the fingerprint check).
+    pub fn qp(&self) -> &Arc<QuantParams> {
+        &self.qp
+    }
+
+    /// The child's supervisor (restart budget, liveness stats, and the
+    /// fault injectors the supervision tests drive).
+    pub fn supervisor(&self) -> &Supervisor {
+        &self.sup
+    }
+
+    /// Crash injector: SIGKILL the current worker mid-flight.
+    pub fn kill_worker(&self) {
+        self.sup.kill_worker();
+    }
+
+    /// Hang injector: park the worker's serve loop (heartbeats keep
+    /// flowing, so only the per-wait deadline can catch it).
+    pub fn stall_worker(&self) -> Result<()> {
+        let mut f = TlvFile::default();
+        put_str(&mut f, KEY_OP, OP_STALL)?;
+        self.sup.send_oneway(&f)
+    }
+
+    /// Freeze injector: park serve loop *and* heartbeats (the SIGSTOP
+    /// analog) — caught by heartbeat-miss detection.
+    pub fn freeze_worker(&self) -> Result<()> {
+        let mut f = TlvFile::default();
+        put_str(&mut f, KEY_OP, OP_FREEZE)?;
+        self.sup.send_oneway(&f)
+    }
+
+    /// Blocking liveness round-trip (tests).
+    pub fn ping(&self) -> Result<()> {
+        let mut f = TlvFile::default();
+        put_str(&mut f, KEY_OP, OP_PING)?;
+        let rx = self.sup.submit(&f)?;
+        let c = rx.recv().context("worker dropped the ping")?;
+        c.outs.map(|_| ())
+    }
+}
+
+impl HwBackend for IpcBackend {
+    fn kind(&self) -> &'static str {
+        "ipc"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn resolve(&self, name: &str) -> Result<SegmentId> {
+        self.index
+            .get(name)
+            .map(|&i| SegmentId(i))
+            .with_context(|| format!("segment '{name}' not in catalogue"))
+    }
+
+    fn segment_desc(&self, id: SegmentId) -> &SegmentDesc {
+        &self.manifest.segments[id.0]
+    }
+
+    fn run(&self, id: SegmentId, inputs: &[&QTensor]) -> Result<Vec<QTensor>> {
+        let owned: Vec<QTensor> = inputs.iter().copied().cloned().collect();
+        self.submit(id, owned)?.wait()
+    }
+
+    fn run_batch(
+        &self,
+        id: SegmentId,
+        batch: &[Vec<&QTensor>],
+    ) -> Result<Vec<Vec<QTensor>>> {
+        let owned: Vec<Vec<QTensor>> = batch
+            .iter()
+            .map(|ins| ins.iter().copied().cloned().collect())
+            .collect();
+        self.submit_batch(id, owned)?.wait_batch()
+    }
+
+    fn submit_batch(
+        &self,
+        id: SegmentId,
+        batch: Vec<Vec<QTensor>>,
+    ) -> Result<SubmitHandle> {
+        ensure!(
+            id.0 < self.manifest.segments.len(),
+            "segment id {} out of range",
+            id.0
+        );
+        let desc = &self.manifest.segments[id.0];
+        // validate parent-side against the fingerprint-checked local
+        // manifest: deterministic errors surface without a round-trip,
+        // and a failed submission provably never reached the worker
+        let mut bytes = 0u64;
+        for ins in &batch {
+            let refs: Vec<&QTensor> = ins.iter().collect();
+            check_inputs(desc, &refs)?;
+            bytes += ins.iter().map(|q| (q.t.len() * 2) as u64).sum::<u64>();
+        }
+        let frame = encode_run_batch(&desc.name, &batch)?;
+        let rx = self.sup.submit(&frame).with_context(|| {
+            format!("submitting segment {} to the worker process", desc.name)
+        })?;
+        self.payload.fetch_add(bytes, Ordering::Relaxed);
+        Ok(SubmitHandle::queued(rx))
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.sup.queue_depth()
+    }
+
+    fn submit_payload_bytes(&self) -> u64 {
+        self.payload.load(Ordering::Relaxed)
+    }
+
+    fn set_conv_threads(&self, threads: usize) {
+        self.sup.set_conv_threads(threads);
+        // best-effort live hint; results are bit-identical for any
+        // thread count, so a lost hint costs latency, never exactness
+        let mut f = TlvFile::default();
+        if put_str(&mut f, KEY_OP, OP_CONV).is_ok()
+            && put_usize(&mut f, "threads", threads).is_ok()
+        {
+            let _ = self.sup.send_oneway(&f);
+        }
+    }
+
+    fn supervisor_stats(&self) -> Option<SupervisorStats> {
+        Some(self.sup.stats())
+    }
+}
+
+// --- the worker side (`fadec worker`) --------------------------------------
+
+fn write_frame_locked(out: &Mutex<io::Stdout>, frame: &TlvFile) -> Result<()> {
+    let mut w = out.lock().expect("stdout poisoned");
+    write_frame(&mut *w, frame)
+}
+
+fn handle_run_batch(be: &super::RefBackend, req: &TlvFile) -> Result<TlvFile> {
+    let name = get_str(req, "segment")?;
+    let id = be.resolve(&name)?;
+    let width = get_usize(req, "width")?;
+    ensure!(width <= 4096, "run_batch width {width} exceeds 4096");
+    let mut batch: Vec<Vec<QTensor>> = Vec::with_capacity(width);
+    for i in 0..width {
+        let n = get_usize(req, &format!("in.{i}.n"))?;
+        ensure!(n <= 64, "slot {i}: {n} inputs exceeds 64");
+        let mut ins = Vec::with_capacity(n);
+        for j in 0..n {
+            ins.push(get_qtensor(req, &format!("in.{i}.{j}"))?);
+        }
+        batch.push(ins);
+    }
+    let refs: Vec<Vec<&QTensor>> =
+        batch.iter().map(|ins| ins.iter().collect()).collect();
+    let t0 = Instant::now();
+    let outs = be.run_batch(id, &refs)?;
+    let exec_s = t0.elapsed().as_secs_f64();
+    let mut reply = ok_frame();
+    put_usize(&mut reply, "width", outs.len())?;
+    for (i, slot) in outs.iter().enumerate() {
+        put_usize(&mut reply, &format!("out.{i}.n"), slot.len())?;
+        for (j, q) in slot.iter().enumerate() {
+            put_qtensor(&mut reply, &format!("out.{i}.{j}"), q)?;
+        }
+    }
+    put_f64(&mut reply, "exec_s", exec_s)?;
+    Ok(reply)
+}
+
+/// Entry point of the `fadec worker` subcommand: host a seeded
+/// synthetic `RefBackend` and serve frames from stdin to stdout until
+/// EOF or `shutdown`. All configuration arrives in the `hello` frame;
+/// stderr stays an ordinary diagnostic stream. Never intended for
+/// interactive use — the parent is a [`WorkerProcess`].
+pub fn worker_main(_args: &Args) -> Result<()> {
+    let mut input = io::stdin().lock();
+    let stdout = Arc::new(Mutex::new(io::stdout()));
+    let hello = read_frame(&mut input)?
+        .context("parent closed the pipe before the handshake")?;
+    let setup = (|| -> Result<(u64, usize, u64)> {
+        ensure!(
+            get_str(&hello, KEY_OP)? == OP_HELLO,
+            "first frame must be hello"
+        );
+        let proto = get_u64(&hello, "proto")?;
+        ensure!(
+            proto == PROTO_VERSION,
+            "protocol version {proto} != {PROTO_VERSION} — \
+             parent/worker build skew"
+        );
+        Ok((
+            get_u64(&hello, "seed")?,
+            get_usize(&hello, "conv_threads")?,
+            get_u64(&hello, "heartbeat_ms")?,
+        ))
+    })();
+    let (seed, conv_threads, heartbeat_ms) = match setup {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = write_frame_locked(&stdout, &err_frame(&e));
+            return Err(e);
+        }
+    };
+    let be = super::RefBackend::synthetic(seed);
+    if conv_threads > 0 {
+        be.set_conv_threads(conv_threads);
+    }
+    let mut reply = ok_frame();
+    put_u64(&mut reply, "manifest_fp", be.manifest().fingerprint())?;
+    put_u64(&mut reply, "qp_fp", be.qp().fingerprint())?;
+    write_frame_locked(&stdout, &reply)?;
+    // heartbeats ride the same pipe as replies (frame-atomic under the
+    // stdout mutex); `frozen` silences them without killing the thread
+    let frozen = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicBool::new(false));
+    if heartbeat_ms > 0 {
+        let (out, frozen, done) =
+            (Arc::clone(&stdout), Arc::clone(&frozen), Arc::clone(&done));
+        thread::Builder::new()
+            .name("fadec-worker-beat".into())
+            .spawn(move || {
+                let mut n = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    thread::sleep(Duration::from_millis(heartbeat_ms));
+                    if frozen.load(Ordering::Acquire) {
+                        continue;
+                    }
+                    n += 1;
+                    let mut f = TlvFile::default();
+                    if put_u64(&mut f, KEY_BEAT, n).is_err()
+                        || write_frame_locked(&out, &f).is_err()
+                    {
+                        break; // parent went away; serve loop sees EOF
+                    }
+                }
+            })
+            .context("spawning heartbeat thread")?;
+    }
+    loop {
+        let Some(req) = read_frame(&mut input)? else {
+            break; // parent closed stdin: clean exit
+        };
+        let op = match get_str(&req, KEY_OP) {
+            Ok(op) => op,
+            Err(e) => {
+                write_frame_locked(&stdout, &err_frame(&e))?;
+                continue;
+            }
+        };
+        match op.as_str() {
+            OP_RUN_BATCH => {
+                let reply = match handle_run_batch(&be, &req) {
+                    Ok(r) => r,
+                    Err(e) => err_frame(&e),
+                };
+                write_frame_locked(&stdout, &reply)?;
+            }
+            OP_PING => write_frame_locked(&stdout, &ok_frame())?,
+            OP_CONV => {
+                if let Ok(n) = get_usize(&req, "threads") {
+                    be.set_conv_threads(n);
+                }
+            }
+            OP_STALL => loop {
+                // induced hang: the serve loop wedges but heartbeats
+                // keep flowing — only a per-wait deadline catches this
+                thread::sleep(Duration::from_millis(50));
+            },
+            OP_FREEZE => {
+                frozen.store(true, Ordering::Release);
+                loop {
+                    // SIGSTOP analog: no replies *and* no heartbeats
+                    thread::sleep(Duration::from_millis(50));
+                }
+            }
+            OP_SHUTDOWN => break,
+            other => {
+                let e = anyhow!("unknown op '{other}'");
+                write_frame_locked(&stdout, &err_frame(&e))?;
+            }
+        }
+    }
+    done.store(true, Ordering::Release);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(frame: &TlvFile) -> TlvFile {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        read_frame(&mut Cursor::new(buf)).unwrap().expect("one frame")
+    }
+
+    #[test]
+    fn frame_roundtrip_and_clean_eof() {
+        let mut f = TlvFile::default();
+        put_u64(&mut f, "a", u64::MAX - 7).unwrap();
+        put_str(&mut f, "b", "fe_fs").unwrap();
+        put_f64(&mut f, "c", -0.125).unwrap();
+        let back = roundtrip(&f);
+        assert_eq!(get_u64(&back, "a").unwrap(), u64::MAX - 7);
+        assert_eq!(get_str(&back, "b").unwrap(), "fe_fs");
+        assert_eq!(get_f64(&back, "c").unwrap(), -0.125);
+        // empty pipe: clean EOF at the frame boundary is None, not Err
+        assert!(read_frame(&mut Cursor::new(Vec::new())).unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_and_hostile_frames_are_rejected() {
+        let mut f = TlvFile::default();
+        put_str(&mut f, "x", "payload").unwrap();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        // every strict prefix of a frame is an error (truncated header
+        // or truncated body), never a silent None past offset 0
+        for cut in [1, 3, 4, 5, buf.len() - 1] {
+            let r = read_frame(&mut Cursor::new(buf[..cut].to_vec()));
+            assert!(r.is_err(), "prefix of {cut} bytes must not parse");
+        }
+        // a hostile length field is rejected before allocation
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(hostile)).unwrap_err();
+        assert!(format!("{err:#}").contains("bound"), "{err:#}");
+        // a corrupt body is a decode error, not UB
+        let mut corrupt = buf.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0xFF;
+        corrupt[5] ^= 0x55;
+        assert!(read_frame(&mut Cursor::new(corrupt)).is_err());
+    }
+
+    #[test]
+    fn u64_halves_and_strings_roundtrip() {
+        for v in [0u64, 1, u64::MAX, 0xDEAD_BEEF_0BAD_F00D] {
+            let [hi, lo] = split_u64(v);
+            assert_eq!(join_u64(hi, lo), v);
+        }
+        let mut f = TlvFile::default();
+        put_str(&mut f, "s", "xäy").unwrap();
+        assert_eq!(get_str(&roundtrip(&f), "s").unwrap(), "xäy");
+    }
+
+    #[test]
+    fn run_batch_request_roundtrips_exact_tensors() {
+        let q = QTensor {
+            t: Tensor::from_vec(&[2, 3], vec![-7i16, 0, 1, 2, i16::MAX, -1]),
+            exp: -9,
+        };
+        let req =
+            encode_run_batch("cve", &[vec![q.clone(), q.clone()], vec![q.clone()]])
+                .unwrap();
+        let back = roundtrip(&req);
+        assert_eq!(get_str(&back, KEY_OP).unwrap(), OP_RUN_BATCH);
+        assert_eq!(get_str(&back, "segment").unwrap(), "cve");
+        assert_eq!(get_usize(&back, "width").unwrap(), 2);
+        assert_eq!(get_usize(&back, "in.0.n").unwrap(), 2);
+        assert_eq!(get_usize(&back, "in.1.n").unwrap(), 1);
+        let b = get_qtensor(&back, "in.1.0").unwrap();
+        assert_eq!(b.exp, q.exp);
+        assert_eq!(b.t.shape(), q.t.shape());
+        assert_eq!(b.t.data(), q.t.data());
+    }
+
+    #[test]
+    fn error_replies_decode_to_contextual_errors() {
+        let e = anyhow!("segment exploded");
+        let frame = roundtrip(&err_frame(&e));
+        let c = decode_completion(&frame);
+        let err = c.outs.unwrap_err();
+        assert!(format!("{err:#}").contains("segment exploded"), "{err:#}");
+        // a bare ok (ping reply) decodes to an empty batch
+        let ok = roundtrip(&ok_frame());
+        assert!(decode_completion(&ok).outs.unwrap().is_empty());
+    }
+}

@@ -118,25 +118,76 @@
 //!   `worker_survives_*` tests).
 //!
 //! [`chaos::ChaosBackend`] wraps any backend with seeded deterministic
-//! faults (submit error, wait error, latency spike, transient-then-heal,
-//! death) so every recovery path above is testable from a clean
-//! checkout; `coordinator::RetryPolicy` is the consumer of this
-//! contract.
+//! faults (submit error, wait error, latency spike, stall,
+//! transient-then-heal, death) so every recovery path above is testable
+//! from a clean checkout; `coordinator::RetryPolicy` is the consumer of
+//! this contract.
+//!
+//! # Process isolation & supervision (PR 9)
+//!
+//! The deployment target is a host CPU driving a separate physical
+//! device — one that can wedge or need a reset without taking the host
+//! down. [`ipc::IpcBackend`] reproduces that fault boundary in
+//! software: the backend lives in a `fadec worker` child process and
+//! the trait is served over its stdin/stdout pipes, so a segfault,
+//! abort, or infinite loop in one shard's backend is *contained* —
+//! sibling shards and every session survive. The rules:
+//!
+//! * **Wire format** — length-prefixed frames (`u32` LE length + a
+//!   `data/tlv.rs` body) carrying exact quantized tensors, so
+//!   process-isolated serving is bit-identical to in-process serving
+//!   by construction. Segment *names* cross the wire, never
+//!   [`SegmentId`]s — ids are per-process and must not survive a
+//!   restart (the per-shard handle-validity rule, applied to time).
+//!   Frame length is bounded and the body inherits the TLV codec's
+//!   hostile-input hardening; a torn or corrupt frame *poisons* the
+//!   connection (fail every pending wait, kill the worker) — the
+//!   stream is never resynchronized by guessing.
+//! * **FIFO over the pipe** — the worker serves requests in order on
+//!   one thread and the parent's reader matches replies to a FIFO
+//!   queue of pending completions, so [`SubmitHandle`]s complete in
+//!   submission order exactly as the submit/await contract requires.
+//! * **Heartbeats vs deadlines** — the worker emits heartbeat frames
+//!   from a dedicated thread. Heartbeat staleness beyond the grace
+//!   period means the *process* is gone or frozen (the SIGSTOP
+//!   flavor); an unanswered request older than the per-wait deadline
+//!   while heartbeats still flow means the *serve loop* is wedged (the
+//!   stall flavor). Both are answered with SIGKILL — a wedged child
+//!   cannot be reasoned with — and both are distinct counters in
+//!   `metrics::SupervisorStats`.
+//! * **Supervised restart** — crash detection is EOF on the pipe (the
+//!   reader thread fails every pending wait immediately, so a dead
+//!   worker surfaces as a retryable fault, never a hang). The
+//!   [`supervisor::Supervisor`] respawns the child with exponential
+//!   backoff under a bounded restart budget, re-verifying the
+//!   manifest/parameter fingerprints at every handshake. Restart is
+//!   safe because the worker is stateless between rounds: all session
+//!   state lives in the parent and sessions mutate only at Commit, so
+//!   the coordinator replays failed rounds bit-exactly.
+//! * **Budget exhaustion** — when restarts run out the supervisor
+//!   surfaces [`supervisor::BackendDown`]; `coordinator::ShardRouter`
+//!   treats that shard as dead and fails its streams over through
+//!   checkpoints, same as any shard death.
 
 pub mod chaos;
+pub mod ipc;
 pub mod ref_backend;
+pub mod supervisor;
 
 pub use chaos::{ChaosBackend, ChaosOptions};
+pub use ipc::IpcBackend;
 pub use ref_backend::RefBackend;
+pub use supervisor::{is_backend_down, BackendDown, Supervisor, SupervisorOptions};
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::mpsc::Receiver;
-use std::time::Instant;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::manifest::{Manifest, SegmentDesc};
+use crate::metrics::SupervisorStats;
 use crate::quant::QTensor;
 use crate::tensor::Tensor;
 
@@ -209,6 +260,33 @@ impl SubmitHandle {
     /// Block until the submission completes; batch outputs only.
     pub fn wait_batch(self) -> Result<Vec<Vec<QTensor>>> {
         self.wait_batch_timed().map(|(outs, _, _)| outs)
+    }
+
+    /// [`SubmitHandle::wait_batch_timed`] with a timeout: a completion
+    /// that hasn't arrived within `deadline` becomes a retryable error
+    /// instead of a hang. The abandoned completion, if it ever arrives,
+    /// is dropped by the disconnected channel — per the fault/retry
+    /// contract the round replays from scratch, so a late result must
+    /// never be consumed. Ready (eager) handles never time out.
+    pub fn wait_batch_deadline(
+        self,
+        deadline: Duration,
+    ) -> Result<(Vec<Vec<QTensor>>, Instant, Instant)> {
+        let c = match self.state {
+            HandleState::Ready(c) => c,
+            HandleState::Queued(rx) => match rx.recv_timeout(deadline) {
+                Ok(c) => c,
+                Err(RecvTimeoutError::Timeout) => bail!(
+                    "backend wait timed out after {:.3}s — submission \
+                     abandoned as a retryable fault",
+                    deadline.as_secs_f64()
+                ),
+                Err(RecvTimeoutError::Disconnected) => bail!(
+                    "backend worker dropped before completing a submitted segment"
+                ),
+            },
+        };
+        Ok((c.outs?, c.start, c.end))
     }
 
     /// Await a width-1 submission made with [`HwBackend::submit`].
@@ -329,6 +407,15 @@ pub trait HwBackend: Send + Sync {
     /// bit-identical for any value. Default: no-op — hardware backends
     /// bring their own parallelism.
     fn set_conv_threads(&self, _threads: usize) {}
+
+    /// Supervision counters, for backends whose lifecycle is owned by a
+    /// [`supervisor::Supervisor`] (restarts, hang detections, downtime).
+    /// `None` for in-process backends — the router uses it both to merge
+    /// stats into reports and to tell supervised shards apart. Default:
+    /// not supervised.
+    fn supervisor_stats(&self) -> Option<SupervisorStats> {
+        None
+    }
 }
 
 /// Shape/exponent validation shared by every backend: inputs must match

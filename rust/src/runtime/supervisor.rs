@@ -1,0 +1,368 @@
+//! Worker-process lifecycle — the [`Supervisor`] owns one
+//! [`WorkerProcess`](super::ipc::WorkerProcess) and keeps it (or its
+//! replacement) serving: it detects crashes (pipe EOF — the reader
+//! thread poisons the connection), hangs (heartbeats stale beyond the
+//! grace period, or the oldest in-flight request older than the
+//! per-wait deadline — both answered with SIGKILL, since a wedged
+//! child cannot be reasoned with), and restarts the child with
+//! exponential backoff under a bounded budget. When the budget is
+//! exhausted the supervisor surfaces [`BackendDown`], the tagged error
+//! `ShardRouter`'s checkpoint-failover path treats as a dead shard —
+//! containment, not cascade.
+//!
+//! Restarts are safe precisely because the worker is stateless between
+//! rounds: it re-materializes `RefBackend::synthetic(seed)` from the
+//! handshake, the parent re-verifies the manifest/parameter
+//! fingerprints, and every in-flight request failed by the crash is
+//! replayed by the coordinator's retry/failover machinery from
+//! checkpointed session state — so the served suffix is bit-exact, per
+//! the sessions-mutate-only-at-Commit invariant.
+
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::tlv::TlvFile;
+use crate::metrics::SupervisorStats;
+
+use super::ipc::{worker_exe, WorkerProcess};
+use super::HwCompletion;
+
+/// Tagged terminal error: the worker is gone and the restart budget is
+/// spent. `ShardRouter` routes this into checkpoint failover; callers
+/// can test for it with [`is_backend_down`].
+#[derive(Debug)]
+pub struct BackendDown(pub String);
+
+impl fmt::Display for BackendDown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "backend down: {}", self.0)
+    }
+}
+
+impl std::error::Error for BackendDown {}
+
+/// Whether `err`'s chain contains a [`BackendDown`] (restart budget
+/// exhausted — the shard is dead, not merely faulting).
+pub fn is_backend_down(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<BackendDown>().is_some())
+}
+
+/// Supervision policy. A zero `heartbeat_grace` / `wait_deadline`
+/// disables that detector; a zero `heartbeat_interval` stops the
+/// worker from beating at all (crash detection via EOF still works —
+/// it needs no timer).
+#[derive(Clone, Debug)]
+pub struct SupervisorOptions {
+    /// Seed for the worker's synthetic manifest/parameters (must match
+    /// the parent's, enforced by the handshake fingerprint check).
+    pub seed: u64,
+    /// Initial conv worker threads inside the child (0 = its default).
+    pub conv_threads: usize,
+    /// Period of the worker's heartbeat frames.
+    pub heartbeat_interval: Duration,
+    /// Heartbeat staleness beyond which the worker is declared frozen
+    /// and killed (counted in `SupervisorStats::heartbeat_misses`).
+    pub heartbeat_grace: Duration,
+    /// Age of the oldest unanswered request beyond which the worker is
+    /// declared stalled and killed (counted in `deadline_expiries`).
+    /// Catches serve-loop hangs that heartbeats — a separate thread —
+    /// cannot see.
+    pub wait_deadline: Duration,
+    /// Restarts allowed after the initial spawn before the supervisor
+    /// gives up with [`BackendDown`].
+    pub max_restarts: usize,
+    /// Base of the exponential restart backoff (doubled per attempt).
+    pub restart_backoff: Duration,
+    /// Worker binary override; default is [`worker_exe`] discovery.
+    pub worker_exe: Option<PathBuf>,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        SupervisorOptions {
+            seed: 0,
+            conv_threads: 0,
+            heartbeat_interval: Duration::from_millis(25),
+            heartbeat_grace: Duration::from_millis(500),
+            wait_deadline: Duration::from_secs(5),
+            max_restarts: 2,
+            restart_backoff: Duration::from_millis(50),
+            worker_exe: None,
+        }
+    }
+}
+
+impl SupervisorOptions {
+    /// Default policy over a specific synthetic seed.
+    pub fn for_seed(seed: u64) -> Self {
+        SupervisorOptions { seed, ..Self::default() }
+    }
+}
+
+struct SupCore {
+    opts: SupervisorOptions,
+    exe: PathBuf,
+    manifest_fp: u64,
+    qp_fp: u64,
+    /// `None` only between a detected death and the next restart.
+    worker: Mutex<Option<WorkerProcess>>,
+    stats: Mutex<SupervisorStats>,
+    /// When the current outage began (for `downtime_seconds`).
+    down_at: Mutex<Option<Instant>>,
+    restarts_used: AtomicUsize,
+    conv_threads: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl SupCore {
+    fn spawn_worker(&self) -> Result<WorkerProcess> {
+        let w = WorkerProcess::spawn(
+            &self.exe,
+            self.opts.seed,
+            self.conv_threads.load(Ordering::Relaxed),
+            self.opts.heartbeat_interval,
+        )?;
+        // a fingerprint mismatch is deterministic (version-skewed or
+        // corrupt worker binary): fail hard, retrying cannot help
+        if w.manifest_fp() != self.manifest_fp || w.qp_fp() != self.qp_fp {
+            bail!(
+                "worker fingerprints (manifest {:#x}, qp {:#x}) do not \
+                 match the parent catalogue ({:#x}, {:#x}) — \
+                 parent/worker build or seed skew",
+                w.manifest_fp(),
+                w.qp_fp(),
+                self.manifest_fp,
+                self.qp_fp
+            );
+        }
+        Ok(w)
+    }
+
+    fn note_down(&self) {
+        let mut down = self.down_at.lock().expect("down_at poisoned");
+        if down.is_none() {
+            *down = Some(Instant::now());
+        }
+    }
+
+    /// Guarantee a live worker under the `worker` lock, restarting
+    /// (with backoff) if the current one died. Errors with
+    /// [`BackendDown`] once the restart budget is spent.
+    fn ensure_live<'a>(
+        &self,
+        slot: &'a mut Option<WorkerProcess>,
+    ) -> Result<&'a WorkerProcess> {
+        if slot.as_ref().is_some_and(|w| w.alive()) {
+            return Ok(slot.as_ref().expect("checked live"));
+        }
+        self.note_down();
+        // reap the corpse before replacing it (Drop kills + waits)
+        *slot = None;
+        loop {
+            let used = self.restarts_used.load(Ordering::Relaxed);
+            if used >= self.opts.max_restarts {
+                return Err(anyhow::Error::new(BackendDown(format!(
+                    "worker process restart budget ({}) exhausted",
+                    self.opts.max_restarts
+                ))));
+            }
+            self.restarts_used.fetch_add(1, Ordering::Relaxed);
+            thread::sleep(
+                self.opts
+                    .restart_backoff
+                    .saturating_mul(1u32 << used.min(16) as u32),
+            );
+            match self.spawn_worker() {
+                Ok(w) => {
+                    let mut stats = self.stats.lock().expect("stats");
+                    stats.restarts += 1;
+                    if let Some(t0) =
+                        self.down_at.lock().expect("down_at poisoned").take()
+                    {
+                        stats.downtime_seconds += t0.elapsed().as_secs_f64();
+                    }
+                    *slot = Some(w);
+                    return Ok(slot.as_ref().expect("just installed"));
+                }
+                Err(e) => {
+                    // transient spawn failure: burn an attempt and try
+                    // again, unless that was the last one
+                    if self.restarts_used.load(Ordering::Relaxed)
+                        >= self.opts.max_restarts
+                    {
+                        return Err(e.context(
+                            "worker restart failed and budget is exhausted",
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Supervised handle to the worker process behind an
+/// [`IpcBackend`](super::ipc::IpcBackend). All request traffic funnels
+/// through [`Supervisor::submit`], which transparently restarts a dead
+/// worker (within budget) before forwarding; a monitor thread enforces
+/// the heartbeat-grace and wait-deadline detectors by killing the
+/// child so the crash path — EOF, failed pendings, retry, restart —
+/// handles both hang flavors identically.
+pub struct Supervisor {
+    core: Arc<SupCore>,
+    monitor: Option<JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Spawn the first worker (not counted against the restart
+    /// budget), verify its fingerprints against the parent catalogue,
+    /// and start the liveness monitor.
+    pub fn start(
+        manifest_fp: u64,
+        qp_fp: u64,
+        opts: SupervisorOptions,
+    ) -> Result<Supervisor> {
+        let exe = match &opts.worker_exe {
+            Some(p) => p.clone(),
+            None => worker_exe()?,
+        };
+        let conv_threads = AtomicUsize::new(opts.conv_threads);
+        let core = Arc::new(SupCore {
+            opts,
+            exe,
+            manifest_fp,
+            qp_fp,
+            worker: Mutex::new(None),
+            stats: Mutex::new(SupervisorStats::default()),
+            down_at: Mutex::new(None),
+            restarts_used: AtomicUsize::new(0),
+            conv_threads,
+            shutdown: AtomicBool::new(false),
+        });
+        let first = core.spawn_worker().context("starting worker process")?;
+        *core.worker.lock().expect("worker poisoned") = Some(first);
+        let monitor = {
+            let core = Arc::clone(&core);
+            thread::Builder::new()
+                .name("fadec-supervisor".into())
+                .spawn(move || monitor_loop(&core))
+                .context("spawning supervisor monitor")?
+        };
+        Ok(Supervisor { core, monitor: Some(monitor) })
+    }
+
+    /// Forward a reply-bearing request to a live worker (restarting
+    /// one within budget if necessary). The receiver completes when
+    /// the reader matches the reply — or fails fast if the worker dies
+    /// first.
+    pub fn submit(&self, frame: &TlvFile) -> Result<Receiver<HwCompletion>> {
+        let mut slot = self.core.worker.lock().expect("worker poisoned");
+        let w = self.core.ensure_live(&mut slot)?;
+        w.send_expecting_reply(frame)
+    }
+
+    /// Forward a fire-and-forget frame to the *current* worker only —
+    /// no restart (injecting a fault into a dead worker is
+    /// meaningless, and conv-thread hints re-apply at respawn anyway).
+    pub fn send_oneway(&self, frame: &TlvFile) -> Result<()> {
+        let slot = self.core.worker.lock().expect("worker poisoned");
+        match slot.as_ref() {
+            Some(w) if w.alive() => w.send_oneway(frame),
+            _ => bail!("worker process is down"),
+        }
+    }
+
+    /// Crash injector: SIGKILL the current worker. The reader thread
+    /// notices the EOF, fails the pendings, and the next `submit`
+    /// restarts within budget.
+    pub fn kill_worker(&self) {
+        if let Some(w) =
+            self.core.worker.lock().expect("worker poisoned").as_ref()
+        {
+            w.kill();
+            self.core.note_down();
+        }
+    }
+
+    /// In-flight requests awaiting replies (the backend's queue-depth
+    /// signal).
+    pub fn queue_depth(&self) -> usize {
+        self.core
+            .worker
+            .lock()
+            .expect("worker poisoned")
+            .as_ref()
+            .map_or(0, |w| w.pending_len())
+    }
+
+    /// Remember the conv-thread count for this and every future worker
+    /// (the live hint itself is sent by the backend).
+    pub fn set_conv_threads(&self, threads: usize) {
+        self.core.conv_threads.store(threads, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the supervision counters. `failover_replays` stays
+    /// zero here — the router, which owns failover, fills it in.
+    pub fn stats(&self) -> SupervisorStats {
+        self.core.stats.lock().expect("stats").clone()
+    }
+
+    /// Restarts still available before [`BackendDown`].
+    pub fn restarts_left(&self) -> usize {
+        self.core
+            .opts
+            .max_restarts
+            .saturating_sub(self.core.restarts_used.load(Ordering::Relaxed))
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.core.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+        // dropping the worker sends shutdown, closes stdin, reaps
+        *self.core.worker.lock().expect("worker poisoned") = None;
+    }
+}
+
+fn monitor_loop(core: &SupCore) {
+    let tick = Duration::from_millis(5);
+    while !core.shutdown.load(Ordering::Acquire) {
+        thread::sleep(tick);
+        let slot = core.worker.lock().expect("worker poisoned");
+        let Some(w) = slot.as_ref() else { continue };
+        if !w.alive() {
+            continue; // already detected (crash or a prior kill)
+        }
+        let grace = core.opts.heartbeat_grace;
+        let deadline = core.opts.wait_deadline;
+        if !grace.is_zero()
+            && !core.opts.heartbeat_interval.is_zero()
+            && w.last_beat_age() > grace
+        {
+            // frozen: not even the heartbeat thread is scheduling.
+            // kill() flips `alive` first, so this counts exactly once
+            core.stats.lock().expect("stats").heartbeat_misses += 1;
+            w.kill();
+            drop(slot);
+            core.note_down();
+        } else if !deadline.is_zero()
+            && w.oldest_pending_age().is_some_and(|age| age > deadline)
+        {
+            // stalled: heartbeats flow but the serve loop is wedged —
+            // the oldest request has outlived the per-wait deadline
+            core.stats.lock().expect("stats").deadline_expiries += 1;
+            w.kill();
+            drop(slot);
+            core.note_down();
+        }
+    }
+}

@@ -68,6 +68,17 @@ pub struct BenchRecord {
     /// Streams shed (dropped after a served prefix) during the
     /// measurement. Only meaningful alongside `fill_ratio`.
     pub shed: Option<usize>,
+    /// Process-isolation records (PR 9, `benches/serve.rs`): worker
+    /// processes the measurement served through. `None` for in-process
+    /// backends.
+    pub workers: Option<usize>,
+    /// Wall-time ratio of process-isolated over in-process serving of
+    /// the same workload (1.0 = free isolation). Only meaningful
+    /// alongside `workers`.
+    pub ipc_overhead: Option<f64>,
+    /// Supervised worker restarts during the measurement. Only
+    /// meaningful alongside `workers`.
+    pub restarts: Option<usize>,
 }
 
 impl BenchRecord {
@@ -100,6 +111,9 @@ impl BenchRecord {
             fill_ratio: None,
             deadline_miss_rate: None,
             shed: None,
+            workers: None,
+            ipc_overhead: None,
+            restarts: None,
         }
     }
 }
@@ -164,6 +178,15 @@ pub fn to_json(records: &[BenchRecord]) -> String {
         }
         if let Some(s) = r.shed {
             let _ = write!(out, ", \"shed\": {s}");
+        }
+        if let Some(w) = r.workers {
+            let _ = write!(out, ", \"workers\": {w}");
+        }
+        if let Some(o) = r.ipc_overhead {
+            let _ = write!(out, ", \"ipc_overhead\": {o:.4}");
+        }
+        if let Some(n) = r.restarts {
+            let _ = write!(out, ", \"restarts\": {n}");
         }
         let _ = write!(
             out,
@@ -286,6 +309,7 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
         let (mut shards, mut migrations) = (None, None);
         let (mut ckpt_bytes, mut restore_s, mut retries) = (None, None, None);
         let (mut fill, mut miss_rate, mut shed) = (None, None, None);
+        let (mut workers, mut ipc_overhead, mut restarts) = (None, None, None);
         loop {
             let key = p.string()?;
             p.eat(b':')?;
@@ -305,6 +329,9 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
                 "fill_ratio" => fill = Some(p.number()?),
                 "deadline_miss_rate" => miss_rate = Some(p.number()?),
                 "shed" => shed = Some(p.number()? as usize),
+                "workers" => workers = Some(p.number()? as usize),
+                "ipc_overhead" => ipc_overhead = Some(p.number()?),
+                "restarts" => restarts = Some(p.number()? as usize),
                 other => bail!("unknown bench-record key '{other}'"),
             }
             match p.peek() {
@@ -329,6 +356,9 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
             fill_ratio: fill,
             deadline_miss_rate: miss_rate,
             shed,
+            workers,
+            ipc_overhead,
+            restarts,
         });
         match p.peek() {
             Some(b',') => p.eat(b',')?,
@@ -501,6 +531,25 @@ pub fn validate(path: &Path) -> Result<usize> {
             "op '{}': scheduler fields without a fill_ratio field",
             r.op
         );
+        // process-isolation records (PR 9): a worker fleet has >= 1
+        // processes, the overhead ratio is finite and non-negative, and
+        // the companion fields only mean something next to a fleet size
+        if let Some(w) = r.workers {
+            anyhow::ensure!(w >= 1, "op '{}': bad worker count {w}", r.op);
+        }
+        if let Some(o) = r.ipc_overhead {
+            anyhow::ensure!(
+                o.is_finite() && o >= 0.0,
+                "op '{}': bad ipc_overhead {o}",
+                r.op
+            );
+        }
+        anyhow::ensure!(
+            (r.ipc_overhead.is_none() && r.restarts.is_none())
+                || r.workers.is_some(),
+            "op '{}': supervision fields without a workers field",
+            r.op
+        );
     }
     Ok(records.len())
 }
@@ -654,6 +703,39 @@ mod tests {
         // so is a shed count with no fill ratio
         let mut bad = rec("x", 1, 1.0);
         bad.shed = Some(2);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn supervision_fields_roundtrip_and_validate() {
+        let mut r = rec("serve_isolated_k2", 1, 100.0);
+        r.workers = Some(2);
+        r.ipc_overhead = Some(1.0625);
+        r.restarts = Some(1);
+        let parsed = from_json(&to_json(&[r.clone()])).unwrap();
+        assert_eq!(parsed, vec![r.clone()]);
+        // in-process records keep emitting the old schema
+        let bare = to_json(&[rec("a", 1, 1.0)]);
+        assert!(!bare.contains("workers"));
+        assert!(!bare.contains("ipc_overhead"));
+        assert!(!bare.contains("restarts"));
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_benchjson_sup_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        let _ = std::fs::remove_file(&path);
+        merge_into(&path, &[r]).unwrap();
+        assert_eq!(validate(&path).unwrap(), 1);
+        // a zero-process fleet is schema drift
+        let mut bad = rec("x", 1, 1.0);
+        bad.workers = Some(0);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        // so is an overhead ratio with no fleet size
+        let mut bad = rec("x", 1, 1.0);
+        bad.ipc_overhead = Some(1.1);
         std::fs::write(&path, to_json(&[bad])).unwrap();
         assert!(validate(&path).is_err());
         std::fs::remove_file(&path).unwrap();

@@ -1,0 +1,509 @@
+//! Process-isolation and supervision tests (PR 9): backends hosted in
+//! supervised worker *processes* must serve bit-identically to the
+//! in-process fleet; a worker killed with SIGKILL mid-window must fail
+//! over through checkpoints with the served suffix bit-exact; a hung
+//! worker (stalled serve loop or frozen process) must be detected — by
+//! the per-wait deadline or by heartbeat staleness respectively — and
+//! restarted under the supervisor's budget with bit-exact
+//! continuation; an exhausted restart budget must surface as a typed
+//! [`fadec::runtime::BackendDown`] error without wedging the caller;
+//! and the length-prefixed frame codec must reject torn and hostile
+//! byte streams rather than resynchronize by guessing.
+//!
+//! Every fault schedule here is deterministic (explicit kill / stall /
+//! freeze calls, never timing races on the happy path), so the
+//! `SupervisorStats` assertions are exact counts, not lower bounds.
+
+use std::io::Cursor;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fadec::coordinator::{
+    Coordinator, Placement, PipelineOptions, RetryPolicy, SessionStore,
+    ShardRouter, ShardRouterOptions, StreamServer,
+};
+use fadec::data::dataset::Scene;
+use fadec::data::tlv::{TlvEntry, TlvFile, TlvPayload};
+use fadec::poses::Mat4;
+use fadec::runtime::ipc::{read_frame, write_frame};
+use fadec::runtime::{
+    is_backend_down, HwBackend, IpcBackend, SupervisorOptions,
+};
+use fadec::tensor::{Tensor, TensorF};
+
+const SEED: u64 = 7;
+
+/// The worker executable cargo built alongside this test binary.
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_fadec"))
+}
+
+/// Supervisor options with both hang detectors disabled — fault-free
+/// tests must never depend on debug-build timing.
+fn detectors_off(seed: u64) -> SupervisorOptions {
+    SupervisorOptions {
+        seed,
+        heartbeat_grace: Duration::ZERO,
+        wait_deadline: Duration::ZERO,
+        worker_exe: Some(worker_exe()),
+        ..SupervisorOptions::for_seed(seed)
+    }
+}
+
+fn fast_retry(attempts: usize) -> RetryPolicy {
+    RetryPolicy {
+        backoff: Duration::from_micros(50),
+        ..RetryPolicy::with_attempts(attempts)
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fadec_supervision_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn make_scenes(n_streams: usize, frames: usize, base_seed: u64) -> Vec<Scene> {
+    (0..n_streams)
+        .map(|s| {
+            Scene::synthetic(&format!("sv-{s}"), frames, base_seed + s as u64)
+        })
+        .collect()
+}
+
+/// Fault-free single-stream reference on a clean in-process backend.
+fn solo_run(scene: &Scene, n: usize) -> Vec<TensorF> {
+    let mut coord =
+        Coordinator::on_ref_backend(SEED, PipelineOptions::default()).unwrap();
+    (0..n)
+        .map(|i| {
+            let img = scene.normalized_image(i);
+            coord.step(&img, &scene.poses[i]).unwrap().depth
+        })
+        .collect()
+}
+
+fn assert_depths_eq(got: &[Vec<TensorF>], want: &[Vec<TensorF>], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: stream count");
+    for (s, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.len(), w.len(), "{tag}: stream {s} frame count");
+        for (i, (a, b)) in g.iter().zip(w).enumerate() {
+            assert_eq!(
+                a.data(),
+                b.data(),
+                "{tag}: stream {s} frame {i} diverged"
+            );
+        }
+    }
+}
+
+/// Drive every stream through `frames` lockstep rounds on a router and
+/// collect depths per stream.
+fn route_all(
+    router: &mut ShardRouter,
+    scenes: &[Scene],
+    frames: usize,
+) -> Vec<Vec<TensorF>> {
+    let streams: Vec<usize> =
+        scenes.iter().map(|_| router.open_stream()).collect();
+    let imgs: Vec<Vec<TensorF>> = (0..frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let rounds: Vec<Vec<(usize, &TensorF, &Mat4)>> = (0..frames)
+        .map(|i| {
+            streams
+                .iter()
+                .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                .collect()
+        })
+        .collect();
+    let results = router.run_rounds_seq(&rounds, 2).unwrap();
+    let mut depths: Vec<Vec<TensorF>> =
+        scenes.iter().map(|_| Vec::new()).collect();
+    for round in results {
+        for (sid, out) in round {
+            depths[sid].push(out.depth);
+        }
+    }
+    depths
+}
+
+// --- tentpole: process isolation is invisible to the bits ------------------
+
+#[test]
+fn process_isolated_fleet_is_bit_exact_for_k1_and_k2() {
+    let (n_streams, frames) = (2, 3);
+    let scenes = make_scenes(n_streams, frames, 40);
+    for k in [1usize, 2] {
+        let ropts = ShardRouterOptions {
+            auto_rebalance: false,
+            ..Default::default()
+        };
+        let mut inproc = ShardRouter::on_ref_backends(
+            k,
+            SEED,
+            PipelineOptions::default(),
+            ropts,
+        )
+        .unwrap();
+        let want = route_all(&mut inproc, &scenes, frames);
+        let mut iso = ShardRouter::on_worker_processes(
+            k,
+            SEED,
+            PipelineOptions::default(),
+            ropts,
+            detectors_off(SEED),
+        )
+        .unwrap();
+        let got = route_all(&mut iso, &scenes, frames);
+        assert_depths_eq(&got, &want, &format!("isolated k={k}"));
+        // a fault-free run needs no supervision at all — and therefore
+        // adds no supervision line to the report
+        let sup = iso.supervisor_stats();
+        assert_eq!(sup.restarts, 0, "k={k}");
+        assert_eq!(sup.heartbeat_misses, 0, "k={k}");
+        assert_eq!(sup.deadline_expiries, 0, "k={k}");
+        assert_eq!(sup.failover_replays, 0, "k={k}");
+        assert!(!iso.report().contains("supervision:"));
+    }
+}
+
+// --- crash containment: SIGKILL mid-window ---------------------------------
+
+#[test]
+fn killed_worker_fails_over_through_checkpoints_bit_exactly() {
+    let dir = tmp_dir("kill");
+    let (n_streams, frames) = (4, 6);
+    let scenes = make_scenes(n_streams, frames, 60);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+
+    // two worker processes; worker 0 will be killed with no restart
+    // budget, so its shard dies for good and failover must carry it
+    let mut opts0 = detectors_off(SEED);
+    opts0.max_restarts = 0;
+    let be0 = Arc::new(IpcBackend::connect(opts0).unwrap());
+    let be1 = Arc::new(IpcBackend::connect(detectors_off(SEED)).unwrap());
+    let qp0 = Arc::clone(be0.qp());
+    let qp1 = Arc::clone(be1.qp());
+    let mut router = ShardRouter::new(
+        vec![
+            (Arc::clone(&be0) as Arc<dyn HwBackend>, qp0),
+            (Arc::clone(&be1) as Arc<dyn HwBackend>, qp1),
+        ],
+        PipelineOptions { retry: fast_retry(3), ..Default::default() },
+        ShardRouterOptions {
+            placement: Placement::RoundRobin,
+            auto_rebalance: false,
+            imbalance_threshold: 1.5,
+        },
+    )
+    .unwrap();
+    let store = SessionStore::open(
+        &dir,
+        8,
+        be0.manifest(),
+        router.engine(0).qp().as_ref(),
+    )
+    .unwrap();
+    router.attach_session_store(store);
+
+    let streams: Vec<usize> =
+        (0..n_streams).map(|_| router.open_stream()).collect();
+    let on_dead: Vec<usize> = streams
+        .iter()
+        .copied()
+        .filter(|&s| router.shard_of(s) == Some(0))
+        .collect();
+    assert!(!on_dead.is_empty(), "round-robin placed streams on shard 0");
+
+    let imgs: Vec<Vec<TensorF>> = (0..frames)
+        .map(|i| scenes.iter().map(|sc| sc.normalized_image(i)).collect())
+        .collect();
+    let rounds = |lo: usize, hi: usize| -> Vec<Vec<(usize, &TensorF, &Mat4)>> {
+        (lo..hi)
+            .map(|i| {
+                streams
+                    .iter()
+                    .map(|&s| (s, &imgs[i][s], &scenes[s].poses[i]))
+                    .collect()
+            })
+            .collect()
+    };
+    let mut got: Vec<Vec<TensorF>> =
+        (0..n_streams).map(|_| Vec::new()).collect();
+    let take = |results: Vec<Vec<(usize, fadec::coordinator::FrameOutput)>>,
+                    got: &mut Vec<Vec<TensorF>>| {
+        for round in results {
+            for (sid, out) in round {
+                got[sid].push(out.depth);
+            }
+        }
+    };
+
+    // window 1: both workers healthy
+    take(router.run_rounds(&rounds(0, 2), 2).unwrap(), &mut got);
+    // SIGKILL worker 0; window 2 begins unaware — submissions to the
+    // dead shard exhaust their retries against the spent restart
+    // budget, then checkpoint failover ships its streams to shard 1
+    // and replays the unfinished rounds there
+    be0.kill_worker();
+    take(router.run_rounds(&rounds(2, 4), 2).unwrap(), &mut got);
+    for &s in &on_dead {
+        assert_eq!(router.shard_of(s), Some(1), "victim {s} failed over");
+    }
+    // window 3: the surviving worker serves everything
+    take(router.run_rounds(&rounds(4, 6), 2).unwrap(), &mut got);
+
+    assert_depths_eq(&got, &solo, "kill failover");
+    let rec = router.recovery_stats();
+    assert_eq!(rec.shard_failovers, 1, "one worker died once");
+    assert_eq!(
+        rec.checkpoint_migrations,
+        on_dead.len(),
+        "every victim shipped through its checkpoint"
+    );
+    let sup = router.supervisor_stats();
+    assert_eq!(sup.failover_replays, 1, "the death was replayed once");
+    assert_eq!(sup.restarts, 0, "no budget, no restart");
+    assert_eq!(sup.heartbeat_misses + sup.deadline_expiries, 0);
+    assert!(router.report().contains("supervision:"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- hang detection: stalled serve loop trips the wait deadline ------------
+
+#[test]
+fn stalled_worker_trips_the_wait_deadline_and_restarts() {
+    let (frames, cut) = (4, 2);
+    let scenes = make_scenes(1, frames, 50);
+    let solo = solo_run(&scenes[0], frames);
+
+    // heartbeat detector off: the stalled worker keeps beating, so
+    // only the per-wait deadline may fire — making the counts exact
+    let opts = SupervisorOptions {
+        heartbeat_grace: Duration::ZERO,
+        wait_deadline: Duration::from_secs(2),
+        max_restarts: 2,
+        restart_backoff: Duration::from_millis(10),
+        ..detectors_off(SEED)
+    };
+    let be = Arc::new(IpcBackend::connect(opts).unwrap());
+    let qp = Arc::clone(be.qp());
+    let mut server = StreamServer::new(
+        Arc::clone(&be) as Arc<dyn HwBackend>,
+        qp,
+        // the pipeline's own per-wait deadline (round_timeout, 5 s)
+        // stays longer than the supervisor's, so the supervisor kills
+        // first and the retry replays against the restarted worker
+        PipelineOptions { retry: fast_retry(3), ..Default::default() },
+    )
+    .unwrap();
+    let s = server.open_stream();
+    for (i, want) in solo.iter().enumerate().take(cut) {
+        let img = scenes[0].normalized_image(i);
+        let out = server.step_stream(s, &img, &scenes[0].poses[i]).unwrap();
+        assert_eq!(out.depth.data(), want.data(), "prefix frame {i}");
+    }
+    // wedge the serve loop (heartbeats keep flowing); the next request
+    // outlives the wait deadline, the supervisor kills the worker, the
+    // dropped wait registers as a retryable fault, and the retry runs
+    // against the supervised restart
+    be.stall_worker().unwrap();
+    for (i, want) in solo.iter().enumerate().skip(cut) {
+        let img = scenes[0].normalized_image(i);
+        let out = server.step_stream(s, &img, &scenes[0].poses[i]).unwrap();
+        assert_eq!(out.depth.data(), want.data(), "continuation frame {i}");
+    }
+    let sup = server.supervisor_stats().unwrap();
+    assert_eq!(sup.deadline_expiries, 1, "exactly one hang detected");
+    assert_eq!(sup.restarts, 1, "exactly one supervised restart");
+    assert_eq!(sup.heartbeat_misses, 0, "heartbeat detector was off");
+    assert!(sup.downtime_seconds > 0.0);
+    assert!(server.recovery_stats().wait_faults >= 1);
+    assert!(server.report().contains("supervision:"));
+}
+
+// --- hang detection: frozen process misses heartbeats ----------------------
+
+#[test]
+fn frozen_worker_misses_heartbeats_and_restarts() {
+    let (frames, cut) = (4, 2);
+    let scenes = make_scenes(1, frames, 55);
+    let solo = solo_run(&scenes[0], frames);
+
+    // wait-deadline detector off: only heartbeat staleness may fire
+    let opts = SupervisorOptions {
+        heartbeat_interval: Duration::from_millis(25),
+        heartbeat_grace: Duration::from_millis(500),
+        wait_deadline: Duration::ZERO,
+        max_restarts: 2,
+        restart_backoff: Duration::from_millis(10),
+        ..detectors_off(SEED)
+    };
+    let be = Arc::new(IpcBackend::connect(opts).unwrap());
+    let qp = Arc::clone(be.qp());
+    let mut server = StreamServer::new(
+        Arc::clone(&be) as Arc<dyn HwBackend>,
+        qp,
+        PipelineOptions::default(),
+    )
+    .unwrap();
+    let s = server.open_stream();
+    for (i, want) in solo.iter().enumerate().take(cut) {
+        let img = scenes[0].normalized_image(i);
+        let out = server.step_stream(s, &img, &scenes[0].poses[i]).unwrap();
+        assert_eq!(out.depth.data(), want.data(), "prefix frame {i}");
+    }
+    // freeze the whole process (even its heartbeat thread parks); the
+    // monitor must notice the stale beat and kill it between rounds —
+    // no request is in flight, so no retry policy is needed at all
+    be.freeze_worker().unwrap();
+    let t0 = Instant::now();
+    while be.supervisor_stats().unwrap().heartbeat_misses == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "frozen worker was never detected"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // the next submission finds the worker down and restarts it
+    for (i, want) in solo.iter().enumerate().skip(cut) {
+        let img = scenes[0].normalized_image(i);
+        let out = server.step_stream(s, &img, &scenes[0].poses[i]).unwrap();
+        assert_eq!(out.depth.data(), want.data(), "continuation frame {i}");
+    }
+    let sup = server.supervisor_stats().unwrap();
+    assert_eq!(sup.heartbeat_misses, 1, "exactly one frozen worker");
+    assert_eq!(sup.restarts, 1, "exactly one supervised restart");
+    assert_eq!(sup.deadline_expiries, 0, "deadline detector was off");
+}
+
+// --- restart budget exhaustion surfaces as a typed error -------------------
+
+#[test]
+fn restart_budget_exhaustion_is_a_typed_fast_error() {
+    let scenes = make_scenes(1, 2, 65);
+    let solo = solo_run(&scenes[0], 1);
+    let mut opts = detectors_off(SEED);
+    opts.max_restarts = 0;
+    let be = Arc::new(IpcBackend::connect(opts).unwrap());
+    let qp = Arc::clone(be.qp());
+    let mut server = StreamServer::new(
+        Arc::clone(&be) as Arc<dyn HwBackend>,
+        qp,
+        PipelineOptions::default(),
+    )
+    .unwrap();
+    let s = server.open_stream();
+    let img = scenes[0].normalized_image(0);
+    let out = server.step_stream(s, &img, &scenes[0].poses[0]).unwrap();
+    assert_eq!(out.depth.data(), solo[0].data());
+    be.kill_worker();
+    let img = scenes[0].normalized_image(1);
+    let err = server
+        .step_stream(s, &img, &scenes[0].poses[1])
+        .expect_err("dead worker with no restart budget must error");
+    assert!(is_backend_down(&err), "typed BackendDown in: {err:#}");
+    assert!(format!("{err:#}").contains("restart budget"), "{err:#}");
+    // the failure must not wedge the caller: further calls fail fast
+    // (no detector sleeps, no hung waits) with the same typed error
+    let t0 = Instant::now();
+    let err = server
+        .step_stream(s, &img, &scenes[0].poses[1])
+        .expect_err("still down");
+    assert!(is_backend_down(&err));
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "a downed backend must fail fast, not hang"
+    );
+}
+
+// --- wire protocol: torn and hostile streams are rejected ------------------
+
+#[test]
+fn frame_codec_rejects_torn_and_hostile_streams() {
+    // a representative frame with a string-ish and a numeric entry
+    let mut f = TlvFile::default();
+    let name: Vec<i8> = b"run_batch".iter().map(|&b| b as i8).collect();
+    f.insert(
+        "op",
+        TlvEntry {
+            exp: 0,
+            payload: TlvPayload::I8(Tensor::from_vec(&[name.len()], name)),
+        },
+    )
+    .unwrap();
+    f.insert(
+        "width",
+        TlvEntry {
+            exp: 0,
+            payload: TlvPayload::I32(Tensor::from_vec(&[2], vec![7, -7])),
+        },
+    )
+    .unwrap();
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &f).unwrap();
+
+    // clean EOF only at a frame boundary
+    assert!(read_frame(&mut Cursor::new(Vec::new())).unwrap().is_none());
+    let back = read_frame(&mut Cursor::new(buf.clone())).unwrap().unwrap();
+    assert!(back.entries.contains_key("op"));
+    // two frames back to back parse in order, then EOF cleanly
+    let mut two = buf.clone();
+    two.extend_from_slice(&buf);
+    let mut cur = Cursor::new(two);
+    assert!(read_frame(&mut cur).unwrap().is_some());
+    assert!(read_frame(&mut cur).unwrap().is_some());
+    assert!(read_frame(&mut cur).unwrap().is_none());
+
+    // every strict prefix is an error — truncation never reads as a
+    // clean shutdown past offset zero
+    for cut in 1..buf.len() {
+        assert!(
+            read_frame(&mut Cursor::new(buf[..cut].to_vec())).is_err(),
+            "prefix of {cut}/{} bytes must not parse",
+            buf.len()
+        );
+    }
+    // a hostile length field is rejected before any allocation
+    let mut hostile = Vec::new();
+    hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+    hostile.extend_from_slice(&[0u8; 16]);
+    let err = read_frame(&mut Cursor::new(hostile)).unwrap_err();
+    assert!(format!("{err:#}").contains("bound"), "{err:#}");
+
+    // seeded fuzz: arbitrary byte soup must error or end cleanly —
+    // never panic, never loop — and single-byte corruptions of a valid
+    // frame must never be silently accepted as a *different* frame
+    let mut state = 0x2545_F491_4F6C_DD1Du64;
+    let mut rng = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    for _ in 0..256 {
+        let len = (rng() % 96) as usize;
+        let junk: Vec<u8> = (0..len).map(|_| rng() as u8).collect();
+        let mut cur = Cursor::new(junk);
+        // drain the cursor: each read either errors (lost sync) or
+        // yields a frame; a finite buffer must terminate either way
+        loop {
+            match read_frame(&mut cur) {
+                Ok(Some(_)) => continue,
+                Ok(None) | Err(_) => break,
+            }
+        }
+    }
+    for i in 0..buf.len() {
+        let mut bent = buf.clone();
+        bent[i] ^= 1 << (rng() % 8) as u32;
+        let mut cur = Cursor::new(bent);
+        // flipping a bit may legally still parse (e.g. inside payload
+        // bytes) — what it must never do is panic or hang
+        let _ = read_frame(&mut cur);
+    }
+}
