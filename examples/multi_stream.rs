@@ -39,6 +39,13 @@
 //!    shard dies for good, checkpoint failover ships its streams to a
 //!    survivor, and the depths still match per-stream stepping
 //!    bit-for-bit.
+//! 9. **poisoned stream** (`--poison`, PR 10) — the continuous workload
+//!    on a *guarded* server, with stream 0 turning hostile after two
+//!    clean frames (all-NaN captures). The ingestion guard holds every
+//!    poisoned frame, the scheduler walks the quarantine ladder
+//!    (downgrade, then shed to a pre-poison checkpoint), the clean
+//!    streams stay bit-identical to per-stream stepping, and the shed
+//!    checkpoint resumes the victim's clean suffix bit-exactly.
 //!
 //! All runs must produce bit-identical depth maps (asserted below);
 //! batching, pipelining, sharding, retries, checkpoint/restore,
@@ -51,16 +58,17 @@
 //!     cargo run --release --example multi_stream \
 //!         [-- --streams N --frames M --conv-threads T \
 //!             --pipeline-depth K --shards S --chaos \
-//!             --checkpoint-dir DIR --continuous --overload --workers K]
+//!             --checkpoint-dir DIR --continuous --overload --workers K \
+//!             --poison]
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fadec::config;
 use fadec::coordinator::{
-    AdmissionPolicy, ContinuousStream, Placement, PipelineOptions,
-    RetryPolicy, SchedulerOptions, SessionStore, ShardRouter,
-    ShardRouterOptions, StreamDisposition, StreamServer,
+    AdmissionPolicy, ContinuousStream, GuardOptions, Placement,
+    PipelineOptions, RetryPolicy, SchedulerOptions, SessionStore,
+    ShardRouter, ShardRouterOptions, StreamDisposition, StreamServer,
 };
 use fadec::data::dataset::Scene;
 use fadec::poses::Mat4;
@@ -83,6 +91,7 @@ fn main() -> anyhow::Result<()> {
     let continuous = args.has("continuous");
     let overload = args.has("overload");
     let workers = args.get_usize("workers", 0);
+    let poison = args.has("poison");
 
     // one backend instance, shared by every stream; the server's engine
     // applies --conv-threads to it (output channels — and, in batched
@@ -623,6 +632,145 @@ fn main() -> anyhow::Result<()> {
             );
         }
         println!("{}", router.report());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // --- mode 9 (--poison): guarded ingestion + quarantine ladder ---------
+    // The continuous workload on a *guarded* server. Stream 0 turns
+    // hostile after two clean frames and ships all-NaN captures from
+    // then on: the ingestion guard holds each poisoned frame (the
+    // stream just re-sees its last good depth), the scheduler
+    // downgrades it at 3 consecutive faults and sheds it at 6 — to a
+    // checkpoint taken *before* the poison. The clean streams must
+    // stay bit-identical to per-stream stepping, and the shed
+    // checkpoint must replay the victim's clean suffix bit-exactly.
+    if poison {
+        anyhow::ensure!(
+            n_streams >= 2 && frames >= 3,
+            "--poison needs at least 2 streams and 3 frames"
+        );
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_ms_poison_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let backend = Arc::new(RefBackend::synthetic(0));
+        let qp = Arc::clone(backend.qp());
+        let mut gserver = StreamServer::new(
+            Arc::clone(&backend) as Arc<dyn HwBackend>,
+            qp,
+            PipelineOptions {
+                conv_threads,
+                guard: Some(GuardOptions::default()),
+                ..Default::default()
+            },
+        )?;
+        for _ in 0..n_streams {
+            gserver.open_stream();
+        }
+        let store = SessionStore::open(
+            &dir,
+            n_streams,
+            backend.manifest(),
+            gserver.engine().qp().as_ref(),
+        )?;
+        gserver.attach_session_store(store);
+        let nan_img = all_imgs[0][0].map(|_| f32::NAN);
+        let poison_streams: Vec<ContinuousStream> = (0..n_streams)
+            .map(|s| {
+                if s == 0 {
+                    // 2 clean frames, then 8 all-NaN captures: enough to
+                    // walk the whole ladder while still mid-stream
+                    let mut feed: Vec<(&TensorF, Mat4)> = (0..2)
+                        .map(|i| (&all_imgs[i][0], scenes[0].poses[i]))
+                        .collect();
+                    for _ in 0..8 {
+                        feed.push((&nan_img, scenes[0].poses[2]));
+                    }
+                    ContinuousStream::new(0, feed)
+                } else {
+                    ContinuousStream::new(
+                        s,
+                        (0..frames)
+                            .map(|i| (&all_imgs[i][s], scenes[s].poses[i]))
+                            .collect(),
+                    )
+                }
+            })
+            .collect();
+        let opts =
+            SchedulerOptions { capacity: n_streams, ..Default::default() };
+        let t0 = Instant::now();
+        let out = gserver.run_continuous(&poison_streams, &opts)?;
+        let poison_wall = t0.elapsed().as_secs_f64();
+        // the victim walks the ladder: downgraded at fault streak 3,
+        // shed at streak 6 — after 8 served frames (2 clean + 6 held)
+        assert_eq!(
+            out.dispositions[0],
+            StreamDisposition::Shed { served: 8 },
+            "the poisoned stream is quarantined and shed"
+        );
+        for (s, d) in out.dispositions.iter().enumerate().skip(1) {
+            assert_eq!(
+                *d,
+                StreamDisposition::Completed,
+                "clean stream {s} must complete"
+            );
+        }
+        // every held frame re-emits the last committed depth
+        for f in 2..8 {
+            assert_eq!(
+                out.outputs[0][f].depth.data(),
+                out.outputs[0][1].depth.data(),
+                "held frame {f} must re-emit the pre-poison depth"
+            );
+        }
+        // clean neighbors never notice the quarantine
+        for s in 1..n_streams {
+            assert_eq!(out.outputs[s].len(), frames);
+            let depth = &out.outputs[s].last().expect("served frames").depth;
+            assert_eq!(
+                depth.data(),
+                seq_last[s].data(),
+                "stream {s}: guarded serving diverged from per-stream \
+                 stepping"
+            );
+        }
+        let st = gserver.integrity_stats();
+        assert_eq!(st.validated, 2 + (n_streams - 1) * frames);
+        assert_eq!(st.held, 6, "every poisoned capture was held");
+        assert_eq!(st.quarantined, 1);
+        assert_eq!(st.shed, 1);
+        println!(
+            "poisoned:      {:7.3} s wall — {} validated, {} held, \
+             {} quarantined, {} shed",
+            poison_wall, st.validated, st.held, st.quarantined, st.shed,
+        );
+        // the shed checkpoint predates the poison; replaying the clean
+        // suffix from it lands on the per-stream stepping depth
+        let qp = Arc::clone(gserver.engine().qp());
+        let store = gserver.session_store_mut().expect("store attached");
+        assert!(store.has_checkpoint(0), "shed left a checkpoint");
+        let mut resumed = store.load(0, &qp)?;
+        assert_eq!(resumed.frames_done(), 2, "checkpoint predates poison");
+        assert!(resumed.is_finite());
+        let mut last = None;
+        for i in 2..frames {
+            let got = gserver.engine().step_session(
+                &mut resumed,
+                &all_imgs[i][0],
+                &scenes[0].poses[i],
+            )?;
+            last = Some(got.depth);
+        }
+        assert_eq!(
+            last.expect("resumed frames").data(),
+            seq_last[0].data(),
+            "resumed clean suffix diverged from per-stream stepping"
+        );
+        println!(
+            "bit-exact: quarantined stream's checkpoint replay + clean \
+             neighbors == per-stream stepping\n"
+        );
+        println!("{}", gserver.report());
         let _ = std::fs::remove_dir_all(&dir);
     }
     Ok(())

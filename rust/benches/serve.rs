@@ -32,6 +32,12 @@
 //!    in-process fleet, recording the wall-time ratio as
 //!    `ipc_overhead` (what the pipe + frame codec cost) plus the
 //!    supervised `restarts` the run needed (0 in a fault-free bench).
+//! 8. **guarded** (PR 10) — the `_guarded` record serves the clean
+//!    sequential workload with `PipelineOptions::guard` screening every
+//!    capture vs the bit-identical unguarded run, recording the
+//!    wall-time ratio as `guard_overhead` (what ingestion validation
+//!    costs), then runs a short NaN-poisoned continuous drive and
+//!    records the guard ladder's interventions as `quarantined`.
 //!
 //! Records merge into `BENCH_serve.json` (`util::benchjson` schema).
 //! One frame is the unit of work: `ns_per_iter` is nanoseconds per
@@ -56,9 +62,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fadec::coordinator::{
-    AdmissionPolicy, ContinuousStream, Placement, PipelineOptions,
-    RetryPolicy, SchedulerOptions, SessionStore, ShardRouter,
-    ShardRouterOptions, StreamServer,
+    AdmissionPolicy, ContinuousStream, GuardOptions, Placement,
+    PipelineOptions, RetryPolicy, SchedulerOptions, SessionStore,
+    ShardRouter, ShardRouterOptions, StreamServer,
 };
 use fadec::data::dataset::Scene;
 use fadec::poses::Mat4;
@@ -517,6 +523,100 @@ fn main() {
             base_wall,
             wall / base_wall.max(1e-9),
             sup.restarts,
+        );
+    }
+
+    // --- guarded serving (PR 10): the same sequential workload with
+    // every capture screened by the FrameGuard vs the bit-identical
+    // unguarded run (equality is pinned by rust/tests/integrity.rs —
+    // this record measures what screening costs), plus a short
+    // NaN-poisoned continuous drive exercising the quarantine ladder ----
+    {
+        let run = |guard: Option<GuardOptions>| -> (f64, StreamServer) {
+            let backend = Arc::new(
+                RefBackend::synthetic(5).with_conv_threads(CONV_THREADS),
+            );
+            let qp = Arc::clone(backend.qp());
+            let mut server = StreamServer::new(
+                backend as Arc<dyn HwBackend>,
+                qp,
+                PipelineOptions {
+                    conv_threads: CONV_THREADS,
+                    guard,
+                    ..Default::default()
+                },
+            )
+            .expect("guarded server");
+            let streams: Vec<usize> =
+                (0..n_streams).map(|_| server.open_stream()).collect();
+            let t0 = Instant::now();
+            for i in 0..n_frames {
+                for &s in &streams {
+                    server
+                        .step_stream(s, &imgs[i][s], &scenes[s].poses[i])
+                        .expect("guarded step");
+                }
+            }
+            (t0.elapsed().as_secs_f64(), server)
+        };
+        let (base_wall, _) = run(None);
+        let (wall, clean_server) = run(Some(GuardOptions::default()));
+        let integ = clean_server.integrity_stats();
+        assert_eq!(integ.faulty(), 0, "clean workload screened clean");
+
+        // poisoned drive: one stream feeds nothing but NaN frames until
+        // the ladder downgrades and then sheds it; its neighbour serves
+        // its full clean workload undisturbed
+        let mut pserver = {
+            let backend = Arc::new(
+                RefBackend::synthetic(5).with_conv_threads(CONV_THREADS),
+            );
+            let qp = Arc::clone(backend.qp());
+            StreamServer::new(
+                backend as Arc<dyn HwBackend>,
+                qp,
+                PipelineOptions {
+                    conv_threads: CONV_THREADS,
+                    guard: Some(GuardOptions::default()),
+                    ..Default::default()
+                },
+            )
+            .expect("poisoned-drive server")
+        };
+        for _ in 0..2 {
+            pserver.open_stream();
+        }
+        let nan_img = imgs[0][0].map(|_| f32::NAN);
+        let after = GuardOptions::default().quarantine_after;
+        let poisoned: Vec<(&TensorF, Mat4)> =
+            (0..2 * after + 2).map(|_| (&nan_img, scenes[0].poses[0])).collect();
+        let clean: Vec<(&TensorF, Mat4)> = (0..n_frames)
+            .map(|i| (&imgs[i][1], scenes[1].poses[i]))
+            .collect();
+        let streams = vec![
+            ContinuousStream::new(0, poisoned),
+            ContinuousStream::new(1, clean),
+        ];
+        let out = pserver
+            .run_continuous(&streams, &SchedulerOptions::default())
+            .expect("poisoned continuous");
+        let pinteg = pserver.integrity_stats();
+        let mut r = rec("serve_guarded", &shape, wall, total);
+        r.guard_overhead =
+            Some(if base_wall > 0.0 { wall / base_wall } else { 0.0 });
+        r.quarantined = Some(pinteg.quarantined as usize);
+        records.push(r);
+        println!(
+            "guarded: {:7.3} s wall vs {:7.3} s unguarded ({:.3}x guard \
+             overhead); poisoned drive held {} frames, {} quarantined, {} \
+             shed ({} streams shed)",
+            wall,
+            base_wall,
+            wall / base_wall.max(1e-9),
+            pinteg.held,
+            pinteg.quarantined,
+            pinteg.shed,
+            out.stats.shed,
         );
     }
 

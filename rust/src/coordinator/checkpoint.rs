@@ -77,6 +77,18 @@ fn encode(
     manifest_fp: u64,
     qp_fp: u64,
 ) -> Result<Vec<u8>> {
+    // Data-plane integrity (PR 10): durable storage refuses poison.
+    // Every writer — `save`, `check_in` eviction, and the background
+    // writer thread — funnels through here, so a NaN/Inf that slipped
+    // past (or was never screened by) the ingestion guard can never
+    // reach a checkpoint and later resurface through restore.
+    ensure!(
+        session.is_finite(),
+        "refusing to checkpoint stream {}: session state carries \
+         non-finite values (poisoned depth, pose, or keyframe) — a \
+         checkpoint must never launder NaN back through restore",
+        session.id
+    );
     let mut tlv = session
         .to_tlv()
         .with_context(|| format!("serializing stream {}", session.id))?;
@@ -647,6 +659,31 @@ mod tests {
         let s1 = store.check_out(1, &qp).unwrap();
         assert_eq!(s1.id, 1);
         assert_eq!(store.stats().restores, 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_refuses_nonfinite_session_state() {
+        let dir = tmp_dir("poison");
+        let eng = engine(23);
+        let manifest = eng.backend().manifest().clone();
+        let qp = Arc::clone(eng.qp());
+        let mut store = SessionStore::open(&dir, 4, &manifest, &qp).unwrap();
+        // a clean session checkpoints fine
+        store.save(&eng.new_session(0)).unwrap();
+        assert!(store.has_checkpoint(0));
+        // a poisoned one is refused by the shared `encode` core, which
+        // covers `save`, eviction via `check_in`, and the writer thread
+        let mut bad = eng.new_session(1);
+        let mut p = crate::poses::Mat4::identity();
+        p.0[3] = f64::NAN;
+        bad.pose_prev = Some(p);
+        let err = store.save(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+        assert!(
+            !store.has_checkpoint(1),
+            "refusal must not leave a partial checkpoint behind"
+        );
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,0 +1,622 @@
+//! Guard layer — data-plane integrity at the ingestion boundary (PR 10).
+//!
+//! The serving stack survives backend crashes, hangs, overload, and
+//! wire bit-rot (PRs 7–9), but the *input side* — frames and poses from
+//! a live sensor — was trusted implicitly. That is exactly the wrong
+//! place to trust: a plane-sweep cost volume amplifies a degenerate
+//! pose (zero baseline / pure rotation) into garbage geometry, and one
+//! NaN pixel propagates through the quantizer's saturating casts into a
+//! silently-wrong depth that then gets committed, checkpointed, and
+//! replayed "bit-exactly" wrong forever.
+//!
+//! [`FrameGuard`] validates every `(img, pose)` capture *before* it
+//! reaches the FSM, at the points where frames enter the system
+//! (`Coordinator::step`, `StreamServer::step_stream` / `run_round`, the
+//! continuous scheduler's round forming — all of which funnel through a
+//! guarded [`super::pipeline::PipelineEngine`]):
+//!
+//! * **shape** — the image must be `[1, 3, IMG_H, IMG_W]` exactly;
+//! * **pixels** — finite and within `±max_abs_pixel` (the normalised
+//!   image contract maps u8 into `[-2, 2]`; the default bound of 8.0
+//!   leaves generous headroom for future normalisations while catching
+//!   sensor dropouts and bit flips by orders of magnitude);
+//! * **pose** — finite, invertible, and a *rigid* transform
+//!   (orthonormal rotation, `det = +1`, affine bottom row — see
+//!   `Mat4::is_rigid`);
+//! * **pose jump** — translation distance from the session's previous
+//!   pose beyond `max_jump` (a tracking glitch);
+//! * **degenerate baseline** — translation distance below
+//!   `min_baseline` from the previous pose or any keyframe-buffer pose
+//!   (a stuck capture / pure rotation: plane-sweep needs parallax).
+//!
+//! An invalid capture is dispatched per [`GuardPolicy`]:
+//!
+//! * [`GuardPolicy::RejectFrame`] — a typed [`FrameRejected`] error the
+//!   caller can downcast (the strict mode: nothing invalid proceeds);
+//! * [`GuardPolicy::HoldLastDepth`] — the serving layer re-emits the
+//!   session's previous depth and **skips the frame entirely**: no cost
+//!   volume, no keyframe insertion, no commit, so session state stays
+//!   bit-identical to a run that never saw the frame;
+//! * [`GuardPolicy::Sanitize`] — pixel faults are repaired in place
+//!   (non-finite → 0, out-of-range clamped to the bound) and the frame
+//!   proceeds; pose and shape faults cannot be sanitized and degrade to
+//!   the hold disposition.
+//!
+//! Repeat offenders are **quarantined**: the continuous scheduler
+//! consults [`FrameGuard::consecutive_faults`] after every round and
+//! downgrades a stream at `quarantine_after` consecutive faulty frames,
+//! then sheds it to a checkpoint at twice that — and because held /
+//! rejected frames never mutate the session, the shed checkpoint is the
+//! *pre-poison* state, restorable and bit-identical to solo serving of
+//! the clean prefix.
+//!
+//! The core invariant, pinned by `rust/tests/integrity.rs`: a guarded
+//! clean run is **bit-identical** to an unguarded one (screening is
+//! read-only on the clean path), and a poisoned run's unaffected
+//! streams are bit-identical to solo serving.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::config::{IMG_H, IMG_W};
+use crate::metrics::IntegrityStats;
+use crate::poses::Mat4;
+use crate::tensor::TensorF;
+
+use super::session::StreamSession;
+
+/// Disposition of an invalid capture. See the module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GuardPolicy {
+    /// Surface a typed [`FrameRejected`] error; nothing proceeds.
+    RejectFrame,
+    /// Re-emit the previous depth and skip the frame (session state
+    /// untouched). The default: graceful and bit-exactly recoverable.
+    HoldLastDepth,
+    /// Repair pixel faults (NaN → 0, clamp out-of-range) and proceed;
+    /// unsanitizable faults (pose, shape) degrade to hold.
+    Sanitize,
+}
+
+/// Guard configuration. `Default` gives the hold policy with bounds
+/// matched to the synthetic data contract (images in `[-2, 2]`, camera
+/// steps of 0.04–0.16 m): clean runs never trip it.
+#[derive(Clone, Copy, Debug)]
+pub struct GuardOptions {
+    pub policy: GuardPolicy,
+    /// Pixel magnitude bound (normalised-image units).
+    pub max_abs_pixel: f32,
+    /// Minimum translation distance vs the previous pose and every
+    /// keyframe pose — below it the capture has no parallax to sweep.
+    pub min_baseline: f64,
+    /// Maximum translation distance vs the previous pose — beyond it
+    /// the tracker glitched, not the camera.
+    pub max_jump: f64,
+    /// Consecutive faulty frames before the scheduler downgrades the
+    /// stream (and sheds it at twice this). `0` disables quarantine.
+    pub quarantine_after: usize,
+}
+
+impl Default for GuardOptions {
+    fn default() -> Self {
+        GuardOptions {
+            policy: GuardPolicy::HoldLastDepth,
+            max_abs_pixel: 8.0,
+            min_baseline: 1e-6,
+            max_jump: 1e3,
+            quarantine_after: 3,
+        }
+    }
+}
+
+impl GuardOptions {
+    pub fn with_policy(policy: GuardPolicy) -> Self {
+        GuardOptions { policy, ..Default::default() }
+    }
+}
+
+/// The fault class of an invalid capture (first failing check wins;
+/// checks run in the order shape → pose finite → pose rigid → pose
+/// jump → baseline → pixels, so a sanitizable pixel fault is only
+/// reported when everything unsanitizable already passed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    ShapeMismatch,
+    NonFinitePose,
+    NonRigidPose,
+    PoseJump,
+    DegenerateBaseline,
+    NonFinitePixel,
+    PixelOutOfRange,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        use FaultKind::*;
+        match self {
+            ShapeMismatch => "shape_mismatch",
+            NonFinitePose => "nonfinite_pose",
+            NonRigidPose => "nonrigid_pose",
+            PoseJump => "pose_jump",
+            DegenerateBaseline => "degenerate_baseline",
+            NonFinitePixel => "nonfinite_pixel",
+            PixelOutOfRange => "pixel_out_of_range",
+        }
+    }
+}
+
+/// Typed rejection error ([`GuardPolicy::RejectFrame`]); callers
+/// distinguish it from backend faults with [`is_frame_rejected`].
+#[derive(Debug)]
+pub struct FrameRejected {
+    pub stream: usize,
+    pub kind: FaultKind,
+    pub detail: String,
+}
+
+impl fmt::Display for FrameRejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "guard: stream {} frame rejected ({}): {}",
+            self.stream,
+            self.kind.name(),
+            self.detail
+        )
+    }
+}
+
+impl std::error::Error for FrameRejected {}
+
+/// Whether `err` is a guard rejection (anywhere in its chain), and if
+/// so which one — the input-side analog of `runtime::is_backend_down`.
+pub fn is_frame_rejected(err: &anyhow::Error) -> Option<&FrameRejected> {
+    err.chain().find_map(|e| e.downcast_ref::<FrameRejected>())
+}
+
+/// Outcome of screening one capture.
+pub enum Screened {
+    /// Valid: proceed with the caller's own `(img, pose)` untouched.
+    Clean,
+    /// Pixel faults repaired: proceed with these instead.
+    Sanitized { img: TensorF, pose: Mat4 },
+    /// Skip the frame, re-emit the session's last depth, leave the
+    /// session untouched.
+    Hold,
+}
+
+/// One detected fault: its class plus a human-readable detail and the
+/// per-kind pixel counts (for [`IntegrityStats`]).
+struct Fault {
+    kind: FaultKind,
+    detail: String,
+    nonfinite_pixels: usize,
+    oor_pixels: usize,
+}
+
+impl Fault {
+    fn new(kind: FaultKind, detail: String) -> Self {
+        Fault { kind, detail, nonfinite_pixels: 0, oor_pixels: 0 }
+    }
+}
+
+/// The ingestion validator. Shared by every serving path of one engine;
+/// interior-mutable (stats + per-stream fault streaks) so screening
+/// works from `&self` exactly like the engine's other accounting.
+pub struct FrameGuard {
+    opts: GuardOptions,
+    stats: Mutex<IntegrityStats>,
+    /// Consecutive faulty frames per stream id (cleared by a clean
+    /// frame) — the quarantine trigger.
+    streaks: Mutex<HashMap<usize, usize>>,
+}
+
+impl FrameGuard {
+    pub fn new(opts: GuardOptions) -> Self {
+        FrameGuard {
+            opts,
+            stats: Mutex::new(IntegrityStats::default()),
+            streaks: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn options(&self) -> GuardOptions {
+        self.opts
+    }
+
+    /// Snapshot of the guard's accounting.
+    pub fn stats(&self) -> IntegrityStats {
+        self.stats.lock().expect("guard stats poisoned").clone()
+    }
+
+    /// Drain the guard's accounting (servers fold it into their own).
+    pub fn take_stats(&self) -> IntegrityStats {
+        std::mem::take(&mut *self.stats.lock().expect("guard stats poisoned"))
+    }
+
+    /// Consecutive faulty frames stream `stream` has delivered (0 after
+    /// any clean frame). The scheduler's quarantine trigger.
+    pub fn consecutive_faults(&self, stream: usize) -> usize {
+        *self
+            .streaks
+            .lock()
+            .expect("guard streaks poisoned")
+            .get(&stream)
+            .unwrap_or(&0)
+    }
+
+    /// Record a scheduler-side quarantine downgrade.
+    pub fn note_quarantined(&self) {
+        self.note(|s| s.quarantined += 1);
+    }
+
+    /// Record a quarantine escalation to shed.
+    pub fn note_shed(&self) {
+        self.note(|s| s.shed += 1);
+    }
+
+    fn note(&self, f: impl FnOnce(&mut IntegrityStats)) {
+        f(&mut self.stats.lock().expect("guard stats poisoned"));
+    }
+
+    fn set_streak(&self, stream: usize, faulty: bool) {
+        let mut m = self.streaks.lock().expect("guard streaks poisoned");
+        if faulty {
+            *m.entry(stream).or_insert(0) += 1;
+        } else {
+            m.remove(&stream);
+        }
+    }
+
+    /// Validate one capture against `session`'s cross-frame state and
+    /// dispatch it per the configured policy. Read-only on the clean
+    /// path (beyond accounting), which is what keeps a guarded clean
+    /// run bit-identical to an unguarded one.
+    pub fn screen(
+        &self,
+        stream: usize,
+        img: &TensorF,
+        pose: &Mat4,
+        session: &StreamSession,
+    ) -> Result<Screened> {
+        let Some(fault) = self.find_fault(img, pose, session) else {
+            self.set_streak(stream, false);
+            self.note(|s| s.validated += 1);
+            return Ok(Screened::Clean);
+        };
+        self.set_streak(stream, true);
+        self.note(|s| {
+            match fault.kind {
+                FaultKind::ShapeMismatch => s.shape_mismatches += 1,
+                FaultKind::NonFinitePose => s.nonfinite_poses += 1,
+                FaultKind::NonRigidPose => s.nonrigid_poses += 1,
+                FaultKind::PoseJump => s.pose_jumps += 1,
+                FaultKind::DegenerateBaseline => s.degenerate_baselines += 1,
+                FaultKind::NonFinitePixel | FaultKind::PixelOutOfRange => {}
+            }
+            s.nonfinite_pixels += fault.nonfinite_pixels;
+            s.oor_pixels += fault.oor_pixels;
+        });
+        match self.opts.policy {
+            GuardPolicy::RejectFrame => {
+                self.note(|s| s.rejected += 1);
+                Err(FrameRejected {
+                    stream,
+                    kind: fault.kind,
+                    detail: fault.detail,
+                }
+                .into())
+            }
+            GuardPolicy::Sanitize
+                if matches!(
+                    fault.kind,
+                    FaultKind::NonFinitePixel | FaultKind::PixelOutOfRange
+                ) =>
+            {
+                self.note(|s| s.sanitized += 1);
+                let bound = self.opts.max_abs_pixel;
+                let img = img.map(|v| {
+                    if v.is_finite() {
+                        v.clamp(-bound, bound)
+                    } else {
+                        0.0
+                    }
+                });
+                Ok(Screened::Sanitized { img, pose: *pose })
+            }
+            // Sanitize with an unsanitizable fault degrades to hold
+            GuardPolicy::HoldLastDepth | GuardPolicy::Sanitize => {
+                self.note(|s| s.held += 1);
+                Ok(Screened::Hold)
+            }
+        }
+    }
+
+    /// Run the checks in fixed order; `None` means the capture is valid.
+    fn find_fault(
+        &self,
+        img: &TensorF,
+        pose: &Mat4,
+        session: &StreamSession,
+    ) -> Option<Fault> {
+        if img.shape() != [1, 3, IMG_H, IMG_W] {
+            return Some(Fault::new(
+                FaultKind::ShapeMismatch,
+                format!(
+                    "image shape {:?} != [1, 3, {IMG_H}, {IMG_W}]",
+                    img.shape()
+                ),
+            ));
+        }
+        if !pose.is_finite() {
+            return Some(Fault::new(
+                FaultKind::NonFinitePose,
+                "pose contains NaN/inf".to_string(),
+            ));
+        }
+        // rigidity subsumes invertibility for a pose, but a numerically
+        // near-singular matrix that still passes the rigidity tolerance
+        // would wreck the sweep grids — check both explicitly
+        if !pose.is_rigid(1e-6) || pose.inverse_checked().is_none() {
+            return Some(Fault::new(
+                FaultKind::NonRigidPose,
+                "pose is not an invertible rigid transform".to_string(),
+            ));
+        }
+        let t = pose.translation();
+        let dist = |o: &Mat4| -> f64 {
+            let u = o.translation();
+            ((t[0] - u[0]).powi(2) + (t[1] - u[1]).powi(2)
+                + (t[2] - u[2]).powi(2))
+            .sqrt()
+        };
+        if let Some(prev) = session.last_pose() {
+            let d = dist(&prev);
+            if d > self.opts.max_jump {
+                return Some(Fault::new(
+                    FaultKind::PoseJump,
+                    format!(
+                        "translation jumped {d:.3} (> {}) since the \
+                         previous frame",
+                        self.opts.max_jump
+                    ),
+                ));
+            }
+        }
+        // zero baseline vs the previous pose or any keyframe: the
+        // plane-sweep has no parallax to triangulate. Only meaningful
+        // once the session has history — the first frame of a stream
+        // has nothing to be degenerate against.
+        let near = session
+            .last_pose()
+            .iter()
+            .chain(session.kb.contents().iter().map(|(p, _)| p))
+            .map(dist)
+            .fold(f64::INFINITY, f64::min);
+        if near < self.opts.min_baseline {
+            return Some(Fault::new(
+                FaultKind::DegenerateBaseline,
+                format!(
+                    "baseline {near:.2e} below {:.2e} (pure rotation or \
+                     stuck capture)",
+                    self.opts.min_baseline
+                ),
+            ));
+        }
+        let mut nonfinite = 0usize;
+        let mut oor = 0usize;
+        for &v in img.data() {
+            if !v.is_finite() {
+                nonfinite += 1;
+            } else if v.abs() > self.opts.max_abs_pixel {
+                oor += 1;
+            }
+        }
+        if nonfinite + oor > 0 {
+            let kind = if nonfinite > 0 {
+                FaultKind::NonFinitePixel
+            } else {
+                FaultKind::PixelOutOfRange
+            };
+            let mut f = Fault::new(
+                kind,
+                format!(
+                    "{nonfinite} non-finite and {oor} out-of-range \
+                     pixel(s) (bound {})",
+                    self.opts.max_abs_pixel
+                ),
+            );
+            f.nonfinite_pixels = nonfinite;
+            f.oor_pixels = oor;
+            return Some(f);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::manifest::Manifest;
+    use crate::model::weights::QuantParams;
+    use crate::util::Rng;
+
+    fn session() -> StreamSession {
+        let manifest = Manifest::synthetic();
+        let qp = QuantParams::synthetic(&manifest, 1);
+        StreamSession::new(0, &qp)
+    }
+
+    fn image(seed: u64) -> TensorF {
+        let mut rng = Rng::new(seed);
+        let n = 3 * IMG_H * IMG_W;
+        TensorF::from_vec(
+            &[1, 3, IMG_H, IMG_W],
+            (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect(),
+        )
+    }
+
+    fn warm_session() -> StreamSession {
+        let mut s = session();
+        let mut p = Mat4::identity();
+        p.0[3] = 0.5;
+        s.pose_prev = Some(p);
+        s.frames_done = 1;
+        s
+    }
+
+    #[test]
+    fn clean_capture_passes_and_counts_validated() {
+        let g = FrameGuard::new(GuardOptions::default());
+        let s = warm_session();
+        let img = image(1);
+        let pose = Mat4::identity();
+        for _ in 0..3 {
+            assert!(matches!(
+                g.screen(0, &img, &pose, &s).unwrap(),
+                Screened::Clean
+            ));
+        }
+        let st = g.stats();
+        assert_eq!(st.validated, 3);
+        assert_eq!(st.faulty(), 0);
+        assert_eq!(g.consecutive_faults(0), 0);
+    }
+
+    #[test]
+    fn each_fault_kind_is_classified() {
+        let g = FrameGuard::new(GuardOptions::with_policy(
+            GuardPolicy::RejectFrame,
+        ));
+        let s = warm_session();
+        let img = image(2);
+        let pose = Mat4::identity();
+        let kind = |img: &TensorF, pose: &Mat4| -> FaultKind {
+            let err = g.screen(0, img, pose, &s).unwrap_err();
+            is_frame_rejected(&err).expect("typed rejection").kind
+        };
+        // shape
+        let bad = TensorF::zeros(&[1, 1, IMG_H, IMG_W]);
+        assert_eq!(kind(&bad, &pose), FaultKind::ShapeMismatch);
+        // non-finite pose
+        let mut p = pose;
+        p.0[5] = f64::NAN;
+        assert_eq!(kind(&img, &p), FaultKind::NonFinitePose);
+        // non-rigid pose (scaled rotation)
+        let mut p = pose;
+        p.0[0] = 2.0;
+        assert_eq!(kind(&img, &p), FaultKind::NonRigidPose);
+        // pose jump
+        let mut p = pose;
+        p.0[3] = 1.0e9;
+        assert_eq!(kind(&img, &p), FaultKind::PoseJump);
+        // degenerate baseline: exactly the previous pose
+        let p = s.last_pose().unwrap();
+        assert_eq!(kind(&img, &p), FaultKind::DegenerateBaseline);
+        // NaN pixels
+        let mut bad = img.clone();
+        bad.data_mut()[7] = f32::NAN;
+        assert_eq!(kind(&bad, &pose), FaultKind::NonFinitePixel);
+        // out-of-range pixels
+        let mut bad = img.clone();
+        bad.data_mut()[7] = 1.0e9;
+        assert_eq!(kind(&bad, &pose), FaultKind::PixelOutOfRange);
+        let st = g.stats();
+        assert_eq!(st.rejected, 7);
+        assert_eq!(st.shape_mismatches, 1);
+        assert_eq!(st.nonfinite_poses, 1);
+        assert_eq!(st.nonrigid_poses, 1);
+        assert_eq!(st.pose_jumps, 1);
+        assert_eq!(st.degenerate_baselines, 1);
+        assert_eq!(st.nonfinite_pixels, 1);
+        assert_eq!(st.oor_pixels, 1);
+        assert_eq!(g.consecutive_faults(0), 7, "streak accumulated");
+    }
+
+    #[test]
+    fn first_frame_has_no_baseline_or_jump_to_violate() {
+        // a cold session has no pose history: identity pose and zero
+        // translation are fine on frame 0
+        let g = FrameGuard::new(GuardOptions::with_policy(
+            GuardPolicy::RejectFrame,
+        ));
+        let s = session();
+        assert!(matches!(
+            g.screen(0, &image(3), &Mat4::identity(), &s).unwrap(),
+            Screened::Clean
+        ));
+    }
+
+    #[test]
+    fn sanitize_repairs_pixels_but_holds_pose_faults() {
+        let g = FrameGuard::new(GuardOptions::with_policy(
+            GuardPolicy::Sanitize,
+        ));
+        let s = warm_session();
+        let mut img = image(4);
+        img.data_mut()[0] = f32::NAN;
+        img.data_mut()[1] = -100.0;
+        let pose = Mat4::identity();
+        match g.screen(0, &img, &pose, &s).unwrap() {
+            Screened::Sanitized { img: fixed, pose: p } => {
+                assert_eq!(fixed.data()[0], 0.0, "NaN replaced");
+                assert_eq!(fixed.data()[1], -8.0, "clamped to bound");
+                assert_eq!(fixed.data()[2], img.data()[2], "rest untouched");
+                assert_eq!(p.0, pose.0);
+            }
+            _ => panic!("pixel fault should sanitize"),
+        }
+        // a pose fault cannot be repaired: degrade to hold
+        let mut p = pose;
+        p.0[5] = f64::NAN;
+        assert!(matches!(
+            g.screen(0, &image(4), &p, &s).unwrap(),
+            Screened::Hold
+        ));
+        let st = g.stats();
+        assert_eq!(st.sanitized, 1);
+        assert_eq!(st.held, 1);
+        assert_eq!(st.nonfinite_pixels, 1);
+        assert_eq!(st.oor_pixels, 1);
+    }
+
+    #[test]
+    fn hold_policy_holds_and_clean_frames_clear_the_streak() {
+        let g = FrameGuard::new(GuardOptions::default());
+        let s = warm_session();
+        let mut bad = image(5);
+        bad.data_mut()[0] = f32::INFINITY;
+        for want in 1..=2 {
+            assert!(matches!(
+                g.screen(7, &bad, &Mat4::identity(), &s).unwrap(),
+                Screened::Hold
+            ));
+            assert_eq!(g.consecutive_faults(7), want);
+        }
+        assert!(matches!(
+            g.screen(7, &image(5), &Mat4::identity(), &s).unwrap(),
+            Screened::Clean
+        ));
+        assert_eq!(g.consecutive_faults(7), 0, "clean frame clears streak");
+        assert_eq!(g.stats().held, 2);
+        // streaks are per stream
+        assert_eq!(g.consecutive_faults(8), 0);
+    }
+
+    #[test]
+    fn take_stats_drains() {
+        let g = FrameGuard::new(GuardOptions::default());
+        let s = warm_session();
+        g.screen(0, &image(6), &Mat4::identity(), &s).unwrap();
+        g.note_quarantined();
+        g.note_shed();
+        let st = g.take_stats();
+        assert_eq!(st.validated, 1);
+        assert_eq!(st.quarantined, 1);
+        assert_eq!(st.shed, 1);
+        assert_eq!(g.stats(), IntegrityStats::default());
+    }
+}

@@ -30,9 +30,39 @@
 //!   `SchedulerStats` counter — is deterministic under chaos faults;
 //!   per-stream outputs stay bit-exact under any admission order
 //!   because sessions mutate only at Commit.
+//! * `guard` — the **Guard layer**: `FrameGuard` validates every
+//!   `(img, pose)` at the ingestion boundary and dispatches invalid
+//!   captures per `GuardPolicy` (reject / hold last depth / sanitize),
+//!   with repeat offenders quarantined through the scheduler.
+//!
+//! # Ingestion contract (PR 10)
+//!
+//! Frames enter the system through `Coordinator::step`,
+//! `StreamServer::step_stream` / `run_round`, and the continuous
+//! scheduler's round forming — all of which step a shared
+//! `PipelineEngine`. When the engine is built with
+//! `PipelineOptions::guard`, every one of those paths screens the
+//! capture *before* the FSM touches it, under one contract:
+//!
+//! * **Clean captures are untouched.** Screening is read-only, so a
+//!   guarded clean run is bit-identical to an unguarded one.
+//! * **Invalid captures never mutate a session.** A held or rejected
+//!   frame produces no cost volume, no keyframe insertion and no
+//!   commit; the session remains bit-identical to one that never saw
+//!   the frame, which is what makes quarantine-to-checkpoint safe: the
+//!   shed checkpoint is always the pre-poison state.
+//! * **Checkpoints refuse poison.** `SessionStore` will not encode a
+//!   session with non-finite state (`StreamSession::is_finite`), so
+//!   even an unguarded NaN can never reach durable storage.
+//!
+//! The pipelined window path (`StreamServer::run_pipelined`) and the
+//! shard router's batch rounds feed frames straight from trusted
+//! benchmark datasets and stay unguarded; guarded serving covers the
+//! solo, lockstep and continuous paths where live sensor input arrives.
 
 pub mod checkpoint;
 pub mod extern_link;
+pub mod guard;
 pub mod pipeline;
 pub mod profiler;
 pub mod scheduler;
@@ -42,6 +72,10 @@ pub mod shard;
 
 pub use checkpoint::SessionStore;
 pub use extern_link::{ExternLink, ExternRecord, ExternStats, Pending};
+pub use guard::{
+    is_frame_rejected, FaultKind, FrameGuard, FrameRejected, GuardOptions,
+    GuardPolicy, Screened,
+};
 pub use pipeline::{
     Coordinator, FrameOutput, FrameStage, PipelineEngine, PipelineOptions,
     RetryPolicy, RoundInFlight, SegmentHandles,

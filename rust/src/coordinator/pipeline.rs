@@ -65,7 +65,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{self, CVD_BODY_K3, N_HYPOTHESES, SW_THREADS};
 use crate::data::manifest::Manifest;
-use crate::metrics::RecoveryStats;
+use crate::metrics::{IntegrityStats, RecoveryStats};
 use crate::model::specs::cvd_carry_name;
 use crate::model::sw;
 use crate::model::weights::QuantParams;
@@ -74,9 +74,10 @@ use crate::poses::Mat4;
 use crate::quant::{dequantize_tensor, quantize_tensor, QTensor};
 use crate::runtime::{HwBackend, HwRuntime, RefBackend, SegmentId, SubmitHandle};
 use crate::tensor::TensorF;
-use crate::util::Rng;
+use crate::util::{Fnv64, Rng};
 
 use super::extern_link::{ExternStats, ExternLink, Pending};
+use super::guard::{FrameGuard, GuardOptions, Screened};
 use super::profiler::{FrameProfile, Lane, Profiler};
 use super::session::StreamSession;
 
@@ -181,6 +182,12 @@ pub struct PipelineOptions {
     /// (and keeps the queued hot path allocation-free); fault-tolerant
     /// serving opts in with e.g. `RetryPolicy::with_attempts(5)`.
     pub retry: RetryPolicy,
+    /// Ingestion guard (PR 10): when set, every `step_session` /
+    /// `step_round` capture is screened by a `FrameGuard` before the
+    /// FSM touches it — see the ingestion contract in the coordinator
+    /// module docs. `None` (the default) serves unguarded; clean
+    /// guarded runs are bit-identical either way.
+    pub guard: Option<GuardOptions>,
 }
 
 impl Default for PipelineOptions {
@@ -190,6 +197,7 @@ impl Default for PipelineOptions {
             sw_threads: SW_THREADS,
             conv_threads: 0,
             retry: RetryPolicy::default(),
+            guard: None,
         }
     }
 }
@@ -462,6 +470,13 @@ pub struct PipelineEngine {
     /// Fault/retry accounting (see [`RetryPolicy`]); drained by
     /// [`PipelineEngine::take_recovery_stats`].
     recovery: Mutex<RecoveryStats>,
+    /// Ingestion guard, present iff `opts.guard` is set. Shared by
+    /// every serving path stepping this engine.
+    guard: Option<FrameGuard>,
+    /// Engine-side integrity accounting (always-on HW-boundary spot
+    /// checks); merged with the guard's in
+    /// [`PipelineEngine::integrity_stats`].
+    integrity: Mutex<IntegrityStats>,
 }
 
 impl PipelineEngine {
@@ -481,6 +496,8 @@ impl PipelineEngine {
             handles,
             opts,
             recovery: Mutex::new(RecoveryStats::default()),
+            guard: opts.guard.map(FrameGuard::new),
+            integrity: Mutex::new(IntegrityStats::default()),
         })
     }
 
@@ -529,6 +546,39 @@ impl PipelineEngine {
         f(&mut self.recovery.lock().expect("recovery stats poisoned"));
     }
 
+    /// The ingestion guard, if this engine was built with one. Serving
+    /// layers that form their own rounds (the continuous scheduler)
+    /// screen captures through it directly.
+    pub fn guard(&self) -> Option<&FrameGuard> {
+        self.guard.as_ref()
+    }
+
+    /// Snapshot of the data-plane integrity accounting: the engine's
+    /// always-on HW-boundary spot checks merged with the guard's
+    /// screening counters (when guarded).
+    pub fn integrity_stats(&self) -> IntegrityStats {
+        let mut s = self.integrity.lock().expect("integrity poisoned").clone();
+        if let Some(g) = &self.guard {
+            s.merge(&g.stats());
+        }
+        s
+    }
+
+    /// Drain the integrity accounting (servers fold it into their own
+    /// running totals).
+    pub fn take_integrity_stats(&self) -> IntegrityStats {
+        let mut s =
+            mem::take(&mut *self.integrity.lock().expect("integrity poisoned"));
+        if let Some(g) = &self.guard {
+            s.merge(&g.take_stats());
+        }
+        s
+    }
+
+    fn note_integrity(&self, f: impl FnOnce(&mut IntegrityStats)) {
+        f(&mut self.integrity.lock().expect("integrity poisoned"));
+    }
+
     /// Run one frame of one stream through the whole FSM.
     pub fn step_session(
         &self,
@@ -550,6 +600,43 @@ impl PipelineEngine {
     }
 
     fn step_inner(
+        &self,
+        session: &mut StreamSession,
+        img: &TensorF,
+        pose: &Mat4,
+        traced: bool,
+    ) -> Result<FrameOutput> {
+        let Some(g) = &self.guard else {
+            return self.run_frame(session, img, pose, traced);
+        };
+        match g.screen(session.id, img, pose, session)? {
+            Screened::Clean => self.run_frame(session, img, pose, traced),
+            Screened::Sanitized { img: fixed, pose: p } => {
+                self.run_frame(session, &fixed, &p, traced)
+            }
+            Screened::Hold => Ok(Self::held_output(session)),
+        }
+    }
+
+    /// The hold disposition's output: the session's previous depth
+    /// re-emitted as this frame's result (O(1) CoW handle clone), with
+    /// an empty profile — the frame never entered the FSM and the
+    /// session is untouched (no commit, no keyframe insertion). Shared
+    /// with the server/scheduler round paths, which skip held members
+    /// out of their rounds.
+    pub(crate) fn held_output(session: &StreamSession) -> FrameOutput {
+        let prof = Profiler::start();
+        let started = prof.origin();
+        FrameOutput {
+            depth: session.last_depth().clone(),
+            profile: prof.finish(),
+            started,
+            trace: None,
+        }
+    }
+
+    /// The unguarded FSM walk (`step_inner` post-screening).
+    fn run_frame(
         &self,
         session: &mut StreamSession,
         img: &TensorF,
@@ -753,13 +840,21 @@ impl PipelineEngine {
             // retry off: the original move-through path, allocation-free
             // when queued (inputs transfer outright, no replay handles)
             return if queued {
-                hw.submit_batch(id, batch)?.wait_batch_timed()
+                let width = batch.len();
+                let (outs, a, b) =
+                    hw.submit_batch(id, batch)?.wait_batch_timed()?;
+                self.check_round_width(hw, id, width, &outs)?;
+                Ok((outs, a, b))
             } else {
                 let refs: Vec<Vec<&QTensor>> =
                     batch.iter().map(|ins| ins.iter().collect()).collect();
+                let pre = Self::batch_digest(&batch);
                 let a = Instant::now();
                 let outs = hw.run_batch(id, &refs)?;
-                Ok((outs, a, Instant::now()))
+                let b = Instant::now();
+                self.check_batch_digest(hw, id, pre, &batch)?;
+                self.check_round_width(hw, id, batch.len(), &outs)?;
+                Ok((outs, a, b))
             };
         }
         let name = hw.segment_desc(id).name.clone();
@@ -776,6 +871,7 @@ impl PipelineEngine {
         batch: &[Vec<QTensor>],
         queued: bool,
     ) -> Result<(Vec<Vec<QTensor>>, Instant, Instant)> {
+        let pre = Self::batch_digest(batch);
         if queued {
             let handle = match hw.submit_batch(id, batch.to_vec()) {
                 Ok(h) => h,
@@ -787,12 +883,15 @@ impl PipelineEngine {
             // deadline-capped wait: a backend that never completes the
             // submission (wedged serve loop, dead worker) surfaces here
             // as a retryable wait fault instead of blocking forever
-            handle.wait_batch_deadline(self.opts.retry.round_timeout).map_err(
-                |e| {
+            let (outs, a, b) = handle
+                .wait_batch_deadline(self.opts.retry.round_timeout)
+                .map_err(|e| {
                     self.note_recovery(|r| r.wait_faults += 1);
                     e
-                },
-            )
+                })?;
+            self.check_batch_digest(hw, id, pre, batch)?;
+            self.check_round_width(hw, id, batch.len(), &outs)?;
+            Ok((outs, a, b))
         } else {
             let refs: Vec<Vec<&QTensor>> =
                 batch.iter().map(|ins| ins.iter().collect()).collect();
@@ -801,8 +900,86 @@ impl PipelineEngine {
                 self.note_recovery(|r| r.wait_faults += 1);
                 e
             })?;
-            Ok((outs, a, Instant::now()))
+            let b = Instant::now();
+            self.check_batch_digest(hw, id, pre, batch)?;
+            self.check_round_width(hw, id, batch.len(), &outs)?;
+            Ok((outs, a, b))
         }
+    }
+
+    /// Fnv64 spot-digest of one quantized tensor: shape, exponent and
+    /// up to 64 stride-sampled elements — cheap enough to stay always
+    /// on, sensitive enough that in-place corruption of a submitted
+    /// input has no quiet place to hide.
+    fn spot_digest(q: &QTensor) -> u64 {
+        let mut h = Fnv64::new();
+        for &d in q.t.shape() {
+            h.write_u64(d as u64);
+        }
+        h.write_i64(q.exp as i64);
+        let data = q.t.data();
+        let step = (data.len() / 64).max(1);
+        for i in (0..data.len()).step_by(step) {
+            h.write(&data[i].to_le_bytes());
+        }
+        h.finish()
+    }
+
+    /// Digest of a whole round's inputs (order-sensitive).
+    fn batch_digest(batch: &[Vec<QTensor>]) -> u64 {
+        let mut h = Fnv64::new();
+        for ins in batch {
+            for q in ins {
+                h.write_u64(Self::spot_digest(q));
+            }
+        }
+        h.finish()
+    }
+
+    /// Post-call half of the input spot-check (PR 10 stage invariant):
+    /// a backend must treat submitted inputs as immutable — sessions
+    /// rely on it for bit-exact retry/replay. A digest mismatch is
+    /// corruption at *this* segment, surfaced here instead of three
+    /// rounds later as a wrong depth.
+    fn check_batch_digest(
+        &self,
+        hw: &dyn HwBackend,
+        id: SegmentId,
+        pre: u64,
+        batch: &[Vec<QTensor>],
+    ) -> Result<()> {
+        self.note_integrity(|s| s.stage_checks += 1);
+        let post = Self::batch_digest(batch);
+        if pre != post {
+            self.note_integrity(|s| s.checksum_mismatches += 1);
+            anyhow::bail!(
+                "integrity: segment {} mutated its submitted inputs \
+                 in place (spot digest {pre:#018x} -> {post:#018x})",
+                hw.segment_desc(id).name
+            );
+        }
+        Ok(())
+    }
+
+    /// The other always-on HW-boundary invariant: a batched call must
+    /// return exactly one output set per submitted stream.
+    fn check_round_width(
+        &self,
+        hw: &dyn HwBackend,
+        id: SegmentId,
+        width: usize,
+        outs: &[Vec<QTensor>],
+    ) -> Result<()> {
+        if outs.len() != width {
+            self.note_integrity(|s| s.checksum_mismatches += 1);
+            anyhow::bail!(
+                "integrity: segment {} returned {} output set(s) for a \
+                 {width}-stream round",
+                hw.segment_desc(id).name,
+                outs.len()
+            );
+        }
+        Ok(())
     }
 
     /// The attempt loop behind every retried HW call: run `attempt`
@@ -1420,6 +1597,11 @@ impl PipelineEngine {
     ) {
         for (t, s) in ts.iter_mut().zip(sessions.iter_mut()) {
             let t0 = t.prof.now();
+            debug_assert_eq!(
+                t.depth.as_ref().map(|d| d.shape().to_vec()),
+                Some(vec![1, 1, config::IMG_H, config::IMG_W]),
+                "commit without a full-resolution depth"
+            );
             // feats[0] is the half-resolution FS feature; CVE only reads
             // feats[1..], so the keyframe buffer takes it without a copy
             s.kb.maybe_insert(t.pose, t.feats.swap_remove(0));
@@ -1594,6 +1776,53 @@ mod tests {
                 "frame {i}: begun/finished round diverged from solo stepping"
             );
         }
+    }
+
+    #[test]
+    fn guarded_clean_step_matches_unguarded_and_hold_skips_commit() {
+        use super::super::guard::GuardPolicy;
+        use crate::data::dataset::Scene;
+        let scene = Scene::synthetic("g", 3, 17);
+        let mut plain = Coordinator::on_ref_backend(31, PipelineOptions::default())
+            .unwrap();
+        let mut guarded = Coordinator::on_ref_backend(
+            31,
+            PipelineOptions {
+                guard: Some(GuardOptions::default()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..3 {
+            let img = scene.normalized_image(i);
+            let a = plain.step(&img, &scene.poses[i]).unwrap();
+            let b = guarded.step(&img, &scene.poses[i]).unwrap();
+            assert_eq!(
+                a.depth.data(),
+                b.depth.data(),
+                "frame {i}: guarded clean serving diverged"
+            );
+        }
+        let st = guarded.engine().integrity_stats();
+        assert_eq!(st.validated, 3);
+        assert_eq!(st.faulty(), 0);
+        assert!(st.stage_checks > 0, "HW-boundary spot checks ran");
+        assert_eq!(st.checksum_mismatches, 0);
+        // a poisoned frame is held: previous depth re-emitted, session
+        // untouched (frames_done unchanged, no keyframe inserted)
+        let before_frames = guarded.frames_done();
+        let before_kb = guarded.session().kb.len();
+        let prev_depth = guarded.session().last_depth().data().to_vec();
+        let mut bad = scene.normalized_image(2);
+        bad.data_mut()[0] = f32::NAN;
+        let held = guarded.step(&bad, &scene.poses[2]).unwrap();
+        assert_eq!(held.depth.data(), &prev_depth[..]);
+        assert_eq!(guarded.frames_done(), before_frames);
+        assert_eq!(guarded.session().kb.len(), before_kb);
+        assert_eq!(guarded.engine().integrity_stats().held, 1);
+        // the unguarded engine reports no screening activity at all
+        let plain_st = plain.engine().integrity_stats();
+        assert_eq!(plain_st.screened(), 0);
     }
 
     #[test]

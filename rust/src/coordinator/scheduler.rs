@@ -57,6 +57,7 @@ use crate::poses::Mat4;
 use crate::tensor::TensorF;
 
 use super::checkpoint::SessionStore;
+use super::guard::{is_frame_rejected, Screened};
 use super::pipeline::{FrameOutput, PipelineEngine, RoundInFlight};
 use super::session::StreamSession;
 
@@ -76,9 +77,13 @@ const LIVELOCK_IDLE_BOUND: usize = 1_000_000;
 pub enum AdmissionPolicy {
     /// Turn the arrival away immediately (it is never served).
     Reject,
-    /// Park the arrival in a FIFO queue; it backfills the next freed
-    /// slot. `deadline_ticks` bounds the wait (0 = wait forever); an
-    /// entry still queued past its deadline is rejected.
+    /// Park the arrival in the admission queue; it backfills the next
+    /// freed slot earliest-deadline-first. `deadline_ticks` bounds the
+    /// wait (0 = wait forever) unless the stream overrides it with
+    /// [`StreamSpec::queue_deadline_ticks`]; an entry still queued past
+    /// its deadline is rejected. With uniform deadlines EDF degenerates
+    /// to FIFO (earlier-queued entries expire earlier), so this is a
+    /// strict generalisation of the PR-8 queue.
     Queue { deadline_ticks: u64 },
     /// Checkpoint the lowest-priority *idle* active stream into the
     /// attached [`SessionStore`] and give the arrival its slot; the
@@ -156,6 +161,11 @@ pub struct StreamSpec {
     /// `arrive_tick + f * frame_interval_ticks` (0 = every frame ready
     /// as soon as its predecessor commits).
     pub frame_interval_ticks: u64,
+    /// Per-stream override of [`AdmissionPolicy::Queue`]'s
+    /// `deadline_ticks` (`Some(0)` = wait forever). Streams with
+    /// tighter deadlines backfill first — this is what makes the EDF
+    /// admission queue observable.
+    pub queue_deadline_ticks: Option<u64>,
 }
 
 /// Where a stream ended up after a continuous drive.
@@ -235,7 +245,9 @@ struct StreamState {
 pub struct RoundScheduler {
     opts: SchedulerOptions,
     streams: Vec<StreamState>,
-    /// FIFO admission queue (indices into `streams`).
+    /// Admission queue (indices into `streams`), drained earliest-
+    /// deadline-first on backfill (insertion order is kept so EDF ties
+    /// and unbounded waiters stay deterministic by stream id).
     queue: VecDeque<usize>,
     now: u64,
     stats: SchedulerStats,
@@ -353,10 +365,21 @@ impl RoundScheduler {
                 events.push(SchedEvent::Rejected(i));
             }
         }
-        // 2. backfill freed slots from the queue, FIFO — waiters beat
-        //    this tick's fresh arrivals
+        // 2. backfill freed slots from the queue, earliest-deadline-
+        //    first — waiters beat this tick's fresh arrivals, and among
+        //    waiters the one whose queue deadline expires soonest goes
+        //    first (unbounded waiters last; ties broken by stream id).
+        //    With uniform deadlines earlier-queued entries expire
+        //    earlier, so EDF reproduces the old FIFO order exactly —
+        //    pinned by `rust/tests/scheduler.rs`.
         while self.active_count() < self.opts.capacity {
-            let Some(i) = self.queue.pop_front() else { break };
+            let Some(pos) = (0..self.queue.len()).min_by_key(|&p| {
+                let i = self.queue[p];
+                (self.streams[i].expires.unwrap_or(u64::MAX), i)
+            }) else {
+                break;
+            };
+            let i = self.queue.remove(pos).expect("position is in range");
             self.admit(i, &mut events);
         }
         // 3. fresh arrivals, in stream order
@@ -377,12 +400,13 @@ impl RoundScheduler {
                     events.push(SchedEvent::Rejected(i));
                 }
                 AdmissionPolicy::Queue { deadline_ticks } => {
+                    let d = self.streams[i]
+                        .spec
+                        .queue_deadline_ticks
+                        .unwrap_or(deadline_ticks);
                     self.streams[i].phase = Phase::Queued;
-                    self.streams[i].expires = if deadline_ticks > 0 {
-                        Some(self.now + deadline_ticks)
-                    } else {
-                        None
-                    };
+                    self.streams[i].expires =
+                        if d > 0 { Some(self.now + d) } else { None };
                     self.queue.push_back(i);
                     self.stats.queued += 1;
                     events.push(SchedEvent::Queued(i));
@@ -527,6 +551,30 @@ impl RoundScheduler {
         events
     }
 
+    /// Guard-driven intervention on a stream feeding poisoned captures
+    /// (PR 10): same degradation ladder as the deadline path — halve
+    /// its service share first (when `degrade_first`), shed it to a
+    /// checkpoint on a repeat offence. Held/rejected frames never
+    /// mutate the session, so the checkpoint the `Shed` event triggers
+    /// is the pre-poison state by construction. No-op unless the
+    /// stream is active and idle (call after `round_finished`).
+    pub fn quarantine(&mut self, i: usize) -> Vec<SchedEvent> {
+        let st = &mut self.streams[i];
+        if st.phase != Phase::Active || st.busy {
+            return Vec::new();
+        }
+        if self.opts.degrade_first && !st.degraded {
+            st.degraded = true;
+            st.miss_streak = 0;
+            self.stats.downgraded += 1;
+            vec![SchedEvent::Downgraded(i)]
+        } else {
+            st.phase = Phase::Shed;
+            self.stats.shed += 1;
+            vec![SchedEvent::Shed(i)]
+        }
+    }
+
     /// Advance the clock one tick without forming a round (nothing
     /// ready: waiting on arrivals, pacing, or in-flight rounds).
     pub fn idle_tick(&mut self) {
@@ -592,6 +640,9 @@ pub struct ContinuousStream<'f> {
     /// Source pacing in ticks between consecutive frames (0 = as fast
     /// as the pipeline commits).
     pub frame_interval_ticks: u64,
+    /// Per-stream queue-wait bound overriding the admission policy's
+    /// (see [`StreamSpec::queue_deadline_ticks`]).
+    pub queue_deadline_ticks: Option<u64>,
 }
 
 impl<'f> ContinuousStream<'f> {
@@ -603,11 +654,20 @@ impl<'f> ContinuousStream<'f> {
             weight: 1,
             arrive_tick: 0,
             frame_interval_ticks: 0,
+            queue_deadline_ticks: None,
         }
     }
 
     pub fn arriving(mut self, tick: u64) -> Self {
         self.arrive_tick = tick;
+        self
+    }
+
+    /// Bound this stream's admission-queue wait (0 = wait forever),
+    /// overriding [`AdmissionPolicy::Queue`]'s default. Tighter
+    /// deadlines backfill first under EDF.
+    pub fn queue_deadline(mut self, ticks: u64) -> Self {
+        self.queue_deadline_ticks = Some(ticks);
         self
     }
 
@@ -627,6 +687,7 @@ impl<'f> ContinuousStream<'f> {
             frames: self.frames.len(),
             arrive_tick: self.arrive_tick,
             frame_interval_ticks: self.frame_interval_ticks,
+            queue_deadline_ticks: self.queue_deadline_ticks,
         }
     }
 }
@@ -754,6 +815,16 @@ pub(crate) fn drive_continuous<'f>(
              session store"
         );
     }
+    // Guarded continuous serving runs lockstep-degenerate only: the
+    // pipelined prologue (`begin_round`) borrows frame tensors for the
+    // flight's lifetime, so a sanitized substitute has nowhere to live.
+    // The budget-1 path screens every capture before it touches the
+    // FSM; deeper budgets must serve unguarded (trusted input).
+    ensure!(
+        engine.guard().is_none() || opts.inflight_budget.max(1) == 1,
+        "guarded continuous serving requires inflight_budget = 1 — \
+         disable PipelineOptions::guard or drop the in-flight budget"
+    );
     let specs: Vec<StreamSpec> = streams.iter().map(|s| s.spec()).collect();
     let mut sched = RoundScheduler::new(&specs, *opts)?;
     let budget = opts.inflight_budget.max(1);
@@ -811,7 +882,34 @@ pub(crate) fn drive_continuous<'f>(
                 }
                 if budget == 1 {
                     sched.note_inflight(1);
-                    let events = sched.round_finished(&members);
+                    let mut events = sched.round_finished(&members);
+                    // quarantine ladder: a stream that has fed
+                    // `quarantine_after` consecutive invalid captures
+                    // is downgraded; at twice that streak it is shed —
+                    // leaving a pre-poison checkpoint, since held and
+                    // rejected frames never mutated its session
+                    if let Some(g) = engine.guard() {
+                        let after = g.options().quarantine_after;
+                        for &m in &members {
+                            let streak =
+                                g.consecutive_faults(streams[m].sid);
+                            if after == 0
+                                || (streak != after && streak != 2 * after)
+                            {
+                                continue;
+                            }
+                            for ev in sched.quarantine(m) {
+                                match ev {
+                                    SchedEvent::Downgraded(_) => {
+                                        g.note_quarantined()
+                                    }
+                                    SchedEvent::Shed(_) => g.note_shed(),
+                                    _ => {}
+                                }
+                                events.push(ev);
+                            }
+                        }
+                    }
                     if let Err(e) = apply_events(
                         &events, streams, slots, &mut store, engine,
                     ) {
@@ -872,21 +970,60 @@ fn step_ready(
     throughput: &mut [StreamThroughput],
     outputs: &mut [Vec<FrameOutput>],
 ) -> Result<()> {
-    let width = members.len();
     let mut frames: Vec<Option<(&TensorF, Mat4)>> = vec![None; slots.len()];
+    let mut substitutes: Vec<Option<(TensorF, Mat4)>> =
+        vec![None; slots.len()];
+    let mut held: Vec<usize> = Vec::new();
     for &m in members {
         frames[m] = Some(streams[m].frames[sched.next_frame(m)]);
     }
+    // Ingestion screening (PR 10): dispatch invalid captures before the
+    // FSM sees them. Held members drop out of the engine round and
+    // re-emit their last depth below; rejected members consume the
+    // frame with no output; sanitized members serve a repaired copy.
+    // Scheduling (form_round / round_finished) is identical either way
+    // — the guard changes what is served, never when.
+    if let Some(g) = engine.guard() {
+        for &m in members {
+            let (img, pose) = frames[m].expect("member has a frame");
+            let sess =
+                slots[m].as_deref().expect("budget-1 slots are all live");
+            match g.screen(streams[m].sid, img, &pose, sess) {
+                Ok(Screened::Clean) => {}
+                Ok(Screened::Sanitized { img, pose }) => {
+                    substitutes[m] = Some((img, pose));
+                }
+                Ok(Screened::Hold) => {
+                    frames[m] = None;
+                    held.push(m);
+                }
+                Err(e) if is_frame_rejected(&e).is_some() => {
+                    frames[m] = None;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        for (f, sub) in frames.iter_mut().zip(&substitutes) {
+            if let Some((img, pose)) = sub {
+                *f = Some((img, *pose));
+            }
+        }
+    }
+    let width = frames.iter().filter(|f| f.is_some()).count();
     let t0 = Instant::now();
-    let outs = {
+    let outs = if width > 0 {
         let mut sessions: Vec<&mut StreamSession> = slots
             .iter_mut()
             .map(|s| &mut **s.as_mut().expect("budget-1 slots are all live"))
             .collect();
         engine.step_round_ready(&mut sessions, &frames)?
+    } else {
+        (0..slots.len()).map(|_| None).collect()
     };
-    let share = t0.elapsed().as_secs_f64() / width as f64;
-    batches.record_round(width);
+    let share = t0.elapsed().as_secs_f64() / width.max(1) as f64;
+    if width > 0 {
+        batches.record_round(width);
+    }
     for (m, out) in outs.into_iter().enumerate() {
         let Some(out) = out else { continue };
         throughput[streams[m].sid].record_frame(
@@ -897,6 +1034,11 @@ fn step_ready(
             out.profile.overlapped_hw(),
         );
         outputs[m].push(out);
+    }
+    for &m in &held {
+        let sess = slots[m].as_deref().expect("held member has a session");
+        throughput[streams[m].sid].record_frame(0.0, 0.0, 0.0, 0.0, 0.0);
+        outputs[m].push(PipelineEngine::held_output(sess));
     }
     Ok(())
 }
@@ -974,6 +1116,7 @@ mod tests {
             frames,
             arrive_tick: 0,
             frame_interval_ticks: 0,
+            queue_deadline_ticks: None,
         }
     }
 
@@ -1061,6 +1204,90 @@ mod tests {
             "bounded queue wait must expire someone: {d:?}"
         );
         assert_eq!(s.stats().queued, 2);
+    }
+
+    #[test]
+    fn queue_backfills_earliest_deadline_first() {
+        // stream 0 holds the only slot for 2 rounds; streams 1 and 2
+        // queue at tick 0. Stream 2 has the tighter per-stream
+        // deadline, so EDF must backfill it before the earlier-id
+        // (FIFO-first) stream 1.
+        let specs = [
+            spec(2),
+            StreamSpec { queue_deadline_ticks: Some(100), ..spec(1) },
+            StreamSpec { queue_deadline_ticks: Some(3), ..spec(1) },
+        ];
+        let mut s = RoundScheduler::new(
+            &specs,
+            SchedulerOptions {
+                capacity: 1,
+                admission: AdmissionPolicy::Queue { deadline_ticks: 10 },
+                ..SchedulerOptions::default()
+            },
+        )
+        .unwrap();
+        let ev = s.poll_admissions();
+        assert_eq!(
+            ev,
+            vec![
+                SchedEvent::Admitted(0),
+                SchedEvent::Queued(1),
+                SchedEvent::Queued(2)
+            ]
+        );
+        for _ in 0..2 {
+            let r = s.form_round();
+            assert_eq!(r, vec![0]);
+            s.round_finished(&r);
+        }
+        // slot frees at tick 2 (before stream 2's expiry at 3): the
+        // tight-deadline waiter wins the backfill despite queueing last
+        let ev = s.poll_admissions();
+        assert_eq!(ev, vec![SchedEvent::Admitted(2)]);
+        run_out(&mut s);
+        assert_eq!(
+            s.dispositions().unwrap(),
+            vec![
+                StreamDisposition::Completed,
+                StreamDisposition::Completed,
+                StreamDisposition::Completed
+            ]
+        );
+    }
+
+    #[test]
+    fn quarantine_downgrades_then_sheds() {
+        let specs = [spec(10), spec(10)];
+        let mut s = RoundScheduler::new(
+            &specs,
+            SchedulerOptions {
+                capacity: 2,
+                degrade_first: true,
+                ..SchedulerOptions::default()
+            },
+        )
+        .unwrap();
+        s.poll_admissions();
+        let r = s.form_round();
+        s.round_finished(&r);
+        // first offence: downgraded (half service share), still active
+        assert_eq!(s.quarantine(0), vec![SchedEvent::Downgraded(0)]);
+        assert!(s.is_active(0));
+        assert_eq!(s.stats().downgraded, 1);
+        // repeat offence: shed
+        assert_eq!(s.quarantine(0), vec![SchedEvent::Shed(0)]);
+        assert!(!s.is_active(0));
+        assert_eq!(s.stats().shed, 1);
+        // further calls (and calls on terminal streams) are no-ops
+        assert!(s.quarantine(0).is_empty());
+        run_out(&mut s);
+        assert_eq!(
+            s.dispositions().unwrap(),
+            vec![
+                StreamDisposition::Shed { served: 1 },
+                StreamDisposition::Completed
+            ]
+        );
     }
 
     #[test]
@@ -1182,6 +1409,7 @@ mod tests {
             frames: 2,
             arrive_tick: 3,
             frame_interval_ticks: 2,
+            queue_deadline_ticks: None,
         }];
         let mut s =
             RoundScheduler::new(&specs, SchedulerOptions::default()).unwrap();

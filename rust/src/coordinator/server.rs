@@ -47,6 +47,7 @@ use crate::tensor::TensorF;
 
 use super::checkpoint::SessionStore;
 use super::extern_link::ExternStats;
+use super::guard::Screened;
 use super::pipeline::{
     FrameOutput, PipelineEngine, PipelineOptions, RoundInFlight,
 };
@@ -281,16 +282,51 @@ impl StreamServer {
         if inputs.is_empty() {
             return Ok(Vec::new());
         }
+        // PR 10 ingestion screening: when the engine is guarded, every
+        // capture is validated against its session *before* round
+        // forming. Sanitized members serve repaired copies; held
+        // members sit the round out with their previous depth re-
+        // emitted (their sessions untouched); a rejection fails the
+        // round with the typed error (strict mode — use `step_stream`
+        // to isolate rejections per stream).
+        let mut substitutes: Vec<Option<(TensorF, Mat4)>> =
+            (0..inputs.len()).map(|_| None).collect();
+        let mut held = vec![false; inputs.len()];
+        if let Some(g) = self.engine.guard() {
+            for (i, &(sid, img, pose)) in inputs.iter().enumerate() {
+                let session = self
+                    .sessions
+                    .get(sid)
+                    .with_context(|| format!("stream {sid} not open"))?;
+                match g.screen(sid, img, pose, session)? {
+                    Screened::Clean => {}
+                    Screened::Sanitized { img, pose } => {
+                        substitutes[i] = Some((img, pose));
+                    }
+                    Screened::Hold => held[i] = true,
+                }
+            }
+        }
         let mut order: Vec<usize> = (0..inputs.len()).collect();
         let rot = self.rotation(inputs.len());
         order.rotate_left(rot);
+        let serve_order: Vec<usize> =
+            order.iter().copied().filter(|&i| !held[i]).collect();
         let bytes0 = self.engine.backend().submit_payload_bytes();
-        let (outs, elapsed) = {
-            let mut sessions =
-                Self::checkout_sessions(&mut self.sessions, &order, inputs)?;
-            let frames: Vec<(&TensorF, Mat4)> = order
+        let (outs, elapsed) = if serve_order.is_empty() {
+            (Vec::new(), 0.0)
+        } else {
+            let mut sessions = Self::checkout_sessions(
+                &mut self.sessions,
+                &serve_order,
+                inputs,
+            )?;
+            let frames: Vec<(&TensorF, Mat4)> = serve_order
                 .iter()
-                .map(|&idx| (inputs[idx].1, *inputs[idx].2))
+                .map(|&idx| match &substitutes[idx] {
+                    Some((img, pose)) => (img, *pose),
+                    None => (inputs[idx].1, *inputs[idx].2),
+                })
                 .collect();
             let t0 = Instant::now();
             let outs = self.engine.step_round(&mut sessions, &frames)?;
@@ -301,16 +337,23 @@ impl StreamServer {
             .backend()
             .submit_payload_bytes()
             .saturating_sub(bytes0);
-        let width = inputs.len();
-        self.batches.record_round(width);
+        if !serve_order.is_empty() {
+            self.batches.record_round(serve_order.len());
+        }
         // serving-thread time is shared by the whole batch: attribute it
         // evenly so aggregate busy-fps stays comparable across modes
-        let share = elapsed / width as f64;
-        let mut result = Vec::with_capacity(width);
-        for (&idx, out) in order.iter().zip(outs) {
+        let share = elapsed / serve_order.len().max(1) as f64;
+        let mut outs = outs.into_iter();
+        let mut result = Vec::with_capacity(inputs.len());
+        for &idx in &order {
             let sid = inputs[idx].0;
+            let out = if held[idx] {
+                PipelineEngine::held_output(&self.sessions[sid])
+            } else {
+                outs.next().expect("one output per served frame")
+            };
             self.throughput[sid].record_frame(
-                share,
+                if held[idx] { 0.0 } else { share },
                 out.profile.hw_busy(),
                 out.profile.sw_busy(),
                 out.profile.overlapped_sw(),
@@ -595,6 +638,13 @@ impl StreamServer {
         self.engine.backend().supervisor_stats()
     }
 
+    /// Data-plane integrity accounting (PR 10): ingestion screening
+    /// dispositions plus the engine's always-on HW-boundary spot
+    /// checks. All-zero screening counters on an unguarded server.
+    pub fn integrity_stats(&self) -> crate::metrics::IntegrityStats {
+        self.engine.integrity_stats()
+    }
+
     /// Human-readable per-stream + aggregate throughput table.
     pub fn report(&self) -> String {
         let mut out = String::from(
@@ -699,6 +749,32 @@ impl StreamServer {
                 sup.heartbeat_misses,
                 sup.deadline_expiries,
                 sup.downtime_seconds,
+            ));
+        }
+        // gated on screening activity (not `any()`): the always-on
+        // stage checks alone must not change an unguarded report
+        let integ = self.integrity_stats();
+        if integ.screened() > 0 || integ.checksum_mismatches > 0 {
+            out.push_str(&format!(
+                "integrity: {} screened ({} sanitized / {} held / {} \
+                 rejected), {} quarantined, {} shed, faults: {} px-nan, \
+                 {} px-range, {} shape, {} pose-nan, {} pose-rigid, {} \
+                 baseline, {} jump; {} stage checks, {} mismatches\n",
+                integ.screened(),
+                integ.sanitized,
+                integ.held,
+                integ.rejected,
+                integ.quarantined,
+                integ.shed,
+                integ.nonfinite_pixels,
+                integ.oor_pixels,
+                integ.shape_mismatches,
+                integ.nonfinite_poses,
+                integ.nonrigid_poses,
+                integ.degenerate_baselines,
+                integ.pose_jumps,
+                integ.stage_checks,
+                integ.checksum_mismatches,
             ));
         }
         out

@@ -112,6 +112,23 @@ impl StreamSession {
         self.pose_prev
     }
 
+    /// Whether every float in the session's cross-frame state is
+    /// finite. Quantized fields (`h`, `c`, keyframe features) are i16
+    /// and finite by construction; the poisonable carriers are the
+    /// full-resolution depth and the stored poses. The checkpoint
+    /// encoder refuses sessions where this is false — a NaN-poisoned
+    /// frame must never reach durable storage (PR 10 guard contract).
+    pub fn is_finite(&self) -> bool {
+        if !self.depth_full.data().iter().all(|v| v.is_finite()) {
+            return false;
+        }
+        match self.pose_prev {
+            Some(p) if !p.is_finite() => return false,
+            _ => {}
+        }
+        self.kb.contents().iter().all(|(pose, _)| pose.is_finite())
+    }
+
     /// Times this session was handed between shards (survives `reset`).
     pub fn migrations(&self) -> usize {
         self.migrations
@@ -322,6 +339,24 @@ mod tests {
         assert_eq!(s.id, 3, "reset keeps the stream id");
         assert_eq!(s.last_pose(), None);
         assert_eq!(s.migrations(), 1, "migrations survive reset");
+    }
+
+    #[test]
+    fn is_finite_flags_poisoned_state() {
+        let manifest = Manifest::synthetic();
+        let qp = QuantParams::synthetic(&manifest, 1);
+        let mut s = StreamSession::new(0, &qp);
+        assert!(s.is_finite(), "fresh session is finite");
+        s.depth_full.data_mut()[3] = f32::NAN;
+        assert!(!s.is_finite(), "NaN depth is flagged");
+        s.depth_full.data_mut()[3] = 1.0;
+        let mut bad = Mat4::identity();
+        bad.0[3] = f64::INFINITY;
+        s.pose_prev = Some(bad);
+        assert!(!s.is_finite(), "non-finite pose_prev is flagged");
+        s.pose_prev = Some(Mat4::identity());
+        assert!(s.kb.maybe_insert(bad, s.h.clone()));
+        assert!(!s.is_finite(), "non-finite keyframe pose is flagged");
     }
 
     #[test]

@@ -386,6 +386,18 @@ impl ShardRouter {
         total
     }
 
+    /// Fleet-wide data-plane integrity accounting (PR 10): every
+    /// shard engine's guard screening + stage invariant counters,
+    /// merged. All-zero unless shards were built with
+    /// `PipelineOptions::guard` (stage spot-checks still count).
+    pub fn integrity_stats(&self) -> crate::metrics::IntegrityStats {
+        let mut total = crate::metrics::IntegrityStats::default();
+        for shard in &self.shards {
+            total.merge(&shard.engine.integrity_stats());
+        }
+        total
+    }
+
     /// Fleet-wide supervision accounting: router-level failover-replay
     /// counts merged with every process-isolated backend's supervisor
     /// counters (in-process backends contribute nothing).
@@ -1313,6 +1325,30 @@ impl ShardRouter {
                 sup.deadline_expiries,
                 sup.failover_replays,
                 sup.downtime_seconds,
+            ));
+        }
+        let integ = self.integrity_stats();
+        if integ.screened() > 0 || integ.checksum_mismatches > 0 {
+            out.push_str(&format!(
+                "integrity: {} screened ({} sanitized / {} held / {} \
+                 rejected), {} quarantined, {} shed, faults: {} px-nan, \
+                 {} px-range, {} shape, {} pose-nan, {} pose-rigid, {} \
+                 baseline, {} jump; {} stage checks, {} mismatches\n",
+                integ.screened(),
+                integ.sanitized,
+                integ.held,
+                integ.rejected,
+                integ.quarantined,
+                integ.shed,
+                integ.nonfinite_pixels,
+                integ.oor_pixels,
+                integ.shape_mismatches,
+                integ.nonfinite_poses,
+                integ.nonrigid_poses,
+                integ.degenerate_baselines,
+                integ.pose_jumps,
+                integ.stage_checks,
+                integ.checksum_mismatches,
             ));
         }
         out

@@ -106,6 +106,11 @@ impl Scene {
             let mut p = Mat4::identity();
             p.0[3] = tx;
             p.0[7] = 0.02 * (i % 3) as f64;
+            debug_assert!(p.is_finite(), "synthetic pose {i} is non-finite");
+            debug_assert!(
+                p.is_rigid(1e-9),
+                "synthetic pose {i} is not a rigid transform"
+            );
             poses.push(p);
         }
         Scene { name: name.to_string(), frames, depths, poses }

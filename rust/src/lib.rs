@@ -113,6 +113,19 @@
 //!   (`ShardRouter::on_worker_processes`, `StreamServer::on_worker_process`;
 //!   `metrics::SupervisorStats` accounts it, `rust/tests/supervision.rs`
 //!   pins it — including a fuzzed frame codec).
+//! * **Guard** (`coordinator::guard`, PR 10) — data-plane integrity:
+//!   [`coordinator::FrameGuard`] screens every `(img, pose)` capture at
+//!   the ingestion boundary (shape, finiteness, rigid-transform and
+//!   baseline checks) and dispatches invalid ones per
+//!   [`coordinator::GuardPolicy`] — reject with a typed error, hold the
+//!   last depth, or sanitize — while repeat offenders are quarantined
+//!   through the scheduler's downgrade-then-shed ladder to a pre-poison
+//!   checkpoint. Cheap always-on spot-checksums guard the HW
+//!   submit/wait boundary, `runtime::ChaosSource` injects seeded input
+//!   faults, `SessionStore` refuses non-finite state,
+//!   `metrics::IntegrityStats` accounts it all, and
+//!   `rust/tests/integrity.rs` pins it (guarded clean serving stays
+//!   bit-identical to unguarded).
 //!
 //! # Data plane (PR 5)
 //!

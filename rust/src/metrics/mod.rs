@@ -469,6 +469,101 @@ impl SchedulerStats {
     }
 }
 
+/// Data-plane integrity accounting (PR 10): every frame the guard layer
+/// (`coordinator::guard::FrameGuard`) screened at the ingestion
+/// boundary, by disposition and by fault kind, plus the engine's
+/// always-on per-stage spot checks. Kept by the guard and the
+/// `PipelineEngine`, merged upward and surfaced through
+/// `StreamServer::report` / `ShardRouter::report` — a server that
+/// silently holds or sanitizes its way through a poisoned sensor still
+/// shows the poison in its report.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IntegrityStats {
+    /// Frames that passed every ingestion check and were served as-is.
+    pub validated: usize,
+    /// Faulty frames served after clamp/replace (`GuardPolicy::Sanitize`).
+    pub sanitized: usize,
+    /// Faulty frames answered with the stream's previous depth, session
+    /// state untouched (`GuardPolicy::HoldLastDepth`).
+    pub held: usize,
+    /// Faulty frames refused outright (`GuardPolicy::RejectFrame`, or an
+    /// unsanitizable fault on a cold session).
+    pub rejected: usize,
+    /// Streams downgraded through the scheduler after a consecutive-fault
+    /// streak reached the quarantine threshold.
+    pub quarantined: usize,
+    /// Quarantined streams shed to their pre-poison checkpoint after the
+    /// streak doubled the threshold.
+    pub shed: usize,
+    /// NaN/Inf pixels seen across all faulty frames.
+    pub nonfinite_pixels: usize,
+    /// Finite pixels outside the guard's magnitude bound, across all
+    /// faulty frames.
+    pub oor_pixels: usize,
+    /// Frames whose tensor shape disagreed with the serving contract.
+    pub shape_mismatches: usize,
+    /// Frames with a NaN/Inf pose entry.
+    pub nonfinite_poses: usize,
+    /// Frames whose pose was finite but not a proper rigid transform
+    /// (or not invertible).
+    pub nonrigid_poses: usize,
+    /// Frames whose pose left no usable baseline against the keyframe
+    /// buffer / previous pose (pure rotation, stuck frame).
+    pub degenerate_baselines: usize,
+    /// Frames whose pose teleported further than the guard's jump bound
+    /// from the previous pose.
+    pub pose_jumps: usize,
+    /// Per-stage invariant spot checks the engine executed at HW
+    /// submit/wait boundaries (always on, guard or no guard).
+    pub stage_checks: u64,
+    /// Spot checks that caught a corrupted tensor (a backend mutating
+    /// its read-only inputs, or an impossible output shape).
+    pub checksum_mismatches: usize,
+}
+
+impl IntegrityStats {
+    /// Frames that failed at least one ingestion check, by disposition.
+    pub fn faulty(&self) -> usize {
+        self.sanitized + self.held + self.rejected
+    }
+
+    /// Frames the guard screened (clean or faulty). Gates the report
+    /// line: the engine's always-on spot checks alone don't add a line
+    /// to an unguarded server's report, but a single screened frame —
+    /// or a caught corruption — does.
+    pub fn screened(&self) -> usize {
+        self.validated + self.faulty()
+    }
+
+    /// Fold another accounting into this one (guard + engine totals
+    /// merge into the server's; shard engines into the router's).
+    pub fn merge(&mut self, other: &IntegrityStats) {
+        self.validated += other.validated;
+        self.sanitized += other.sanitized;
+        self.held += other.held;
+        self.rejected += other.rejected;
+        self.quarantined += other.quarantined;
+        self.shed += other.shed;
+        self.nonfinite_pixels += other.nonfinite_pixels;
+        self.oor_pixels += other.oor_pixels;
+        self.shape_mismatches += other.shape_mismatches;
+        self.nonfinite_poses += other.nonfinite_poses;
+        self.nonrigid_poses += other.nonrigid_poses;
+        self.degenerate_baselines += other.degenerate_baselines;
+        self.pose_jumps += other.pose_jumps;
+        self.stage_checks += other.stage_checks;
+        self.checksum_mismatches += other.checksum_mismatches;
+    }
+
+    /// Whether any integrity activity happened at all. Note the
+    /// engine's always-on spot checks trip this too — report gating
+    /// uses [`IntegrityStats::screened`] instead so unguarded serving
+    /// reports stay unchanged.
+    pub fn any(&self) -> bool {
+        *self != IntegrityStats::default()
+    }
+}
+
 /// Load-imbalance ratio of a shard fleet: max per-shard busy time over
 /// the fleet mean. 1.0 is perfectly balanced; the router's rebalancer
 /// fires when this exceeds its threshold. 0.0 for an idle fleet (no
@@ -723,6 +818,45 @@ mod tests {
         assert_eq!(a.max_inflight, 2);
         assert_eq!(a.backpressure_stalls, 6);
         assert!(a.any());
+    }
+
+    #[test]
+    fn integrity_stats_merge_and_gate() {
+        let mut a = IntegrityStats::default();
+        assert!(!a.any(), "fresh stats report no activity");
+        assert_eq!(a.faulty(), 0);
+        assert_eq!(a.screened(), 0);
+        let b = IntegrityStats {
+            validated: 10,
+            sanitized: 2,
+            held: 1,
+            rejected: 1,
+            quarantined: 1,
+            shed: 1,
+            nonfinite_pixels: 2,
+            oor_pixels: 1,
+            degenerate_baselines: 1,
+            stage_checks: 40,
+            ..Default::default()
+        };
+        assert!(b.any());
+        assert_eq!(b.faulty(), 4);
+        assert_eq!(b.screened(), 14);
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.validated, 20);
+        assert_eq!(a.faulty(), 8);
+        assert_eq!(a.quarantined, 2);
+        assert_eq!(a.shed, 2);
+        assert_eq!(a.nonfinite_pixels, 4);
+        assert_eq!(a.stage_checks, 80);
+        assert_eq!(a.checksum_mismatches, 0);
+        assert!(a.any());
+        // spot checks alone trip any() but not the report gate
+        let engine_only =
+            IntegrityStats { stage_checks: 8, ..Default::default() };
+        assert!(engine_only.any());
+        assert_eq!(engine_only.screened(), 0);
     }
 
     #[test]

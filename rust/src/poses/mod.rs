@@ -75,6 +75,106 @@ impl Mat4 {
     pub fn translation(&self) -> [f64; 3] {
         [self.at(0, 3), self.at(1, 3), self.at(2, 3)]
     }
+
+    /// Every entry is a finite number (no NaN/Inf). A pose failing this
+    /// poisons every warp grid built from it; the guard layer
+    /// (`coordinator::guard`) checks it at the ingestion boundary.
+    pub fn is_finite(&self) -> bool {
+        self.0.iter().all(|v| v.is_finite())
+    }
+
+    /// General 4x4 inverse via Gauss-Jordan with partial pivoting.
+    /// Returns `None` for non-finite or (numerically) singular
+    /// matrices instead of emitting a garbage inverse — the checked
+    /// counterpart of [`Mat4::rigid_inverse`], which silently assumes
+    /// rigidity.
+    pub fn inverse_checked(&self) -> Option<Mat4> {
+        if !self.is_finite() {
+            return None;
+        }
+        // augmented [self | I], reduced in place
+        let mut a = self.0;
+        let mut inv = Mat4::identity().0;
+        for col in 0..4 {
+            // partial pivot: largest |entry| on or below the diagonal
+            let pivot_row = (col..4)
+                .max_by(|&r1, &r2| {
+                    a[r1 * 4 + col]
+                        .abs()
+                        .total_cmp(&a[r2 * 4 + col].abs())
+                })
+                .expect("non-empty row range");
+            if a[pivot_row * 4 + col].abs() < 1e-12 {
+                return None; // singular to working precision
+            }
+            if pivot_row != col {
+                for c in 0..4 {
+                    a.swap(pivot_row * 4 + c, col * 4 + c);
+                    inv.swap(pivot_row * 4 + c, col * 4 + c);
+                }
+            }
+            let p = a[col * 4 + col];
+            for c in 0..4 {
+                a[col * 4 + c] /= p;
+                inv[col * 4 + c] /= p;
+            }
+            for r in 0..4 {
+                if r == col {
+                    continue;
+                }
+                let f = a[r * 4 + col];
+                if f == 0.0 {
+                    continue;
+                }
+                for c in 0..4 {
+                    a[r * 4 + c] -= f * a[col * 4 + c];
+                    inv[r * 4 + c] -= f * inv[col * 4 + c];
+                }
+            }
+        }
+        Some(Mat4(inv))
+    }
+
+    /// Is this a valid rigid transform `[R|t; 0 0 0 1]` to tolerance
+    /// `tol`: finite, affine bottom row, orthonormal rotation block
+    /// (`R'R == I`) with `det(R) == +1` (proper — no reflection)?
+    /// `rigid_inverse`, the warp grids and the cost volume all assume
+    /// exactly this; feeding them anything else silently produces
+    /// geometric garbage, which is why the guard layer validates it.
+    pub fn is_rigid(&self, tol: f64) -> bool {
+        if !self.is_finite() {
+            return false;
+        }
+        for (c, want) in [(0, 0.0), (1, 0.0), (2, 0.0), (3, 1.0)] {
+            if (self.at(3, c) - want).abs() > tol {
+                return false;
+            }
+        }
+        // R'R == I
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut acc = 0.0;
+                for k in 0..3 {
+                    acc += self.at(k, i) * self.at(k, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                if (acc - want).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        // proper rotation: det(R) == +1 (orthonormality alone admits
+        // reflections, which flip the sweep geometry)
+        let det = self.at(0, 0)
+            * (self.at(1, 1) * self.at(2, 2) - self.at(1, 2) * self.at(2, 1))
+            - self.at(0, 1)
+                * (self.at(1, 0) * self.at(2, 2)
+                    - self.at(1, 2) * self.at(2, 0))
+            + self.at(0, 2)
+                * (self.at(1, 0) * self.at(2, 1)
+                    - self.at(1, 1) * self.at(2, 0));
+        (det - 1.0).abs() <= tol
+    }
 }
 
 /// Combined translation + rotation distance used by the keyframe buffer:
@@ -215,6 +315,104 @@ mod tests {
                 assert!((id.at(r, c) - want).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn is_finite_flags_nan_and_inf() {
+        assert!(Mat4::identity().is_finite());
+        let mut p = rot_z(0.3);
+        p.0[3] = 1.25;
+        assert!(p.is_finite());
+        p.0[7] = f64::NAN;
+        assert!(!p.is_finite());
+        p.0[7] = f64::INFINITY;
+        assert!(!p.is_finite());
+    }
+
+    #[test]
+    fn inverse_checked_matches_rigid_inverse_on_rigid_poses() {
+        let mut p = rot_z(0.7);
+        p.0[3] = 1.5;
+        p.0[7] = -0.25;
+        p.0[11] = 2.0;
+        let inv = p.inverse_checked().expect("rigid pose is invertible");
+        let fast = p.rigid_inverse();
+        for i in 0..16 {
+            assert!((inv.0[i] - fast.0[i]).abs() < 1e-12, "entry {i}");
+        }
+        // and it is a true two-sided inverse
+        let id = p.matmul(&inv);
+        for r in 0..4 {
+            for c in 0..4 {
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((id.at(r, c) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_checked_refuses_singular_and_nonfinite() {
+        // rank-deficient: two identical rows
+        let mut sing = Mat4::identity();
+        sing.0[0] = 1.0;
+        sing.0[4] = 1.0;
+        sing.0[5] = 0.0;
+        sing.0[1] = 0.0;
+        // row 1 == row 0 now
+        assert!(sing.inverse_checked().is_none());
+        assert!(Mat4([0.0; 16]).inverse_checked().is_none());
+        let mut nan = Mat4::identity();
+        nan.0[10] = f64::NAN;
+        assert!(nan.inverse_checked().is_none());
+    }
+
+    #[test]
+    fn inverse_checked_handles_permutation_pivoting() {
+        // zero on the leading diagonal forces a row swap
+        let mut p = Mat4([0.0; 16]);
+        p.0[1] = 1.0; // row 0: e_y
+        p.0[4] = 1.0; // row 1: e_x
+        p.0[10] = 1.0;
+        p.0[15] = 1.0;
+        let inv = p.inverse_checked().expect("permutation is invertible");
+        let id = p.matmul(&inv);
+        for r in 0..4 {
+            for c in 0..4 {
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((id.at(r, c) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn is_rigid_accepts_rigid_rejects_everything_else() {
+        let tol = 1e-9;
+        assert!(Mat4::identity().is_rigid(tol));
+        let mut p = rot_z(1.1);
+        p.0[3] = 4.0;
+        p.0[7] = -2.0;
+        p.0[11] = 0.5;
+        assert!(p.is_rigid(tol), "rotation + translation is rigid");
+        // scaled rotation block: orthonormality broken
+        let mut scaled = rot_z(0.4);
+        for r in 0..3 {
+            for c in 0..3 {
+                scaled.0[r * 4 + c] *= 1.75;
+            }
+        }
+        assert!(!scaled.is_rigid(tol));
+        // reflection: orthonormal but det == -1
+        let mut refl = Mat4::identity();
+        refl.0[0] = -1.0;
+        assert!(!refl.is_rigid(tol));
+        // projective bottom row
+        let mut proj = Mat4::identity();
+        proj.0[12] = 0.01;
+        assert!(!proj.is_rigid(tol));
+        // non-finite
+        let mut nan = Mat4::identity();
+        nan.0[5] = f64::NAN;
+        assert!(!nan.is_rigid(tol));
     }
 
     #[test]

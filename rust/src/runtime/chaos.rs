@@ -45,7 +45,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::manifest::{Manifest, SegmentDesc};
+use crate::poses::Mat4;
 use crate::quant::QTensor;
+use crate::tensor::TensorF;
 use crate::util::Rng;
 
 use super::{HwBackend, HwCompletion, SegmentId, SubmitHandle};
@@ -286,13 +288,215 @@ impl HwBackend for ChaosBackend {
     }
 }
 
+/// Knobs of one input-side chaos schedule. All rates are probabilities
+/// in [0, 1] drawn independently per `(stream, frame)` in the fixed
+/// order stuck → dropout → NaN splat → bit flip → pose jump; the
+/// **first applicable hit wins**, so a frame carries at most one fault
+/// kind and seeded fault counts are exactly pinnable by tests.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosSourceOptions {
+    /// Seed of the deterministic fault schedule.
+    pub seed: u64,
+    /// Probability the sensor repeats the previous `(frame, pose)`
+    /// verbatim — a stuck capture, i.e. a zero-baseline pose pair.
+    /// Inapplicable on a stream's first frame (no previous capture);
+    /// the draw falls through to the next fault kind.
+    pub stuck_rate: f64,
+    /// Probability a contiguous pixel band saturates wildly out of
+    /// range (a sensor dropout burst).
+    pub dropout_rate: f64,
+    /// Probability a handful of pixels become NaN (corrupted capture).
+    pub nan_rate: f64,
+    /// Probability one pixel gets an exponent bit flipped in transit
+    /// (bit rot on the capture path).
+    pub flip_rate: f64,
+    /// Probability the pose translation jumps by an absurd distance
+    /// (a tracking glitch).
+    pub pose_jump_rate: f64,
+    /// Stop injecting after this many faults (transient-then-heal);
+    /// `None` never heals.
+    pub heal_after: Option<usize>,
+}
+
+impl Default for ChaosSourceOptions {
+    fn default() -> Self {
+        ChaosSourceOptions {
+            seed: 0,
+            stuck_rate: 0.0,
+            dropout_rate: 0.0,
+            nan_rate: 0.0,
+            flip_rate: 0.0,
+            pose_jump_rate: 0.0,
+            heal_after: None,
+        }
+    }
+}
+
+/// Seeded deterministic frame/pose fault injector — the input-side
+/// mirror of [`ChaosBackend`]. Where `ChaosBackend` corrupts the
+/// submit/await path, `ChaosSource` corrupts what the sensor hands the
+/// serving loop *before* ingestion, producing exactly the fault classes
+/// the guard layer (`coordinator::guard`) screens for.
+///
+/// Determinism: each `(stream, frame)` pair seeds its own PRNG, so the
+/// schedule is independent of interleaving — a round-robin serving run
+/// and a solo replay of one stream poison the very same frames. Faults
+/// never mutate the caller's tensors: [`ChaosSource::corrupt`] returns
+/// fresh copies, leaving clean references computable from the same
+/// inputs.
+pub struct ChaosSource {
+    opts: ChaosSourceOptions,
+    /// Faults injected so far (gates `heal_after`).
+    faults: AtomicUsize,
+    stuck: AtomicUsize,
+    dropouts: AtomicUsize,
+    nan_splats: AtomicUsize,
+    bit_flips: AtomicUsize,
+    pose_jumps: AtomicUsize,
+}
+
+impl ChaosSource {
+    pub fn new(opts: ChaosSourceOptions) -> Self {
+        ChaosSource {
+            opts,
+            faults: AtomicUsize::new(0),
+            stuck: AtomicUsize::new(0),
+            dropouts: AtomicUsize::new(0),
+            nan_splats: AtomicUsize::new(0),
+            bit_flips: AtomicUsize::new(0),
+            pose_jumps: AtomicUsize::new(0),
+        }
+    }
+
+    /// Frames replayed verbatim from the previous capture.
+    pub fn stuck_injected(&self) -> usize {
+        self.stuck.load(Ordering::Relaxed)
+    }
+
+    /// Frames with an out-of-range dropout band.
+    pub fn dropouts_injected(&self) -> usize {
+        self.dropouts.load(Ordering::Relaxed)
+    }
+
+    /// Frames with NaN-splatted pixels.
+    pub fn nan_splats_injected(&self) -> usize {
+        self.nan_splats.load(Ordering::Relaxed)
+    }
+
+    /// Frames with a flipped pixel bit.
+    pub fn bit_flips_injected(&self) -> usize {
+        self.bit_flips.load(Ordering::Relaxed)
+    }
+
+    /// Frames whose pose translation jumped.
+    pub fn pose_jumps_injected(&self) -> usize {
+        self.pose_jumps.load(Ordering::Relaxed)
+    }
+
+    /// Total injected faults across all kinds.
+    pub fn faults_injected(&self) -> usize {
+        self.faults.load(Ordering::Relaxed)
+    }
+
+    /// Whether the schedule still injects (false once healed).
+    fn armed(&self) -> bool {
+        match self.opts.heal_after {
+            Some(n) => self.faults.load(Ordering::Relaxed) < n,
+            None => true,
+        }
+    }
+
+    fn note(&self, kind: &AtomicUsize) {
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        kind.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Possibly corrupt one capture. `stream`/`frame` identify the
+    /// draw (the schedule is keyed by the pair, not by call order);
+    /// `prev` is the stream's previous *corrupted* capture, needed for
+    /// stuck-frame replay. Returns the capture to ingest — a fresh
+    /// copy even when clean, so callers can treat it uniformly.
+    pub fn corrupt(
+        &self,
+        stream: usize,
+        frame: usize,
+        img: &TensorF,
+        pose: &Mat4,
+        prev: Option<(&TensorF, &Mat4)>,
+    ) -> (TensorF, Mat4) {
+        let mut rng = Rng::new(
+            self.opts
+                .seed
+                .wrapping_add((stream as u64).wrapping_mul(0x9E37))
+                .wrapping_add((frame as u64).wrapping_mul(0x51C7)),
+        );
+        // all five draws happen unconditionally so the schedule for a
+        // given (stream, frame) never depends on the configured rates'
+        // short-circuiting — only on the seed
+        let stuck = (rng.unit_f32() as f64) < self.opts.stuck_rate;
+        let dropout = (rng.unit_f32() as f64) < self.opts.dropout_rate;
+        let nan = (rng.unit_f32() as f64) < self.opts.nan_rate;
+        let flip = (rng.unit_f32() as f64) < self.opts.flip_rate;
+        let jump = (rng.unit_f32() as f64) < self.opts.pose_jump_rate;
+        if self.armed() {
+            if stuck {
+                if let Some((pi, pp)) = prev {
+                    self.note(&self.stuck);
+                    return (pi.clone(), *pp);
+                }
+                // first frame of the stream: stuck is inapplicable,
+                // fall through to the remaining kinds
+            }
+            if dropout {
+                self.note(&self.dropouts);
+                let mut out = img.clone();
+                let n = out.len();
+                let span = (n / 16).max(1);
+                let start = rng.below((n - span + 1) as u64) as usize;
+                for v in out.data_mut().iter_mut().skip(start).take(span) {
+                    *v = 1.0e9;
+                }
+                return (out, *pose);
+            }
+            if nan {
+                self.note(&self.nan_splats);
+                let mut out = img.clone();
+                let n = out.len();
+                let data = out.data_mut();
+                for _ in 0..4 {
+                    data[rng.below(n as u64) as usize] = f32::NAN;
+                }
+                return (out, *pose);
+            }
+            if flip {
+                self.note(&self.bit_flips);
+                let mut out = img.clone();
+                let n = out.len();
+                let i = rng.below(n as u64) as usize;
+                let data = out.data_mut();
+                // flipping an exponent bit scales the pixel by 2^64 or
+                // produces inf/NaN — either way the guard's range or
+                // finiteness check catches it
+                data[i] = f32::from_bits(data[i].to_bits() ^ 0x4000_0000);
+                return (out, *pose);
+            }
+            if jump {
+                self.note(&self.pose_jumps);
+                let mut p = *pose;
+                p.0[3] += 1.0e6;
+                return (img.clone(), p);
+            }
+        }
+        (img.clone(), *pose)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config;
     use crate::quant::quantize_tensor;
     use crate::runtime::RefBackend;
-    use crate::tensor::TensorF;
 
     fn image(seed: u64) -> TensorF {
         let mut rng = Rng::new(seed);
@@ -431,6 +635,164 @@ mod tests {
         let got = be.submit(id, vec![img]).unwrap().wait().unwrap();
         assert_eq!(got[0].t.data(), want[0].t.data());
         assert_eq!(be.stalls_injected(), 1);
+    }
+
+    #[test]
+    fn chaos_source_same_seed_same_schedule() {
+        let opts = ChaosSourceOptions {
+            seed: 11,
+            nan_rate: 0.2,
+            pose_jump_rate: 0.2,
+            dropout_rate: 0.2,
+            ..Default::default()
+        };
+        let run = |opts: ChaosSourceOptions| -> Vec<Vec<f32>> {
+            let src = ChaosSource::new(opts);
+            let img = image(2);
+            let pose = Mat4::identity();
+            (0..12)
+                .map(|f| {
+                    let (i, p) = src.corrupt(0, f, &img, &pose, None);
+                    let mut sig: Vec<f32> = i.data().to_vec();
+                    sig.extend(p.0.iter().map(|v| *v as f32));
+                    sig
+                })
+                .collect()
+        };
+        let a = run(opts);
+        let b = run(opts);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            // NaN-aware bit equality
+            let xb: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "seeded source schedule is deterministic");
+        }
+        // keyed by (stream, frame), not call order: stream 3 frame 7
+        // draws the same fate no matter what ran before it
+        let s1 = ChaosSource::new(opts);
+        let s2 = ChaosSource::new(opts);
+        let img = image(2);
+        let pose = Mat4::identity();
+        for f in 0..7 {
+            s1.corrupt(3, f, &img, &pose, None);
+        }
+        let (i1, p1) = s1.corrupt(3, 7, &img, &pose, None);
+        let (i2, p2) = s2.corrupt(3, 7, &img, &pose, None);
+        let b1: Vec<u32> = i1.data().iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = i2.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2);
+        assert_eq!(
+            p1.0.map(f64::to_bits),
+            p2.0.map(f64::to_bits),
+            "draws are order-independent"
+        );
+    }
+
+    #[test]
+    fn chaos_source_kinds_and_heal_bound() {
+        // zero rates: transparent, returns verbatim copies
+        let src = ChaosSource::new(ChaosSourceOptions::default());
+        let img = image(4);
+        let pose = Mat4::identity();
+        let (i, p) = src.corrupt(0, 0, &img, &pose, None);
+        assert_eq!(i.data(), img.data());
+        assert_eq!(p.0, pose.0);
+        assert_eq!(src.faults_injected(), 0);
+
+        // stuck replays the previous capture verbatim, but is
+        // inapplicable without one (falls through to clean here)
+        let src = ChaosSource::new(ChaosSourceOptions {
+            seed: 1,
+            stuck_rate: 1.0,
+            ..Default::default()
+        });
+        let (i0, _) = src.corrupt(0, 0, &img, &pose, None);
+        assert_eq!(i0.data(), img.data());
+        assert_eq!(src.stuck_injected(), 0);
+        let prev_img = image(5);
+        let mut prev_pose = Mat4::identity();
+        prev_pose.0[3] = 0.5;
+        let (i1, p1) = src.corrupt(0, 1, &img, &pose, Some((&prev_img, &prev_pose)));
+        assert_eq!(i1.data(), prev_img.data());
+        assert_eq!(p1.0, prev_pose.0);
+        assert_eq!(src.stuck_injected(), 1);
+
+        // NaN splat poisons pixels; pose jump displaces translation
+        let src = ChaosSource::new(ChaosSourceOptions {
+            seed: 2,
+            nan_rate: 1.0,
+            ..Default::default()
+        });
+        let (i, p) = src.corrupt(0, 0, &img, &pose, None);
+        assert!(i.data().iter().any(|v| v.is_nan()));
+        assert_eq!(p.0, pose.0);
+        assert_eq!(src.nan_splats_injected(), 1);
+        let src = ChaosSource::new(ChaosSourceOptions {
+            seed: 2,
+            pose_jump_rate: 1.0,
+            ..Default::default()
+        });
+        let (i, p) = src.corrupt(0, 0, &img, &pose, None);
+        assert_eq!(i.data(), img.data());
+        assert!(p.0[3] > 1.0e5, "translation jumped");
+        assert_eq!(src.pose_jumps_injected(), 1);
+
+        // dropout saturates a band out of range without NaNs
+        let src = ChaosSource::new(ChaosSourceOptions {
+            seed: 3,
+            dropout_rate: 1.0,
+            ..Default::default()
+        });
+        let (i, _) = src.corrupt(0, 0, &img, &pose, None);
+        let hot = i.data().iter().filter(|v| **v == 1.0e9).count();
+        assert_eq!(hot, img.len() / 16, "contiguous dropout band");
+
+        // first hit wins: with every rate at 1.0 exactly one kind
+        // fires per frame (dropout, since stuck is inapplicable)
+        let src = ChaosSource::new(ChaosSourceOptions {
+            seed: 4,
+            stuck_rate: 1.0,
+            dropout_rate: 1.0,
+            nan_rate: 1.0,
+            flip_rate: 1.0,
+            pose_jump_rate: 1.0,
+            ..Default::default()
+        });
+        src.corrupt(0, 0, &img, &pose, None);
+        assert_eq!(src.faults_injected(), 1);
+        assert_eq!(src.dropouts_injected(), 1);
+        assert_eq!(src.nan_splats_injected(), 0);
+
+        // heal_after bounds the schedule exactly
+        let src = ChaosSource::new(ChaosSourceOptions {
+            seed: 5,
+            nan_rate: 1.0,
+            heal_after: Some(2),
+            ..Default::default()
+        });
+        for f in 0..8 {
+            src.corrupt(0, f, &img, &pose, None);
+        }
+        assert_eq!(src.faults_injected(), 2, "exactly heal_after faults");
+        let (i, _) = src.corrupt(0, 8, &img, &pose, None);
+        assert_eq!(i.data(), img.data(), "healed schedule is transparent");
+
+        // bit flip perturbs exactly one pixel
+        let src = ChaosSource::new(ChaosSourceOptions {
+            seed: 6,
+            flip_rate: 1.0,
+            ..Default::default()
+        });
+        let (i, _) = src.corrupt(0, 0, &img, &pose, None);
+        let diffs = i
+            .data()
+            .iter()
+            .zip(img.data())
+            .filter(|(a, b)| a.to_bits() != b.to_bits())
+            .count();
+        assert_eq!(diffs, 1, "one flipped pixel");
+        assert_eq!(src.bit_flips_injected(), 1);
     }
 
     #[test]

@@ -174,7 +174,7 @@ pub mod ipc;
 pub mod ref_backend;
 pub mod supervisor;
 
-pub use chaos::{ChaosBackend, ChaosOptions};
+pub use chaos::{ChaosBackend, ChaosOptions, ChaosSource, ChaosSourceOptions};
 pub use ipc::IpcBackend;
 pub use ref_backend::RefBackend;
 pub use supervisor::{is_backend_down, BackendDown, Supervisor, SupervisorOptions};

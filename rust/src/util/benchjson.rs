@@ -79,6 +79,15 @@ pub struct BenchRecord {
     /// Supervised worker restarts during the measurement. Only
     /// meaningful alongside `workers`.
     pub restarts: Option<usize>,
+    /// Data-plane-integrity records (PR 10, `benches/serve.rs`):
+    /// wall-time ratio of guarded over unguarded serving of the same
+    /// clean workload (1.0 = free screening). `None` for unguarded
+    /// records.
+    pub guard_overhead: Option<f64>,
+    /// Streams quarantined (downgraded or shed by the guard ladder)
+    /// during the measurement. Only meaningful alongside
+    /// `guard_overhead`.
+    pub quarantined: Option<usize>,
 }
 
 impl BenchRecord {
@@ -114,6 +123,8 @@ impl BenchRecord {
             workers: None,
             ipc_overhead: None,
             restarts: None,
+            guard_overhead: None,
+            quarantined: None,
         }
     }
 }
@@ -187,6 +198,12 @@ pub fn to_json(records: &[BenchRecord]) -> String {
         }
         if let Some(n) = r.restarts {
             let _ = write!(out, ", \"restarts\": {n}");
+        }
+        if let Some(g) = r.guard_overhead {
+            let _ = write!(out, ", \"guard_overhead\": {g:.4}");
+        }
+        if let Some(q) = r.quarantined {
+            let _ = write!(out, ", \"quarantined\": {q}");
         }
         let _ = write!(
             out,
@@ -310,6 +327,7 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
         let (mut ckpt_bytes, mut restore_s, mut retries) = (None, None, None);
         let (mut fill, mut miss_rate, mut shed) = (None, None, None);
         let (mut workers, mut ipc_overhead, mut restarts) = (None, None, None);
+        let (mut guard_overhead, mut quarantined) = (None, None);
         loop {
             let key = p.string()?;
             p.eat(b':')?;
@@ -332,6 +350,8 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
                 "workers" => workers = Some(p.number()? as usize),
                 "ipc_overhead" => ipc_overhead = Some(p.number()?),
                 "restarts" => restarts = Some(p.number()? as usize),
+                "guard_overhead" => guard_overhead = Some(p.number()?),
+                "quarantined" => quarantined = Some(p.number()? as usize),
                 other => bail!("unknown bench-record key '{other}'"),
             }
             match p.peek() {
@@ -359,6 +379,8 @@ pub fn from_json(text: &str) -> Result<Vec<BenchRecord>> {
             workers,
             ipc_overhead,
             restarts,
+            guard_overhead,
+            quarantined,
         });
         match p.peek() {
             Some(b',') => p.eat(b',')?,
@@ -550,6 +572,21 @@ pub fn validate(path: &Path) -> Result<usize> {
             "op '{}': supervision fields without a workers field",
             r.op
         );
+        // data-plane-integrity records (PR 10): the overhead ratio is
+        // finite and non-negative, and a quarantine count only means
+        // something next to a guarded measurement
+        if let Some(g) = r.guard_overhead {
+            anyhow::ensure!(
+                g.is_finite() && g >= 0.0,
+                "op '{}': bad guard_overhead {g}",
+                r.op
+            );
+        }
+        anyhow::ensure!(
+            r.quarantined.is_none() || r.guard_overhead.is_some(),
+            "op '{}': quarantined without a guard_overhead field",
+            r.op
+        );
     }
     Ok(records.len())
 }
@@ -736,6 +773,37 @@ mod tests {
         // so is an overhead ratio with no fleet size
         let mut bad = rec("x", 1, 1.0);
         bad.ipc_overhead = Some(1.1);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn guard_fields_roundtrip_and_validate() {
+        let mut r = rec("serve_guarded", 1, 100.0);
+        r.guard_overhead = Some(1.0213);
+        r.quarantined = Some(1);
+        let parsed = from_json(&to_json(&[r.clone()])).unwrap();
+        assert_eq!(parsed, vec![r.clone()]);
+        // unguarded records keep emitting the old schema
+        let bare = to_json(&[rec("a", 1, 1.0)]);
+        assert!(!bare.contains("guard_overhead"));
+        assert!(!bare.contains("quarantined"));
+        let dir = std::env::temp_dir()
+            .join(format!("fadec_benchjson_guard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        let _ = std::fs::remove_file(&path);
+        merge_into(&path, &[r]).unwrap();
+        assert_eq!(validate(&path).unwrap(), 1);
+        // a non-finite overhead ratio is schema drift
+        let mut bad = rec("x", 1, 1.0);
+        bad.guard_overhead = Some(f64::NAN);
+        std::fs::write(&path, to_json(&[bad])).unwrap();
+        assert!(validate(&path).is_err());
+        // so is a quarantine count with no guarded measurement
+        let mut bad = rec("x", 1, 1.0);
+        bad.quarantined = Some(3);
         std::fs::write(&path, to_json(&[bad])).unwrap();
         assert!(validate(&path).is_err());
         std::fs::remove_file(&path).unwrap();

@@ -1,0 +1,449 @@
+//! Data-plane integrity tests (PR 10): the ingestion guard screens
+//! every `(img, pose)` capture before it reaches the FSM, and the pins
+//! here are the layer's contract:
+//!
+//! * a guarded **clean** run is bit-identical to an unguarded one —
+//!   screening is read-only on the clean path;
+//! * each [`GuardPolicy`] disposition behaves exactly as specified
+//!   under hand-traceable poison (typed rejection, hold-last-depth
+//!   with zero session mutation, sanitize == hand-repaired input);
+//! * a stream feeding consecutive poison is quarantined through the
+//!   continuous scheduler (downgrade, then shed) while its neighbors
+//!   stay bit-identical to solo serving, and the shed checkpoint is
+//!   the *pre-poison* state — restorable and resumable bit-exactly;
+//! * a NaN-poisoned session can never reach a checkpoint: the store
+//!   refuses non-finite session state outright.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fadec::config::{IMG_H, IMG_W};
+use fadec::coordinator::{
+    is_frame_rejected, ContinuousStream, Coordinator, FaultKind,
+    GuardOptions, GuardPolicy, PipelineOptions, SchedulerOptions,
+    SessionStore, StreamDisposition, StreamServer,
+};
+use fadec::data::dataset::Scene;
+use fadec::poses::Mat4;
+use fadec::runtime::{ChaosSource, ChaosSourceOptions};
+use fadec::tensor::TensorF;
+
+const SEED: u64 = 7;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fadec_integ_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn make_scenes(n_streams: usize, frames: usize, base_seed: u64) -> Vec<Scene> {
+    (0..n_streams)
+        .map(|s| {
+            Scene::synthetic(&format!("sc-{s}"), frames, base_seed + s as u64)
+        })
+        .collect()
+}
+
+fn render(scenes: &[Scene], frames: usize) -> Vec<Vec<TensorF>> {
+    scenes
+        .iter()
+        .map(|sc| (0..frames).map(|i| sc.normalized_image(i)).collect())
+        .collect()
+}
+
+/// Fault-free single-stream reference on a clean unguarded backend.
+fn solo_run(scene: &Scene, n: usize) -> Vec<TensorF> {
+    let mut coord =
+        Coordinator::on_ref_backend(SEED, PipelineOptions::default()).unwrap();
+    (0..n)
+        .map(|i| {
+            let img = scene.normalized_image(i);
+            coord.step(&img, &scene.poses[i]).unwrap().depth
+        })
+        .collect()
+}
+
+fn guarded_server(n: usize, opts: GuardOptions) -> StreamServer {
+    let mut server = StreamServer::on_ref_backend(
+        SEED,
+        PipelineOptions { guard: Some(opts), ..Default::default() },
+    )
+    .unwrap();
+    for _ in 0..n {
+        server.open_stream();
+    }
+    server
+}
+
+#[test]
+fn guarded_clean_serving_is_bit_identical_to_unguarded() {
+    let (n, frames) = (3, 4);
+    let scenes = make_scenes(n, frames, 210);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let imgs = render(&scenes, frames);
+    let mut plain =
+        StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+            .unwrap();
+    for _ in 0..n {
+        plain.open_stream();
+    }
+    let mut guarded = guarded_server(n, GuardOptions::default());
+    for f in 0..frames {
+        let inputs: Vec<(usize, &TensorF, &Mat4)> = (0..n)
+            .map(|s| (s, &imgs[s][f], &scenes[s].poses[f]))
+            .collect();
+        let a = plain.run_round(&inputs).unwrap();
+        let b = guarded.run_round(&inputs).unwrap();
+        for ((sa, oa), (sb, ob)) in a.iter().zip(&b) {
+            assert_eq!(sa, sb, "round order must match");
+            assert_eq!(
+                oa.depth.data(),
+                ob.depth.data(),
+                "stream {sa} frame {f}: guarded != unguarded"
+            );
+            assert_eq!(
+                oa.depth.data(),
+                solo[*sa][f].data(),
+                "stream {sa} frame {f}: diverged from solo"
+            );
+        }
+    }
+    // screening was read-only: every frame validated, none touched
+    let st = guarded.integrity_stats();
+    assert_eq!(st.validated, n * frames);
+    assert_eq!(st.faulty(), 0);
+    assert_eq!(st.screened(), n * frames);
+    // the always-on stage spot checks ran, and caught nothing, on both
+    let pt = plain.integrity_stats();
+    assert!(st.stage_checks > 0, "guarded spot checks ran");
+    assert!(pt.stage_checks > 0, "unguarded spot checks ran");
+    assert_eq!(st.checksum_mismatches, 0);
+    assert_eq!(pt.checksum_mismatches, 0);
+    // report gating: a screened frame earns the line, spot checks alone
+    // don't
+    assert!(guarded.report().contains("integrity:"));
+    assert!(!plain.report().contains("integrity:"));
+}
+
+#[test]
+fn reject_policy_is_typed_and_leaves_the_session_untouched() {
+    let frames = 4;
+    let scene = &make_scenes(1, frames, 220)[0];
+    let solo = solo_run(scene, frames);
+    let imgs: Vec<TensorF> =
+        (0..frames).map(|i| scene.normalized_image(i)).collect();
+    let mut server =
+        guarded_server(1, GuardOptions::with_policy(GuardPolicy::RejectFrame));
+    for f in 0..2 {
+        let out = server.step_stream(0, &imgs[f], &scene.poses[f]).unwrap();
+        assert_eq!(out.depth.data(), solo[f].data(), "clean frame {f}");
+    }
+    let mut bad = imgs[2].clone();
+    bad.data_mut()[11] = f32::NAN;
+    let err = server.step_stream(0, &bad, &scene.poses[2]).unwrap_err();
+    let rej = is_frame_rejected(&err).expect("typed rejection");
+    assert_eq!(rej.stream, 0);
+    assert_eq!(rej.kind, FaultKind::NonFinitePixel);
+    assert!(err.to_string().contains("rejected"), "err: {err}");
+    // the rejected frame never entered the FSM: the session is exactly
+    // where frame 1 left it, so the clean suffix matches solo
+    assert_eq!(server.session(0).frames_done(), 2);
+    for f in 2..frames {
+        let out = server.step_stream(0, &imgs[f], &scene.poses[f]).unwrap();
+        assert_eq!(out.depth.data(), solo[f].data(), "post-reject frame {f}");
+    }
+    let st = server.integrity_stats();
+    assert_eq!(st.rejected, 1);
+    assert_eq!(st.validated, frames);
+    assert_eq!(st.nonfinite_pixels, 1);
+}
+
+#[test]
+fn hold_policy_reemits_last_depth_and_forgets_the_frame() {
+    let frames = 4;
+    let scene = &make_scenes(1, frames, 230)[0];
+    let solo = solo_run(scene, frames);
+    let imgs: Vec<TensorF> =
+        (0..frames).map(|i| scene.normalized_image(i)).collect();
+    let mut server = guarded_server(1, GuardOptions::default());
+    for f in 0..2 {
+        let out = server.step_stream(0, &imgs[f], &scene.poses[f]).unwrap();
+        assert_eq!(out.depth.data(), solo[f].data(), "clean frame {f}");
+    }
+    // poison 1: a NaN pixel — held, previous depth re-emitted
+    let mut bad = imgs[2].clone();
+    bad.data_mut()[0] = f32::NAN;
+    let out = server.step_stream(0, &bad, &scene.poses[2]).unwrap();
+    assert_eq!(out.depth.data(), solo[1].data(), "held = previous depth");
+    // poison 2: a teleporting pose on a clean image — also held
+    let mut jump = scene.poses[2];
+    jump.0[3] += 1.0e9;
+    let out = server.step_stream(0, &imgs[2], &jump).unwrap();
+    assert_eq!(out.depth.data(), solo[1].data(), "held = previous depth");
+    // the held frames left no trace: serving the clean suffix now is
+    // bit-identical to a run that never saw the poison
+    assert_eq!(server.session(0).frames_done(), 2);
+    for f in 2..frames {
+        let out = server.step_stream(0, &imgs[f], &scene.poses[f]).unwrap();
+        assert_eq!(out.depth.data(), solo[f].data(), "post-hold frame {f}");
+    }
+    let st = server.integrity_stats();
+    assert_eq!(st.held, 2);
+    assert_eq!(st.validated, frames);
+    assert_eq!(st.nonfinite_pixels, 1);
+    assert_eq!(st.pose_jumps, 1);
+}
+
+#[test]
+fn sanitize_policy_matches_a_hand_repaired_run() {
+    let frames = 4;
+    let scene = &make_scenes(1, frames, 240)[0];
+    let imgs: Vec<TensorF> =
+        (0..frames).map(|i| scene.normalized_image(i)).collect();
+    // poison frame 1: one NaN, two out-of-range pixels
+    let mut poisoned = imgs[1].clone();
+    poisoned.data_mut()[3] = f32::NAN;
+    poisoned.data_mut()[5] = 100.0;
+    poisoned.data_mut()[9] = -1.0e9;
+    // the guard's repair spec: NaN -> 0, clamp to +-max_abs_pixel
+    let mut repaired = imgs[1].clone();
+    repaired.data_mut()[3] = 0.0;
+    repaired.data_mut()[5] = 8.0;
+    repaired.data_mut()[9] = -8.0;
+    let mut sanitizing =
+        guarded_server(1, GuardOptions::with_policy(GuardPolicy::Sanitize));
+    let mut plain =
+        StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+            .unwrap();
+    plain.open_stream();
+    for f in 0..frames {
+        let fed = if f == 1 { &poisoned } else { &imgs[f] };
+        let spec = if f == 1 { &repaired } else { &imgs[f] };
+        let got =
+            sanitizing.step_stream(0, fed, &scene.poses[f]).unwrap();
+        let want = plain.step_stream(0, spec, &scene.poses[f]).unwrap();
+        assert_eq!(
+            got.depth.data(),
+            want.depth.data(),
+            "frame {f}: sanitize != hand-repaired input"
+        );
+    }
+    let st = sanitizing.integrity_stats();
+    assert_eq!(st.sanitized, 1);
+    assert_eq!(st.validated, frames - 1);
+    assert_eq!(st.nonfinite_pixels, 1);
+    assert_eq!(st.oor_pixels, 2);
+}
+
+#[test]
+fn chaos_source_poison_is_deterministic_and_heals() {
+    // nan_rate 1.0 with heal_after 2 is a fully hand-traceable
+    // schedule: frames 0 and 1 are NaN-splatted, everything after is
+    // clean — independent of the seed
+    let frames = 5;
+    let scene = &make_scenes(1, frames, 250)[0];
+    let imgs: Vec<TensorF> =
+        (0..frames).map(|i| scene.normalized_image(i)).collect();
+    let copts = ChaosSourceOptions {
+        seed: 5,
+        nan_rate: 1.0,
+        heal_after: Some(2),
+        ..Default::default()
+    };
+    let drive = || -> (Vec<TensorF>, fadec::metrics::IntegrityStats) {
+        let src = ChaosSource::new(copts);
+        let mut server = guarded_server(1, GuardOptions::default());
+        let mut prev: Option<(TensorF, Mat4)> = None;
+        let mut outs = Vec::with_capacity(frames);
+        for f in 0..frames {
+            let (img, pose) = src.corrupt(
+                0,
+                f,
+                &imgs[f],
+                &scene.poses[f],
+                prev.as_ref().map(|(i, p)| (i, p)),
+            );
+            outs.push(server.step_stream(0, &img, &pose).unwrap().depth);
+            prev = Some((img, pose));
+        }
+        assert_eq!(src.faults_injected(), 2, "schedule heals after 2");
+        assert_eq!(src.nan_splats_injected(), 2);
+        (outs, server.integrity_stats())
+    };
+    let (a, sa) = drive();
+    let (b, sb) = drive();
+    for (f, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.data(), y.data(), "frame {f}: runs diverged");
+    }
+    assert_eq!(sa, sb, "identical accounting across identical runs");
+    assert_eq!(sa.held, 2);
+    assert_eq!(sa.validated, frames - 2);
+    assert!(sa.nonfinite_pixels >= 2, "each splat had >= 1 NaN pixel");
+    // the held prefix mutated nothing: the clean suffix is the
+    // session's *first* committed frames, bit-identical to a fresh run
+    // fed only that suffix
+    let mut fresh =
+        Coordinator::on_ref_backend(SEED, PipelineOptions::default()).unwrap();
+    for f in 2..frames {
+        let want = fresh.step(&imgs[f], &scene.poses[f]).unwrap();
+        assert_eq!(
+            a[f].data(),
+            want.depth.data(),
+            "frame {f}: poisoned prefix left a trace"
+        );
+    }
+}
+
+#[test]
+fn poisoned_stream_is_quarantined_shed_pre_poison_and_neighbors_unharmed() {
+    // The tentpole pin. Stream 0 feeds 2 clean frames then 8 all-NaN
+    // captures; stream 1 is clean throughout. With the default ladder
+    // (quarantine_after = 3, degrade_first) the trace is exact:
+    // consecutive-fault streak 3 downgrades stream 0, streak 6 sheds it
+    // — after 8 served frames (2 clean + 6 held). Held frames never
+    // mutate the session, so the shed checkpoint is the state after
+    // frame 1: restorable, and resuming the clean suffix from it is
+    // bit-identical to solo serving. Stream 1 must not notice any of it.
+    let dir = tmp_dir("quarantine");
+    let frames = 6;
+    let scenes = make_scenes(2, frames, 260);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let imgs = render(&scenes, frames);
+    let nan_img = imgs[0][2].map(|_| f32::NAN);
+    let mut feed0: Vec<(&TensorF, Mat4)> =
+        (0..2).map(|i| (&imgs[0][i], scenes[0].poses[i])).collect();
+    for _ in 0..8 {
+        feed0.push((&nan_img, scenes[0].poses[2]));
+    }
+    let feed1: Vec<(&TensorF, Mat4)> =
+        (0..frames).map(|i| (&imgs[1][i], scenes[1].poses[i])).collect();
+    let mut server = guarded_server(2, GuardOptions::default());
+    let store = SessionStore::open(
+        &dir,
+        2,
+        server.engine().backend().manifest(),
+        server.engine().qp().as_ref(),
+    )
+    .unwrap();
+    server.attach_session_store(store);
+    let streams =
+        vec![ContinuousStream::new(0, feed0), ContinuousStream::new(1, feed1)];
+    let out = server
+        .run_continuous(&streams, &SchedulerOptions::default())
+        .unwrap();
+    assert_eq!(
+        out.dispositions,
+        vec![
+            StreamDisposition::Shed { served: 8 },
+            StreamDisposition::Completed,
+        ]
+    );
+    assert_eq!(out.stats.downgraded, 1, "streak 3 downgraded stream 0");
+    assert_eq!(out.stats.shed, 1, "streak 6 shed stream 0");
+    // stream 0: clean prefix exact, then its frame-1 depth re-emitted
+    // for every held capture
+    assert_eq!(out.outputs[0].len(), 8);
+    for f in 0..2 {
+        assert_eq!(out.outputs[0][f].depth.data(), solo[0][f].data());
+    }
+    for f in 2..8 {
+        assert_eq!(
+            out.outputs[0][f].depth.data(),
+            solo[0][1].data(),
+            "held frame {f} re-emits the last committed depth"
+        );
+    }
+    // stream 1 never noticed: bit-identical to solo serving
+    assert_eq!(out.outputs[1].len(), frames);
+    for f in 0..frames {
+        assert_eq!(
+            out.outputs[1][f].depth.data(),
+            solo[1][f].data(),
+            "neighbor frame {f} perturbed by the quarantine"
+        );
+    }
+    let st = server.integrity_stats();
+    assert_eq!(st.validated, 2 + frames);
+    assert_eq!(st.held, 6);
+    assert_eq!(st.quarantined, 1);
+    assert_eq!(st.shed, 1);
+    assert_eq!(st.nonfinite_pixels, 6 * 3 * IMG_H * IMG_W);
+    assert!(server.report().contains("quarantined"));
+    // the shed checkpoint is the pre-poison state: frames_done = 2,
+    // finite, and resuming the clean suffix from it matches solo
+    let qp = Arc::clone(server.engine().qp());
+    let store = server.session_store_mut().unwrap();
+    assert!(store.has_checkpoint(0), "shed left a checkpoint");
+    let mut resumed = store.load(0, &qp).unwrap();
+    assert_eq!(resumed.frames_done(), 2, "checkpoint predates the poison");
+    assert!(resumed.is_finite());
+    for f in 2..frames {
+        let got = server
+            .engine()
+            .step_session(&mut resumed, &imgs[0][f], &scenes[0].poses[f])
+            .unwrap();
+        assert_eq!(
+            got.depth.data(),
+            solo[0][f].data(),
+            "resumed frame {f} diverged from solo"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_poisoned_session_can_never_reach_a_checkpoint() {
+    let dir = tmp_dir("refuse");
+    let frames = 3;
+    let scene = &make_scenes(1, frames, 270)[0];
+    let imgs: Vec<TensorF> =
+        (0..frames).map(|i| scene.normalized_image(i)).collect();
+    // unguarded server: a NaN pose sails into the session state
+    let mut server =
+        StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+            .unwrap();
+    server.open_stream();
+    let mut store = SessionStore::open(
+        &dir,
+        2,
+        server.engine().backend().manifest(),
+        server.engine().qp().as_ref(),
+    )
+    .unwrap();
+    server.step_stream(0, &imgs[0], &scene.poses[0]).unwrap();
+    store.save(server.session(0)).unwrap();
+    assert!(store.has_checkpoint(0), "clean state checkpoints fine");
+    let mut nan_pose = scene.poses[1];
+    nan_pose.0[7] = f64::NAN;
+    server.step_stream(0, &imgs[1], &nan_pose).unwrap();
+    assert!(!server.session(0).is_finite(), "the poison committed");
+    let err = store.save(server.session(0)).unwrap_err();
+    assert!(
+        err.to_string().contains("non-finite"),
+        "store must refuse poisoned state: {err}"
+    );
+    // the earlier clean checkpoint is untouched by the refused save
+    let qp = Arc::clone(server.engine().qp());
+    let restored = store.load(0, &qp).unwrap();
+    assert_eq!(restored.frames_done(), 1);
+    assert!(restored.is_finite());
+    // guarded counterpart: the same feed holds the poisoned frame, the
+    // session stays finite, and checkpointing keeps working
+    let mut guarded = guarded_server(1, GuardOptions::default());
+    guarded.step_stream(0, &imgs[0], &scene.poses[0]).unwrap();
+    guarded.step_stream(0, &imgs[1], &nan_pose).unwrap();
+    assert!(guarded.session(0).is_finite(), "guard kept the poison out");
+    let mut store2 = SessionStore::open(
+        &dir.join("guarded"),
+        2,
+        guarded.engine().backend().manifest(),
+        guarded.engine().qp().as_ref(),
+    )
+    .unwrap();
+    store2.save(guarded.session(0)).unwrap();
+    assert!(store2.has_checkpoint(0));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -5,6 +5,7 @@
 //! allocating / solo specification over randomized shapes, exponents,
 //! batch widths and thread counts — mirroring `conv_exact.rs`.
 
+use fadec::config::{A_QMAX, A_QMIN};
 use fadec::ops::{
     conv2d_q_packed, conv2d_q_packed_batch, conv2d_q_ref, layer_norm,
     layer_norm_into, resize_bilinear, resize_bilinear_into, upsample_nearest2x_i16,
@@ -13,7 +14,8 @@ use fadec::ops::{
 };
 use fadec::quant::{
     add_q, add_q_arena, add_q_into, concat_q, concat_q_arena, mul_q, mul_q_arena,
-    mul_q_into, requant, requant_arena, requant_into, requant_owned, QTensor,
+    mul_q_into, quantize_f32, quantize_slice, quantize_tensor, requant,
+    requant_arena, requant_into, requant_owned, QTensor,
 };
 use fadec::runtime::{HwBackend, RefBackend};
 use fadec::tensor::{Tensor, TensorF, TensorI16, TensorI32, TensorI8};
@@ -311,5 +313,53 @@ fn ref_backend_run_batch_matches_run_for_every_segment() {
                 assert_eq!(s.exp, g.exp);
             }
         }
+    }
+}
+
+#[test]
+fn quantize_never_launders_nonfinite_floats_into_i16() {
+    // PR 10 pin: the quantizer's saturating casts are the last line of
+    // defense between a poisoned float and a "valid" i16 activation.
+    // The spec: NaN collapses to 0, +/-inf saturate to the activation
+    // range bounds, and the slice/tensor fast paths agree with the
+    // scalar spec element-for-element — no silent poison either way.
+    for exp in [-8, -3, 0, 3, 8] {
+        assert_eq!(quantize_f32(f32::NAN, exp), 0, "NaN -> 0 at exp {exp}");
+        assert_eq!(
+            quantize_f32(f32::INFINITY, exp),
+            A_QMAX as i16,
+            "+inf saturates at exp {exp}"
+        );
+        assert_eq!(
+            quantize_f32(f32::NEG_INFINITY, exp),
+            A_QMIN as i16,
+            "-inf saturates at exp {exp}"
+        );
+        // magnitudes far beyond the representable range saturate too
+        assert_eq!(quantize_f32(1.0e30, exp), A_QMAX as i16);
+        assert_eq!(quantize_f32(-1.0e30, exp), A_QMIN as i16);
+    }
+    let mut rng = Rng::new(33);
+    let mut vals: Vec<f32> =
+        (0..512).map(|_| rng.range_f32(-1.0e6, 1.0e6)).collect();
+    vals[7] = f32::NAN;
+    vals[63] = f32::INFINITY;
+    vals[128] = f32::NEG_INFINITY;
+    vals[200] = -f32::NAN;
+    vals[311] = f32::MAX;
+    vals[479] = f32::MIN;
+    for exp in [-8, 0, 8] {
+        let mut out = vec![0i16; vals.len()];
+        quantize_slice(&vals, exp, &mut out);
+        for (i, (&v, &q)) in vals.iter().zip(&out).enumerate() {
+            assert_eq!(q, quantize_f32(v, exp), "slice elt {i} at exp {exp}");
+            assert!(
+                (A_QMIN..=A_QMAX).contains(&(q as i32)),
+                "elt {i} escaped the activation range"
+            );
+        }
+        let t = quantize_tensor(&TensorF::from_vec(&[8, 64], vals.clone()), exp);
+        assert_eq!(t.t.data(), &out[..], "tensor path at exp {exp}");
+        assert_eq!(t.exp, exp);
     }
 }

@@ -200,6 +200,49 @@ fn overload_queue_backfills_and_stays_bit_exact() {
 }
 
 #[test]
+fn queue_backfill_is_earliest_deadline_first_and_bit_exact() {
+    // PR 10 EDF pin, hand-traced. Capacity 1: stream 0 holds the slot
+    // for ticks 0-2 while streams 1 (unbounded wait) and 2 (per-stream
+    // queue deadline of 4 ticks, expiring at tick 4) queue in id order
+    // at tick 0. When the slot frees at tick 3, EDF backfills stream 2
+    // first — FIFO would have picked stream 1 and let stream 2 expire
+    // at tick 5. All three must complete, bit-identically to solo.
+    let (n, frames) = (3, 3);
+    let scenes = make_scenes(n, frames, 135);
+    let solo: Vec<Vec<TensorF>> =
+        scenes.iter().map(|sc| solo_run(sc, frames)).collect();
+    let mut server =
+        StreamServer::on_ref_backend(SEED, PipelineOptions::default())
+            .unwrap();
+    for _ in 0..n {
+        server.open_stream();
+    }
+    let imgs = render(&scenes, frames);
+    let streams: Vec<ContinuousStream> = continuous_set(&imgs, &scenes)
+        .into_iter()
+        .map(|c| if c.sid == 2 { c.queue_deadline(4) } else { c })
+        .collect();
+    let opts = SchedulerOptions {
+        capacity: 1,
+        admission: AdmissionPolicy::Queue { deadline_ticks: 0 },
+        ..SchedulerOptions::default()
+    };
+    let out = server.run_continuous(&streams, &opts).unwrap();
+    for (s, d) in out.dispositions.iter().enumerate() {
+        assert_eq!(
+            *d,
+            StreamDisposition::Completed,
+            "stream {s}: only EDF backfill serves the tight deadline"
+        );
+        assert_eq!(out.outputs[s].len(), frames);
+        assert_prefix_exact(&out.outputs[s], &solo[s], "edf");
+    }
+    assert_eq!(out.stats.queued, 2);
+    assert_eq!(out.stats.admitted, 3);
+    assert_eq!(out.stats.rejected, 0, "nobody expired under EDF");
+}
+
+#[test]
 fn shed_streams_checkpoint_and_resume_bit_exactly() {
     // three equal always-ready streams fighting for a width-1 round
     // with a 1-tick deadline and zero tolerance: the scheduler sheds
